@@ -1,0 +1,71 @@
+//! Edge-deployment profile: for each bit-width, report what actually
+//! matters on a memory-constrained device — resident weight bytes, decode
+//! tokens/s, time-to-first-token and bytes moved per generated token.
+//!
+//! ```sh
+//! cargo run --release --example edge_profile -- [model]
+//! ```
+
+use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::eval::data::TokenStream;
+use fbquant::model::WeightStore;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "llamoid-tiny".into());
+    let artifacts = fbquant::artifacts_dir();
+    let stream = TokenStream::load(&artifacts.join("data/corpus_val.fbqw"))?;
+    let prompt: Vec<u32> = stream.tokens()[..64].iter().map(|&b| b as u32).collect();
+    let decode = 48;
+
+    println!("=== edge profile: {model} (prompt {} tokens, {decode} generated) ===\n", prompt.len());
+    println!(
+        "{:<18} {:>12} {:>11} {:>11} {:>14}",
+        "config", "weights", "decode tk/s", "ttft(ms)", "bytes/token"
+    );
+    println!("{}", "-".repeat(70));
+
+    let cases: Vec<(String, &str, u8, SubMode)> = vec![
+        ("FP32".into(), "fp", 4, SubMode::None),
+        ("INT4 RTN".into(), "rtn", 4, SubMode::None),
+        ("INT3 RTN".into(), "rtn", 3, SubMode::None),
+        ("INT4 FBQuant".into(), "fbquant", 4, SubMode::Fused),
+        ("INT3 FBQuant".into(), "fbquant", 3, SubMode::Fused),
+        ("INT2 FBQuant".into(), "fbquant", 2, SubMode::Fused),
+    ];
+
+    for (name, method, bits, mode) in cases {
+        let path = WeightStore::path_for(&artifacts, &model, method, bits);
+        let Ok(store) = WeightStore::load(&path) else {
+            println!("{name:<18} (missing)");
+            continue;
+        };
+        let engine = NativeEngine::from_store(&store, mode)?;
+        let bytes = engine.resident_bytes();
+        let mut backend = NativeBackend::new(engine, &name);
+
+        let t0 = Instant::now();
+        let (mut state, logits) = backend.prefill(&[&prompt], 1)?;
+        let ttft = t0.elapsed().as_secs_f64() * 1e3;
+        backend.reset_traffic();
+        let mut tok = fbquant::tensor::ops::argmax(&logits[0]) as u32;
+        let td = Instant::now();
+        for _ in 0..decode {
+            let lg = backend.decode(&mut state, &[tok])?;
+            tok = fbquant::tensor::ops::argmax(&lg[0]) as u32;
+        }
+        let tps = decode as f64 / td.elapsed().as_secs_f64();
+        let bytes_per_tok = backend.traffic().total_bytes() / decode as u64;
+        println!(
+            "{:<18} {:>12} {:>11.1} {:>11.2} {:>14}",
+            name,
+            fbquant::util::human_bytes(bytes),
+            tps,
+            ttft,
+            fbquant::util::human_bytes(bytes_per_tok as usize)
+        );
+    }
+    println!("\n(bytes/token = measured kernel traffic — the decode bottleneck on edge devices)");
+    Ok(())
+}

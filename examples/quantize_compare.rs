@@ -1,0 +1,89 @@
+//! Compare the quantizer zoo on one model: per-layer reconstruction
+//! error, bound compliance, resident bytes and a quick perplexity probe.
+//!
+//! ```sh
+//! cargo run --release --example quantize_compare -- [model] [bits]
+//! ```
+
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::eval::data::TokenStream;
+use fbquant::eval::ppl::{perplexity, PplConfig};
+use fbquant::eval::scorer::NativeScorer;
+use fbquant::model::{LinearWeights, WeightStore};
+use fbquant::quant::subbranch;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("llamoid-tiny").to_string();
+    let bits: u8 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let artifacts = fbquant::artifacts_dir();
+
+    let fp = WeightStore::load(&WeightStore::path_for(&artifacts, &model, "fp", bits))?;
+    let stream = TokenStream::load(&artifacts.join("data/corpus_val.fbqw"))?;
+    let ppl_cfg = PplConfig { seq: 128, max_tokens: 4096 };
+
+    println!("=== quantizer zoo on {model} @ {bits}-bit (group 128) ===\n");
+    println!(
+        "{:<11} {:>10} {:>12} {:>12} {:>10} {:>9}",
+        "method", "val ppl", "mean |ΔW|", "max |ΔW|", "bytes", "bounded"
+    );
+    println!("{}", "-".repeat(70));
+
+    for method in ["rtn", "gptq", "awq", "omniquant", "loftq", "svdquant", "caldera", "eora", "fbquant"] {
+        let path = WeightStore::path_for(&artifacts, &model, method, bits);
+        let Ok(store) = WeightStore::load(&path) else {
+            println!("{method:<11} (missing)");
+            continue;
+        };
+        // weight-space stats vs the FP reference
+        let mut sum_dev = 0f64;
+        let mut count = 0usize;
+        let mut max_dev = 0f32;
+        let mut bounded = true;
+        for l in 0..store.cfg.n_layers {
+            for lname in store.cfg.linear_names() {
+                let prefix = format!("l{l}.{lname}");
+                let (out, cin) = store.cfg.linear_shape(lname);
+                let LinearWeights::Dense { w, .. } = fp.linear(&prefix)? else { unreachable!() };
+                let lw = store.linear(&prefix)?;
+                let mut q = lw.clone();
+                if let LinearWeights::Quant { col_scale, .. } = &mut q {
+                    *col_scale = None; // bound is about the weight grid
+                }
+                let w_eff = q.effective_dense();
+                let sigma = match lw {
+                    LinearWeights::Quant { a: Some(a), b: Some(b), rank, .. } => {
+                        subbranch::SubBranch::new(a.clone(), b.clone(), *rank, cin, out).dense_sigma()
+                    }
+                    _ => vec![0f32; out * cin],
+                };
+                let bound = subbranch::fbq_bound(w, &sigma, out, cin, bits, store.group);
+                for i in 0..w.len() {
+                    let dev = (w[i] - w_eff[i]).abs();
+                    sum_dev += dev as f64;
+                    count += 1;
+                    max_dev = max_dev.max(dev);
+                    if dev > bound[i] + 1e-4 {
+                        bounded = false;
+                    }
+                }
+            }
+        }
+        let mut scorer = NativeScorer::new(NativeEngine::from_store(&store, SubMode::Fused)?);
+        let ppl = perplexity(&mut scorer, &stream, ppl_cfg)?.ppl;
+        println!(
+            "{:<11} {:>10.4} {:>12.5} {:>12.4} {:>10} {:>9}",
+            method,
+            ppl,
+            sum_dev / count as f64,
+            max_dev,
+            fbquant::util::human_bytes(store.resident_bytes()),
+            if bounded { "yes" } else { "no" }
+        );
+    }
+
+    let mut fp_scorer = NativeScorer::new(NativeEngine::from_store(&fp, SubMode::None)?);
+    let fp_ppl = perplexity(&mut fp_scorer, &stream, ppl_cfg)?.ppl;
+    println!("\nFP reference ppl: {fp_ppl:.4}");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: load an FBQuant-quantized checkpoint and generate text.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- pjrt     # via AOT artifacts
+//! ```
+//!
+//! Demonstrates the minimal public-API path: WeightStore → backend →
+//! Coordinator closed loop.
+
+use fbquant::coordinator::backend::{Backend, NativeBackend, PjrtBackend};
+use fbquant::coordinator::request::GenRequest;
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::model::{ByteTokenizer, WeightStore};
+use fbquant::runtime::ExecRegistry;
+
+fn main() -> anyhow::Result<()> {
+    let backend_kind = std::env::args().nth(1).unwrap_or_else(|| "native".into());
+    let artifacts = fbquant::artifacts_dir();
+
+    // 1) load an FBQuant INT4 checkpoint of the tiny llama-shaped model
+    let path = WeightStore::path_for(&artifacts, "llamoid-tiny", "fbquant", 4);
+    let store = WeightStore::load(&path)?;
+    println!(
+        "loaded {}: {} params, {} resident",
+        store.cfg.name,
+        store.cfg.n_params(),
+        fbquant::util::human_bytes(store.resident_bytes())
+    );
+
+    // 2) pick an execution backend
+    let mut backend: Box<dyn Backend> = if backend_kind == "pjrt" {
+        let mut reg = ExecRegistry::open(&artifacts)?;
+        Box::new(PjrtBackend::new(&mut reg, &store, &[1], "quickstart")?)
+    } else {
+        Box::new(NativeBackend::new(
+            NativeEngine::from_store(&store, SubMode::Fused)?,
+            "quickstart",
+        ))
+    };
+
+    // 3) generate a few continuations
+    let tok = ByteTokenizer::default();
+    for prompt in ["= sea =\nthe salty crab ", "= winter =\nthe pale snow ", "two plus three equals "] {
+        let req = GenRequest::new(0, tok.encode(prompt), 40);
+        let (mut responses, _metrics) =
+            Coordinator::run_closed_loop(backend.as_mut(), vec![req], &CoordinatorConfig::default())?;
+        let r = responses.remove(0);
+        println!(
+            "\n> {prompt}{}\n  [{:.1} tk/s decode, ttft {:.1} ms]",
+            tok.decode(&r.tokens),
+            r.decode_tps(),
+            r.ttft_us / 1e3
+        );
+    }
+    Ok(())
+}

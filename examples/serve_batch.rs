@@ -1,0 +1,74 @@
+//! Serving under concurrent load: spawn the coordinator worker, submit a
+//! Poisson-arrival workload, report latency and throughput percentiles.
+//!
+//! ```sh
+//! cargo run --release --example serve_batch -- [requests] [rate_rps]
+//! ```
+
+use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::coordinator::workload::{generate, WorkloadConfig};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::eval::data::TokenStream;
+use fbquant::model::WeightStore;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4.0);
+    let artifacts = fbquant::artifacts_dir();
+
+    let stream = TokenStream::load(&artifacts.join("data/corpus_val.fbqw"))?;
+    let workload = generate(
+        &stream,
+        &WorkloadConfig {
+            n_requests,
+            prompt_lens: vec![32, 64],
+            max_new_tokens: 24,
+            arrival_rate: rate,
+            temperature: 0.7,
+            seed: 11,
+        },
+    );
+
+    let store = WeightStore::load(&WeightStore::path_for(&artifacts, "llamoid-tiny", "fbquant", 4))?;
+    let handle = Coordinator::spawn(
+        move || -> anyhow::Result<Box<dyn Backend>> {
+            Ok(Box::new(NativeBackend::new(
+                NativeEngine::from_store(&store, SubMode::Fused)?,
+                "serve_batch",
+            )))
+        },
+        CoordinatorConfig::default(),
+    );
+
+    println!("submitting {n_requests} requests at ~{rate} rps (Poisson)...");
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::new();
+    let mut prev = std::time::Duration::ZERO;
+    for (req, arrival) in workload.requests.into_iter().zip(workload.arrivals) {
+        std::thread::sleep(arrival.saturating_sub(prev));
+        prev = arrival;
+        receivers.push(handle.submit(req));
+    }
+    let mut ttfts = Vec::new();
+    let mut e2es = Vec::new();
+    for rx in receivers {
+        let r = rx.recv()?;
+        ttfts.push(r.ttft_us / 1e3);
+        e2es.push(r.total_us / 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = handle.shutdown()?;
+
+    println!("\n{}", metrics.report());
+    println!(
+        "\nwall {:.2}s | ttft p50 {:.0}ms p95 {:.0}ms | e2e p50 {:.0}ms p95 {:.0}ms",
+        wall,
+        fbquant::util::percentile(&ttfts, 50.0),
+        fbquant::util::percentile(&ttfts, 95.0),
+        fbquant::util::percentile(&e2es, 50.0),
+        fbquant::util::percentile(&e2es, 95.0),
+    );
+    Ok(())
+}

@@ -1,0 +1,344 @@
+"""AOT lowering: JAX graphs → HLO text artifacts + manifest.
+
+The interchange format is HLO *text* (NOT `.serialize()`): jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla_extension 0.5.1
+backing the rust `xla` crate rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (under ``artifacts/hlo/``), all taking weights as *runtime
+parameters* so one compiled executable serves every quantization method of
+matching shape — the rust coordinator swaps `.fbqw` payloads without
+recompiling:
+
+* ``score_<model>_fp``     tokens[B,T] → logits[B,T,V]        (FP weights)
+* ``score_<model>_q``      tokens[B,T] → logits[B,T,V]        (codes/scales/
+                           zeros/a/b/col_scale per linear)
+* ``prefill_<model>_<p>_b<B>`` tokens[B,Tp] → (logits[B,V], kv_k, kv_v)
+* ``decode_<model>_<p>_b<B>``  (tokens[B,1], pos, kv) → (logits[B,V], kv')
+* ``kernel_fused_m<M>`` / ``kernel_unfused_m<M>`` — the §4.3 Pallas fused
+  kernel vs the conventional 4-kernel pipeline as standalone computations
+  (runtime microbench + cross-language correctness target)
+
+``manifest.json`` records for each artifact the ordered input tensors
+(name/dtype/shape) and outputs, so the rust runtime can marshal literals
+positionally. A ``selftest`` archive with golden inputs/outputs enables an
+end-to-end numerics assertion from rust.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import pack
+from .model import MODELS, Config, decode_step, forward, make_quantized_linear
+from .quantize_all import default_rank
+
+GROUP = 128
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Weight-parameter plumbing
+# ---------------------------------------------------------------------------
+
+def fp_param_order(cfg: Config) -> List[str]:
+    """Deterministic order of the float parameter tensors."""
+    names = ["tok_emb", "lm_head"]
+    if not cfg.rope:
+        names.append("pos_emb")
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        names += [p + "attn_norm.w", p + "mlp_norm.w"]
+        if not cfg.rms:
+            names += [p + "attn_norm.b", p + "mlp_norm.b"]
+        for lname in cfg.linear_names():
+            names.append(p + lname + ".w")
+            if (lname in ("q", "k", "v") and cfg.qkv_bias) or (
+                lname in ("fc", "proj") and cfg.mlp_bias
+            ):
+                names.append(p + lname + ".b")
+    names.append("final_norm.w")
+    if not cfg.rms:
+        names.append("final_norm.b")
+    return names
+
+
+def fp_param_spec(cfg: Config, name: str) -> Tuple[Tuple[int, ...], str]:
+    if name in ("tok_emb", "lm_head"):
+        return (cfg.vocab, cfg.d_model), "f32"
+    if name == "pos_emb":
+        return (cfg.max_seq, cfg.d_model), "f32"
+    base = name.split(".")[-2] if "." in name else name
+    field = name.split(".")[-1]
+    if "norm" in name:
+        return (cfg.d_model,), "f32"
+    lname = name.split(".")[1]
+    out, cin = cfg.linear_shape(lname)
+    if field == "w":
+        return (out, cin), "f32"
+    return (out,), "f32"
+
+
+def q_param_order(cfg: Config, rank: int) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Quantized-path parameters: float leftovers + per-linear q tensors.
+
+    Returns (name, shape, dtype) in feed order. Codes are fed UNPACKED as
+    int32 [out, in] (the rust runtime unpacks the nibble archive on load —
+    packing is a storage/bandwidth format, not a compute format on this CPU
+    substrate; i32 because the rust `xla` crate's Literal supports
+    i32/i64/u32/u64/f32/f64 only)."""
+    entries: List[Tuple[str, Tuple[int, ...], str]] = []
+    for name in fp_param_order(cfg):
+        parts = name.split(".")
+        if len(parts) >= 2 and parts[0].startswith("l") and parts[-1] == "w" and parts[1] in cfg.linear_names():
+            l, lname = parts[0], parts[1]
+            out, cin = cfg.linear_shape(lname)
+            prefix = f"{l}.{lname}"
+            entries.append((prefix + "/codes", (out, cin), "i32"))
+            entries.append((prefix + "/scales", (out, cin // GROUP), "f32"))
+            entries.append((prefix + "/zeros", (out, cin // GROUP), "f32"))
+            entries.append((prefix + "/a", (rank, cin), "f32"))
+            entries.append((prefix + "/b", (out, rank), "f32"))
+            entries.append((prefix + "/col_scale", (cin,), "f32"))
+        else:
+            entries.append((name, *[fp_param_spec(cfg, name)][0]))
+    # fix tuple structure: fp entries need (name, shape, dtype)
+    fixed = []
+    for e in entries:
+        if len(e) == 3:
+            fixed.append(e)
+        else:  # (name, (shape, dtype))
+            name, (shape, dtype) = e
+            fixed.append((name, shape, dtype))
+    return fixed
+
+
+_DT = {"f32": jnp.float32, "i8": jnp.int8, "i32": jnp.int32, "u32": jnp.uint32}
+
+
+def _specs(entries):
+    return [jax.ShapeDtypeStruct(shape, _DT[dt]) for _, shape, dt in entries]
+
+
+def _rebuild_params(cfg: Config, entries, args):
+    """Split flat args into (float params dict, qweights dict)."""
+    params: Dict[str, jnp.ndarray] = {}
+    qweights: Dict[str, Dict[str, jnp.ndarray]] = {}
+    for (name, _, _), arr in zip(entries, args):
+        if "/" in name:
+            prefix, field = name.split("/")
+            qweights.setdefault(prefix, {})[field] = arr
+        else:
+            params[name] = arr
+    return params, qweights
+
+
+# ---------------------------------------------------------------------------
+# Graph builders
+# ---------------------------------------------------------------------------
+
+def build_score(cfg: Config, quantized: bool, batch: int, seq: int, rank: int):
+    if quantized:
+        entries = q_param_order(cfg, rank)
+
+        def fn(tokens, *wargs):
+            params, qweights = _rebuild_params(cfg, entries, wargs)
+            linear_fn = make_quantized_linear(qweights, group=GROUP)
+            return (forward(cfg, params, tokens, linear_fn=linear_fn),)
+
+    else:
+        entries = [(n, *fp_param_spec(cfg, n)) for n in fp_param_order(cfg)]
+
+        def fn(tokens, *wargs):
+            params, _ = _rebuild_params(cfg, entries, wargs)
+            return (forward(cfg, params, tokens),)
+
+    data_inputs = [("tokens", (batch, seq), "i32")]
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((batch, seq), jnp.int32), *_specs(entries)
+    )
+    outputs = [("logits", (batch, seq, cfg.vocab), "f32")]
+    return lowered, data_inputs + entries, outputs
+
+
+def _kv_shape(cfg: Config, batch: int):
+    return (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+
+
+def build_step(cfg: Config, quantized: bool, batch: int, t_step: int, rank: int):
+    """Prefill (t_step > 1) or decode (t_step == 1) graph with KV cache."""
+    if quantized:
+        entries = q_param_order(cfg, rank)
+    else:
+        entries = [(n, *fp_param_spec(cfg, n)) for n in fp_param_order(cfg)]
+
+    kv_shape = _kv_shape(cfg, batch)
+
+    def fn(tokens, pos0, kv_k, kv_v, *wargs):
+        params, qweights = _rebuild_params(cfg, entries, wargs)
+        linear_fn = make_quantized_linear(qweights, group=GROUP) if quantized else None
+        kwargs = {"linear_fn": linear_fn} if linear_fn else {}
+        logits, nk, nv = decode_step(cfg, params, tokens, pos0, kv_k, kv_v, **kwargs)
+        return (logits[:, -1, :], nk, nv)
+
+    data_inputs = [
+        ("tokens", (batch, t_step), "i32"),
+        ("pos0", (), "i32"),
+        ("kv_k", kv_shape, "f32"),
+        ("kv_v", kv_shape, "f32"),
+    ]
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((batch, t_step), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        *_specs(entries),
+    )
+    outputs = [
+        ("logits", (batch, cfg.vocab), "f32"),
+        ("kv_k", kv_shape, "f32"),
+        ("kv_v", kv_shape, "f32"),
+    ]
+    return lowered, data_inputs + entries, outputs
+
+
+def build_kernel(fused: bool, m: int, k: int, n: int, r: int):
+    """Standalone §4.3 kernel artifact (pallas, interpret=True)."""
+    from .kernels import fused_qmm as fq
+
+    gk = k // GROUP
+
+    def fn(x, codes, scales, zeros, a, b):
+        f = fq.fused_qmm if fused else fq.unfused_qmm
+        return (f(x, codes, scales, zeros, a, b, group=GROUP),)
+
+    inputs = [
+        ("x", (m, k), "f32"),
+        ("codes", (n, k), "i32"),
+        ("scales", (n, gk), "f32"),
+        ("zeros", (n, gk), "f32"),
+        ("a", (r, k), "f32"),
+        ("b", (n, r), "f32"),
+    ]
+    lowered = jax.jit(fn).lower(*_specs(inputs))
+    return lowered, inputs, [("y", (m, n), "f32")]
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def emit(outdir: str, name: str, lowered, inputs, outputs, manifest: list, kind: str,
+         extra: dict | None = None):
+    path = os.path.join(outdir, "hlo", f"{name}.hlo.txt")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(
+        {
+            "name": name,
+            "path": f"hlo/{name}.hlo.txt",
+            "kind": kind,
+            "inputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in inputs],
+            "outputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in outputs],
+            **(extra or {}),
+        }
+    )
+    print(f"  wrote {name} ({len(text) / 1024:.0f} KiB)", flush=True)
+
+
+def selftest_archive(outdir: str, cfg: Config) -> None:
+    """Golden input/output pair for the rust runtime integration test."""
+    fp_path = os.path.join(outdir, "models", f"{cfg.name}_fp.fbqw")
+    tensors, _ = pack.read_fbqw(fp_path)
+    params = {k: jnp.asarray(v) for k, v in tensors.items()}
+    rng = np.random.default_rng(7)
+    tokens = rng.integers(1, 256, size=(1, 16)).astype(np.int32)
+    logits = np.asarray(forward(cfg, params, jnp.asarray(tokens)))
+    pack.write_fbqw(
+        os.path.join(outdir, "hlo", "selftest.fbqw"),
+        {"tokens": tokens, "logits": logits.astype(np.float32)},
+        meta={"kind": "selftest", "model": cfg.name, "batch": 1, "seq": 16},
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--score-models", default="all")
+    ap.add_argument("--serve-models", default="llamoid-tiny,llamoid-small")
+    ap.add_argument("--score-batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    manifest: list = []
+    score_models = list(MODELS) if args.score_models == "all" else args.score_models.split(",")
+
+    for mname in score_models:
+        cfg = MODELS[mname]
+        rank = default_rank(cfg)
+        print(f"[score] {mname}")
+        for quantized in (False, True):
+            tag = "q" if quantized else "fp"
+            lowered, inputs, outputs = build_score(cfg, quantized, args.score_batch, args.seq, rank)
+            emit(args.out, f"score_{mname}_{tag}", lowered, inputs, outputs, manifest,
+                 "score", {"model": mname, "quantized": quantized,
+                           "batch": args.score_batch, "seq": args.seq,
+                           "rank": rank, "group": GROUP})
+
+    for mname in args.serve_models.split(","):
+        cfg = MODELS[mname]
+        rank = default_rank(cfg)
+        print(f"[serve] {mname}")
+        for quantized in (False, True):
+            tag = "q" if quantized else "fp"
+            for batch in (1, 4):
+                # multiple prefill chunk lengths: the coordinator chunks a
+                # prompt greedily (128s, then 32s, then single decode
+                # steps), since pos0 is a shared scalar per batch.
+                for t_step in (128, 32):
+                    lowered, inputs, outputs = build_step(cfg, quantized, batch, t_step, rank)
+                    emit(args.out, f"prefill_{mname}_{tag}_b{batch}_t{t_step}", lowered,
+                         inputs, outputs, manifest, "prefill",
+                         {"model": mname, "quantized": quantized, "batch": batch,
+                          "t_step": t_step, "rank": rank, "group": GROUP})
+                lowered, inputs, outputs = build_step(cfg, quantized, batch, 1, rank)
+                emit(args.out, f"decode_{mname}_{tag}_b{batch}", lowered, inputs, outputs,
+                     manifest, "decode", {"model": mname, "quantized": quantized,
+                                          "batch": batch, "t_step": 1,
+                                          "rank": rank, "group": GROUP})
+
+    # §4.3 kernel microbench artifacts (modest shape: interpret-mode pallas
+    # lowers to plain HLO; the fused/unfused structural difference survives)
+    m, k, n, r = 32, 512, 512, 64
+    for fused in (True, False):
+        tag = "fused" if fused else "unfused"
+        lowered, inputs, outputs = build_kernel(fused, m, k, n, r)
+        emit(args.out, f"kernel_{tag}_m{m}", lowered, inputs, outputs, manifest,
+             "kernel", {"fused": fused, "m": m, "k": k, "n": n, "rank": r, "group": GROUP})
+
+    selftest_archive(args.out, MODELS["llamoid-tiny"])
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "group": GROUP, "artifacts": manifest}, f, indent=1)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Calibration machinery shared by the quantizer zoo.
+
+Follows the paper's protocol (§5.1): 128 calibration sequences drawn from
+the training distribution. Instead of materializing per-layer activation
+matrices X (O(n_tokens × d) each), we capture the Gram matrix
+``H = XᵀX`` and the mean absolute activation per input channel — the
+sufficient statistics for every method in the zoo:
+
+* layer-wise reconstruction loss (paper Eq. 14):
+  ``‖(W − W')Xᵀ‖_F² = tr((W − W') H (W − W')ᵀ)`` — exact, not an
+  approximation,
+* GPTQ's Hessian is `2H` (damped),
+* AWQ's activation saliency is the per-channel mean |x|,
+* EoRA's eigenspace projection diagonalizes `H`.
+
+Stats are captured once per model from the FP forward pass and cached in
+``artifacts/calib/<model>.fbqw`` (shared across methods and bit-widths;
+per-method error propagation would multiply build time ~9× on one CPU core
+— noted in DESIGN.md §2).
+
+Also hosts the generic Adam-on-(A,B) layer-wise reconstruction loop used
+by FBQuant (Algorithm 1) and the learned-clipping loop used by
+OmniQuant-lite.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import pack
+from .model import Config, attention, norm, rope_tables, apply_rope
+
+
+def capture_stats(cfg: Config, params: Dict[str, jnp.ndarray],
+                  calib_tokens: np.ndarray, batch: int = 16) -> Dict[str, Dict[str, np.ndarray]]:
+    """Run the FP model over the calibration set, accumulating per-linear
+    sufficient statistics.
+
+    Returns {prefix: {"h": [in,in] f32, "mean_abs": [in] f32, "n": int}}
+    where prefix is e.g. "l0.q".
+    """
+    stats: Dict[str, Dict[str, np.ndarray]] = {}
+
+    def record(prefix: str, x2: np.ndarray):
+        # x2: [n, in] float32
+        h = x2.T @ x2
+        ma = np.abs(x2).mean(axis=0)
+        if prefix not in stats:
+            stats[prefix] = {"h": h, "mean_abs": ma * len(x2), "n": len(x2)}
+        else:
+            s = stats[prefix]
+            s["h"] += h
+            s["mean_abs"] += ma * len(x2)
+            s["n"] += len(x2)
+
+    def linear_fn(params, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+        if ".w" not in prefix + ".w":  # pragma: no cover - defensive
+            raise AssertionError
+        # record only the seven quantizable projections (they start "l<i>.")
+        if prefix.startswith("l"):
+            x2 = np.asarray(x.reshape(-1, x.shape[-1]), np.float32)
+            record(prefix, x2)
+        y = x @ params[prefix + ".w"].T
+        if prefix + ".b" in params:
+            y = y + params[prefix + ".b"]
+        return y
+
+    # capture path: plain (non-jit) forward so the python-side hook runs.
+    from .model import block, embed
+
+    n_seqs = calib_tokens.shape[0]
+    for i in range(0, n_seqs, batch):
+        chunk = jnp.asarray(calib_tokens[i : i + batch].astype(np.int32))
+        x = embed(cfg, params, chunk)
+        for l in range(cfg.n_layers):
+            x, _ = block(cfg, params, l, x, 0, linear_fn)
+
+    for s in stats.values():
+        s["mean_abs"] = s["mean_abs"] / s["n"]
+        s["n"] = np.asarray([s["n"]], np.int32)
+    return stats
+
+
+def stats_path(artifacts: str, model_name: str) -> str:
+    return os.path.join(artifacts, "calib", f"{model_name}.fbqw")
+
+
+def load_or_capture_stats(artifacts: str, cfg: Config, params, calib_tokens) -> Dict[str, Dict[str, np.ndarray]]:
+    path = stats_path(artifacts, cfg.name)
+    if os.path.exists(path):
+        tensors, _ = pack.read_fbqw(path)
+        stats: Dict[str, Dict[str, np.ndarray]] = {}
+        for key, arr in tensors.items():
+            prefix, field = key.rsplit("/", 1)
+            stats.setdefault(prefix, {})[field] = arr
+        return stats
+    stats = capture_stats(cfg, params, calib_tokens)
+    flat = {}
+    for prefix, fields in stats.items():
+        for fname, arr in fields.items():
+            flat[f"{prefix}/{fname}"] = np.asarray(arr, np.float32 if fname != "n" else np.int32)
+    pack.write_fbqw(path, flat, meta={"kind": "calib_stats", "model": cfg.name})
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction losses and optimisation loops
+# ---------------------------------------------------------------------------
+
+def recon_loss(w_rec: jnp.ndarray, w: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """tr((W − W_rec) H (W − W_rec)ᵀ) — the paper's Eq. 14 in Gram form,
+    normalised by tr(WHWᵀ) for cross-layer comparability."""
+    d = w - w_rec
+    return jnp.einsum("oi,ij,oj->", d, h, d)
+
+
+def _adam_loop(loss_fn: Callable, params: Dict[str, jnp.ndarray], steps: int,
+               lr: float) -> Tuple[Dict[str, jnp.ndarray], list]:
+    """Minimal Adam used for the per-layer optimizers (no optax offline)."""
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    history = []
+    for t in range(1, steps + 1):
+        loss, g = grad_fn(params)
+        history.append(float(loss))
+        for k in params:
+            m[k] = b1 * m[k] + (1 - b1) * g[k]
+            v[k] = b2 * v[k] + (1 - b2) * g[k] * g[k]
+            mhat = m[k] / (1 - b1**t)
+            vhat = v[k] / (1 - b2**t)
+            params[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return params, history
+
+
+def fbquant_optimize(w: np.ndarray, h: np.ndarray, bits: int, group: int,
+                     rank: int, steps: int = 160, lr: float = 2e-3,
+                     seed: int = 0) -> Tuple[np.ndarray, np.ndarray, list]:
+    """Algorithm 1: layer-wise reconstruction of the FBQuant sub-branch.
+
+    Returns (A [r, in], B [out, r], loss history). Gradients flow only
+    through the explicit +Σ term (§4.2 STE detach); the quantizer
+    parameters of Q(W − Σ) are recomputed every step — the feedback path.
+    """
+    from .kernels import ref as kref
+
+    out, cin = w.shape
+    rng = np.random.default_rng(seed)
+    # A ~ N(0, σ²), B = 0  (Algorithm 1 lines 1-2) → Σ₀ = 0, start at RTN.
+    a0 = jnp.asarray(rng.normal(0.0, 0.02, size=(rank, cin)), jnp.float32)
+    b0 = jnp.zeros((out, rank), jnp.float32)
+    wj = jnp.asarray(w)
+    hj = jnp.asarray(h)
+    # normalise H so lr is scale-free across layers
+    hj = hj / (jnp.trace(hj) / cin + 1e-12)
+
+    def loss(ps):
+        w_f = kref.fbq_reconstruct_ste(wj, ps["a"], ps["b"], bits, group)
+        return recon_loss(w_f, wj, hj)
+
+    params, hist = _adam_loop(loss, {"a": a0, "b": b0}, steps, lr)
+    return np.asarray(params["a"]), np.asarray(params["b"]), hist
+
+
+def omniquant_optimize(w: np.ndarray, h: np.ndarray, bits: int, group: int,
+                       steps: int = 120, lr: float = 5e-3) -> Tuple[np.ndarray, np.ndarray, list]:
+    """OmniQuant-lite: learn per-group clipping factors γ_lo, γ_hi ∈ (0,1]
+    (sigmoid-parameterised) minimising the Gram-form reconstruction loss."""
+    from .kernels import ref as kref
+
+    wj = jnp.asarray(w)
+    hj = jnp.asarray(h)
+    hj = hj / (jnp.trace(hj) / w.shape[1] + 1e-12)
+    gshape = (w.shape[0], w.shape[1] // group)
+    # sigmoid(4.0) ≈ 0.982 → start near no-clipping
+    init = jnp.full(gshape, 4.0, jnp.float32)
+
+    def loss(ps):
+        clip_lo = jax.nn.sigmoid(ps["lo"])
+        clip_hi = jax.nn.sigmoid(ps["hi"])
+        # straight-through on the rounding inside quantize_dequantize:
+        scale, zero = kref.quant_params(wj, bits, group, clip_lo, clip_hi)
+        s = jnp.repeat(scale, group, axis=1)
+        z = jnp.repeat(zero, group, axis=1)
+        qmax = (1 << bits) - 1
+        codes = jnp.clip(jnp.round(wj / s) + z, 0, qmax)
+        codes = codes + (wj / s + z - jax.lax.stop_gradient(wj / s + z))  # STE
+        w_rec = (codes - z) * s
+        return recon_loss(w_rec, wj, hj)
+
+    params, hist = _adam_loop(loss, {"lo": init, "hi": init}, steps, lr)
+    lo = np.asarray(jax.nn.sigmoid(params["lo"]))
+    hi = np.asarray(jax.nn.sigmoid(params["hi"]))
+    return lo, hi, hist

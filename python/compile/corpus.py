@@ -1,0 +1,393 @@
+"""Deterministic synthetic corpus + evaluation suites.
+
+Offline stand-in for WikiText2 + the seven lm-eval zero-shot benchmarks
+(see DESIGN.md §2 for the substitution argument). A seeded generator
+produces an English-like corpus with learnable structure:
+
+* topical articles (6 topics biasing content-word choice),
+* singular/plural subject–verb agreement,
+* arithmetic facts ("four plus three equals seven."),
+* local word-order and punctuation regularities,
+* repeated-name copy patterns (induction).
+
+From the same distribution we derive:
+
+* `corpus_train` / `corpus_val` token streams (byte-level),
+* `calib` — 128 sequences × 256 tokens, sentence-aligned (the paper's
+  128-sample calibration protocol, scaled to our context length),
+* seven multiple-choice suites scored exactly like lm-eval harness
+  (length-normalised log-likelihood), one per structural regularity,
+* `judge` — 80 prompt/gold-continuation pairs for the Fig-6 pairwise
+  comparison protocol.
+
+Everything is written as `.fbqw` archives consumed by the rust evaluator.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from . import pack, tokenizer
+
+SEED = 20250710
+
+TOPICS = ["sea", "forest", "city", "music", "garden", "winter"]
+
+NOUNS: Dict[str, List[str]] = {
+    "sea": ["crab", "wave", "sailor", "reef", "shell", "tide", "gull", "harbor"],
+    "forest": ["fox", "pine", "trail", "owl", "moss", "deer", "clearing", "stream"],
+    "city": ["tram", "market", "lamp", "bridge", "courier", "plaza", "tower", "crowd"],
+    "music": ["drum", "chord", "singer", "flute", "rhythm", "stage", "anthem", "string"],
+    "garden": ["rose", "bee", "hedge", "gardener", "tulip", "pond", "vine", "sparrow"],
+    "winter": ["snow", "sled", "skater", "frost", "lantern", "storm", "icicle", "cabin"],
+}
+
+ADJS: Dict[str, List[str]] = {
+    "sea": ["salty", "blue", "restless", "deep"],
+    "forest": ["green", "quiet", "ancient", "shaded"],
+    "city": ["busy", "bright", "narrow", "loud"],
+    "music": ["soft", "steady", "clear", "bold"],
+    "garden": ["fragrant", "sunny", "tidy", "wild"],
+    "winter": ["cold", "white", "still", "pale"],
+}
+
+# verb -> (singular form, plural form); intransitive continuations per topic.
+VERBS: List[Tuple[str, str]] = [
+    ("drifts", "drift"),
+    ("waits", "wait"),
+    ("turns", "turn"),
+    ("rests", "rest"),
+    ("moves", "move"),
+    ("shines", "shine"),
+    ("falls", "fall"),
+    ("calls", "call"),
+]
+
+PLACES: Dict[str, List[str]] = {
+    "sea": ["in the sea", "near the shore", "under the waves", "by the harbor"],
+    "forest": ["in the forest", "under the pines", "along the trail", "by the stream"],
+    "city": ["in the city", "on the bridge", "near the plaza", "by the tower"],
+    "music": ["on the stage", "in the hall", "near the drums", "by the strings"],
+    "garden": ["in the garden", "by the pond", "near the hedge", "under the vine"],
+    "winter": ["in the snow", "by the cabin", "under the frost", "near the lantern"],
+}
+
+NUM_WORDS = [
+    "zero", "one", "two", "three", "four", "five", "six", "seven", "eight",
+    "nine", "ten", "eleven", "twelve", "thirteen", "fourteen", "fifteen",
+    "sixteen", "seventeen", "eighteen", "nineteen", "twenty",
+]
+
+NAMES = ["mara", "toby", "iris", "felix", "nell", "orin", "puck", "sable"]
+
+
+def plural(noun: str) -> str:
+    if noun.endswith("s") or noun.endswith("sh"):
+        return noun + "es"
+    return noun + "s"
+
+
+class Gen:
+    """Sentence/article generator over a seeded numpy RNG."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+
+    def choice(self, xs):
+        return xs[int(self.rng.integers(len(xs)))]
+
+    def noun_phrase(self, topic: str, singular: bool) -> str:
+        noun = self.choice(NOUNS[topic])
+        form = noun if singular else plural(noun)
+        if self.rng.random() < 0.5:
+            return f"the {self.choice(ADJS[topic])} {form}"
+        return f"the {form}"
+
+    def sentence(self, topic: str) -> str:
+        r = self.rng.random()
+        if r < 0.08:
+            # arithmetic fact (consistent world knowledge)
+            a = int(self.rng.integers(0, 11))
+            b = int(self.rng.integers(0, 10))
+            return f"{NUM_WORDS[a]} plus {NUM_WORDS[b]} equals {NUM_WORDS[a + b]}."
+        if r < 0.16:
+            # name echo pattern (induction food)
+            n1, n2 = self.choice(NAMES), self.choice(NAMES)
+            v = self.choice(VERBS)
+            return f"{n1} and {n2} {v[1]} together, then {n1} and {n2} {self.choice(VERBS)[1]} again."
+        singular = self.rng.random() < 0.6
+        np_ = self.noun_phrase(topic, singular)
+        v = self.choice(VERBS)
+        verb = v[0] if singular else v[1]
+        place = self.choice(PLACES[topic])
+        if self.rng.random() < 0.3:
+            return f"{np_} {verb} {place}, and {self.noun_phrase(topic, True)} {self.choice(VERBS)[0]} there."
+        return f"{np_} {verb} {place}."
+
+    def article(self) -> str:
+        topic = self.choice(TOPICS)
+        n = int(self.rng.integers(4, 12))
+        sents = []
+        for _ in range(n):
+            # mostly on-topic, occasional drift keeps it non-trivial
+            t = topic if self.rng.random() < 0.85 else self.choice(TOPICS)
+            sents.append(self.sentence(t))
+        return f"= {topic} =\n" + " ".join(sents) + "\n\n"
+
+    def text(self, min_bytes: int) -> str:
+        parts = []
+        total = 0
+        while total < min_bytes:
+            a = self.article()
+            parts.append(a)
+            total += len(a)
+        return "".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Multiple-choice suites (lm-eval-style: pick argmax length-normalised ll).
+# ---------------------------------------------------------------------------
+
+def _mc_agree(g: Gen, nq: int):
+    """Subject–verb agreement (BoolQ-ish binary choice)."""
+    qs = []
+    for _ in range(nq):
+        topic = g.choice(TOPICS)
+        singular = g.rng.random() < 0.5
+        np_ = g.noun_phrase(topic, singular)
+        v = g.choice(VERBS)
+        place = g.choice(PLACES[topic])
+        good = f"{v[0] if singular else v[1]} {place}."
+        bad = f"{v[1] if singular else v[0]} {place}."
+        opts = [good, bad]
+        correct = 0
+        if g.rng.random() < 0.5:
+            opts = [bad, good]
+            correct = 1
+        qs.append((f"{np_} ", opts, correct))
+    return qs
+
+
+def _mc_topic(g: Gen, nq: int):
+    """Topic tracking (ARC-challenge-ish 4-way)."""
+    qs = []
+    for _ in range(nq):
+        topic = g.choice(TOPICS)
+        ctx_sents = " ".join(g.sentence(topic) for _ in range(3))
+        good_noun = g.choice(NOUNS[topic])
+        others = [t for t in TOPICS if t != topic]
+        bads = [g.choice(NOUNS[g.choice(others)]) for _ in range(3)]
+        v = g.choice(VERBS)[0]
+        place = g.choice(PLACES[topic])
+        opts = [f"the {w} {v} {place}." for w in [good_noun] + bads]
+        order = list(g.rng.permutation(4))
+        correct = order.index(0)
+        opts = [opts[i] for i in order]
+        qs.append((f"= {topic} =\n{ctx_sents} ", opts, correct))
+    return qs
+
+
+def _mc_cloze(g: Gen, nq: int):
+    """Sentence completion with well-formed vs corrupted endings (HellaSwag-ish)."""
+    qs = []
+    for _ in range(nq):
+        topic = g.choice(TOPICS)
+        np_ = g.noun_phrase(topic, True)
+        v = g.choice(VERBS)[0]
+        place = g.choice(PLACES[topic])
+        good = f"{place}."
+        # corruptions: reversed words, missing article, cross-topic place
+        words = place.split()
+        bad1 = " ".join(words[::-1]) + "."
+        bad2 = " ".join(w for w in words if w != "the") + "."
+        bad3 = g.choice(PLACES[g.choice([t for t in TOPICS if t != topic])]) + "."
+        opts = [good, bad1, bad2, bad3]
+        order = list(g.rng.permutation(4))
+        correct = order.index(0)
+        opts = [opts[i] for i in order]
+        qs.append((f"{np_} {v} ", opts, correct))
+    return qs
+
+
+def _mc_arith(g: Gen, nq: int):
+    """Memorised arithmetic facts (MMLU-ish knowledge)."""
+    qs = []
+    for _ in range(nq):
+        a = int(g.rng.integers(0, 11))
+        b = int(g.rng.integers(0, 10))
+        good = NUM_WORDS[a + b]
+        wrong = set()
+        while len(wrong) < 3:
+            w = NUM_WORDS[int(g.rng.integers(0, 21))]
+            if w != good:
+                wrong.add(w)
+        opts = [f"{w}." for w in [good] + sorted(wrong)]
+        order = list(g.rng.permutation(4))
+        correct = order.index(0)
+        opts = [opts[i] for i in order]
+        qs.append((f"{NUM_WORDS[a]} plus {NUM_WORDS[b]} equals ", opts, correct))
+    return qs
+
+
+def _mc_copy(g: Gen, nq: int):
+    """Induction / copy pattern (PIQA-ish binary)."""
+    qs = []
+    for _ in range(nq):
+        n1, n2 = g.choice(NAMES), g.choice(NAMES)
+        while n2 == n1:
+            n2 = g.choice(NAMES)
+        v1, v2 = g.choice(VERBS)[1], g.choice(VERBS)[1]
+        ctx = f"{n1} and {n2} {v1} together, then {n1} and "
+        good, bad = f"{n2} {v2} again.", f"{g.choice([n for n in NAMES if n not in (n1, n2)])} {v2} again."
+        opts, correct = ([good, bad], 0) if g.rng.random() < 0.5 else ([bad, good], 1)
+        qs.append((ctx, opts, correct))
+    return qs
+
+
+def _mc_order(g: Gen, nq: int):
+    """Adjective–noun word order (WinoGrande-ish binary)."""
+    qs = []
+    for _ in range(nq):
+        topic = g.choice(TOPICS)
+        adj, noun = g.choice(ADJS[topic]), g.choice(NOUNS[topic])
+        v = g.choice(VERBS)[0]
+        place = g.choice(PLACES[topic])
+        good = f"the {adj} {noun} {v} {place}."
+        bad = f"the {noun} {adj} {v} {place}."
+        opts, correct = ([good, bad], 0) if g.rng.random() < 0.5 else ([bad, good], 1)
+        qs.append(("", opts, correct))
+    return qs
+
+
+def _mc_punct(g: Gen, nq: int):
+    """Well-formed sentence termination (ARC-easy-ish binary)."""
+    qs = []
+    for _ in range(nq):
+        topic = g.choice(TOPICS)
+        np_ = g.noun_phrase(topic, True)
+        v = g.choice(VERBS)[0]
+        place = g.choice(PLACES[topic])
+        words = place.split()
+        good = f"{place}."
+        bad = " ".join(words[:-1]) + "."  # drop the head noun of the PP
+        opts, correct = ([good, bad], 0) if g.rng.random() < 0.5 else ([bad, good], 1)
+        qs.append((f"{np_} {v} ", opts, correct))
+    return qs
+
+
+TASKS = {
+    "agree": (_mc_agree, 2),
+    "topic": (_mc_topic, 4),
+    "cloze": (_mc_cloze, 4),
+    "arith": (_mc_arith, 4),
+    "copy": (_mc_copy, 2),
+    "order": (_mc_order, 2),
+    "punct": (_mc_punct, 2),
+}
+
+
+def _pack_task(path: str, name: str, qs, n_options: int) -> None:
+    ctx_flat, ctx_off = [], [0]
+    opt_flat, opt_off = [], [0]
+    correct = []
+    for ctx, opts, c in qs:
+        assert len(opts) == n_options
+        ids = tokenizer.encode(ctx)
+        ctx_flat.extend(ids)
+        ctx_off.append(len(ctx_flat))
+        for o in opts:
+            oids = tokenizer.encode(o)
+            opt_flat.extend(oids)
+            opt_off.append(len(opt_flat))
+        correct.append(c)
+    pack.write_fbqw(
+        path,
+        {
+            "ctx_flat": np.asarray(ctx_flat, np.uint8),
+            "ctx_off": np.asarray(ctx_off, np.uint32),
+            "opt_flat": np.asarray(opt_flat, np.uint8),
+            "opt_off": np.asarray(opt_off, np.uint32),
+            "correct": np.asarray(correct, np.uint32),
+        },
+        meta={"kind": "mc_task", "task": name, "n_questions": len(qs), "n_options": n_options},
+    )
+
+
+def _sentence_aligned_calib(text: str, n_seqs: int, seq_len: int, rng) -> np.ndarray:
+    starts = [i + 2 for i, c in enumerate(text) if c == "." and i + 2 + seq_len < len(text)]
+    idx = rng.choice(len(starts), size=n_seqs, replace=False)
+    rows = []
+    for i in idx:
+        s = starts[int(i)]
+        rows.append(tokenizer.encode(text[s : s + seq_len * 2])[:seq_len])
+    return np.asarray(rows, np.uint8)
+
+
+def build(outdir: str, train_bytes: int = 2_000_000, val_bytes: int = 40_000,
+          calib_seqs: int = 128, calib_len: int = 256, nq: int = 80) -> None:
+    os.makedirs(os.path.join(outdir, "tasks"), exist_ok=True)
+    g = Gen(SEED)
+    train_text = g.text(train_bytes)
+    val_text = Gen(SEED + 1).text(val_bytes)
+    judge_gen = Gen(SEED + 2)
+    task_gen = Gen(SEED + 3)
+
+    pack.write_fbqw(
+        os.path.join(outdir, "corpus_train.fbqw"),
+        {"tokens": np.asarray(tokenizer.encode(train_text), np.uint8)},
+        meta={"kind": "tokens", "split": "train"},
+    )
+    pack.write_fbqw(
+        os.path.join(outdir, "corpus_val.fbqw"),
+        {"tokens": np.asarray(tokenizer.encode(val_text), np.uint8)},
+        meta={"kind": "tokens", "split": "val"},
+    )
+    calib = _sentence_aligned_calib(train_text, calib_seqs, calib_len, np.random.default_rng(SEED + 4))
+    pack.write_fbqw(
+        os.path.join(outdir, "calib.fbqw"),
+        {"tokens": calib},
+        meta={"kind": "calib", "n_seqs": calib_seqs, "seq_len": calib_len},
+    )
+
+    for name, (fn, n_opt) in TASKS.items():
+        qs = fn(task_gen, nq)
+        _pack_task(os.path.join(outdir, "tasks", f"{name}.fbqw"), name, qs, n_opt)
+
+    # Fig-6 judge set: 80 prompts with gold continuations (held-out dist).
+    ctx_flat, ctx_off, gold_flat, gold_off = [], [0], [], [0]
+    for _ in range(nq):
+        topic = judge_gen.choice(TOPICS)
+        ctx_sents = " ".join(judge_gen.sentence(topic) for _ in range(2))
+        gold = judge_gen.sentence(topic)
+        ids = tokenizer.encode(f"= {topic} =\n{ctx_sents} ")
+        ctx_flat.extend(ids)
+        ctx_off.append(len(ctx_flat))
+        gids = tokenizer.encode(gold)
+        gold_flat.extend(gids)
+        gold_off.append(len(gold_flat))
+    pack.write_fbqw(
+        os.path.join(outdir, "judge.fbqw"),
+        {
+            "ctx_flat": np.asarray(ctx_flat, np.uint8),
+            "ctx_off": np.asarray(ctx_off, np.uint32),
+            "gold_flat": np.asarray(gold_flat, np.uint8),
+            "gold_off": np.asarray(gold_off, np.uint32),
+        },
+        meta={"kind": "judge", "n_questions": nq},
+    )
+
+    tokenizer.write_spec(os.path.join(outdir, "vocab.json"))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/data")
+    ap.add_argument("--train-bytes", type=int, default=2_000_000)
+    args = ap.parse_args()
+    build(args.out, train_bytes=args.train_bytes)
+    print(f"corpus + tasks written to {args.out}")

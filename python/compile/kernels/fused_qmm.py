@@ -1,0 +1,249 @@
+"""Layer-1 Pallas kernels: the paper's §4.3 kernel fusion, TPU-style.
+
+The paper fuses (on CUDA): weight de-quantization, the main-path
+activation×weight product, and the sub-branch up-projection into a single
+kernel that *shares the output tensor*, cutting kernel launches 4 → 2 and
+eliminating redundant HBM writes of the output and of the `(A·x)`
+intermediate.
+
+TPU re-think (DESIGN.md §3): the fused kernel tiles the output `[M, N]`
+into `(bm, bn)` VMEM blocks. For each block it streams the packed codes
+and per-group scales/zeros HBM→VMEM via `BlockSpec`, de-quantizes
+in-register, runs the MXU-shaped `dot`, then accumulates the sub-branch
+up-projection `B·(Ax)` into the *same VMEM accumulator* before the single
+write-back. "Share the output tensor" becomes "share the accumulator
+tile".
+
+Two entry points:
+
+* :func:`fused_qmm` — ONE `pallas_call` for the whole reconstructed layer
+  (de-quant + main matmul + down- and up-projection),
+* :func:`unfused_qmm` — the conventional 4-kernel pipeline
+  (de-quant | main matmul | down-proj | up-proj), each its own
+  `pallas_call` with materialized HBM intermediates. This is the "INT4-Sub"
+  baseline of Figs 4/7.
+
+Kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); numerics are validated against `ref.qmm_ref` in
+`python/tests/test_fused_qmm.py`, and HBM-traffic/launch-count effects are
+modeled analytically in `traffic.py` and measured for real in the rust
+native engine.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(x_ref, codes_ref, scales_ref, zeros_ref, a_ref, b_ref, o_ref, *, group: int):
+    """One (bm, bn) output tile.
+
+    x_ref:      [bm, K]   activations
+    codes_ref:  [bn, K]   int8 codes for the weight rows of this tile
+    scales_ref: [bn, K//group] f32
+    zeros_ref:  [bn, K//group] f32
+    a_ref:      [r, K]    sub-branch down-projection (full)
+    b_ref:      [bn, r]   sub-branch up-projection rows of this tile
+    o_ref:      [bm, bn]  output tile (single write)
+    """
+    x = x_ref[...]
+    # De-quantize in-register: rank-1-per-group broadcast (free on the VPU).
+    s = jnp.repeat(scales_ref[...], group, axis=1)
+    z = jnp.repeat(zeros_ref[...], group, axis=1)
+    w = (codes_ref[...].astype(jnp.float32) - z) * s  # [bn, K]
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bm, bn]
+    if a_ref is not None:
+        xa = jax.lax.dot_general(
+            x, a_ref[...], (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bm, r]
+        acc = acc + jax.lax.dot_general(
+            xa, b_ref[...], (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    o_ref[...] = acc
+
+
+def fused_qmm(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    zeros: jnp.ndarray,
+    a: Optional[jnp.ndarray],
+    b: Optional[jnp.ndarray],
+    *,
+    group: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = x @ dequant(codes).T [+ (x @ A.T) @ B.T] in one pallas_call.
+
+    x: [M, K]; codes: [N, K]; scales/zeros: [N, K//group];
+    a: [r, K]; b: [N, r]. Returns [M, N] f32.
+    """
+    m, k = x.shape
+    n = codes.shape[0]
+    gk = k // group
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    grid = (_cdiv(m, bm), _cdiv(n, bn))
+    has_sub = a is not None and b is not None
+
+    in_specs = [
+        pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        pl.BlockSpec((bn, gk), lambda i, j: (j, 0)),
+        pl.BlockSpec((bn, gk), lambda i, j: (j, 0)),
+    ]
+    args = [x, codes, scales, zeros]
+    if has_sub:
+        r = a.shape[0]
+        in_specs += [
+            pl.BlockSpec((r, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+        ]
+        args += [a, b]
+        kernel = functools.partial(_fused_kernel, group=group)
+    else:
+        kernel = functools.partial(_no_sub_kernel, group=group)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(*args)
+
+
+def _no_sub_kernel(x_ref, codes_ref, scales_ref, zeros_ref, o_ref, *, group: int):
+    """Plain quantized matmul tile (no sub-branch): the "INT4" baseline."""
+    x = x_ref[...]
+    s = jnp.repeat(scales_ref[...], group, axis=1)
+    z = jnp.repeat(zeros_ref[...], group, axis=1)
+    w = (codes_ref[...].astype(jnp.float32) - z) * s
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Un-fused 4-kernel pipeline (the conventional sub-branch implementation)
+# ---------------------------------------------------------------------------
+
+def _dequant_kernel(codes_ref, scales_ref, zeros_ref, w_ref, *, group: int):
+    s = jnp.repeat(scales_ref[...], group, axis=1)
+    z = jnp.repeat(zeros_ref[...], group, axis=1)
+    w_ref[...] = (codes_ref[...].astype(jnp.float32) - z) * s
+
+
+def _matmul_t_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _add_matmul_t_kernel(y_ref, xa_ref, b_ref, o_ref):
+    o_ref[...] = y_ref[...] + jax.lax.dot_general(
+        xa_ref[...], b_ref[...], (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def unfused_qmm(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    zeros: jnp.ndarray,
+    a: Optional[jnp.ndarray],
+    b: Optional[jnp.ndarray],
+    *,
+    group: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Conventional pipeline: 4 separate kernels with HBM intermediates.
+
+    kernel 1: W = dequant(codes)          (writes [N,K] floats to HBM!)
+    kernel 2: Y0 = x @ W.T
+    kernel 3: XA = x @ A.T
+    kernel 4: Y  = Y0 + XA @ B.T          (re-reads + re-writes the output)
+    """
+    m, k = x.shape
+    n = codes.shape[0]
+    gk = k // group
+    bn = min(block_n, n)
+    bm = min(block_m, m)
+
+    # kernel 1: dequantize the whole weight matrix to HBM
+    w = pl.pallas_call(
+        functools.partial(_dequant_kernel, group=group),
+        grid=(_cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda j: (j, 0)),
+            pl.BlockSpec((bn, gk), lambda j: (j, 0)),
+            pl.BlockSpec((bn, gk), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(codes, scales, zeros)
+
+    # kernel 2: main-path matmul
+    y0 = pl.pallas_call(
+        _matmul_t_kernel,
+        grid=(_cdiv(m, bm), _cdiv(n, bn)),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+    if a is None or b is None:
+        return y0
+
+    r = a.shape[0]
+    # kernel 3: sub-branch down-projection (intermediate written to HBM)
+    xa = pl.pallas_call(
+        _matmul_t_kernel,
+        grid=(_cdiv(m, bm), 1),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, k), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r), jnp.float32),
+        interpret=interpret,
+    )(x, a)
+
+    # kernel 4: up-projection, re-reading and re-writing the layer output
+    return pl.pallas_call(
+        _add_matmul_t_kernel,
+        grid=(_cdiv(m, bm), _cdiv(n, bn)),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(y0, xa, b)

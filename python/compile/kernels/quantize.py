@@ -1,0 +1,57 @@
+"""Layer-1 Pallas kernel: group-wise asymmetric RTN quantization.
+
+Used on the artifact-build path (quantizing a whole linear layer in one
+dispatch) and as a second, simpler Pallas correctness target besides the
+fused matmul. Semantics match `ref.quant_params` + `ref.quantize` exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(w_ref, codes_ref, scales_ref, zeros_ref, *, bits: int, group: int):
+    """One block of rows: compute per-group scale/zero and the codes."""
+    w = w_ref[...]  # [bm, K]
+    bm, k = w.shape
+    wg = w.reshape(bm, k // group, group)
+    lo = jnp.minimum(wg.min(axis=-1), 0.0)
+    hi = jnp.maximum(wg.max(axis=-1), 0.0)
+    qmax = (1 << bits) - 1
+    scale = jnp.maximum((hi - lo) / qmax, 1e-8)
+    zero = jnp.round(-lo / scale)
+    s = jnp.repeat(scale, group, axis=1)
+    z = jnp.repeat(zero, group, axis=1)
+    codes = jnp.clip(jnp.round(w / s) + z, 0, qmax)
+    codes_ref[...] = codes.astype(jnp.int8)
+    scales_ref[...] = scale
+    zeros_ref[...] = zero
+
+
+def quantize_pallas(w: jnp.ndarray, *, bits: int, group: int,
+                    block_rows: int = 128, interpret: bool = True):
+    """w: [out, in] -> (codes i8 [out,in], scales f32 [out,in/g], zeros)."""
+    out, cin = w.shape
+    gk = cin // group
+    bm = min(block_rows, out)
+    grid = (-(-out // bm),)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits, group=group),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, cin), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, cin), lambda i: (i, 0)),
+            pl.BlockSpec((bm, gk), lambda i: (i, 0)),
+            pl.BlockSpec((bm, gk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((out, cin), jnp.int8),
+            jax.ShapeDtypeStruct((out, gk), jnp.float32),
+            jax.ShapeDtypeStruct((out, gk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w)

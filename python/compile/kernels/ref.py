@@ -1,0 +1,124 @@
+"""Pure-jnp oracle for every quantization primitive.
+
+This is the single source of truth for numerics. The Pallas kernels
+(`quantize.py`, `fused_qmm.py`), the quantizer zoo, the AOT score graphs
+and the rust native engine are all tested against these functions.
+
+Conventions (shared with rust `quant::groupwise`):
+
+* weights `W` are `[out, in]`; groups of `group` consecutive *input*
+  channels share one (scale, zero) pair → scales/zeros are
+  `[out, in/group]`,
+* asymmetric round-to-nearest: `code = clip(round(w/scale) + zero, 0,
+  2^bits - 1)`, `dequant = (code - zero) * scale`, with
+  `scale = (max-min)/(2^bits-1)` and `zero = round(-min/scale)`,
+* the sub-branch is `Σ = B·A` with `A: [r, in]`, `B: [out, r]`; a
+  reconstructed layer computes `y = x @ dequant(Wq).T + (x @ A.T) @ B.T`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def group_minmax(w: jnp.ndarray, group: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(row, group) min and max. w: [out, in] -> [out, in/group]."""
+    out, cin = w.shape
+    assert cin % group == 0, f"in={cin} not divisible by group={group}"
+    wg = w.reshape(out, cin // group, group)
+    return wg.min(axis=-1), wg.max(axis=-1)
+
+
+def quant_params(w: jnp.ndarray, bits: int, group: int,
+                 clip_lo: Optional[jnp.ndarray] = None,
+                 clip_hi: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Asymmetric (scale, zero) per group. Optional learned clipping factors
+    (OmniQuant-style) shrink the [min, max] range: clip_* has shape
+    broadcastable to [out, in/group] with values in (0, 1]."""
+    lo, hi = group_minmax(w, group)
+    if clip_lo is not None:
+        lo = lo * clip_lo
+    if clip_hi is not None:
+        hi = hi * clip_hi
+    # Ensure the range covers zero so that zero error stays bounded.
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, 0.0)
+    qmax = (1 << bits) - 1
+    scale = (hi - lo) / qmax
+    scale = jnp.maximum(scale, 1e-8)
+    zero = jnp.round(-lo / scale)
+    return scale, zero
+
+
+def quantize(w: jnp.ndarray, bits: int, group: int,
+             scale: Optional[jnp.ndarray] = None,
+             zero: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """RTN codes [out, in] int8 (int8 holds 2..6-bit codes comfortably)."""
+    if scale is None or zero is None:
+        scale, zero = quant_params(w, bits, group)
+    out, cin = w.shape
+    qmax = (1 << bits) - 1
+    s = jnp.repeat(scale, group, axis=1)
+    z = jnp.repeat(zero, group, axis=1)
+    codes = jnp.clip(jnp.round(w / s) + z, 0, qmax)
+    return codes.astype(jnp.int8)
+
+
+def dequantize(codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+               group: int) -> jnp.ndarray:
+    """(codes - zero) * scale -> float weights [out, in]."""
+    s = jnp.repeat(scale, group, axis=1)
+    z = jnp.repeat(zero, group, axis=1)
+    return (codes.astype(jnp.float32) - z) * s
+
+
+def quantize_dequantize(w: jnp.ndarray, bits: int, group: int,
+                        clip_lo=None, clip_hi=None) -> jnp.ndarray:
+    """One-shot fake-quantization Q(w) (the paper's Q(·))."""
+    scale, zero = quant_params(w, bits, group, clip_lo, clip_hi)
+    return dequantize(quantize(w, bits, group, scale, zero), scale, zero, group)
+
+
+def qmm_ref(x: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+            zero: jnp.ndarray, a: Optional[jnp.ndarray], b: Optional[jnp.ndarray],
+            group: int) -> jnp.ndarray:
+    """Reference reconstructed-layer matmul.
+
+    x: [n, in] -> y: [n, out]; y = x @ dequant.T + (x @ A.T) @ B.T.
+    This is the un-fused semantics the fused Pallas kernel must match.
+    """
+    wd = dequantize(codes, scale, zero, group)
+    y = x @ wd.T
+    if a is not None and b is not None:
+        y = y + (x @ a.T) @ b.T
+    return y
+
+
+def fbq_reconstruct(w: jnp.ndarray, sigma: jnp.ndarray, bits: int,
+                    group: int) -> jnp.ndarray:
+    """FBQuant reconstruction W_F = Q(W - Σ) + Σ (paper Eq. 11)."""
+    return quantize_dequantize(w - sigma, bits, group) + sigma
+
+
+def fbq_reconstruct_ste(w: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                        bits: int, group: int) -> jnp.ndarray:
+    """Differentiable W_F with the paper's §4.2 detach: gradients flow only
+    through the explicit +Σ term (Eq. 18), not through Q(W−Σ)."""
+    sigma = b @ a
+    q = jax.lax.stop_gradient(quantize_dequantize(w - sigma, bits, group))
+    return q + sigma
+
+
+def max_reconstruction_error(w: jnp.ndarray, w_rec: jnp.ndarray) -> jnp.ndarray:
+    """max |w - w_rec| — the quantity bounded by s/2 for FBQuant (Eq. 13)."""
+    return jnp.max(jnp.abs(w - w_rec))
+
+
+def scale_bound(w: jnp.ndarray, sigma: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """The per-element bound s/2 evaluated for the FBQuant quantizer of
+    (W − Σ), expanded to [out, in]."""
+    scale, _ = quant_params(w - sigma, bits, group)
+    return jnp.repeat(scale, group, axis=1) / 2.0

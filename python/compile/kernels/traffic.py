@@ -1,0 +1,127 @@
+"""Analytic HBM-traffic / kernel-launch model for the §4.3 fusion.
+
+interpret-mode Pallas gives CPU-numpy timings, which are *not* a TPU/GPU
+proxy — so the figure-4 "modeled" series comes from this cost model, and
+the measured series comes from the rust native engine (real memory-bound
+wall-clock on CPU). Both are printed by `cargo bench --bench
+fig4_subbranch_delay`.
+
+Model: a kernel's cost = launch overhead + max(bytes/BW, flops/peak).
+At decode (m=1) every matmul is bandwidth-bound, which is exactly the
+regime the paper exploits (§1) and suffers from (§3.2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Machine:
+    """Roofline parameters. Defaults approximate an RTX-3090-class part
+    (936 GB/s, ~35 f32 TFLOP/s, ~4 µs launch overhead)."""
+
+    bw_bytes: float = 936e9
+    flops: float = 35e12
+    launch_s: float = 4e-6
+
+
+@dataclass(frozen=True)
+class LayerShape:
+    m: int          # tokens in the step (1 = decode)
+    k: int          # in features
+    n: int          # out features
+    r: int = 0      # sub-branch rank (0 = no sub-branch)
+    bits: int = 4   # weight bits
+    group: int = 128
+
+
+def _kernel_cost(mach: Machine, bytes_moved: float, flops: float) -> float:
+    return mach.launch_s + max(bytes_moved / mach.bw_bytes, flops / mach.flops)
+
+
+def macs(s: LayerShape) -> dict:
+    """MAC counts for main path and sub-branch (paper Fig. 4 upper-left)."""
+    main = s.m * s.k * s.n
+    sub = 2 * s.m * s.r * s.k if s.r else 0  # r*(k+n) in general; k==n in the paper's example
+    return {"main": main, "sub": sub, "ratio": sub / main if main else 0.0}
+
+
+def cost_fp16(mach: Machine, s: LayerShape) -> float:
+    """Single FP16 matmul kernel."""
+    bytes_moved = 2 * (s.m * s.k + s.k * s.n + s.m * s.n)
+    return _kernel_cost(mach, bytes_moved, 2 * s.m * s.k * s.n)
+
+
+def cost_quant_plain(mach: Machine, s: LayerShape) -> float:
+    """Fused dequant+matmul, no sub-branch (the "INT4" series)."""
+    w_bytes = s.k * s.n * s.bits / 8 + 4 * 2 * s.n * (s.k // s.group)
+    bytes_moved = 2 * s.m * s.k + w_bytes + 2 * s.m * s.n
+    return _kernel_cost(mach, bytes_moved, 2 * s.m * s.k * s.n)
+
+
+def cost_naive_sub(mach: Machine, s: LayerShape) -> float:
+    """Conventional 4-kernel sub-branch pipeline ("INT4-Sub"):
+    dequant | main matmul | down proj | up proj, each with HBM traffic."""
+    w_bytes = s.k * s.n * s.bits / 8 + 4 * 2 * s.n * (s.k // s.group)
+    # k1: read packed weights, write fp16 weights (materialized in HBM)
+    c1 = _kernel_cost(mach, w_bytes + 2 * s.k * s.n, s.k * s.n)
+    # k2: read x + fp16 weights, write y
+    c2 = _kernel_cost(mach, 2 * s.m * s.k + 2 * s.k * s.n + 2 * s.m * s.n,
+                      2 * s.m * s.k * s.n)
+    # k3: read x + A, write xa
+    c3 = _kernel_cost(mach, 2 * s.m * s.k + 2 * s.r * s.k + 4 * s.m * s.r,
+                      2 * s.m * s.k * s.r)
+    # k4: read y + xa + B, write y  (the redundant output round-trip)
+    c4 = _kernel_cost(mach, 2 * 2 * s.m * s.n + 4 * s.m * s.r + 2 * s.n * s.r,
+                      2 * s.m * s.r * s.n)
+    return c1 + c2 + c3 + c4
+
+
+def cost_fused_sub(mach: Machine, s: LayerShape) -> float:
+    """FBQuant fused kernels (2 launches): [dequant+main+up] and [down].
+    The output tensor is written once; xa stays in VMEM for the fused
+    kernel's tiles (down-projection kernel still writes it once)."""
+    w_bytes = s.k * s.n * s.bits / 8 + 4 * 2 * s.n * (s.k // s.group)
+    c_down = _kernel_cost(mach, 2 * s.m * s.k + 2 * s.r * s.k + 4 * s.m * s.r,
+                          2 * s.m * s.k * s.r)
+    c_main = _kernel_cost(mach, 2 * s.m * s.k + w_bytes + 4 * s.m * s.r + 2 * s.n * s.r + 2 * s.m * s.n,
+                          2 * s.m * s.k * s.n + 2 * s.m * s.r * s.n)
+    return c_down + c_main
+
+
+def fig4_rows(mach: Machine | None = None) -> list:
+    """Paper-scale (Llama2-7B linear layer) modeled latencies."""
+    mach = mach or Machine()
+    rows = []
+    for phase, m in [("prefill", 1024), ("decode", 1)]:
+        s = LayerShape(m=m, k=4096, n=4096, r=128)
+        base = cost_quant_plain(mach, s)
+        rows.append(
+            {
+                "phase": phase,
+                "macs_overhead": macs(s)["ratio"],
+                "int4": 1.0,
+                "int4_sub": cost_naive_sub(mach, s) / base,
+                "int4_fused": cost_fused_sub(mach, s) / base,
+                "fp16": cost_fp16(mach, s) / base,
+            }
+        )
+    return rows
+
+
+def extra_latency_saved(mach: Machine | None = None, m: int = 1) -> float:
+    """The paper's headline '60% of extra inference time saved' statistic:
+    1 - (fused_extra / naive_extra) at decode shape."""
+    mach = mach or Machine()
+    s = LayerShape(m=m, k=4096, n=4096, r=128)
+    base = cost_quant_plain(mach, s)
+    naive_extra = cost_naive_sub(mach, s) - base
+    fused_extra = cost_fused_sub(mach, s) - base
+    return 1.0 - fused_extra / naive_extra
+
+
+if __name__ == "__main__":
+    for row in fig4_rows():
+        print(row)
+    print(f"extra latency saved (decode): {extra_latency_saved():.1%}")

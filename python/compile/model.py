@@ -1,0 +1,325 @@
+"""Layer-2 model definitions: tiny-LLM families in pure JAX.
+
+Two-and-a-half architecture families mirror the paper's model grid
+(Llama2/Llama3 / Qwen2.5 / plus a GPT-style control):
+
+* ``llamoid`` — RMSNorm, RoPE, SiLU-gated MLP, no biases (Llama-shaped)
+* ``qwenoid`` — llamoid + QKV biases (Qwen-shaped)
+* ``gptoid``  — LayerNorm, learned positions, GELU MLP, biases (GPT-shaped)
+
+Weight convention: every linear stores ``W`` with shape ``[out, in]`` and
+computes ``y = x @ W.T (+ b)``. The seven quantizable projections per block
+are q, k, v, o and the MLP triplet (gate/up/down, or fc/proj for gptoid).
+
+The quantized forward path consumes per-linear quantization parameters
+(int codes + group scales/zeros + optional low-rank sub-branch A/B) and can
+run either through plain ``jnp`` ops (fast, used for AOT score graphs) or
+through the fused Pallas kernel (`kernels.fused_qmm`, the paper's §4.3
+contribution — used for kernel-path artifacts and tests).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tokenizer import VOCAB_SIZE
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str
+    family: str  # llamoid | gptoid | qwenoid
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int = VOCAB_SIZE
+    max_seq: int = 256
+    rope_theta: float = 10_000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def gated(self) -> bool:
+        return self.family in ("llamoid", "qwenoid")
+
+    @property
+    def rms(self) -> bool:
+        return self.family in ("llamoid", "qwenoid")
+
+    @property
+    def rope(self) -> bool:
+        return self.family in ("llamoid", "qwenoid")
+
+    @property
+    def qkv_bias(self) -> bool:
+        return self.family == "qwenoid"
+
+    @property
+    def mlp_bias(self) -> bool:
+        return self.family == "gptoid"
+
+    def linear_names(self) -> list:
+        """The quantizable projections of one block."""
+        if self.gated:
+            return ["q", "k", "v", "o", "gate", "up", "down"]
+        return ["q", "k", "v", "o", "fc", "proj"]
+
+    def linear_shape(self, name: str) -> Tuple[int, int]:
+        d, ff = self.d_model, self.d_ff
+        return {
+            "q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+            "gate": (ff, d), "up": (ff, d), "down": (d, ff),
+            "fc": (ff, d), "proj": (d, ff),
+        }[name]
+
+    def n_params(self) -> int:
+        n = 2 * self.vocab * self.d_model  # embeddings + head
+        if not self.rope:
+            n += self.max_seq * self.d_model
+        per = sum(o * i for o, i in (self.linear_shape(x) for x in self.linear_names()))
+        return n + self.n_layers * per
+
+    def to_meta(self) -> dict:
+        return asdict(self)
+
+
+# The model grid: families × sizes, mirroring the paper's six-model axis at
+# a scale a single CPU core can pretrain.
+MODELS: Dict[str, Config] = {
+    c.name: c
+    for c in [
+        Config("llamoid-tiny", "llamoid", d_model=128, n_layers=2, n_heads=4, d_ff=384),
+        Config("llamoid-small", "llamoid", d_model=256, n_layers=2, n_heads=8, d_ff=768),
+        Config("llamoid-base", "llamoid", d_model=256, n_layers=4, n_heads=8, d_ff=768),
+        Config("gptoid-tiny", "gptoid", d_model=128, n_layers=2, n_heads=4, d_ff=512),
+        Config("gptoid-small", "gptoid", d_model=256, n_layers=2, n_heads=8, d_ff=1024),
+        Config("qwenoid-tiny", "qwenoid", d_model=128, n_layers=2, n_heads=4, d_ff=384),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: Config, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    params: Dict[str, jnp.ndarray] = {}
+    keys = iter(jax.random.split(key, 4 + cfg.n_layers * 16))
+
+    def dense(shape, scale=None):
+        fan_in = shape[-1]
+        s = scale if scale is not None else (1.0 / np.sqrt(fan_in))
+        return jax.random.normal(next(keys), shape, jnp.float32) * s
+
+    params["tok_emb"] = dense((cfg.vocab, cfg.d_model), scale=0.02)
+    params["lm_head"] = dense((cfg.vocab, cfg.d_model))
+    if not cfg.rope:
+        params["pos_emb"] = dense((cfg.max_seq, cfg.d_model), scale=0.02)
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        params[p + "attn_norm.w"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params[p + "mlp_norm.w"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if not cfg.rms:
+            params[p + "attn_norm.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            params[p + "mlp_norm.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        for name in cfg.linear_names():
+            shape = cfg.linear_shape(name)
+            # residual-path projections get the depth-scaled init
+            scale = 1.0 / np.sqrt(shape[1]) / (np.sqrt(2 * cfg.n_layers) if name in ("o", "down", "proj") else 1.0)
+            params[p + name + ".w"] = dense(shape, scale=scale)
+            if (name in ("q", "k", "v") and cfg.qkv_bias) or (name in ("fc", "proj") and cfg.mlp_bias):
+                params[p + name + ".b"] = jnp.zeros((shape[0],), jnp.float32)
+    params["final_norm.w"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if not cfg.rms:
+        params["final_norm.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Core ops (shared by float and quantized paths)
+# ---------------------------------------------------------------------------
+
+def norm(cfg: Config, params, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+    w = params[prefix + ".w"]
+    if cfg.rms:
+        ms = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + 1e-5) * w
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * w + params[prefix + ".b"]
+
+
+def rope_tables(cfg: Config, positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables [*pos_shape, head_dim/2] (half-split convention)."""
+    half = cfg.head_dim // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, T, H, hd]; cos/sin: [T, hd/2] broadcast over batch and heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def _linear_f(params, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ params[prefix + ".w"].T
+    if prefix + ".b" in params:
+        y = y + params[prefix + ".b"]
+    return y
+
+
+def attention(cfg: Config, q, k, v, causal_from: int = 0):
+    """q: [B,Tq,H,hd], k/v: [B,Tk,H,hd]. Causal mask aligned so query i
+    attends to keys 0..causal_from+i."""
+    B, Tq, H, hd = q.shape
+    Tk = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    qpos = causal_from + jnp.arange(Tq)
+    kpos = jnp.arange(Tk)
+    mask = kpos[None, :] <= qpos[:, None]
+    scores = jnp.where(mask[None, None, :, :], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(B, Tq, cfg.d_model)
+
+
+def block(cfg: Config, params, l: int, x: jnp.ndarray, pos0,
+          linear_fn, kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+    """One transformer block. `linear_fn(params, prefix, x)` abstracts the
+    float vs quantized projection. If `kv` is given it is (k_cache, v_cache)
+    with layout [B, T_max, H, hd]; returns the updated caches."""
+    p = f"l{l}."
+    B, T, _ = x.shape
+    h = norm(cfg, params, p + "attn_norm", x)
+    q = linear_fn(params, p + "q", h).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k = linear_fn(params, p + "k", h).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    v = linear_fn(params, p + "v", h).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    if cfg.rope:
+        cos, sin = rope_tables(cfg, pos0 + jnp.arange(T))
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    new_kv = None
+    if kv is not None:
+        k_cache, v_cache = kv
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos0, 0, 0))
+        new_kv = (k_cache, v_cache)
+        attn = attention(cfg, q, k_cache, v_cache, causal_from=pos0)
+    else:
+        attn = attention(cfg, q, k, v)
+    x = x + linear_fn(params, p + "o", attn)
+
+    h = norm(cfg, params, p + "mlp_norm", x)
+    if cfg.gated:
+        g = linear_fn(params, p + "gate", h)
+        u = linear_fn(params, p + "up", h)
+        m = linear_fn(params, p + "down", jax.nn.silu(g) * u)
+    else:
+        m = linear_fn(params, p + "proj", jax.nn.gelu(linear_fn(params, p + "fc", h)))
+    return x + m, new_kv
+
+
+def embed(cfg: Config, params, tokens: jnp.ndarray, pos0=0) -> jnp.ndarray:
+    x = params["tok_emb"][tokens]
+    if not cfg.rope:
+        T = tokens.shape[-1]
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_emb"], pos0, T, axis=0)[None, :, :]
+    return x
+
+
+def forward(cfg: Config, params, tokens: jnp.ndarray, linear_fn=_linear_f) -> jnp.ndarray:
+    """Full-sequence forward: tokens [B, T] -> logits [B, T, V]."""
+    x = embed(cfg, params, tokens)
+    for l in range(cfg.n_layers):
+        x, _ = block(cfg, params, l, x, 0, linear_fn)
+    x = norm(cfg, params, "final_norm", x)
+    return x @ params["lm_head"].T
+
+
+def decode_step(cfg: Config, params, tokens: jnp.ndarray, pos0,
+                kv_k: jnp.ndarray, kv_v: jnp.ndarray, linear_fn=_linear_f):
+    """Incremental step: tokens [B, T_step]; kv_[kv]: [L, B, T_max, H, hd];
+    pos0 scalar int32 — returns (logits [B, T_step, V], new kv_k, new kv_v).
+
+    Note: attention masking treats all cache slots ≥ pos0+T_step as masked
+    (they are beyond the causal horizon), so stale cache contents are
+    harmless.
+    """
+    x = embed(cfg, params, tokens, pos0=pos0)
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        x, new_kv = block(cfg, params, l, x, pos0, linear_fn, kv=(kv_k[l], kv_v[l]))
+        ks.append(new_kv[0])
+        vs.append(new_kv[1])
+    x = norm(cfg, params, "final_norm", x)
+    logits = x @ params["lm_head"].T
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def loss_fn(cfg: Config, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross-entropy over [B, T] byte sequences."""
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------------------
+# Quantized forward path
+# ---------------------------------------------------------------------------
+
+def make_quantized_linear(qweights: Dict[str, Dict[str, jnp.ndarray]], group: int,
+                          use_pallas: bool = False, interpret: bool = True):
+    """Build a `linear_fn` closing over per-linear quantization params.
+
+    `qweights` maps a linear's full prefix (e.g. "l0.q") to a dict with
+    `codes` [out,in] int8 (unpacked), `scales`/`zeros` [out, in/group] f32
+    and optionally `a` [r, in] / `b` [out, r] (the sub-branch). Biases stay
+    in the float `params` dict. Prefixes not present in `qweights`
+    (embeddings, norms — never quantized) fall back to the float weights.
+    """
+    from .kernels import ref as kref
+
+    if use_pallas:
+        from .kernels import fused_qmm
+
+    def linear_fn(params, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+        if prefix not in qweights:
+            return _linear_f(params, prefix, x)
+        qw = qweights[prefix]
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if qw.get("col_scale") is not None:
+            # AWQ-style activation scaling, applied once — both the main
+            # path and the sub-branch read the scaled activation buffer.
+            x2 = x2 * qw["col_scale"][None, :]
+        if use_pallas:
+            y2 = fused_qmm.fused_qmm(
+                x2, qw["codes"], qw["scales"], qw["zeros"],
+                qw.get("a"), qw.get("b"), group=group, interpret=interpret,
+            )
+        else:
+            y2 = kref.qmm_ref(
+                x2, qw["codes"], qw["scales"], qw["zeros"],
+                qw.get("a"), qw.get("b"), group=group,
+            )
+        y = y2.reshape(*lead, -1)
+        if prefix + ".b" in params:
+            y = y + params[prefix + ".b"]
+        return y
+
+    return linear_fn

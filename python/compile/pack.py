@@ -1,0 +1,103 @@
+"""The `.fbqw` tensor-archive format (writer + reader, python side).
+
+One container format is used for everything that crosses the python→rust
+boundary: model weights (float and quantized), calibration/validation token
+streams, and zero-shot task suites. The rust reader lives in
+`rust/src/quant/formats.rs`; both sides are round-trip tested.
+
+Layout (little endian):
+
+    magic   b"FBQW"
+    version u32 (currently 1)
+    hdr_len u64
+    header  utf-8 JSON: {"meta": {...}, "tensors": [
+                {"name": str, "dtype": "f32|i32|i8|u8|u32",
+                 "shape": [..], "offset": int, "nbytes": int}, ...]}
+    payload tensors at 64-byte-aligned offsets (relative to payload start)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"FBQW"
+VERSION = 1
+ALIGN = 64
+
+_DTYPES = {
+    "f32": np.float32,
+    "i32": np.int32,
+    "i8": np.int8,
+    "u8": np.uint8,
+    "u32": np.uint32,
+}
+_DTYPE_NAMES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def _dtype_name(arr: np.ndarray) -> str:
+    try:
+        return _DTYPE_NAMES[arr.dtype]
+    except KeyError:
+        raise ValueError(f"unsupported dtype {arr.dtype} (use one of {list(_DTYPES)})")
+
+
+def write_fbqw(path: str, tensors: Dict[str, np.ndarray], meta: Dict[str, Any] | None = None) -> None:
+    """Write a tensor archive. `tensors` preserves insertion order."""
+    entries: List[Dict[str, Any]] = []
+    offset = 0
+    blobs: List[Tuple[int, bytes]] = []
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        raw = arr.tobytes()
+        # align
+        if offset % ALIGN:
+            offset += ALIGN - (offset % ALIGN)
+        entries.append(
+            {
+                "name": name,
+                "dtype": _dtype_name(arr),
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            }
+        )
+        blobs.append((offset, raw))
+        offset += len(raw)
+
+    header = json.dumps({"meta": meta or {}, "tensors": entries}).encode("utf-8")
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(MAGIC)
+        f.write(np.uint32(VERSION).tobytes())
+        f.write(np.uint64(len(header)).tobytes())
+        f.write(header)
+        payload_start = f.tell()
+        for off, raw in blobs:
+            f.seek(payload_start + off)
+            f.write(raw)
+    os.replace(tmp, path)
+
+
+def read_fbqw(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Read a tensor archive back into numpy arrays."""
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version = int(np.frombuffer(f.read(4), np.uint32)[0])
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        hdr_len = int(np.frombuffer(f.read(8), np.uint64)[0])
+        header = json.loads(f.read(hdr_len).decode("utf-8"))
+        payload_start = f.tell()
+        tensors: Dict[str, np.ndarray] = {}
+        for e in header["tensors"]:
+            f.seek(payload_start + e["offset"])
+            raw = f.read(e["nbytes"])
+            arr = np.frombuffer(raw, _DTYPES[e["dtype"]]).reshape(e["shape"]).copy()
+            tensors[e["name"]] = arr
+    return tensors, header.get("meta", {})

@@ -1,0 +1,169 @@
+"""Build-time driver: apply the quantizer zoo to the model grid.
+
+For each (model, method, bits) combination this produces
+``artifacts/models/<model>_<method>_w<bits>.fbqw`` containing:
+
+* all non-quantized float params (embeddings, norms, biases, lm head),
+* per quantizable linear ``<prefix>/codes_packed`` (u32 nibble-packed),
+  ``<prefix>/scales``, ``<prefix>/zeros`` and optionally ``<prefix>/a``,
+  ``<prefix>/b``, ``<prefix>/col_scale``,
+* meta: method, bits, group, rank, per-layer reconstruction losses.
+
+Packing convention (shared with rust `quant::pack`): codes along the input
+dimension, 8 codes per u32 word, code j in bits [4j, 4j+4). Both 3- and
+4-bit codes occupy a nibble; the logical bit-width governs the code range
+and the quantization grid (byte-exact 3-bit packing would complicate every
+consumer for a 12.5% size delta that the latency benches account for
+analytically — DESIGN.md §2).
+
+Usage: python -m compile.quantize_all --out ../artifacts [--model X]
+       [--method Y] [--bits 3,4] [--rank R] [--group G] [--calib-seqs N]
+       [--tag suffix]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from . import pack
+from .calibrate import load_or_capture_stats, stats_path
+from .model import MODELS, Config
+from . import quantizers
+
+
+def pack_codes(codes: np.ndarray) -> np.ndarray:
+    """int8 [out, in] -> u32 [out, in/8], 8 nibbles per word, little-end."""
+    out, cin = codes.shape
+    assert cin % 8 == 0
+    c = codes.astype(np.uint32).reshape(out, cin // 8, 8)
+    shifts = (4 * np.arange(8, dtype=np.uint32))[None, None, :]
+    return (c << shifts).sum(axis=-1, dtype=np.uint32)
+
+
+def unpack_codes(packed: np.ndarray, cin: int) -> np.ndarray:
+    """Inverse of `pack_codes` (used by tests and the AOT feeder)."""
+    out = packed.shape[0]
+    shifts = (4 * np.arange(8, dtype=np.uint32))[None, None, :]
+    c = (packed[:, :, None] >> shifts) & 0xF
+    return c.reshape(out, -1)[:, :cin].astype(np.int8)
+
+
+def default_rank(cfg: Config) -> int:
+    """Paper: r=128 at d=4096 (d/32); richer ratio at toy scale: d/8."""
+    return max(8, cfg.d_model // 8)
+
+
+def quantize_model(cfg: Config, fp_tensors: Dict[str, np.ndarray], stats,
+                   method: str, bits: int, group: int, rank: int, seed: int = 0):
+    """Returns (tensors dict for the archive, per-layer loss report)."""
+    fn = quantizers.get(method)
+    tensors: Dict[str, np.ndarray] = {}
+    report = {}
+    qprefixes = []
+    for l in range(cfg.n_layers):
+        for name in cfg.linear_names():
+            qprefixes.append(f"l{l}.{name}")
+    qset = set(qprefixes)
+
+    for key, arr in fp_tensors.items():
+        prefix = key[:-2] if key.endswith(".w") else None
+        if prefix in qset:
+            continue  # replaced by quantized tensors below
+        tensors[key] = arr
+
+    for prefix in qprefixes:
+        w = fp_tensors[prefix + ".w"].astype(np.float64)
+        st = stats[prefix]
+        t0 = time.time()
+        q = fn(w, st, bits, group, rank, seed=seed)
+        w_eff = quantizers.effective_weight(q, group)
+        loss = quantizers.recon_loss_np(w_eff, w, np.asarray(st["h"], np.float64))
+        report[prefix] = {"loss": loss, "secs": time.time() - t0}
+        tensors[prefix + "/codes_packed"] = pack_codes(q["codes"])
+        tensors[prefix + "/scales"] = q["scales"].astype(np.float32)
+        tensors[prefix + "/zeros"] = q["zeros"].astype(np.float32)
+        for opt in ("a", "b", "col_scale"):
+            if q.get(opt) is not None:
+                tensors[f"{prefix}/{opt}"] = q[opt].astype(np.float32)
+    return tensors, report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--method", default="all")
+    ap.add_argument("--bits", default="4,3")
+    ap.add_argument("--group", type=int, default=128)
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--calib-seqs", type=int, default=128)
+    ap.add_argument("--calib-len", type=int, default=256,
+                    help="tokens per calibration sequence (ablation: below "
+                         "d_in the Gram matrix XtX goes rank-deficient, the "
+                         "paper's §3.1 ill-posed regime)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    calib, _ = pack.read_fbqw(os.path.join(args.out, "data", "calib.fbqw"))
+    calib_tokens = calib["tokens"][: args.calib_seqs, : args.calib_len]
+
+    models = list(MODELS) if args.model == "all" else args.model.split(",")
+    methods = quantizers.METHODS if args.method == "all" else args.method.split(",")
+    bit_list = [int(b) for b in args.bits.split(",")]
+
+    for mname in models:
+        cfg = MODELS[mname]
+        fp_path = os.path.join(args.out, "models", f"{mname}_fp.fbqw")
+        if not os.path.exists(fp_path):
+            print(f"[skip] {mname}: no FP checkpoint yet")
+            continue
+        fp_tensors, fp_meta = pack.read_fbqw(fp_path)
+        # stats cache is keyed by calibration size (ablation support)
+        sname = cfg.name
+        if args.calib_seqs != 128 or args.calib_len != 256:
+            sname = f"{cfg.name}_n{args.calib_seqs}_l{args.calib_len}"
+        scfg = Config(**{**cfg.to_meta(), "name": sname})
+        params = {k: v for k, v in fp_tensors.items()}
+        stats = load_or_capture_stats(args.out, scfg, params, calib_tokens)
+
+        rank = args.rank or default_rank(cfg)
+        for method in methods:
+            for bits in bit_list:
+                tag = f"_{args.tag}" if args.tag else ""
+                outp = os.path.join(args.out, "models", f"{mname}_{method}_w{bits}{tag}.fbqw")
+                if os.path.exists(outp) and not args.force:
+                    print(f"[skip] {os.path.basename(outp)} exists")
+                    continue
+                t0 = time.time()
+                tensors, report = quantize_model(cfg, fp_tensors, stats, method, bits,
+                                                 args.group, rank)
+                mean_loss = float(np.mean([r["loss"] for r in report.values()]))
+                meta = {
+                    "kind": "weights",
+                    "scheme": "quant",
+                    "method": method,
+                    "bits": bits,
+                    "group": args.group,
+                    "rank": rank,
+                    "calib_seqs": args.calib_seqs,
+                    "calib_tokens": args.calib_seqs * args.calib_len,
+                    "config": cfg.to_meta(),
+                    "mean_recon_loss": mean_loss,
+                    "layer_losses": {k: r["loss"] for k, r in report.items()},
+                }
+                pack.write_fbqw(outp, tensors, meta)
+                print(
+                    f"[{mname}] {method} w{bits}: mean-recon={mean_loss:.3e} "
+                    f"({time.time() - t0:.1f}s)",
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""The quantizer zoo: the paper's baselines plus FBQuant.
+
+Every method implements::
+
+    quantize_layer(w, stats, bits, group, rank, seed) -> dict
+
+with ``w`` the float weights ``[out, in]`` (numpy), ``stats`` the
+calibration statistics for this linear (``{"h": [in,in], "mean_abs":
+[in]}``, see `calibrate.capture_stats`), and returns numpy tensors:
+
+* ``codes``  int8 ``[out, in]`` — quantization codes (pre-packing),
+* ``scales``/``zeros`` f32 ``[out, in/group]``,
+* optional ``a`` ``[r, in]`` / ``b`` ``[out, r]`` — the low-rank
+  sub-branch Σ = B·A,
+* optional ``col_scale`` f32 ``[in]`` — multiplier applied to the layer
+  *input* at runtime (AWQ's activation-aware scaling, folded kernel-side).
+
+The reconstructed weight every method is judged on (and that the rust
+engine executes) is::
+
+    W' = dequant(codes) ⊙ col_scaleᵀ? … specifically
+    y  = (x * col_scale) @ dequant(codes).T + ((x * col_scale) @ A.T) @ B.T
+
+(col_scale defaults to ones; the sub-branch, when present, sees the scaled
+input too — both branches read the same activation buffer, exactly like
+the fused kernel.)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from ..kernels import ref as kref
+import jax.numpy as jnp
+
+
+def rtn_parts(w: np.ndarray, bits: int, group: int):
+    """Plain RTN codes/scales/zeros for float weights."""
+    wj = jnp.asarray(w, jnp.float32)
+    scale, zero = kref.quant_params(wj, bits, group)
+    codes = kref.quantize(wj, bits, group, scale, zero)
+    return np.asarray(codes), np.asarray(scale), np.asarray(zero)
+
+
+def dequant(codes: np.ndarray, scales: np.ndarray, zeros: np.ndarray, group: int) -> np.ndarray:
+    return np.asarray(kref.dequantize(jnp.asarray(codes), jnp.asarray(scales), jnp.asarray(zeros), group))
+
+
+def effective_weight(q: Dict[str, np.ndarray], group: int) -> np.ndarray:
+    """The float weight matrix the runtime actually applies (for analysis
+    and tests): W_eff = (dequant + BᵀA) ⊙ col_scale (per input column)."""
+    w = dequant(q["codes"], q["scales"], q["zeros"], group)
+    if "a" in q and q.get("a") is not None:
+        w = w + q["b"] @ q["a"]
+    if "col_scale" in q and q.get("col_scale") is not None:
+        w = w * q["col_scale"][None, :]
+    return w
+
+
+def recon_loss_np(w_eff: np.ndarray, w: np.ndarray, h: np.ndarray) -> float:
+    """tr((W−W') H (W−W')ᵀ), normalised by tr(W H Wᵀ)."""
+    d = w - w_eff
+    num = float(np.einsum("oi,ij,oj->", d, h, d))
+    den = float(np.einsum("oi,ij,oj->", w, h, w)) + 1e-12
+    return num / den
+
+
+def sym_eigh(h: np.ndarray):
+    """Eigendecomposition of the (symmetrised, slightly damped) Gram."""
+    hs = 0.5 * (h + h.T)
+    lam, u = np.linalg.eigh(hs)
+    return np.maximum(lam, 0.0), u
+
+
+# registry is populated lazily to avoid import cycles
+def get(method: str) -> Callable:
+    from . import rtn, gptq, awq, omniquant, loftq, svdquant, caldera, eora, fbquant
+
+    table = {
+        "rtn": rtn.quantize_layer,
+        "gptq": gptq.quantize_layer,
+        "awq": awq.quantize_layer,
+        "omniquant": omniquant.quantize_layer,
+        "loftq": loftq.quantize_layer,
+        "svdquant": svdquant.quantize_layer,
+        "caldera": caldera.quantize_layer,
+        "eora": eora.quantize_layer,
+        "fbquant": fbquant.quantize_layer,
+    }
+    return table[method]
+
+
+METHODS = ["rtn", "gptq", "awq", "omniquant", "loftq", "svdquant", "caldera", "eora", "fbquant"]
+# methods that carry a sub-branch at runtime
+SUB_BRANCH_METHODS = {"loftq", "svdquant", "caldera", "eora", "fbquant"}

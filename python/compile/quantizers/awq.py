@@ -1,0 +1,42 @@
+"""AWQ baseline (Lin et al., 2024): activation-aware weight scaling.
+
+Salient input channels (large mean |x|) are protected by scaling the
+weight columns up before quantization and folding the inverse scale into
+the activation path: ``W ≈ dequant(Q(W·diag(s))) · diag(s)⁻¹`` so the
+runtime computes ``y = (x/s… )`` — concretely we emit
+``col_scale = 1/s`` and codes for ``W·diag(s)``. The exponent α of
+``s = (mean|x| / gmean)^α`` is grid-searched against the Gram-form
+reconstruction loss, as in the reference implementation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import dequant, recon_loss_np, rtn_parts
+
+
+def quantize_layer(w: np.ndarray, stats, bits: int, group: int, rank: int, seed: int = 0):
+    h = np.asarray(stats["h"], np.float64)
+    mean_abs = np.asarray(stats["mean_abs"], np.float64)
+    mean_abs = np.maximum(mean_abs, 1e-8)
+    # normalize to geometric mean 1 so scales stay O(1)
+    s_base = mean_abs / np.exp(np.mean(np.log(mean_abs)))
+
+    best = None
+    for alpha in np.linspace(0.0, 1.0, 11):
+        s = np.power(s_base, alpha)
+        s = np.clip(s, 1e-4, 1e4)
+        codes, scales, zeros = rtn_parts(w * s[None, :], bits, group)
+        w_eff = dequant(codes, scales, zeros, group) / s[None, :]
+        loss = recon_loss_np(w_eff, w, h)
+        if best is None or loss < best[0]:
+            best = (loss, alpha, codes, scales, zeros, s)
+
+    _, alpha, codes, scales, zeros, s = best
+    return {
+        "codes": codes,
+        "scales": scales,
+        "zeros": zeros,
+        "col_scale": (1.0 / s).astype(np.float32),
+    }

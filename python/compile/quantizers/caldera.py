@@ -1,0 +1,51 @@
+"""CALDERA-style baseline (Saha et al., 2024): calibration-aware
+alternating quantized + low-rank decomposition.
+
+Alternates between quantizing the residual and solving the H-weighted
+low-rank problem  min_Σ tr((E − Σ) H (E − Σ)ᵀ)  via SVD in the
+H^{1/2}-whitened space. With limited calibration data H is rank-deficient,
+so the whitening uses a pseudo-inverse — components in the near-null space
+of H are unconstrained by the objective. That is precisely the ill-posed
+optimization of the paper's §3.1, and this implementation inherits it
+faithfully (see `ablation_overfit`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import dequant, rtn_parts, sym_eigh
+
+
+def _weighted_lowrank(e: np.ndarray, lam: np.ndarray, u: np.ndarray, rank: int,
+                      rel_floor: float = 1e-10) -> np.ndarray:
+    """argmin_{rank-r Σ} tr((E−Σ) H (E−Σ)ᵀ) with H = U diag(λ) Uᵀ.
+
+    Solution: whiten with λ^{1/2}, truncated SVD, un-whiten with λ^{-1/2}.
+    Eigenvalues below `rel_floor·λmax` are floored (pseudo-inverse): the
+    corresponding directions are *unconstrained* by the calibration data.
+    """
+    lmax = float(lam.max()) if lam.size else 1.0
+    lam_f = np.maximum(lam, rel_floor * max(lmax, 1e-12))
+    sqrt_l = np.sqrt(lam_f)
+    ew = (e @ u) * sqrt_l[None, :]
+    uu, ss, vvt = np.linalg.svd(ew, full_matrices=False)
+    sw = (uu[:, :rank] * ss[:rank]) @ vvt[:rank]
+    return (sw / sqrt_l[None, :]) @ u.T
+
+
+def quantize_layer(w: np.ndarray, stats, bits: int, group: int, rank: int, seed: int = 0,
+                   iters: int = 4):
+    h = np.asarray(stats["h"], np.float64)
+    lam, u = sym_eigh(h)
+    sigma = np.zeros_like(w)
+    codes = scales = zeros = None
+    for _ in range(iters):
+        codes, scales, zeros = rtn_parts(w - sigma, bits, group)
+        q = dequant(codes, scales, zeros, group)
+        sigma = _weighted_lowrank(w - q, lam, u, rank)
+    # factor Σ for the runtime sub-branch format
+    uu, ss, vvt = np.linalg.svd(sigma, full_matrices=False)
+    b = (uu[:, :rank] * ss[:rank]).astype(np.float32)
+    a = vvt[:rank].astype(np.float32)
+    return {"codes": codes, "scales": scales, "zeros": zeros, "a": a, "b": b}

@@ -1,0 +1,37 @@
+"""EoRA baseline (Liu et al., 2024): training-free eigenspace low-rank
+compensation.
+
+Projects the quantization error E = W − Q(W) into the eigenspace of the
+activation Gram XᵀX, truncates there (so directions the data actually
+exercises are kept first) and projects back:
+
+    H = U diag(λ) Uᵀ;  E' = E U diag(√λ̃);  Σ' = SVD_r(E');
+    Σ = Σ' diag(1/√λ̃) Uᵀ
+
+with λ̃ floored well above zero (EoRA regularises; unlike CALDERA-lite it
+does not chase near-null-space directions, which keeps it bounded-ish but
+limits how much error it can cancel).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import dequant, rtn_parts, sym_eigh
+
+
+def quantize_layer(w: np.ndarray, stats, bits: int, group: int, rank: int, seed: int = 0):
+    h = np.asarray(stats["h"], np.float64)
+    codes, scales, zeros = rtn_parts(w, bits, group)
+    q = dequant(codes, scales, zeros, group)
+    e = w - q
+
+    lam, u = sym_eigh(h)
+    lmax = float(lam.max()) if lam.size else 1.0
+    lam_f = np.maximum(lam, 1e-4 * max(lmax, 1e-12))  # strong floor: regularised
+    sqrt_l = np.sqrt(lam_f)
+    ew = (e @ u) * sqrt_l[None, :]
+    uu, ss, vvt = np.linalg.svd(ew, full_matrices=False)
+    b = (uu[:, :rank] * ss[:rank]).astype(np.float32)
+    a = ((vvt[:rank] / sqrt_l[None, :]) @ u.T).astype(np.float32)
+    return {"codes": codes, "scales": scales, "zeros": zeros, "a": a, "b": b}

@@ -1,0 +1,25 @@
+"""FBQuant — the paper's method (§4).
+
+Feedback sub-branch: the main path stores Q(W − Σ) and the runtime adds
+Σ = B·A back, so the reconstruction error |w − w_F| = |(w−σ) − Q(w−σ)| is
+bounded by s/2 *regardless of Σ* (Eq. 13). A and B are optimized by
+layer-wise reconstruction (Algorithm 1) with the §4.2 STE detach, via
+`calibrate.fbquant_optimize` on the Gram-form loss.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import rtn_parts
+from ..calibrate import fbquant_optimize
+
+
+def quantize_layer(w: np.ndarray, stats, bits: int, group: int, rank: int, seed: int = 0,
+                   steps: int = 160, lr: float = 2e-3):
+    h = np.asarray(stats["h"], np.float64)
+    a, b, _hist = fbquant_optimize(w, h, bits, group, rank, steps=steps, lr=lr, seed=seed)
+    sigma = b @ a
+    # main path: Q(W − Σ); the feedback grid is recomputed for W − Σ
+    codes, scales, zeros = rtn_parts(w - sigma, bits, group)
+    return {"codes": codes, "scales": scales, "zeros": zeros, "a": a, "b": b}

@@ -1,0 +1,64 @@
+"""GPTQ baseline (Frantar et al., 2022): column-wise optimal-brain-
+compression with Hessian-guided error propagation.
+
+The Hessian of the layer-wise quadratic objective is ``2·XᵀX`` — exactly
+the Gram matrix captured by `calibrate`. We implement the standard
+sequential algorithm (no act-order) with per-group scale refresh: when the
+column index crosses a group boundary, scale/zero for that group are
+recomputed from the *current* (error-compensated) weights, matching the
+groupsize behaviour of the reference implementation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def quantize_layer(w: np.ndarray, stats, bits: int, group: int, rank: int, seed: int = 0,
+                   damp: float = 0.01):
+    out, cin = w.shape
+    h = np.asarray(stats["h"], np.float64).copy()
+    # dampen: H += damp * mean(diag) * I  (dead columns get identity)
+    diag_mean = float(np.mean(np.diag(h))) or 1.0
+    h[np.diag_indices(cin)] += damp * diag_mean
+    dead = np.diag(h) <= 0
+    h[dead, dead] = diag_mean
+
+    # Hinv via Cholesky of the inverse (upper triangular), as in the paper.
+    hinv = np.linalg.inv(h)
+    # regularize tiny asymmetries before cholesky
+    hinv = 0.5 * (hinv + hinv.T)
+    try:
+        u = np.linalg.cholesky(hinv).T  # upper
+    except np.linalg.LinAlgError:
+        hinv[np.diag_indices(cin)] += 1e-8 * np.mean(np.diag(hinv))
+        u = np.linalg.cholesky(hinv).T
+
+    wq = np.asarray(w, np.float64).copy()
+    codes = np.zeros((out, cin), np.int8)
+    scales = np.zeros((out, cin // group), np.float32)
+    zeros = np.zeros((out, cin // group), np.float32)
+    qmax = (1 << bits) - 1
+
+    g_scale = np.zeros(out)
+    g_zero = np.zeros(out)
+    for j in range(cin):
+        if j % group == 0:
+            # refresh quantization grid for this group from current weights
+            gidx = j // group
+            wg = wq[:, j : j + group]
+            lo = np.minimum(wg.min(axis=1), 0.0)
+            hi = np.maximum(wg.max(axis=1), 0.0)
+            g_scale = np.maximum((hi - lo) / qmax, 1e-8)
+            g_zero = np.round(-lo / g_scale)
+            scales[:, gidx] = g_scale
+            zeros[:, gidx] = g_zero
+        col = wq[:, j]
+        q = np.clip(np.round(col / g_scale) + g_zero, 0, qmax)
+        codes[:, j] = q.astype(np.int8)
+        deq = (q - g_zero) * g_scale
+        err = (col - deq) / u[j, j]
+        if j + 1 < cin:
+            wq[:, j + 1 :] -= np.outer(err, u[j, j + 1 :])
+
+    return {"codes": codes, "scales": scales, "zeros": zeros}

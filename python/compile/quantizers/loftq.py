@@ -1,0 +1,27 @@
+"""LoftQ-style baseline (Li et al., 2023): alternating SVD sub-branch.
+
+Data-free alternation:  Σ₀ = 0;  repeat  Q_t = RTN(W − Σ_{t−1}),
+Σ_t = SVD_r(W − Q_t).  The final reconstruction is Q + Σ — the
+*conventional* (non-feedback) sub-branch form the paper's §3.1 analyses.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import dequant, rtn_parts
+
+
+def quantize_layer(w: np.ndarray, stats, bits: int, group: int, rank: int, seed: int = 0,
+                   iters: int = 4):
+    sigma = np.zeros_like(w)
+    codes = scales = zeros = None
+    for _ in range(iters):
+        codes, scales, zeros = rtn_parts(w - sigma, bits, group)
+        q = dequant(codes, scales, zeros, group)
+        e = w - q
+        u, s, vt = np.linalg.svd(e, full_matrices=False)
+        sigma = (u[:, :rank] * s[:rank]) @ vt[:rank]
+    b = (u[:, :rank] * s[:rank]).astype(np.float32)
+    a = vt[:rank].astype(np.float32)
+    return {"codes": codes, "scales": scales, "zeros": zeros, "a": a, "b": b}

@@ -1,0 +1,31 @@
+"""OmniQuant-lite baseline (Shao et al., 2023): learnable clipping.
+
+Per-group clipping factors γ ∈ (0,1] for the min/max quantization range
+are learned by gradient descent on the Gram-form layer reconstruction loss
+(straight-through rounding). The full OmniQuant also learns equivalent
+transformations; the clipping component is the one that matters for
+weight-only quantization (their LWC), so this lite version keeps exactly
+that — noted in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import rtn_parts
+from ..calibrate import omniquant_optimize
+from ..kernels import ref as kref
+
+
+def quantize_layer(w: np.ndarray, stats, bits: int, group: int, rank: int, seed: int = 0):
+    h = np.asarray(stats["h"], np.float64)
+    clip_lo, clip_hi, _hist = omniquant_optimize(w, h, bits, group)
+    wj = jnp.asarray(w, jnp.float32)
+    scale, zero = kref.quant_params(wj, bits, group, jnp.asarray(clip_lo), jnp.asarray(clip_hi))
+    codes = kref.quantize(wj, bits, group, scale, zero)
+    return {
+        "codes": np.asarray(codes),
+        "scales": np.asarray(scale),
+        "zeros": np.asarray(zero),
+    }

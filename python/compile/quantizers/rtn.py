@@ -1,0 +1,12 @@
+"""Round-To-Nearest baseline: group-wise asymmetric RTN, no calibration."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import rtn_parts
+
+
+def quantize_layer(w: np.ndarray, stats, bits: int, group: int, rank: int, seed: int = 0):
+    codes, scales, zeros = rtn_parts(w, bits, group)
+    return {"codes": codes, "scales": scales, "zeros": zeros}

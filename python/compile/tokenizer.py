@@ -1,0 +1,38 @@
+"""Byte-level tokenizer shared (by specification) with the rust side.
+
+Vocabulary = the 256 byte values. Token id == byte value. Id 0 (NUL, which
+never occurs in generated text) doubles as BOS/pad. The spec is written to
+`artifacts/data/vocab.json` so the rust tokenizer can assert compatibility.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+VOCAB_SIZE = 256
+BOS_ID = 0
+PAD_ID = 0
+
+
+def encode(text: str) -> list[int]:
+    return list(text.encode("utf-8"))
+
+
+def decode(ids: list[int]) -> str:
+    return bytes(int(i) & 0xFF for i in ids).decode("utf-8", errors="replace")
+
+
+def write_spec(path: str) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "kind": "byte",
+                "vocab_size": VOCAB_SIZE,
+                "bos_id": BOS_ID,
+                "pad_id": PAD_ID,
+            },
+            f,
+            indent=2,
+        )

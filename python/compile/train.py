@@ -1,0 +1,149 @@
+"""Build-time pretraining of the tiny model grid.
+
+Pure-JAX Adam (no optax offline) with linear warmup + cosine decay,
+next-token cross-entropy over random corpus windows. Checkpoints are
+written as `.fbqw` archives consumed by both the quantizer zoo and the
+rust engine.
+
+Usage:  python -m compile.train --out ../artifacts [--model llamoid-tiny]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import pack
+from .model import MODELS, Config, forward, init_params, loss_fn
+
+# steps tuned for a single CPU core; tiny models saturate on this corpus.
+STEPS = {
+    "llamoid-tiny": 500,
+    "llamoid-small": 350,
+    "llamoid-base": 280,
+    "gptoid-tiny": 500,
+    "gptoid-small": 350,
+    "qwenoid-tiny": 500,
+}
+BATCH = 16
+SEQ = 128
+PEAK_LR = 3e-3
+WARMUP = 50
+
+
+def lr_at(step: int, total: int) -> float:
+    if step < WARMUP:
+        return PEAK_LR * (step + 1) / WARMUP
+    t = (step - WARMUP) / max(1, total - WARMUP)
+    return PEAK_LR * 0.5 * (1.0 + np.cos(np.pi * t)) + 1e-5
+
+
+def adam_init(params: Dict[str, jnp.ndarray]):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def make_step(cfg: Config):
+    @jax.jit
+    def step(params, opt, batch, lr):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+        # global-norm clip at 1.0
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        clip = jnp.minimum(1.0, 1.0 / (gnorm + 1e-9))
+        t = opt["t"] + 1
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        new_m, new_v, new_p = {}, {}, {}
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+        for k, g in grads.items():
+            g = g * clip
+            m = b1 * opt["m"][k] + (1 - b1) * g
+            v = b2 * opt["v"][k] + (1 - b2) * g * g
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            new_p[k] = params[k] - lr * upd
+            new_m[k], new_v[k] = m, v
+        return new_p, {"m": new_m, "v": new_v, "t": t}, loss, gnorm
+
+    return step
+
+
+def batches(tokens: np.ndarray, rng: np.random.Generator, batch: int, seq: int):
+    n = len(tokens) - seq - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([tokens[i : i + seq + 1] for i in idx]).astype(np.int32)
+
+
+def eval_ppl(cfg: Config, params, val: np.ndarray, seq: int = 256, max_tokens: int = 16_384) -> float:
+    """Byte-level perplexity on the first `max_tokens` of the val stream."""
+    fwd = jax.jit(lambda p, t: forward(cfg, p, t))
+    total_ll, total_n = 0.0, 0
+    n_seqs = min(max_tokens // seq, (len(val) - 1) // seq)
+    for i in range(n_seqs):
+        chunk = val[i * seq : i * seq + seq + 1].astype(np.int32)
+        logits = fwd(params, chunk[None, :-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, chunk[None, 1:, None], axis=-1)
+        total_ll += float(jnp.sum(ll))
+        total_n += seq
+    return float(np.exp(-total_ll / total_n))
+
+
+def train_model(cfg: Config, train_tokens: np.ndarray, val_tokens: np.ndarray,
+                outpath: str, steps: int | None = None, seed: int = 0) -> float:
+    steps = steps or STEPS.get(cfg.name, 600)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    step_fn = make_step(cfg)
+    rng = np.random.default_rng(seed + 1)
+    gen = batches(train_tokens, rng, BATCH, SEQ)
+    t0 = time.time()
+    for s in range(steps):
+        batch = jnp.asarray(next(gen))
+        params, opt, loss, gnorm = step_fn(params, opt, batch, lr_at(s, steps))
+        if s % 100 == 0 or s == steps - 1:
+            print(
+                f"[{cfg.name}] step {s:4d}/{steps} loss={float(loss):.4f} "
+                f"gnorm={float(gnorm):.2f} ({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+    ppl = eval_ppl(cfg, params, val_tokens)
+    print(f"[{cfg.name}] done: val byte-ppl={ppl:.3f} params={cfg.n_params()/1e6:.2f}M", flush=True)
+    tensors = {k: np.asarray(v, np.float32) for k, v in params.items()}
+    meta = {"kind": "weights", "scheme": "fp", "config": cfg.to_meta(), "val_ppl": ppl, "steps": steps}
+    pack.write_fbqw(outpath, tensors, meta)
+    return ppl
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+
+    data_dir = os.path.join(args.out, "data")
+    train_tokens, _ = pack.read_fbqw(os.path.join(data_dir, "corpus_train.fbqw"))
+    val_tokens, _ = pack.read_fbqw(os.path.join(data_dir, "corpus_val.fbqw"))
+    train_tokens = train_tokens["tokens"]
+    val_tokens = val_tokens["tokens"]
+
+    names = list(MODELS) if args.model == "all" else [args.model]
+    os.makedirs(os.path.join(args.out, "models"), exist_ok=True)
+    for name in names:
+        outpath = os.path.join(args.out, "models", f"{name}_fp.fbqw")
+        if os.path.exists(outpath):
+            print(f"[{name}] checkpoint exists, skipping")
+            continue
+        train_model(MODELS[name], train_tokens, val_tokens, outpath,
+                    steps=args.steps or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# allow `import compile.*` when pytest runs from python/
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# one CPU core: keep hypothesis sweeps small but meaningful
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,111 @@
+"""Pallas kernels vs the pure-jnp oracle (interpret=True on CPU).
+
+Hypothesis sweeps shapes, group sizes, ranks and bit-widths; the fused and
+un-fused pipelines must agree with `ref.qmm_ref` to float tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_qmm, quantize as kquant, ref as kref
+
+
+def _mk(rng, m, k, n, r, bits, group):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    scale, zero = kref.quant_params(w, bits, group)
+    codes = kref.quantize(w, bits, group, scale, zero)
+    if r:
+        a = jnp.asarray(rng.normal(size=(r, k)).astype(np.float32) * 0.1)
+        b = jnp.asarray(rng.normal(size=(n, r)).astype(np.float32) * 0.1)
+    else:
+        a = b = None
+    return x, codes, scale, zero, a, b
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([1, 3, 16]),
+    k=st.sampled_from([32, 64]),
+    n=st.sampled_from([16, 48]),
+    r=st.sampled_from([0, 4, 8]),
+    bits=st.sampled_from([3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_qmm_matches_ref(m, k, n, r, bits, seed):
+    rng = np.random.default_rng(seed)
+    group = 16
+    x, codes, scale, zero, a, b = _mk(rng, m, k, n, r, bits, group)
+    got = fused_qmm.fused_qmm(x, codes, scale, zero, a, b, group=group,
+                              block_m=8, block_n=16)
+    want = kref.qmm_ref(x, codes, scale, zero, a, b, group=group)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.sampled_from([1, 5]),
+    r=st.sampled_from([0, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_unfused_pipeline_matches_fused(m, r, seed):
+    """The 4-kernel pipeline and the fused kernel compute the same thing —
+    the paper's fusion is a pure performance transformation."""
+    rng = np.random.default_rng(seed)
+    group, k, n, bits = 16, 64, 32, 4
+    x, codes, scale, zero, a, b = _mk(rng, m, k, n, r, bits, group)
+    yf = fused_qmm.fused_qmm(x, codes, scale, zero, a, b, group=group,
+                             block_m=8, block_n=16)
+    yu = fused_qmm.unfused_qmm(x, codes, scale, zero, a, b, group=group,
+                               block_m=8, block_n=16)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yu), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_qmm_ragged_grid(rng):
+    """M, N not divisible by the block sizes exercises pallas padding."""
+    group, k, n, m, bits = 16, 64, 40, 13, 4
+    x, codes, scale, zero, a, b = _mk(rng, m, k, n, 8, bits, group)
+    got = fused_qmm.fused_qmm(x, codes, scale, zero, a, b, group=group,
+                              block_m=8, block_n=16)
+    want = kref.qmm_ref(x, codes, scale, zero, a, b, group=group)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=2e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    out=st.sampled_from([8, 24, 128]),
+    ng=st.sampled_from([1, 2, 4]),
+    bits=st.sampled_from([3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_kernel_matches_ref(out, ng, bits, seed):
+    rng = np.random.default_rng(seed)
+    group = 16
+    w = jnp.asarray(rng.normal(size=(out, group * ng)).astype(np.float32))
+    codes, scales, zeros = kquant.quantize_pallas(w, bits=bits, group=group, block_rows=8)
+    scale_r, zero_r = kref.quant_params(w, bits, group)
+    codes_r = kref.quantize(w, bits, group, scale_r, zero_r)
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(scale_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(zeros), np.asarray(zero_r), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(codes_r))
+
+
+def test_traffic_model_shape():
+    """The analytic model reproduces Fig. 4's qualitative shape."""
+    from compile.kernels import traffic
+
+    rows = traffic.fig4_rows()
+    prefill = next(r for r in rows if r["phase"] == "prefill")
+    decode = next(r for r in rows if r["phase"] == "decode")
+    # MACs overhead is the paper's 6.25%
+    assert abs(prefill["macs_overhead"] - 0.0625) < 1e-9
+    # naive sub-branch hurts decode far more than prefill
+    assert decode["int4_sub"] > 2.0
+    assert prefill["int4_sub"] < 1.6
+    # fusion recovers most of the decode overhead
+    assert decode["int4_fused"] < 0.5 * decode["int4_sub"]
+    # weight-only quantization beats FP16 at decode (Fig. 1 regime)
+    assert decode["fp16"] > 1.5
+    saved = traffic.extra_latency_saved()
+    assert 0.5 < saved < 1.0

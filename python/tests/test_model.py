@@ -1,0 +1,114 @@
+"""Model-definition tests: shapes, families, decode/forward consistency,
+quantized path wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    MODELS, Config, decode_step, forward, init_params, loss_fn,
+    make_quantized_linear,
+)
+from compile.kernels import ref as kref
+
+
+SMALL = Config("test-llamoid", "llamoid", d_model=32, n_layers=2, n_heads=2, d_ff=48, max_seq=64)
+SMALL_GPT = Config("test-gptoid", "gptoid", d_model=32, n_layers=2, n_heads=2, d_ff=64, max_seq=64)
+SMALL_QWEN = Config("test-qwenoid", "qwenoid", d_model=32, n_layers=2, n_heads=2, d_ff=48, max_seq=64)
+
+
+@pytest.mark.parametrize("cfg", [SMALL, SMALL_GPT, SMALL_QWEN], ids=lambda c: c.family)
+def test_forward_shapes_and_loss(cfg):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, 256, size=(2, 17)))
+    logits = forward(cfg, params, tokens)
+    assert logits.shape == (2, 17, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss = loss_fn(cfg, params, tokens)
+    # untrained byte model: loss near ln(256) ≈ 5.55
+    assert 4.0 < float(loss) < 7.0
+
+
+@pytest.mark.parametrize("cfg", [SMALL, SMALL_GPT, SMALL_QWEN], ids=lambda c: c.family)
+def test_decode_matches_forward(cfg):
+    """Prefill + incremental decode must reproduce the full-sequence logits."""
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    T = 12
+    tokens = jnp.asarray(rng.integers(1, 256, size=(1, T)))
+    full = forward(cfg, params, tokens)
+
+    L, B, H, hd, Tm = cfg.n_layers, 1, cfg.n_heads, cfg.head_dim, cfg.max_seq
+    kv_k = jnp.zeros((L, B, Tm, H, hd))
+    kv_v = jnp.zeros((L, B, Tm, H, hd))
+    # prefill the first 5 tokens, then decode one at a time
+    logits_p, kv_k, kv_v = decode_step(cfg, params, tokens[:, :5], 0, kv_k, kv_v)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(full[:, :5]), rtol=2e-3, atol=2e-4)
+    for t in range(5, T):
+        step_logits, kv_k, kv_v = decode_step(cfg, params, tokens[:, t : t + 1], t, kv_k, kv_v)
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, 0]), np.asarray(full[:, t]), rtol=2e-3, atol=2e-4
+        )
+
+
+def test_param_count_matches_config():
+    for cfg in [SMALL, SMALL_GPT, SMALL_QWEN]:
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        # count only the tensors n_params() models (norm vectors excluded)
+        total = sum(
+            int(np.prod(v.shape)) for k, v in params.items()
+            if not ("norm" in k or k.endswith(".b"))
+        )
+        assert total == cfg.n_params()
+
+
+def test_model_grid_is_well_formed():
+    for name, cfg in MODELS.items():
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.head_dim % 2 == 0  # rope half-split
+        for lname in cfg.linear_names():
+            out, cin = cfg.linear_shape(lname)
+            assert cin % 128 == 0, f"{name}.{lname}: in={cin} not group-128 aligned"
+            assert cin % 8 == 0  # nibble packing
+
+
+def _quantize_params(cfg, params, bits=4, group=16, rank=4):
+    qweights = {}
+    for l in range(cfg.n_layers):
+        for lname in cfg.linear_names():
+            prefix = f"l{l}.{lname}"
+            w = params[prefix + ".w"]
+            scale, zero = kref.quant_params(w, bits, group)
+            codes = kref.quantize(w, bits, group, scale, zero)
+            qweights[prefix] = {"codes": codes, "scales": scale, "zeros": zero}
+    return qweights
+
+
+def test_quantized_forward_close_to_float():
+    cfg = SMALL
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    # 6-bit: the finest grid whose codes fit the int8 code tensor (0..63)
+    qweights = _quantize_params(cfg, params, bits=6, group=16)
+    linear_fn = make_quantized_linear(qweights, group=16)
+    tokens = jnp.asarray(np.random.default_rng(2).integers(0, 256, size=(1, 9)))
+    lf = np.asarray(forward(cfg, params, tokens)).ravel()
+    lq = np.asarray(forward(cfg, params, tokens, linear_fn=linear_fn)).ravel()
+    # an untrained 2-layer model amplifies per-weight error; assert strong
+    # agreement rather than elementwise closeness
+    cos = float(np.dot(lf, lq) / (np.linalg.norm(lf) * np.linalg.norm(lq)))
+    assert cos > 0.995, f"cosine {cos}"
+    assert float(np.max(np.abs(lf - lq))) < 0.75
+
+
+def test_quantized_forward_pallas_matches_ref_path():
+    cfg = SMALL
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    qweights = _quantize_params(cfg, params, bits=4, group=16)
+    tokens = jnp.asarray(np.random.default_rng(3).integers(0, 256, size=(1, 8)))
+    l_ref = forward(cfg, params, tokens, linear_fn=make_quantized_linear(qweights, group=16))
+    l_pal = forward(
+        cfg, params, tokens,
+        linear_fn=make_quantized_linear(qweights, group=16, use_pallas=True),
+    )
+    np.testing.assert_allclose(np.asarray(l_pal), np.asarray(l_ref), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,61 @@
+"""Round-trip tests for the .fbqw archive and the nibble packing."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import pack
+from compile.quantize_all import pack_codes, unpack_codes
+
+
+def test_fbqw_roundtrip(tmp_path, rng):
+    tensors = {
+        "a": rng.normal(size=(3, 5)).astype(np.float32),
+        "b": rng.integers(-100, 100, size=(7,)).astype(np.int32),
+        "c": rng.integers(0, 255, size=(4, 8)).astype(np.uint8),
+        "d": rng.integers(0, 2**31, size=(2, 3)).astype(np.uint32),
+        "empty_ok": np.zeros((0,), np.float32),
+    }
+    meta = {"kind": "test", "nested": {"x": [1, 2, 3]}, "s": "héllo"}
+    p = str(tmp_path / "t.fbqw")
+    pack.write_fbqw(p, tensors, meta)
+    back, meta2 = pack.read_fbqw(p)
+    assert meta2 == meta
+    assert list(back) == list(tensors)  # order preserved
+    for k in tensors:
+        assert back[k].dtype == tensors[k].dtype
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_fbqw_alignment(tmp_path, rng):
+    tensors = {f"t{i}": rng.normal(size=(i + 1,)).astype(np.float32) for i in range(5)}
+    p = str(tmp_path / "a.fbqw")
+    pack.write_fbqw(p, tensors)
+    back, _ = pack.read_fbqw(p)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_fbqw_bad_magic(tmp_path):
+    p = tmp_path / "bad.fbqw"
+    p.write_bytes(b"NOPE" + b"\x00" * 16)
+    try:
+        pack.read_fbqw(str(p))
+        assert False, "should raise"
+    except ValueError as e:
+        assert "magic" in str(e)
+
+
+@given(
+    out=st.integers(1, 16),
+    groups_of8=st.integers(1, 8),
+    bits=st.sampled_from([3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_codes(out, groups_of8, bits, seed):
+    rng = np.random.default_rng(seed)
+    cin = groups_of8 * 8
+    codes = rng.integers(0, 2**bits, size=(out, cin)).astype(np.int8)
+    packed = pack_codes(codes)
+    assert packed.dtype == np.uint32
+    assert packed.shape == (out, cin // 8)
+    np.testing.assert_array_equal(unpack_codes(packed, cin), codes)

@@ -1,0 +1,113 @@
+"""Oracle self-consistency: the ref quantizer's mathematical invariants,
+including the paper's central bound (Eq. 13)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref as kref
+
+
+def _w(rng, out, cin, scale=1.0):
+    return jnp.asarray(rng.normal(0, scale, size=(out, cin)).astype(np.float32))
+
+
+@given(
+    out=st.integers(1, 12),
+    g=st.sampled_from([8, 16, 32]),
+    ng=st.integers(1, 4),
+    bits=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rtn_error_bounded_by_half_scale(out, g, ng, bits, seed):
+    """|w - Q(w)| <= s/2 per element (the quantizer covers [min,max]∪{0})."""
+    rng = np.random.default_rng(seed)
+    w = _w(rng, out, g * ng)
+    scale, zero = kref.quant_params(w, bits, g)
+    wq = kref.dequantize(kref.quantize(w, bits, g, scale, zero), scale, zero, g)
+    bound = jnp.repeat(scale, g, axis=1) / 2
+    assert jnp.all(jnp.abs(w - wq) <= bound + 1e-6)
+
+
+@given(
+    out=st.integers(1, 10),
+    ng=st.integers(1, 3),
+    bits=st.sampled_from([3, 4]),
+    rank=st.integers(1, 6),
+    sigma_scale=st.sampled_from([0.01, 0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fbq_bound_holds_for_any_sigma(out, ng, bits, rank, sigma_scale, seed):
+    """Paper Eq. 13: |w - W_F| <= s/2 REGARDLESS of the sub-branch Σ —
+    even adversarially large Σ cannot break the feedback bound."""
+    g = 16
+    rng = np.random.default_rng(seed)
+    w = _w(rng, out, g * ng)
+    b = jnp.asarray(rng.normal(0, sigma_scale, size=(out, rank)).astype(np.float32))
+    a = jnp.asarray(rng.normal(0, sigma_scale, size=(rank, g * ng)).astype(np.float32))
+    sigma = b @ a
+    w_f = kref.fbq_reconstruct(w, sigma, bits, g)
+    bound = kref.scale_bound(w, sigma, bits, g)
+    assert jnp.all(jnp.abs(w - w_f) <= bound + 1e-5)
+
+
+def test_conventional_subbranch_is_unbounded(rng):
+    """Contrast (paper §3.1): W' = Q(W) + Σ deviates arbitrarily with Σ."""
+    w = _w(rng, 4, 32)
+    sigma = jnp.ones((4, 32)) * 100.0
+    w_rec = kref.quantize_dequantize(w, 4, 16) + sigma
+    assert float(jnp.max(jnp.abs(w - w_rec))) > 50.0
+
+
+def test_qmm_ref_matches_dense(rng):
+    w = _w(rng, 24, 32)
+    x = jnp.asarray(rng.normal(size=(5, 32)).astype(np.float32))
+    a = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.normal(size=(24, 4)).astype(np.float32) * 0.1)
+    scale, zero = kref.quant_params(w, 4, 16)
+    codes = kref.quantize(w, 4, 16, scale, zero)
+    y = kref.qmm_ref(x, codes, scale, zero, a, b, group=16)
+    wd = kref.dequantize(codes, scale, zero, 16)
+    expect = x @ (wd + b @ a).T
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect), rtol=1e-4, atol=1e-4)
+
+
+def test_quantize_codes_in_range(rng):
+    w = _w(rng, 8, 64, scale=3.0)
+    for bits in (2, 3, 4):
+        codes = kref.quantize(w, bits, 16)
+        assert int(codes.min()) >= 0
+        assert int(codes.max()) <= (1 << bits) - 1
+
+
+def test_fbq_ste_gradient_flows_through_sigma(rng):
+    """§4.2: with the detach, dL/dA and dL/dB are the -2ΔH form, nonzero."""
+    import jax
+
+    w = _w(rng, 6, 32)
+    a = jnp.asarray(rng.normal(size=(3, 32)).astype(np.float32) * 0.05)
+    b = jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32) * 0.05)
+    h = jnp.eye(32)
+
+    def loss(a, b):
+        w_f = kref.fbq_reconstruct_ste(w, a, b, 4, 16)
+        d = w - w_f
+        return jnp.einsum("oi,ij,oj->", d, h, d)
+
+    ga, gb = jax.grad(loss, argnums=(0, 1))(a, b)
+    assert float(jnp.max(jnp.abs(ga))) > 0
+    assert float(jnp.max(jnp.abs(gb))) > 0
+
+    # without the detach the gradient is identically zero (paper Eq. 17)
+    def loss_nodetach(a, b):
+        sigma = b @ a
+        # STE on the quantizer: dQ/dW ≈ I, so Q contributes -I and +I cancels
+        q = kref.quantize_dequantize(w - sigma, 4, 16)
+        q = (w - sigma) + jax.lax.stop_gradient(q - (w - sigma))
+        w_f = q + sigma
+        d = w - w_f
+        return jnp.einsum("oi,ij,oj->", d, h, d)
+
+    ga0, gb0 = jax.grad(loss_nodetach, argnums=(0, 1))(a, b)
+    assert float(jnp.max(jnp.abs(ga0))) < 1e-6
+    assert float(jnp.max(jnp.abs(gb0))) < 1e-6

@@ -1,0 +1,75 @@
+//! Design-choice sweeps: sub-branch rank, group size and bit-width vs
+//! validation perplexity (llamoid-tiny, fbquant).
+//!
+//! Requires the sweep checkpoints produced by `make artifacts`
+//! (quantize_all with --rank/--group/--bits and matching --tag).
+
+mod common;
+
+use common::*;
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::eval::data::TokenStream;
+use fbquant::eval::ppl::{perplexity, PplConfig};
+use fbquant::eval::scorer::NativeScorer;
+use fbquant::model::WeightStore;
+
+fn eval(path: &std::path::Path, stream: &TokenStream, cfg: PplConfig) -> Option<(f64, usize)> {
+    let store = WeightStore::load(path).ok()?;
+    let mut scorer = NativeScorer::new(NativeEngine::from_store(&store, SubMode::Fused).ok()?);
+    let r = perplexity(&mut scorer, stream, cfg).ok()?;
+    Some((r.ppl, store.resident_bytes()))
+}
+
+fn main() -> anyhow::Result<()> {
+    if !have_artifacts() {
+        eprintln!("ablation_sweeps: run `make artifacts` first");
+        return Ok(());
+    }
+    let stream = TokenStream::load(&artifacts().join("data/corpus_val.fbqw"))?;
+    let cfg = PplConfig { seq: 128, max_tokens: if fast() { 2048 } else { 4096 } };
+    let dir = artifacts().join("models");
+
+    println!("\n=== Sweep: sub-branch rank (llamoid-tiny fbquant w3, group 128) ===");
+    println!("{:<22} {:>10} {:>14}", "checkpoint", "val ppl", "bytes");
+    for (rank, tag) in [(8, "_r8"), (16, ""), (32, "_r32"), (64, "_r64")] {
+        let path = dir.join(format!("llamoid-tiny_fbquant_w3{tag}.fbqw"));
+        match eval(&path, &stream, cfg) {
+            Some((ppl, bytes)) => println!(
+                "{:<22} {:>10.4} {:>14}",
+                format!("rank={rank}"),
+                ppl,
+                fbquant::util::human_bytes(bytes)
+            ),
+            None => println!("{:<22} {:>10}", format!("rank={rank}"), "(missing)"),
+        }
+    }
+
+    println!("\n=== Sweep: group size (llamoid-tiny fbquant w3, rank 16) ===");
+    for (group, tag) in [(32usize, "_g32"), (64, "_g64"), (128, "")] {
+        let path = dir.join(format!("llamoid-tiny_fbquant_w3{tag}.fbqw"));
+        match eval(&path, &stream, cfg) {
+            Some((ppl, bytes)) => println!(
+                "{:<22} {:>10.4} {:>14}",
+                format!("group={group}"),
+                ppl,
+                fbquant::util::human_bytes(bytes)
+            ),
+            None => println!("{:<22} {:>10}", format!("group={group}"), "(missing)"),
+        }
+    }
+
+    println!("\n=== Sweep: bit-width (llamoid-tiny fbquant, group 128, rank 16) ===");
+    for bits in [2u8, 3, 4] {
+        let path = dir.join(format!("llamoid-tiny_fbquant_w{bits}.fbqw"));
+        match eval(&path, &stream, cfg) {
+            Some((ppl, bytes)) => println!(
+                "{:<22} {:>10.4} {:>14}",
+                format!("bits={bits}"),
+                ppl,
+                fbquant::util::human_bytes(bytes)
+            ),
+            None => println!("{:<22} {:>10}", format!("bits={bits}"), "(missing)"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Shared plumbing for the paper-table benches.
+
+#![allow(dead_code)]
+
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::eval::scorer::NativeScorer;
+use fbquant::model::WeightStore;
+use std::path::PathBuf;
+
+pub const MODELS: &[&str] = &[
+    "llamoid-tiny",
+    "llamoid-small",
+    "llamoid-base",
+    "gptoid-tiny",
+    "gptoid-small",
+    "qwenoid-tiny",
+];
+
+/// Paper method order (Tables 1–8) + the two extra baselines we also built.
+pub const METHODS: &[&str] =
+    &["rtn", "gptq", "awq", "omniquant", "caldera", "svdquant", "fbquant"];
+pub const EXTRA_METHODS: &[&str] = &["loftq", "eora"];
+
+pub fn artifacts() -> PathBuf {
+    fbquant::artifacts_dir()
+}
+
+pub fn have_artifacts() -> bool {
+    artifacts().join("data/vocab.json").exists()
+}
+
+pub fn ckpt(model: &str, method: &str, bits: u8) -> PathBuf {
+    WeightStore::path_for(&artifacts(), model, method, bits)
+}
+
+pub fn native_scorer(model: &str, method: &str, bits: u8) -> anyhow::Result<NativeScorer> {
+    let store = WeightStore::load(&ckpt(model, method, bits))?;
+    Ok(NativeScorer::new(NativeEngine::from_store(&store, SubMode::Fused)?))
+}
+
+/// `FBQ_BENCH_FAST=1` shrinks grids for smoke runs.
+pub fn fast() -> bool {
+    fbquant::bench::fast_mode()
+}
+
+pub fn bench_models() -> Vec<&'static str> {
+    if fast() {
+        vec!["llamoid-tiny"]
+    } else {
+        MODELS.to_vec()
+    }
+}

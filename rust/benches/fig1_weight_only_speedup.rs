@@ -1,0 +1,84 @@
+//! Fig. 1: impact of weight-only quantization — end-to-end time (prefill +
+//! decode) and resident weight memory, FP vs INT4.
+//!
+//! Paper shape (RTX 3090, Llama2-7B): INT4 runs prefill-1024 + decode-80
+//! in ~60% of FP16's time and uses ~25% of the memory. Our substrate is
+//! FP32 (no f16 kernels on this CPU), so the analytic memory ratio is
+//! ~1/8 for codes (reported both measured and FP16-normalised).
+
+mod common;
+
+use common::*;
+use fbquant::bench::Bench;
+use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::eval::data::TokenStream;
+use fbquant::model::WeightStore;
+
+fn run_case(model: &str, method: &str, bits: u8, mode: SubMode,
+            prompt: &[u32], decode: usize) -> anyhow::Result<(f64, usize, f64)> {
+    let store = WeightStore::load(&ckpt(model, method, bits))?;
+    let engine = NativeEngine::from_store(&store, mode)?;
+    let bytes = engine.resident_bytes();
+    let mut backend = NativeBackend::new(engine, model);
+    let bench = Bench::new(1, if fast() { 2 } else { 4 });
+    let r = bench.run(method, || {
+        backend.reset_traffic();
+        let (mut state, logits) = backend.prefill(&[prompt], 1).unwrap();
+        let mut tok = fbquant::tensor::ops::argmax(&logits[0]) as u32;
+        for _ in 0..decode {
+            let lg = backend.decode(&mut state, &[tok]).unwrap();
+            tok = fbquant::tensor::ops::argmax(&lg[0]) as u32;
+        }
+    });
+    let run_bytes = backend.traffic().total_bytes() as f64;
+    Ok((r.min_s, bytes, run_bytes))
+}
+
+fn main() -> anyhow::Result<()> {
+    if !have_artifacts() {
+        eprintln!("fig1: run `make artifacts` first");
+        return Ok(());
+    }
+    let model = if fast() { "llamoid-tiny" } else { "llamoid-small" };
+    let stream = TokenStream::load(&artifacts().join("data/corpus_val.fbqw"))?;
+    let prompt: Vec<u32> = stream.tokens()[..128].iter().map(|&b| b as u32).collect();
+    let decode = 80;
+
+    println!("\n=== Fig 1: weight-only quantization impact ({model}, prefill {} + decode {decode}) ===",
+             prompt.len());
+    let (t_fp, b_fp, traffic_fp) = run_case(model, "fp", 4, SubMode::None, &prompt, decode)?;
+    let (t_q, b_q, traffic_q) = run_case(model, "rtn", 4, SubMode::None, &prompt, decode)?;
+
+    // projection to the paper's weight-bandwidth-bound regime (20 GB/s)
+    let proj_fp = traffic_fp / 20e9;
+    let proj_q = traffic_q / 20e9;
+
+    println!(
+        "{:<8} {:>12} {:>8} {:>13} {:>8} {:>14} {:>8}",
+        "Weights", "latency(ms)", "norm.", "proj.(ms)*", "norm.", "memory", "norm."
+    );
+    println!("{}", "-".repeat(80));
+    println!(
+        "{:<8} {:>12.1} {:>8.2} {:>13.1} {:>8.2} {:>14} {:>8.2}",
+        "FP32", t_fp * 1e3, 1.0, proj_fp * 1e3, 1.0,
+        fbquant::util::human_bytes(b_fp), 1.0
+    );
+    println!(
+        "{:<8} {:>12.1} {:>8.2} {:>13.1} {:>8.2} {:>14} {:>8.2}",
+        "INT4", t_q * 1e3, t_q / t_fp, proj_q * 1e3, proj_q / proj_fp,
+        fbquant::util::human_bytes(b_q), b_q as f64 / b_fp as f64
+    );
+    println!(
+        "\n*projected from measured kernel traffic on a 20 GB/s memory-bound device\n\
+         (the paper's regime: 7B weights >> cache; our toy weights are cache-resident,\n\
+         so the measured column is compute-bound — see EXPERIMENTS.md).\n\
+         paper (FP16 baseline): INT4 time ≈ 0.60×, memory ≈ 0.25×.\n\
+         ours: projected time {:.2}×, memory {:.2}× (≈ {:.2}× vs an FP16 baseline —\n\
+         embeddings/norms stay float at this toy scale).",
+        proj_q / proj_fp,
+        b_q as f64 / b_fp as f64,
+        2.0 * b_q as f64 / b_fp as f64
+    );
+    Ok(())
+}

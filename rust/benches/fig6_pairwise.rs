@@ -1,0 +1,49 @@
+//! Fig. 6: pairwise quantized-model comparison, 3-bit, deterministic
+//! judge (per-question held-out loss, both orders = 160 trials/pair).
+//!
+//! Paper shape (Llama3-8B-chat): FBQuant achieves the highest win+tie
+//! rates against AWQ, OmniQuant, CALDERA and SVDQuant.
+
+mod common;
+
+use common::*;
+use fbquant::eval::data::JudgeSet;
+use fbquant::eval::judge::{compare, question_nlls};
+
+fn main() -> anyhow::Result<()> {
+    if !have_artifacts() {
+        eprintln!("fig6: run `make artifacts` first");
+        return Ok(());
+    }
+    let set = JudgeSet::load(&artifacts().join("data/judge.fbqw"))?;
+    let model = "llamoid-tiny";
+    let bits = 3u8;
+    let margin = 0.02;
+    let opponents = if fast() {
+        vec!["awq"]
+    } else {
+        vec!["awq", "omniquant", "caldera", "svdquant"]
+    };
+
+    println!("\n=== Fig 6: pairwise comparison, {model} w{bits} ({} questions x 2 orders) ===", set.len());
+    let mut fbq = native_scorer(model, "fbquant", bits)?;
+    let nll_fbq = question_nlls(&mut fbq, &set)?;
+
+    println!("{:<24} {:>8} {:>8} {:>8} {:>10}", "pair", "win%", "tie%", "loss%", "win+tie%");
+    println!("{}", "-".repeat(64));
+    for opp in opponents {
+        let mut sc = native_scorer(model, opp, bits)?;
+        let nll_opp = question_nlls(&mut sc, &set)?;
+        let r = compare(&nll_fbq, &nll_opp, margin);
+        println!(
+            "{:<24} {:>8.1} {:>8.1} {:>8.1} {:>10.1}",
+            format!("fbquant vs {opp}"),
+            r.win_pct(),
+            r.tie_pct(),
+            r.loss_pct(),
+            r.win_tie_pct()
+        );
+    }
+    println!("\npaper: FBQuant 79.3% win+tie vs AWQ, 90.0% vs SVDQuant (GPT-4 judge).");
+    Ok(())
+}

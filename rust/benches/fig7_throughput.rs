@@ -1,0 +1,104 @@
+//! Fig. 7: token throughput (tk/s), batch 1 — FP vs INT4 vs INT4-Sub
+//! (naive sub-branch) vs INT4-FBQuant (fused).
+//!
+//! Paper shape (Llama2-7B, RTX 3090, prefill 256 / decode 64):
+//! FP16 ≈ 48 tk/s, INT4-Sub ≈ 46 tk/s (sub-branch eats the quant win),
+//! INT4-FBQuant ≈ 61 tk/s, plain INT4 fastest.
+//!
+//! Ours: prefill 192 / decode 64 (max_seq 256 at toy scale), rust native
+//! engine, end-to-end through the coordinator.
+
+mod common;
+
+use common::*;
+use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::eval::data::TokenStream;
+use fbquant::model::WeightStore;
+use std::time::Instant;
+
+fn throughput(model: &str, method: &str, bits: u8, mode: SubMode,
+              prompt: &[u32], decode: usize, reps: usize) -> anyhow::Result<(f64, f64, f64)> {
+    let store = WeightStore::load(&ckpt(model, method, bits))?;
+    let engine = NativeEngine::from_store(&store, mode)?;
+    let mut backend = NativeBackend::new(engine, model);
+    // warmup
+    let (mut state, logits) = backend.prefill(&[prompt], 1)?;
+    let mut tok = fbquant::tensor::ops::argmax(&logits[0]) as u32;
+    let _ = backend.decode(&mut state, &[tok])?;
+    drop(state);
+
+    let mut best_decode_tps = 0f64;
+    let mut best_e2e_tps = 0f64;
+    let mut bytes_per_tok = 0f64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let (mut state, logits) = backend.prefill(&[prompt], 1)?;
+        let t_prefill = t0.elapsed().as_secs_f64();
+        tok = fbquant::tensor::ops::argmax(&logits[0]) as u32;
+        backend.reset_traffic();
+        let td = Instant::now();
+        for _ in 0..decode {
+            let lg = backend.decode(&mut state, &[tok])?;
+            tok = fbquant::tensor::ops::argmax(&lg[0]) as u32;
+        }
+        let t_decode = td.elapsed().as_secs_f64();
+        bytes_per_tok = backend.traffic().total_bytes() as f64 / decode as f64;
+        // best-of-reps: robust to steal-time on a shared vCPU
+        best_decode_tps = best_decode_tps.max(decode as f64 / t_decode);
+        best_e2e_tps =
+            best_e2e_tps.max((prompt.len() + decode) as f64 / (t_prefill + t_decode));
+    }
+    Ok((best_decode_tps, best_e2e_tps, bytes_per_tok))
+}
+
+fn main() -> anyhow::Result<()> {
+    if !have_artifacts() {
+        eprintln!("fig7: run `make artifacts` first");
+        return Ok(());
+    }
+    let model = if fast() { "llamoid-tiny" } else { "llamoid-small" };
+    let stream = TokenStream::load(&artifacts().join("data/corpus_val.fbqw"))?;
+    let prompt: Vec<u32> = stream.tokens()[..192].iter().map(|&b| b as u32).collect();
+    let decode = 64;
+    let reps = if fast() { 2 } else { 4 };
+
+    println!("\n=== Fig 7: token throughput ({model}, prefill {} + decode {decode}, batch 1) ===",
+             prompt.len());
+    println!(
+        "{:<14} {:>12} {:>12} {:>8} {:>12} {:>12}",
+        "impl", "decode tk/s", "e2e tk/s", "norm.", "bytes/tok", "proj. tk/s*"
+    );
+    println!("{}", "-".repeat(76));
+
+    let cases: Vec<(&str, &str, u8, SubMode)> = vec![
+        ("FP32", "fp", 4, SubMode::None),
+        ("INT4", "rtn", 4, SubMode::None),
+        ("INT4-Sub", "fbquant", 4, SubMode::Unfused),
+        ("INT4-FBQuant", "fbquant", 4, SubMode::Fused),
+    ];
+    // projection: a weight-bandwidth-bound edge device at 20 GB/s (the
+    // paper's regime — our toy weights are cache-resident on CPU, so the
+    // measured FP-vs-INT4 column is compute-bound; see EXPERIMENTS.md)
+    const EDGE_BW: f64 = 20e9;
+    let mut fp_tps = 0f64;
+    for (name, method, bits, mode) in cases {
+        let (dtps, etps, bpt) = throughput(model, method, bits, mode, &prompt, decode, reps)?;
+        if name == "FP32" {
+            fp_tps = dtps;
+        }
+        println!(
+            "{:<14} {:>12.1} {:>12.1} {:>8.2} {:>12} {:>12.1}",
+            name,
+            dtps,
+            etps,
+            dtps / fp_tps,
+            fbquant::util::human_bytes(bpt as usize),
+            EDGE_BW / bpt
+        );
+    }
+    println!("\n*projected decode tk/s on a 20 GB/s memory-bound edge device (bytes/token");
+    println!(" measured from the kernel traffic counters — the regime of the paper's Fig 7).");
+    println!("paper (3090, Llama2-7B): FP16 48 tk/s, INT4-Sub 46, INT4 ~64, INT4-FBQuant 61.");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Kernel-level microbenchmarks across the stack:
+//! * rust native quantized GEMV/GEMM (fused / unfused / no-sub) across
+//!   sizes, with effective bandwidth,
+//! * dense FP GEMV for the roofline reference,
+//! * the PJRT `kernel_fused`/`kernel_unfused` artifacts (the Pallas
+//!   pair lowered by aot.py) — dispatch-count effect at the XLA level.
+
+mod common;
+
+use common::*;
+use fbquant::bench::Bench;
+use fbquant::engine::kernels::{QuantLinear, SubMode, Traffic, Workspace};
+use fbquant::quant::groupwise;
+use fbquant::quant::pack::pack_codes;
+use fbquant::util::Pcg64;
+
+fn layer(d: usize, r: usize, bits: u8) -> (QuantLinear, Vec<f32>) {
+    let mut rng = Pcg64::seeded(6);
+    let w: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32 * 0.3).collect();
+    let p = groupwise::quant_params(&w, d, d, bits, 128.min(d));
+    let codes = groupwise::quantize(&w, d, d, &p);
+    (
+        QuantLinear {
+            out: d,
+            cin: d,
+            bits,
+            group: 128.min(d),
+            packed: pack_codes(&codes, d, d),
+            scales: p.scales,
+            zeros: p.zeros,
+            rank: r,
+            a: Some((0..r * d).map(|_| rng.normal() as f32 * 0.02).collect()),
+            b: Some((0..d * r).map(|_| rng.normal() as f32 * 0.02).collect()),
+            col_scale: None,
+            bias: None,
+        },
+        w,
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let sizes: &[usize] = if fast() { &[256, 512] } else { &[256, 512, 1024] };
+    let iters = if fast() { 3 } else { 8 };
+    let bench = Bench::new(2, iters);
+
+    println!("\n=== native kernel microbench: quantized GEMV (decode shape, m=1) ===");
+    println!(
+        "{:<6} {:<14} {:>11} {:>12} {:>10}",
+        "d", "impl", "latency(us)", "GB/s eff.", "launches"
+    );
+    println!("{}", "-".repeat(58));
+    for &d in sizes {
+        let (ql, w) = layer(d, d / 32, 4);
+        let mut rng = Pcg64::seeded(7);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0f32; d];
+        let mut ws = Workspace::default();
+
+        // dense reference
+        let rd = bench.run("dense", || {
+            for o in 0..d {
+                y[o] = fbquant::tensor::ops::dot(&x, &w[o * d..(o + 1) * d]);
+            }
+        });
+        println!(
+            "{:<6} {:<14} {:>11.1} {:>12.2} {:>10}",
+            d, "FP32-dense", rd.mean_us(),
+            (4 * d * d) as f64 / rd.mean_s / 1e9, 1
+        );
+
+        for (name, mode) in [
+            ("INT4", SubMode::None),
+            ("INT4-Sub", SubMode::Unfused),
+            ("INT4-FBQuant", SubMode::Fused),
+        ] {
+            let mut t = Traffic::default();
+            ql.gemv(&x, &mut y, mode, &mut ws, &mut t);
+            let bytes = t.total_bytes();
+            let launches = t.kernel_launches;
+            let r = bench.run(name, || {
+                let mut tt = Traffic::default();
+                ql.gemv(&x, &mut y, mode, &mut ws, &mut tt);
+            });
+            println!(
+                "{:<6} {:<14} {:>11.1} {:>12.2} {:>10}",
+                d, name, r.mean_us(),
+                bytes as f64 / r.mean_s / 1e9, launches
+            );
+        }
+    }
+
+    // PJRT kernel artifacts
+    if have_artifacts() {
+        use fbquant::runtime::exec::Value;
+        use fbquant::runtime::ExecRegistry;
+        println!("\n=== PJRT kernel artifacts (m=32, k=n=512, r=64, interpret-lowered Pallas) ===");
+        let mut reg = ExecRegistry::open(&artifacts())?;
+        let mut rng = Pcg64::seeded(8);
+        let (m, k, n, r) = (32usize, 512usize, 512usize, 64usize);
+        let data = vec![
+            Value::F32((0..m * k).map(|_| rng.normal() as f32).collect()),
+            Value::I32((0..n * k).map(|_| rng.below(16) as i32).collect()),
+            Value::F32((0..n * (k / 128)).map(|_| 0.02 + rng.next_f32() * 0.02).collect()),
+            Value::F32((0..n * (k / 128)).map(|_| rng.below(16) as f32).collect()),
+            Value::F32((0..r * k).map(|_| rng.normal() as f32 * 0.02).collect()),
+            Value::F32((0..n * r).map(|_| rng.normal() as f32 * 0.02).collect()),
+        ];
+        for name in ["kernel_fused_m32", "kernel_unfused_m32"] {
+            let exec = reg.load(name)?;
+            let rb = bench.run(name, || {
+                let _ = exec.run(&data, &[]).unwrap();
+            });
+            println!("{:<20} {:>10.2} ms/dispatch", name, rb.mean_ms());
+        }
+    }
+    Ok(())
+}

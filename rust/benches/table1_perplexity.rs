@@ -1,0 +1,69 @@
+//! Table 1: perplexity on the held-out validation set across the method
+//! zoo × {W4, W3} × the model grid.
+//!
+//! Paper shape to reproduce: FP < FBQuant < {GPTQ, AWQ, OmniQuant,
+//! CALDERA, SVDQuant} < RTN, with the gap widening at 3 bits.
+
+mod common;
+
+use common::*;
+use fbquant::eval::data::TokenStream;
+use fbquant::eval::ppl::{perplexity, PplConfig};
+
+fn main() -> anyhow::Result<()> {
+    if !have_artifacts() {
+        eprintln!("table1_perplexity: run `make artifacts` first");
+        return Ok(());
+    }
+    let stream = TokenStream::load(&artifacts().join("data/corpus_val.fbqw"))?;
+    let cfg = PplConfig { seq: 128, max_tokens: if fast() { 2048 } else { 4096 } };
+    let models = bench_models();
+
+    println!("\n=== Table 1: WikiText2-analog validation perplexity (lower is better) ===");
+    println!("(seq={} tokens={}; group=128; rank=d/8; see EXPERIMENTS.md)", cfg.seq, cfg.max_tokens);
+    let mut header = format!("{:<10} {:>5}", "Method", "WBit");
+    for m in &models {
+        header.push_str(&format!(" {:>14}", m));
+    }
+    println!("{header}");
+    println!("{}", "-".repeat(header.len()));
+
+    let mut rows: Vec<(String, u8)> = vec![("fp".into(), 16)];
+    for &bits in &[4u8, 3] {
+        for &m in METHODS {
+            rows.push((m.into(), bits));
+        }
+    }
+
+    for (method, bits) in rows {
+        let mut line = format!("{:<10} {:>5}", method, bits);
+        for model in models.iter() {
+            match native_scorer(model, &method, bits) {
+                Ok(mut scorer) => {
+                    let r = perplexity(&mut scorer, &stream, cfg)?;
+                    line.push_str(&format!(" {:>14.4}", r.ppl));
+                }
+                Err(_) => line.push_str(&format!(" {:>14}", "-")),
+            }
+        }
+        println!("{line}");
+    }
+
+    println!("\nExtra baselines (LoftQ, EoRA — built beyond the paper's table):");
+    for &bits in &[4u8, 3] {
+        for &m in EXTRA_METHODS {
+            let mut line = format!("{:<10} {:>5}", m, bits);
+            for model in &models {
+                match native_scorer(model, m, bits) {
+                    Ok(mut scorer) => {
+                        let r = perplexity(&mut scorer, &stream, cfg)?;
+                        line.push_str(&format!(" {:>14.4}", r.ppl));
+                    }
+                    Err(_) => line.push_str(&format!(" {:>14}", "-")),
+                }
+            }
+            println!("{line}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Table 2 (+ Tables 3–8 detail): zero-shot multiple-choice accuracy over
+//! the seven task suites, lm-eval style.
+//!
+//! Default runs the full model grid with a question subset; pass
+//! `--detail` style env `FBQ_BENCH_DETAIL=1` for per-task rows (the
+//! appendix tables) and `FBQ_BENCH_FULL=1` for all 80 questions.
+
+mod common;
+
+use common::*;
+use fbquant::eval::data::McTask;
+use fbquant::eval::zeroshot::eval_suite;
+
+fn main() -> anyhow::Result<()> {
+    if !have_artifacts() {
+        eprintln!("table2_zeroshot: run `make artifacts` first");
+        return Ok(());
+    }
+    let tasks = McTask::load_all(&artifacts().join("data"))?;
+    let full = std::env::var("FBQ_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let detail = std::env::var("FBQ_BENCH_DETAIL").map(|v| v == "1").unwrap_or(false) || full;
+    let maxq = if full {
+        80
+    } else if fast() {
+        10
+    } else {
+        15
+    };
+    // full-grid zero-shot is expensive on one core: default to the tiny
+    // family; FBQ_BENCH_FULL=1 runs all six models at 80 questions
+    let models: Vec<&str> = if full {
+        MODELS.to_vec()
+    } else if fast() {
+        vec!["llamoid-tiny"]
+    } else {
+        vec!["llamoid-tiny", "qwenoid-tiny", "gptoid-tiny"]
+    };
+
+    println!("\n=== Table 2: zero-shot accuracy, avg over {} tasks (higher is better) ===", tasks.len());
+    println!("(questions/task={maxq}; length-normalised log-likelihood scoring)");
+    let mut header = format!("{:<10} {:>5}", "Method", "WBit");
+    for m in &models {
+        header.push_str(&format!(" {:>14}", m));
+    }
+    println!("{header}");
+    println!("{}", "-".repeat(header.len()));
+
+    let mut rows: Vec<(String, u8)> = vec![("fp".into(), 16)];
+    for &bits in &[4u8, 3] {
+        for &m in METHODS {
+            rows.push((m.into(), bits));
+        }
+    }
+
+    for (method, bits) in rows {
+        let mut line = format!("{:<10} {:>5}", method, bits);
+        let mut details = Vec::new();
+        for model in &models {
+            match native_scorer(model, &method, bits) {
+                Ok(mut scorer) => {
+                    let (results, avg) = eval_suite(&mut scorer, &tasks, maxq)?;
+                    line.push_str(&format!(" {:>13.2}%", 100.0 * avg));
+                    details.push((model.to_string(), results));
+                }
+                Err(_) => line.push_str(&format!(" {:>14}", "-")),
+            }
+        }
+        println!("{line}");
+        if detail {
+            for (model, results) in details {
+                let cells: Vec<String> = results
+                    .iter()
+                    .map(|r| format!("{}={:.1}%", r.task, 100.0 * r.accuracy()))
+                    .collect();
+                println!("    [{model}] {}", cells.join(" "));
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! In-repo micro-benchmark harness (offline substitute for criterion).
+//!
+//! Benches are `harness = false` binaries under `rust/benches/`; each uses
+//! [`Bench`] for warmup + repeated timed runs with mean/stddev reporting,
+//! and [`table`] helpers to print paper-style tables.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    /// fastest observed iteration — robust to scheduler steal-time on
+    /// shared vCPUs, and the statistic the latency benches report
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+
+    pub fn min_us(&self) -> f64 {
+        self.min_s * 1e6
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        self.min_s * 1e3
+    }
+}
+
+/// Benchmark runner: fixed warmup iterations, then `iters` timed runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, iters: 5 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Bench {
+        Bench { warmup, iters }
+    }
+
+    /// Time `f` (which must do a full unit of work per call).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / samples.len() as f64;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        BenchResult {
+            name: name.to_string(),
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: min,
+            iters: samples.len(),
+        }
+    }
+}
+
+/// Fixed-width table printing for bench output (paper-style rows).
+pub mod table {
+    /// Print a header row followed by a rule.
+    pub fn header(cols: &[(&str, usize)]) {
+        let mut line = String::new();
+        let mut rule = String::new();
+        for (name, w) in cols {
+            line.push_str(&format!("{name:>w$}  ", w = w));
+            rule.push_str(&"-".repeat(w + 2));
+        }
+        println!("{line}");
+        println!("{rule}");
+    }
+
+    /// One formatted cell value.
+    pub fn fmt_cell(v: f64, decimals: usize) -> String {
+        format!("{v:.decimals$}")
+    }
+}
+
+/// Environment knob: `FBQ_BENCH_FAST=1` shrinks bench workloads for smoke
+/// runs (CI / `cargo bench` sanity) while keeping the full grid by default.
+pub fn fast_mode() -> bool {
+    std::env::var("FBQ_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench::new(1, 3);
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.mean_s > 0.0);
+        assert_eq!(r.iters, 3);
+        assert!(acc > 0);
+    }
+}

@@ -1,0 +1,344 @@
+//! Execution backends behind the coordinator: the native engine and the
+//! PJRT AOT artifacts share one `Backend` trait so the serving loop,
+//! benches and examples are backend-agnostic.
+
+use super::request::GenRequest;
+use crate::engine::native::EngineWs;
+use crate::engine::{KvCache, NativeEngine, SubMode};
+use crate::model::{Config, WeightStore};
+use crate::runtime::exec::{build_weight_feed, Value};
+use crate::runtime::{ExecRegistry, LoadedExec, Manifest};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// Per-batch generation state (opaque to the serving loop).
+pub enum BatchState {
+    Native { kvs: Vec<KvCache>, pos: usize },
+    Pjrt { kv_k: Vec<f32>, kv_v: Vec<f32>, pos: usize, capacity: usize },
+}
+
+impl BatchState {
+    pub fn pos(&self) -> usize {
+        match self {
+            BatchState::Native { pos, .. } => *pos,
+            BatchState::Pjrt { pos, .. } => *pos,
+        }
+    }
+}
+
+pub trait Backend {
+    fn cfg(&self) -> &Config;
+
+    /// Largest compiled/supported batch size.
+    fn max_batch(&self) -> usize;
+
+    /// Prefill `prompts` (all the same length) into a fresh batch of
+    /// `capacity` slots; returns the state and last-position logits per
+    /// *occupied* slot.
+    fn prefill(&mut self, prompts: &[&[u32]], capacity: usize) -> Result<(BatchState, Vec<Vec<f32>>)>;
+
+    /// One decode step: `tokens[i]` is the last sampled token of slot `i`.
+    /// Returns next-token logits per occupied slot.
+    fn decode(&mut self, state: &mut BatchState, tokens: &[u32]) -> Result<Vec<Vec<f32>>>;
+
+    fn name(&self) -> String;
+}
+
+/// Validate a batch of requests against backend limits.
+pub fn validate_batch(cfg: &Config, reqs: &[GenRequest]) -> Result<()> {
+    let Some(first) = reqs.first() else { return Ok(()) };
+    let plen = first.prompt.len();
+    for r in reqs {
+        if r.prompt.is_empty() {
+            bail!("request {}: empty prompt", r.id);
+        }
+        if r.prompt.len() != plen {
+            bail!("batch is not prompt-length aligned");
+        }
+        if r.prompt.len() + r.max_new_tokens > cfg.max_seq {
+            bail!(
+                "request {}: prompt {} + gen {} exceeds max_seq {}",
+                r.id, r.prompt.len(), r.max_new_tokens, cfg.max_seq
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+pub struct NativeBackend {
+    engine: NativeEngine,
+    ws: EngineWs,
+    label: String,
+}
+
+impl NativeBackend {
+    pub fn new(engine: NativeEngine, label: &str) -> NativeBackend {
+        NativeBackend { engine, ws: EngineWs::default(), label: label.to_string() }
+    }
+
+    pub fn from_checkpoint(path: &std::path::Path, mode: SubMode, label: &str) -> Result<NativeBackend> {
+        let store = WeightStore::load(path)?;
+        Ok(NativeBackend::new(NativeEngine::from_store(&store, mode)?, label))
+    }
+
+    pub fn engine(&self) -> &NativeEngine {
+        &self.engine
+    }
+
+    pub fn traffic(&self) -> &crate::engine::Traffic {
+        &self.ws.traffic
+    }
+
+    pub fn reset_traffic(&mut self) {
+        self.ws.traffic.reset();
+    }
+}
+
+impl Backend for NativeBackend {
+    fn cfg(&self) -> &Config {
+        &self.engine.cfg
+    }
+
+    fn max_batch(&self) -> usize {
+        // the native engine decodes sequentially per slot; the batcher may
+        // still group requests for fairness/occupancy accounting.
+        4
+    }
+
+    fn prefill(&mut self, prompts: &[&[u32]], _capacity: usize) -> Result<(BatchState, Vec<Vec<f32>>)> {
+        let cfg = self.engine.cfg.clone();
+        let mut kvs = Vec::with_capacity(prompts.len());
+        let mut logits = Vec::with_capacity(prompts.len());
+        for prompt in prompts {
+            let mut kv = KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim());
+            let lg = self.engine.prefill(prompt, &mut kv, &mut self.ws);
+            kvs.push(kv);
+            logits.push(lg);
+        }
+        let pos = prompts.first().map_or(0, |p| p.len());
+        Ok((BatchState::Native { kvs, pos }, logits))
+    }
+
+    fn decode(&mut self, state: &mut BatchState, tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
+        let BatchState::Native { kvs, pos } = state else {
+            bail!("native backend got a foreign batch state");
+        };
+        if tokens.len() != kvs.len() {
+            bail!("decode: {} tokens for {} slots", tokens.len(), kvs.len());
+        }
+        let mut out = Vec::with_capacity(tokens.len());
+        for (kv, &tok) in kvs.iter_mut().zip(tokens) {
+            out.push(self.engine.decode_one(tok, kv, &mut self.ws));
+        }
+        *pos += 1;
+        Ok(out)
+    }
+
+    fn name(&self) -> String {
+        format!("native:{}", self.label)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+struct PjrtArtifacts {
+    /// prefill execs by (batch, t_step), t_steps descending
+    prefill: Vec<(usize, usize, Arc<LoadedExec>, Arc<Vec<xla::Literal>>)>,
+    /// decode execs by batch
+    decode: Vec<(usize, Arc<LoadedExec>, Arc<Vec<xla::Literal>>)>,
+}
+
+pub struct PjrtBackend {
+    cfg: Config,
+    label: String,
+    arts: PjrtArtifacts,
+    batches: Vec<usize>,
+    kv_numel: usize,
+    kv_shape: Vec<usize>,
+}
+
+impl PjrtBackend {
+    /// Load + compile the serve artifacts for `(model, checkpoint)`.
+    pub fn new(registry: &mut ExecRegistry, store: &WeightStore,
+               batches: &[usize], label: &str) -> Result<PjrtBackend> {
+        let cfg = store.cfg.clone();
+        let quantized = store.is_quantized();
+        let model = cfg.name.clone();
+        let mut prefill = Vec::new();
+        let mut decode = Vec::new();
+        for &b in batches {
+            for t_step in [128usize, 32] {
+                let name = format!(
+                    "prefill_{model}_{}_b{b}_t{t_step}",
+                    if quantized { "q" } else { "fp" }
+                );
+                let exec = registry.load(&name)?;
+                let feed = Arc::new(build_weight_feed(&exec.spec, store)?);
+                prefill.push((b, t_step, exec, feed));
+            }
+            let name = Manifest::step_name("decode", &model, quantized, b);
+            let exec = registry.load(&name)?;
+            let feed = Arc::new(build_weight_feed(&exec.spec, store)?);
+            decode.push((b, exec, feed));
+        }
+        // kv shape from the b=smallest decode spec, scaled per batch at use
+        let kv_spec = decode[0]
+            .1
+            .spec
+            .inputs
+            .iter()
+            .find(|t| t.name == "kv_k")
+            .context("decode artifact missing kv_k input")?
+            .clone();
+        Ok(PjrtBackend {
+            cfg,
+            label: label.to_string(),
+            arts: PjrtArtifacts { prefill, decode },
+            batches: batches.to_vec(),
+            kv_numel: kv_spec.numel(),
+            kv_shape: kv_spec.shape,
+        })
+    }
+
+    fn kv_len_for(&self, capacity: usize) -> usize {
+        // kv shape [L, B, Tm, H, hd] recorded for the smallest batch
+        let base_b = self.kv_shape[1];
+        self.kv_numel / base_b * capacity
+    }
+
+    fn decode_exec(&self, capacity: usize) -> Result<&(usize, Arc<LoadedExec>, Arc<Vec<xla::Literal>>)> {
+        self.arts
+            .decode
+            .iter()
+            .find(|(b, _, _)| *b == capacity)
+            .with_context(|| format!("no decode artifact for batch {capacity}"))
+    }
+
+    /// Split logits [B, V] into per-occupied-slot vectors.
+    fn split_logits(&self, flat: &[f32], capacity: usize, occupied: usize) -> Vec<Vec<f32>> {
+        let v = self.cfg.vocab;
+        debug_assert_eq!(flat.len(), capacity * v);
+        (0..occupied).map(|i| flat[i * v..(i + 1) * v].to_vec()).collect()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn cfg(&self) -> &Config {
+        &self.cfg
+    }
+
+    fn max_batch(&self) -> usize {
+        *self.batches.iter().max().unwrap_or(&1)
+    }
+
+    fn prefill(&mut self, prompts: &[&[u32]], capacity: usize) -> Result<(BatchState, Vec<Vec<f32>>)> {
+        if prompts.is_empty() {
+            bail!("empty prefill batch");
+        }
+        let plen = prompts[0].len();
+        if prompts.iter().any(|p| p.len() != plen) {
+            bail!("pjrt backend requires prompt-length-aligned batches");
+        }
+        let mut state = BatchState::Pjrt {
+            kv_k: vec![0f32; self.kv_len_for(capacity)],
+            kv_v: vec![0f32; self.kv_len_for(capacity)],
+            pos: 0,
+            capacity,
+        };
+        // chunk the prompt greedily: 128s, then 32s, then single steps
+        let mut consumed = 0usize;
+        let mut last_logits: Vec<Vec<f32>> = Vec::new();
+        while consumed < plen {
+            let rem = plen - consumed;
+            let chunk = self
+                .arts
+                .prefill
+                .iter()
+                .filter(|(b, t, _, _)| *b == capacity && *t <= rem)
+                .map(|(_, t, _, _)| *t)
+                .max();
+            let (exec, feed, step) = match chunk {
+                Some(t) => {
+                    let (_, _, e, f) = self
+                        .arts
+                        .prefill
+                        .iter()
+                        .find(|(b, tt, _, _)| *b == capacity && *tt == t)
+                        .unwrap();
+                    (Arc::clone(e), Arc::clone(f), t)
+                }
+                None => {
+                    let (_, e, f) = self.decode_exec(capacity)?;
+                    (Arc::clone(e), Arc::clone(f), 1)
+                }
+            };
+            // tokens [capacity, step]: empty slots replay slot 0 (their kv
+            // is discarded — the serving loop never reads those logits)
+            let mut toks = Vec::with_capacity(capacity * step);
+            for slot in 0..capacity {
+                let src = prompts.get(slot).unwrap_or(&prompts[0]);
+                toks.extend(src[consumed..consumed + step].iter().map(|&t| t as i32));
+            }
+            let BatchState::Pjrt { kv_k, kv_v, pos, .. } = &mut state else { unreachable!() };
+            let data = vec![
+                Value::I32(toks),
+                Value::I32(vec![*pos as i32]),
+                Value::F32(std::mem::take(kv_k)),
+                Value::F32(std::mem::take(kv_v)),
+            ];
+            let out = exec.run(&data, &feed)?;
+            let logits = out[0].as_f32()?;
+            last_logits = self.split_logits(logits, capacity, prompts.len());
+            *kv_k = match &out[1] {
+                Value::F32(v) => v.clone(),
+                _ => bail!("kv_k output not f32"),
+            };
+            *kv_v = match &out[2] {
+                Value::F32(v) => v.clone(),
+                _ => bail!("kv_v output not f32"),
+            };
+            *pos += step;
+            consumed += step;
+        }
+        Ok((state, last_logits))
+    }
+
+    fn decode(&mut self, state: &mut BatchState, tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
+        let BatchState::Pjrt { kv_k, kv_v, pos, capacity } = state else {
+            bail!("pjrt backend got a foreign batch state");
+        };
+        let capacity = *capacity;
+        let (_, exec, feed) = self.decode_exec(capacity)?;
+        let (exec, feed) = (Arc::clone(exec), Arc::clone(feed));
+        let mut toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        toks.resize(capacity, *toks.first().unwrap_or(&1));
+        let data = vec![
+            Value::I32(toks),
+            Value::I32(vec![*pos as i32]),
+            Value::F32(std::mem::take(kv_k)),
+            Value::F32(std::mem::take(kv_v)),
+        ];
+        let out = exec.run(&data, &feed)?;
+        let logits = self.split_logits(out[0].as_f32()?, capacity, tokens.len());
+        *kv_k = match &out[1] {
+            Value::F32(v) => v.clone(),
+            _ => bail!("kv_k output not f32"),
+        };
+        *kv_v = match &out[2] {
+            Value::F32(v) => v.clone(),
+            _ => bail!("kv_v output not f32"),
+        };
+        *pos += 1;
+        Ok(logits)
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.label)
+    }
+}

@@ -1,0 +1,189 @@
+//! Dynamic batcher: admission queue + batch forming.
+//!
+//! Requests are bucketed by prompt length (the PJRT decode artifacts share
+//! a scalar `pos0` across batch slots, so a batch must be position-aligned)
+//! and released either when a full batch is available or when the oldest
+//! request has waited `max_wait`.
+
+use super::request::GenRequest;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// compiled batch sizes, ascending (e.g. [1, 4])
+    pub batch_sizes: Vec<usize>,
+    pub max_wait: Duration,
+    /// admission bound; submit fails beyond this
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(20),
+            max_queue: 1024,
+        }
+    }
+}
+
+/// A formed batch (position-aligned requests).
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<GenRequest>,
+    /// the compiled batch size to run (>= requests.len())
+    pub capacity: usize,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<GenRequest>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        assert!(!cfg.batch_sizes.is_empty());
+        let mut cfg = cfg;
+        cfg.batch_sizes.sort_unstable();
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.cfg.batch_sizes.last().unwrap()
+    }
+
+    /// Admission control: false = queue full, caller should shed load.
+    pub fn submit(&mut self, req: GenRequest) -> bool {
+        if self.queue.len() >= self.cfg.max_queue {
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    /// The smallest compiled batch size that fits `n` requests.
+    fn capacity_for(&self, n: usize) -> usize {
+        for &b in &self.cfg.batch_sizes {
+            if b >= n {
+                return b;
+            }
+        }
+        self.max_batch()
+    }
+
+    /// Form the next batch, or None if the queue should keep waiting.
+    ///
+    /// Policy: take the oldest request; gather up to `max_batch` requests
+    /// with the SAME prompt length (position alignment); release when the
+    /// group fills the largest batch or the oldest has waited `max_wait`.
+    pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
+        let oldest = self.queue.front()?;
+        let len0 = oldest.prompt.len();
+        let matching: Vec<usize> = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.prompt.len() == len0)
+            .map(|(i, _)| i)
+            .take(self.max_batch())
+            .collect();
+
+        let timed_out = now.duration_since(oldest.arrived) >= self.cfg.max_wait;
+        if matching.len() < self.max_batch() && !timed_out {
+            return None;
+        }
+
+        // remove back-to-front so indices stay valid
+        let mut requests: Vec<GenRequest> = Vec::with_capacity(matching.len());
+        for &i in matching.iter().rev() {
+            requests.push(self.queue.remove(i).unwrap());
+        }
+        requests.reverse();
+        let capacity = self.capacity_for(requests.len());
+        Some(Batch { requests, capacity })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, plen: usize) -> GenRequest {
+        GenRequest::new(id, vec![1; plen], 8)
+    }
+
+    fn cfg(wait_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(wait_ms),
+            max_queue: 8,
+        }
+    }
+
+    #[test]
+    fn fills_full_batch_immediately() {
+        let mut b = Batcher::new(cfg(1000));
+        for i in 0..5 {
+            assert!(b.submit(req(i, 16)));
+        }
+        let batch = b.next_batch(Instant::now()).expect("full batch");
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(batch.capacity, 4);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn waits_for_more_until_timeout() {
+        let mut b = Batcher::new(cfg(1000));
+        b.submit(req(0, 16));
+        assert!(b.next_batch(Instant::now()).is_none());
+        // after the timeout, a partial batch is released
+        let later = Instant::now() + Duration::from_millis(1500);
+        let batch = b.next_batch(later).expect("timeout batch");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.capacity, 1);
+    }
+
+    #[test]
+    fn buckets_by_prompt_length() {
+        let mut b = Batcher::new(cfg(0)); // immediate release
+        b.submit(req(0, 16));
+        b.submit(req(1, 32));
+        b.submit(req(2, 16));
+        let batch = b.next_batch(Instant::now()).unwrap();
+        let lens: Vec<usize> = batch.requests.iter().map(|r| r.prompt.len()).collect();
+        assert_eq!(lens, vec![16, 16]);
+        assert_eq!(b.len(), 1); // the 32-token request remains
+        let batch2 = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch2.requests[0].prompt.len(), 32);
+    }
+
+    #[test]
+    fn admission_control_sheds_load() {
+        let mut b = Batcher::new(cfg(1000));
+        for i in 0..8 {
+            assert!(b.submit(req(i, 4)));
+        }
+        assert!(!b.submit(req(99, 4)));
+    }
+
+    #[test]
+    fn capacity_rounds_to_compiled_sizes() {
+        let mut b = Batcher::new(cfg(0));
+        b.submit(req(0, 8));
+        b.submit(req(1, 8));
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.capacity, 4); // padded to the compiled size
+    }
+}

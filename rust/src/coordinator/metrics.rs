@@ -1,0 +1,92 @@
+//! Serving metrics: TTFT, per-token latency, throughput, queue depth.
+
+use crate::util::timer::LatencyStats;
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct ServeMetrics {
+    pub started: Instant,
+    pub requests_in: usize,
+    pub requests_done: usize,
+    pub tokens_prefilled: usize,
+    pub tokens_generated: usize,
+    pub batches_formed: usize,
+    pub batch_occupancy_sum: f64,
+    pub ttft: LatencyStats,
+    pub per_token: LatencyStats,
+    pub e2e: LatencyStats,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            started: Instant::now(),
+            requests_in: 0,
+            requests_done: 0,
+            tokens_prefilled: 0,
+            tokens_generated: 0,
+            batches_formed: 0,
+            batch_occupancy_sum: 0.0,
+            ttft: LatencyStats::new(),
+            per_token: LatencyStats::new(),
+            e2e: LatencyStats::new(),
+        }
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&mut self, occupied: usize, capacity: usize) {
+        self.batches_formed += 1;
+        self.batch_occupancy_sum += occupied as f64 / capacity.max(1) as f64;
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches_formed == 0 {
+            0.0
+        } else {
+            self.batch_occupancy_sum / self.batches_formed as f64
+        }
+    }
+
+    /// Decode throughput over the whole run (tokens/second).
+    pub fn decode_tps(&self) -> f64 {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        if elapsed > 0.0 {
+            self.tokens_generated as f64 / elapsed
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={}/{} prefill_tokens={} gen_tokens={} tps={:.1} occupancy={:.2}\n  {}\n  {}\n  {}",
+            self.requests_done,
+            self.requests_in,
+            self.tokens_prefilled,
+            self.tokens_generated,
+            self.decode_tps(),
+            self.mean_occupancy(),
+            self.ttft.report("ttft"),
+            self.per_token.report("per-token"),
+            self.e2e.report("e2e"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_math() {
+        let mut m = ServeMetrics::new();
+        m.record_batch(2, 4);
+        m.record_batch(4, 4);
+        assert!((m.mean_occupancy() - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,31 @@
+//! Layer-3 serving coordinator.
+//!
+//! The paper's contribution is the quantization scheme + fused kernel, so
+//! the coordinator is the serving shell that makes it deployable:
+//!
+//! * [`request`] — request/response types with per-stage timestamps,
+//! * [`sampler`] — greedy / temperature / top-k sampling,
+//! * [`batcher`] — dynamic batching: admission queue, wait-timeout batch
+//!   forming, bucketing by (prompt length, compiled batch size),
+//! * [`backend`] — the execution abstraction: the native engine or the
+//!   PJRT artifacts (prefill chunking + batched decode),
+//! * [`server`] — the coordinator loop: batcher → backend → sampler →
+//!   responses, with metrics,
+//! * [`metrics`] — TTFT / per-token latency / throughput accounting,
+//! * [`workload`] — synthetic request generators for `serve` and the
+//!   Fig-7 bench.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod sampler;
+pub mod server;
+pub mod workload;
+
+pub use backend::{Backend, NativeBackend, PjrtBackend};
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::ServeMetrics;
+pub use request::{GenRequest, GenResponse, SamplingParams};
+pub use sampler::Sampler;
+pub use server::{Coordinator, CoordinatorConfig};

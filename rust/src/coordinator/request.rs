@@ -1,0 +1,83 @@
+//! Request/response types flowing through the coordinator.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    /// 0.0 => greedy
+    pub temperature: f32,
+    /// 0 => full distribution
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub params: SamplingParams,
+    /// EOS byte (generation stops when sampled); None = run to budget.
+    pub stop_token: Option<u32>,
+    pub arrived: Instant,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            params: SamplingParams::default(),
+            stop_token: None,
+            arrived: Instant::now(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    /// time from arrival to first generated token
+    pub ttft_us: f64,
+    /// time from arrival to completion
+    pub total_us: f64,
+    /// decode-phase seconds (for tk/s accounting)
+    pub decode_s: f64,
+}
+
+impl GenResponse {
+    pub fn decode_tps(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.tokens.len() as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_tps() {
+        let r = GenResponse {
+            id: 1,
+            prompt_len: 4,
+            tokens: vec![1, 2, 3, 4, 5, 6],
+            ttft_us: 100.0,
+            total_us: 400.0,
+            decode_s: 2.0,
+        };
+        assert!((r.decode_tps() - 3.0).abs() < 1e-9);
+    }
+}

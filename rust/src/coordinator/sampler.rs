@@ -1,0 +1,72 @@
+//! Token sampling: greedy, temperature and top-k over logits.
+
+use super::request::SamplingParams;
+use crate::tensor::ops;
+use crate::util::Pcg64;
+
+#[derive(Debug)]
+pub struct Sampler {
+    rng: Pcg64,
+}
+
+impl Sampler {
+    pub fn new(seed: u64) -> Sampler {
+        Sampler { rng: Pcg64::seeded(seed) }
+    }
+
+    pub fn sample(&mut self, logits: &[f32], p: &SamplingParams) -> u32 {
+        if p.temperature <= 0.0 {
+            return ops::argmax(logits) as u32;
+        }
+        // temperature scaling on a (possibly top-k-restricted) candidate set
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if p.top_k > 0 && p.top_k < logits.len() {
+            idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            idx.truncate(p.top_k);
+        }
+        let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> = idx
+            .iter()
+            .map(|&i| (((logits[i] - m) / p.temperature) as f64).exp())
+            .collect();
+        idx[self.rng.weighted(&weights)] as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut s = Sampler::new(0);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let p = SamplingParams { temperature: 0.0, top_k: 0, seed: 0 };
+        for _ in 0..5 {
+            assert_eq!(s.sample(&logits, &p), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut s = Sampler::new(1);
+        let logits = vec![5.0, 4.9, -100.0, -100.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 2, seed: 0 };
+        for _ in 0..200 {
+            let t = s.sample(&logits, &p);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn temperature_spreads_mass() {
+        let mut s = Sampler::new(2);
+        let logits = vec![1.0, 0.8, 0.6, 0.4];
+        let hot = SamplingParams { temperature: 5.0, top_k: 0, seed: 0 };
+        let mut seen = [0usize; 4];
+        for _ in 0..400 {
+            seen[s.sample(&logits, &hot) as usize] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 20), "{seen:?}");
+    }
+}

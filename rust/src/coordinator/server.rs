@@ -1,0 +1,253 @@
+//! The coordinator serving loop: batcher → backend → sampler → responses.
+//!
+//! Two operating modes:
+//! * [`Coordinator::run_closed_loop`] — drive a fixed request set to
+//!   completion (benches, eval),
+//! * [`Coordinator::spawn`] — a long-lived worker thread with a submit
+//!   channel and per-request response channels (the `serve` command and
+//!   the concurrent-load example).
+//!
+//! Execution is batch-synchronous: a formed batch prefills together and
+//! decodes in lock-step; finished slots idle until the batch drains (their
+//! waste shows up in the occupancy metric — exactly the effect dynamic
+//! batching policies trade against).
+
+use super::backend::{validate_batch, Backend};
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::metrics::ServeMetrics;
+use super::request::{GenRequest, GenResponse};
+use super::sampler::Sampler;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Default)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+}
+
+pub struct Coordinator;
+
+impl Coordinator {
+    /// Run one formed batch to completion.
+    fn run_batch(
+        backend: &mut dyn Backend,
+        batch: Batch,
+        sampler: &mut Sampler,
+        metrics: &mut ServeMetrics,
+    ) -> Result<Vec<GenResponse>> {
+        validate_batch(backend.cfg(), &batch.requests)?;
+        metrics.record_batch(batch.requests.len(), batch.capacity);
+        let n = batch.requests.len();
+        let prompts: Vec<&[u32]> = batch.requests.iter().map(|r| r.prompt.as_slice()).collect();
+
+        let t0 = Instant::now();
+        let (mut state, mut logits) = backend.prefill(&prompts, batch.capacity)?;
+        let prefill_done = Instant::now();
+        metrics.tokens_prefilled += prompts.iter().map(|p| p.len()).sum::<usize>();
+
+        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut done: Vec<bool> = vec![false; n];
+        let mut ttft: Vec<Option<f64>> = vec![None; n];
+        let max_gen = batch.requests.iter().map(|r| r.max_new_tokens).max().unwrap_or(0);
+
+        let mut current: Vec<u32> = Vec::with_capacity(n);
+        for (i, lg) in logits.iter().enumerate() {
+            let tok = sampler.sample(lg, &batch.requests[i].params);
+            current.push(tok);
+        }
+
+        for _step in 0..max_gen {
+            let step_t0 = Instant::now();
+            // commit the sampled tokens
+            for i in 0..n {
+                if done[i] {
+                    continue;
+                }
+                outputs[i].push(current[i]);
+                if ttft[i].is_none() {
+                    ttft[i] = Some(batch.requests[i].arrived.elapsed().as_secs_f64() * 1e6);
+                }
+                metrics.tokens_generated += 1;
+                if Some(current[i]) == batch.requests[i].stop_token
+                    || outputs[i].len() >= batch.requests[i].max_new_tokens
+                {
+                    done[i] = true;
+                }
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            logits = backend.decode(&mut state, &current)?;
+            for i in 0..n {
+                if !done[i] {
+                    current[i] = sampler.sample(&logits[i], &batch.requests[i].params);
+                }
+            }
+            metrics.per_token.record(step_t0.elapsed());
+        }
+        drop(state);
+
+        let decode_s = prefill_done.elapsed().as_secs_f64();
+        let mut responses = Vec::with_capacity(n);
+        for (i, req) in batch.requests.into_iter().enumerate() {
+            let ttft_us = ttft[i].unwrap_or_else(|| req.arrived.elapsed().as_secs_f64() * 1e6);
+            metrics.ttft.record_us(ttft_us);
+            let total_us = req.arrived.elapsed().as_secs_f64() * 1e6;
+            metrics.e2e.record_us(total_us);
+            metrics.requests_done += 1;
+            responses.push(GenResponse {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: std::mem::take(&mut outputs[i]),
+                ttft_us,
+                total_us,
+                decode_s,
+            });
+        }
+        let _ = t0;
+        Ok(responses)
+    }
+
+    /// Drive a fixed request set to completion (closed loop).
+    pub fn run_closed_loop(
+        backend: &mut dyn Backend,
+        requests: Vec<GenRequest>,
+        cfg: &CoordinatorConfig,
+    ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        let mut metrics = ServeMetrics::new();
+        let mut batcher = Batcher::new(cfg.batcher.clone());
+        let mut sampler = Sampler::new(0xfb90);
+        let mut responses = Vec::new();
+        for r in requests {
+            metrics.requests_in += 1;
+            if !batcher.submit(r) {
+                anyhow::bail!("admission queue overflow in closed loop");
+            }
+        }
+        // force release: in a closed loop nothing else arrives
+        while !batcher.is_empty() {
+            let now = Instant::now() + cfg.batcher.max_wait + std::time::Duration::from_millis(1);
+            if let Some(batch) = batcher.next_batch(now) {
+                responses.extend(Self::run_batch(backend, batch, &mut sampler, &mut metrics)?);
+            }
+        }
+        responses.sort_by_key(|r| r.id);
+        Ok((responses, metrics))
+    }
+
+    /// Spawn a worker thread owning the backend. Returns a submit handle.
+    ///
+    /// `make_backend` runs inside the worker thread (PJRT clients are not
+    /// required to be `Send`).
+    pub fn spawn<F>(make_backend: F, cfg: CoordinatorConfig) -> CoordinatorHandle
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let join = std::thread::spawn(move || -> Result<ServeMetrics> {
+            let mut backend = make_backend()?;
+            let mut metrics = ServeMetrics::new();
+            let mut batcher = Batcher::new(cfg.batcher.clone());
+            let mut sampler = Sampler::new(0xfb90);
+            let mut sinks: Vec<(u64, mpsc::Sender<GenResponse>)> = Vec::new();
+            loop {
+                // 1) drain the submit channel (bounded wait keeps latency low)
+                let timeout = cfg.batcher.max_wait.min(std::time::Duration::from_millis(5));
+                match rx.recv_timeout(timeout) {
+                    Ok(WorkItem::Request(req, sink)) => {
+                        metrics.requests_in += 1;
+                        sinks.push((req.id, sink));
+                        if !batcher.submit(req) {
+                            crate::log_warn!("queue full: shedding request");
+                        }
+                        // opportunistically drain everything already queued
+                        while let Ok(item) = rx.try_recv() {
+                            match item {
+                                WorkItem::Request(req, sink) => {
+                                    metrics.requests_in += 1;
+                                    sinks.push((req.id, sink));
+                                    if !batcher.submit(req) {
+                                        crate::log_warn!("queue full: shedding request");
+                                    }
+                                }
+                                WorkItem::Shutdown => return Ok(metrics),
+                            }
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Ok(WorkItem::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        // drain remaining work before exiting
+                        while !batcher.is_empty() {
+                            let now = Instant::now() + cfg.batcher.max_wait;
+                            if let Some(batch) = batcher.next_batch(now) {
+                                let rs = Self::run_batch(&mut *backend, batch, &mut sampler, &mut metrics)?;
+                                deliver(&mut sinks, rs);
+                            }
+                        }
+                        return Ok(metrics);
+                    }
+                }
+                // 2) form + run batches
+                while let Some(batch) = batcher.next_batch(Instant::now()) {
+                    let rs = Self::run_batch(&mut *backend, batch, &mut sampler, &mut metrics)?;
+                    deliver(&mut sinks, rs);
+                }
+            }
+        });
+        CoordinatorHandle { tx, join: Some(join), next_id: std::sync::atomic::AtomicU64::new(1) }
+    }
+}
+
+enum WorkItem {
+    Request(GenRequest, mpsc::Sender<GenResponse>),
+    Shutdown,
+}
+
+fn deliver(sinks: &mut Vec<(u64, mpsc::Sender<GenResponse>)>, responses: Vec<GenResponse>) {
+    for r in responses {
+        if let Some(idx) = sinks.iter().position(|(id, _)| *id == r.id) {
+            let (_, sink) = sinks.swap_remove(idx);
+            let _ = sink.send(r);
+        }
+    }
+}
+
+/// Client handle to a spawned coordinator.
+pub struct CoordinatorHandle {
+    tx: mpsc::Sender<WorkItem>,
+    join: Option<std::thread::JoinHandle<Result<ServeMetrics>>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl CoordinatorHandle {
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, mut req: GenRequest) -> mpsc::Receiver<GenResponse> {
+        if req.id == 0 {
+            req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        req.arrived = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(WorkItem::Request(req, tx));
+        rx
+    }
+
+    /// Graceful shutdown; returns final metrics.
+    pub fn shutdown(mut self) -> Result<ServeMetrics> {
+        let _ = self.tx.send(WorkItem::Shutdown);
+        self.join
+            .take()
+            .expect("already joined")
+            .join()
+            .map_err(|_| anyhow::anyhow!("coordinator worker panicked"))?
+    }
+}
+
+impl Drop for CoordinatorHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(WorkItem::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Synthetic request workloads for the `serve` command and the Fig-7 /
+//! serving benches: prompts sampled from the held-out corpus, fixed or
+//! Poisson arrivals.
+
+use super::request::{GenRequest, SamplingParams};
+use crate::eval::data::TokenStream;
+use crate::util::Pcg64;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub n_requests: usize,
+    /// prompt lengths are drawn from this set (position-aligned batching
+    /// needs a small set of lengths to bucket on)
+    pub prompt_lens: Vec<usize>,
+    pub max_new_tokens: usize,
+    /// requests per second for open-loop generation (0 = closed loop)
+    pub arrival_rate: f64,
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            n_requests: 16,
+            prompt_lens: vec![32, 64],
+            max_new_tokens: 32,
+            arrival_rate: 0.0,
+            temperature: 0.0,
+            seed: 7,
+        }
+    }
+}
+
+/// A generated workload: requests plus (for open loop) arrival offsets.
+#[derive(Debug)]
+pub struct Workload {
+    pub requests: Vec<GenRequest>,
+    pub arrivals: Vec<Duration>,
+}
+
+/// Sample prompts from a held-out token stream.
+pub fn generate(stream: &TokenStream, cfg: &WorkloadConfig) -> Workload {
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let toks = stream.tokens();
+    let mut requests = Vec::with_capacity(cfg.n_requests);
+    let mut arrivals = Vec::with_capacity(cfg.n_requests);
+    let mut t = Duration::ZERO;
+    for i in 0..cfg.n_requests {
+        let plen = *rng.choose(&cfg.prompt_lens);
+        let start = rng.below(toks.len().saturating_sub(plen + 1));
+        let prompt: Vec<u32> = toks[start..start + plen].iter().map(|&b| b as u32).collect();
+        let mut req = GenRequest::new((i + 1) as u64, prompt, cfg.max_new_tokens);
+        req.params = SamplingParams { temperature: cfg.temperature, top_k: 8, seed: cfg.seed ^ i as u64 };
+        requests.push(req);
+        if cfg.arrival_rate > 0.0 {
+            t += Duration::from_secs_f64(rng.exponential(cfg.arrival_rate));
+        }
+        arrivals.push(t);
+    }
+    Workload { requests, arrivals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream() -> TokenStream {
+        TokenStream::from_vec((0..10_000u32).map(|i| (i % 251) as u8).collect())
+    }
+
+    #[test]
+    fn generates_requested_count_and_lengths() {
+        let w = generate(&stream(), &WorkloadConfig::default());
+        assert_eq!(w.requests.len(), 16);
+        for r in &w.requests {
+            assert!(r.prompt.len() == 32 || r.prompt.len() == 64);
+        }
+    }
+
+    #[test]
+    fn open_loop_arrivals_increase() {
+        let cfg = WorkloadConfig { arrival_rate: 100.0, ..Default::default() };
+        let w = generate(&stream(), &cfg);
+        for pair in w.arrivals.windows(2) {
+            assert!(pair[1] >= pair[0]);
+        }
+        assert!(*w.arrivals.last().unwrap() > Duration::ZERO);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&stream(), &WorkloadConfig::default());
+        let b = generate(&stream(), &WorkloadConfig::default());
+        assert_eq!(a.requests[3].prompt, b.requests[3].prompt);
+    }
+}

@@ -1,0 +1,99 @@
+//! Per-session KV cache for the native engine.
+//!
+//! Layout: one contiguous buffer per layer per side, `[max_seq, n_heads,
+//! head_dim]` row-major — a decode step appends one `[n_heads, head_dim]`
+//! slab, and attention reads per-head strided slices.
+
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub len: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, max_seq: usize, n_heads: usize, head_dim: usize) -> Self {
+        let per = max_seq * n_heads * head_dim;
+        KvCache {
+            n_layers,
+            max_seq,
+            n_heads,
+            head_dim,
+            len: 0,
+            k: (0..n_layers).map(|_| vec![0f32; per]).collect(),
+            v: (0..n_layers).map(|_| vec![0f32; per]).collect(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    /// Bytes resident for this session (coordinator memory accounting).
+    pub fn resident_bytes(&self) -> usize {
+        2 * self.n_layers * self.max_seq * self.n_heads * self.head_dim * 4
+    }
+
+    /// Append `k_t`/`v_t` (each `[n_heads * head_dim]`) for layer `l` at
+    /// position `pos`. Positions must be appended in order by the caller;
+    /// `advance()` moves the shared length after all layers are written.
+    pub fn write(&mut self, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]) {
+        let stride = self.n_heads * self.head_dim;
+        debug_assert!(pos < self.max_seq, "kv overflow: pos {pos} >= {}", self.max_seq);
+        debug_assert_eq!(k_t.len(), stride);
+        self.k[l][pos * stride..(pos + 1) * stride].copy_from_slice(k_t);
+        self.v[l][pos * stride..(pos + 1) * stride].copy_from_slice(v_t);
+    }
+
+    pub fn advance(&mut self, n: usize) {
+        self.len += n;
+        debug_assert!(self.len <= self.max_seq);
+    }
+
+    /// K vector of (layer, position, head).
+    #[inline]
+    pub fn k_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
+        let stride = self.n_heads * self.head_dim;
+        let base = pos * stride + h * self.head_dim;
+        &self.k[l][base..base + self.head_dim]
+    }
+
+    #[inline]
+    pub fn v_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
+        let stride = self.n_heads * self.head_dim;
+        let base = pos * stride + h * self.head_dim;
+        &self.v[l][base..base + self.head_dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut kv = KvCache::new(2, 8, 2, 4);
+        let k: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..8).map(|i| -(i as f32)).collect();
+        kv.write(1, 3, &k, &v);
+        kv.advance(4);
+        assert_eq!(kv.len, 4);
+        assert_eq!(kv.k_at(1, 3, 0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(kv.k_at(1, 3, 1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(kv.v_at(1, 3, 1), &[-4.0, -5.0, -6.0, -7.0]);
+    }
+
+    #[test]
+    fn resident_bytes_accounting() {
+        let kv = KvCache::new(2, 256, 4, 32);
+        assert_eq!(kv.resident_bytes(), 2 * 2 * 256 * 4 * 32 * 4);
+    }
+}

@@ -1,0 +1,21 @@
+//! Native inference engine: the wall-clock testbed for the paper's
+//! latency/throughput figures (Figs 1, 4, 7).
+//!
+//! CPU GEMV at batch 1 is memory-bandwidth-bound on weight bytes — the same
+//! regime as single-stream LLM decoding on a GPU — so the *shapes* of the
+//! paper's results (INT4 beats FP, naive sub-branches blow up decode,
+//! fusion recovers it) reproduce here with real measured wall-clock.
+//!
+//! * [`kernels`] — quantized GEMV/GEMM in fused (one pass, shared
+//!   accumulator) and un-fused (4 passes, materialized intermediates)
+//!   variants, with byte-traffic accounting,
+//! * [`kv`] — per-session KV cache,
+//! * [`native`] — the full transformer forward (prefill + decode).
+
+pub mod kernels;
+pub mod kv;
+pub mod native;
+
+pub use kernels::{QuantLinear, SubMode, Traffic};
+pub use kv::KvCache;
+pub use native::NativeEngine;

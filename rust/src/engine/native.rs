@@ -1,0 +1,482 @@
+//! The native transformer engine (scoring + prefill/decode).
+//!
+//! Numerically mirrors `python/compile/model.py` (same norm/activation/RoPE
+//! conventions) so logits agree with the JAX reference to float tolerance —
+//! asserted by `tests/cross_engine.rs` against the AOT selftest archive.
+
+use super::kernels::{QuantLinear, SubMode, Traffic, Workspace};
+use super::kv::KvCache;
+use crate::model::{Config, LinearWeights, WeightStore};
+use crate::tensor::ops;
+use anyhow::{bail, Result};
+
+/// A linear layer prepared for execution.
+#[derive(Debug, Clone)]
+pub enum LinearExec {
+    Dense { out: usize, cin: usize, w: Vec<f32>, bias: Option<Vec<f32>> },
+    Quant(QuantLinear),
+}
+
+impl LinearExec {
+    fn from_weights_shaped(lw: &LinearWeights, out: usize, cin: usize) -> LinearExec {
+        match lw {
+            LinearWeights::Dense { w, bias } => {
+                LinearExec::Dense { out, cin, w: w.clone(), bias: bias.clone() }
+            }
+            LinearWeights::Quant {
+                out, cin, bits, group, packed, scales, zeros, a, b, rank, col_scale, bias,
+            } => LinearExec::Quant(QuantLinear {
+                out: *out,
+                cin: *cin,
+                bits: *bits,
+                group: *group,
+                packed: packed.clone(),
+                scales: scales.clone(),
+                zeros: zeros.clone(),
+                rank: *rank,
+                a: a.clone(),
+                b: b.clone(),
+                col_scale: col_scale.clone(),
+                bias: bias.clone(),
+            }),
+        }
+    }
+
+    pub fn out(&self) -> usize {
+        match self {
+            LinearExec::Dense { out, .. } => *out,
+            LinearExec::Quant(q) => q.out,
+        }
+    }
+
+    pub fn cin(&self) -> usize {
+        match self {
+            LinearExec::Dense { cin, .. } => *cin,
+            LinearExec::Quant(q) => q.cin,
+        }
+    }
+
+    pub fn gemv(&self, x: &[f32], y: &mut [f32], mode: SubMode, ws: &mut Workspace, t: &mut Traffic) {
+        match self {
+            LinearExec::Dense { out, cin, w, bias } => {
+                t.kernel_launches += 1;
+                t.bytes_read += 4 * (w.len() + cin) as u64;
+                t.bytes_written += 4 * *out as u64;
+                t.macs += (*out * *cin) as u64;
+                for o in 0..*out {
+                    y[o] = ops::dot(x, &w[o * cin..(o + 1) * cin]);
+                }
+                if let Some(b) = bias {
+                    for (yi, bi) in y.iter_mut().zip(b) {
+                        *yi += bi;
+                    }
+                }
+            }
+            LinearExec::Quant(q) => q.gemv(x, y, mode, ws, t),
+        }
+    }
+
+    pub fn gemm(&self, x: &[f32], m: usize, y: &mut [f32], mode: SubMode, ws: &mut Workspace, t: &mut Traffic) {
+        match self {
+            LinearExec::Dense { out, cin, w, bias } => {
+                t.kernel_launches += 1;
+                t.bytes_read += 4 * (w.len() + m * cin) as u64;
+                t.bytes_written += 4 * (m * out) as u64;
+                t.macs += (m * out * cin) as u64;
+                ops::matmul_t(x, w, y, m, *cin, *out);
+                if let Some(b) = bias {
+                    for i in 0..m {
+                        for (yi, bi) in y[i * out..(i + 1) * out].iter_mut().zip(b) {
+                            *yi += bi;
+                        }
+                    }
+                }
+            }
+            LinearExec::Quant(q) => q.gemm(x, m, y, mode, ws, t),
+        }
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            LinearExec::Dense { w, bias, .. } => 4 * (w.len() + bias.as_ref().map_or(0, |b| b.len())),
+            LinearExec::Quant(q) => {
+                (q.code_bytes() as usize)
+                    + 4 * (q.scales.len() + q.zeros.len())
+                    + q.a.as_ref().map_or(0, |v| 4 * v.len())
+                    + q.b.as_ref().map_or(0, |v| 4 * v.len())
+                    + q.col_scale.as_ref().map_or(0, |v| 4 * v.len())
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Block {
+    attn_norm_w: Vec<f32>,
+    attn_norm_b: Option<Vec<f32>>,
+    mlp_norm_w: Vec<f32>,
+    mlp_norm_b: Option<Vec<f32>>,
+    q: LinearExec,
+    k: LinearExec,
+    v: LinearExec,
+    o: LinearExec,
+    // gated: (gate, up, down); non-gated: (fc, proj, unused down slot)
+    m1: LinearExec,
+    m2: LinearExec,
+    m3: Option<LinearExec>,
+}
+
+/// Reusable engine buffers (one per worker thread / session).
+#[derive(Debug, Default)]
+pub struct EngineWs {
+    pub kernel: Workspace,
+    pub traffic: Traffic,
+    x: Vec<f32>,
+    h: Vec<f32>,
+    qb: Vec<f32>,
+    kb: Vec<f32>,
+    vb: Vec<f32>,
+    attn: Vec<f32>,
+    scores: Vec<f32>,
+    m1: Vec<f32>,
+    m2: Vec<f32>,
+    m3: Vec<f32>,
+}
+
+/// The native model.
+#[derive(Debug)]
+pub struct NativeEngine {
+    pub cfg: Config,
+    pub mode: SubMode,
+    tok_emb: Vec<f32>,
+    pos_emb: Option<Vec<f32>>,
+    lm_head: Vec<f32>,
+    final_norm_w: Vec<f32>,
+    final_norm_b: Option<Vec<f32>>,
+    blocks: Vec<Block>,
+}
+
+impl NativeEngine {
+    pub fn from_store(store: &WeightStore, mode: SubMode) -> Result<NativeEngine> {
+        let cfg = store.cfg.clone();
+        if cfg.vocab == 0 || cfg.d_model % cfg.n_heads != 0 {
+            bail!("malformed config");
+        }
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let lin = |name: &str| -> Result<LinearExec> {
+                let (out, cin) = cfg.linear_shape(name);
+                Ok(LinearExec::from_weights_shaped(store.linear(&format!("l{l}.{name}"))?, out, cin))
+            };
+            let get_opt = |n: String| store.float(&n).ok().map(|v| v.to_vec());
+            let (m1, m2, m3) = if cfg.gated() {
+                (lin("gate")?, lin("up")?, Some(lin("down")?))
+            } else {
+                (lin("fc")?, lin("proj")?, None)
+            };
+            blocks.push(Block {
+                attn_norm_w: store.float(&format!("l{l}.attn_norm.w"))?.to_vec(),
+                attn_norm_b: get_opt(format!("l{l}.attn_norm.b")),
+                mlp_norm_w: store.float(&format!("l{l}.mlp_norm.w"))?.to_vec(),
+                mlp_norm_b: get_opt(format!("l{l}.mlp_norm.b")),
+                q: lin("q")?,
+                k: lin("k")?,
+                v: lin("v")?,
+                o: lin("o")?,
+                m1,
+                m2,
+                m3,
+            });
+        }
+        Ok(NativeEngine {
+            tok_emb: store.float("tok_emb")?.to_vec(),
+            pos_emb: store.float("pos_emb").ok().map(|v| v.to_vec()),
+            lm_head: store.float("lm_head")?.to_vec(),
+            final_norm_w: store.float("final_norm.w")?.to_vec(),
+            final_norm_b: store.float("final_norm.b").ok().map(|v| v.to_vec()),
+            blocks,
+            cfg,
+            mode,
+        })
+    }
+
+    /// Total weight bytes resident (Fig. 1 memory axis).
+    pub fn resident_bytes(&self) -> usize {
+        let mut n = 4 * (self.tok_emb.len() + self.lm_head.len() + self.final_norm_w.len());
+        if let Some(p) = &self.pos_emb {
+            n += 4 * p.len();
+        }
+        for b in &self.blocks {
+            n += 4 * (b.attn_norm_w.len() + b.mlp_norm_w.len());
+            for lin in [&b.q, &b.k, &b.v, &b.o, &b.m1, &b.m2] {
+                n += lin.resident_bytes();
+            }
+            if let Some(m3) = &b.m3 {
+                n += m3.resident_bytes();
+            }
+        }
+        n
+    }
+
+    fn norm(&self, w: &[f32], b: Option<&Vec<f32>>, x: &[f32], out: &mut [f32]) {
+        if self.cfg.rms() {
+            ops::rmsnorm(x, w, out, 1e-5);
+        } else {
+            ops::layernorm(x, w, b.expect("layernorm bias"), out, 1e-5);
+        }
+    }
+
+    fn mlp(&self, blk: &Block, h: &[f32], m: usize, ws: &mut EngineWs, out: &mut [f32]) {
+        let d_ff = self.cfg.d_ff;
+        let mode = self.mode;
+        if let Some(down) = &blk.m3 {
+            // gated: down( silu(gate(h)) * up(h) )
+            ws.m1.resize(m * d_ff, 0.0);
+            ws.m2.resize(m * d_ff, 0.0);
+            let (m1, m2) = (&mut ws.m1, &mut ws.m2);
+            blk.m1.gemm(h, m, m1, mode, &mut ws.kernel, &mut ws.traffic);
+            blk.m2.gemm(h, m, m2, mode, &mut ws.kernel, &mut ws.traffic);
+            for i in 0..m * d_ff {
+                m1[i] = ops::silu(m1[i]) * m2[i];
+            }
+            down.gemm(m1, m, out, mode, &mut ws.kernel, &mut ws.traffic);
+        } else {
+            // gelu MLP: proj(gelu(fc(h)))
+            ws.m1.resize(m * d_ff, 0.0);
+            let m1 = &mut ws.m1;
+            blk.m1.gemm(h, m, m1, mode, &mut ws.kernel, &mut ws.traffic);
+            for v in m1.iter_mut() {
+                *v = ops::gelu(*v);
+            }
+            blk.m2.gemm(m1, m, out, mode, &mut ws.kernel, &mut ws.traffic);
+        }
+    }
+
+    /// Full-sequence scoring forward: logits `[T, vocab]`.
+    pub fn forward_full(&self, tokens: &[u32], ws: &mut EngineWs) -> Vec<f32> {
+        let t_len = tokens.len();
+        let cfg = &self.cfg;
+        let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
+        assert!(t_len <= cfg.max_seq, "sequence longer than max_seq");
+
+        // embed
+        ws.x.resize(t_len * d, 0.0);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let e = &self.tok_emb[tok as usize * d..(tok as usize + 1) * d];
+            ws.x[i * d..(i + 1) * d].copy_from_slice(e);
+            if let Some(pe) = &self.pos_emb {
+                for (xv, pv) in ws.x[i * d..(i + 1) * d].iter_mut().zip(&pe[i * d..(i + 1) * d]) {
+                    *xv += pv;
+                }
+            }
+        }
+
+        for blk in &self.blocks {
+            // --- attention ---
+            ws.h.resize(t_len * d, 0.0);
+            {
+                let (xs, hs) = (&ws.x, &mut ws.h);
+                for i in 0..t_len {
+                    let (xrow, hrow) = (&xs[i * d..(i + 1) * d], &mut hs[i * d..(i + 1) * d]);
+                    if self.cfg.rms() {
+                        ops::rmsnorm(xrow, &blk.attn_norm_w, hrow, 1e-5);
+                    } else {
+                        ops::layernorm(xrow, &blk.attn_norm_w, blk.attn_norm_b.as_ref().unwrap(), hrow, 1e-5);
+                    }
+                }
+            }
+            ws.qb.resize(t_len * d, 0.0);
+            ws.kb.resize(t_len * d, 0.0);
+            ws.vb.resize(t_len * d, 0.0);
+            blk.q.gemm(&ws.h, t_len, &mut ws.qb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            blk.k.gemm(&ws.h, t_len, &mut ws.kb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            blk.v.gemm(&ws.h, t_len, &mut ws.vb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            if cfg.rope() {
+                for i in 0..t_len {
+                    for h in 0..nh {
+                        ops::rope_rotate(&mut ws.qb[i * d + h * hd..i * d + (h + 1) * hd], i, cfg.rope_theta);
+                        ops::rope_rotate(&mut ws.kb[i * d + h * hd..i * d + (h + 1) * hd], i, cfg.rope_theta);
+                    }
+                }
+            }
+            // attention per head, causal
+            ws.attn.resize(t_len * d, 0.0);
+            ws.scores.resize(t_len, 0.0);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for h in 0..nh {
+                for i in 0..t_len {
+                    let qv = &ws.qb[i * d + h * hd..i * d + (h + 1) * hd];
+                    for j in 0..=i {
+                        let kv = &ws.kb[j * d + h * hd..j * d + (h + 1) * hd];
+                        ws.scores[j] = ops::dot(qv, kv) * scale;
+                    }
+                    ops::softmax_rows(&mut ws.scores[..i + 1], 1, i + 1);
+                    let out = &mut ws.attn[i * d + h * hd..i * d + (h + 1) * hd];
+                    out.fill(0.0);
+                    for j in 0..=i {
+                        let vv = &ws.vb[j * d + h * hd..j * d + (h + 1) * hd];
+                        ops::axpy(ws.scores[j], vv, out);
+                    }
+                }
+            }
+            // o-projection into h, then residual
+            ws.h.resize(t_len * d, 0.0);
+            let mut htmp = std::mem::take(&mut ws.h);
+            blk.o.gemm(&ws.attn, t_len, &mut htmp, self.mode, &mut ws.kernel, &mut ws.traffic);
+            for (xv, hv) in ws.x.iter_mut().zip(&htmp) {
+                *xv += hv;
+            }
+            ws.h = htmp;
+
+            // --- mlp ---
+            {
+                let mut hbuf = std::mem::take(&mut ws.h);
+                for i in 0..t_len {
+                    let xrow = &ws.x[i * d..(i + 1) * d];
+                    let hrow = &mut hbuf[i * d..(i + 1) * d];
+                    if self.cfg.rms() {
+                        ops::rmsnorm(xrow, &blk.mlp_norm_w, hrow, 1e-5);
+                    } else {
+                        ops::layernorm(xrow, &blk.mlp_norm_w, blk.mlp_norm_b.as_ref().unwrap(), hrow, 1e-5);
+                    }
+                }
+                ws.m3.resize(t_len * d, 0.0);
+                let mut mout = std::mem::take(&mut ws.m3);
+                self.mlp(blk, &hbuf, t_len, ws, &mut mout);
+                for (xv, mv) in ws.x.iter_mut().zip(&mout) {
+                    *xv += mv;
+                }
+                ws.m3 = mout;
+                ws.h = hbuf;
+            }
+        }
+
+        // final norm + lm head
+        let vocab = cfg.vocab;
+        let mut logits = vec![0f32; t_len * vocab];
+        ws.h.resize(t_len * d, 0.0);
+        for i in 0..t_len {
+            let xrow = &ws.x[i * d..(i + 1) * d];
+            let mut hrow = vec![0f32; d];
+            self.norm(&self.final_norm_w, self.final_norm_b.as_ref(), xrow, &mut hrow);
+            ws.traffic.kernel_launches += 1;
+            ws.traffic.bytes_read += 4 * (self.lm_head.len() + d) as u64;
+            ws.traffic.bytes_written += 4 * vocab as u64;
+            ws.traffic.macs += (vocab * d) as u64;
+            for o in 0..vocab {
+                logits[i * vocab + o] = ops::dot(&hrow, &self.lm_head[o * d..(o + 1) * d]);
+            }
+        }
+        logits
+    }
+
+    /// Prefill `tokens` into `kv` starting at `kv.len`; returns the logits
+    /// of the last position.
+    pub fn prefill(&self, tokens: &[u32], kv: &mut KvCache, ws: &mut EngineWs) -> Vec<f32> {
+        let mut logits = Vec::new();
+        for (off, &tok) in tokens.iter().enumerate() {
+            let last = off == tokens.len() - 1;
+            logits = self.step(tok, kv, ws, last);
+        }
+        logits
+    }
+
+    /// One decode step at position `kv.len`; returns logits `[vocab]`.
+    pub fn decode_one(&self, token: u32, kv: &mut KvCache, ws: &mut EngineWs) -> Vec<f32> {
+        self.step(token, kv, ws, true)
+    }
+
+    fn step(&self, token: u32, kv: &mut KvCache, ws: &mut EngineWs, want_logits: bool) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
+        let pos = kv.len;
+        assert!(pos < cfg.max_seq, "kv cache full");
+
+        ws.x.resize(d, 0.0);
+        ws.x.copy_from_slice(&self.tok_emb[token as usize * d..(token as usize + 1) * d]);
+        if let Some(pe) = &self.pos_emb {
+            for (xv, pv) in ws.x.iter_mut().zip(&pe[pos * d..(pos + 1) * d]) {
+                *xv += pv;
+            }
+        }
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            ws.h.resize(d, 0.0);
+            {
+                let mut hbuf = std::mem::take(&mut ws.h);
+                self.norm(&blk.attn_norm_w, blk.attn_norm_b.as_ref(), &ws.x, &mut hbuf);
+                ws.qb.resize(d, 0.0);
+                ws.kb.resize(d, 0.0);
+                ws.vb.resize(d, 0.0);
+                let mut qb = std::mem::take(&mut ws.qb);
+                let mut kb = std::mem::take(&mut ws.kb);
+                let mut vb = std::mem::take(&mut ws.vb);
+                blk.q.gemv(&hbuf, &mut qb, self.mode, &mut ws.kernel, &mut ws.traffic);
+                blk.k.gemv(&hbuf, &mut kb, self.mode, &mut ws.kernel, &mut ws.traffic);
+                blk.v.gemv(&hbuf, &mut vb, self.mode, &mut ws.kernel, &mut ws.traffic);
+                if cfg.rope() {
+                    for h in 0..nh {
+                        ops::rope_rotate(&mut qb[h * hd..(h + 1) * hd], pos, cfg.rope_theta);
+                        ops::rope_rotate(&mut kb[h * hd..(h + 1) * hd], pos, cfg.rope_theta);
+                    }
+                }
+                kv.write(l, pos, &kb, &vb);
+
+                // attention over 0..=pos
+                ws.attn.resize(d, 0.0);
+                ws.scores.resize(pos + 1, 0.0);
+                let scale = 1.0 / (hd as f32).sqrt();
+                for h in 0..nh {
+                    let qv = &qb[h * hd..(h + 1) * hd];
+                    for j in 0..=pos {
+                        ws.scores[j] = ops::dot(qv, kv.k_at(l, j, h)) * scale;
+                    }
+                    ops::softmax_rows(&mut ws.scores[..pos + 1], 1, pos + 1);
+                    let out = &mut ws.attn[h * hd..(h + 1) * hd];
+                    out.fill(0.0);
+                    for j in 0..=pos {
+                        ops::axpy(ws.scores[j], kv.v_at(l, j, h), out);
+                    }
+                }
+                blk.o.gemv(&ws.attn, &mut hbuf, self.mode, &mut ws.kernel, &mut ws.traffic);
+                for (xv, hv) in ws.x.iter_mut().zip(&hbuf) {
+                    *xv += hv;
+                }
+                ws.qb = qb;
+                ws.kb = kb;
+                ws.vb = vb;
+                ws.h = hbuf;
+            }
+
+            {
+                let mut hbuf = std::mem::take(&mut ws.h);
+                self.norm(&blk.mlp_norm_w, blk.mlp_norm_b.as_ref(), &ws.x, &mut hbuf);
+                ws.m3.resize(d, 0.0);
+                let mut mout = std::mem::take(&mut ws.m3);
+                self.mlp(blk, &hbuf, 1, ws, &mut mout);
+                for (xv, mv) in ws.x.iter_mut().zip(&mout) {
+                    *xv += mv;
+                }
+                ws.m3 = mout;
+                ws.h = hbuf;
+            }
+        }
+        kv.advance(1);
+
+        if !want_logits {
+            return Vec::new();
+        }
+        let mut hrow = vec![0f32; d];
+        self.norm(&self.final_norm_w, self.final_norm_b.as_ref(), &ws.x, &mut hrow);
+        let vocab = cfg.vocab;
+        let mut logits = vec![0f32; vocab];
+        ws.traffic.kernel_launches += 1;
+        ws.traffic.bytes_read += 4 * (self.lm_head.len() + d) as u64;
+        ws.traffic.bytes_written += 4 * vocab as u64;
+        ws.traffic.macs += (vocab * d) as u64;
+        for o in 0..vocab {
+            logits[o] = ops::dot(&hrow, &self.lm_head[o * d..(o + 1) * d]);
+        }
+        logits
+    }
+}

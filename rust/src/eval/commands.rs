@@ -1,0 +1,276 @@
+//! `fbquant` CLI command implementations.
+
+use super::data::{JudgeSet, McTask, TokenStream};
+use super::ppl::{perplexity, PplConfig};
+use super::scorer::{NativeScorer, PjrtScorer, Scorer};
+use super::zeroshot::eval_suite;
+use crate::coordinator::backend::{Backend, NativeBackend, PjrtBackend};
+use crate::coordinator::server::{Coordinator, CoordinatorConfig};
+use crate::coordinator::workload::{generate, WorkloadConfig};
+use crate::engine::{NativeEngine, SubMode};
+use crate::model::{ByteTokenizer, WeightStore};
+use crate::runtime::ExecRegistry;
+use crate::util::cli::Args;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    crate::artifacts_dir()
+}
+
+pub fn parse_submode(args: &Args) -> SubMode {
+    if args.flag("no-sub") {
+        SubMode::None
+    } else if args.flag("fused") || args.get("submode") == Some("fused") {
+        SubMode::Fused
+    } else {
+        match args.get("submode") {
+            Some("none") => SubMode::None,
+            Some("unfused") => SubMode::Unfused,
+            _ => SubMode::Fused,
+        }
+    }
+}
+
+pub fn load_store(args: &Args) -> Result<WeightStore> {
+    let model = args.get("model").unwrap_or("llamoid-tiny");
+    let method = args.get("method").unwrap_or("fp");
+    let bits = args.get_usize("bits", 4)? as u8;
+    let path = WeightStore::path_for(&artifacts(), model, method, bits);
+    WeightStore::load(&path)
+        .with_context(|| format!("loading checkpoint {} (run `make artifacts`)", path.display()))
+}
+
+fn make_scorer(args: &Args, store: &WeightStore) -> Result<Box<dyn Scorer>> {
+    match args.get_or("backend", "native") {
+        "native" => {
+            let engine = NativeEngine::from_store(store, parse_submode(args))?;
+            Ok(Box::new(NativeScorer::new(engine)))
+        }
+        "pjrt" => {
+            let mut reg = ExecRegistry::open(&artifacts())?;
+            Ok(Box::new(PjrtScorer::new(&mut reg, store)?))
+        }
+        other => bail!("unknown backend '{other}' (native|pjrt)"),
+    }
+}
+
+pub fn cmd_info(_args: &Args) -> Result<()> {
+    let root = artifacts();
+    println!("artifact root: {}", root.display());
+    let models_dir = root.join("models");
+    if let Ok(dir) = std::fs::read_dir(&models_dir) {
+        let mut names: Vec<_> = dir
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".fbqw"))
+            .collect();
+        names.sort();
+        println!("checkpoints ({}):", names.len());
+        for n in &names {
+            if let Ok(store) = WeightStore::load(&models_dir.join(n)) {
+                println!(
+                    "  {n:44} {:>8} params={:.2}M bytes={}",
+                    store.method,
+                    store.cfg.n_params() as f64 / 1e6,
+                    crate::util::human_bytes(store.resident_bytes()),
+                );
+            }
+        }
+    } else {
+        println!("no checkpoints (run `make artifacts`)");
+    }
+    match crate::runtime::Manifest::load(&root) {
+        Ok(m) => {
+            println!("HLO artifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!("  {:40} kind={} batch={} inputs={}", a.name, a.kind, a.batch, a.inputs.len());
+            }
+        }
+        Err(_) => println!("no HLO manifest (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+pub fn cmd_eval_ppl(args: &Args) -> Result<()> {
+    let store = load_store(args)?;
+    let stream = TokenStream::load(&artifacts().join("data/corpus_val.fbqw"))?;
+    let cfg = PplConfig {
+        seq: args.get_usize("seq", 128)?,
+        max_tokens: args.get_usize("max-tokens", 16_384)?,
+    };
+    let mut scorer = make_scorer(args, &store)?;
+    let t0 = std::time::Instant::now();
+    let r = perplexity(scorer.as_mut(), &stream, cfg)?;
+    println!(
+        "model={} method={} bits={} ppl={:.4} nll/tok={:.4} tokens={} ({:.1}s)",
+        store.cfg.name,
+        store.method,
+        store.bits,
+        r.ppl,
+        r.nll_per_token,
+        r.tokens,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+pub fn cmd_eval_zeroshot(args: &Args) -> Result<()> {
+    let store = load_store(args)?;
+    let tasks = McTask::load_all(&artifacts().join("data"))?;
+    let maxq = args.get_usize("max-questions", 80)?;
+    let mut scorer = make_scorer(args, &store)?;
+    let (results, avg) = eval_suite(scorer.as_mut(), &tasks, maxq)?;
+    println!("model={} method={} bits={}", store.cfg.name, store.method, store.bits);
+    for r in &results {
+        println!("  {:10} acc={:.2}% ({}/{})", r.task, 100.0 * r.accuracy(), r.correct, r.n);
+    }
+    println!("  {:10} avg={:.2}%", "AVG", 100.0 * avg);
+    Ok(())
+}
+
+pub fn cmd_judge(args: &Args) -> Result<()> {
+    let set = JudgeSet::load(&artifacts().join("data/judge.fbqw"))?;
+    let model = args.get("model").unwrap_or("llamoid-tiny");
+    let bits = args.get_usize("bits", 3)? as u8;
+    let method_a = args.get("method").unwrap_or("fbquant");
+    let method_b = args.get("against").unwrap_or("awq");
+    let margin = args.get_f64("margin", 0.02)?;
+
+    let mut nlls = Vec::new();
+    for method in [method_a, method_b] {
+        let store = WeightStore::load(&WeightStore::path_for(&artifacts(), model, method, bits))?;
+        let mut scorer = make_scorer(args, &store)?;
+        nlls.push(super::judge::question_nlls(scorer.as_mut(), &set)?);
+    }
+    let r = super::judge::compare(&nlls[0], &nlls[1], margin);
+    println!(
+        "{model} w{bits}: {method_a} vs {method_b}: win {:.1}% / tie {:.1}% / loss {:.1}% ({} trials)",
+        r.win_pct(),
+        r.tie_pct(),
+        r.loss_pct(),
+        r.trials()
+    );
+    Ok(())
+}
+
+pub fn cmd_generate(args: &Args) -> Result<()> {
+    let store = load_store(args)?;
+    let tok = ByteTokenizer::default();
+    let prompt_text = args.get("prompt").unwrap_or("= sea =\nthe salty crab ");
+    let prompt = tok.encode(prompt_text);
+    let n = args.get_usize("tokens", 48)?;
+
+    let mut backend: Box<dyn Backend> = match args.get_or("backend", "native") {
+        "native" => Box::new(NativeBackend::new(
+            NativeEngine::from_store(&store, parse_submode(args))?,
+            &store.cfg.name,
+        )),
+        "pjrt" => {
+            let mut reg = ExecRegistry::open(&artifacts())?;
+            Box::new(PjrtBackend::new(&mut reg, &store, &[1], &store.cfg.name)?)
+        }
+        other => bail!("unknown backend '{other}'"),
+    };
+
+    use crate::coordinator::request::GenRequest;
+    let mut req = GenRequest::new(1, prompt, n);
+    req.params.temperature = args.get_f64("temperature", 0.0)? as f32;
+    let (responses, metrics) =
+        Coordinator::run_closed_loop(backend.as_mut(), vec![req], &CoordinatorConfig::default())?;
+    let r = &responses[0];
+    println!("{}{}", prompt_text, tok.decode(&r.tokens));
+    println!(
+        "\n[{} tokens, ttft={:.1}ms, {:.1} tk/s decode, backend={}]",
+        r.tokens.len(),
+        r.ttft_us / 1e3,
+        r.decode_tps(),
+        backend.name()
+    );
+    let _ = metrics;
+    Ok(())
+}
+
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let store = load_store(args)?;
+    let stream = TokenStream::load(&artifacts().join("data/corpus_val.fbqw"))?;
+    let wl_cfg = WorkloadConfig {
+        n_requests: args.get_usize("requests", 16)?,
+        prompt_lens: vec![32, 64],
+        max_new_tokens: args.get_usize("tokens", 32)?,
+        arrival_rate: args.get_f64("rate", 0.0)?,
+        temperature: 0.8,
+        seed: args.get_u64("seed", 7)?,
+    };
+    let workload = generate(&stream, &wl_cfg);
+    let backend_kind = args.get_or("backend", "native").to_string();
+    let submode = parse_submode(args);
+    let art = artifacts();
+
+    let handle = Coordinator::spawn(
+        move || -> Result<Box<dyn Backend>> {
+            Ok(match backend_kind.as_str() {
+                "pjrt" => {
+                    let mut reg = ExecRegistry::open(&art)?;
+                    Box::new(PjrtBackend::new(&mut reg, &store, &[1, 4], &store.cfg.name)?)
+                }
+                _ => Box::new(NativeBackend::new(
+                    NativeEngine::from_store(&store, submode)?,
+                    &store.cfg.name,
+                )),
+            })
+        },
+        CoordinatorConfig::default(),
+    );
+
+    let mut receivers = Vec::new();
+    for (req, arrival) in workload.requests.into_iter().zip(workload.arrivals) {
+        if wl_cfg.arrival_rate > 0.0 {
+            std::thread::sleep(arrival.saturating_sub(std::time::Duration::ZERO).min(std::time::Duration::from_millis(50)));
+        }
+        receivers.push(handle.submit(req));
+    }
+    let tok = ByteTokenizer::default();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let r = rx.recv().context("coordinator dropped a response")?;
+        crate::log_info!(
+            "req {i}: {} tokens, ttft {:.1}ms -> {:?}",
+            r.tokens.len(),
+            r.ttft_us / 1e3,
+            tok.decode(&r.tokens).chars().take(40).collect::<String>()
+        );
+    }
+    let metrics = handle.shutdown()?;
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+pub fn cmd_inspect_weights(args: &Args) -> Result<()> {
+    let store = load_store(args)?;
+    println!(
+        "model={} family={} scheme={} method={} bits={} group={} rank={}",
+        store.cfg.name,
+        store.cfg.family.name(),
+        store.scheme,
+        store.method,
+        store.bits,
+        store.group,
+        store.rank
+    );
+    println!("resident bytes: {}", crate::util::human_bytes(store.resident_bytes()));
+    for l in 0..store.cfg.n_layers {
+        for lname in store.cfg.linear_names() {
+            let prefix = format!("l{l}.{lname}");
+            let lw = store.linear(&prefix)?;
+            let w = lw.effective_dense();
+            let (out, cin) = store.cfg.linear_shape(lname);
+            let norm: f64 = w.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            println!(
+                "  {prefix:12} [{out:4}x{cin:4}] quant={} |W|_F={norm:.3} bytes={}",
+                lw.is_quant(),
+                crate::util::human_bytes(lw.resident_bytes())
+            );
+        }
+    }
+    Ok(())
+}

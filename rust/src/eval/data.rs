@@ -1,0 +1,155 @@
+//! Loaders for the evaluation archives written by `python/compile/corpus.py`.
+
+use crate::quant::formats::Archive;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A flat byte-token stream (corpus splits).
+#[derive(Debug, Clone)]
+pub struct TokenStream {
+    tokens: Vec<u8>,
+}
+
+impl TokenStream {
+    pub fn load(path: &Path) -> Result<TokenStream> {
+        let arc = Archive::load(path)?;
+        Ok(TokenStream { tokens: arc.get("tokens")?.as_u8()?.to_vec() })
+    }
+
+    pub fn from_vec(tokens: Vec<u8>) -> TokenStream {
+        TokenStream { tokens }
+    }
+
+    pub fn tokens(&self) -> &[u8] {
+        &self.tokens
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Non-overlapping windows of `seq + 1` tokens (scoring needs the
+    /// shifted target), as u32 ids.
+    pub fn windows(&self, seq: usize, max_windows: usize) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + seq + 1 <= self.tokens.len() && out.len() < max_windows {
+            out.push(self.tokens[i..i + seq + 1].iter().map(|&b| b as u32).collect());
+            i += seq;
+        }
+        out
+    }
+}
+
+/// One multiple-choice question.
+#[derive(Debug, Clone)]
+pub struct McQuestion {
+    pub context: Vec<u32>,
+    pub options: Vec<Vec<u32>>,
+    pub correct: usize,
+}
+
+/// A multiple-choice suite (one of the seven zero-shot tasks).
+#[derive(Debug, Clone)]
+pub struct McTask {
+    pub name: String,
+    pub n_options: usize,
+    pub questions: Vec<McQuestion>,
+}
+
+fn offsets_split(flat: &[u8], off: &[u32]) -> Vec<Vec<u32>> {
+    off.windows(2)
+        .map(|w| flat[w[0] as usize..w[1] as usize].iter().map(|&b| b as u32).collect())
+        .collect()
+}
+
+impl McTask {
+    pub fn load(path: &Path) -> Result<McTask> {
+        let arc = Archive::load(path)?;
+        let name = arc.meta_str("task").unwrap_or("?").to_string();
+        let n_options = arc.meta_usize("n_options").context("n_options")?;
+        let nq = arc.meta_usize("n_questions").context("n_questions")?;
+        let ctxs = offsets_split(arc.get("ctx_flat")?.as_u8()?, &arc.get("ctx_off")?.as_u32()?);
+        let opts = offsets_split(arc.get("opt_flat")?.as_u8()?, &arc.get("opt_off")?.as_u32()?);
+        let correct = arc.get("correct")?.as_u32()?;
+        if ctxs.len() != nq || opts.len() != nq * n_options || correct.len() != nq {
+            bail!("{}: inconsistent task archive", path.display());
+        }
+        let questions = (0..nq)
+            .map(|i| McQuestion {
+                context: ctxs[i].clone(),
+                options: opts[i * n_options..(i + 1) * n_options].to_vec(),
+                correct: correct[i] as usize,
+            })
+            .collect();
+        Ok(McTask { name, n_options, questions })
+    }
+
+    /// Load all task archives under `artifacts/data/tasks/`.
+    pub fn load_all(data_dir: &Path) -> Result<Vec<McTask>> {
+        let dir = data_dir.join("tasks");
+        let mut names: Vec<_> = std::fs::read_dir(&dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "fbqw"))
+            .collect();
+        names.sort();
+        names.iter().map(|p| McTask::load(p)).collect()
+    }
+}
+
+/// The Fig-6 judge set: prompts with gold continuations.
+#[derive(Debug, Clone)]
+pub struct JudgeSet {
+    pub contexts: Vec<Vec<u32>>,
+    pub golds: Vec<Vec<u32>>,
+}
+
+impl JudgeSet {
+    pub fn load(path: &Path) -> Result<JudgeSet> {
+        let arc = Archive::load(path)?;
+        let contexts = offsets_split(arc.get("ctx_flat")?.as_u8()?, &arc.get("ctx_off")?.as_u32()?);
+        let golds = offsets_split(arc.get("gold_flat")?.as_u8()?, &arc.get("gold_off")?.as_u32()?);
+        if contexts.len() != golds.len() {
+            bail!("judge set: context/gold count mismatch");
+        }
+        Ok(JudgeSet { contexts, golds })
+    }
+
+    pub fn len(&self) -> usize {
+        self.contexts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.contexts.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_cover_stream() {
+        let s = TokenStream::from_vec((0..100u32).map(|i| i as u8).collect());
+        let w = s.windows(10, 100);
+        assert_eq!(w.len(), 9); // 9 windows of 11 tokens, stride 10
+        assert_eq!(w[0].len(), 11);
+        assert_eq!(w[1][0], 10);
+        let capped = s.windows(10, 3);
+        assert_eq!(capped.len(), 3);
+    }
+
+    #[test]
+    fn offsets_split_basic() {
+        let flat = [10u8, 11, 12, 13, 14];
+        let off = [0u32, 2, 5];
+        let parts = offsets_split(&flat, &off);
+        assert_eq!(parts, vec![vec![10u32, 11], vec![12, 13, 14]]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Evaluation harness: the measurement side of every paper table/figure.
+//!
+//! * [`data`] — loaders for the corpus/task/judge archives,
+//! * [`ppl`] — perplexity (Table 1),
+//! * [`zeroshot`] — multiple-choice accuracy, lm-eval style (Tables 2–8),
+//! * [`judge`] — pairwise win/tie/loss protocol (Fig 6),
+//! * [`commands`] — the `fbquant` CLI entry points.
+
+pub mod commands;
+pub mod data;
+pub mod judge;
+pub mod ppl;
+pub mod scorer;
+pub mod zeroshot;
+
+pub use data::{JudgeSet, McTask, TokenStream};
+pub use scorer::{NativeScorer, PjrtScorer, Scorer};

@@ -1,0 +1,103 @@
+//! Perplexity evaluation (Table 1's metric).
+//!
+//! Byte-level perplexity over non-overlapping windows of the validation
+//! stream. Window length defaults to 128 — the training context length
+//! (the gptoid family's learned positions are untrained beyond it).
+
+use super::data::TokenStream;
+use super::scorer::Scorer;
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PplConfig {
+    pub seq: usize,
+    pub max_tokens: usize,
+}
+
+impl Default for PplConfig {
+    fn default() -> Self {
+        PplConfig { seq: 128, max_tokens: 16_384 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PplResult {
+    pub ppl: f64,
+    pub nll_per_token: f64,
+    pub tokens: usize,
+}
+
+pub fn perplexity(scorer: &mut dyn Scorer, stream: &TokenStream, cfg: PplConfig) -> Result<PplResult> {
+    let max_windows = cfg.max_tokens / cfg.seq;
+    let windows = stream.windows(cfg.seq, max_windows);
+    let mut total_ll = 0f64;
+    let mut total_n = 0usize;
+    for w in &windows {
+        total_ll += scorer.sum_ll(w, 0)?;
+        total_n += w.len() - 1;
+    }
+    let nll = -total_ll / total_n.max(1) as f64;
+    Ok(PplResult { ppl: nll.exp(), nll_per_token: nll, tokens: total_n })
+}
+
+/// Batched variant for the PJRT score artifact (reduces dispatch count).
+pub fn perplexity_batched(
+    scorer: &mut super::scorer::PjrtScorer,
+    stream: &TokenStream,
+    cfg: PplConfig,
+) -> Result<PplResult> {
+    use crate::tensor::ops;
+
+    let max_windows = cfg.max_tokens / cfg.seq;
+    let windows = stream.windows(cfg.seq, max_windows);
+    let v = scorer.cfg().vocab;
+    let mut total_ll = 0f64;
+    let mut total_n = 0usize;
+    for chunk in windows.chunks(4) {
+        let inputs: Vec<&[u32]> = chunk.iter().map(|w| &w[..w.len() - 1]).collect();
+        let batch_logits = scorer.logits_batch(&inputs)?;
+        for (w, logits) in chunk.iter().zip(batch_logits) {
+            for t in 0..w.len() - 1 {
+                let row = &logits[t * v..(t + 1) * v];
+                total_ll += ops::log_softmax_at(row, w[t + 1] as usize) as f64;
+            }
+            total_n += w.len() - 1;
+        }
+    }
+    let nll = -total_ll / total_n.max(1) as f64;
+    Ok(PplResult { ppl: nll.exp(), nll_per_token: nll, tokens: total_n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Config;
+
+    struct UniformScorer {
+        cfg: Config,
+    }
+
+    impl Scorer for UniformScorer {
+        fn cfg(&self) -> &Config {
+            &self.cfg
+        }
+
+        fn logits(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+            Ok(vec![0f32; tokens.len() * self.cfg.vocab])
+        }
+    }
+
+    #[test]
+    fn uniform_model_ppl_is_vocab_size() {
+        let j = crate::util::json::Json::parse(
+            r#"{"name":"u","family":"llamoid","d_model":8,"n_layers":1,
+                "n_heads":2,"d_ff":8,"vocab":32,"max_seq":512}"#,
+        )
+        .unwrap();
+        let mut s = UniformScorer { cfg: Config::from_json(&j).unwrap() };
+        let stream = TokenStream::from_vec((0..2000u32).map(|i| (i % 31) as u8).collect());
+        let r = perplexity(&mut s, &stream, PplConfig { seq: 64, max_tokens: 1024 }).unwrap();
+        assert!((r.ppl - 32.0).abs() < 1e-3, "ppl={}", r.ppl);
+        assert_eq!(r.tokens, 16 * 64);
+    }
+}

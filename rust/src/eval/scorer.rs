@@ -1,0 +1,196 @@
+//! Sequence scoring abstraction over the two execution paths.
+//!
+//! Everything in the eval harness reduces to "give me the logits of this
+//! token sequence": perplexity, multiple-choice likelihoods and the judge
+//! all go through [`Scorer`].
+
+use crate::coordinator::backend;
+use crate::engine::native::EngineWs;
+use crate::engine::{NativeEngine, SubMode};
+use crate::model::{Config, WeightStore};
+use crate::runtime::exec::{build_weight_feed, Value};
+use crate::runtime::{ExecRegistry, LoadedExec, Manifest};
+use crate::tensor::ops;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+pub trait Scorer {
+    fn cfg(&self) -> &Config;
+
+    /// Full-sequence logits: `tokens [T]` → flat `[T * vocab]`.
+    fn logits(&mut self, tokens: &[u32]) -> Result<Vec<f32>>;
+
+    /// Sum log-likelihood of `tokens[from+1 ..]` given the prefix.
+    fn sum_ll(&mut self, tokens: &[u32], from: usize) -> Result<f64> {
+        let v = self.cfg().vocab;
+        let logits = self.logits(&tokens[..tokens.len() - 1])?;
+        let mut total = 0f64;
+        for t in from..tokens.len() - 1 {
+            let row = &logits[t * v..(t + 1) * v];
+            total += ops::log_softmax_at(row, tokens[t + 1] as usize) as f64;
+        }
+        Ok(total)
+    }
+}
+
+/// Native-engine scorer.
+pub struct NativeScorer {
+    engine: NativeEngine,
+    ws: EngineWs,
+}
+
+impl NativeScorer {
+    pub fn new(engine: NativeEngine) -> NativeScorer {
+        NativeScorer { engine, ws: EngineWs::default() }
+    }
+
+    pub fn from_checkpoint(path: &std::path::Path, mode: SubMode) -> Result<NativeScorer> {
+        let store = WeightStore::load(path)?;
+        Ok(NativeScorer::new(NativeEngine::from_store(&store, mode)?))
+    }
+
+    pub fn engine(&self) -> &NativeEngine {
+        &self.engine
+    }
+}
+
+impl Scorer for NativeScorer {
+    fn cfg(&self) -> &Config {
+        &self.engine.cfg
+    }
+
+    fn logits(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        if tokens.len() > self.engine.cfg.max_seq {
+            bail!("sequence of {} exceeds max_seq {}", tokens.len(), self.engine.cfg.max_seq);
+        }
+        Ok(self.engine.forward_full(tokens, &mut self.ws))
+    }
+}
+
+/// PJRT scorer over a `score_<model>_{fp,q}` artifact.
+///
+/// The artifact has a fixed `[B, T]` shape; shorter sequences are
+/// right-padded (causality makes the padded tail irrelevant to the
+/// positions we read) and only slot 0 is consumed.
+pub struct PjrtScorer {
+    exec: Arc<LoadedExec>,
+    weights: Arc<Vec<xla::Literal>>,
+    cfg: Config,
+    batch: usize,
+    seq: usize,
+}
+
+impl PjrtScorer {
+    pub fn new(registry: &mut ExecRegistry, store: &WeightStore) -> Result<PjrtScorer> {
+        let name = Manifest::score_name(&store.cfg.name, store.is_quantized());
+        let exec = registry.load(&name)?;
+        let weights = Arc::new(build_weight_feed(&exec.spec, store)?);
+        Ok(PjrtScorer {
+            cfg: store.cfg.clone(),
+            batch: exec.spec.batch,
+            seq: exec.spec.seq,
+            exec,
+            weights,
+        })
+    }
+
+    /// Score up to `batch` sequences in one dispatch (the batched path the
+    /// Table-1 bench uses). Each entry gets its own `[T*vocab]` logits,
+    /// truncated to its true length.
+    pub fn logits_batch(&mut self, seqs: &[&[u32]]) -> Result<Vec<Vec<f32>>> {
+        if seqs.is_empty() || seqs.len() > self.batch {
+            bail!("batch of {} vs compiled {}", seqs.len(), self.batch);
+        }
+        let v = self.cfg.vocab;
+        let mut toks = vec![1i32; self.batch * self.seq];
+        for (i, s) in seqs.iter().enumerate() {
+            if s.len() > self.seq {
+                bail!("sequence of {} exceeds compiled seq {}", s.len(), self.seq);
+            }
+            for (j, &t) in s.iter().enumerate() {
+                toks[i * self.seq + j] = t as i32;
+            }
+        }
+        let out = self.exec.run(&[Value::I32(toks)], &self.weights)?;
+        let flat = out[0].as_f32()?;
+        Ok(seqs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| flat[i * self.seq * v..i * self.seq * v + s.len() * v].to_vec())
+            .collect())
+    }
+
+    fn logits_impl(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        Ok(self.logits_batch(&[tokens])?.remove(0))
+    }
+}
+
+impl Scorer for PjrtScorer {
+    fn cfg(&self) -> &Config {
+        &self.cfg
+    }
+
+    fn logits(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        self.logits_impl(tokens)
+    }
+}
+
+/// Generation-path scorer used to cross-check the serve artifacts: builds
+/// logits via a backend's prefill (slower; tests only).
+pub fn backend_last_logits(b: &mut dyn backend::Backend, tokens: &[u32]) -> Result<Vec<f32>> {
+    let (_state, mut logits) = b.prefill(&[tokens], 1)?;
+    Ok(logits.remove(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct FakeScorer {
+        cfg: Config,
+    }
+
+    impl Scorer for FakeScorer {
+        fn cfg(&self) -> &Config {
+            &self.cfg
+        }
+
+        fn logits(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+            // deterministic: logit = 1.0 on (next == current + 1 mod V)
+            let v = self.cfg.vocab;
+            let mut out = vec![0f32; tokens.len() * v];
+            for (t, &tok) in tokens.iter().enumerate() {
+                out[t * v + ((tok as usize + 1) % v)] = 5.0;
+            }
+            Ok(out)
+        }
+    }
+
+    fn fake() -> FakeScorer {
+        let j = crate::util::json::Json::parse(
+            r#"{"name":"f","family":"llamoid","d_model":8,"n_layers":1,
+                "n_heads":2,"d_ff":8,"vocab":16,"max_seq":64}"#,
+        )
+        .unwrap();
+        FakeScorer { cfg: Config::from_json(&j).unwrap() }
+    }
+
+    #[test]
+    fn sum_ll_prefers_predictable_sequences() {
+        let mut s = fake();
+        let good: Vec<u32> = (0..10).collect(); // follows the +1 rule
+        let bad: Vec<u32> = vec![0, 5, 3, 9, 1, 2, 8, 4, 7, 6];
+        let lg = s.sum_ll(&good, 0).unwrap();
+        let lb = s.sum_ll(&bad, 0).unwrap();
+        assert!(lg > lb);
+    }
+
+    #[test]
+    fn sum_ll_from_skips_prefix() {
+        let mut s = fake();
+        let toks: Vec<u32> = (0..10).collect();
+        let full = s.sum_ll(&toks, 0).unwrap();
+        let tail = s.sum_ll(&toks, 5).unwrap();
+        assert!(full < tail); // fewer (negative) terms
+    }
+}

@@ -1,0 +1,137 @@
+//! Zero-shot multiple-choice evaluation (Tables 2–8's metric).
+//!
+//! lm-eval-harness scoring: for each option, compute the log-likelihood of
+//! the option tokens given the context, normalised by option length; the
+//! argmax option is the prediction.
+
+use super::data::McTask;
+use super::scorer::Scorer;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: String,
+    pub n: usize,
+    pub correct: usize,
+}
+
+impl TaskResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.n as f64
+        }
+    }
+}
+
+/// Evaluate one task. `max_questions` truncates for fast subset runs.
+pub fn eval_task(scorer: &mut dyn Scorer, task: &McTask, max_questions: usize) -> Result<TaskResult> {
+    let mut correct = 0usize;
+    let n = task.questions.len().min(max_questions);
+    for q in task.questions.iter().take(n) {
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (oi, opt) in q.options.iter().enumerate() {
+            let mut seq = q.context.clone();
+            seq.extend_from_slice(opt);
+            // score the option tokens only, length-normalised.
+            // `from` is the index of the last context token (likelihood of
+            // tokens from+1.. = the option tokens given the context).
+            let from = q.context.len().saturating_sub(1);
+            let ll = scorer.sum_ll(&seq, from)?;
+            let norm = ll / opt.len().max(1) as f64;
+            if norm > best.0 {
+                best = (norm, oi);
+            }
+        }
+        if best.1 == q.correct {
+            correct += 1;
+        }
+    }
+    Ok(TaskResult { task: task.name.clone(), n, correct })
+}
+
+/// Evaluate a full suite; returns per-task results plus the macro average.
+pub fn eval_suite(scorer: &mut dyn Scorer, tasks: &[McTask], max_questions: usize)
+                  -> Result<(Vec<TaskResult>, f64)> {
+    let mut results = Vec::with_capacity(tasks.len());
+    for t in tasks {
+        results.push(eval_task(scorer, t, max_questions)?);
+    }
+    let avg = if results.is_empty() {
+        0.0
+    } else {
+        results.iter().map(|r| r.accuracy()).sum::<f64>() / results.len() as f64
+    };
+    Ok((results, avg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::data::McQuestion;
+    use crate::model::Config;
+
+    /// Scorer that loves ascending sequences (tok+1 rule).
+    struct AscScorer {
+        cfg: Config,
+    }
+
+    impl Scorer for AscScorer {
+        fn cfg(&self) -> &Config {
+            &self.cfg
+        }
+
+        fn logits(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+            let v = self.cfg.vocab;
+            let mut out = vec![0f32; tokens.len() * v];
+            for (t, &tok) in tokens.iter().enumerate() {
+                out[t * v + ((tok as usize + 1) % v)] = 8.0;
+            }
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn picks_the_likely_option() {
+        let j = crate::util::json::Json::parse(
+            r#"{"name":"a","family":"llamoid","d_model":8,"n_layers":1,
+                "n_heads":2,"d_ff":8,"vocab":16,"max_seq":64}"#,
+        )
+        .unwrap();
+        let mut s = AscScorer { cfg: Config::from_json(&j).unwrap() };
+        let task = McTask {
+            name: "asc".into(),
+            n_options: 2,
+            questions: vec![
+                McQuestion {
+                    context: vec![1, 2, 3],
+                    options: vec![vec![4, 5], vec![9, 9]],
+                    correct: 0,
+                },
+                McQuestion {
+                    context: vec![7, 8],
+                    options: vec![vec![2, 2], vec![9, 10]],
+                    correct: 1,
+                },
+            ],
+        };
+        let r = eval_task(&mut s, &task, 100).unwrap();
+        assert_eq!(r.correct, 2);
+        assert_eq!(r.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn max_questions_truncates() {
+        let j = crate::util::json::Json::parse(
+            r#"{"name":"a","family":"llamoid","d_model":8,"n_layers":1,
+                "n_heads":2,"d_ff":8,"vocab":16,"max_seq":64}"#,
+        )
+        .unwrap();
+        let mut s = AscScorer { cfg: Config::from_json(&j).unwrap() };
+        let q = McQuestion { context: vec![1], options: vec![vec![2], vec![5]], correct: 0 };
+        let task = McTask { name: "t".into(), n_options: 2, questions: vec![q.clone(), q.clone(), q] };
+        let r = eval_task(&mut s, &task, 2).unwrap();
+        assert_eq!(r.n, 2);
+    }
+}

@@ -1,0 +1,53 @@
+//! # FBQuant — FeedBack Quantization for Large Language Models
+//!
+//! Rust layer-3 of the three-layer reproduction of *FBQuant: FeedBack
+//! Quantization for Large Language Models* (IJCAI 2025).
+//!
+//! The crate hosts:
+//! * [`tensor`] — dense tensor substrate (f32 / packed-int), BLAS-free
+//!   matmul/GEMV and the NN ops the native engine needs,
+//! * [`quant`] — group-wise RTN quantization, INT3/INT4 bit-packing, the
+//!   `.fbqw` weight-archive format and low-rank sub-branch algebra,
+//! * [`model`] — model configurations, weight stores and the byte tokenizer,
+//! * [`engine`] — the native inference engine with fused / un-fused
+//!   quantized kernels (the wall-clock testbed for Figs 1/4/7),
+//! * [`runtime`] — the PJRT runtime loading AOT HLO artifacts produced by
+//!   `python/compile/aot.py`,
+//! * [`coordinator`] — request router, dynamic batcher, prefill/decode
+//!   scheduler, sessions, sampling and metrics,
+//! * [`eval`] — perplexity, zero-shot multiple-choice and pairwise-judge
+//!   harnesses reproducing the paper's Tables 1–8 and Fig 6,
+//! * [`bench`] / [`testing`] — in-repo micro-benchmark and property-test
+//!   frameworks (offline substitutes for criterion / proptest).
+
+pub mod util;
+pub mod tensor;
+pub mod quant;
+pub mod model;
+pub mod engine;
+pub mod runtime;
+pub mod coordinator;
+pub mod eval;
+pub mod bench;
+pub mod testing;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifact tree produced by `make artifacts`.
+///
+/// Resolution order: `$FBQ_ARTIFACTS`, then `./artifacts` relative to the
+/// current working directory, then `../artifacts` (for tests running from
+/// the crate dir).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("FBQ_ARTIFACTS") {
+        return std::path::PathBuf::from(p);
+    }
+    for cand in ["artifacts", "../artifacts", "/root/repo/artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    std::path::PathBuf::from("artifacts")
+}

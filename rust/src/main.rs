@@ -1,0 +1,6 @@
+fn main() {
+    if let Err(e) = fbquant::util::cli::run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Model configuration, mirroring `python/compile/model.py::Config`.
+//!
+//! Configs are not hard-coded on the rust side: they are parsed from the
+//! `config` object embedded in every `.fbqw` checkpoint's metadata, so the
+//! rust binary follows whatever grid the python build produced.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Llamoid,
+    Gptoid,
+    Qwenoid,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Result<Family> {
+        Ok(match s {
+            "llamoid" => Family::Llamoid,
+            "gptoid" => Family::Gptoid,
+            "qwenoid" => Family::Qwenoid,
+            other => bail!("unknown model family '{other}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Llamoid => "llamoid",
+            Family::Gptoid => "gptoid",
+            Family::Qwenoid => "qwenoid",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub name: String,
+    pub family: Family,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+}
+
+impl Config {
+    pub fn from_json(j: &Json) -> Result<Config> {
+        let get = |k: &str| -> Result<usize> {
+            j.get(k).and_then(|v| v.as_usize()).with_context(|| format!("config missing '{k}'"))
+        };
+        Ok(Config {
+            name: j.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+            family: Family::parse(
+                j.get("family").and_then(|v| v.as_str()).context("config missing 'family'")?,
+            )?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            vocab: get("vocab")?,
+            max_seq: get("max_seq")?,
+            rope_theta: j.get("rope_theta").and_then(|v| v.as_f64()).unwrap_or(10_000.0) as f32,
+        })
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn gated(&self) -> bool {
+        matches!(self.family, Family::Llamoid | Family::Qwenoid)
+    }
+
+    pub fn rms(&self) -> bool {
+        matches!(self.family, Family::Llamoid | Family::Qwenoid)
+    }
+
+    pub fn rope(&self) -> bool {
+        matches!(self.family, Family::Llamoid | Family::Qwenoid)
+    }
+
+    pub fn qkv_bias(&self) -> bool {
+        self.family == Family::Qwenoid
+    }
+
+    pub fn mlp_bias(&self) -> bool {
+        self.family == Family::Gptoid
+    }
+
+    /// The quantizable projections of one block, in canonical order.
+    pub fn linear_names(&self) -> &'static [&'static str] {
+        if self.gated() {
+            &["q", "k", "v", "o", "gate", "up", "down"]
+        } else {
+            &["q", "k", "v", "o", "fc", "proj"]
+        }
+    }
+
+    /// `(out, in)` of a named projection.
+    pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        let (d, ff) = (self.d_model, self.d_ff);
+        match name {
+            "q" | "k" | "v" | "o" => (d, d),
+            "gate" | "up" | "fc" => (ff, d),
+            "down" | "proj" => (d, ff),
+            other => panic!("unknown linear '{other}'"),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        let mut n = 2 * self.vocab * self.d_model;
+        if !self.rope() {
+            n += self.max_seq * self.d_model;
+        }
+        let per: usize = self
+            .linear_names()
+            .iter()
+            .map(|l| {
+                let (o, i) = self.linear_shape(l);
+                o * i
+            })
+            .sum();
+        n + self.n_layers * per
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_json() -> Json {
+        Json::parse(
+            r#"{"name":"llamoid-tiny","family":"llamoid","d_model":128,
+                "n_layers":2,"n_heads":4,"d_ff":384,"vocab":256,
+                "max_seq":256,"rope_theta":10000.0}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_derives() {
+        let cfg = Config::from_json(&demo_json()).unwrap();
+        assert_eq!(cfg.family, Family::Llamoid);
+        assert_eq!(cfg.head_dim(), 32);
+        assert!(cfg.gated() && cfg.rms() && cfg.rope());
+        assert!(!cfg.qkv_bias() && !cfg.mlp_bias());
+        assert_eq!(cfg.linear_names().len(), 7);
+        assert_eq!(cfg.linear_shape("down"), (128, 384));
+        // matches python Config.n_params for this shape
+        assert_eq!(cfg.n_params(), 2 * 256 * 128 + 2 * (4 * 128 * 128 + 3 * 128 * 384));
+    }
+
+    #[test]
+    fn rejects_unknown_family() {
+        let j = Json::parse(r#"{"family":"mamba","d_model":8,"n_layers":1,"n_heads":1,"d_ff":8,"vocab":256,"max_seq":8}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+}

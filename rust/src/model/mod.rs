@@ -1,0 +1,11 @@
+//! Model-level plumbing: configurations, weight stores and the byte
+//! tokenizer. The actual compute lives in [`crate::engine`] (native) and
+//! [`crate::runtime`] (PJRT).
+
+pub mod config;
+pub mod tokenizer;
+pub mod weights;
+
+pub use config::{Config, Family};
+pub use tokenizer::ByteTokenizer;
+pub use weights::{LinearWeights, WeightStore};

@@ -1,0 +1,65 @@
+//! Byte-level tokenizer (spec shared with `python/compile/tokenizer.py`,
+//! asserted against `artifacts/data/vocab.json` at load time).
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    pub vocab_size: usize,
+    pub bos_id: u32,
+    pub pad_id: u32,
+}
+
+impl Default for ByteTokenizer {
+    fn default() -> Self {
+        ByteTokenizer { vocab_size: 256, bos_id: 0, pad_id: 0 }
+    }
+}
+
+impl ByteTokenizer {
+    /// Load + validate the vocabulary spec written by the python side.
+    pub fn from_spec(path: &Path) -> Result<ByteTokenizer> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        if j.get("kind").and_then(|k| k.as_str()) != Some("byte") {
+            bail!("unsupported tokenizer kind in {}", path.display());
+        }
+        Ok(ByteTokenizer {
+            vocab_size: j.get("vocab_size").and_then(|v| v.as_usize()).unwrap_or(256),
+            bos_id: j.get("bos_id").and_then(|v| v.as_usize()).unwrap_or(0) as u32,
+            pad_id: j.get("pad_id").and_then(|v| v.as_usize()).unwrap_or(0) as u32,
+        })
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.bytes().map(|b| b as u32).collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids.iter().map(|&i| (i & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::default();
+        let ids = t.encode("the crab drifts.");
+        assert_eq!(ids.len(), 16);
+        assert_eq!(t.decode(&ids), "the crab drifts.");
+    }
+
+    #[test]
+    fn utf8_multibyte_survives() {
+        let t = ByteTokenizer::default();
+        let ids = t.encode("café");
+        assert_eq!(ids.len(), 5); // é is two bytes
+        assert_eq!(t.decode(&ids), "café");
+    }
+}

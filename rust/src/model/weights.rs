@@ -1,0 +1,246 @@
+//! Weight store: a `.fbqw` checkpoint materialized for the engines.
+//!
+//! Supports both checkpoint kinds produced by the python build:
+//! * `scheme: "fp"`   — float weights per linear (`<prefix>.w`),
+//! * `scheme: "quant"` — per linear `<prefix>/codes_packed`, `scales`,
+//!   `zeros` and optionally `a`, `b`, `col_scale`.
+//!
+//! For the PJRT runtime the store can also synthesize the *uniform*
+//! quantized feed (zero-filled sub-branch / unit col_scale for methods
+//! that lack them), since the AOT graphs take every tensor.
+
+use super::config::Config;
+use crate::quant::formats::Archive;
+use crate::quant::pack::unpack_codes;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One linear layer's weights in whichever form the checkpoint provides.
+#[derive(Debug, Clone)]
+pub enum LinearWeights {
+    Dense {
+        /// `[out, in]`
+        w: Vec<f32>,
+        bias: Option<Vec<f32>>,
+    },
+    Quant {
+        out: usize,
+        cin: usize,
+        bits: u8,
+        group: usize,
+        /// `[out, in/8]` nibble-packed codes
+        packed: Vec<u32>,
+        /// `[out, in/group]`
+        scales: Vec<f32>,
+        zeros: Vec<f32>,
+        /// optional sub-branch A `[r, in]`, B `[out, r]`
+        a: Option<Vec<f32>>,
+        b: Option<Vec<f32>>,
+        rank: usize,
+        /// optional per-input-channel activation multiplier
+        col_scale: Option<Vec<f32>>,
+        bias: Option<Vec<f32>>,
+    },
+}
+
+impl LinearWeights {
+    pub fn is_quant(&self) -> bool {
+        matches!(self, LinearWeights::Quant { .. })
+    }
+
+    /// Weight bytes resident at serving time (Fig. 1's memory axis).
+    /// Quantized layers count the *logical* bit-width for codes.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            LinearWeights::Dense { w, bias } => {
+                4 * w.len() + bias.as_ref().map_or(0, |b| 4 * b.len())
+            }
+            LinearWeights::Quant { out, cin, bits, scales, zeros, a, b, col_scale, bias, .. } => {
+                let codes = out * cin * (*bits as usize) / 8;
+                codes
+                    + 4 * (scales.len() + zeros.len())
+                    + a.as_ref().map_or(0, |v| 4 * v.len())
+                    + b.as_ref().map_or(0, |v| 4 * v.len())
+                    + col_scale.as_ref().map_or(0, |v| 4 * v.len())
+                    + bias.as_ref().map_or(0, |v| 4 * v.len())
+            }
+        }
+    }
+
+    /// Unpacked int8 codes (PJRT feed path).
+    pub fn unpacked_codes(&self) -> Result<Vec<i8>> {
+        match self {
+            LinearWeights::Quant { packed, out, cin, .. } => Ok(unpack_codes(packed, *out, *cin)),
+            _ => bail!("dense layer has no codes"),
+        }
+    }
+
+    /// The effective dense weight the layer applies (analysis/tests).
+    pub fn effective_dense(&self) -> Vec<f32> {
+        match self {
+            LinearWeights::Dense { w, .. } => w.clone(),
+            LinearWeights::Quant {
+                out, cin, bits, group, packed, scales, zeros, a, b, col_scale, rank, ..
+            } => {
+                let codes = unpack_codes(packed, *out, *cin);
+                let p = crate::quant::groupwise::QuantParams {
+                    bits: *bits,
+                    group: *group,
+                    scales: scales.clone(),
+                    zeros: zeros.clone(),
+                };
+                let mut w = crate::quant::groupwise::dequantize(&codes, *out, *cin, &p);
+                if let (Some(a), Some(b)) = (a, b) {
+                    let sb = crate::quant::subbranch::SubBranch::new(
+                        a.clone(), b.clone(), *rank, *cin, *out,
+                    );
+                    let sigma = sb.dense_sigma();
+                    for (wi, si) in w.iter_mut().zip(&sigma) {
+                        *wi += si;
+                    }
+                }
+                if let Some(cs) = col_scale {
+                    for r in 0..*out {
+                        for c in 0..*cin {
+                            w[r * cin + c] *= cs[c];
+                        }
+                    }
+                }
+                w
+            }
+        }
+    }
+}
+
+/// A loaded checkpoint: config + named float tensors + per-linear weights.
+#[derive(Debug)]
+pub struct WeightStore {
+    pub cfg: Config,
+    pub scheme: String,
+    pub method: String,
+    pub bits: u8,
+    pub group: usize,
+    pub rank: usize,
+    floats: HashMap<String, Vec<f32>>,
+    linears: HashMap<String, LinearWeights>,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let arc = Archive::load(path)?;
+        let cfg = Config::from_json(
+            arc.meta.get("config").context("checkpoint meta missing 'config'")?,
+        )?;
+        let scheme = arc.meta_str("scheme").unwrap_or("fp").to_string();
+        let method = arc.meta_str("method").unwrap_or("fp").to_string();
+        let bits = arc.meta_usize("bits").unwrap_or(16) as u8;
+        let group = arc.meta_usize("group").unwrap_or(128);
+        let rank = arc.meta_usize("rank").unwrap_or(0);
+
+        let mut floats = HashMap::new();
+        for name in arc.names() {
+            if !name.contains('/') {
+                floats.insert(name.clone(), arc.get(name)?.as_f32()?);
+            }
+        }
+
+        let mut linears = HashMap::new();
+        for l in 0..cfg.n_layers {
+            for lname in cfg.linear_names() {
+                let prefix = format!("l{l}.{lname}");
+                let (out, cin) = cfg.linear_shape(lname);
+                let bias = floats.get(&format!("{prefix}.b")).cloned();
+                let lw = if arc.contains(&format!("{prefix}/codes_packed")) {
+                    let packed_t = arc.get(&format!("{prefix}/codes_packed"))?;
+                    if packed_t.shape != vec![out, cin / 8] {
+                        bail!("{prefix}: packed shape {:?} != [{out}, {}]", packed_t.shape, cin / 8);
+                    }
+                    let get_opt = |suffix: &str| -> Result<Option<Vec<f32>>> {
+                        let n = format!("{prefix}/{suffix}");
+                        if arc.contains(&n) {
+                            Ok(Some(arc.get(&n)?.as_f32()?))
+                        } else {
+                            Ok(None)
+                        }
+                    };
+                    let a = get_opt("a")?;
+                    let b = get_opt("b")?;
+                    let this_rank = a.as_ref().map_or(0, |av| av.len() / cin);
+                    LinearWeights::Quant {
+                        out,
+                        cin,
+                        bits,
+                        group,
+                        packed: packed_t.as_u32()?,
+                        scales: arc.get(&format!("{prefix}/scales"))?.as_f32()?,
+                        zeros: arc.get(&format!("{prefix}/zeros"))?.as_f32()?,
+                        a,
+                        b,
+                        rank: this_rank,
+                        col_scale: get_opt("col_scale")?,
+                        bias,
+                    }
+                } else {
+                    let w = floats
+                        .get(&format!("{prefix}.w"))
+                        .with_context(|| format!("missing weights for {prefix}"))?
+                        .clone();
+                    if w.len() != out * cin {
+                        bail!("{prefix}: weight len {} != {}", w.len(), out * cin);
+                    }
+                    LinearWeights::Dense { w, bias }
+                };
+                linears.insert(prefix, lw);
+            }
+        }
+
+        Ok(WeightStore { cfg, scheme, method, bits, group, rank, floats, linears })
+    }
+
+    pub fn float(&self, name: &str) -> Result<&[f32]> {
+        self.floats
+            .get(name)
+            .map(|v| v.as_slice())
+            .with_context(|| format!("checkpoint has no float tensor '{name}'"))
+    }
+
+    pub fn linear(&self, prefix: &str) -> Result<&LinearWeights> {
+        self.linears
+            .get(prefix)
+            .with_context(|| format!("checkpoint has no linear '{prefix}'"))
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        self.scheme == "quant"
+    }
+
+    /// Total resident weight bytes (Fig. 1 memory axis).
+    pub fn resident_bytes(&self) -> usize {
+        let lin: usize = self.linears.values().map(|l| l.resident_bytes()).sum();
+        let fl: usize = self
+            .floats
+            .iter()
+            .filter(|(k, _)| !k.contains(".w") || !self.is_quantized_prefix(k))
+            .map(|(_, v)| 4 * v.len())
+            .sum();
+        lin + fl
+    }
+
+    fn is_quantized_prefix(&self, key: &str) -> bool {
+        key.strip_suffix(".w")
+            .map(|p| self.linears.get(p).is_some_and(|l| l.is_quant()))
+            .unwrap_or(false)
+    }
+
+    /// Checkpoint path convention: `<model>_<method>_w<bits>.fbqw` or
+    /// `<model>_fp.fbqw` under `artifacts/models/`.
+    pub fn path_for(artifacts: &Path, model: &str, method: &str, bits: u8) -> std::path::PathBuf {
+        let file = if method == "fp" {
+            format!("{model}_fp.fbqw")
+        } else {
+            format!("{model}_{method}_w{bits}.fbqw")
+        };
+        artifacts.join("models").join(file)
+    }
+}

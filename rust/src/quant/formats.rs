@@ -1,0 +1,281 @@
+//! Reader/writer for the `.fbqw` tensor-archive format.
+//!
+//! Layout (little endian; see `python/compile/pack.py`, the authoring
+//! side):
+//!
+//! ```text
+//! magic   b"FBQW"
+//! version u32 (=1)
+//! hdr_len u64
+//! header  utf-8 JSON {"meta": {...}, "tensors": [{name,dtype,shape,offset,nbytes}]}
+//! payload tensors at 64-byte-aligned offsets (relative to payload start)
+//! ```
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    I8,
+    U8,
+    U32,
+}
+
+impl Dtype {
+    pub fn from_name(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "i8" => Dtype::I8,
+            "u8" => Dtype::U8,
+            "u32" => Dtype::U32,
+            other => bail!("unknown dtype '{other}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+            Dtype::I8 => "i8",
+            Dtype::U8 => "u8",
+            Dtype::U32 => "u32",
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 | Dtype::U32 => 4,
+            Dtype::I8 | Dtype::U8 => 1,
+        }
+    }
+}
+
+/// One tensor inside an [`Archive`].
+#[derive(Debug, Clone)]
+pub struct TensorView {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub raw: Vec<u8>,
+}
+
+impl TensorView {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        self.expect(Dtype::F32)?;
+        Ok(self
+            .raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_u32(&self) -> Result<Vec<u32>> {
+        self.expect(Dtype::U32)?;
+        Ok(self
+            .raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        self.expect(Dtype::I32)?;
+        Ok(self
+            .raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        self.expect(Dtype::U8)?;
+        Ok(&self.raw)
+    }
+
+    pub fn as_i8(&self) -> Result<Vec<i8>> {
+        self.expect(Dtype::I8)?;
+        Ok(self.raw.iter().map(|&b| b as i8).collect())
+    }
+
+    fn expect(&self, dt: Dtype) -> Result<()> {
+        if self.dtype != dt {
+            bail!("tensor '{}' is {}, expected {}", self.name, self.dtype.name(), dt.name());
+        }
+        let want = self.numel() * dt.size();
+        if self.raw.len() != want {
+            bail!("tensor '{}': payload {} bytes, expected {}", self.name, self.raw.len(), want);
+        }
+        Ok(())
+    }
+}
+
+/// A loaded `.fbqw` archive: ordered tensors + JSON metadata.
+#[derive(Debug)]
+pub struct Archive {
+    pub meta: Json,
+    order: Vec<String>,
+    tensors: HashMap<String, TensorView>,
+}
+
+const MAGIC: &[u8; 4] = b"FBQW";
+const ALIGN: usize = 64;
+
+impl Archive {
+    pub fn load(path: &Path) -> Result<Archive> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut head = [0u8; 16];
+        f.read_exact(&mut head)?;
+        if &head[0..4] != MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != 1 {
+            bail!("{}: unsupported version {version}", path.display());
+        }
+        let hdr_len = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        let mut hdr = vec![0u8; hdr_len];
+        f.read_exact(&mut hdr)?;
+        let header = Json::parse(std::str::from_utf8(&hdr)?)
+            .map_err(|e| anyhow::anyhow!("{}: header {e}", path.display()))?;
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+
+        let meta = header.get("meta").cloned().unwrap_or(Json::Obj(vec![]));
+        let mut order = Vec::new();
+        let mut tensors = HashMap::new();
+        for e in header.req("tensors").map_err(anyhow::Error::msg)?.as_arr().context("tensors not array")? {
+            let name = e.req("name").map_err(anyhow::Error::msg)?.as_str().context("name")?.to_string();
+            let dtype = Dtype::from_name(e.req("dtype").map_err(anyhow::Error::msg)?.as_str().context("dtype")?)?;
+            let shape = e.req("shape").map_err(anyhow::Error::msg)?.as_usize_vec().context("shape")?;
+            let offset = e.req("offset").map_err(anyhow::Error::msg)?.as_usize().context("offset")?;
+            let nbytes = e.req("nbytes").map_err(anyhow::Error::msg)?.as_usize().context("nbytes")?;
+            if offset + nbytes > payload.len() {
+                bail!("{}: tensor '{name}' out of bounds", path.display());
+            }
+            let raw = payload[offset..offset + nbytes].to_vec();
+            order.push(name.clone());
+            tensors.insert(name.clone(), TensorView { name, dtype, shape, raw });
+        }
+        Ok(Archive { meta, order, tensors })
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TensorView> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("archive has no tensor '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|j| j.as_str())
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|j| j.as_usize())
+    }
+
+    /// Write an archive (used by tests and weight-conversion tools).
+    pub fn write(path: &Path, tensors: &[(String, Dtype, Vec<usize>, Vec<u8>)], meta: &Json) -> Result<()> {
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        let mut blobs: Vec<(usize, &Vec<u8>)> = Vec::new();
+        for (name, dtype, shape, raw) in tensors {
+            if offset % ALIGN != 0 {
+                offset += ALIGN - offset % ALIGN;
+            }
+            entries.push(Json::obj(vec![
+                ("name", Json::from(name.as_str())),
+                ("dtype", Json::from(dtype.name())),
+                ("shape", Json::from(shape.clone())),
+                ("offset", Json::from(offset)),
+                ("nbytes", Json::from(raw.len())),
+            ]));
+            blobs.push((offset, raw));
+            offset += raw.len();
+        }
+        let header = Json::obj(vec![("meta", meta.clone()), ("tensors", Json::Arr(entries))])
+            .to_string_compact();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        let payload_start = header.len() + 16;
+        let mut pos = payload_start;
+        for (off, raw) in blobs {
+            let target = payload_start + off;
+            if target > pos {
+                f.write_all(&vec![0u8; target - pos])?;
+                pos = target;
+            }
+            f.write_all(raw)?;
+            pos += raw.len();
+        }
+        Ok(())
+    }
+}
+
+/// f32 slice -> raw little-endian bytes (writer helper).
+pub fn f32_bytes(xs: &[f32]) -> Vec<u8> {
+    xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+/// u32 slice -> raw bytes.
+pub fn u32_bytes(xs: &[u32]) -> Vec<u8> {
+    xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let dir = std::env::temp_dir().join("fbq_fmt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.fbqw");
+        let data = vec![1.5f32, -2.0, 3.25];
+        let tensors = vec![
+            ("x".to_string(), Dtype::F32, vec![3], f32_bytes(&data)),
+            ("y".to_string(), Dtype::U8, vec![2, 2], vec![1, 2, 3, 4]),
+        ];
+        let meta = Json::obj(vec![("kind", Json::from("test"))]);
+        Archive::write(&path, &tensors, &meta).unwrap();
+        let arc = Archive::load(&path).unwrap();
+        assert_eq!(arc.names(), &["x".to_string(), "y".to_string()]);
+        assert_eq!(arc.get("x").unwrap().as_f32().unwrap(), data);
+        assert_eq!(arc.get("y").unwrap().as_u8().unwrap(), &[1, 2, 3, 4]);
+        assert_eq!(arc.meta_str("kind"), Some("test"));
+        assert!(arc.get("zzz").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("fbq_fmt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.fbqw");
+        std::fs::write(&path, b"NOPE____________").unwrap();
+        assert!(Archive::load(&path).is_err());
+    }
+}

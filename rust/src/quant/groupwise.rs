@@ -1,0 +1,182 @@
+//! Group-wise asymmetric RTN quantization (rust mirror of
+//! `python/compile/kernels/ref.py`).
+//!
+//! Conventions: weights `[out, in]` row-major; groups of `group`
+//! consecutive input channels share one `(scale, zero)`;
+//! `code = clip(round(w/scale) + zero, 0, 2^bits − 1)`;
+//! `dequant = (code − zero) · scale`. The range always covers zero.
+
+/// Per-layer quantization parameters.
+#[derive(Debug, Clone)]
+pub struct QuantParams {
+    pub bits: u8,
+    pub group: usize,
+    /// `[out, in/group]`
+    pub scales: Vec<f32>,
+    /// `[out, in/group]`
+    pub zeros: Vec<f32>,
+}
+
+impl QuantParams {
+    pub fn qmax(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+}
+
+/// A fully quantized matrix (codes unpacked).
+#[derive(Debug, Clone)]
+pub struct GroupQuant {
+    pub out: usize,
+    pub cin: usize,
+    pub params: QuantParams,
+    /// `[out, in]` int codes
+    pub codes: Vec<i8>,
+}
+
+/// Compute (scale, zero) per (row, group) for `w: [out, in]`.
+pub fn quant_params(w: &[f32], out: usize, cin: usize, bits: u8, group: usize) -> QuantParams {
+    assert_eq!(w.len(), out * cin);
+    assert_eq!(cin % group, 0);
+    let ngroups = cin / group;
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut scales = vec![0f32; out * ngroups];
+    let mut zeros = vec![0f32; out * ngroups];
+    for r in 0..out {
+        for g in 0..ngroups {
+            let seg = &w[r * cin + g * group..r * cin + (g + 1) * group];
+            let mut lo = 0f32;
+            let mut hi = 0f32;
+            for &v in seg {
+                if v < lo {
+                    lo = v;
+                }
+                if v > hi {
+                    hi = v;
+                }
+            }
+            let scale = ((hi - lo) / qmax).max(1e-8);
+            scales[r * ngroups + g] = scale;
+            zeros[r * ngroups + g] = (-lo / scale).round();
+        }
+    }
+    QuantParams { bits, group, scales, zeros }
+}
+
+/// RTN-quantize `w` with the given params.
+pub fn quantize(w: &[f32], out: usize, cin: usize, p: &QuantParams) -> Vec<i8> {
+    let ngroups = cin / p.group;
+    let qmax = p.qmax();
+    let mut codes = vec![0i8; out * cin];
+    for r in 0..out {
+        for g in 0..ngroups {
+            let scale = p.scales[r * ngroups + g];
+            let zero = p.zeros[r * ngroups + g];
+            for c in 0..p.group {
+                let idx = r * cin + g * p.group + c;
+                let q = (w[idx] / scale).round() + zero;
+                codes[idx] = q.clamp(0.0, qmax) as i8;
+            }
+        }
+    }
+    codes
+}
+
+/// De-quantize codes back to float `[out, in]`.
+pub fn dequantize(codes: &[i8], out: usize, cin: usize, p: &QuantParams) -> Vec<f32> {
+    let ngroups = cin / p.group;
+    let mut w = vec![0f32; out * cin];
+    for r in 0..out {
+        for g in 0..ngroups {
+            let scale = p.scales[r * ngroups + g];
+            let zero = p.zeros[r * ngroups + g];
+            for c in 0..p.group {
+                let idx = r * cin + g * p.group + c;
+                w[idx] = (codes[idx] as f32 - zero) * scale;
+            }
+        }
+    }
+    w
+}
+
+/// One-shot fake quantization (convenience for tests/benches).
+pub fn quantize_dequantize(w: &[f32], out: usize, cin: usize, bits: u8, group: usize) -> Vec<f32> {
+    let p = quant_params(w, out, cin, bits, group);
+    let codes = quantize(w, out, cin, &p);
+    dequantize(&codes, out, cin, &p)
+}
+
+impl GroupQuant {
+    pub fn from_weights(w: &[f32], out: usize, cin: usize, bits: u8, group: usize) -> Self {
+        let params = quant_params(w, out, cin, bits, group);
+        let codes = quantize(w, out, cin, &params);
+        GroupQuant { out, cin, params, codes }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        dequantize(&self.codes, self.out, self.cin, &self.params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn rand_w(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    #[test]
+    fn error_bounded_by_half_scale() {
+        let mut rng = Pcg64::seeded(11);
+        for &bits in &[2u8, 3, 4] {
+            let (out, cin, group) = (6, 64, 16);
+            let w = rand_w(&mut rng, out * cin, 0.7);
+            let p = quant_params(&w, out, cin, bits, group);
+            let codes = quantize(&w, out, cin, &p);
+            let wq = dequantize(&codes, out, cin, &p);
+            let ngroups = cin / group;
+            for r in 0..out {
+                for c in 0..cin {
+                    let s = p.scales[r * ngroups + c / group];
+                    let err = (w[r * cin + c] - wq[r * cin + c]).abs();
+                    assert!(err <= s / 2.0 + 1e-6, "bits={bits} err={err} s/2={}", s / 2.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Pcg64::seeded(12);
+        let w = rand_w(&mut rng, 4 * 32, 2.0);
+        for &bits in &[3u8, 4] {
+            let gq = GroupQuant::from_weights(&w, 4, 32, bits, 16);
+            let qmax = (1i8 << bits) - 1;
+            assert!(gq.codes.iter().all(|&c| (0..=qmax).contains(&c)));
+        }
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut rng = Pcg64::seeded(13);
+        let (out, cin) = (8, 128);
+        let w = rand_w(&mut rng, out * cin, 1.0);
+        let mse = |bits: u8| -> f64 {
+            let wq = quantize_dequantize(&w, out, cin, bits, 32);
+            w.iter().zip(&wq).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+        };
+        assert!(mse(4) < mse(3));
+        assert!(mse(3) < mse(2));
+    }
+
+    #[test]
+    fn zero_weight_is_exact() {
+        // the grid always covers 0, so 0.0 quantizes exactly
+        let w = vec![0.0f32, 0.5, -0.25, 0.0, 1.0, -1.0, 0.75, 0.0];
+        let p = quant_params(&w, 1, 8, 4, 8);
+        let codes = quantize(&w, 1, 8, &p);
+        let wq = dequantize(&codes, 1, 8, &p);
+        assert!(wq[0].abs() < 1e-6 && wq[3].abs() < 1e-6 && wq[7].abs() < 1e-6);
+    }
+}

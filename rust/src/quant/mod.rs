@@ -1,0 +1,15 @@
+//! Quantization substrate: the `.fbqw` archive format, group-wise RTN
+//! quantization/de-quantization, nibble bit-packing and low-rank
+//! sub-branch algebra.
+//!
+//! Mirrors `python/compile/{pack,kernels/ref}.py` — conventions are shared
+//! by specification and round-trip tested (`tests/cross_format.rs`).
+
+pub mod formats;
+pub mod groupwise;
+pub mod pack;
+pub mod subbranch;
+
+pub use formats::{Archive, Dtype, TensorView};
+pub use groupwise::{GroupQuant, QuantParams};
+pub use pack::{pack_codes, unpack_codes};

@@ -1,0 +1,91 @@
+//! Nibble packing of quantization codes (shared spec with
+//! `python/compile/quantize_all.py`).
+//!
+//! Codes run along the input dimension; 8 codes per `u32` word, code `j`
+//! occupying bits `[4j, 4j+4)`. Both 3- and 4-bit codes use a nibble (the
+//! logical bit-width governs the code range / quantization grid; see
+//! DESIGN.md §2 for the storage-format note).
+
+/// Pack int codes (values 0..=15) into u32 words. `codes.len()` must be a
+/// multiple of 8 per row; rows are `cin` long.
+pub fn pack_codes(codes: &[i8], rows: usize, cin: usize) -> Vec<u32> {
+    assert_eq!(codes.len(), rows * cin);
+    assert_eq!(cin % 8, 0, "cin must be a multiple of 8");
+    let words_per_row = cin / 8;
+    let mut out = vec![0u32; rows * words_per_row];
+    for r in 0..rows {
+        for wi in 0..words_per_row {
+            let mut word = 0u32;
+            for j in 0..8 {
+                let c = codes[r * cin + wi * 8 + j] as u32 & 0xF;
+                word |= c << (4 * j);
+            }
+            out[r * words_per_row + wi] = word;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_codes`].
+pub fn unpack_codes(packed: &[u32], rows: usize, cin: usize) -> Vec<i8> {
+    let words_per_row = cin / 8;
+    assert_eq!(packed.len(), rows * words_per_row);
+    let mut out = vec![0i8; rows * cin];
+    for r in 0..rows {
+        for wi in 0..words_per_row {
+            let word = packed[r * words_per_row + wi];
+            for j in 0..8 {
+                out[r * cin + wi * 8 + j] = ((word >> (4 * j)) & 0xF) as i8;
+            }
+        }
+    }
+    out
+}
+
+/// Iterate the 8 codes of one packed word (hot-path helper).
+#[inline(always)]
+pub fn word_codes(word: u32) -> [f32; 8] {
+    [
+        (word & 0xF) as f32,
+        ((word >> 4) & 0xF) as f32,
+        ((word >> 8) & 0xF) as f32,
+        ((word >> 12) & 0xF) as f32,
+        ((word >> 16) & 0xF) as f32,
+        ((word >> 20) & 0xF) as f32,
+        ((word >> 24) & 0xF) as f32,
+        ((word >> 28) & 0xF) as f32,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Pcg64::seeded(5);
+        for &(rows, cin) in &[(1usize, 8usize), (3, 16), (7, 64), (16, 128)] {
+            let codes: Vec<i8> = (0..rows * cin).map(|_| rng.below(16) as i8).collect();
+            let packed = pack_codes(&codes, rows, cin);
+            assert_eq!(packed.len(), rows * cin / 8);
+            assert_eq!(unpack_codes(&packed, rows, cin), codes);
+        }
+    }
+
+    #[test]
+    fn word_codes_matches_unpack() {
+        let codes: Vec<i8> = (0..8).map(|i| (i * 2 % 16) as i8).collect();
+        let packed = pack_codes(&codes, 1, 8);
+        let w = word_codes(packed[0]);
+        for j in 0..8 {
+            assert_eq!(w[j], codes[j] as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_multiple_of_8() {
+        pack_codes(&[0i8; 12], 1, 12);
+    }
+}

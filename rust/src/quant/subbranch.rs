@@ -1,0 +1,144 @@
+//! Low-rank sub-branch algebra: Σ = B·A and the FBQuant feedback
+//! reconstruction, used by tests, the ablation benches and the engine.
+
+use super::groupwise;
+
+/// Low-rank factors A: `[r, in]`, B: `[out, r]`.
+#[derive(Debug, Clone)]
+pub struct SubBranch {
+    pub rank: usize,
+    pub cin: usize,
+    pub out: usize,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl SubBranch {
+    pub fn new(a: Vec<f32>, b: Vec<f32>, rank: usize, cin: usize, out: usize) -> Self {
+        assert_eq!(a.len(), rank * cin);
+        assert_eq!(b.len(), out * rank);
+        SubBranch { rank, cin, out, a, b }
+    }
+
+    /// Materialize Σ = B·A as `[out, in]` (analysis only — the runtime
+    /// never forms this product).
+    pub fn dense_sigma(&self) -> Vec<f32> {
+        let mut sigma = vec![0f32; self.out * self.cin];
+        for o in 0..self.out {
+            for r in 0..self.rank {
+                let bv = self.b[o * self.rank + r];
+                if bv == 0.0 {
+                    continue;
+                }
+                let arow = &self.a[r * self.cin..(r + 1) * self.cin];
+                let srow = &mut sigma[o * self.cin..(o + 1) * self.cin];
+                for c in 0..self.cin {
+                    srow[c] += bv * arow[c];
+                }
+            }
+        }
+        sigma
+    }
+
+    /// y += B·(A·x) for a single activation vector (decode shape).
+    pub fn apply_gemv(&self, x: &[f32], y: &mut [f32]) {
+        let mut xa = vec![0f32; self.rank];
+        for r in 0..self.rank {
+            let arow = &self.a[r * self.cin..(r + 1) * self.cin];
+            let mut acc = 0f32;
+            for c in 0..self.cin {
+                acc += arow[c] * x[c];
+            }
+            xa[r] = acc;
+        }
+        for o in 0..self.out {
+            let brow = &self.b[o * self.rank..(o + 1) * self.rank];
+            let mut acc = 0f32;
+            for r in 0..self.rank {
+                acc += brow[r] * xa[r];
+            }
+            y[o] += acc;
+        }
+    }
+}
+
+/// FBQuant reconstruction W_F = Q(W − Σ) + Σ (paper Eq. 11), dense form.
+pub fn fbq_reconstruct(w: &[f32], sigma: &[f32], out: usize, cin: usize,
+                       bits: u8, group: usize) -> Vec<f32> {
+    let resid: Vec<f32> = w.iter().zip(sigma).map(|(a, b)| a - b).collect();
+    let q = groupwise::quantize_dequantize(&resid, out, cin, bits, group);
+    q.iter().zip(sigma).map(|(a, b)| a + b).collect()
+}
+
+/// The per-element bound s/2 of Eq. 13, expanded to `[out, in]`.
+pub fn fbq_bound(w: &[f32], sigma: &[f32], out: usize, cin: usize,
+                 bits: u8, group: usize) -> Vec<f32> {
+    let resid: Vec<f32> = w.iter().zip(sigma).map(|(a, b)| a - b).collect();
+    let p = groupwise::quant_params(&resid, out, cin, bits, group);
+    let ngroups = cin / group;
+    let mut bound = vec![0f32; out * cin];
+    for r in 0..out {
+        for c in 0..cin {
+            bound[r * cin + c] = p.scales[r * ngroups + c / group] / 2.0;
+        }
+    }
+    bound
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn fbq_bound_holds_for_wild_sigma() {
+        // Eq. 13: the bound holds regardless of Σ's magnitude.
+        let mut rng = Pcg64::seeded(21);
+        let (out, cin, group) = (5usize, 32usize, 16usize);
+        for &sig_scale in &[0.01f64, 1.0, 50.0] {
+            let w: Vec<f32> = (0..out * cin).map(|_| rng.normal() as f32).collect();
+            let a: Vec<f32> = (0..3 * cin).map(|_| (rng.normal() * sig_scale) as f32).collect();
+            let b: Vec<f32> = (0..out * 3).map(|_| (rng.normal() * sig_scale) as f32).collect();
+            let sb = SubBranch::new(a, b, 3, cin, out);
+            let sigma = sb.dense_sigma();
+            let wf = fbq_reconstruct(&w, &sigma, out, cin, 3, group);
+            let bound = fbq_bound(&w, &sigma, out, cin, 3, group);
+            for i in 0..w.len() {
+                assert!(
+                    (w[i] - wf[i]).abs() <= bound[i] + 1e-5,
+                    "sig_scale={sig_scale} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conventional_reconstruction_is_unbounded() {
+        // contrast: W' = Q(W) + Σ drifts with Σ (paper §3.1)
+        let mut rng = Pcg64::seeded(22);
+        let (out, cin) = (4usize, 16usize);
+        let w: Vec<f32> = (0..out * cin).map(|_| rng.normal() as f32).collect();
+        let q = groupwise::quantize_dequantize(&w, out, cin, 3, 16);
+        let sigma = vec![10f32; out * cin];
+        let w_rec: Vec<f32> = q.iter().zip(&sigma).map(|(a, b)| a + b).collect();
+        let max_dev = w.iter().zip(&w_rec).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(max_dev > 5.0);
+    }
+
+    #[test]
+    fn apply_gemv_matches_dense() {
+        let mut rng = Pcg64::seeded(23);
+        let (out, cin, rank) = (6usize, 12usize, 3usize);
+        let a: Vec<f32> = (0..rank * cin).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..out * rank).map(|_| rng.normal() as f32).collect();
+        let sb = SubBranch::new(a, b, rank, cin, out);
+        let x: Vec<f32> = (0..cin).map(|_| rng.normal() as f32).collect();
+        let sigma = sb.dense_sigma();
+        let mut y = vec![0f32; out];
+        sb.apply_gemv(&x, &mut y);
+        for o in 0..out {
+            let want: f32 = (0..cin).map(|c| sigma[o * cin + c] * x[c]).sum();
+            assert!((y[o] - want).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! `artifacts/manifest.json` parsing: which HLO artifacts exist, and the
+//! ordered input/output tensor specs the runtime marshals against.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name").map_err(anyhow::Error::msg)?.as_str().context("name")?.to_string(),
+            shape: j.req("shape").map_err(anyhow::Error::msg)?.as_usize_vec().context("shape")?,
+            dtype: j.req("dtype").map_err(anyhow::Error::msg)?.as_str().context("dtype")?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub kind: String,
+    pub model: Option<String>,
+    pub quantized: bool,
+    pub batch: usize,
+    pub seq: usize,
+    pub t_step: usize,
+    pub rank: usize,
+    pub group: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_root: &Path) -> Result<Manifest> {
+        let path = artifacts_root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts").map_err(anyhow::Error::msg)?.as_arr().context("artifacts")? {
+            let get_usize = |k: &str| a.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            artifacts.push(ArtifactSpec {
+                name: a.req("name").map_err(anyhow::Error::msg)?.as_str().context("name")?.to_string(),
+                path: a.req("path").map_err(anyhow::Error::msg)?.as_str().context("path")?.to_string(),
+                kind: a.get("kind").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+                model: a.get("model").and_then(|v| v.as_str()).map(|s| s.to_string()),
+                quantized: a.get("quantized").and_then(|v| v.as_bool()).unwrap_or(false),
+                batch: get_usize("batch"),
+                seq: get_usize("seq"),
+                t_step: get_usize("t_step"),
+                rank: get_usize("rank"),
+                group: get_usize("group"),
+                inputs: a
+                    .req("inputs").map_err(anyhow::Error::msg)?
+                    .as_arr().context("inputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req("outputs").map_err(anyhow::Error::msg)?
+                    .as_arr().context("outputs")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+            });
+        }
+        Ok(Manifest { root: artifacts_root.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("manifest has no artifact '{name}'"))
+    }
+
+    /// e.g. `score_llamoid-tiny_q`, `decode_llamoid-tiny_q_b4`
+    pub fn score_name(model: &str, quantized: bool) -> String {
+        format!("score_{model}_{}", if quantized { "q" } else { "fp" })
+    }
+
+    pub fn step_name(kind: &str, model: &str, quantized: bool, batch: usize) -> String {
+        format!("{kind}_{model}_{}_b{batch}", if quantized { "q" } else { "fp" })
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.root.join(&spec.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("fbq_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"artifacts":[{"name":"score_m_fp","path":"hlo/x.hlo.txt",
+                "kind":"score","model":"m","quantized":false,"batch":4,"seq":256,
+                "inputs":[{"name":"tokens","shape":[4,256],"dtype":"i32"}],
+                "outputs":[{"name":"logits","shape":[4,256,256],"dtype":"f32"}]}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.find("score_m_fp").unwrap();
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.inputs[0].numel(), 1024);
+        assert!(m.find("nope").is_err());
+        assert_eq!(Manifest::score_name("m", true), "score_m_q");
+        assert_eq!(Manifest::step_name("decode", "m", false, 4), "decode_m_fp_b4");
+    }
+}

@@ -1,0 +1,228 @@
+//! Executable registry: compile-once, run-many management of the AOT
+//! artifacts, plus weight feeding from `.fbqw` checkpoints.
+//!
+//! The AOT graphs take weights as runtime parameters. The registry
+//! marshals a checkpoint into the artifact's parameter order once and
+//! caches the literals, so the per-request cost is only the data inputs
+//! (tokens / kv state).
+
+use super::artifact::{ArtifactSpec, Manifest, TensorSpec};
+use super::pjrt::{literal_f32, literal_i32, PjrtContext};
+use crate::model::WeightStore;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A host value heading into (or out of) an executable.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Value {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(v) => Ok(v),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(v) => Ok(v),
+            _ => bail!("value is not i32"),
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        match (self, spec.dtype.as_str()) {
+            (Value::F32(v), "f32") => {
+                if v.len() != spec.numel() {
+                    bail!("input '{}': {} elements, expected {}", spec.name, v.len(), spec.numel());
+                }
+                literal_f32(v, &spec.shape)
+            }
+            (Value::I32(v), "i32") => {
+                if v.len() != spec.numel() {
+                    bail!("input '{}': {} elements, expected {}", spec.name, v.len(), spec.numel());
+                }
+                literal_i32(v, &spec.shape)
+            }
+            (v, dt) => bail!("input '{}': value/dtype mismatch ({v:?} vs {dt})", spec.name),
+        }
+    }
+}
+
+/// Data inputs (non-weight): fed per call.
+const DATA_INPUTS: &[&str] = &["tokens", "pos0", "kv_k", "kv_v", "x"];
+
+fn is_data_input(name: &str) -> bool {
+    DATA_INPUTS.contains(&name)
+}
+
+/// One compiled artifact.
+pub struct LoadedExec {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for LoadedExec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "LoadedExec({})", self.spec.name)
+    }
+}
+
+impl LoadedExec {
+    /// Run with `data` values for the leading data inputs and `weights`
+    /// literals for the remaining parameters. Outputs are flattened to
+    /// host [`Value`]s in manifest order.
+    pub fn run(&self, data: &[Value], weights: &[xla::Literal]) -> Result<Vec<Value>> {
+        // data inputs are the leading parameters; weight literals cover the
+        // rest (kernel artifacts have no weights — everything is data)
+        if data.len() + weights.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} params total, got {} data + {} weights",
+                self.spec.name,
+                self.spec.inputs.len(),
+                data.len(),
+                weights.len()
+            );
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(data.len());
+        for (v, spec) in data.iter().zip(&self.spec.inputs) {
+            args.push(v.to_literal(spec)?);
+        }
+        let mut borrowed: Vec<&xla::Literal> = args.iter().collect();
+        borrowed.extend(weights.iter());
+
+        let result = self.exe.execute::<&xla::Literal>(&borrowed)?;
+        let out_lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple at top level.
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact '{}': {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&self.spec.outputs) {
+            match ospec.dtype.as_str() {
+                "f32" => out.push(Value::F32(lit.to_vec::<f32>()?)),
+                "i32" => out.push(Value::I32(lit.to_vec::<i32>()?)),
+                dt => bail!("unsupported output dtype {dt}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Compile-and-feed cache keyed by artifact name / checkpoint identity.
+pub struct ExecRegistry {
+    pub ctx: PjrtContext,
+    pub manifest: Manifest,
+    execs: HashMap<String, Arc<LoadedExec>>,
+    weight_feeds: HashMap<String, Arc<Vec<xla::Literal>>>,
+}
+
+impl std::fmt::Debug for ExecRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ExecRegistry({} compiled)", self.execs.len())
+    }
+}
+
+impl ExecRegistry {
+    pub fn new(ctx: PjrtContext, manifest: Manifest) -> ExecRegistry {
+        ExecRegistry { ctx, manifest, execs: HashMap::new(), weight_feeds: HashMap::new() }
+    }
+
+    pub fn open(artifacts_root: &std::path::Path) -> Result<ExecRegistry> {
+        Ok(ExecRegistry::new(PjrtContext::cpu()?, Manifest::load(artifacts_root)?))
+    }
+
+    /// Compile (or fetch) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<Arc<LoadedExec>> {
+        if let Some(e) = self.execs.get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        crate::log_info!("compiling artifact '{name}' from {}", path.display());
+        let exe = self.ctx.compile_hlo_text(&path)?;
+        let loaded = Arc::new(LoadedExec { spec, exe });
+        self.execs.insert(name.to_string(), Arc::clone(&loaded));
+        Ok(loaded)
+    }
+
+    /// Build (or fetch) the weight-literal feed for `(artifact, store)`.
+    pub fn weight_feed(&mut self, exec: &LoadedExec, store: &WeightStore,
+                       cache_key: &str) -> Result<Arc<Vec<xla::Literal>>> {
+        let key = format!("{}::{cache_key}", exec.spec.name);
+        if let Some(w) = self.weight_feeds.get(&key) {
+            return Ok(Arc::clone(w));
+        }
+        let feed = Arc::new(build_weight_feed(&exec.spec, store)?);
+        self.weight_feeds.insert(key, Arc::clone(&feed));
+        Ok(feed)
+    }
+
+    pub fn drop_weight_feeds(&mut self) {
+        self.weight_feeds.clear();
+    }
+}
+
+/// Marshal a checkpoint into an artifact's weight-parameter order.
+pub fn build_weight_feed(spec: &ArtifactSpec, store: &WeightStore) -> Result<Vec<xla::Literal>> {
+    let mut feed = Vec::new();
+    for t in spec.inputs.iter().skip_while(|t| is_data_input(&t.name)) {
+        let lit = if let Some((prefix, field)) = t.name.split_once('/') {
+            // quantized-linear tensor
+            let lw = store.linear(prefix)?;
+            match (lw, field) {
+                (crate::model::LinearWeights::Quant { .. }, "codes") => {
+                    let codes = lw.unpacked_codes()?;
+                    let i32s: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+                    literal_i32(&i32s, &t.shape)?
+                }
+                (crate::model::LinearWeights::Quant { scales, .. }, "scales") => {
+                    literal_f32(scales, &t.shape)?
+                }
+                (crate::model::LinearWeights::Quant { zeros, .. }, "zeros") => {
+                    literal_f32(zeros, &t.shape)?
+                }
+                (crate::model::LinearWeights::Quant { a, .. }, "a") => match a {
+                    Some(a) if a.len() == t.numel() => literal_f32(a, &t.shape)?,
+                    // methods without a sub-branch (or mismatched rank
+                    // ablations) feed zeros: Σ = 0
+                    _ => literal_f32(&vec![0f32; t.numel()], &t.shape)?,
+                },
+                (crate::model::LinearWeights::Quant { b, .. }, "b") => match b {
+                    Some(b) if b.len() == t.numel() => literal_f32(b, &t.shape)?,
+                    _ => literal_f32(&vec![0f32; t.numel()], &t.shape)?,
+                },
+                (crate::model::LinearWeights::Quant { col_scale, .. }, "col_scale") => {
+                    match col_scale {
+                        Some(cs) => literal_f32(cs, &t.shape)?,
+                        None => literal_f32(&vec![1f32; t.numel()], &t.shape)?,
+                    }
+                }
+                (crate::model::LinearWeights::Dense { .. }, _) => {
+                    bail!("artifact '{}' is quantized but checkpoint layer '{prefix}' is dense", spec.name)
+                }
+                (_, other) => bail!("unknown quant field '{other}'"),
+            }
+        } else {
+            // plain float parameter
+            let v = store.float(&t.name)?;
+            if v.len() != t.numel() {
+                bail!("weight '{}': {} elements, artifact wants {}", t.name, v.len(), t.numel());
+            }
+            literal_f32(v, &t.shape)?
+        };
+        feed.push(lit);
+    }
+    Ok(feed)
+}

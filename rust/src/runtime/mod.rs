@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! * [`artifact`] — `manifest.json` parsing (artifact specs, tensor specs),
+//! * [`pjrt`] — the `xla` crate wrapper: client, compile, literal
+//!   marshalling,
+//! * [`exec`] — executable registry + weight feeding from a
+//!   [`crate::model::WeightStore`].
+
+pub mod artifact;
+pub mod exec;
+pub mod pjrt;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use exec::{ExecRegistry, LoadedExec, Value};
+pub use pjrt::PjrtContext;

@@ -1,0 +1,69 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! HLO **text** is the interchange format (see `aot.py` and
+//! /opt/xla-example/README.md: serialized HloModuleProto from jax ≥ 0.5
+//! carries 64-bit instruction ids that xla_extension 0.5.1 rejects).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT context (one CPU client).
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl std::fmt::Debug for PjrtContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PjrtContext(platform={})", self.client.platform_name())
+    }
+}
+
+impl PjrtContext {
+    pub fn cpu() -> Result<PjrtContext> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtContext { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Build a literal from f32 data with a shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(&dims).context("reshaping f32 literal")
+}
+
+/// Build a literal from i32 data with a shape (scalar shape = rank 0).
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    if shape.is_empty() {
+        return Ok(xla::Literal::from(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(&dims).context("reshaping i32 literal")
+}

@@ -1,0 +1,7 @@
+//! Dense tensor substrate: owned f32 tensors plus the BLAS-free linear
+//! algebra and NN ops the native engine is built on.
+
+pub mod ops;
+pub mod tensor;
+
+pub use tensor::Tensor;

@@ -1,0 +1,228 @@
+//! BLAS-free linear algebra + NN ops, numerically mirroring the JAX layer-2
+//! definitions (`python/compile/model.py`) so the native engine and the
+//! PJRT path agree to float tolerance.
+//!
+//! Layout conventions: activations `[n, d]` row-major; weights `[out, in]`
+//! so both operands of `matmul_t` stream contiguously.
+
+/// y[n, out] = x[n, in] · w[out, in]ᵀ  (+= when `accumulate`)
+pub fn matmul_t(x: &[f32], w: &[f32], y: &mut [f32], n: usize, cin: usize, out: usize) {
+    assert_eq!(x.len(), n * cin);
+    assert_eq!(w.len(), out * cin);
+    assert_eq!(y.len(), n * out);
+    for i in 0..n {
+        let xi = &x[i * cin..(i + 1) * cin];
+        let yi = &mut y[i * out..(i + 1) * out];
+        for o in 0..out {
+            yi[o] = dot(xi, &w[o * cin..(o + 1) * cin]);
+        }
+    }
+}
+
+/// Unrolled dot product with 4 independent accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// y += alpha * x (axpy)
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// In-place softmax over the last axis of `[rows, cols]`.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// RMSNorm: x * rsqrt(mean(x²) + eps) * w  (matches jax: eps inside sqrt)
+pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32], eps: f32) {
+    let d = x.len();
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / d as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for i in 0..d {
+        out[i] = x[i] * r * w[i];
+    }
+}
+
+/// LayerNorm with weight and bias (population variance, like jnp.var).
+pub fn layernorm(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], eps: f32) {
+    let d = x.len() as f32;
+    let mu: f32 = x.iter().sum::<f32>() / d;
+    let var: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d;
+    let r = 1.0 / (var + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = (x[i] - mu) * r * w[i] + b[i];
+    }
+}
+
+/// SiLU (swish): x * sigmoid(x)
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// GELU, tanh approximation (the jax.nn.gelu default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// RoPE, half-split convention (mirror of `model.apply_rope`):
+/// `q` is one head `[head_dim]`; rotate pairs (i, i+half).
+pub fn rope_rotate(v: &mut [f32], pos: usize, theta: f32) {
+    let hd = v.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let x1 = v[i];
+        let x2 = v[i + half];
+        v[i] = x1 * cos - x2 * sin;
+        v[i + half] = x2 * cos + x1 * sin;
+    }
+}
+
+/// argmax over a slice.
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-softmax value of index `idx` over `x` (for likelihood scoring).
+pub fn log_softmax_at(x: &[f32], idx: usize) -> f32 {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse: f32 = x.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
+    x[idx] - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Pcg64::seeded(31);
+        for n in [0usize, 1, 7, 8, 9, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4 * (n.max(1) as f32));
+        }
+    }
+
+    #[test]
+    fn matmul_t_small() {
+        // x = [[1,2],[3,4]], w = [[1,0],[0,1],[1,1]] -> y = x·wᵀ
+        let x = [1., 2., 3., 4.];
+        let w = [1., 0., 0., 1., 1., 1.];
+        let mut y = [0f32; 6];
+        matmul_t(&x, &w, &mut y, 2, 2, 3);
+        assert_eq!(y, [1., 2., 3., 3., 4., 7.]);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [3.0f32, -3.0, 3.0, -3.0];
+        let w = [1.0f32; 4];
+        let mut out = [0f32; 4];
+        rmsnorm(&x, &w, &mut out, 0.0);
+        for v in out {
+            assert!((v.abs() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let w = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let mut out = [0f32; 4];
+        layernorm(&x, &w, &b, &mut out, 0.0);
+        let mu: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_is_identity() {
+        let mut rng = Pcg64::seeded(32);
+        let orig: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let mut v = orig.clone();
+        rope_rotate(&mut v, 0, 10_000.0);
+        assert_eq!(v, orig);
+        let mut v = orig.clone();
+        rope_rotate(&mut v, 17, 10_000.0);
+        let n0: f32 = orig.iter().map(|x| x * x).sum();
+        let n1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+        assert!(v != orig);
+    }
+
+    #[test]
+    fn activations_reference_values() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((silu(1.0) - 0.731_058_6).abs() < 1e-5);
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841_191_9).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158_808_1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn log_softmax_at_normalizes() {
+        let x = [0.5f32, 1.5, -0.5];
+        let total: f32 = (0..3).map(|i| log_softmax_at(&x, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,103 @@
+//! Owned row-major f32 tensor with light shape algebra.
+//!
+//! The native engine's hot loops operate on raw slices; `Tensor` carries
+//! shape metadata at module boundaries and for the eval harness.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape, data: vec![0.0; numel] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape, data: vec![v; numel] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != self.data.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Max |a − b| against another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        let r = t.reshape(vec![3, 2]).unwrap();
+        assert_eq!(r.shape(), &[3, 2]);
+        assert!(r.clone().reshape(vec![7]).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(vec![2, 2], vec![0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Property-based testing mini-framework (offline substitute for proptest).
+//!
+//! A [`Gen`] produces random values from a seeded [`Pcg64`]; [`check`]
+//! runs a property over N generated cases and, on failure, retries with a
+//! simple halving shrink over the generator's `size` parameter to report a
+//! smaller counterexample. Coordinator invariants and quantization
+//! round-trip properties use this from `rust/tests/`.
+
+use crate::util::Pcg64;
+
+/// Generation context: RNG + a size bound generators scale with.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1).min(self.size.max(1)))
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_normal(&mut self, scale: f32) -> f32 {
+        (self.rng.normal() as f32) * scale
+    }
+
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_normal(scale)).collect()
+    }
+
+    pub fn vec_u32(&mut self, n: usize, below: usize) -> Vec<u32> {
+        (0..n).map(|_| self.rng.below(below) as u32).collect()
+    }
+
+    pub fn pick<'b, T>(&mut self, xs: &'b [T]) -> &'b T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { seed: u64, size: usize, message: String },
+}
+
+/// Run `prop` over `cases` generated inputs. The property returns
+/// `Err(message)` to signal failure; panics are not caught (the test
+/// harness reports them with the seed printed beforehand).
+pub fn check<P>(name: &str, cases: usize, prop: P) -> PropResult
+where
+    P: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed =
+        0xfb90_u64 ^ name.bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut size = 2 + case % 64;
+        let mut rng = Pcg64::seeded(seed);
+        let mut g = Gen { rng: &mut rng, size };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: retry with halved sizes on the same seed
+            let mut best = (size, msg);
+            while size > 2 {
+                size /= 2;
+                let mut rng = Pcg64::seeded(seed);
+                let mut g = Gen { rng: &mut rng, size };
+                match prop(&mut g) {
+                    Err(m) => best = (size, m),
+                    Ok(()) => break,
+                }
+            }
+            return PropResult::Failed { seed, size: best.0, message: best.1 };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Assert helper: unwraps a [`PropResult`] into a test failure message.
+#[macro_export]
+macro_rules! prop_assert_ok {
+    ($res:expr) => {
+        match $res {
+            $crate::testing::PropResult::Ok { .. } => {}
+            $crate::testing::PropResult::Failed { seed, size, message } => {
+                panic!("property failed (seed={seed}, size={size}): {message}")
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let r = check("commutes", 50, |g| {
+            let a = g.f32_normal(1.0);
+            let b = g.f32_normal(1.0);
+            if (a + b - (b + a)).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err("addition does not commute?!".into())
+            }
+        });
+        assert!(matches!(r, PropResult::Ok { cases: 50 }));
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = check("always-fails", 5, |g| {
+            let n = g.usize_in(1, 100);
+            Err(format!("n={n}"))
+        });
+        match r {
+            PropResult::Failed { message, .. } => assert!(message.starts_with("n=")),
+            _ => panic!("expected failure"),
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Tiny leveled logger writing to stderr.
+//!
+//! Level is taken from `FBQ_LOG` (`error|warn|info|debug|trace`), default
+//! `info`. Offline substitute for `env_logger`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn start_time() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Current log level (lazy-initialized from `FBQ_LOG`).
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != u8::MAX {
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let lv = match std::env::var("FBQ_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+    start_time();
+    lv
+}
+
+/// Force a level (tests, CLI flags).
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+/// Emit a record if `lv` is enabled.
+pub fn log(lv: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if lv > level() {
+        return;
+    }
+    let tag = match lv {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let t = start_time().elapsed();
+    eprintln!("[{:>9.3}s {tag} {module}] {args}", t.as_secs_f64());
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_overrides() {
+        set_level(Level::Error);
+        assert_eq!(level(), Level::Error);
+        set_level(Level::Info);
+        assert_eq!(level(), Level::Info);
+    }
+}

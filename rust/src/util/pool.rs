@@ -1,0 +1,83 @@
+//! Minimal scoped thread pool (offline substitute for rayon).
+//!
+//! Used for data-parallel work outside the serving hot loop: batch
+//! evaluation, quantization sweeps and benchmark fan-out. The serving
+//! coordinator uses dedicated long-lived threads instead (see
+//! `coordinator::server`).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `f(i)` for `i in 0..n` on up to `threads` workers, returning results
+/// in index order. Panics in workers are propagated.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = Arc::new(Mutex::new(0usize));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let f = &f;
+            s.spawn(move || loop {
+                let i = {
+                    let mut g = next.lock().unwrap();
+                    if *g >= n {
+                        return;
+                    }
+                    let i = *g;
+                    *g += 1;
+                    i
+                };
+                let out = f(i);
+                if tx.send((i, out)).is_err() {
+                    return;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+        slots.into_iter().map(|s| s.expect("worker dropped result")).collect()
+    })
+}
+
+/// Default worker count: physical parallelism, capped.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = parallel_map(3, 64, |i| i);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,129 @@
+//! Timing helpers and latency histograms for the metrics pipeline.
+
+use std::time::{Duration, Instant};
+
+/// Stopwatch with a readable report.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Online latency recorder: stores raw samples (bounded) plus running
+/// aggregates, reports mean / p50 / p95 / p99 / max.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+    count: usize,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.count += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+        // Keep raw samples bounded; reservoir-free cap is fine for the
+        // benchmark scale used here.
+        if self.samples_us.len() < 1_000_000 {
+            self.samples_us.push(us);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        super::percentile(&self.samples_us, p)
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
+            self.count,
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.max_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_aggregate() {
+        let mut s = LatencyStats::new();
+        for us in [10.0, 20.0, 30.0, 40.0, 100.0] {
+            s.record_us(us);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean_us() - 40.0).abs() < 1e-9);
+        assert_eq!(s.max_us(), 100.0);
+        assert_eq!(s.percentile_us(50.0), 30.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyStats::new();
+        a.record_us(1.0);
+        let mut b = LatencyStats::new();
+        b.record_us(3.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.mean_us(), 2.0);
+    }
+}

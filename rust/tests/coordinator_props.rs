@@ -1,0 +1,194 @@
+//! Property-based tests of coordinator invariants: batching, routing,
+//! and generation-state management.
+
+use fbquant::coordinator::backend::{Backend, BatchState};
+use fbquant::coordinator::batcher::{Batcher, BatcherConfig};
+use fbquant::coordinator::request::GenRequest;
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::model::Config;
+use fbquant::prop_assert_ok;
+use fbquant::testing::check;
+use fbquant::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn tiny_cfg(vocab: usize, max_seq: usize) -> Config {
+    Config::from_json(
+        &Json::parse(&format!(
+            r#"{{"name":"fake","family":"llamoid","d_model":8,"n_layers":1,
+                 "n_heads":2,"d_ff":8,"vocab":{vocab},"max_seq":{max_seq}}}"#
+        ))
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+/// Deterministic fake backend: next token = (last + 1) mod vocab.
+struct CountingBackend {
+    cfg: Config,
+    prefills: usize,
+    decodes: usize,
+}
+
+impl CountingBackend {
+    fn new(vocab: usize, max_seq: usize) -> Self {
+        CountingBackend { cfg: tiny_cfg(vocab, max_seq), prefills: 0, decodes: 0 }
+    }
+
+    fn logits_for(&self, last: u32) -> Vec<f32> {
+        let mut l = vec![0f32; self.cfg.vocab];
+        l[(last as usize + 1) % self.cfg.vocab] = 9.0;
+        l
+    }
+}
+
+impl Backend for CountingBackend {
+    fn cfg(&self) -> &Config {
+        &self.cfg
+    }
+
+    fn max_batch(&self) -> usize {
+        4
+    }
+
+    fn prefill(&mut self, prompts: &[&[u32]], _capacity: usize) -> anyhow::Result<(BatchState, Vec<Vec<f32>>)> {
+        self.prefills += 1;
+        let pos = prompts[0].len();
+        let logits = prompts.iter().map(|p| self.logits_for(*p.last().unwrap())).collect();
+        Ok((BatchState::Native { kvs: Vec::new(), pos }, logits))
+    }
+
+    fn decode(&mut self, state: &mut BatchState, tokens: &[u32]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.decodes += 1;
+        if let BatchState::Native { pos, .. } = state {
+            *pos += 1;
+        }
+        Ok(tokens.iter().map(|&t| self.logits_for(t)).collect())
+    }
+
+    fn name(&self) -> String {
+        "counting".into()
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_and_aligns_requests() {
+    prop_assert_ok!(check("batcher_conserve", 100, |g| {
+        let n = g.usize_range(1, 24);
+        let max_queue = 64;
+        let mut batcher = Batcher::new(BatcherConfig {
+            batch_sizes: vec![1, 4],
+            max_wait: Duration::from_millis(0),
+            max_queue,
+        });
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let plen = *g.pick(&[8usize, 16, 32]);
+            let req = GenRequest::new(i as u64 + 1, vec![1; plen], 4);
+            ids.push(req.id);
+            if !batcher.submit(req) {
+                return Err("queue rejected under capacity".into());
+            }
+        }
+        let mut seen = Vec::new();
+        let deadline = Instant::now() + Duration::from_millis(10);
+        while !batcher.is_empty() {
+            let Some(batch) = batcher.next_batch(deadline) else {
+                return Err("batcher stalled with non-empty queue".into());
+            };
+            if batch.requests.is_empty() || batch.requests.len() > 4 {
+                return Err(format!("bad batch size {}", batch.requests.len()));
+            }
+            if batch.capacity < batch.requests.len() {
+                return Err("capacity below occupancy".into());
+            }
+            let plen = batch.requests[0].prompt.len();
+            if batch.requests.iter().any(|r| r.prompt.len() != plen) {
+                return Err("batch not prompt-length aligned".into());
+            }
+            seen.extend(batch.requests.iter().map(|r| r.id));
+        }
+        seen.sort_unstable();
+        let mut want = ids.clone();
+        want.sort_unstable();
+        if seen != want {
+            return Err("requests lost or duplicated by batching".into());
+        }
+        Ok(())
+    }));
+}
+
+#[test]
+fn prop_closed_loop_serves_every_request_exactly_once() {
+    prop_assert_ok!(check("closed_loop", 30, |g| {
+        let n = g.usize_range(1, 10);
+        let vocab = 16usize;
+        let mut backend = CountingBackend::new(vocab, 256);
+        let mut requests = Vec::new();
+        for i in 0..n {
+            let plen = *g.pick(&[4usize, 8]);
+            let gen = g.usize_range(1, 6);
+            let prompt = g.vec_u32(plen, vocab);
+            requests.push(GenRequest::new(i as u64 + 1, prompt, gen));
+        }
+        let expected: Vec<(u64, usize, u32)> = requests
+            .iter()
+            .map(|r| (r.id, r.max_new_tokens, *r.prompt.last().unwrap()))
+            .collect();
+        let (responses, metrics) =
+            Coordinator::run_closed_loop(&mut backend, requests, &CoordinatorConfig::default())
+                .map_err(|e| e.to_string())?;
+        if responses.len() != n {
+            return Err(format!("{} responses for {n} requests", responses.len()));
+        }
+        if metrics.requests_done != n {
+            return Err("metrics lost requests".into());
+        }
+        for (r, (id, want_len, last)) in responses.iter().zip(expected) {
+            if r.id != id {
+                return Err("response order broken".into());
+            }
+            if r.tokens.len() != want_len {
+                return Err(format!("id {id}: {} tokens, wanted {want_len}", r.tokens.len()));
+            }
+            // the counting backend generates last+1, last+2, ...
+            for (k, &t) in r.tokens.iter().enumerate() {
+                if t != ((last as usize + k + 1) % vocab) as u32 {
+                    return Err("generation sequence corrupted by batching".into());
+                }
+            }
+        }
+        Ok(())
+    }));
+}
+
+#[test]
+fn prop_stop_token_halts_generation() {
+    prop_assert_ok!(check("stop_token", 30, |g| {
+        let vocab = 8usize;
+        let mut backend = CountingBackend::new(vocab, 256);
+        let start = g.rng.below(vocab) as u32;
+        let stop = ((start as usize + 3) % vocab) as u32; // reached after 3 tokens
+        let mut req = GenRequest::new(1, vec![start], 20);
+        req.stop_token = Some(stop);
+        let (responses, _) =
+            Coordinator::run_closed_loop(&mut backend, vec![req], &CoordinatorConfig::default())
+                .map_err(|e| e.to_string())?;
+        let toks = &responses[0].tokens;
+        if toks.len() != 3 {
+            return Err(format!("expected 3 tokens up to stop, got {}", toks.len()));
+        }
+        if *toks.last().unwrap() != stop {
+            return Err("did not stop on stop token".into());
+        }
+        Ok(())
+    }));
+}
+
+#[test]
+fn validate_batch_rejects_overlong_requests() {
+    let cfg = tiny_cfg(16, 32);
+    let ok = GenRequest::new(1, vec![1; 16], 8);
+    let too_long = GenRequest::new(2, vec![1; 30], 8);
+    assert!(fbquant::coordinator::backend::validate_batch(&cfg, &[ok]).is_ok());
+    assert!(fbquant::coordinator::backend::validate_batch(&cfg, &[too_long]).is_err());
+}

@@ -1,0 +1,105 @@
+//! Cross-language format tests: the rust `.fbqw` reader against archives
+//! written by python (and the rust writer against the rust reader).
+
+use fbquant::model::WeightStore;
+use fbquant::quant::formats::{f32_bytes, Archive, Dtype};
+use fbquant::quant::pack::{pack_codes, unpack_codes};
+use fbquant::util::json::Json;
+use fbquant::util::Pcg64;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let root = fbquant::artifacts_dir();
+    root.join("data/vocab.json").exists().then_some(root)
+}
+
+#[test]
+fn reads_python_written_corpus_archive() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let arc = Archive::load(&root.join("data/corpus_val.fbqw")).unwrap();
+    assert_eq!(arc.meta_str("kind"), Some("tokens"));
+    let toks = arc.get("tokens").unwrap();
+    assert_eq!(toks.dtype, Dtype::U8);
+    assert!(toks.numel() > 10_000);
+    // byte corpus is printable-ish ASCII + newlines
+    let sample = toks.as_u8().unwrap();
+    assert!(sample[..1000].iter().all(|&b| b == b'\n' || (0x20..0x7f).contains(&b)));
+}
+
+#[test]
+fn loads_fp_and_quant_checkpoints_consistently() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let fp = WeightStore::load(&WeightStore::path_for(&root, "llamoid-tiny", "fp", 4)).unwrap();
+    assert!(!fp.is_quantized());
+    assert_eq!(fp.cfg.d_model, 128);
+
+    let q = WeightStore::load(&WeightStore::path_for(&root, "llamoid-tiny", "fbquant", 4)).unwrap();
+    assert!(q.is_quantized());
+    assert_eq!(q.bits, 4);
+    assert_eq!(q.group, 128);
+
+    // quantized effective weights approximate the fp weights
+    for prefix in ["l0.q", "l1.down"] {
+        let wf = match fp.linear(prefix).unwrap() {
+            fbquant::model::LinearWeights::Dense { w, .. } => w.clone(),
+            _ => panic!("fp layer should be dense"),
+        };
+        let wq = q.linear(prefix).unwrap().effective_dense();
+        assert_eq!(wf.len(), wq.len());
+        let rel: f64 = {
+            let num: f64 = wf.iter().zip(&wq).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            let den: f64 = wf.iter().map(|&a| (a as f64).powi(2)).sum();
+            (num / den).sqrt()
+        };
+        assert!(rel < 0.2, "{prefix}: relative error {rel}");
+    }
+
+    // quantized checkpoints are materially smaller
+    assert!(q.resident_bytes() < fp.resident_bytes());
+}
+
+#[test]
+fn python_packed_codes_unpack_in_rust() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let arc = Archive::load(&WeightStore::path_for(&root, "llamoid-tiny", "rtn", 3)).unwrap();
+    let packed_t = arc.get("l0.q/codes_packed").unwrap();
+    let (out, words) = (packed_t.shape[0], packed_t.shape[1]);
+    let packed = packed_t.as_u32().unwrap();
+    let codes = unpack_codes(&packed, out, words * 8);
+    // 3-bit codes stay in [0, 7]
+    assert!(codes.iter().all(|&c| (0..=7).contains(&c)));
+    // repack round-trips
+    assert_eq!(pack_codes(&codes, out, words * 8), packed);
+}
+
+#[test]
+fn rust_writer_reader_roundtrip_with_meta() {
+    let dir = std::env::temp_dir().join("fbq_cross_format");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rt.fbqw");
+    let mut rng = Pcg64::seeded(77);
+    let data: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+    let meta = Json::obj(vec![
+        ("kind", Json::from("weights")),
+        ("bits", Json::from(3usize)),
+        ("nested", Json::obj(vec![("x", Json::from(true))])),
+    ]);
+    Archive::write(
+        &path,
+        &[("w".to_string(), Dtype::F32, vec![10, 100], f32_bytes(&data))],
+        &meta,
+    )
+    .unwrap();
+    let arc = Archive::load(&path).unwrap();
+    assert_eq!(arc.get("w").unwrap().as_f32().unwrap(), data);
+    assert_eq!(arc.meta_usize("bits"), Some(3));
+    assert_eq!(arc.meta.get("nested").unwrap().get("x").unwrap().as_bool(), Some(true));
+}

@@ -1,0 +1,112 @@
+//! Cross-language integration: the PJRT runtime executing AOT artifacts
+//! must reproduce (a) the golden JAX logits from the selftest archive and
+//! (b) the native rust engine, on both the float and quantized paths.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::eval::scorer::{NativeScorer, PjrtScorer, Scorer};
+use fbquant::model::WeightStore;
+use fbquant::quant::formats::Archive;
+use fbquant::runtime::ExecRegistry;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let root = fbquant::artifacts_dir();
+    root.join("manifest.json").exists().then_some(root)
+}
+
+#[test]
+fn pjrt_fp_matches_jax_golden_and_native() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let selftest = Archive::load(&root.join("hlo/selftest.fbqw")).unwrap();
+    let tokens: Vec<u32> = selftest.get("tokens").unwrap().as_i32().unwrap()
+        .iter().map(|&t| t as u32).collect();
+    let golden = selftest.get("logits").unwrap().as_f32().unwrap();
+    let model = selftest.meta_str("model").unwrap().to_string();
+
+    let store = WeightStore::load(&WeightStore::path_for(&root, &model, "fp", 4)).unwrap();
+    let mut reg = ExecRegistry::open(&root).unwrap();
+    let mut pjrt = PjrtScorer::new(&mut reg, &store).unwrap();
+    let logits = pjrt.logits(&tokens).unwrap();
+    assert_eq!(logits.len(), golden.len());
+    let max_diff = logits
+        .iter()
+        .zip(&golden)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "pjrt vs jax golden: max diff {max_diff}");
+
+    // native engine against the same golden
+    let mut native = NativeScorer::new(NativeEngine::from_store(&store, SubMode::Fused).unwrap());
+    let nlogits = native.logits(&tokens).unwrap();
+    let max_diff_native = nlogits
+        .iter()
+        .zip(&golden)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff_native < 2e-2, "native vs jax golden: max diff {max_diff_native}");
+}
+
+#[test]
+fn pjrt_quantized_matches_native_quantized() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let store =
+        WeightStore::load(&WeightStore::path_for(&root, "llamoid-tiny", "fbquant", 4)).unwrap();
+    let tokens: Vec<u32> = b"the salty crab drifts in the sea.".iter().map(|&b| b as u32).collect();
+
+    let mut reg = ExecRegistry::open(&root).unwrap();
+    let mut pjrt = PjrtScorer::new(&mut reg, &store).unwrap();
+    let lp = pjrt.logits(&tokens).unwrap();
+
+    let mut native = NativeScorer::new(NativeEngine::from_store(&store, SubMode::Fused).unwrap());
+    let ln = native.logits(&tokens).unwrap();
+
+    let max_diff = lp.iter().zip(&ln).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    assert!(max_diff < 2e-2, "pjrt-q vs native-q: max diff {max_diff}");
+}
+
+#[test]
+fn pjrt_kernel_artifacts_fused_equals_unfused() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    use fbquant::runtime::exec::Value;
+    use fbquant::util::Pcg64;
+
+    let mut reg = ExecRegistry::open(&root).unwrap();
+    let fused = reg.load("kernel_fused_m32").unwrap();
+    let unfused = reg.load("kernel_unfused_m32").unwrap();
+    let spec = &fused.spec;
+    let (m, k, n, r) = (32usize, 512usize, 512usize, 64usize);
+    assert_eq!(spec.inputs[0].shape, vec![m, k]);
+
+    let mut rng = Pcg64::seeded(99);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let codes: Vec<i32> = (0..n * k).map(|_| rng.below(16) as i32).collect();
+    let gk = k / 128;
+    let scales: Vec<f32> = (0..n * gk).map(|_| 0.01 + rng.next_f32() * 0.05).collect();
+    let zeros: Vec<f32> = (0..n * gk).map(|_| rng.below(16) as f32).collect();
+    let a: Vec<f32> = (0..r * k).map(|_| rng.normal() as f32 * 0.02).collect();
+    let b: Vec<f32> = (0..n * r).map(|_| rng.normal() as f32 * 0.02).collect();
+    let data = vec![
+        Value::F32(x),
+        Value::I32(codes),
+        Value::F32(scales),
+        Value::F32(zeros),
+        Value::F32(a),
+        Value::F32(b),
+    ];
+    let yf = fused.run(&data, &[]).unwrap();
+    let yu = unfused.run(&data, &[]).unwrap();
+    let yf = yf[0].as_f32().unwrap();
+    let yu = yu[0].as_f32().unwrap();
+    let max_diff = yf.iter().zip(yu).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "fused vs unfused kernel artifacts: {max_diff}");
+}

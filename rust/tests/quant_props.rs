@@ -1,0 +1,167 @@
+//! Property-based tests over the quantization substrate (the in-repo
+//! proptest substitute — see `fbquant::testing`).
+
+use fbquant::prop_assert_ok;
+use fbquant::quant::groupwise;
+use fbquant::quant::pack::{pack_codes, unpack_codes};
+use fbquant::quant::subbranch::{fbq_bound, fbq_reconstruct, SubBranch};
+use fbquant::testing::check;
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    prop_assert_ok!(check("pack_roundtrip", 200, |g| {
+        let rows = g.usize_range(1, 12);
+        let cin = 8 * g.usize_range(1, 16);
+        let codes: Vec<i8> = (0..rows * cin).map(|_| g.rng.below(16) as i8).collect();
+        let packed = pack_codes(&codes, rows, cin);
+        if unpack_codes(&packed, rows, cin) == codes {
+            Ok(())
+        } else {
+            Err(format!("roundtrip failed rows={rows} cin={cin}"))
+        }
+    }));
+}
+
+#[test]
+fn prop_rtn_error_bounded() {
+    prop_assert_ok!(check("rtn_bound", 100, |g| {
+        let out = g.usize_range(1, 8);
+        let group = *g.pick(&[8usize, 16, 32]);
+        let cin = group * g.usize_range(1, 4);
+        let bits = *g.pick(&[2u8, 3, 4]);
+        let scale = *g.pick(&[0.1f32, 1.0, 10.0]);
+        let w = g.vec_f32(out * cin, scale);
+        let p = groupwise::quant_params(&w, out, cin, bits, group);
+        let wq = groupwise::dequantize(&groupwise::quantize(&w, out, cin, &p), out, cin, &p);
+        let ngroups = cin / group;
+        for r in 0..out {
+            for c in 0..cin {
+                let s = p.scales[r * ngroups + c / group];
+                let err = (w[r * cin + c] - wq[r * cin + c]).abs();
+                if err > s / 2.0 + 1e-5 {
+                    return Err(format!("bits={bits} err={err} > s/2={}", s / 2.0));
+                }
+            }
+        }
+        Ok(())
+    }));
+}
+
+#[test]
+fn prop_fbq_bound_invariant_to_sigma_magnitude() {
+    // The paper's Eq. 13 as a property: no matter how wild Σ is, the
+    // feedback reconstruction stays within the quantizer grid bound.
+    prop_assert_ok!(check("fbq_bound", 60, |g| {
+        let out = g.usize_range(1, 6);
+        let group = 16usize;
+        let cin = group * g.usize_range(1, 3);
+        let rank = g.usize_range(1, 4);
+        let bits = *g.pick(&[2u8, 3, 4]);
+        let sigma_scale = *g.pick(&[0.01f32, 0.5, 5.0, 100.0]);
+        let w = g.vec_f32(out * cin, 1.0);
+        let a = g.vec_f32(rank * cin, sigma_scale);
+        let b = g.vec_f32(out * rank, sigma_scale);
+        let sigma = SubBranch::new(a, b, rank, cin, out).dense_sigma();
+        let wf = fbq_reconstruct(&w, &sigma, out, cin, bits, group);
+        let bound = fbq_bound(&w, &sigma, out, cin, bits, group);
+        for i in 0..w.len() {
+            let dev = (w[i] - wf[i]).abs();
+            if dev > bound[i] + 1e-4 {
+                return Err(format!(
+                    "dev {dev} > bound {} (sigma_scale={sigma_scale}, bits={bits})",
+                    bound[i]
+                ));
+            }
+        }
+        Ok(())
+    }));
+}
+
+#[test]
+fn prop_quantized_gemv_matches_effective_dense() {
+    use fbquant::engine::kernels::{QuantLinear, SubMode, Traffic, Workspace};
+
+    prop_assert_ok!(check("qgemv_dense", 40, |g| {
+        let group = 16usize;
+        let cin = group * g.usize_range(1, 3);
+        let out = 8 * g.usize_range(1, 3);
+        let rank = g.usize_range(1, 4);
+        let bits = *g.pick(&[3u8, 4]);
+        let with_sub = g.bool();
+        let with_cs = g.bool();
+
+        let w = g.vec_f32(out * cin, 0.5);
+        let p = groupwise::quant_params(&w, out, cin, bits, group);
+        let codes = groupwise::quantize(&w, out, cin, &p);
+        let a = with_sub.then(|| g.vec_f32(rank * cin, 0.05));
+        let b = with_sub.then(|| g.vec_f32(out * rank, 0.05));
+        let cs: Option<Vec<f32>> =
+            with_cs.then(|| (0..cin).map(|_| 0.5 + g.rng.next_f32()).collect());
+
+        let ql = QuantLinear {
+            out,
+            cin,
+            bits,
+            group,
+            packed: pack_codes(&codes, out, cin),
+            scales: p.scales.clone(),
+            zeros: p.zeros.clone(),
+            rank: if with_sub { rank } else { 0 },
+            a: a.clone(),
+            b: b.clone(),
+            col_scale: cs.clone(),
+            bias: None,
+        };
+        // effective dense weight
+        let mut wd = groupwise::dequantize(&codes, out, cin, &p);
+        if let (Some(a), Some(b)) = (&a, &b) {
+            let sigma = SubBranch::new(a.clone(), b.clone(), rank, cin, out).dense_sigma();
+            for (x, s) in wd.iter_mut().zip(sigma) {
+                *x += s;
+            }
+        }
+        if let Some(cs) = &cs {
+            for r in 0..out {
+                for c in 0..cin {
+                    wd[r * cin + c] *= cs[c];
+                }
+            }
+        }
+        let x = g.vec_f32(cin, 1.0);
+        let mut ws = Workspace::default();
+        let mut t = Traffic::default();
+        for mode in [SubMode::Fused, SubMode::Unfused] {
+            let mut y = vec![0f32; out];
+            ql.gemv(&x, &mut y, mode, &mut ws, &mut t);
+            for o in 0..out {
+                let want: f32 = (0..cin).map(|c| wd[o * cin + c] * x[c]).sum();
+                if (y[o] - want).abs() > 2e-3 {
+                    return Err(format!("{mode:?} o={o}: {} vs {want}", y[o]));
+                }
+            }
+        }
+        Ok(())
+    }));
+}
+
+#[test]
+fn prop_dequantize_quantize_fixpoint() {
+    // quantize(dequantize(codes)) == codes: dequantized values sit exactly
+    // on grid points.
+    prop_assert_ok!(check("quant_fixpoint", 60, |g| {
+        let group = 16usize;
+        let out = g.usize_range(1, 6);
+        let cin = group * g.usize_range(1, 3);
+        let bits = *g.pick(&[2u8, 3, 4]);
+        let w = g.vec_f32(out * cin, 1.0);
+        let p = groupwise::quant_params(&w, out, cin, bits, group);
+        let codes = groupwise::quantize(&w, out, cin, &p);
+        let wq = groupwise::dequantize(&codes, out, cin, &p);
+        let codes2 = groupwise::quantize(&wq, out, cin, &p);
+        if codes == codes2 {
+            Ok(())
+        } else {
+            Err("re-quantization moved grid points".into())
+        }
+    }));
+}

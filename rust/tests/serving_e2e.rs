@@ -1,0 +1,167 @@
+//! End-to-end serving tests on real checkpoints (native backend; the PJRT
+//! generation path is covered too when artifacts are present).
+
+use fbquant::coordinator::backend::{Backend, NativeBackend, PjrtBackend};
+use fbquant::coordinator::request::GenRequest;
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::model::{ByteTokenizer, WeightStore};
+use fbquant::runtime::ExecRegistry;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let root = fbquant::artifacts_dir();
+    root.join("manifest.json").exists().then_some(root)
+}
+
+fn native_backend(root: &std::path::Path, method: &str, bits: u8) -> NativeBackend {
+    let store =
+        WeightStore::load(&WeightStore::path_for(root, "llamoid-tiny", method, bits)).unwrap();
+    NativeBackend::new(NativeEngine::from_store(&store, SubMode::Fused).unwrap(), "e2e")
+}
+
+#[test]
+fn greedy_generation_is_deterministic_and_onpolicy() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let tok = ByteTokenizer::default();
+    let mut backend = native_backend(&root, "fbquant", 4);
+    let prompt = tok.encode("= sea =\nthe salty crab ");
+    let run = |backend: &mut NativeBackend| {
+        let req = GenRequest::new(1, prompt.clone(), 24);
+        let (mut r, _) =
+            Coordinator::run_closed_loop(backend, vec![req], &CoordinatorConfig::default()).unwrap();
+        r.remove(0).tokens
+    };
+    let a = run(&mut backend);
+    let b = run(&mut backend);
+    assert_eq!(a, b, "greedy generation must be deterministic");
+    assert_eq!(a.len(), 24);
+    // trained on the corpus grammar: output is printable ASCII
+    let text = tok.decode(&a);
+    assert!(
+        text.bytes().all(|c| c == b'\n' || (0x20..0x7f).contains(&c)),
+        "degenerate output: {text:?}"
+    );
+}
+
+#[test]
+fn batched_generation_matches_single_request() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let tok = ByteTokenizer::default();
+    let mut backend = native_backend(&root, "rtn", 4);
+    let prompts = [
+        tok.encode("the green fox rests "),
+        tok.encode("the busy tram turns "),
+        tok.encode("the soft drum calls "),
+    ];
+    // singles
+    let mut singles = Vec::new();
+    for p in &prompts {
+        let req = GenRequest::new(1, p.clone(), 12);
+        let (mut r, _) =
+            Coordinator::run_closed_loop(&mut backend, vec![req], &CoordinatorConfig::default())
+                .unwrap();
+        singles.push(r.remove(0).tokens);
+    }
+    // batch (same prompt length => one aligned batch)
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| GenRequest::new(i as u64 + 1, p.clone(), 12))
+        .collect();
+    let (responses, metrics) =
+        Coordinator::run_closed_loop(&mut backend, reqs, &CoordinatorConfig::default()).unwrap();
+    assert_eq!(metrics.batches_formed, 1, "equal-length prompts must batch together");
+    for (r, single) in responses.iter().zip(&singles) {
+        assert_eq!(&r.tokens, single, "batching changed greedy output");
+    }
+}
+
+#[test]
+fn pjrt_generation_agrees_with_native() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let tok = ByteTokenizer::default();
+    let store =
+        WeightStore::load(&WeightStore::path_for(&root, "llamoid-tiny", "fbquant", 4)).unwrap();
+    // prompt length 32 = one t32 prefill chunk
+    let prompt = tok.encode("the salty crab drifts in the sea");
+    assert_eq!(prompt.len(), 32);
+
+    let mut native = native_backend(&root, "fbquant", 4);
+    let req = GenRequest::new(1, prompt.clone(), 16);
+    let (mut rn, _) =
+        Coordinator::run_closed_loop(&mut native, vec![req], &CoordinatorConfig::default()).unwrap();
+    let native_tokens = rn.remove(0).tokens;
+
+    let mut reg = ExecRegistry::open(&root).unwrap();
+    let mut pjrt = PjrtBackend::new(&mut reg, &store, &[1, 4], "e2e").unwrap();
+    let req = GenRequest::new(1, prompt.clone(), 16);
+    let (mut rp, _) =
+        Coordinator::run_closed_loop(&mut pjrt, vec![req], &CoordinatorConfig::default()).unwrap();
+    let pjrt_tokens = rp.remove(0).tokens;
+
+    // greedy decoding over near-identical logits: allow a small prefix
+    // divergence budget (float-order differences can flip near-ties)
+    let agree = native_tokens
+        .iter()
+        .zip(&pjrt_tokens)
+        .take_while(|(a, b)| a == b)
+        .count();
+    assert!(
+        agree >= 12,
+        "pjrt vs native diverged early: {agree}/16\n native: {:?}\n pjrt: {:?}",
+        tok.decode(&native_tokens),
+        tok.decode(&pjrt_tokens)
+    );
+
+    // batched pjrt decode (capacity 4, 2 occupied) also works
+    let reqs: Vec<GenRequest> = (0..2)
+        .map(|i| GenRequest::new(i as u64 + 1, prompt.clone(), 8))
+        .collect();
+    let (responses, _) =
+        Coordinator::run_closed_loop(&mut pjrt, reqs, &CoordinatorConfig::default()).unwrap();
+    assert_eq!(responses.len(), 2);
+    assert_eq!(responses[0].tokens, responses[1].tokens, "identical prompts, identical greedy output");
+}
+
+#[test]
+fn spawned_coordinator_roundtrip() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let store =
+        WeightStore::load(&WeightStore::path_for(&root, "llamoid-tiny", "rtn", 4)).unwrap();
+    let handle = Coordinator::spawn(
+        move || -> anyhow::Result<Box<dyn Backend>> {
+            Ok(Box::new(NativeBackend::new(
+                NativeEngine::from_store(&store, SubMode::None)?,
+                "spawned",
+            )))
+        },
+        CoordinatorConfig::default(),
+    );
+    let tok = ByteTokenizer::default();
+    let rxs: Vec<_> = (0..5)
+        .map(|i| {
+            let mut req = GenRequest::new(0, tok.encode("the quiet owl waits "), 8);
+            req.params.temperature = 0.5;
+            req.params.seed = i;
+            handle.submit(req)
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(r.tokens.len(), 8);
+    }
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(metrics.requests_done, 5);
+}
