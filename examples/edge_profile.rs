@@ -6,7 +6,7 @@
 //! cargo run --release --example edge_profile -- [model]
 //! ```
 
-use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
 use fbquant::engine::{NativeEngine, SubMode};
 use fbquant::eval::data::TokenStream;
 use fbquant::model::WeightStore;
@@ -46,13 +46,14 @@ fn main() -> anyhow::Result<()> {
         let mut backend = NativeBackend::new(engine, &name);
 
         let t0 = Instant::now();
-        let (mut state, logits) = backend.prefill(&[&prompt], 1)?;
+        let mut state = backend.open_batch(1)?;
+        let logits = backend.prefill_slot(&mut state, 0, &prompt)?;
         let ttft = t0.elapsed().as_secs_f64() * 1e3;
         backend.reset_traffic();
-        let mut tok = fbquant::tensor::ops::argmax(&logits[0]) as u32;
+        let mut tok = fbquant::tensor::ops::argmax(&logits) as u32;
         let td = Instant::now();
         for _ in 0..decode {
-            let lg = backend.decode(&mut state, &[tok])?;
+            let lg = backend.decode(&mut state, &[SlotToken { slot: 0, token: tok }])?;
             tok = fbquant::tensor::ops::argmax(&lg[0]) as u32;
         }
         let tps = decode as f64 / td.elapsed().as_secs_f64();

@@ -1,13 +1,20 @@
 //! Serving under concurrent load: spawn the coordinator worker, submit a
-//! Poisson-arrival workload, report latency and throughput percentiles.
+//! Poisson-arrival workload, consume the per-request event streams and
+//! report latency, throughput and slot-occupancy percentiles.
+//!
+//! Tokens arrive incrementally (continuous batching streams every sampled
+//! token), so the client-side time-to-first-token is measured from the
+//! first `Token` event — not from the final response.
 //!
 //! ```sh
 //! cargo run --release --example serve_batch -- [requests] [rate_rps]
 //! ```
 
-use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::coordinator::request::GenEvent;
 use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
 use fbquant::coordinator::workload::{generate, WorkloadConfig};
+use fbquant::coordinator::Backend;
+use fbquant::coordinator::NativeBackend;
 use fbquant::engine::{NativeEngine, SubMode};
 use fbquant::eval::data::TokenStream;
 use fbquant::model::WeightStore;
@@ -49,22 +56,51 @@ fn main() -> anyhow::Result<()> {
     for (req, arrival) in workload.requests.into_iter().zip(workload.arrivals) {
         std::thread::sleep(arrival.saturating_sub(prev));
         prev = arrival;
-        receivers.push(handle.submit(req));
+        receivers.push((std::time::Instant::now(), handle.submit(req)));
     }
+    let mut client_ttfts = Vec::new();
     let mut ttfts = Vec::new();
     let mut e2es = Vec::new();
-    for rx in receivers {
-        let r = rx.recv()?;
-        ttfts.push(r.ttft_us / 1e3);
-        e2es.push(r.total_us / 1e3);
+    for (submitted, rx) in receivers {
+        let mut first_token: Option<f64> = None;
+        for ev in rx {
+            match ev {
+                GenEvent::Token { .. } => {
+                    if first_token.is_none() {
+                        first_token = Some(submitted.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+                GenEvent::Done(r) => {
+                    ttfts.push(r.ttft_us / 1e3);
+                    e2es.push(r.total_us / 1e3);
+                    break;
+                }
+                GenEvent::Error { id, message } => {
+                    eprintln!("request {id} failed: {message}");
+                    break;
+                }
+            }
+        }
+        if let Some(ms) = first_token {
+            client_ttfts.push(ms);
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let metrics = handle.shutdown()?;
 
     println!("\n{}", metrics.report());
     println!(
-        "\nwall {:.2}s | ttft p50 {:.0}ms p95 {:.0}ms | e2e p50 {:.0}ms p95 {:.0}ms",
+        "\nwall {:.2}s | slot occupancy {:.2} (peak {}) | {} admissions into {} pool(s)",
         wall,
+        metrics.mean_slot_occupancy(),
+        metrics.peak_occupied,
+        metrics.admissions,
+        metrics.pools_opened,
+    );
+    println!(
+        "streamed ttft p50 {:.0}ms p95 {:.0}ms | ttft p50 {:.0}ms p95 {:.0}ms | e2e p50 {:.0}ms p95 {:.0}ms",
+        fbquant::util::percentile(&client_ttfts, 50.0),
+        fbquant::util::percentile(&client_ttfts, 95.0),
         fbquant::util::percentile(&ttfts, 50.0),
         fbquant::util::percentile(&ttfts, 95.0),
         fbquant::util::percentile(&e2es, 50.0),

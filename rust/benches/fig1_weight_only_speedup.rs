@@ -10,7 +10,7 @@ mod common;
 
 use common::*;
 use fbquant::bench::Bench;
-use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
 use fbquant::engine::{NativeEngine, SubMode};
 use fbquant::eval::data::TokenStream;
 use fbquant::model::WeightStore;
@@ -24,10 +24,11 @@ fn run_case(model: &str, method: &str, bits: u8, mode: SubMode,
     let bench = Bench::new(1, if fast() { 2 } else { 4 });
     let r = bench.run(method, || {
         backend.reset_traffic();
-        let (mut state, logits) = backend.prefill(&[prompt], 1).unwrap();
-        let mut tok = fbquant::tensor::ops::argmax(&logits[0]) as u32;
+        let mut state = backend.open_batch(1).unwrap();
+        let logits = backend.prefill_slot(&mut state, 0, prompt).unwrap();
+        let mut tok = fbquant::tensor::ops::argmax(&logits) as u32;
         for _ in 0..decode {
-            let lg = backend.decode(&mut state, &[tok]).unwrap();
+            let lg = backend.decode(&mut state, &[SlotToken { slot: 0, token: tok }]).unwrap();
             tok = fbquant::tensor::ops::argmax(&lg[0]) as u32;
         }
     });

@@ -1,5 +1,7 @@
 //! Fig. 7: token throughput (tk/s), batch 1 — FP vs INT4 vs INT4-Sub
-//! (naive sub-branch) vs INT4-FBQuant (fused).
+//! (naive sub-branch) vs INT4-FBQuant (fused) — plus the serving-side
+//! comparison the quantization exists for: continuous (slot-pool) vs
+//! batch-synchronous scheduling on a mixed-length closed-loop workload.
 //!
 //! Paper shape (Llama2-7B, RTX 3090, prefill 256 / decode 64):
 //! FP16 ≈ 48 tk/s, INT4-Sub ≈ 46 tk/s (sub-branch eats the quant win),
@@ -11,10 +13,13 @@
 mod common;
 
 use common::*;
-use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
+use fbquant::coordinator::request::{GenRequest, SamplingParams};
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
 use fbquant::engine::{NativeEngine, SubMode};
 use fbquant::eval::data::TokenStream;
 use fbquant::model::WeightStore;
+use fbquant::util::Pcg64;
 use std::time::Instant;
 
 fn throughput(model: &str, method: &str, bits: u8, mode: SubMode,
@@ -23,9 +28,10 @@ fn throughput(model: &str, method: &str, bits: u8, mode: SubMode,
     let engine = NativeEngine::from_store(&store, mode)?;
     let mut backend = NativeBackend::new(engine, model);
     // warmup
-    let (mut state, logits) = backend.prefill(&[prompt], 1)?;
-    let mut tok = fbquant::tensor::ops::argmax(&logits[0]) as u32;
-    let _ = backend.decode(&mut state, &[tok])?;
+    let mut state = backend.open_batch(1)?;
+    let logits = backend.prefill_slot(&mut state, 0, prompt)?;
+    let mut tok = fbquant::tensor::ops::argmax(&logits) as u32;
+    let _ = backend.decode(&mut state, &[SlotToken { slot: 0, token: tok }])?;
     drop(state);
 
     let mut best_decode_tps = 0f64;
@@ -33,13 +39,14 @@ fn throughput(model: &str, method: &str, bits: u8, mode: SubMode,
     let mut bytes_per_tok = 0f64;
     for _ in 0..reps {
         let t0 = Instant::now();
-        let (mut state, logits) = backend.prefill(&[prompt], 1)?;
+        let mut state = backend.open_batch(1)?;
+        let logits = backend.prefill_slot(&mut state, 0, prompt)?;
         let t_prefill = t0.elapsed().as_secs_f64();
-        tok = fbquant::tensor::ops::argmax(&logits[0]) as u32;
+        tok = fbquant::tensor::ops::argmax(&logits) as u32;
         backend.reset_traffic();
         let td = Instant::now();
         for _ in 0..decode {
-            let lg = backend.decode(&mut state, &[tok])?;
+            let lg = backend.decode(&mut state, &[SlotToken { slot: 0, token: tok }])?;
             tok = fbquant::tensor::ops::argmax(&lg[0]) as u32;
         }
         let t_decode = td.elapsed().as_secs_f64();
@@ -50,6 +57,74 @@ fn throughput(model: &str, method: &str, bits: u8, mode: SubMode,
             best_e2e_tps.max((prompt.len() + decode) as f64 / (t_prefill + t_decode));
     }
     Ok((best_decode_tps, best_e2e_tps, bytes_per_tok))
+}
+
+/// Mixed-length closed-loop workload: prompts of several lengths, varied
+/// generation budgets, all queued at t=0.
+fn serving_workload(stream: &TokenStream, n: usize) -> Vec<GenRequest> {
+    let mut rng = Pcg64::seeded(0x51077);
+    let toks = stream.tokens();
+    let lens = [16usize, 32, 64];
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n {
+        let plen = lens[rng.below(lens.len())];
+        let start = rng.below(toks.len().saturating_sub(plen + 1));
+        let prompt: Vec<u32> = toks[start..start + plen].iter().map(|&b| b as u32).collect();
+        // 8..=40 generated tokens: uneven finish times are what the
+        // continuous scheduler exploits
+        let gen = 8 + rng.below(33);
+        let mut req = GenRequest::new(i as u64 + 1, prompt, gen);
+        req.params = SamplingParams::default();
+        reqs.push(req);
+    }
+    reqs
+}
+
+/// Continuous vs batch-synchronous serving through the coordinator: same
+/// backend, same workload, only the scheduling discipline differs.
+fn serving_comparison(model: &str, stream: &TokenStream, n: usize) -> anyhow::Result<()> {
+    println!("\n=== serving: continuous (slot pool) vs batch-synchronous ({model}, {n} reqs, mixed 16/32/64-token prompts) ===");
+    println!(
+        "{:<14} {:>9} {:>10} {:>10} {:>7} {:>16} {:>13} {:>13}",
+        "scheduler", "gen toks", "wall s", "gen tk/s", "occup.", "occupancy hist", "ttft p50 ms", "e2e p95 ms"
+    );
+    println!("{}", "-".repeat(98));
+    let store = WeightStore::load(&ckpt(model, "fbquant", 4))?;
+    let mut results = Vec::new();
+    for (label, continuous) in [("continuous", true), ("batch-sync", false)] {
+        let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+        let mut backend = NativeBackend::new(engine, label);
+        let cfg = CoordinatorConfig { continuous, ..CoordinatorConfig::default() };
+        let reqs = serving_workload(stream, n);
+        let expect: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
+        let t0 = Instant::now();
+        let (responses, metrics) = Coordinator::run_closed_loop(&mut backend, reqs, &cfg)?;
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(responses.len(), n, "lost requests");
+        assert_eq!(metrics.tokens_generated, expect, "lost tokens");
+        println!(
+            "{:<14} {:>9} {:>10.2} {:>10.1} {:>7.2} {:>16} {:>13.1} {:>13.1}",
+            label,
+            metrics.tokens_generated,
+            wall,
+            metrics.tokens_generated as f64 / wall,
+            metrics.mean_slot_occupancy(),
+            metrics.occupancy_histogram(),
+            metrics.ttft.percentile_us(50.0) / 1e3,
+            metrics.e2e.percentile_us(95.0) / 1e3,
+        );
+        results.push((label, metrics.mean_slot_occupancy(), metrics.tokens_generated as f64 / wall));
+    }
+    let (_, cont_occ, cont_tps) = results[0];
+    let (_, sync_occ, sync_tps) = results[1];
+    println!(
+        "\ncontinuous sustains {:.2}x the decode-slot occupancy ({:.2} vs {:.2}) at {:.2}x tokens/s ({:.1} vs {:.1});",
+        cont_occ / sync_occ.max(1e-9), cont_occ, sync_occ,
+        cont_tps / sync_tps.max(1e-9), cont_tps, sync_tps,
+    );
+    println!("on a batch-parallel device the occupancy gap is the throughput gap — the native");
+    println!("engine decodes lanes sequentially, so tk/s stays ~flat while occupancy shows the win.");
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -100,5 +175,8 @@ fn main() -> anyhow::Result<()> {
     println!("\n*projected decode tk/s on a 20 GB/s memory-bound edge device (bytes/token");
     println!(" measured from the kernel traffic counters — the regime of the paper's Fig 7).");
     println!("paper (3090, Llama2-7B): FP16 48 tk/s, INT4-Sub 46, INT4 ~64, INT4-FBQuant 61.");
+
+    let n = if fast() { 12 } else { 24 };
+    serving_comparison(if fast() { "llamoid-tiny" } else { model }, &stream, n)?;
     Ok(())
 }

@@ -1,6 +1,32 @@
 //! Execution backends behind the coordinator: the native engine and the
 //! PJRT AOT artifacts share one `Backend` trait so the serving loop,
 //! benches and examples are backend-agnostic.
+//!
+//! The trait is shaped around a **persistent slot pool** (continuous
+//! batching): `open_batch` allocates a decode surface with `capacity`
+//! slots, `prefill_slot` admits one request into a free slot,
+//! `decode` steps only the occupied slots, and `release_slot` frees a
+//! finished slot so a queued request can be admitted mid-flight.
+//!
+//! Backends advertise how liberal their admission discipline is via
+//! [`Backend::continuous`]:
+//!
+//! * [`NativeBackend`] — one independent KV cache per slot, fully
+//!   continuous: any free slot can be refilled at any time.
+//! * [`PjrtBackend`] in **per-lane** mode (`with_per_lane(true)`) — each
+//!   slot is an independent batch-1 surface with its own position
+//!   counter, so admission is continuous too (per-slot position
+//!   tracking; mid-flight prefill falls back to single-step chunks when
+//!   the prompt remainder is smaller than the compiled chunk sizes).
+//! * [`PjrtBackend`] in **lock-step** mode (default) — one shared
+//!   batch-N surface. The compiled artifacts carry a *scalar* `pos0`
+//!   shared by every lane, so all lanes advance together: admission is
+//!   only possible into a fresh surface with one shared prompt length
+//!   (the aligned groups the `Batcher` forms). Released/empty lanes are
+//!   masked: they are fed a dummy token whose logits and KV writes are
+//!   never read by any occupied lane (lanes are independent in the
+//!   batch dimension). Recompiling the artifacts with a per-lane
+//!   position vector would lift this restriction — see ROADMAP.
 
 use super::request::GenRequest;
 use crate::engine::native::EngineWs;
@@ -11,55 +37,118 @@ use crate::runtime::{ExecRegistry, LoadedExec, Manifest};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
-/// Per-batch generation state (opaque to the serving loop).
-pub enum BatchState {
-    Native { kvs: Vec<KvCache>, pos: usize },
-    Pjrt { kv_k: Vec<f32>, kv_v: Vec<f32>, pos: usize, capacity: usize },
+/// The last sampled token of an occupied slot, fed back for one decode
+/// step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotToken {
+    pub slot: usize,
+    pub token: u32,
 }
 
-impl BatchState {
-    pub fn pos(&self) -> usize {
-        match self {
-            BatchState::Native { pos, .. } => *pos,
-            BatchState::Pjrt { pos, .. } => *pos,
-        }
-    }
+/// One per-slot PJRT surface (batch-1 artifacts, own position counter).
+#[derive(Debug, Clone)]
+pub struct PjrtLane {
+    kv_k: Vec<f32>,
+    kv_v: Vec<f32>,
+    pos: usize,
+}
+
+/// Per-batch generation state (opaque to the serving loop).
+pub enum BatchState {
+    /// Native engine: one independent KV cache per occupied slot.
+    Native { slots: Vec<Option<KvCache>> },
+    /// PJRT lock-step surface: shared KV buffers and a scalar position.
+    Pjrt {
+        kv_k: Vec<f32>,
+        kv_v: Vec<f32>,
+        pos: usize,
+        capacity: usize,
+        occupied: Vec<bool>,
+        decoded: bool,
+    },
+    /// PJRT per-lane surfaces: independent batch-1 KV + position per slot.
+    PjrtLanes { lanes: Vec<Option<PjrtLane>> },
 }
 
 pub trait Backend {
     fn cfg(&self) -> &Config;
 
-    /// Largest compiled/supported batch size.
+    /// Largest compiled/supported slot count.
     fn max_batch(&self) -> usize;
 
-    /// Prefill `prompts` (all the same length) into a fresh batch of
-    /// `capacity` slots; returns the state and last-position logits per
-    /// *occupied* slot.
-    fn prefill(&mut self, prompts: &[&[u32]], capacity: usize) -> Result<(BatchState, Vec<Vec<f32>>)>;
+    /// Whether a freed slot can be refilled while other slots keep
+    /// decoding. Non-continuous backends only admit into a fresh surface
+    /// (no decode steps yet) with one shared prompt length.
+    fn continuous(&self) -> bool;
 
-    /// One decode step: `tokens[i]` is the last sampled token of slot `i`.
-    /// Returns next-token logits per occupied slot.
-    fn decode(&mut self, state: &mut BatchState, tokens: &[u32]) -> Result<Vec<Vec<f32>>>;
+    /// Open a decode surface with `capacity` empty slots.
+    fn open_batch(&mut self, capacity: usize) -> Result<BatchState>;
+
+    /// Admit `prompt` into the free slot `slot`; returns the last-position
+    /// logits (the distribution of the first generated token).
+    fn prefill_slot(&mut self, state: &mut BatchState, slot: usize, prompt: &[u32])
+        -> Result<Vec<f32>>;
+
+    /// Admit several equal-length prompts at once into distinct free
+    /// slots of a fresh surface. Lock-step backends override this with a
+    /// single batched prefill; the default loops [`Backend::prefill_slot`].
+    fn prefill_slots(
+        &mut self,
+        state: &mut BatchState,
+        admissions: &[(usize, &[u32])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(admissions.len());
+        for &(slot, prompt) in admissions {
+            out.push(self.prefill_slot(state, slot, prompt)?);
+        }
+        Ok(out)
+    }
+
+    /// One decode step over the listed occupied slots: `tokens[i]` names a
+    /// slot and its last sampled token. Returns next-token logits per
+    /// entry, in the same order. Unlisted slots are untouched (native,
+    /// per-lane) or masked (lock-step).
+    fn decode(&mut self, state: &mut BatchState, tokens: &[SlotToken]) -> Result<Vec<Vec<f32>>>;
+
+    /// Free `slot` so a queued request can be admitted into it.
+    fn release_slot(&mut self, state: &mut BatchState, slot: usize) -> Result<()>;
 
     fn name(&self) -> String;
 }
 
-/// Validate a batch of requests against backend limits.
-pub fn validate_batch(cfg: &Config, reqs: &[GenRequest]) -> Result<()> {
+/// Per-request admission validation against model limits.
+pub fn validate_request(cfg: &Config, req: &GenRequest) -> Result<()> {
+    if req.prompt.is_empty() {
+        bail!("request {}: empty prompt", req.id);
+    }
+    if req.prompt.len() + req.max_new_tokens > cfg.max_seq {
+        bail!(
+            "request {}: prompt {} + gen {} exceeds max_seq {}",
+            req.id,
+            req.prompt.len(),
+            req.max_new_tokens,
+            cfg.max_seq
+        );
+    }
+    Ok(())
+}
+
+/// Validate an aligned batch of requests against backend limits
+/// (lock-step group admission).
+pub fn validate_batch(backend: &dyn Backend, reqs: &[GenRequest]) -> Result<()> {
+    if reqs.len() > backend.max_batch() {
+        bail!(
+            "batch of {} requests exceeds backend max batch {}",
+            reqs.len(),
+            backend.max_batch()
+        );
+    }
     let Some(first) = reqs.first() else { return Ok(()) };
     let plen = first.prompt.len();
     for r in reqs {
-        if r.prompt.is_empty() {
-            bail!("request {}: empty prompt", r.id);
-        }
+        validate_request(backend.cfg(), r)?;
         if r.prompt.len() != plen {
             bail!("batch is not prompt-length aligned");
-        }
-        if r.prompt.len() + r.max_new_tokens > cfg.max_seq {
-            bail!(
-                "request {}: prompt {} + gen {} exceeds max_seq {}",
-                r.id, r.prompt.len(), r.max_new_tokens, cfg.max_seq
-            );
         }
     }
     Ok(())
@@ -104,38 +193,70 @@ impl Backend for NativeBackend {
     }
 
     fn max_batch(&self) -> usize {
-        // the native engine decodes sequentially per slot; the batcher may
-        // still group requests for fairness/occupancy accounting.
+        // the native engine decodes sequentially per slot; the pool size
+        // still bounds concurrency for fairness/occupancy accounting.
         4
     }
 
-    fn prefill(&mut self, prompts: &[&[u32]], _capacity: usize) -> Result<(BatchState, Vec<Vec<f32>>)> {
-        let cfg = self.engine.cfg.clone();
-        let mut kvs = Vec::with_capacity(prompts.len());
-        let mut logits = Vec::with_capacity(prompts.len());
-        for prompt in prompts {
-            let mut kv = KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim());
-            let lg = self.engine.prefill(prompt, &mut kv, &mut self.ws);
-            kvs.push(kv);
-            logits.push(lg);
-        }
-        let pos = prompts.first().map_or(0, |p| p.len());
-        Ok((BatchState::Native { kvs, pos }, logits))
+    fn continuous(&self) -> bool {
+        // every slot owns an independent KV cache: admit any time.
+        true
     }
 
-    fn decode(&mut self, state: &mut BatchState, tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
-        let BatchState::Native { kvs, pos } = state else {
+    fn open_batch(&mut self, capacity: usize) -> Result<BatchState> {
+        if capacity == 0 {
+            bail!("zero-capacity batch");
+        }
+        Ok(BatchState::Native { slots: (0..capacity).map(|_| None).collect() })
+    }
+
+    fn prefill_slot(&mut self, state: &mut BatchState, slot: usize, prompt: &[u32])
+        -> Result<Vec<f32>> {
+        let BatchState::Native { slots } = state else {
             bail!("native backend got a foreign batch state");
         };
-        if tokens.len() != kvs.len() {
-            bail!("decode: {} tokens for {} slots", tokens.len(), kvs.len());
+        if slot >= slots.len() {
+            bail!("slot {slot} out of range ({} slots)", slots.len());
         }
+        if slots[slot].is_some() {
+            bail!("slot {slot} is already occupied");
+        }
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let cfg = &self.engine.cfg;
+        let mut kv = KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim());
+        let logits = self.engine.prefill(prompt, &mut kv, &mut self.ws);
+        slots[slot] = Some(kv);
+        Ok(logits)
+    }
+
+    fn decode(&mut self, state: &mut BatchState, tokens: &[SlotToken]) -> Result<Vec<Vec<f32>>> {
+        let BatchState::Native { slots } = state else {
+            bail!("native backend got a foreign batch state");
+        };
         let mut out = Vec::with_capacity(tokens.len());
-        for (kv, &tok) in kvs.iter_mut().zip(tokens) {
-            out.push(self.engine.decode_one(tok, kv, &mut self.ws));
+        for st in tokens {
+            let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
+                bail!("decode: slot {} is not occupied", st.slot);
+            };
+            if kv.remaining() == 0 {
+                bail!("slot {}: kv cache full", st.slot);
+            }
+            out.push(self.engine.decode_one(st.token, kv, &mut self.ws));
         }
-        *pos += 1;
         Ok(out)
+    }
+
+    fn release_slot(&mut self, state: &mut BatchState, slot: usize) -> Result<()> {
+        let BatchState::Native { slots } = state else {
+            bail!("native backend got a foreign batch state");
+        };
+        if slot >= slots.len() {
+            bail!("release: slot {slot} out of range ({} slots)", slots.len());
+        }
+        slots[slot] = None;
+        Ok(())
     }
 
     fn name(&self) -> String {
@@ -161,6 +282,7 @@ pub struct PjrtBackend {
     batches: Vec<usize>,
     kv_numel: usize,
     kv_shape: Vec<usize>,
+    per_lane: bool,
 }
 
 impl PjrtBackend {
@@ -203,7 +325,17 @@ impl PjrtBackend {
             batches: batches.to_vec(),
             kv_numel: kv_spec.numel(),
             kv_shape: kv_spec.shape,
+            per_lane: false,
         })
+    }
+
+    /// Per-lane mode: every slot becomes an independent batch-1 surface
+    /// with its own position counter, enabling continuous (mid-flight)
+    /// admission at the cost of lane-sequential execution. Requires
+    /// batch-1 artifacts.
+    pub fn with_per_lane(mut self, on: bool) -> PjrtBackend {
+        self.per_lane = on;
+        self
     }
 
     fn kv_len_for(&self, capacity: usize) -> usize {
@@ -220,40 +352,22 @@ impl PjrtBackend {
             .with_context(|| format!("no decode artifact for batch {capacity}"))
     }
 
-    /// Split logits [B, V] into per-occupied-slot vectors.
-    fn split_logits(&self, flat: &[f32], capacity: usize, occupied: usize) -> Vec<Vec<f32>> {
-        let v = self.cfg.vocab;
-        debug_assert_eq!(flat.len(), capacity * v);
-        (0..occupied).map(|i| flat[i * v..(i + 1) * v].to_vec()).collect()
-    }
-}
-
-impl Backend for PjrtBackend {
-    fn cfg(&self) -> &Config {
-        &self.cfg
-    }
-
-    fn max_batch(&self) -> usize {
-        *self.batches.iter().max().unwrap_or(&1)
-    }
-
-    fn prefill(&mut self, prompts: &[&[u32]], capacity: usize) -> Result<(BatchState, Vec<Vec<f32>>)> {
-        if prompts.is_empty() {
-            bail!("empty prefill batch");
+    /// Run the chunked prefill (128s, then 32s, then single decode steps)
+    /// over a `capacity`-lane surface; every lane consumes one of the
+    /// equal-length `lane_prompts` this call. Returns the last-chunk
+    /// logits, flat `[capacity * vocab]`.
+    fn chunked_prefill(&self, lane_prompts: &[&[u32]], capacity: usize,
+                       kv_k: &mut Vec<f32>, kv_v: &mut Vec<f32>, pos: &mut usize)
+                       -> Result<Vec<f32>> {
+        if lane_prompts.len() != capacity {
+            bail!("chunked_prefill: {} lane prompts for {capacity} lanes", lane_prompts.len());
         }
-        let plen = prompts[0].len();
-        if prompts.iter().any(|p| p.len() != plen) {
-            bail!("pjrt backend requires prompt-length-aligned batches");
+        let plen = lane_prompts[0].len();
+        if lane_prompts.iter().any(|p| p.len() != plen) {
+            bail!("chunked_prefill: lane prompts are not length-aligned");
         }
-        let mut state = BatchState::Pjrt {
-            kv_k: vec![0f32; self.kv_len_for(capacity)],
-            kv_v: vec![0f32; self.kv_len_for(capacity)],
-            pos: 0,
-            capacity,
-        };
-        // chunk the prompt greedily: 128s, then 32s, then single steps
         let mut consumed = 0usize;
-        let mut last_logits: Vec<Vec<f32>> = Vec::new();
+        let mut last_logits: Vec<f32> = Vec::new();
         while consumed < plen {
             let rem = plen - consumed;
             let chunk = self
@@ -274,18 +388,17 @@ impl Backend for PjrtBackend {
                     (Arc::clone(e), Arc::clone(f), t)
                 }
                 None => {
+                    // remainder smaller than any compiled chunk: fall back
+                    // to single-step prefill through the decode artifact
                     let (_, e, f) = self.decode_exec(capacity)?;
                     (Arc::clone(e), Arc::clone(f), 1)
                 }
             };
-            // tokens [capacity, step]: empty slots replay slot 0 (their kv
-            // is discarded — the serving loop never reads those logits)
+            // tokens [capacity, step]
             let mut toks = Vec::with_capacity(capacity * step);
-            for slot in 0..capacity {
-                let src = prompts.get(slot).unwrap_or(&prompts[0]);
-                toks.extend(src[consumed..consumed + step].iter().map(|&t| t as i32));
+            for prompt in lane_prompts {
+                toks.extend(prompt[consumed..consumed + step].iter().map(|&t| t as i32));
             }
-            let BatchState::Pjrt { kv_k, kv_v, pos, .. } = &mut state else { unreachable!() };
             let data = vec![
                 Value::I32(toks),
                 Value::I32(vec![*pos as i32]),
@@ -293,8 +406,7 @@ impl Backend for PjrtBackend {
                 Value::F32(std::mem::take(kv_v)),
             ];
             let out = exec.run(&data, &feed)?;
-            let logits = out[0].as_f32()?;
-            last_logits = self.split_logits(logits, capacity, prompts.len());
+            last_logits = out[0].as_f32()?.to_vec();
             *kv_k = match &out[1] {
                 Value::F32(v) => v.clone(),
                 _ => bail!("kv_k output not f32"),
@@ -306,39 +418,239 @@ impl Backend for PjrtBackend {
             *pos += step;
             consumed += step;
         }
-        Ok((state, last_logits))
+        Ok(last_logits)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn cfg(&self) -> &Config {
+        &self.cfg
     }
 
-    fn decode(&mut self, state: &mut BatchState, tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
-        let BatchState::Pjrt { kv_k, kv_v, pos, capacity } = state else {
-            bail!("pjrt backend got a foreign batch state");
-        };
-        let capacity = *capacity;
-        let (_, exec, feed) = self.decode_exec(capacity)?;
-        let (exec, feed) = (Arc::clone(exec), Arc::clone(feed));
-        let mut toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-        toks.resize(capacity, *toks.first().unwrap_or(&1));
-        let data = vec![
-            Value::I32(toks),
-            Value::I32(vec![*pos as i32]),
-            Value::F32(std::mem::take(kv_k)),
-            Value::F32(std::mem::take(kv_v)),
-        ];
-        let out = exec.run(&data, &feed)?;
-        let logits = self.split_logits(out[0].as_f32()?, capacity, tokens.len());
-        *kv_k = match &out[1] {
-            Value::F32(v) => v.clone(),
-            _ => bail!("kv_k output not f32"),
-        };
-        *kv_v = match &out[2] {
-            Value::F32(v) => v.clone(),
-            _ => bail!("kv_v output not f32"),
-        };
-        *pos += 1;
-        Ok(logits)
+    fn max_batch(&self) -> usize {
+        *self.batches.iter().max().unwrap_or(&1)
+    }
+
+    fn continuous(&self) -> bool {
+        self.per_lane
+    }
+
+    fn open_batch(&mut self, capacity: usize) -> Result<BatchState> {
+        if capacity == 0 {
+            bail!("zero-capacity batch");
+        }
+        if self.per_lane {
+            if !self.batches.contains(&1) {
+                bail!("per-lane pjrt serving requires batch-1 artifacts");
+            }
+            if capacity > self.max_batch() {
+                bail!("capacity {capacity} exceeds compiled max batch {}", self.max_batch());
+            }
+            Ok(BatchState::PjrtLanes { lanes: (0..capacity).map(|_| None).collect() })
+        } else {
+            if !self.batches.contains(&capacity) {
+                bail!("no compiled artifacts for batch {capacity}");
+            }
+            Ok(BatchState::Pjrt {
+                kv_k: vec![0f32; self.kv_len_for(capacity)],
+                kv_v: vec![0f32; self.kv_len_for(capacity)],
+                pos: 0,
+                capacity,
+                occupied: vec![false; capacity],
+                decoded: false,
+            })
+        }
+    }
+
+    fn prefill_slot(&mut self, state: &mut BatchState, slot: usize, prompt: &[u32])
+        -> Result<Vec<f32>> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        match state {
+            BatchState::PjrtLanes { lanes } => {
+                if slot >= lanes.len() {
+                    bail!("slot {slot} out of range ({} lanes)", lanes.len());
+                }
+                if lanes[slot].is_some() {
+                    bail!("slot {slot} is already occupied");
+                }
+                let mut lane = PjrtLane {
+                    kv_k: vec![0f32; self.kv_len_for(1)],
+                    kv_v: vec![0f32; self.kv_len_for(1)],
+                    pos: 0,
+                };
+                let logits = self.chunked_prefill(
+                    &[prompt], 1, &mut lane.kv_k, &mut lane.kv_v, &mut lane.pos,
+                )?;
+                lanes[slot] = Some(lane);
+                Ok(logits)
+            }
+            BatchState::Pjrt { .. } => {
+                let mut out = self.prefill_slots(state, &[(slot, prompt)])?;
+                Ok(out.remove(0))
+            }
+            BatchState::Native { .. } => bail!("pjrt backend got a foreign batch state"),
+        }
+    }
+
+    fn prefill_slots(
+        &mut self,
+        state: &mut BatchState,
+        admissions: &[(usize, &[u32])],
+    ) -> Result<Vec<Vec<f32>>> {
+        if admissions.is_empty() {
+            return Ok(Vec::new());
+        }
+        match state {
+            // per-lane surfaces are independent: admit one by one
+            BatchState::PjrtLanes { .. } => {
+                let mut out = Vec::with_capacity(admissions.len());
+                for &(slot, prompt) in admissions {
+                    out.push(self.prefill_slot(state, slot, prompt)?);
+                }
+                Ok(out)
+            }
+            BatchState::Pjrt { kv_k, kv_v, pos, capacity, occupied, decoded } => {
+                let capacity = *capacity;
+                if *decoded || *pos != 0 || occupied.iter().any(|&o| o) {
+                    bail!(
+                        "pjrt lock-step surface only admits into a fresh batch \
+                         (the artifacts share a scalar pos0 across lanes)"
+                    );
+                }
+                let plen = admissions[0].1.len();
+                // empty lanes replay the first prompt: their kv and logits
+                // are never read by any occupied lane
+                let mut lane_prompts: Vec<&[u32]> = vec![admissions[0].1; capacity];
+                for &(slot, prompt) in admissions {
+                    if slot >= capacity {
+                        bail!("slot {slot} out of range ({capacity} lanes)");
+                    }
+                    if occupied[slot] {
+                        bail!("slot {slot} admitted twice");
+                    }
+                    if prompt.len() != plen {
+                        bail!("pjrt lock-step admission requires prompt-length-aligned batches");
+                    }
+                    occupied[slot] = true;
+                    lane_prompts[slot] = prompt;
+                }
+                let flat = self.chunked_prefill(&lane_prompts, capacity, kv_k, kv_v, pos)?;
+                let v = self.cfg.vocab;
+                Ok(admissions
+                    .iter()
+                    .map(|&(slot, _)| flat[slot * v..(slot + 1) * v].to_vec())
+                    .collect())
+            }
+            BatchState::Native { .. } => bail!("pjrt backend got a foreign batch state"),
+        }
+    }
+
+    fn decode(&mut self, state: &mut BatchState, tokens: &[SlotToken]) -> Result<Vec<Vec<f32>>> {
+        if tokens.is_empty() {
+            bail!("decode over zero occupied slots");
+        }
+        match state {
+            BatchState::PjrtLanes { lanes } => {
+                let (_, exec, feed) = self.decode_exec(1)?;
+                let (exec, feed) = (Arc::clone(exec), Arc::clone(feed));
+                let v = self.cfg.vocab;
+                let mut out = Vec::with_capacity(tokens.len());
+                for st in tokens {
+                    let Some(lane) = lanes.get_mut(st.slot).and_then(|l| l.as_mut()) else {
+                        bail!("decode: slot {} is not occupied", st.slot);
+                    };
+                    let data = vec![
+                        Value::I32(vec![st.token as i32]),
+                        Value::I32(vec![lane.pos as i32]),
+                        Value::F32(std::mem::take(&mut lane.kv_k)),
+                        Value::F32(std::mem::take(&mut lane.kv_v)),
+                    ];
+                    let o = exec.run(&data, &feed)?;
+                    out.push(o[0].as_f32()?[..v].to_vec());
+                    lane.kv_k = match &o[1] {
+                        Value::F32(x) => x.clone(),
+                        _ => bail!("kv_k output not f32"),
+                    };
+                    lane.kv_v = match &o[2] {
+                        Value::F32(x) => x.clone(),
+                        _ => bail!("kv_v output not f32"),
+                    };
+                    lane.pos += 1;
+                }
+                Ok(out)
+            }
+            BatchState::Pjrt { kv_k, kv_v, pos, capacity, occupied, decoded } => {
+                let capacity = *capacity;
+                let (_, exec, feed) = self.decode_exec(capacity)?;
+                let (exec, feed) = (Arc::clone(exec), Arc::clone(feed));
+                // masked lanes (empty or released) replay a dummy token;
+                // their logits and kv writes are never read
+                let mut toks = vec![1i32; capacity];
+                for st in tokens {
+                    if st.slot >= capacity {
+                        bail!("decode: slot {} out of range ({capacity} lanes)", st.slot);
+                    }
+                    if !occupied[st.slot] {
+                        bail!("decode: slot {} is not occupied", st.slot);
+                    }
+                    toks[st.slot] = st.token as i32;
+                }
+                let data = vec![
+                    Value::I32(toks),
+                    Value::I32(vec![*pos as i32]),
+                    Value::F32(std::mem::take(kv_k)),
+                    Value::F32(std::mem::take(kv_v)),
+                ];
+                let out = exec.run(&data, &feed)?;
+                let flat = out[0].as_f32()?;
+                let v = self.cfg.vocab;
+                let logits = tokens
+                    .iter()
+                    .map(|st| flat[st.slot * v..(st.slot + 1) * v].to_vec())
+                    .collect();
+                *kv_k = match &out[1] {
+                    Value::F32(x) => x.clone(),
+                    _ => bail!("kv_k output not f32"),
+                };
+                *kv_v = match &out[2] {
+                    Value::F32(x) => x.clone(),
+                    _ => bail!("kv_v output not f32"),
+                };
+                *pos += 1;
+                *decoded = true;
+                Ok(logits)
+            }
+            BatchState::Native { .. } => bail!("pjrt backend got a foreign batch state"),
+        }
+    }
+
+    fn release_slot(&mut self, state: &mut BatchState, slot: usize) -> Result<()> {
+        match state {
+            BatchState::PjrtLanes { lanes } => {
+                if slot >= lanes.len() {
+                    bail!("release: slot {slot} out of range ({} lanes)", lanes.len());
+                }
+                lanes[slot] = None;
+                Ok(())
+            }
+            BatchState::Pjrt { occupied, .. } => {
+                if slot >= occupied.len() {
+                    bail!("release: slot {slot} out of range ({} lanes)", occupied.len());
+                }
+                occupied[slot] = false;
+                Ok(())
+            }
+            BatchState::Native { .. } => bail!("pjrt backend got a foreign batch state"),
+        }
     }
 
     fn name(&self) -> String {
-        format!("pjrt:{}", self.label)
+        format!(
+            "pjrt{}:{}",
+            if self.per_lane { "-lanes" } else { "" },
+            self.label
+        )
     }
 }

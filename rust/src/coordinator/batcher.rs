@@ -1,9 +1,20 @@
 //! Dynamic batcher: admission queue + batch forming.
 //!
-//! Requests are bucketed by prompt length (the PJRT decode artifacts share
-//! a scalar `pos0` across batch slots, so a batch must be position-aligned)
-//! and released either when a full batch is available or when the oldest
-//! request has waited `max_wait`.
+//! Two release disciplines sit on one FIFO admission queue:
+//!
+//! * **Continuous** ([`Batcher::pop_ready`]) — pop the oldest request the
+//!   moment a decode slot frees. Pure arrival order: no length bucketing
+//!   is needed when slots are filled independently, and FIFO is
+//!   starvation-free by construction.
+//! * **Aligned groups** ([`Batcher::next_batch`]) — for lock-step
+//!   surfaces (the PJRT artifacts share a scalar `pos0` across batch
+//!   slots, so a batch must be position-aligned): gather requests with
+//!   the oldest request's prompt length, release when a full batch is
+//!   available or the oldest has waited `max_wait`. Because grouping
+//!   always keys off the *oldest* request, an odd-length request rises
+//!   to the front as earlier arrivals drain and is released within its
+//!   own `max_wait` — a stream of other lengths cannot starve it (see
+//!   the anti-starvation test).
 
 use super::request::GenRequest;
 use std::collections::VecDeque;
@@ -69,6 +80,11 @@ impl Batcher {
         }
         self.queue.push_back(req);
         true
+    }
+
+    /// Continuous admission: pop the oldest queued request (FIFO).
+    pub fn pop_ready(&mut self) -> Option<GenRequest> {
+        self.queue.pop_front()
     }
 
     /// The smallest compiled batch size that fits `n` requests.
@@ -175,6 +191,47 @@ mod tests {
             assert!(b.submit(req(i, 4)));
         }
         assert!(!b.submit(req(99, 4)));
+    }
+
+    #[test]
+    fn pop_ready_is_fifo() {
+        let mut b = Batcher::new(cfg(1000));
+        b.submit(req(1, 16));
+        b.submit(req(2, 32));
+        b.submit(req(3, 16));
+        assert_eq!(b.pop_ready().unwrap().id, 1);
+        assert_eq!(b.pop_ready().unwrap().id, 2);
+        assert_eq!(b.pop_ready().unwrap().id, 3);
+        assert!(b.pop_ready().is_none());
+    }
+
+    #[test]
+    fn aligned_groups_do_not_starve_odd_lengths() {
+        // a sustained stream of length-16 prompts must not indefinitely
+        // starve a queued length-32 prompt: once the 32 is oldest it is
+        // released within its own max_wait.
+        let mut b = Batcher::new(cfg(0)); // max_wait 0 => immediate release
+        let mut next_id = 0u64;
+        let mut sub16 = |b: &mut Batcher, n: usize| {
+            for _ in 0..n {
+                next_id += 1;
+                b.submit(req(next_id, 16));
+            }
+        };
+        sub16(&mut b, 3);
+        b.submit(req(999, 32));
+        let mut released_32_after = None;
+        for round in 0..10 {
+            // keep the length-16 pressure up between releases
+            sub16(&mut b, 4);
+            let batch = b.next_batch(Instant::now()).expect("release under timeout");
+            if batch.requests.iter().any(|r| r.id == 999) {
+                released_32_after = Some(round);
+                break;
+            }
+        }
+        let round = released_32_after.expect("length-32 request starved for 10 rounds");
+        assert!(round <= 2, "length-32 request waited {round} rounds");
     }
 
     #[test]

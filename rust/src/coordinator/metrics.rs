@@ -1,4 +1,14 @@
-//! Serving metrics: TTFT, per-token latency, throughput, queue depth.
+//! Serving metrics: TTFT, per-token latency, throughput, slot occupancy
+//! and admission latency.
+//!
+//! Two occupancy views coexist:
+//! * **batch occupancy** ([`ServeMetrics::record_batch`]) — how full each
+//!   aligned lock-step group was when it formed (legacy view, only
+//!   populated on the non-continuous path),
+//! * **slot occupancy** ([`ServeMetrics::record_step`]) — per decode
+//!   step, how many of the pool's slots held live requests. This is the
+//!   number continuous batching exists to maximise; the histogram shows
+//!   the full distribution (steps by occupied-slot count).
 
 use crate::util::timer::LatencyStats;
 use std::time::Instant;
@@ -8,10 +18,27 @@ pub struct ServeMetrics {
     pub started: Instant,
     pub requests_in: usize,
     pub requests_done: usize,
+    /// shed (queue overflow) or rejected (validation) requests
+    pub requests_shed: usize,
     pub tokens_prefilled: usize,
     pub tokens_generated: usize,
+    /// aligned lock-step groups formed (non-continuous path)
     pub batches_formed: usize,
     pub batch_occupancy_sum: f64,
+    /// persistent slot pools opened (1 per continuous run)
+    pub pools_opened: usize,
+    /// requests admitted into a decode slot
+    pub admissions: usize,
+    /// batched decode steps executed
+    pub decode_steps: usize,
+    /// sum over decode steps of occupied/pool-capacity
+    pub slot_occupancy_sum: f64,
+    /// most slots ever simultaneously occupied
+    pub peak_occupied: usize,
+    /// decode steps by occupied-slot count (index = occupied slots)
+    pub occupancy_hist: Vec<usize>,
+    /// queue wait: request arrival → slot admission
+    pub admission_wait: LatencyStats,
     pub ttft: LatencyStats,
     pub per_token: LatencyStats,
     pub e2e: LatencyStats,
@@ -23,10 +50,18 @@ impl Default for ServeMetrics {
             started: Instant::now(),
             requests_in: 0,
             requests_done: 0,
+            requests_shed: 0,
             tokens_prefilled: 0,
             tokens_generated: 0,
             batches_formed: 0,
             batch_occupancy_sum: 0.0,
+            pools_opened: 0,
+            admissions: 0,
+            decode_steps: 0,
+            slot_occupancy_sum: 0.0,
+            peak_occupied: 0,
+            occupancy_hist: Vec::new(),
+            admission_wait: LatencyStats::new(),
             ttft: LatencyStats::new(),
             per_token: LatencyStats::new(),
             e2e: LatencyStats::new(),
@@ -44,11 +79,55 @@ impl ServeMetrics {
         self.batch_occupancy_sum += occupied as f64 / capacity.max(1) as f64;
     }
 
+    /// One request admitted into a slot after `wait_us` in the queue.
+    pub fn record_admission(&mut self, wait_us: f64) {
+        self.admissions += 1;
+        self.admission_wait.record_us(wait_us);
+    }
+
+    /// One decode step ran with `occupied` of `capacity` slots live.
+    pub fn record_step(&mut self, occupied: usize, capacity: usize) {
+        self.decode_steps += 1;
+        self.slot_occupancy_sum += occupied as f64 / capacity.max(1) as f64;
+        if occupied > self.peak_occupied {
+            self.peak_occupied = occupied;
+        }
+        if self.occupancy_hist.len() <= occupied {
+            self.occupancy_hist.resize(occupied + 1, 0);
+        }
+        self.occupancy_hist[occupied] += 1;
+    }
+
     pub fn mean_occupancy(&self) -> f64 {
         if self.batches_formed == 0 {
             0.0
         } else {
             self.batch_occupancy_sum / self.batches_formed as f64
+        }
+    }
+
+    /// Mean fraction of the slot pool doing useful work per decode step.
+    pub fn mean_slot_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.slot_occupancy_sum / self.decode_steps as f64
+        }
+    }
+
+    /// Compact occupancy histogram, e.g. `1:12 2:30 4:200`.
+    pub fn occupancy_histogram(&self) -> String {
+        let cells: Vec<String> = self
+            .occupancy_hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(occ, &n)| format!("{occ}:{n}"))
+            .collect();
+        if cells.is_empty() {
+            "-".to_string()
+        } else {
+            cells.join(" ")
         }
     }
 
@@ -64,13 +143,23 @@ impl ServeMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={}/{} prefill_tokens={} gen_tokens={} tps={:.1} occupancy={:.2}\n  {}\n  {}\n  {}",
+            "requests={}/{} (shed {}) prefill_tokens={} gen_tokens={} tps={:.1}\n  \
+             slots: occupancy={:.2} peak={} hist[{}] admissions={} pools={} groups={} (occ {:.2})\n  \
+             {}\n  {}\n  {}\n  {}",
             self.requests_done,
             self.requests_in,
+            self.requests_shed,
             self.tokens_prefilled,
             self.tokens_generated,
             self.decode_tps(),
+            self.mean_slot_occupancy(),
+            self.peak_occupied,
+            self.occupancy_histogram(),
+            self.admissions,
+            self.pools_opened,
+            self.batches_formed,
             self.mean_occupancy(),
+            self.admission_wait.report("admission"),
             self.ttft.report("ttft"),
             self.per_token.report("per-token"),
             self.e2e.report("e2e"),
@@ -88,5 +177,27 @@ mod tests {
         m.record_batch(2, 4);
         m.record_batch(4, 4);
         assert!((m.mean_occupancy() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slot_occupancy_and_histogram() {
+        let mut m = ServeMetrics::new();
+        m.record_step(2, 4);
+        m.record_step(4, 4);
+        m.record_step(4, 4);
+        assert!((m.mean_slot_occupancy() - (0.5 + 1.0 + 1.0) / 3.0).abs() < 1e-9);
+        assert_eq!(m.peak_occupied, 4);
+        assert_eq!(m.occupancy_hist[2], 1);
+        assert_eq!(m.occupancy_hist[4], 2);
+        assert_eq!(m.occupancy_histogram(), "2:1 4:2");
+    }
+
+    #[test]
+    fn admission_wait_records() {
+        let mut m = ServeMetrics::new();
+        m.record_admission(120.0);
+        m.record_admission(80.0);
+        assert_eq!(m.admissions, 2);
+        assert!((m.admission_wait.mean_us() - 100.0).abs() < 1e-9);
     }
 }

@@ -1,17 +1,27 @@
-//! Layer-3 serving coordinator.
+//! Layer-3 serving coordinator: continuous batching over a slot pool.
 //!
 //! The paper's contribution is the quantization scheme + fused kernel, so
-//! the coordinator is the serving shell that makes it deployable:
+//! the coordinator is the serving shell that makes it deployable. Decode
+//! is memory-bandwidth-bound, which means serving throughput is won or
+//! lost on keeping decode slots full — the coordinator therefore
+//! schedules **continuously**: the backend exposes a persistent pool of
+//! decode slots, requests are admitted into free slots mid-flight (no
+//! prompt-length alignment, no lock-step draining) and every sampled
+//! token is streamed to the caller as a [`request::GenEvent`].
 //!
-//! * [`request`] — request/response types with per-stage timestamps,
+//! * [`request`] — request/response types, per-stage timestamps and the
+//!   streaming event enum,
 //! * [`sampler`] — greedy / temperature / top-k sampling,
-//! * [`batcher`] — dynamic batching: admission queue, wait-timeout batch
-//!   forming, bucketing by (prompt length, compiled batch size),
-//! * [`backend`] — the execution abstraction: the native engine or the
-//!   PJRT artifacts (prefill chunking + batched decode),
-//! * [`server`] — the coordinator loop: batcher → backend → sampler →
-//!   responses, with metrics,
-//! * [`metrics`] — TTFT / per-token latency / throughput accounting,
+//! * [`batcher`] — FIFO admission queue with two release disciplines:
+//!   continuous per-slot pops, or wait-timeout aligned groups for
+//!   lock-step surfaces,
+//! * [`backend`] — the slot-pool execution abstraction
+//!   (`open_batch` / `prefill_slot` / `decode` / `release_slot`) over
+//!   the native engine or the PJRT artifacts,
+//! * [`server`] — the continuous scheduling loop: admit whenever a slot
+//!   frees, step the occupied slots, stream events,
+//! * [`metrics`] — TTFT / per-token latency / throughput, slot-occupancy
+//!   histogram and admission-latency accounting,
 //! * [`workload`] — synthetic request generators for `serve` and the
 //!   Fig-7 bench.
 
@@ -23,9 +33,9 @@ pub mod sampler;
 pub mod server;
 pub mod workload;
 
-pub use backend::{Backend, NativeBackend, PjrtBackend};
+pub use backend::{Backend, BatchState, NativeBackend, PjrtBackend, SlotToken};
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::ServeMetrics;
-pub use request::{GenRequest, GenResponse, SamplingParams};
+pub use request::{GenEvent, GenRequest, GenResponse, SamplingParams};
 pub use sampler::Sampler;
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, CoordinatorHandle};

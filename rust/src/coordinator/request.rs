@@ -41,6 +41,33 @@ impl GenRequest {
     }
 }
 
+/// One event on a request's response stream. Tokens are delivered as
+/// they are sampled; the stream ends with exactly one terminal event
+/// ([`GenEvent::Done`] or [`GenEvent::Error`]).
+#[derive(Debug, Clone)]
+pub enum GenEvent {
+    /// `index`-th generated token of request `id`.
+    Token { id: u64, index: usize, token: u32 },
+    /// Terminal: the request completed.
+    Done(GenResponse),
+    /// Terminal: the request was shed or rejected.
+    Error { id: u64, message: String },
+}
+
+impl GenEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            GenEvent::Token { id, .. } | GenEvent::Error { id, .. } => *id,
+            GenEvent::Done(r) => r.id,
+        }
+    }
+
+    /// Whether this event ends the stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, GenEvent::Done(_) | GenEvent::Error { .. })
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct GenResponse {
     pub id: u64,

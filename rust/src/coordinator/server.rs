@@ -1,137 +1,368 @@
-//! The coordinator serving loop: batcher → backend → sampler → responses.
+//! The coordinator serving loop: batcher → slot pool → sampler → event
+//! streams.
+//!
+//! Scheduling is **continuous** (slot-based): the backend exposes a
+//! persistent pool of decode slots; a request is admitted into a free
+//! slot the moment one exists, decodes alongside whatever else is in
+//! flight, and releases its slot on completion so the next queued
+//! request can be admitted mid-flight. No prompt-length alignment and no
+//! lock-step draining — occupancy (and with it decode throughput on a
+//! batch-parallel backend) stays high under mixed-length traffic.
+//!
+//! Backends whose compiled surface cannot admit mid-flight (the PJRT
+//! lock-step artifacts share a scalar `pos0` across lanes — see
+//! [`super::backend`]) fall back to aligned group admission: the batcher
+//! forms a prompt-length-aligned group, the group prefills into a fresh
+//! surface, and freed slots within the group are masked until it drains.
+//! `CoordinatorConfig { continuous: false, .. }` forces this mode on any
+//! backend (the batch-synchronous baseline in `benches/fig7_throughput`).
 //!
 //! Two operating modes:
 //! * [`Coordinator::run_closed_loop`] — drive a fixed request set to
 //!   completion (benches, eval),
 //! * [`Coordinator::spawn`] — a long-lived worker thread with a submit
-//!   channel and per-request response channels (the `serve` command and
-//!   the concurrent-load example).
-//!
-//! Execution is batch-synchronous: a formed batch prefills together and
-//! decodes in lock-step; finished slots idle until the batch drains (their
-//! waste shows up in the occupancy metric — exactly the effect dynamic
-//! batching policies trade against).
+//!   channel; [`CoordinatorHandle::submit`] returns a per-request
+//!   [`GenEvent`] stream delivering each token as it is sampled,
+//!   terminated by exactly one `Done` (or `Error` for shed/rejected
+//!   requests — nothing blocks forever on an overloaded queue).
 
-use super::backend::{validate_batch, Backend};
-use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::backend::{validate_batch, validate_request, Backend, BatchState, SlotToken};
+use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::ServeMetrics;
-use super::request::{GenRequest, GenResponse};
+use super::request::{GenEvent, GenRequest, GenResponse};
 use super::sampler::Sampler;
 use anyhow::Result;
+use std::collections::HashMap;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
+    /// Admit into freed slots mid-flight when the backend supports it
+    /// (false = batch-synchronous aligned groups on every backend).
+    pub continuous: bool,
+    /// Continuous slot-pool size; 0 = `backend.max_batch()`. Aligned
+    /// (non-continuous) groups are sized by the batcher's compiled batch
+    /// sizes instead.
+    pub slots: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { batcher: BatcherConfig::default(), continuous: true, slots: 0 }
+    }
+}
+
+/// A request occupying a decode slot.
+struct Active {
+    req: GenRequest,
+    /// sampled but not yet committed token
+    current: u32,
+    output: Vec<u32>,
+    ttft_us: Option<f64>,
+    prefill_done: Instant,
+}
+
+/// The scheduling core shared by the closed loop and the spawned worker:
+/// one slot pool, one admission queue, per-request event delivery.
+struct ServeLoop<'a> {
+    backend: &'a mut dyn Backend,
+    continuous: bool,
+    /// fixed pool size — the occupancy denominator in both modes
+    pool_capacity: usize,
+    max_wait: Duration,
+    state: BatchState,
+    slots: Vec<Option<Active>>,
+    batcher: Batcher,
+    sampler: Sampler,
+    metrics: ServeMetrics,
+    sinks: HashMap<u64, mpsc::Sender<GenEvent>>,
+    finished: Vec<GenResponse>,
+    collect: bool,
+}
+
+impl<'a> ServeLoop<'a> {
+    fn new(backend: &'a mut dyn Backend, cfg: &CoordinatorConfig, collect: bool)
+        -> Result<ServeLoop<'a>> {
+        let continuous = cfg.continuous && backend.continuous();
+        let pool_capacity = if cfg.slots > 0 {
+            cfg.slots.min(backend.max_batch())
+        } else {
+            backend.max_batch()
+        };
+        let mut metrics = ServeMetrics::new();
+        // the persistent pool only exists in continuous mode; the aligned
+        // path opens a fresh surface per group, so it starts from an
+        // empty placeholder that is never handed to the backend
+        let (state, slots) = if continuous {
+            metrics.pools_opened += 1;
+            (backend.open_batch(pool_capacity)?, (0..pool_capacity).map(|_| None).collect())
+        } else {
+            (BatchState::Native { slots: Vec::new() }, Vec::new())
+        };
+        Ok(ServeLoop {
+            backend,
+            continuous,
+            pool_capacity,
+            max_wait: cfg.batcher.max_wait,
+            state,
+            slots,
+            batcher: Batcher::new(cfg.batcher.clone()),
+            sampler: Sampler::new(0xfb90),
+            metrics,
+            sinks: HashMap::new(),
+            finished: Vec::new(),
+            collect,
+        })
+    }
+
+    fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn idle(&self) -> bool {
+        self.occupied() == 0 && self.batcher.is_empty()
+    }
+
+    /// Deliver an event to its request's sink (if any); terminal events
+    /// close the sink, `Done` responses are collected in closed-loop mode.
+    fn emit(&mut self, ev: GenEvent) {
+        let id = ev.id();
+        let terminal = ev.is_terminal();
+        if self.collect {
+            if let GenEvent::Done(r) = &ev {
+                self.finished.push(r.clone());
+            }
+        }
+        if let Some(sink) = self.sinks.get(&id) {
+            let _ = sink.send(ev);
+        }
+        if terminal {
+            self.sinks.remove(&id);
+        }
+    }
+
+    /// Accept a request into the admission queue. Invalid requests error
+    /// out in closed-loop (collect) mode and get a terminal `Error` event
+    /// in streaming mode; a full queue sheds the request (also with a
+    /// terminal `Error` — the sink never leaks) and returns `Ok(false)`.
+    fn submit(&mut self, req: GenRequest, sink: Option<mpsc::Sender<GenEvent>>) -> Result<bool> {
+        self.metrics.requests_in += 1;
+        let id = req.id;
+        if let Some(s) = sink {
+            // a duplicate in-flight id would overwrite the first stream's
+            // sink and strand it without a terminal event: reject the new
+            // stream instead (id 0 auto-assigns, so this only hits callers
+            // reusing explicit ids)
+            if self.sinks.contains_key(&id) {
+                self.metrics.requests_shed += 1;
+                let _ = s.send(GenEvent::Error {
+                    id,
+                    message: format!("request id {id} is already in flight"),
+                });
+                return Ok(true);
+            }
+            self.sinks.insert(id, s);
+        }
+        if let Err(e) = validate_request(self.backend.cfg(), &req) {
+            self.metrics.requests_shed += 1;
+            if self.collect {
+                // closed loop: nobody watches an event stream — surface
+                // the rejection to the caller
+                return Err(e);
+            }
+            self.emit(GenEvent::Error { id, message: e.to_string() });
+            return Ok(true); // rejected, but handled — not an overload signal
+        }
+        if !self.batcher.submit(req) {
+            self.metrics.requests_shed += 1;
+            self.emit(GenEvent::Error { id, message: "admission queue full: request shed".into() });
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    /// Bookkeeping shared by both admission paths.
+    fn place(&mut self, slot: usize, req: GenRequest, logits: &[f32], wait_us: f64) -> Result<()> {
+        self.metrics.tokens_prefilled += req.prompt.len();
+        self.metrics.record_admission(wait_us);
+        if req.max_new_tokens == 0 {
+            // degenerate budget: complete immediately with zero tokens
+            // rather than letting the step loop commit the sampled one
+            self.backend.release_slot(&mut self.state, slot)?;
+            let total_us = req.arrived.elapsed().as_secs_f64() * 1e6;
+            self.metrics.ttft.record_us(total_us);
+            self.metrics.e2e.record_us(total_us);
+            self.metrics.requests_done += 1;
+            self.emit(GenEvent::Done(GenResponse {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                ttft_us: total_us,
+                total_us,
+                decode_s: 0.0,
+            }));
+            return Ok(());
+        }
+        let current = self.sampler.sample(logits, &req.params);
+        self.slots[slot] = Some(Active {
+            req,
+            current,
+            output: Vec::new(),
+            ttft_us: None,
+            prefill_done: Instant::now(),
+        });
+        Ok(())
+    }
+
+    /// Admit queued requests into free slots. `now` drives the batcher's
+    /// wait-timeout release on the aligned (non-continuous) path.
+    fn admit(&mut self, now: Instant) -> Result<()> {
+        if self.continuous {
+            while !self.batcher.is_empty() {
+                let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
+                let Some(req) = self.batcher.pop_ready() else { break };
+                let wait_us = req.arrived.elapsed().as_secs_f64() * 1e6;
+                match self.backend.prefill_slot(&mut self.state, slot, &req.prompt) {
+                    Ok(logits) => self.place(slot, req, &logits, wait_us)?,
+                    Err(e) => {
+                        self.metrics.requests_shed += 1;
+                        self.emit(GenEvent::Error { id: req.id, message: e.to_string() });
+                    }
+                }
+            }
+        } else if self.occupied() == 0 {
+            let Some(batch) = self.batcher.next_batch(now) else { return Ok(()) };
+            validate_batch(&*self.backend, &batch.requests)?;
+            let capacity = batch.capacity;
+            // fresh aligned surface per group (lock-step artifacts only
+            // admit at pos 0); the previous group's surface is dropped
+            self.state = self.backend.open_batch(capacity)?;
+            self.slots = (0..capacity).map(|_| None).collect();
+            self.metrics.record_batch(batch.requests.len(), capacity);
+            // queue wait ends here — measure before the batched prefill so
+            // the number is comparable with the continuous path
+            let waits: Vec<f64> = batch
+                .requests
+                .iter()
+                .map(|r| r.arrived.elapsed().as_secs_f64() * 1e6)
+                .collect();
+            let admissions: Vec<(usize, &[u32])> = batch
+                .requests
+                .iter()
+                .enumerate()
+                .map(|(i, r)| (i, r.prompt.as_slice()))
+                .collect();
+            let logits = self.backend.prefill_slots(&mut self.state, &admissions)?;
+            for ((i, req), (lg, wait_us)) in
+                batch.requests.into_iter().enumerate().zip(logits.iter().zip(waits))
+            {
+                self.place(i, req, lg, wait_us)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One scheduling step: commit the sampled token of every occupied
+    /// slot (emitting `Token` events), finish + release completed slots
+    /// (emitting `Done`), then run one batched decode over the survivors.
+    /// Returns false when no slot was occupied (nothing to do).
+    fn step(&mut self) -> Result<bool> {
+        let step_t0 = Instant::now();
+        let mut events: Vec<GenEvent> = Vec::new();
+        let mut to_decode: Vec<SlotToken> = Vec::new();
+        for i in 0..self.slots.len() {
+            let done = {
+                let Some(a) = self.slots[i].as_mut() else { continue };
+                a.output.push(a.current);
+                if a.ttft_us.is_none() {
+                    let us = a.req.arrived.elapsed().as_secs_f64() * 1e6;
+                    a.ttft_us = Some(us);
+                    self.metrics.ttft.record_us(us);
+                }
+                self.metrics.tokens_generated += 1;
+                events.push(GenEvent::Token {
+                    id: a.req.id,
+                    index: a.output.len() - 1,
+                    token: a.current,
+                });
+                Some(a.current) == a.req.stop_token || a.output.len() >= a.req.max_new_tokens
+            };
+            if done {
+                let a = self.slots[i].take().expect("slot emptied mid-step");
+                self.backend.release_slot(&mut self.state, i)?;
+                let total_us = a.req.arrived.elapsed().as_secs_f64() * 1e6;
+                self.metrics.e2e.record_us(total_us);
+                self.metrics.requests_done += 1;
+                events.push(GenEvent::Done(GenResponse {
+                    id: a.req.id,
+                    prompt_len: a.req.prompt.len(),
+                    tokens: a.output,
+                    ttft_us: a.ttft_us.unwrap_or(total_us),
+                    total_us,
+                    decode_s: a.prefill_done.elapsed().as_secs_f64(),
+                }));
+            } else {
+                let a = self.slots[i].as_ref().expect("slot emptied mid-step");
+                to_decode.push(SlotToken { slot: i, token: a.current });
+            }
+        }
+        let progressed = !events.is_empty();
+        for ev in events {
+            self.emit(ev);
+        }
+        if to_decode.is_empty() {
+            return Ok(progressed);
+        }
+        // denominator: the configured pool in continuous mode; an aligned
+        // group can be wider than `cfg.slots`, so never report above 1.0
+        self.metrics.record_step(to_decode.len(), self.pool_capacity.max(self.slots.len()));
+        let logits = self.backend.decode(&mut self.state, &to_decode)?;
+        for (st, lg) in to_decode.iter().zip(&logits) {
+            let a = self.slots[st.slot].as_mut().expect("decoded slot vanished");
+            a.current = self.sampler.sample(lg, &a.req.params);
+        }
+        self.metrics.per_token.record(step_t0.elapsed());
+        Ok(true)
+    }
+
+    /// Run admissions + steps until pool and queue are empty. Used by the
+    /// closed loop and by shutdown drain — nothing else is arriving, so
+    /// the batcher's wait timeout is forced.
+    fn drain_all(&mut self) -> Result<()> {
+        while !self.idle() {
+            let now = Instant::now() + self.max_wait + Duration::from_millis(1);
+            self.admit(now)?;
+            if !self.step()? && self.occupied() == 0 && !self.batcher.is_empty() {
+                anyhow::bail!("scheduler stalled with {} queued requests", self.batcher.len());
+            }
+        }
+        Ok(())
+    }
+
+    fn into_parts(self) -> (Vec<GenResponse>, ServeMetrics) {
+        (self.finished, self.metrics)
+    }
 }
 
 pub struct Coordinator;
 
 impl Coordinator {
-    /// Run one formed batch to completion.
-    fn run_batch(
-        backend: &mut dyn Backend,
-        batch: Batch,
-        sampler: &mut Sampler,
-        metrics: &mut ServeMetrics,
-    ) -> Result<Vec<GenResponse>> {
-        validate_batch(backend.cfg(), &batch.requests)?;
-        metrics.record_batch(batch.requests.len(), batch.capacity);
-        let n = batch.requests.len();
-        let prompts: Vec<&[u32]> = batch.requests.iter().map(|r| r.prompt.as_slice()).collect();
-
-        let t0 = Instant::now();
-        let (mut state, mut logits) = backend.prefill(&prompts, batch.capacity)?;
-        let prefill_done = Instant::now();
-        metrics.tokens_prefilled += prompts.iter().map(|p| p.len()).sum::<usize>();
-
-        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); n];
-        let mut done: Vec<bool> = vec![false; n];
-        let mut ttft: Vec<Option<f64>> = vec![None; n];
-        let max_gen = batch.requests.iter().map(|r| r.max_new_tokens).max().unwrap_or(0);
-
-        let mut current: Vec<u32> = Vec::with_capacity(n);
-        for (i, lg) in logits.iter().enumerate() {
-            let tok = sampler.sample(lg, &batch.requests[i].params);
-            current.push(tok);
-        }
-
-        for _step in 0..max_gen {
-            let step_t0 = Instant::now();
-            // commit the sampled tokens
-            for i in 0..n {
-                if done[i] {
-                    continue;
-                }
-                outputs[i].push(current[i]);
-                if ttft[i].is_none() {
-                    ttft[i] = Some(batch.requests[i].arrived.elapsed().as_secs_f64() * 1e6);
-                }
-                metrics.tokens_generated += 1;
-                if Some(current[i]) == batch.requests[i].stop_token
-                    || outputs[i].len() >= batch.requests[i].max_new_tokens
-                {
-                    done[i] = true;
-                }
-            }
-            if done.iter().all(|&d| d) {
-                break;
-            }
-            logits = backend.decode(&mut state, &current)?;
-            for i in 0..n {
-                if !done[i] {
-                    current[i] = sampler.sample(&logits[i], &batch.requests[i].params);
-                }
-            }
-            metrics.per_token.record(step_t0.elapsed());
-        }
-        drop(state);
-
-        let decode_s = prefill_done.elapsed().as_secs_f64();
-        let mut responses = Vec::with_capacity(n);
-        for (i, req) in batch.requests.into_iter().enumerate() {
-            let ttft_us = ttft[i].unwrap_or_else(|| req.arrived.elapsed().as_secs_f64() * 1e6);
-            metrics.ttft.record_us(ttft_us);
-            let total_us = req.arrived.elapsed().as_secs_f64() * 1e6;
-            metrics.e2e.record_us(total_us);
-            metrics.requests_done += 1;
-            responses.push(GenResponse {
-                id: req.id,
-                prompt_len: req.prompt.len(),
-                tokens: std::mem::take(&mut outputs[i]),
-                ttft_us,
-                total_us,
-                decode_s,
-            });
-        }
-        let _ = t0;
-        Ok(responses)
-    }
-
     /// Drive a fixed request set to completion (closed loop).
     pub fn run_closed_loop(
         backend: &mut dyn Backend,
         requests: Vec<GenRequest>,
         cfg: &CoordinatorConfig,
     ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
-        let mut metrics = ServeMetrics::new();
-        let mut batcher = Batcher::new(cfg.batcher.clone());
-        let mut sampler = Sampler::new(0xfb90);
-        let mut responses = Vec::new();
+        let mut lp = ServeLoop::new(backend, cfg, true)?;
         for r in requests {
-            metrics.requests_in += 1;
-            if !batcher.submit(r) {
+            if !lp.submit(r, None)? {
                 anyhow::bail!("admission queue overflow in closed loop");
             }
         }
-        // force release: in a closed loop nothing else arrives
-        while !batcher.is_empty() {
-            let now = Instant::now() + cfg.batcher.max_wait + std::time::Duration::from_millis(1);
-            if let Some(batch) = batcher.next_batch(now) {
-                responses.extend(Self::run_batch(backend, batch, &mut sampler, &mut metrics)?);
-            }
-        }
+        lp.drain_all()?;
+        let (mut responses, metrics) = lp.into_parts();
         responses.sort_by_key(|r| r.id);
         Ok((responses, metrics))
     }
@@ -147,52 +378,41 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel::<WorkItem>();
         let join = std::thread::spawn(move || -> Result<ServeMetrics> {
             let mut backend = make_backend()?;
-            let mut metrics = ServeMetrics::new();
-            let mut batcher = Batcher::new(cfg.batcher.clone());
-            let mut sampler = Sampler::new(0xfb90);
-            let mut sinks: Vec<(u64, mpsc::Sender<GenResponse>)> = Vec::new();
+            let mut lp = ServeLoop::new(backend.as_mut(), &cfg, false)?;
             loop {
-                // 1) drain the submit channel (bounded wait keeps latency low)
-                let timeout = cfg.batcher.max_wait.min(std::time::Duration::from_millis(5));
+                // 1) pull work: while slots are decoding only drain what
+                //    is already queued; otherwise block briefly (covers
+                //    both truly idle and a partial group waiting out
+                //    max_wait — no busy spin)
+                let timeout = if lp.occupied() > 0 {
+                    Duration::ZERO
+                } else {
+                    cfg.batcher.max_wait.min(Duration::from_millis(5))
+                };
                 match rx.recv_timeout(timeout) {
                     Ok(WorkItem::Request(req, sink)) => {
-                        metrics.requests_in += 1;
-                        sinks.push((req.id, sink));
-                        if !batcher.submit(req) {
-                            crate::log_warn!("queue full: shedding request");
-                        }
-                        // opportunistically drain everything already queued
+                        let _ = lp.submit(req, Some(sink));
                         while let Ok(item) = rx.try_recv() {
                             match item {
                                 WorkItem::Request(req, sink) => {
-                                    metrics.requests_in += 1;
-                                    sinks.push((req.id, sink));
-                                    if !batcher.submit(req) {
-                                        crate::log_warn!("queue full: shedding request");
-                                    }
+                                    let _ = lp.submit(req, Some(sink));
                                 }
-                                WorkItem::Shutdown => return Ok(metrics),
+                                WorkItem::Shutdown => {
+                                    lp.drain_all()?;
+                                    return Ok(lp.into_parts().1);
+                                }
                             }
                         }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Ok(WorkItem::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        // drain remaining work before exiting
-                        while !batcher.is_empty() {
-                            let now = Instant::now() + cfg.batcher.max_wait;
-                            if let Some(batch) = batcher.next_batch(now) {
-                                let rs = Self::run_batch(&mut *backend, batch, &mut sampler, &mut metrics)?;
-                                deliver(&mut sinks, rs);
-                            }
-                        }
-                        return Ok(metrics);
+                        lp.drain_all()?;
+                        return Ok(lp.into_parts().1);
                     }
                 }
-                // 2) form + run batches
-                while let Some(batch) = batcher.next_batch(Instant::now()) {
-                    let rs = Self::run_batch(&mut *backend, batch, &mut sampler, &mut metrics)?;
-                    deliver(&mut sinks, rs);
-                }
+                // 2) admit into free slots, then one decode step
+                lp.admit(Instant::now())?;
+                lp.step()?;
             }
         });
         CoordinatorHandle { tx, join: Some(join), next_id: std::sync::atomic::AtomicU64::new(1) }
@@ -200,17 +420,8 @@ impl Coordinator {
 }
 
 enum WorkItem {
-    Request(GenRequest, mpsc::Sender<GenResponse>),
+    Request(GenRequest, mpsc::Sender<GenEvent>),
     Shutdown,
-}
-
-fn deliver(sinks: &mut Vec<(u64, mpsc::Sender<GenResponse>)>, responses: Vec<GenResponse>) {
-    for r in responses {
-        if let Some(idx) = sinks.iter().position(|(id, _)| *id == r.id) {
-            let (_, sink) = sinks.swap_remove(idx);
-            let _ = sink.send(r);
-        }
-    }
 }
 
 /// Client handle to a spawned coordinator.
@@ -221,8 +432,11 @@ pub struct CoordinatorHandle {
 }
 
 impl CoordinatorHandle {
-    /// Submit a request; returns a receiver for the response.
-    pub fn submit(&self, mut req: GenRequest) -> mpsc::Receiver<GenResponse> {
+    /// Submit a request; returns its event stream. Tokens arrive as they
+    /// are sampled; the stream ends with one `Done` or `Error` event.
+    /// Explicit (nonzero) ids must be unique among in-flight requests;
+    /// id 0 is auto-assigned.
+    pub fn submit(&self, mut req: GenRequest) -> mpsc::Receiver<GenEvent> {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
@@ -230,6 +444,22 @@ impl CoordinatorHandle {
         let (tx, rx) = mpsc::channel();
         let _ = self.tx.send(WorkItem::Request(req, tx));
         rx
+    }
+
+    /// Convenience: submit and block for the final response, discarding
+    /// intermediate token events.
+    pub fn submit_wait(&self, req: GenRequest) -> Result<GenResponse> {
+        let rx = self.submit(req);
+        for ev in rx {
+            match ev {
+                GenEvent::Done(r) => return Ok(r),
+                GenEvent::Error { id, message } => {
+                    anyhow::bail!("request {id} failed: {message}")
+                }
+                GenEvent::Token { .. } => {}
+            }
+        }
+        anyhow::bail!("coordinator dropped the event stream")
     }
 
     /// Graceful shutdown; returns final metrics.

@@ -206,13 +206,21 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let backend_kind = args.get_or("backend", "native").to_string();
     let submode = parse_submode(args);
     let art = artifacts();
+    // --sync forces the batch-synchronous aligned-group baseline; pjrt
+    // runs per-lane surfaces when continuous (the lock-step artifacts
+    // cannot admit mid-flight)
+    let continuous = !args.flag("sync");
 
+    let cfg = CoordinatorConfig { continuous, ..CoordinatorConfig::default() };
     let handle = Coordinator::spawn(
         move || -> Result<Box<dyn Backend>> {
             Ok(match backend_kind.as_str() {
                 "pjrt" => {
                     let mut reg = ExecRegistry::open(&art)?;
-                    Box::new(PjrtBackend::new(&mut reg, &store, &[1, 4], &store.cfg.name)?)
+                    Box::new(
+                        PjrtBackend::new(&mut reg, &store, &[1, 4], &store.cfg.name)?
+                            .with_per_lane(continuous),
+                    )
                 }
                 _ => Box::new(NativeBackend::new(
                     NativeEngine::from_store(&store, submode)?,
@@ -220,7 +228,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 )),
             })
         },
-        CoordinatorConfig::default(),
+        cfg,
     );
 
     let mut receivers = Vec::new();
@@ -232,10 +240,28 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     }
     let tok = ByteTokenizer::default();
     for (i, rx) in receivers.into_iter().enumerate() {
-        let r = rx.recv().context("coordinator dropped a response")?;
+        // consume the event stream: count streamed tokens, keep the final
+        // response
+        let mut streamed = 0usize;
+        let mut done: Option<crate::coordinator::request::GenResponse> = None;
+        for ev in rx {
+            match ev {
+                crate::coordinator::request::GenEvent::Token { .. } => streamed += 1,
+                crate::coordinator::request::GenEvent::Done(r) => {
+                    done = Some(r);
+                    break;
+                }
+                crate::coordinator::request::GenEvent::Error { message, .. } => {
+                    crate::log_warn!("req {i}: {message}");
+                    break;
+                }
+            }
+        }
+        let Some(r) = done else { continue };
         crate::log_info!(
-            "req {i}: {} tokens, ttft {:.1}ms -> {:?}",
+            "req {i}: {} tokens ({} streamed), ttft {:.1}ms -> {:?}",
             r.tokens.len(),
+            streamed,
             r.ttft_us / 1e3,
             tok.decode(&r.tokens).chars().take(40).collect::<String>()
         );

@@ -136,10 +136,12 @@ impl Scorer for PjrtScorer {
 }
 
 /// Generation-path scorer used to cross-check the serve artifacts: builds
-/// logits via a backend's prefill (slower; tests only).
+/// logits via a backend's slot prefill (slower; tests only).
 pub fn backend_last_logits(b: &mut dyn backend::Backend, tokens: &[u32]) -> Result<Vec<f32>> {
-    let (_state, mut logits) = b.prefill(&[tokens], 1)?;
-    Ok(logits.remove(0))
+    let mut state = b.open_batch(1)?;
+    let logits = b.prefill_slot(&mut state, 0, tokens)?;
+    b.release_slot(&mut state, 0)?;
+    Ok(logits)
 }
 
 #[cfg(test)]

@@ -82,6 +82,7 @@ COMMANDS:
   info                       Inventory of artifacts, models and executables
   generate                   Generate tokens from a model (native engine or PJRT)
   serve                      Run the serving coordinator on a synthetic workload
+                             (continuous batching; --sync for the lock-step baseline)
   eval-ppl                   Perplexity on the held-out validation set (Table 1 cell)
   eval-zeroshot              Zero-shot multiple-choice accuracy (Table 2 cell)
   judge                      Pairwise model comparison (Fig 6 cell)
@@ -106,7 +107,7 @@ pub fn run() -> Result<()> {
         return Ok(());
     }
     let cmd = raw.remove(0);
-    let args = Args::parse(raw, &["help", "detail", "fused", "verbose", "quiet", "no-sub"])?;
+    let args = Args::parse(raw, &["help", "detail", "fused", "verbose", "quiet", "no-sub", "sync"])?;
     if args.flag("verbose") {
         super::logging::set_level(super::logging::Level::Debug);
     }

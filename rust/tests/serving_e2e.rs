@@ -2,7 +2,7 @@
 //! generation path is covered too when artifacts are present).
 
 use fbquant::coordinator::backend::{Backend, NativeBackend, PjrtBackend};
-use fbquant::coordinator::request::GenRequest;
+use fbquant::coordinator::request::{GenEvent, GenRequest};
 use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
 use fbquant::engine::{NativeEngine, SubMode};
 use fbquant::model::{ByteTokenizer, WeightStore};
@@ -68,7 +68,7 @@ fn batched_generation_matches_single_request() {
                 .unwrap();
         singles.push(r.remove(0).tokens);
     }
-    // batch (same prompt length => one aligned batch)
+    // all three at once: the continuous pool decodes them side by side
     let reqs: Vec<GenRequest> = prompts
         .iter()
         .enumerate()
@@ -76,9 +76,11 @@ fn batched_generation_matches_single_request() {
         .collect();
     let (responses, metrics) =
         Coordinator::run_closed_loop(&mut backend, reqs, &CoordinatorConfig::default()).unwrap();
-    assert_eq!(metrics.batches_formed, 1, "equal-length prompts must batch together");
+    assert_eq!(metrics.admissions, 3);
+    assert_eq!(metrics.pools_opened, 1, "one persistent pool serves all three");
+    assert!(metrics.peak_occupied >= 3, "requests did not decode concurrently");
     for (r, single) in responses.iter().zip(&singles) {
-        assert_eq!(&r.tokens, single, "batching changed greedy output");
+        assert_eq!(&r.tokens, single, "concurrent decoding changed greedy output");
     }
 }
 
@@ -122,14 +124,61 @@ fn pjrt_generation_agrees_with_native() {
         tok.decode(&pjrt_tokens)
     );
 
-    // batched pjrt decode (capacity 4, 2 occupied) also works
+    // batched lock-step pjrt decode (aligned group, capacity 4, 2 occupied,
+    // empty lanes masked) also works
     let reqs: Vec<GenRequest> = (0..2)
         .map(|i| GenRequest::new(i as u64 + 1, prompt.clone(), 8))
         .collect();
-    let (responses, _) =
+    let (responses, metrics) =
         Coordinator::run_closed_loop(&mut pjrt, reqs, &CoordinatorConfig::default()).unwrap();
     assert_eq!(responses.len(), 2);
     assert_eq!(responses[0].tokens, responses[1].tokens, "identical prompts, identical greedy output");
+    assert_eq!(metrics.batches_formed, 1, "lock-step pjrt forms aligned groups");
+}
+
+#[test]
+fn pjrt_per_lane_continuous_agrees_with_native() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let tok = ByteTokenizer::default();
+    let store =
+        WeightStore::load(&WeightStore::path_for(&root, "llamoid-tiny", "fbquant", 4)).unwrap();
+    let prompt = tok.encode("the salty crab drifts in the sea");
+
+    let mut native = native_backend(&root, "fbquant", 4);
+    let req = GenRequest::new(1, prompt.clone(), 12);
+    let (mut rn, _) =
+        Coordinator::run_closed_loop(&mut native, vec![req], &CoordinatorConfig::default()).unwrap();
+    let native_tokens = rn.remove(0).tokens;
+
+    // per-lane mode: every slot is an independent batch-1 surface, so the
+    // continuous scheduler can admit prompts of unequal lengths together
+    let mut reg = ExecRegistry::open(&root).unwrap();
+    let mut pjrt =
+        PjrtBackend::new(&mut reg, &store, &[1, 4], "e2e").unwrap().with_per_lane(true);
+    assert!(pjrt.continuous());
+    let reqs = vec![
+        GenRequest::new(1, prompt.clone(), 12),
+        GenRequest::new(2, tok.encode("the quiet owl waits "), 8),
+    ];
+    let (responses, metrics) =
+        Coordinator::run_closed_loop(&mut pjrt, reqs, &CoordinatorConfig::default()).unwrap();
+    assert_eq!(responses.len(), 2);
+    assert_eq!(metrics.admissions, 2);
+    assert_eq!(metrics.batches_formed, 0, "per-lane pjrt admits continuously");
+    let agree = native_tokens
+        .iter()
+        .zip(&responses[0].tokens)
+        .take_while(|(a, b)| a == b)
+        .count();
+    assert!(
+        agree >= 9,
+        "per-lane pjrt diverged early from native: {agree}/12\n native: {:?}\n pjrt: {:?}",
+        tok.decode(&native_tokens),
+        tok.decode(&responses[0].tokens)
+    );
 }
 
 #[test]
@@ -159,8 +208,21 @@ fn spawned_coordinator_roundtrip() {
         })
         .collect();
     for rx in rxs {
-        let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let mut streamed = Vec::new();
+        let mut done = None;
+        while let Ok(ev) = rx.recv_timeout(std::time::Duration::from_secs(60)) {
+            match ev {
+                GenEvent::Token { token, .. } => streamed.push(token),
+                GenEvent::Done(r) => {
+                    done = Some(r);
+                    break;
+                }
+                GenEvent::Error { message, .. } => panic!("request failed: {message}"),
+            }
+        }
+        let r = done.expect("stream ended without Done");
         assert_eq!(r.tokens.len(), 8);
+        assert_eq!(r.tokens, streamed, "streamed tokens disagree with final response");
     }
     let metrics = handle.shutdown().unwrap();
     assert_eq!(metrics.requests_done, 5);

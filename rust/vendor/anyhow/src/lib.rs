@@ -1,0 +1,168 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Covers exactly the API surface fbquant uses — [`Result`], [`Error`],
+//! [`Error::msg`], the [`anyhow!`] / [`bail!`] macros and the [`Context`]
+//! extension trait — so the workspace builds with no network access.
+//! The implementation collapses context chains into a single message
+//! string (`"context: cause"`), which is all the crate's error reporting
+//! relies on. The real crates.io `anyhow` is call-compatible: point the
+//! workspace manifest at it to switch back.
+
+use std::fmt::{self, Debug, Display};
+
+/// Drop-in alias for `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error value.
+///
+/// Like the real `anyhow::Error`, this deliberately does NOT implement
+/// `std::error::Error`: the blanket `From<E: std::error::Error>` below
+/// (which powers `?` conversions) would otherwise conflict with the
+/// reflexive `From<T> for T` impl in core.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+mod ext {
+    /// Sealed unification of `std::error::Error` types and [`crate::Error`]
+    /// so [`crate::Context`] applies to both result flavours.
+    pub trait IntoMsg {
+        fn into_msg(self) -> String;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoMsg for E {
+        fn into_msg(self) -> String {
+            self.to_string()
+        }
+    }
+
+    impl IntoMsg for crate::Error {
+        fn into_msg(self) -> String {
+            self.to_string()
+        }
+    }
+}
+
+/// Attach context to errors: `.context("...")` / `.with_context(|| ...)`.
+pub trait Context<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoMsg> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {}", e.into_msg()) })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error { msg: format!("{}: {}", f(), e.into_msg()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening file").unwrap_err();
+        assert_eq!(e.to_string(), "opening file: boom");
+        let r2: Result<()> = Err(anyhow!("inner"));
+        let e2 = r2.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e2.to_string(), "step 3: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn bail_returns_formatted() {
+        fn inner(n: usize) -> Result<usize> {
+            if n == 0 {
+                bail!("n was {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(inner(0).unwrap_err().to_string(), "n was 0");
+        assert_eq!(inner(2).unwrap(), 2);
+    }
+}

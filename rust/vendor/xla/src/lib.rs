@@ -1,0 +1,201 @@
+//! Offline stub of the `xla` crate (xla-rs) API surface used by
+//! `fbquant::runtime`.
+//!
+//! [`Literal`] is a real host-side container (shape + typed data), so all
+//! marshalling code paths type-check and unit-test without a PJRT runtime.
+//! The client / compiler / executable entry points fail at runtime with a
+//! clear message: replace this path dependency in the workspace manifest
+//! with the real `xla` crate (github.com/LaurentMazare/xla-rs) to execute
+//! the AOT HLO artifacts.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: fbquant was built against the vendored xla stub \
+         (rust/vendor/xla); point the workspace manifest at the real \
+         xla-rs crate to enable the PJRT backend"
+    ))
+}
+
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: typed buffer plus dimensions (row-major).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized {
+    fn vec1(data: &[Self]) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn vec1(data: &[Self]) -> Literal {
+        Literal { data: Data::F32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(unavailable("Literal::to_vec::<f32> on non-f32 literal")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn vec1(data: &[Self]) -> Literal {
+        Literal { data: Data::I32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(unavailable("Literal::to_vec::<i32> on non-i32 literal")),
+        }
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::vec1(data)
+    }
+
+    fn numel(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(parts) => parts.iter().map(|p| p.numel()).sum(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.numel() as i64 {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elements) from {} elements",
+                self.numel()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(unavailable("Literal::to_tuple on non-tuple literal")),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl From<i32> for Literal {
+    fn from(v: i32) -> Literal {
+        Literal { data: Data::I32(vec![v]), dims: Vec::new() }
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1f32, 2.0, 3.0, 4.0]);
+        let square = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(square.dims(), &[2, 2]);
+        assert_eq!(square.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 2]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_i32_literal() {
+        let lit = Literal::from(7i32);
+        assert!(lit.dims().is_empty());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn runtime_entry_points_report_stub() {
+        let e = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(e.contains("stub"), "{e}");
+    }
+}
