@@ -1,7 +1,8 @@
 //! Fig. 7: token throughput (tk/s), batch 1 — FP vs INT4 vs INT4-Sub
 //! (naive sub-branch) vs INT4-FBQuant (fused) — plus the serving-side
-//! comparison the quantization exists for: continuous (slot-pool) vs
-//! batch-synchronous scheduling on a mixed-length closed-loop workload.
+//! comparisons the quantization exists for: continuous (slot-pool) vs
+//! batch-synchronous scheduling, paged vs dense KV at an equal memory
+//! budget, and prompt-prefix reuse on a templated workload.
 //!
 //! Paper shape (Llama2-7B, RTX 3090, prefill 256 / decode 64):
 //! FP16 ≈ 48 tk/s, INT4-Sub ≈ 46 tk/s (sub-branch eats the quant win),
@@ -127,6 +128,129 @@ fn serving_comparison(model: &str, stream: &TokenStream, n: usize) -> anyhow::Re
     Ok(())
 }
 
+/// Paged vs dense KV at the SAME byte budget: the dense baseline fits 4
+/// full-capacity caches; the paged pool spends those bytes on pages and
+/// admits as many slots as the workload's real sequence lengths allow.
+fn paged_vs_dense(model: &str, stream: &TokenStream, n: usize) -> anyhow::Result<()> {
+    let store = WeightStore::load(&ckpt(model, "fbquant", 4))?;
+    let cfg = store.cfg.clone();
+    let page_size = 16usize;
+    let dense_slots = 4usize;
+    let slot_bytes = 2 * cfg.n_layers * cfg.max_seq * cfg.n_heads * cfg.head_dim() * 4;
+    let page_bytes = 2 * cfg.n_layers * page_size * cfg.n_heads * cfg.head_dim() * 4;
+    let budget = dense_slots * slot_bytes;
+    let n_pages = budget / page_bytes;
+    // how many pages one request can pin at worst, over this workload
+    let probe = serving_workload(stream, n);
+    let worst_pages = probe
+        .iter()
+        .map(|r| (r.prompt.len() + r.max_new_tokens + page_size - 1) / page_size)
+        .max()
+        .unwrap_or(1);
+    let paged_slots = (n_pages / worst_pages).max(1);
+
+    println!(
+        "\n=== serving: paged vs dense KV at a fixed {} budget ({model}, {n} reqs) ===",
+        fbquant::util::human_bytes(budget)
+    );
+    println!(
+        "{:<8} {:>6} {:>9} {:>10} {:>10} {:>9} {:>13} {:>11} {:>9}",
+        "kv", "slots", "gen toks", "wall s", "gen tk/s", "peak occ", "peak kv bytes", "prefix hit", "cow"
+    );
+    println!("{}", "-".repeat(92));
+    let mut peaks = Vec::new();
+    for paged in [false, true] {
+        let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+        let mut backend = if paged {
+            NativeBackend::new(engine, "paged")
+                .with_max_slots(paged_slots)
+                .with_kv_pool(page_size, n_pages)
+        } else {
+            NativeBackend::new(engine, "dense").with_dense().with_max_slots(dense_slots)
+        };
+        let reqs = serving_workload(stream, n);
+        let t0 = Instant::now();
+        let (responses, metrics) =
+            Coordinator::run_closed_loop(&mut backend, reqs, &CoordinatorConfig::default())?;
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(responses.len(), n, "lost requests");
+        let (peak_bytes, hits, cow) = match &metrics.kv_pool {
+            Some(p) => (p.peak_pages_in_use * page_bytes, p.prefix_hits, p.cow_copies),
+            None => (dense_slots * slot_bytes, 0, 0),
+        };
+        println!(
+            "{:<8} {:>6} {:>9} {:>10.2} {:>10.1} {:>9} {:>13} {:>11} {:>9}",
+            if paged { "paged" } else { "dense" },
+            if paged { paged_slots } else { dense_slots },
+            metrics.tokens_generated,
+            wall,
+            metrics.tokens_generated as f64 / wall,
+            metrics.peak_occupied,
+            fbquant::util::human_bytes(peak_bytes),
+            hits,
+            cow,
+        );
+        peaks.push(metrics.peak_occupied);
+    }
+    assert!(
+        paged_slots > dense_slots && peaks[1] > peaks[0],
+        "paged KV must admit strictly more slots than dense at the same budget \
+         ({paged_slots} vs {dense_slots} slots, peak {} vs {})",
+        peaks[1],
+        peaks[0]
+    );
+    println!(
+        "\nsame {} of KV: dense admits {dense_slots} slots, the paged pool admits {paged_slots} \
+         (worst-case {worst_pages} pages/request) — {:.1}x the concurrency.",
+        fbquant::util::human_bytes(budget),
+        paged_slots as f64 / dense_slots as f64
+    );
+    Ok(())
+}
+
+/// Templated workload: a shared 48-token prompt prefix + unique 16-token
+/// suffix per request. Admissions after the first map the template's
+/// pages from the prefix cache instead of re-running prefill over them.
+fn prefix_reuse_demo(model: &str, stream: &TokenStream) -> anyhow::Result<()> {
+    let store = WeightStore::load(&ckpt(model, "fbquant", 4))?;
+    let toks = stream.tokens();
+    let template: Vec<u32> = toks[..48].iter().map(|&b| b as u32).collect();
+    let mut rng = Pcg64::seeded(0x7e417);
+    let n = 12usize;
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut prompt = template.clone();
+        let start = rng.below(toks.len() - 17);
+        prompt.extend(toks[start..start + 16].iter().map(|&b| b as u32));
+        reqs.push(GenRequest::new(i as u64 + 1, prompt, 16));
+    }
+    let total_prompt: usize = reqs.iter().map(|r| r.prompt.len()).sum();
+
+    let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+    let mut backend = NativeBackend::new(engine, "prefix").with_max_slots(8);
+    let (responses, metrics) =
+        Coordinator::run_closed_loop(&mut backend, reqs, &CoordinatorConfig::default())?;
+    assert_eq!(responses.len(), n);
+    let pool = metrics.kv_pool.expect("paged backend reports pool stats");
+    println!("\n=== serving: prefix reuse on a templated workload ({model}, {n} reqs, shared 48-token template) ===");
+    println!(
+        "prefix cache: {} hits / {} admissions, {} of {} prompt tokens served from shared \
+         pages ({:.0}%), {} copy-on-write page copies, peak {} pages",
+        pool.prefix_hits,
+        pool.prefix_lookups,
+        pool.prefix_tokens_reused,
+        total_prompt,
+        100.0 * pool.prefix_tokens_reused as f64 / total_prompt as f64,
+        pool.cow_copies,
+        pool.peak_pages_in_use,
+    );
+    assert!(
+        pool.prefix_hits >= n - 1,
+        "every admission after the first should hit the template prefix"
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     if !have_artifacts() {
         eprintln!("fig7: run `make artifacts` first");
@@ -177,6 +301,9 @@ fn main() -> anyhow::Result<()> {
     println!("paper (3090, Llama2-7B): FP16 48 tk/s, INT4-Sub 46, INT4 ~64, INT4-FBQuant 61.");
 
     let n = if fast() { 12 } else { 24 };
-    serving_comparison(if fast() { "llamoid-tiny" } else { model }, &stream, n)?;
+    let serve_model = if fast() { "llamoid-tiny" } else { model };
+    serving_comparison(serve_model, &stream, n)?;
+    paged_vs_dense(serve_model, &stream, n)?;
+    prefix_reuse_demo(serve_model, &stream)?;
     Ok(())
 }

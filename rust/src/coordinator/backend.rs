@@ -11,8 +11,15 @@
 //! Backends advertise how liberal their admission discipline is via
 //! [`Backend::continuous`]:
 //!
-//! * [`NativeBackend`] — one independent KV cache per slot, fully
-//!   continuous: any free slot can be refilled at any time.
+//! * [`NativeBackend`] — fully continuous: any free slot can be refilled
+//!   at any time. By default every batch runs on a **paged KV pool**
+//!   ([`crate::engine::kv::KvPagePool`]): slots map fixed-size pages on
+//!   demand (resident bytes track true sequence length, pages-in-use is
+//!   the admission-pressure signal), prompts sharing a cached prefix map
+//!   the same read-only pages, and [`Backend::max_batch`] is the
+//!   configurable [`NativeBackend::with_max_slots`] — decoupled from any
+//!   compiled lane count. [`NativeBackend::with_dense`] restores the
+//!   one-dense-`KvCache`-per-slot baseline.
 //! * [`PjrtBackend`] in **per-lane** mode (`with_per_lane(true)`) — each
 //!   slot is an independent batch-1 surface with its own position
 //!   counter, so admission is continuous too (per-slot position
@@ -29,6 +36,7 @@
 //!   position vector would lift this restriction — see ROADMAP.
 
 use super::request::GenRequest;
+use crate::engine::kv::{KvPagePool, KvPoolConfig, KvPoolStats, PagedKv, PagedKvRef};
 use crate::engine::native::EngineWs;
 use crate::engine::{KvCache, NativeEngine, SubMode};
 use crate::model::{Config, WeightStore};
@@ -55,8 +63,14 @@ pub struct PjrtLane {
 
 /// Per-batch generation state (opaque to the serving loop).
 pub enum BatchState {
-    /// Native engine: one independent KV cache per occupied slot.
+    /// Native engine, dense baseline: one independent full-capacity KV
+    /// cache per occupied slot.
     Native { slots: Vec<Option<KvCache>> },
+    /// Native engine, paged (default): one shared page pool, one paged
+    /// view per occupied slot. Dropping the state drops the pool (and
+    /// with it the prefix cache), so a serving run's reuse scope is its
+    /// own pool.
+    NativePaged { pool: KvPagePool, slots: Vec<Option<PagedKv>> },
     /// PJRT lock-step surface: shared KV buffers and a scalar position.
     Pjrt {
         kv_k: Vec<f32>,
@@ -104,14 +118,32 @@ pub trait Backend {
         Ok(out)
     }
 
+    /// Reserve whatever `slot` needs for its next decode step (for the
+    /// paged native backend: the KV page the next position lands in,
+    /// copy-on-write included). The serving loop calls this per slot
+    /// before the batched [`Backend::decode`]; an error means the slot
+    /// cannot advance (e.g. pool exhausted) and the loop finishes that
+    /// one request with a terminal error instead of aborting.
+    fn prepare_decode(&mut self, _state: &mut BatchState, _slot: usize) -> Result<()> {
+        Ok(())
+    }
+
     /// One decode step over the listed occupied slots: `tokens[i]` names a
     /// slot and its last sampled token. Returns next-token logits per
     /// entry, in the same order. Unlisted slots are untouched (native,
-    /// per-lane) or masked (lock-step).
+    /// per-lane) or masked (lock-step). Slots must have been
+    /// [`Backend::prepare_decode`]d this step.
     fn decode(&mut self, state: &mut BatchState, tokens: &[SlotToken]) -> Result<Vec<Vec<f32>>>;
 
     /// Free `slot` so a queued request can be admitted into it.
     fn release_slot(&mut self, state: &mut BatchState, slot: usize) -> Result<()>;
+
+    /// KV-pool counters for this batch, when the backend serves from a
+    /// paged pool (None on dense/PJRT surfaces). The serving loop folds
+    /// these into [`super::metrics::ServeMetrics`].
+    fn kv_stats(&self, _state: &BatchState) -> Option<KvPoolStats> {
+        None
+    }
 
     fn name(&self) -> String;
 }
@@ -158,20 +190,72 @@ pub fn validate_batch(backend: &dyn Backend, reqs: &[GenRequest]) -> Result<()> 
 // Native backend
 // ---------------------------------------------------------------------------
 
+/// Positions per KV page unless overridden by
+/// [`NativeBackend::with_kv_pool`].
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
 pub struct NativeBackend {
     engine: NativeEngine,
     ws: EngineWs,
     label: String,
+    /// paged pool (default) vs one dense cache per slot
+    paged: bool,
+    /// slot-pool width advertised as `max_batch` — decoupled from any
+    /// compiled lane count on the native path
+    max_slots: usize,
+    page_size: usize,
+    /// pool size in pages; 0 = worst case (`capacity * max_seq` worth,
+    /// so decode can never exhaust the pool mid-flight)
+    pool_pages: usize,
 }
 
 impl NativeBackend {
     pub fn new(engine: NativeEngine, label: &str) -> NativeBackend {
-        NativeBackend { engine, ws: EngineWs::default(), label: label.to_string() }
+        NativeBackend {
+            engine,
+            ws: EngineWs::default(),
+            label: label.to_string(),
+            paged: true,
+            max_slots: 4,
+            page_size: DEFAULT_PAGE_SIZE,
+            pool_pages: 0,
+        }
     }
 
     pub fn from_checkpoint(path: &std::path::Path, mode: SubMode, label: &str) -> Result<NativeBackend> {
         let store = WeightStore::load(path)?;
         Ok(NativeBackend::new(NativeEngine::from_store(&store, mode)?, label))
+    }
+
+    /// Dense baseline: one full-capacity `KvCache` per slot, no paging,
+    /// no prefix reuse (the pre-pool behaviour; kept for equivalence
+    /// tests and the fig7 memory-budget comparison).
+    pub fn with_dense(mut self) -> NativeBackend {
+        self.paged = false;
+        self
+    }
+
+    /// Slot-pool width (`max_batch`). The native engine decodes slots
+    /// sequentially, so this bounds concurrency/occupancy accounting —
+    /// with the paged pool it can exceed the old dense default of 4
+    /// because short sequences no longer pin `max_seq` bytes each.
+    pub fn with_max_slots(mut self, n: usize) -> NativeBackend {
+        assert!(n > 0, "zero slots");
+        self.max_slots = n;
+        self
+    }
+
+    /// Explicit pool geometry: `page_size` positions per page and a hard
+    /// budget of `n_pages` pages. With a finite budget, admissions that
+    /// cannot get pages are shed gracefully (prefill returns an error
+    /// and the coordinator emits a terminal `Error` event), and a slot
+    /// starved mid-decode fails [`Backend::prepare_decode`] so the
+    /// serving loop terminates just that request.
+    pub fn with_kv_pool(mut self, page_size: usize, n_pages: usize) -> NativeBackend {
+        assert!(page_size > 0 && n_pages > 0, "degenerate pool geometry");
+        self.page_size = page_size;
+        self.pool_pages = n_pages;
+        self
     }
 
     pub fn engine(&self) -> &NativeEngine {
@@ -193,13 +277,11 @@ impl Backend for NativeBackend {
     }
 
     fn max_batch(&self) -> usize {
-        // the native engine decodes sequentially per slot; the pool size
-        // still bounds concurrency for fairness/occupancy accounting.
-        4
+        self.max_slots
     }
 
     fn continuous(&self) -> bool {
-        // every slot owns an independent KV cache: admit any time.
+        // every slot owns an independent KV view: admit any time.
         true
     }
 
@@ -207,56 +289,153 @@ impl Backend for NativeBackend {
         if capacity == 0 {
             bail!("zero-capacity batch");
         }
-        Ok(BatchState::Native { slots: (0..capacity).map(|_| None).collect() })
+        if !self.paged {
+            return Ok(BatchState::Native { slots: (0..capacity).map(|_| None).collect() });
+        }
+        let cfg = &self.engine.cfg;
+        let pages_per_seq = (cfg.max_seq + self.page_size - 1) / self.page_size;
+        let n_pages = if self.pool_pages > 0 { self.pool_pages } else { capacity * pages_per_seq };
+        let pool = KvPagePool::new(KvPoolConfig::new(
+            cfg.n_layers,
+            cfg.n_heads,
+            cfg.head_dim(),
+            self.page_size,
+            n_pages,
+        ));
+        Ok(BatchState::NativePaged { pool, slots: (0..capacity).map(|_| None).collect() })
     }
 
     fn prefill_slot(&mut self, state: &mut BatchState, slot: usize, prompt: &[u32])
         -> Result<Vec<f32>> {
-        let BatchState::Native { slots } = state else {
-            bail!("native backend got a foreign batch state");
-        };
-        if slot >= slots.len() {
-            bail!("slot {slot} out of range ({} slots)", slots.len());
-        }
-        if slots[slot].is_some() {
-            bail!("slot {slot} is already occupied");
-        }
         if prompt.is_empty() {
             bail!("empty prompt");
         }
-        let cfg = &self.engine.cfg;
-        let mut kv = KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim());
-        let logits = self.engine.prefill(prompt, &mut kv, &mut self.ws);
-        slots[slot] = Some(kv);
-        Ok(logits)
+        match state {
+            BatchState::Native { slots } => {
+                if slot >= slots.len() {
+                    bail!("slot {slot} out of range ({} slots)", slots.len());
+                }
+                if slots[slot].is_some() {
+                    bail!("slot {slot} is already occupied");
+                }
+                let cfg = &self.engine.cfg;
+                let mut kv = KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim());
+                let logits = self.engine.prefill(prompt, &mut kv, &mut self.ws);
+                slots[slot] = Some(kv);
+                Ok(logits)
+            }
+            BatchState::NativePaged { pool, slots } => {
+                if slot >= slots.len() {
+                    bail!("slot {slot} out of range ({} slots)", slots.len());
+                }
+                if slots[slot].is_some() {
+                    bail!("slot {slot} is already occupied");
+                }
+                let mut kv = pool.new_kv(self.engine.cfg.max_seq);
+                // map any cached page-aligned prefix, then make the rest
+                // of the prompt writable (copy-on-write included) before
+                // the engine runs — exhaustion sheds here, not mid-step
+                let reused = pool.adopt_prefix(&mut kv, prompt);
+                if let Err(e) = pool.ensure_range(&mut kv, reused, prompt.len()) {
+                    pool.release_kv(&mut kv);
+                    return Err(e)
+                        .with_context(|| format!("admitting a {}-token prompt", prompt.len()));
+                }
+                pool.record_reuse(reused);
+                let logits = {
+                    let mut bound = PagedKvRef { pool: &mut *pool, kv: &mut kv };
+                    self.engine.prefill(&prompt[reused..], &mut bound, &mut self.ws)
+                };
+                pool.register_prefix(&kv, prompt);
+                slots[slot] = Some(kv);
+                Ok(logits)
+            }
+            _ => bail!("native backend got a foreign batch state"),
+        }
     }
 
     fn decode(&mut self, state: &mut BatchState, tokens: &[SlotToken]) -> Result<Vec<Vec<f32>>> {
-        let BatchState::Native { slots } = state else {
-            bail!("native backend got a foreign batch state");
-        };
-        let mut out = Vec::with_capacity(tokens.len());
-        for st in tokens {
-            let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
-                bail!("decode: slot {} is not occupied", st.slot);
-            };
-            if kv.remaining() == 0 {
-                bail!("slot {}: kv cache full", st.slot);
+        match state {
+            BatchState::Native { slots } => {
+                let mut out = Vec::with_capacity(tokens.len());
+                for st in tokens {
+                    let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
+                        bail!("decode: slot {} is not occupied", st.slot);
+                    };
+                    if kv.remaining() == 0 {
+                        bail!("slot {}: kv cache full", st.slot);
+                    }
+                    out.push(self.engine.decode_one(st.token, kv, &mut self.ws));
+                }
+                Ok(out)
             }
-            out.push(self.engine.decode_one(st.token, kv, &mut self.ws));
+            BatchState::NativePaged { pool, slots } => {
+                let mut out = Vec::with_capacity(tokens.len());
+                for st in tokens {
+                    let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
+                        bail!("decode: slot {} is not occupied", st.slot);
+                    };
+                    if kv.remaining() == 0 {
+                        bail!("slot {}: kv view full", st.slot);
+                    }
+                    // pages were reserved by prepare_decode; this is a
+                    // no-op backstop for callers that skipped it
+                    let pos = kv.len();
+                    pool.ensure_range(kv, pos, pos + 1)
+                        .with_context(|| format!("decoding slot {} at position {pos}", st.slot))?;
+                    let mut bound = PagedKvRef { pool: &mut *pool, kv };
+                    out.push(self.engine.decode_one(st.token, &mut bound, &mut self.ws));
+                }
+                Ok(out)
+            }
+            _ => bail!("native backend got a foreign batch state"),
         }
-        Ok(out)
+    }
+
+    fn prepare_decode(&mut self, state: &mut BatchState, slot: usize) -> Result<()> {
+        let BatchState::NativePaged { pool, slots } = state else {
+            return Ok(()); // dense caches are preallocated
+        };
+        let Some(kv) = slots.get_mut(slot).and_then(|s| s.as_mut()) else {
+            bail!("prepare_decode: slot {slot} is not occupied");
+        };
+        if kv.remaining() == 0 {
+            bail!("slot {slot}: kv view full");
+        }
+        let pos = kv.len();
+        pool.ensure_range(kv, pos, pos + 1)
+            .with_context(|| format!("slot {slot} cannot advance past position {pos}"))
     }
 
     fn release_slot(&mut self, state: &mut BatchState, slot: usize) -> Result<()> {
-        let BatchState::Native { slots } = state else {
-            bail!("native backend got a foreign batch state");
-        };
-        if slot >= slots.len() {
-            bail!("release: slot {slot} out of range ({} slots)", slots.len());
+        match state {
+            BatchState::Native { slots } => {
+                if slot >= slots.len() {
+                    bail!("release: slot {slot} out of range ({} slots)", slots.len());
+                }
+                slots[slot] = None;
+                Ok(())
+            }
+            BatchState::NativePaged { pool, slots } => {
+                if slot >= slots.len() {
+                    bail!("release: slot {slot} out of range ({} slots)", slots.len());
+                }
+                if let Some(mut kv) = slots[slot].take() {
+                    // pages shared with the prefix cache (or siblings)
+                    // stay resident; private pages return to the free list
+                    pool.release_kv(&mut kv);
+                }
+                Ok(())
+            }
+            _ => bail!("native backend got a foreign batch state"),
         }
-        slots[slot] = None;
-        Ok(())
+    }
+
+    fn kv_stats(&self, state: &BatchState) -> Option<KvPoolStats> {
+        match state {
+            BatchState::NativePaged { pool, .. } => Some(pool.stats()),
+            _ => None,
+        }
     }
 
     fn name(&self) -> String {
@@ -490,7 +669,7 @@ impl Backend for PjrtBackend {
                 let mut out = self.prefill_slots(state, &[(slot, prompt)])?;
                 Ok(out.remove(0))
             }
-            BatchState::Native { .. } => bail!("pjrt backend got a foreign batch state"),
+            _ => bail!("pjrt backend got a foreign batch state"),
         }
     }
 
@@ -543,7 +722,7 @@ impl Backend for PjrtBackend {
                     .map(|&(slot, _)| flat[slot * v..(slot + 1) * v].to_vec())
                     .collect())
             }
-            BatchState::Native { .. } => bail!("pjrt backend got a foreign batch state"),
+            _ => bail!("pjrt backend got a foreign batch state"),
         }
     }
 
@@ -622,7 +801,7 @@ impl Backend for PjrtBackend {
                 *decoded = true;
                 Ok(logits)
             }
-            BatchState::Native { .. } => bail!("pjrt backend got a foreign batch state"),
+            _ => bail!("pjrt backend got a foreign batch state"),
         }
     }
 
@@ -642,7 +821,7 @@ impl Backend for PjrtBackend {
                 occupied[slot] = false;
                 Ok(())
             }
-            BatchState::Native { .. } => bail!("pjrt backend got a foreign batch state"),
+            _ => bail!("pjrt backend got a foreign batch state"),
         }
     }
 

@@ -1,5 +1,5 @@
-//! Serving metrics: TTFT, per-token latency, throughput, slot occupancy
-//! and admission latency.
+//! Serving metrics: TTFT, per-token latency, throughput, slot occupancy,
+//! admission latency and KV-pool pressure.
 //!
 //! Two occupancy views coexist:
 //! * **batch occupancy** ([`ServeMetrics::record_batch`]) — how full each
@@ -9,7 +9,14 @@
 //!   step, how many of the pool's slots held live requests. This is the
 //!   number continuous batching exists to maximise; the histogram shows
 //!   the full distribution (steps by occupied-slot count).
+//!
+//! When the backend serves from a paged KV pool, the serving loop also
+//! snapshots [`KvPoolStats`] into [`ServeMetrics::kv_pool`]: pages in
+//! use (real memory pressure, as opposed to the dense caches'
+//! capacity-sized `resident_bytes`), prefix-cache hits and tokens
+//! reused, copy-on-write copies, and failed (shed) allocations.
 
+use crate::engine::kv::KvPoolStats;
 use crate::util::timer::LatencyStats;
 use std::time::Instant;
 
@@ -20,6 +27,8 @@ pub struct ServeMetrics {
     pub requests_done: usize,
     /// shed (queue overflow) or rejected (validation) requests
     pub requests_shed: usize,
+    /// prompt positions the engine actually prefilled (positions served
+    /// from the KV prefix cache are excluded on the continuous path)
     pub tokens_prefilled: usize,
     pub tokens_generated: usize,
     /// aligned lock-step groups formed (non-continuous path)
@@ -42,6 +51,8 @@ pub struct ServeMetrics {
     pub ttft: LatencyStats,
     pub per_token: LatencyStats,
     pub e2e: LatencyStats,
+    /// latest paged KV-pool snapshot (None on dense/PJRT backends)
+    pub kv_pool: Option<KvPoolStats>,
 }
 
 impl Default for ServeMetrics {
@@ -65,6 +76,7 @@ impl Default for ServeMetrics {
             ttft: LatencyStats::new(),
             per_token: LatencyStats::new(),
             e2e: LatencyStats::new(),
+            kv_pool: None,
         }
     }
 }
@@ -142,10 +154,9 @@ impl ServeMetrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests={}/{} (shed {}) prefill_tokens={} gen_tokens={} tps={:.1}\n  \
-             slots: occupancy={:.2} peak={} hist[{}] admissions={} pools={} groups={} (occ {:.2})\n  \
-             {}\n  {}\n  {}\n  {}",
+             slots: occupancy={:.2} peak={} hist[{}] admissions={} pools={} groups={} (occ {:.2})",
             self.requests_done,
             self.requests_in,
             self.requests_shed,
@@ -159,11 +170,32 @@ impl ServeMetrics {
             self.pools_opened,
             self.batches_formed,
             self.mean_occupancy(),
+        );
+        if let Some(p) = &self.kv_pool {
+            out.push_str(&format!(
+                "\n  kv pool: pages {}/{} (peak {}) prefix hits {}/{} reused {} tok \
+                 cow {} evictions {} alloc_failures {}",
+                p.pages_in_use,
+                p.pages_total,
+                p.peak_pages_in_use,
+                p.prefix_hits,
+                p.prefix_lookups,
+                p.prefix_tokens_reused,
+                p.cow_copies,
+                p.prefix_evictions,
+                p.alloc_failures,
+            ));
+        }
+        for line in [
             self.admission_wait.report("admission"),
             self.ttft.report("ttft"),
             self.per_token.report("per-token"),
             self.e2e.report("e2e"),
-        )
+        ] {
+            out.push_str("\n  ");
+            out.push_str(&line);
+        }
+        out
     }
 }
 

@@ -17,7 +17,8 @@
 //!   lock-step surfaces,
 //! * [`backend`] — the slot-pool execution abstraction
 //!   (`open_batch` / `prefill_slot` / `decode` / `release_slot`) over
-//!   the native engine or the PJRT artifacts,
+//!   the native engine (default: paged KV pool with prompt-prefix
+//!   reuse, see [`crate::engine::kv`]) or the PJRT artifacts,
 //! * [`server`] — the continuous scheduling loop: admit whenever a slot
 //!   frees, step the occupied slots, stream events,
 //! * [`metrics`] — TTFT / per-token latency / throughput, slot-occupancy

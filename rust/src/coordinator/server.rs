@@ -25,6 +25,14 @@
 //!   [`GenEvent`] stream delivering each token as it is sampled,
 //!   terminated by exactly one `Done` (or `Error` for shed/rejected
 //!   requests — nothing blocks forever on an overloaded queue).
+//!
+//! Memory pressure: on the default (paged-KV) native backend the loop
+//! snapshots the pool's counters into [`ServeMetrics::kv_pool`] —
+//! admission accounting is **pages in use**, the bytes sequences
+//! actually occupy, not the `max_seq`-capacity figure dense caches
+//! would report. A request that cannot get pages (pool exhausted even
+//! after prefix-cache eviction) is shed with a terminal `Error` event
+//! rather than aborting the loop.
 
 use super::backend::{validate_batch, validate_request, Backend, BatchState, SlotToken};
 use super::batcher::{Batcher, BatcherConfig};
@@ -183,6 +191,13 @@ impl<'a> ServeLoop<'a> {
         Ok(true)
     }
 
+    /// Fold the backend's KV-pool counters (if any) into the metrics.
+    fn snapshot_kv(&mut self) {
+        if let Some(s) = self.backend.kv_stats(&self.state) {
+            self.metrics.kv_pool = Some(s);
+        }
+    }
+
     /// Bookkeeping shared by both admission paths.
     fn place(&mut self, slot: usize, req: GenRequest, logits: &[f32], wait_us: f64) -> Result<()> {
         self.metrics.tokens_prefilled += req.prompt.len();
@@ -224,8 +239,23 @@ impl<'a> ServeLoop<'a> {
                 let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
                 let Some(req) = self.batcher.pop_ready() else { break };
                 let wait_us = req.arrived.elapsed().as_secs_f64() * 1e6;
+                let reused_before = self
+                    .backend
+                    .kv_stats(&self.state)
+                    .map_or(0, |s| s.prefix_tokens_reused);
                 match self.backend.prefill_slot(&mut self.state, slot, &req.prompt) {
-                    Ok(logits) => self.place(slot, req, &logits, wait_us)?,
+                    Ok(logits) => {
+                        // count engine-executed prefill work: positions
+                        // served from the prefix cache were not prefilled
+                        let reused = self
+                            .backend
+                            .kv_stats(&self.state)
+                            .map_or(0, |s| s.prefix_tokens_reused)
+                            .saturating_sub(reused_before);
+                        self.place(slot, req, &logits, wait_us)?;
+                        self.metrics.tokens_prefilled =
+                            self.metrics.tokens_prefilled.saturating_sub(reused);
+                    }
                     Err(e) => {
                         self.metrics.requests_shed += 1;
                         self.emit(GenEvent::Error { id: req.id, message: e.to_string() });
@@ -261,6 +291,7 @@ impl<'a> ServeLoop<'a> {
                 self.place(i, req, lg, wait_us)?;
             }
         }
+        self.snapshot_kv();
         Ok(())
     }
 
@@ -304,8 +335,21 @@ impl<'a> ServeLoop<'a> {
                     decode_s: a.prefill_done.elapsed().as_secs_f64(),
                 }));
             } else {
-                let a = self.slots[i].as_ref().expect("slot emptied mid-step");
-                to_decode.push(SlotToken { slot: i, token: a.current });
+                // reserve what the slot needs for its next step; a slot
+                // that cannot advance (e.g. KV pool exhausted mid-decode)
+                // finishes with a terminal error — the loop keeps serving
+                match self.backend.prepare_decode(&mut self.state, i) {
+                    Ok(()) => {
+                        let a = self.slots[i].as_ref().expect("slot emptied mid-step");
+                        to_decode.push(SlotToken { slot: i, token: a.current });
+                    }
+                    Err(e) => {
+                        let a = self.slots[i].take().expect("slot emptied mid-step");
+                        self.backend.release_slot(&mut self.state, i)?;
+                        self.metrics.requests_shed += 1;
+                        events.push(GenEvent::Error { id: a.req.id, message: e.to_string() });
+                    }
+                }
             }
         }
         let progressed = !events.is_empty();
@@ -324,6 +368,7 @@ impl<'a> ServeLoop<'a> {
             a.current = self.sampler.sample(lg, &a.req.params);
         }
         self.metrics.per_token.record(step_t0.elapsed());
+        self.snapshot_kv();
         Ok(true)
     }
 
@@ -436,6 +481,36 @@ impl CoordinatorHandle {
     /// are sampled; the stream ends with one `Done` or `Error` event.
     /// Explicit (nonzero) ids must be unique among in-flight requests;
     /// id 0 is auto-assigned.
+    ///
+    /// ```no_run
+    /// use fbquant::coordinator::backend::{Backend, NativeBackend};
+    /// use fbquant::coordinator::request::{GenEvent, GenRequest};
+    /// use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+    /// use fbquant::engine::SubMode;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let handle = Coordinator::spawn(
+    ///     move || -> anyhow::Result<Box<dyn Backend>> {
+    ///         let ckpt = std::path::Path::new("artifacts/models/llamoid-tiny_fbquant_w4.fbqw");
+    ///         Ok(Box::new(NativeBackend::from_checkpoint(ckpt, SubMode::Fused, "doc")?))
+    ///     },
+    ///     CoordinatorConfig::default(),
+    /// );
+    /// let rx = handle.submit(GenRequest::new(0, vec![104, 105], 16));
+    /// for ev in rx {
+    ///     match ev {
+    ///         GenEvent::Token { token, .. } => println!("sampled {token}"),
+    ///         GenEvent::Done(r) => {
+    ///             println!("{} tokens in {:.1} ms", r.tokens.len(), r.total_us / 1e3);
+    ///             break;
+    ///         }
+    ///         GenEvent::Error { message, .. } => anyhow::bail!(message),
+    ///     }
+    /// }
+    /// handle.shutdown()?;
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn submit(&self, mut req: GenRequest) -> mpsc::Receiver<GenEvent> {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);

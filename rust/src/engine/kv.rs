@@ -1,9 +1,91 @@
-//! Per-session KV cache for the native engine.
+//! KV storage for the native engine: a dense per-session cache and a
+//! paged, prefix-sharing pool.
 //!
-//! Layout: one contiguous buffer per layer per side, `[max_seq, n_heads,
-//! head_dim]` row-major — a decode step appends one `[n_heads, head_dim]`
-//! slab, and attention reads per-head strided slices.
+//! Two backing stores implement one [`KvSlot`] interface the engine
+//! decodes against:
+//!
+//! * [`KvCache`] — the dense baseline: one contiguous `[max_seq, n_heads,
+//!   head_dim]` buffer per layer per side. Simple, but every sequence
+//!   pays `max_seq` capacity up front, so slot count is bounded by
+//!   worst-case memory, not by actual load.
+//! * [`KvPagePool`] + [`PagedKv`] — the paged path (default for the
+//!   native backend): the pool owns fixed-size **pages** of `page_size`
+//!   positions (all layers, both sides) on a free list; a [`PagedKv`]
+//!   view maps logical positions to pages on demand, so a slot's
+//!   resident bytes track its true sequence length. Pages are
+//!   **refcounted**: admissions whose prompt shares a cached prefix map
+//!   the same read-only pages (see [`KvPagePool::adopt_prefix`]) and a
+//!   write into a shared page triggers copy-on-write
+//!   ([`KvPagePool::ensure_range`]).
+//!
+//! Admission accounting follows the store: the dense cache's
+//! [`KvCache::resident_bytes`] is its full allocation (capacity *is*
+//! resident for a dense buffer), while the paged view reports
+//! `pages * page_bytes` — the number that actually moves when sequences
+//! are short, and the one shed decisions should watch (see
+//! [`KvPoolStats`]).
+//!
+//! Layout inside a page: `[n_layers, page_size, n_heads * head_dim]`
+//! row-major, K and V in separate arenas, so a whole page is one
+//! contiguous slab per side (copy-on-write is two `copy_within` calls)
+//! and attention reads gather page-contiguous runs.
 
+use crate::tensor::ops;
+use anyhow::{bail, Result};
+use std::collections::{HashMap, VecDeque};
+
+/// The engine-facing KV interface: one generation slot's readable and
+/// appendable key/value history. Implemented by the dense [`KvCache`]
+/// and by [`PagedKvRef`] (a [`PagedKv`] view bound to its pool).
+pub trait KvSlot {
+    /// Committed sequence length (next write position).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Positions left before this slot is full.
+    fn remaining(&self) -> usize;
+
+    /// Bytes actually backing this slot (admission accounting).
+    fn resident_bytes(&self) -> usize;
+
+    /// Store `k_t`/`v_t` (each `[n_heads * head_dim]`) for layer `l` at
+    /// position `pos`. Positions are written in order by the engine;
+    /// [`KvSlot::advance`] commits the shared length after all layers.
+    fn write(&mut self, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]);
+
+    fn advance(&mut self, n: usize);
+
+    /// K vector of (layer, position, head).
+    fn k_at(&self, l: usize, pos: usize, h: usize) -> &[f32];
+
+    fn v_at(&self, l: usize, pos: usize, h: usize) -> &[f32];
+
+    /// Attention scores `q . k_j * scale` for `j` in `0..scores.len()`.
+    fn score_keys(&self, l: usize, h: usize, q: &[f32], scale: f32, scores: &mut [f32]) {
+        for (j, s) in scores.iter_mut().enumerate() {
+            *s = ops::dot(q, self.k_at(l, j, h)) * scale;
+        }
+    }
+
+    /// `out += sum_j weights[j] * v_j` for `j` in `0..weights.len()`.
+    fn accumulate_values(&self, l: usize, h: usize, weights: &[f32], out: &mut [f32]) {
+        for (j, &w) in weights.iter().enumerate() {
+            ops::axpy(w, self.v_at(l, j, h), out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense cache (baseline)
+// ---------------------------------------------------------------------------
+
+/// Dense per-session KV cache: one contiguous buffer per layer per side,
+/// `[max_seq, n_heads, head_dim]` row-major. The full capacity is
+/// allocated at construction — the paged pool below exists because this
+/// is exactly what caps slot count under memory pressure.
 #[derive(Debug, Clone)]
 pub struct KvCache {
     pub n_layers: usize,
@@ -37,9 +119,19 @@ impl KvCache {
         self.max_seq - self.len
     }
 
-    /// Bytes resident for this session (coordinator memory accounting).
+    /// Bytes resident for this session. For a dense cache this is the
+    /// full `max_seq` allocation regardless of `len` — the honest number
+    /// for a buffer that really is allocated, and the reason dense slots
+    /// admit poorly: a 10-token sequence pins the same memory as a full
+    /// one. Compare [`KvCache::used_bytes`] and the paged pool's
+    /// per-page accounting.
     pub fn resident_bytes(&self) -> usize {
         2 * self.n_layers * self.max_seq * self.n_heads * self.head_dim * 4
+    }
+
+    /// Bytes covering positions actually written (`len`), not capacity.
+    pub fn used_bytes(&self) -> usize {
+        2 * self.n_layers * self.len * self.n_heads * self.head_dim * 4
     }
 
     /// Append `k_t`/`v_t` (each `[n_heads * head_dim]`) for layer `l` at
@@ -74,6 +166,559 @@ impl KvCache {
     }
 }
 
+impl KvSlot for KvCache {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn remaining(&self) -> usize {
+        KvCache::remaining(self)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        KvCache::resident_bytes(self)
+    }
+
+    fn write(&mut self, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]) {
+        KvCache::write(self, l, pos, k_t, v_t);
+    }
+
+    fn advance(&mut self, n: usize) {
+        KvCache::advance(self, n);
+    }
+
+    fn k_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
+        KvCache::k_at(self, l, pos, h)
+    }
+
+    fn v_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
+        KvCache::v_at(self, l, pos, h)
+    }
+
+    fn score_keys(&self, l: usize, h: usize, q: &[f32], scale: f32, scores: &mut [f32]) {
+        let stride = self.n_heads * self.head_dim;
+        let base_h = h * self.head_dim;
+        let kl = &self.k[l];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let b = j * stride + base_h;
+            *s = ops::dot(q, &kl[b..b + self.head_dim]) * scale;
+        }
+    }
+
+    fn accumulate_values(&self, l: usize, h: usize, weights: &[f32], out: &mut [f32]) {
+        let stride = self.n_heads * self.head_dim;
+        let base_h = h * self.head_dim;
+        let vl = &self.v[l];
+        for (j, &w) in weights.iter().enumerate() {
+            let b = j * stride + base_h;
+            ops::axpy(w, &vl[b..b + self.head_dim], out);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paged pool
+// ---------------------------------------------------------------------------
+
+/// Geometry of a [`KvPagePool`].
+#[derive(Debug, Clone, Copy)]
+pub struct KvPoolConfig {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// Positions covered by one page.
+    pub page_size: usize,
+    /// Total pages in the pool (the memory budget).
+    pub n_pages: usize,
+    /// Prefix-cache entry cap (0 disables prefix reuse).
+    pub max_cached_prefixes: usize,
+}
+
+impl KvPoolConfig {
+    /// Geometry with the default prefix-cache cap (64 entries).
+    pub fn new(
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+        page_size: usize,
+        n_pages: usize,
+    ) -> KvPoolConfig {
+        KvPoolConfig { n_layers, n_heads, head_dim, page_size, n_pages, max_cached_prefixes: 64 }
+    }
+}
+
+/// Pool counters surfaced into serving metrics: real memory pressure
+/// (`pages_in_use`, not dense capacity) plus prefix-reuse and
+/// copy-on-write activity.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KvPoolStats {
+    pub pages_total: usize,
+    pub pages_in_use: usize,
+    pub peak_pages_in_use: usize,
+    /// Prompt admissions that consulted the prefix cache.
+    pub prefix_lookups: usize,
+    /// Admissions that mapped at least one cached page.
+    pub prefix_hits: usize,
+    /// Prompt positions served from shared pages instead of prefill.
+    pub prefix_tokens_reused: usize,
+    /// Shared pages privatized on first divergent write.
+    pub cow_copies: usize,
+    /// Page allocations that failed with the pool exhausted.
+    pub alloc_failures: usize,
+    /// Live prefix-cache entries.
+    pub cached_prefixes: usize,
+    /// Prefix-cache entries dropped (capacity cap or memory pressure).
+    pub prefix_evictions: usize,
+}
+
+/// A per-slot paged view: logical positions `0..len` mapped to pool
+/// pages in order. Created by [`KvPagePool::new_kv`]; all allocation,
+/// sharing and release goes through the pool. Bind it to its pool with
+/// [`PagedKvRef`] to read/write through the [`KvSlot`] interface.
+///
+/// Deliberately neither `Clone` nor `Default`: the page table encodes
+/// pool refcounts, so a free-standing copy would alias pages without
+/// the pool knowing (double release, writes through two views).
+#[derive(Debug)]
+pub struct PagedKv {
+    pages: Vec<u32>,
+    len: usize,
+    max_seq: usize,
+}
+
+impl PagedKv {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    /// Pages currently mapped by this view.
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Physical page ids, in logical order (tests / introspection).
+    pub fn page_ids(&self) -> &[u32] {
+        &self.pages
+    }
+}
+
+struct PrefixEntry {
+    tokens: Vec<u32>,
+    pages: Vec<u32>,
+}
+
+/// A shared arena of fixed-size KV pages with free-list allocation,
+/// per-page refcounts, prompt-prefix sharing and copy-on-write.
+///
+/// ```
+/// use fbquant::engine::kv::{KvPagePool, KvPoolConfig, KvSlot, PagedKvRef};
+///
+/// // 2 layers x 2 heads x 4 dims, 8 positions per page, 16 pages total
+/// let mut pool = KvPagePool::new(KvPoolConfig::new(2, 2, 4, 8, 16));
+/// let mut kv = pool.new_kv(64);
+/// pool.ensure_range(&mut kv, 0, 1).unwrap();
+/// let mut slot = PagedKvRef { pool: &mut pool, kv: &mut kv };
+/// slot.write(0, 0, &[1.0; 8], &[2.0; 8]);
+/// slot.write(1, 0, &[3.0; 8], &[4.0; 8]);
+/// slot.advance(1);
+/// assert_eq!(slot.len(), 1);
+/// assert_eq!(slot.k_at(0, 0, 1), &[1.0; 4]);
+/// drop(slot);
+/// assert_eq!(pool.pages_in_use(), 1);
+/// ```
+pub struct KvPagePool {
+    cfg: KvPoolConfig,
+    /// `[n_pages, n_layers, page_size, n_heads * head_dim]`
+    k: Vec<f32>,
+    v: Vec<f32>,
+    refcount: Vec<u32>,
+    free: Vec<u32>,
+    prefix: HashMap<u64, PrefixEntry>,
+    /// insertion order for FIFO eviction
+    prefix_order: VecDeque<u64>,
+    stats: KvPoolStats,
+}
+
+// FNV-1a over token bytes; collisions are disambiguated by comparing
+// the stored tokens. The streaming form lets one forward pass over a
+// prompt yield the hash at every page boundary.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+#[inline]
+fn fnv_step(mut h: u64, t: u32) -> u64 {
+    for b in t.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hash of `tokens[..k * page_size]` for each k, in one pass.
+fn page_boundary_hashes(tokens: &[u32], page_size: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() / page_size);
+    let mut h = FNV_OFFSET;
+    for (i, &t) in tokens.iter().enumerate() {
+        h = fnv_step(h, t);
+        if (i + 1) % page_size == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+impl KvPagePool {
+    pub fn new(cfg: KvPoolConfig) -> KvPagePool {
+        assert!(cfg.page_size > 0, "zero page size");
+        assert!(cfg.n_pages > 0, "zero-page pool");
+        let per_page = cfg.n_layers * cfg.page_size * cfg.n_heads * cfg.head_dim;
+        KvPagePool {
+            k: vec![0f32; cfg.n_pages * per_page],
+            v: vec![0f32; cfg.n_pages * per_page],
+            refcount: vec![0; cfg.n_pages],
+            // pop() takes from the back: keep page 0 first out
+            free: (0..cfg.n_pages as u32).rev().collect(),
+            prefix: HashMap::new(),
+            prefix_order: VecDeque::new(),
+            stats: KvPoolStats { pages_total: cfg.n_pages, ..KvPoolStats::default() },
+            cfg,
+        }
+    }
+
+    pub fn cfg(&self) -> &KvPoolConfig {
+        &self.cfg
+    }
+
+    /// K+V bytes held by one page.
+    pub fn page_bytes(&self) -> usize {
+        2 * 4 * self.cfg.n_layers * self.cfg.page_size * self.cfg.n_heads * self.cfg.head_dim
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.cfg.n_pages - self.free.len()
+    }
+
+    /// Refcount of a physical page (tests / introspection).
+    pub fn page_refcount(&self, page: u32) -> u32 {
+        self.refcount[page as usize]
+    }
+
+    /// Counter snapshot with the live gauges filled in.
+    pub fn stats(&self) -> KvPoolStats {
+        let mut s = self.stats;
+        s.pages_in_use = self.pages_in_use();
+        s.cached_prefixes = self.prefix.len();
+        s
+    }
+
+    /// An empty paged view for a sequence of at most `max_seq` positions.
+    pub fn new_kv(&self, max_seq: usize) -> PagedKv {
+        PagedKv { pages: Vec::new(), len: 0, max_seq }
+    }
+
+    fn page_span(&self) -> usize {
+        self.cfg.n_layers * self.cfg.page_size * self.cfg.n_heads * self.cfg.head_dim
+    }
+
+    /// Pop a free page (refcount 1), evicting cached prefixes under
+    /// memory pressure until one frees up.
+    fn alloc_page(&mut self) -> Option<u32> {
+        loop {
+            if let Some(p) = self.free.pop() {
+                debug_assert_eq!(self.refcount[p as usize], 0);
+                self.refcount[p as usize] = 1;
+                let in_use = self.pages_in_use();
+                if in_use > self.stats.peak_pages_in_use {
+                    self.stats.peak_pages_in_use = in_use;
+                }
+                return Some(p);
+            }
+            if !self.evict_oldest_prefix() {
+                self.stats.alloc_failures += 1;
+                return None;
+            }
+        }
+    }
+
+    fn release_page(&mut self, page: u32) {
+        let rc = &mut self.refcount[page as usize];
+        debug_assert!(*rc > 0, "releasing page {page} with refcount 0");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+        }
+    }
+
+    fn evict_oldest_prefix(&mut self) -> bool {
+        while let Some(key) = self.prefix_order.pop_front() {
+            if let Some(e) = self.prefix.remove(&key) {
+                for &p in &e.pages {
+                    self.release_page(p);
+                }
+                self.stats.prefix_evictions += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Make positions `start..end` writable for `kv`: map missing pages
+    /// from the free list and privatize (copy-on-write) any shared page
+    /// in the range. Errors — without touching engine state — when the
+    /// pool is exhausted even after evicting cached prefixes; the caller
+    /// should [`KvPagePool::release_kv`] and shed.
+    pub fn ensure_range(&mut self, kv: &mut PagedKv, start: usize, end: usize) -> Result<()> {
+        if end <= start {
+            return Ok(());
+        }
+        if end > kv.max_seq {
+            bail!("kv range {start}..{end} exceeds max_seq {}", kv.max_seq);
+        }
+        let ps = self.cfg.page_size;
+        for page_idx in start / ps..=(end - 1) / ps {
+            if page_idx < kv.pages.len() {
+                let p = kv.pages[page_idx];
+                if self.refcount[p as usize] > 1 {
+                    // shared (prefix-cache or sibling slot): privatize
+                    let Some(np) = self.alloc_page() else {
+                        bail!(
+                            "kv pool exhausted on copy-on-write ({} of {} pages in use)",
+                            self.pages_in_use(),
+                            self.cfg.n_pages
+                        );
+                    };
+                    let span = self.page_span();
+                    let (src, dst) = (p as usize * span, np as usize * span);
+                    self.k.copy_within(src..src + span, dst);
+                    self.v.copy_within(src..src + span, dst);
+                    self.release_page(p);
+                    kv.pages[page_idx] = np;
+                    self.stats.cow_copies += 1;
+                }
+            } else {
+                debug_assert_eq!(page_idx, kv.pages.len(), "pages must fill in order");
+                let Some(p) = self.alloc_page() else {
+                    bail!(
+                        "kv pool exhausted ({} of {} pages in use)",
+                        self.pages_in_use(),
+                        self.cfg.n_pages
+                    );
+                };
+                kv.pages.push(p);
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop all of `kv`'s page references (pages whose refcount reaches
+    /// zero return to the free list) and reset the view.
+    pub fn release_kv(&mut self, kv: &mut PagedKv) {
+        for i in 0..kv.pages.len() {
+            self.release_page(kv.pages[i]);
+        }
+        kv.pages.clear();
+        kv.len = 0;
+    }
+
+    /// Map the longest cached page-aligned prefix of `prompt` into the
+    /// empty view `kv` (bumping page refcounts) and return the number of
+    /// positions reused. At least one prompt position is always left
+    /// unconsumed so prefill still produces last-token logits; when the
+    /// prompt is *exactly* the cached pages, the final shared page is
+    /// privatized by [`KvPagePool::ensure_range`] on the first write.
+    ///
+    /// Hit accounting is NOT committed here: call
+    /// [`KvPagePool::record_reuse`] once the admission is certain to run
+    /// (a shed admission must not count as a prefix hit).
+    pub fn adopt_prefix(&mut self, kv: &mut PagedKv, prompt: &[u32]) -> usize {
+        debug_assert!(kv.pages.is_empty() && kv.len == 0, "adopt into a used view");
+        self.stats.prefix_lookups += 1;
+        let ps = self.cfg.page_size;
+        if self.prefix.is_empty() || prompt.len() < ps {
+            return 0;
+        }
+        let hashes = page_boundary_hashes(prompt, ps);
+        for k in (1..=hashes.len()).rev() {
+            let want = &prompt[..k * ps];
+            let Some(entry) = self.prefix.get(&hashes[k - 1]) else { continue };
+            if entry.tokens != want {
+                continue; // hash collision
+            }
+            let pages = entry.pages.clone();
+            for &p in &pages {
+                self.refcount[p as usize] += 1;
+            }
+            // LRU touch: a hit entry moves to the back of the eviction
+            // queue so hot (template) prefixes survive cache churn
+            let key = hashes[k - 1];
+            if let Some(idx) = self.prefix_order.iter().position(|&q| q == key) {
+                self.prefix_order.remove(idx);
+                self.prefix_order.push_back(key);
+            }
+            let reuse = (k * ps).min(prompt.len() - 1);
+            kv.pages = pages;
+            kv.len = reuse;
+            return reuse;
+        }
+        0
+    }
+
+    /// Commit reuse accounting for an admission that actually went
+    /// through: call after [`KvPagePool::ensure_range`] succeeded for
+    /// the rest of the prompt (shed admissions are not hits).
+    pub fn record_reuse(&mut self, reused: usize) {
+        if reused > 0 {
+            self.stats.prefix_hits += 1;
+            self.stats.prefix_tokens_reused += reused;
+        }
+    }
+
+    /// Publish `prompt`'s full pages from `kv` into the prefix cache so
+    /// later admissions can [`KvPagePool::adopt_prefix`] them. Entries
+    /// are registered at every page boundary (so prompts sharing only a
+    /// template prefix still match) and hold their own page references;
+    /// the cache evicts least-recently-used (adoption hits refresh
+    /// recency) past `max_cached_prefixes` or under pool memory
+    /// pressure.
+    pub fn register_prefix(&mut self, kv: &PagedKv, prompt: &[u32]) {
+        let ps = self.cfg.page_size;
+        if self.cfg.max_cached_prefixes == 0 {
+            return;
+        }
+        debug_assert!(kv.len >= prompt.len(), "register before prefill completed");
+        let hashes = page_boundary_hashes(prompt, ps);
+        for k in 1..=hashes.len() {
+            let want = &prompt[..k * ps];
+            let key = hashes[k - 1];
+            if self.prefix.contains_key(&key) {
+                // already cached (or a hash collision: keep the incumbent)
+                continue;
+            }
+            let pages: Vec<u32> = kv.pages[..k].to_vec();
+            for &p in &pages {
+                self.refcount[p as usize] += 1;
+            }
+            self.prefix.insert(key, PrefixEntry { tokens: want.to_vec(), pages });
+            self.prefix_order.push_back(key);
+        }
+        while self.prefix.len() > self.cfg.max_cached_prefixes {
+            if !self.evict_oldest_prefix() {
+                break;
+            }
+        }
+    }
+}
+
+/// A [`PagedKv`] view bound to its pool: the borrow the engine decodes
+/// through. Pages for the positions being written must have been mapped
+/// first with [`KvPagePool::ensure_range`].
+pub struct PagedKvRef<'a> {
+    pub pool: &'a mut KvPagePool,
+    pub kv: &'a mut PagedKv,
+}
+
+impl PagedKvRef<'_> {
+    #[inline]
+    fn offset(&self, l: usize, pos: usize, h: usize) -> usize {
+        let c = &self.pool.cfg;
+        let stride = c.n_heads * c.head_dim;
+        let page = self.kv.pages[pos / c.page_size] as usize;
+        ((page * c.n_layers + l) * c.page_size + pos % c.page_size) * stride + h * c.head_dim
+    }
+}
+
+impl KvSlot for PagedKvRef<'_> {
+    fn len(&self) -> usize {
+        self.kv.len
+    }
+
+    fn remaining(&self) -> usize {
+        self.kv.max_seq - self.kv.len
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.kv.pages.len() * self.pool.page_bytes()
+    }
+
+    fn write(&mut self, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]) {
+        let c = self.pool.cfg;
+        let stride = c.n_heads * c.head_dim;
+        debug_assert!(pos / c.page_size < self.kv.pages.len(), "write to unmapped page");
+        debug_assert_eq!(
+            self.pool.refcount[self.kv.pages[pos / c.page_size] as usize],
+            1,
+            "write to a shared page without copy-on-write"
+        );
+        debug_assert_eq!(k_t.len(), stride);
+        let off = self.offset(l, pos, 0);
+        self.pool.k[off..off + stride].copy_from_slice(k_t);
+        self.pool.v[off..off + stride].copy_from_slice(v_t);
+    }
+
+    fn advance(&mut self, n: usize) {
+        self.kv.len += n;
+        debug_assert!(self.kv.len <= self.kv.max_seq);
+    }
+
+    #[inline]
+    fn k_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
+        let off = self.offset(l, pos, h);
+        &self.pool.k[off..off + self.pool.cfg.head_dim]
+    }
+
+    #[inline]
+    fn v_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
+        let off = self.offset(l, pos, h);
+        &self.pool.v[off..off + self.pool.cfg.head_dim]
+    }
+
+    // Per-page gathers: one page-table lookup per contiguous run instead
+    // of one per position.
+    fn score_keys(&self, l: usize, h: usize, q: &[f32], scale: f32, scores: &mut [f32]) {
+        let c = &self.pool.cfg;
+        let (ps, hd) = (c.page_size, c.head_dim);
+        let stride = c.n_heads * hd;
+        let mut j = 0usize;
+        while j < scores.len() {
+            let run = (ps - j % ps).min(scores.len() - j);
+            let page = self.kv.pages[j / ps] as usize;
+            let base = ((page * c.n_layers + l) * ps + j % ps) * stride + h * hd;
+            for r in 0..run {
+                let kt = &self.pool.k[base + r * stride..base + r * stride + hd];
+                scores[j + r] = ops::dot(q, kt) * scale;
+            }
+            j += run;
+        }
+    }
+
+    fn accumulate_values(&self, l: usize, h: usize, weights: &[f32], out: &mut [f32]) {
+        let c = &self.pool.cfg;
+        let (ps, hd) = (c.page_size, c.head_dim);
+        let stride = c.n_heads * hd;
+        let mut j = 0usize;
+        while j < weights.len() {
+            let run = (ps - j % ps).min(weights.len() - j);
+            let page = self.kv.pages[j / ps] as usize;
+            let base = ((page * c.n_layers + l) * ps + j % ps) * stride + h * hd;
+            for r in 0..run {
+                let vt = &self.pool.v[base + r * stride..base + r * stride + hd];
+                ops::axpy(weights[j + r], vt, out);
+            }
+            j += run;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +740,39 @@ mod tests {
     fn resident_bytes_accounting() {
         let kv = KvCache::new(2, 256, 4, 32);
         assert_eq!(kv.resident_bytes(), 2 * 2 * 256 * 4 * 32 * 4);
+        assert_eq!(kv.used_bytes(), 0);
+    }
+
+    #[test]
+    fn paged_write_read_roundtrip() {
+        let mut pool = KvPagePool::new(KvPoolConfig::new(2, 2, 4, 2, 8));
+        let page_bytes = pool.page_bytes();
+        let mut kv = pool.new_kv(16);
+        pool.ensure_range(&mut kv, 0, 4).unwrap();
+        assert_eq!(kv.n_pages(), 2);
+        let k: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..8).map(|i| -(i as f32)).collect();
+        let mut slot = PagedKvRef { pool: &mut pool, kv: &mut kv };
+        slot.write(1, 3, &k, &v);
+        slot.advance(4);
+        assert_eq!(slot.len(), 4);
+        assert_eq!(slot.k_at(1, 3, 0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(slot.k_at(1, 3, 1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(slot.v_at(1, 3, 1), &[-4.0, -5.0, -6.0, -7.0]);
+        assert_eq!(slot.resident_bytes(), 2 * page_bytes);
+        pool.release_kv(&mut kv);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn pages_allocate_on_demand_not_upfront() {
+        let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 4, 8));
+        let mut kv = pool.new_kv(32);
+        assert_eq!(pool.pages_in_use(), 0);
+        pool.ensure_range(&mut kv, 0, 3).unwrap();
+        assert_eq!(pool.pages_in_use(), 1, "3 positions fit one 4-slot page");
+        pool.ensure_range(&mut kv, 3, 9).unwrap();
+        assert_eq!(pool.pages_in_use(), 3);
+        assert_eq!(pool.stats().peak_pages_in_use, 3);
     }
 }

@@ -9,7 +9,8 @@
 //! * [`kernels`] — quantized GEMV/GEMM in fused (one pass, shared
 //!   accumulator) and un-fused (4 passes, materialized intermediates)
 //!   variants, with byte-traffic accounting,
-//! * [`kv`] — per-session KV cache,
+//! * [`kv`] — KV storage behind the [`kv::KvSlot`] interface: the dense
+//!   per-session cache and the paged, prefix-sharing [`kv::KvPagePool`],
 //! * [`native`] — the full transformer forward (prefill + decode).
 
 pub mod kernels;
@@ -17,5 +18,5 @@ pub mod kv;
 pub mod native;
 
 pub use kernels::{QuantLinear, SubMode, Traffic};
-pub use kv::KvCache;
+pub use kv::{KvCache, KvPagePool, KvPoolConfig, KvPoolStats, KvSlot, PagedKv, PagedKvRef};
 pub use native::NativeEngine;

@@ -5,7 +5,7 @@
 //! asserted by `tests/cross_engine.rs` against the AOT selftest archive.
 
 use super::kernels::{QuantLinear, SubMode, Traffic, Workspace};
-use super::kv::KvCache;
+use super::kv::KvSlot;
 use crate::model::{Config, LinearWeights, WeightStore};
 use crate::tensor::ops;
 use anyhow::{bail, Result};
@@ -370,9 +370,11 @@ impl NativeEngine {
         logits
     }
 
-    /// Prefill `tokens` into `kv` starting at `kv.len`; returns the logits
-    /// of the last position.
-    pub fn prefill(&self, tokens: &[u32], kv: &mut KvCache, ws: &mut EngineWs) -> Vec<f32> {
+    /// Prefill `tokens` into `kv` starting at `kv.len()`; returns the
+    /// logits of the last position. `kv` is any [`KvSlot`] — the dense
+    /// cache or a pool-bound paged view (whose pages for the written
+    /// range must already be ensured).
+    pub fn prefill(&self, tokens: &[u32], kv: &mut dyn KvSlot, ws: &mut EngineWs) -> Vec<f32> {
         let mut logits = Vec::new();
         for (off, &tok) in tokens.iter().enumerate() {
             let last = off == tokens.len() - 1;
@@ -381,15 +383,15 @@ impl NativeEngine {
         logits
     }
 
-    /// One decode step at position `kv.len`; returns logits `[vocab]`.
-    pub fn decode_one(&self, token: u32, kv: &mut KvCache, ws: &mut EngineWs) -> Vec<f32> {
+    /// One decode step at position `kv.len()`; returns logits `[vocab]`.
+    pub fn decode_one(&self, token: u32, kv: &mut dyn KvSlot, ws: &mut EngineWs) -> Vec<f32> {
         self.step(token, kv, ws, true)
     }
 
-    fn step(&self, token: u32, kv: &mut KvCache, ws: &mut EngineWs, want_logits: bool) -> Vec<f32> {
+    fn step(&self, token: u32, kv: &mut dyn KvSlot, ws: &mut EngineWs, want_logits: bool) -> Vec<f32> {
         let cfg = &self.cfg;
         let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
-        let pos = kv.len;
+        let pos = kv.len();
         assert!(pos < cfg.max_seq, "kv cache full");
 
         ws.x.resize(d, 0.0);
@@ -422,21 +424,18 @@ impl NativeEngine {
                 }
                 kv.write(l, pos, &kb, &vb);
 
-                // attention over 0..=pos
+                // attention over 0..=pos: the KvSlot gathers keys/values
+                // (per-page runs on the paged store, strided on dense)
                 ws.attn.resize(d, 0.0);
                 ws.scores.resize(pos + 1, 0.0);
                 let scale = 1.0 / (hd as f32).sqrt();
                 for h in 0..nh {
                     let qv = &qb[h * hd..(h + 1) * hd];
-                    for j in 0..=pos {
-                        ws.scores[j] = ops::dot(qv, kv.k_at(l, j, h)) * scale;
-                    }
+                    kv.score_keys(l, h, qv, scale, &mut ws.scores[..pos + 1]);
                     ops::softmax_rows(&mut ws.scores[..pos + 1], 1, pos + 1);
                     let out = &mut ws.attn[h * hd..(h + 1) * hd];
                     out.fill(0.0);
-                    for j in 0..=pos {
-                        ops::axpy(ws.scores[j], kv.v_at(l, j, h), out);
-                    }
+                    kv.accumulate_values(l, h, &ws.scores[..pos + 1], out);
                 }
                 blk.o.gemv(&ws.attn, &mut hbuf, self.mode, &mut ws.kernel, &mut ws.traffic);
                 for (xv, hv) in ws.x.iter_mut().zip(&hbuf) {

@@ -1,0 +1,377 @@
+//! Paged KV pool tests: bit-identity of the paged gathers against the
+//! dense `KvCache` over random prompt/decode interleavings, plus page
+//! refcounting, prefix adoption, copy-on-write divergence, exhaustion
+//! shedding and cache eviction. The end-to-end generation equivalence
+//! and admission-shed tests run when checkpoint artifacts are present.
+
+use fbquant::coordinator::backend::NativeBackend;
+use fbquant::coordinator::request::GenRequest;
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::engine::kv::{KvCache, KvPagePool, KvPoolConfig, KvSlot, PagedKvRef};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::model::{ByteTokenizer, WeightStore};
+use fbquant::prop_assert_ok;
+use fbquant::testing::check;
+
+/// Deterministic KV value so recomputation and shared pages must agree.
+fn val(tok: u32, pos: usize, l: usize, i: usize, sign: f32) -> f32 {
+    sign * (tok as f32 + 0.25 * pos as f32 + 10.0 * l as f32 + 0.01 * i as f32)
+}
+
+/// Write positions `from..tokens.len()` through the `KvSlot` interface.
+fn fill(slot: &mut dyn KvSlot, tokens: &[u32], from: usize, n_layers: usize, stride: usize) {
+    for pos in from..tokens.len() {
+        for l in 0..n_layers {
+            let kt: Vec<f32> = (0..stride).map(|i| val(tokens[pos], pos, l, i, 1.0)).collect();
+            let vt: Vec<f32> = (0..stride).map(|i| val(tokens[pos], pos, l, i, -1.0)).collect();
+            slot.write(l, pos, &kt, &vt);
+        }
+        slot.advance(1);
+    }
+}
+
+#[test]
+fn prop_paged_gathers_match_dense_over_random_interleavings() {
+    prop_assert_ok!(check("paged_dense_equiv", 50, |g| {
+        let n_layers = g.usize_range(1, 2);
+        let n_heads = g.usize_range(1, 3);
+        let head_dim = *g.pick(&[2usize, 4]);
+        let page_size = *g.pick(&[1usize, 2, 3, 4, 8]);
+        let max_seq = 24usize;
+        let stride = n_heads * head_dim;
+        let mut dense = KvCache::new(n_layers, max_seq, n_heads, head_dim);
+        let mut pool =
+            KvPagePool::new(KvPoolConfig::new(n_layers, n_heads, head_dim, page_size, 64));
+        let mut kv = pool.new_kv(max_seq);
+        let total = g.usize_range(1, max_seq);
+        let mut pos = 0usize;
+        while pos < total {
+            // a prompt chunk or a single decode append
+            let chunk = g.usize_range(1, (total - pos).min(5));
+            pool.ensure_range(&mut kv, pos, pos + chunk).map_err(|e| e.to_string())?;
+            for p in pos..pos + chunk {
+                for l in 0..n_layers {
+                    let kt = g.vec_f32(stride, 1.0);
+                    let vt = g.vec_f32(stride, 1.0);
+                    dense.write(l, p, &kt, &vt);
+                    let mut bound = PagedKvRef { pool: &mut pool, kv: &mut kv };
+                    bound.write(l, p, &kt, &vt);
+                }
+            }
+            dense.advance(chunk);
+            {
+                let mut bound = PagedKvRef { pool: &mut pool, kv: &mut kv };
+                bound.advance(chunk);
+            }
+            pos += chunk;
+            // the attention gathers over the whole history must be
+            // bit-identical after every interleaving step
+            let q = g.vec_f32(head_dim, 1.0);
+            let weights = g.vec_f32(pos, 1.0);
+            let bound = PagedKvRef { pool: &mut pool, kv: &mut kv };
+            if dense.len != bound.len() {
+                return Err(format!("len diverged: {} vs {}", dense.len, bound.len()));
+            }
+            for l in 0..n_layers {
+                for h in 0..n_heads {
+                    let mut sd = vec![0f32; pos];
+                    let mut sp = vec![0f32; pos];
+                    dense.score_keys(l, h, &q, 0.25, &mut sd);
+                    bound.score_keys(l, h, &q, 0.25, &mut sp);
+                    if sd != sp {
+                        return Err(format!("scores diverge at l{l} h{h} len {pos}"));
+                    }
+                    let mut od = vec![0f32; head_dim];
+                    let mut op = vec![0f32; head_dim];
+                    dense.accumulate_values(l, h, &weights, &mut od);
+                    bound.accumulate_values(l, h, &weights, &mut op);
+                    if od != op {
+                        return Err(format!("values diverge at l{l} h{h} len {pos}"));
+                    }
+                    for j in 0..pos {
+                        if dense.k_at(l, j, h) != bound.k_at(l, j, h)
+                            || dense.v_at(l, j, h) != bound.v_at(l, j, h)
+                        {
+                            return Err(format!("raw kv diverged at l{l} p{j} h{h}"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }));
+}
+
+#[test]
+fn adopted_prefix_reads_identical_to_recomputed_dense() {
+    let (n_layers, n_heads, head_dim, ps) = (2usize, 2usize, 3usize, 4usize);
+    let stride = n_heads * head_dim;
+    let max_seq = 32usize;
+    let mut pool = KvPagePool::new(KvPoolConfig::new(n_layers, n_heads, head_dim, ps, 32));
+
+    // first admission writes and publishes a 12-token (3-page) prompt
+    let prompt_a: Vec<u32> = (0..12).map(|i| 100 + i as u32).collect();
+    let mut kv1 = pool.new_kv(max_seq);
+    pool.ensure_range(&mut kv1, 0, prompt_a.len()).unwrap();
+    {
+        let mut bound = PagedKvRef { pool: &mut pool, kv: &mut kv1 };
+        fill(&mut bound, &prompt_a, 0, n_layers, stride);
+    }
+    pool.register_prefix(&kv1, &prompt_a);
+
+    // second admission shares the first 8 tokens (2 pages) then diverges
+    let mut prompt_b = prompt_a[..8].to_vec();
+    prompt_b.extend([7u32, 8, 9, 10, 11, 12]);
+    let mut kv2 = pool.new_kv(max_seq);
+    let reused = pool.adopt_prefix(&mut kv2, &prompt_b);
+    assert_eq!(reused, 8, "two full pages should be adopted");
+    pool.ensure_range(&mut kv2, reused, prompt_b.len()).unwrap();
+    pool.record_reuse(reused);
+    {
+        let mut bound = PagedKvRef { pool: &mut pool, kv: &mut kv2 };
+        fill(&mut bound, &prompt_b, reused, n_layers, stride);
+    }
+
+    // a dense cache recomputing prompt_b from scratch must agree bit for
+    // bit with the view that reused shared pages
+    let mut dense = KvCache::new(n_layers, max_seq, n_heads, head_dim);
+    fill(&mut dense, &prompt_b, 0, n_layers, stride);
+    let bound = PagedKvRef { pool: &mut pool, kv: &mut kv2 };
+    assert_eq!(bound.len(), prompt_b.len());
+    for l in 0..n_layers {
+        for h in 0..n_heads {
+            for pos in 0..prompt_b.len() {
+                assert_eq!(dense.k_at(l, pos, h), bound.k_at(l, pos, h), "k l{l} p{pos} h{h}");
+                assert_eq!(dense.v_at(l, pos, h), bound.v_at(l, pos, h), "v l{l} p{pos} h{h}");
+            }
+        }
+    }
+    let stats = pool.stats();
+    assert_eq!(stats.prefix_hits, 1);
+    assert_eq!(stats.prefix_tokens_reused, 8);
+}
+
+#[test]
+fn refcounts_track_sharing_and_release() {
+    let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 4, 8));
+    let prompt: Vec<u32> = (0..8).collect();
+    let mut kv1 = pool.new_kv(16);
+    pool.ensure_range(&mut kv1, 0, 8).unwrap();
+    {
+        let mut bound = PagedKvRef { pool: &mut pool, kv: &mut kv1 };
+        bound.advance(8);
+    }
+    pool.register_prefix(&kv1, &prompt);
+    let pages: Vec<u32> = kv1.page_ids().to_vec();
+    assert_eq!(pages.len(), 2);
+    // page 0 is shared by the slot and the k=1 and k=2 cache entries;
+    // page 1 by the slot and the k=2 entry
+    assert_eq!(pool.page_refcount(pages[0]), 3);
+    assert_eq!(pool.page_refcount(pages[1]), 2);
+
+    let longer: Vec<u32> = (0..9).collect();
+    let mut kv2 = pool.new_kv(16);
+    let reused = pool.adopt_prefix(&mut kv2, &longer);
+    assert_eq!(reused, 8);
+    assert_eq!(pool.page_refcount(pages[0]), 4);
+    assert_eq!(pool.page_refcount(pages[1]), 3);
+
+    pool.release_kv(&mut kv2);
+    assert_eq!(pool.page_refcount(pages[0]), 3);
+    assert_eq!(kv2.n_pages(), 0);
+
+    pool.release_kv(&mut kv1);
+    assert_eq!(pool.page_refcount(pages[0]), 2);
+    assert_eq!(pool.page_refcount(pages[1]), 1);
+    assert_eq!(pool.pages_in_use(), 2, "cached pages stay resident after release");
+}
+
+#[test]
+fn cow_preserves_original_and_copies_prefix() {
+    // a prompt of exactly one page admitted twice: the second admission
+    // adopts the shared page and must privatize it before rewriting the
+    // final position
+    let (nl, nh, hd, ps) = (1usize, 1usize, 2usize, 4usize);
+    let stride = nh * hd;
+    let mut pool = KvPagePool::new(KvPoolConfig::new(nl, nh, hd, ps, 8));
+    let prompt: Vec<u32> = vec![5, 6, 7, 8];
+    let mut kv1 = pool.new_kv(16);
+    pool.ensure_range(&mut kv1, 0, 4).unwrap();
+    {
+        let mut bound = PagedKvRef { pool: &mut pool, kv: &mut kv1 };
+        fill(&mut bound, &prompt, 0, nl, stride);
+    }
+    pool.register_prefix(&kv1, &prompt);
+    let p1 = kv1.page_ids()[0];
+
+    let mut kv2 = pool.new_kv(16);
+    let reused = pool.adopt_prefix(&mut kv2, &prompt);
+    assert_eq!(reused, 3, "one position is always left for prefill logits");
+    assert_eq!(kv2.page_ids()[0], p1, "adoption maps the shared page");
+    pool.ensure_range(&mut kv2, 3, 4).unwrap();
+    let p2 = kv2.page_ids()[0];
+    assert_ne!(p1, p2, "divergent write must privatize the shared page");
+    assert_eq!(pool.stats().cow_copies, 1);
+    {
+        let mut bound = PagedKvRef { pool: &mut pool, kv: &mut kv2 };
+        bound.write(0, 3, &vec![99.0; stride], &vec![-99.0; stride]);
+        bound.advance(1);
+    }
+
+    // the original page is untouched by the divergent write
+    {
+        let bound = PagedKvRef { pool: &mut pool, kv: &mut kv1 };
+        let want: Vec<f32> = (0..hd).map(|i| val(prompt[3], 3, 0, i, 1.0)).collect();
+        assert_eq!(bound.k_at(0, 3, 0), &want[..]);
+    }
+    // the copy carried positions 0..3 over and holds the new position 3
+    let bound = PagedKvRef { pool: &mut pool, kv: &mut kv2 };
+    for pos in 0..3 {
+        let want: Vec<f32> = (0..hd).map(|i| val(prompt[pos], pos, 0, i, 1.0)).collect();
+        assert_eq!(bound.k_at(0, pos, 0), &want[..], "copied position {pos}");
+    }
+    assert_eq!(bound.k_at(0, 3, 0), &[99.0, 99.0]);
+}
+
+#[test]
+fn exhaustion_fails_gracefully_and_recovers() {
+    let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 4, 2));
+    let mut kv1 = pool.new_kv(32);
+    pool.ensure_range(&mut kv1, 0, 8).unwrap();
+    assert_eq!(pool.free_pages(), 0);
+
+    let mut kv2 = pool.new_kv(32);
+    let err = pool.ensure_range(&mut kv2, 0, 4).unwrap_err();
+    assert!(err.to_string().contains("exhausted"), "unexpected error: {err}");
+    assert_eq!(kv2.n_pages(), 0, "failed ensure must not leave pages mapped");
+    assert_eq!(pool.stats().alloc_failures, 1);
+
+    pool.release_kv(&mut kv1);
+    pool.ensure_range(&mut kv2, 0, 4).unwrap();
+    assert_eq!(kv2.n_pages(), 1, "released pages are reusable");
+}
+
+#[test]
+fn prefix_cache_evicts_under_memory_pressure() {
+    let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 4, 2));
+    let prompt: Vec<u32> = vec![1, 2, 3, 4];
+    let mut kv1 = pool.new_kv(32);
+    pool.ensure_range(&mut kv1, 0, 4).unwrap();
+    {
+        let mut bound = PagedKvRef { pool: &mut pool, kv: &mut kv1 };
+        bound.advance(4);
+    }
+    pool.register_prefix(&kv1, &prompt);
+    pool.release_kv(&mut kv1);
+    assert_eq!(pool.pages_in_use(), 1, "the cache keeps its page resident");
+
+    // a two-page demand can only be met by evicting the cached prefix
+    let mut kv2 = pool.new_kv(32);
+    pool.ensure_range(&mut kv2, 0, 8).unwrap();
+    assert_eq!(kv2.n_pages(), 2);
+    let stats = pool.stats();
+    assert_eq!(stats.prefix_evictions, 1);
+    assert_eq!(stats.cached_prefixes, 0);
+    assert_eq!(stats.alloc_failures, 0, "eviction satisfied the demand");
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end (needs checkpoint artifacts; skipped otherwise)
+// ---------------------------------------------------------------------------
+
+fn artifacts_root() -> Option<std::path::PathBuf> {
+    let root = fbquant::artifacts_dir();
+    root.join("manifest.json").exists().then_some(root)
+}
+
+#[test]
+fn paged_backend_generation_matches_dense_backend() {
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let store =
+        WeightStore::load(&WeightStore::path_for(&root, "llamoid-tiny", "fbquant", 4)).unwrap();
+    let tok = ByteTokenizer::default();
+    let prompts = [
+        tok.encode("the green fox rests "),
+        tok.encode("= sea =\nthe salty crab "),
+        tok.encode("two plus three equals "),
+    ];
+    let run = |paged: bool| -> Vec<Vec<u32>> {
+        let engine = NativeEngine::from_store(&store, SubMode::Fused).unwrap();
+        let mut backend = NativeBackend::new(engine, "equiv");
+        if !paged {
+            backend = backend.with_dense();
+        }
+        let reqs: Vec<GenRequest> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| GenRequest::new(i as u64 + 1, p.clone(), 16))
+            .collect();
+        let (responses, _) =
+            Coordinator::run_closed_loop(&mut backend, reqs, &CoordinatorConfig::default())
+                .unwrap();
+        responses.into_iter().map(|r| r.tokens).collect()
+    };
+    assert_eq!(run(true), run(false), "paged attention changed greedy generation");
+}
+
+#[test]
+fn pool_exhaustion_sheds_admissions_with_terminal_error() {
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let store =
+        WeightStore::load(&WeightStore::path_for(&root, "llamoid-tiny", "rtn", 4)).unwrap();
+    let engine = NativeEngine::from_store(&store, SubMode::None).unwrap();
+    // 4 slots over a 4-page pool (16 positions per page): two 44-token
+    // prompts fit (shared prefix + one copy-on-write page), the other
+    // two must shed at admission — and the loop keeps serving
+    let mut backend =
+        NativeBackend::new(engine, "tiny-pool").with_max_slots(4).with_kv_pool(16, 4);
+    let prompt: Vec<u32> = (0..44).map(|i| (40 + i % 50) as u32).collect();
+    let reqs: Vec<GenRequest> =
+        (0..4).map(|i| GenRequest::new(i as u64 + 1, prompt.clone(), 3)).collect();
+    let (responses, metrics) =
+        Coordinator::run_closed_loop(&mut backend, reqs, &CoordinatorConfig::default()).unwrap();
+    assert_eq!(responses.len() + metrics.requests_shed, 4, "requests lost");
+    assert!(metrics.requests_shed >= 1, "tiny pool shed nothing");
+    assert!(!responses.is_empty(), "pool served nothing");
+    for r in &responses {
+        assert_eq!(r.tokens.len(), 3);
+    }
+    let pool = metrics.kv_pool.expect("paged backend reports pool stats");
+    assert!(pool.alloc_failures >= 1);
+    assert!(pool.prefix_hits >= 1, "identical prompts should share pages");
+}
+
+#[test]
+fn mid_decode_exhaustion_terminates_one_request_not_the_loop() {
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let store =
+        WeightStore::load(&WeightStore::path_for(&root, "llamoid-tiny", "rtn", 4)).unwrap();
+    let engine = NativeEngine::from_store(&store, SubMode::None).unwrap();
+    // two 30-token prompts admit into a 4-page pool, but when decode
+    // crosses the page boundary at position 32 only one new page exists:
+    // the slot that cannot advance must finish with a terminal error
+    // while the other runs to completion
+    let mut backend =
+        NativeBackend::new(engine, "mid-decode").with_max_slots(2).with_kv_pool(16, 4);
+    let prompt: Vec<u32> = (0..30).map(|i| (40 + i % 50) as u32).collect();
+    let reqs: Vec<GenRequest> =
+        (0..2).map(|i| GenRequest::new(i as u64 + 1, prompt.clone(), 4)).collect();
+    let (responses, metrics) =
+        Coordinator::run_closed_loop(&mut backend, reqs, &CoordinatorConfig::default())
+            .expect("mid-decode exhaustion must not abort the serving loop");
+    assert_eq!(responses.len(), 1, "exactly one request should complete");
+    assert_eq!(responses[0].tokens.len(), 4);
+    assert_eq!(metrics.requests_done, 1);
+    assert_eq!(metrics.requests_shed, 1, "the starved slot is shed, not fatal");
+    let pool = metrics.kv_pool.expect("paged backend reports pool stats");
+    assert!(pool.alloc_failures >= 1);
+}
