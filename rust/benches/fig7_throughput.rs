@@ -1,7 +1,8 @@
 //! Fig. 7: token throughput (tk/s), batch 1 — FP vs INT4 vs INT4-Sub
 //! (naive sub-branch) vs INT4-FBQuant (fused) — plus the serving-side
-//! comparisons the quantization exists for: continuous (slot-pool) vs
-//! batch-synchronous scheduling, paged vs dense KV at an equal memory
+//! comparisons the quantization exists for: weight-stationary batched vs
+//! per-slot sequential decode at equal slot count, continuous (slot-pool)
+//! vs batch-synchronous scheduling, paged vs dense KV at an equal memory
 //! budget, and prompt-prefix reuse on a templated workload.
 //!
 //! Paper shape (Llama2-7B, RTX 3090, prefill 256 / decode 64):
@@ -123,8 +124,102 @@ fn serving_comparison(model: &str, stream: &TokenStream, n: usize) -> anyhow::Re
         cont_occ / sync_occ.max(1e-9), cont_occ, sync_occ,
         cont_tps / sync_tps.max(1e-9), cont_tps, sync_tps,
     );
-    println!("on a batch-parallel device the occupancy gap is the throughput gap — the native");
-    println!("engine decodes lanes sequentially, so tk/s stays ~flat while occupancy shows the win.");
+    println!("with the weight-stationary batched decode the native engine streams the weights");
+    println!("once per step across all occupied slots, so the occupancy gap is a tokens/s gap.");
+    Ok(())
+}
+
+/// Batched (weight-stationary) vs per-slot sequential decode at **equal
+/// slot count**: same admitted prompts, same greedy continuations (the
+/// two paths are bit-identical), only the decode kernel strategy — and
+/// with it the per-step weight traffic — differs.
+fn batched_vs_sequential(model: &str, stream: &TokenStream) -> anyhow::Result<()> {
+    let store = WeightStore::load(&ckpt(model, "fbquant", 4))?;
+    let toks = stream.tokens();
+    let plen = 24usize;
+    let decode = if fast() { 24 } else { 48 };
+    let reps = 2;
+
+    println!(
+        "\n=== decode: weight-stationary batched vs per-slot sequential ({model}, equal slot count) ==="
+    );
+    println!(
+        "{:<6} {:<12} {:>10} {:>13} {:>9}",
+        "slots", "decode", "gen tk/s", "W bytes/tok", "speedup"
+    );
+    println!("{}", "-".repeat(54));
+    for &m in &[1usize, 2, 4, 8] {
+        let mut row: Vec<(f64, f64)> = Vec::new();
+        for batched in [false, true] {
+            let mut best_tps = 0f64;
+            let mut wbpt = 0f64;
+            for _ in 0..reps {
+                let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+                let mut backend = NativeBackend::new(engine, "bd").with_max_slots(m);
+                if !batched {
+                    backend = backend.with_sequential_decode();
+                }
+                let mut state = backend.open_batch(m)?;
+                let mut last = vec![0u32; m];
+                for slot in 0..m {
+                    let start = (slot * 137) % (toks.len() - plen - 1);
+                    let prompt: Vec<u32> =
+                        toks[start..start + plen].iter().map(|&b| b as u32).collect();
+                    let lg = backend.prefill_slot(&mut state, slot, &prompt)?;
+                    last[slot] = fbquant::tensor::ops::argmax(&lg) as u32;
+                }
+                backend.reset_traffic();
+                let t0 = Instant::now();
+                for _ in 0..decode {
+                    let st: Vec<SlotToken> =
+                        (0..m).map(|s| SlotToken { slot: s, token: last[s] }).collect();
+                    let lg = backend.decode(&mut state, &st)?;
+                    for (s, l) in lg.iter().enumerate() {
+                        last[s] = fbquant::tensor::ops::argmax(l) as u32;
+                    }
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                best_tps = best_tps.max((m * decode) as f64 / wall);
+                wbpt = backend.traffic().weight_bytes as f64 / (m * decode) as f64;
+            }
+            println!(
+                "{:<6} {:<12} {:>10.1} {:>13} {:>9}",
+                m,
+                if batched { "batched" } else { "sequential" },
+                best_tps,
+                fbquant::util::human_bytes(wbpt as usize),
+                if batched && !row.is_empty() {
+                    format!("{:.2}x", best_tps / row[0].0)
+                } else {
+                    String::new()
+                },
+            );
+            row.push((best_tps, wbpt));
+        }
+        let (seq_tps, seq_w) = row[0];
+        let (bat_tps, bat_w) = row[1];
+        // exact m-fold amortization: the batched step charges the weights
+        // once where the sequential loop charges them per slot
+        assert!(
+            (bat_w * m as f64 - seq_w).abs() <= seq_w * 0.01,
+            "weight bytes/token must fall as 1/slots at m={m} ({bat_w} vs {seq_w})"
+        );
+        // wall-clock is noisy on shared/single-core machines: hard-assert
+        // only at m=8 where the amortization margin is widest, warn below
+        if m == 8 {
+            assert!(
+                bat_tps > seq_tps,
+                "batched decode must out-run sequential at m={m} ({bat_tps:.1} vs {seq_tps:.1} tk/s)"
+            );
+        } else if m >= 4 && bat_tps <= seq_tps {
+            eprintln!(
+                "warning: batched decode did not out-run sequential at m={m} \
+                 ({bat_tps:.1} vs {seq_tps:.1} tk/s) — noisy host?"
+            );
+        }
+    }
+    println!("\nweight bytes/token falls as 1/slots on the batched path (codes/scales/A/B stream");
+    println!("once per step); the sequential column re-reads the full model every slot.");
     Ok(())
 }
 
@@ -302,6 +397,7 @@ fn main() -> anyhow::Result<()> {
 
     let n = if fast() { 12 } else { 24 };
     let serve_model = if fast() { "llamoid-tiny" } else { model };
+    batched_vs_sequential(serve_model, &stream)?;
     serving_comparison(serve_model, &stream, n)?;
     paged_vs_dense(serve_model, &stream, n)?;
     prefix_reuse_demo(serve_model, &stream)?;

@@ -2,6 +2,10 @@
 //! * rust native quantized GEMV/GEMM (fused / unfused / no-sub) across
 //!   sizes, with effective bandwidth,
 //! * dense FP GEMV for the roofline reference,
+//! * the batched-decode sweep (slots × bits × rank): weight-stationary
+//!   `gemv_multi` vs the per-slot loop, emitted to `BENCH_decode.json`
+//!   (tokens/s + weight bytes/token) as the perf trajectory file CI
+//!   smokes on every push,
 //! * the PJRT `kernel_fused`/`kernel_unfused` artifacts (the Pallas
 //!   pair lowered by aot.py) — dispatch-count effect at the XLA level.
 
@@ -36,6 +40,114 @@ fn layer(d: usize, r: usize, bits: u8) -> (QuantLinear, Vec<f32>) {
         },
         w,
     )
+}
+
+/// Batched-decode sweep: the weight-stationary `gemv_multi` against the
+/// per-slot `gemv` loop over slots × bits × rank, on one square decode
+/// layer as the per-layer proxy. Emits `BENCH_decode.json` so the perf
+/// trajectory (tokens/s, weight bytes/token) is tracked from CI.
+fn batched_decode_sweep(bench: &Bench) -> anyhow::Result<()> {
+    use fbquant::util::json::Json;
+
+    let d: usize = if fast() { 256 } else { 512 };
+    let bits_list: &[u8] = if fast() { &[4] } else { &[3, 4] };
+    let rank_list: &[usize] = &[0, 16];
+    let slot_list: &[usize] = &[1, 2, 4, 8];
+
+    println!("\n=== batched decode sweep: weight-stationary gemv_multi vs per-slot gemv (d={d}) ===");
+    println!(
+        "{:<5} {:<5} {:<5} {:<12} {:>11} {:>12} {:>13} {:>9}",
+        "bits", "rank", "m", "impl", "latency(us)", "tokens/s", "W bytes/tok", "speedup"
+    );
+    println!("{}", "-".repeat(80));
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rng = Pcg64::seeded(9);
+    for &bits in bits_list {
+        for &rank in rank_list {
+            let (mut ql, _) = layer(d, rank, bits);
+            if rank == 0 {
+                ql.a = None;
+                ql.b = None;
+                ql.rank = 0;
+            }
+            for &m in slot_list {
+                let xs: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+                let mut ys = vec![0f32; m * d];
+                let mut ws = Workspace::default();
+
+                let mut results = Vec::new();
+                for batched in [false, true] {
+                    let mut t = Traffic::default();
+                    if batched {
+                        ql.gemv_multi(&xs, m, &mut ys, SubMode::Fused, &mut ws, &mut t);
+                    } else {
+                        for i in 0..m {
+                            ql.gemv(
+                                &xs[i * d..(i + 1) * d],
+                                &mut ys[i * d..(i + 1) * d],
+                                SubMode::Fused,
+                                &mut ws,
+                                &mut t,
+                            );
+                        }
+                    }
+                    let wbpt = t.weight_bytes as f64 / m as f64;
+                    let name = if batched { "batched" } else { "sequential" };
+                    let r = bench.run(name, || {
+                        let mut tt = Traffic::default();
+                        if batched {
+                            ql.gemv_multi(&xs, m, &mut ys, SubMode::Fused, &mut ws, &mut tt);
+                        } else {
+                            for i in 0..m {
+                                ql.gemv(
+                                    &xs[i * d..(i + 1) * d],
+                                    &mut ys[i * d..(i + 1) * d],
+                                    SubMode::Fused,
+                                    &mut ws,
+                                    &mut tt,
+                                );
+                            }
+                        }
+                    });
+                    let tps = m as f64 / r.min_s;
+                    results.push((name, r.min_us(), tps, wbpt));
+                }
+                let speedup = results[1].2 / results[0].2;
+                for (name, lat_us, tps, wbpt) in &results {
+                    println!(
+                        "{:<5} {:<5} {:<5} {:<12} {:>11.1} {:>12.0} {:>13.0} {:>9}",
+                        bits,
+                        rank,
+                        m,
+                        name,
+                        lat_us,
+                        tps,
+                        wbpt,
+                        if *name == "batched" { format!("{speedup:.2}x") } else { String::new() },
+                    );
+                    rows.push(Json::obj(vec![
+                        ("d", Json::from(d)),
+                        ("bits", Json::from(bits as usize)),
+                        ("rank", Json::from(rank)),
+                        ("slots", Json::from(m)),
+                        ("impl", Json::from(*name)),
+                        ("latency_us", Json::from(*lat_us)),
+                        ("tokens_per_s", Json::from(*tps)),
+                        ("weight_bytes_per_token", Json::from(*wbpt)),
+                    ]));
+                }
+            }
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::from("batched_decode_sweep")),
+        ("unit", Json::from("per-layer decode proxy (one square quantized linear)")),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_decode.json", doc.to_string_pretty())?;
+    println!("\nwrote BENCH_decode.json ({} rows)", slot_list.len() * bits_list.len() * rank_list.len() * 2);
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -88,6 +200,8 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+
+    batched_decode_sweep(&bench)?;
 
     // PJRT kernel artifacts
     if have_artifacts() {

@@ -12,7 +12,13 @@
 //! [`Backend::continuous`]:
 //!
 //! * [`NativeBackend`] — fully continuous: any free slot can be refilled
-//!   at any time. By default every batch runs on a **paged KV pool**
+//!   at any time. [`Backend::decode`] steps every listed slot through
+//!   **one weight-stationary batched engine step**
+//!   ([`NativeEngine::step_batch`]): quantized weights stream once per
+//!   step across all occupied slots instead of once per slot
+//!   ([`NativeBackend::with_sequential_decode`] restores the per-slot
+//!   baseline for A/B benching). By default every batch runs on a
+//!   **paged KV pool**
 //!   ([`crate::engine::kv::KvPagePool`]): slots map fixed-size pages on
 //!   demand (resident bytes track true sequence length, pages-in-use is
 //!   the admission-pressure signal), prompts sharing a cached prefix map
@@ -36,7 +42,9 @@
 //!   position vector would lift this restriction — see ROADMAP.
 
 use super::request::GenRequest;
-use crate::engine::kv::{KvPagePool, KvPoolConfig, KvPoolStats, PagedKv, PagedKvRef};
+use crate::engine::kv::{
+    KvPagePool, KvPoolConfig, KvPoolStats, KvSlot, PagedKv, PagedKvRef, PagedSlotBatch, SlotBatch,
+};
 use crate::engine::native::EngineWs;
 use crate::engine::{KvCache, NativeEngine, SubMode};
 use crate::model::{Config, WeightStore};
@@ -207,6 +215,10 @@ pub struct NativeBackend {
     /// pool size in pages; 0 = worst case (`capacity * max_seq` worth,
     /// so decode can never exhaust the pool mid-flight)
     pool_pages: usize,
+    /// A/B escape hatch: decode each listed slot with its own engine
+    /// step (re-streaming the weights per slot) instead of the
+    /// weight-stationary batched step.
+    sequential_decode: bool,
 }
 
 impl NativeBackend {
@@ -219,6 +231,7 @@ impl NativeBackend {
             max_slots: 4,
             page_size: DEFAULT_PAGE_SIZE,
             pool_pages: 0,
+            sequential_decode: false,
         }
     }
 
@@ -258,6 +271,16 @@ impl NativeBackend {
         self
     }
 
+    /// Decode listed slots one engine step at a time instead of through
+    /// the weight-stationary batched step — the pre-batched behaviour,
+    /// kept as an A/B baseline for the fig7/microbench comparisons.
+    /// Logits are bit-identical either way; only the weight traffic (and
+    /// wall-clock) differs.
+    pub fn with_sequential_decode(mut self) -> NativeBackend {
+        self.sequential_decode = true;
+        self
+    }
+
     pub fn engine(&self) -> &NativeEngine {
         &self.engine
     }
@@ -268,6 +291,68 @@ impl NativeBackend {
 
     pub fn reset_traffic(&mut self) {
         self.ws.traffic.reset();
+    }
+
+    /// The per-slot decode loop ([`NativeBackend::with_sequential_decode`]):
+    /// one full engine step — and one full pass over the weights — per
+    /// occupied slot.
+    fn decode_sequential(
+        &mut self,
+        state: &mut BatchState,
+        tokens: &[SlotToken],
+    ) -> Result<Vec<Vec<f32>>> {
+        // same contract as the batched path: a slot may be listed once
+        // (double-stepping would silently advance its KV twice); slot
+        // counts are small, so the quadratic scan beats allocating a
+        // bitmap sized by a caller-supplied id
+        for (idx, st) in tokens.iter().enumerate() {
+            if tokens[..idx].iter().any(|p| p.slot == st.slot) {
+                bail!("decode: slot {} listed twice", st.slot);
+            }
+        }
+        // validate every slot before stepping any, like the batched path:
+        // a mid-loop error must not leave earlier slots silently advanced
+        match state {
+            BatchState::Native { slots } => {
+                for st in tokens {
+                    let Some(kv) = slots.get(st.slot).and_then(|s| s.as_ref()) else {
+                        bail!("decode: slot {} is not occupied", st.slot);
+                    };
+                    if kv.remaining() == 0 {
+                        bail!("slot {}: kv cache full", st.slot);
+                    }
+                }
+                let mut out = Vec::with_capacity(tokens.len());
+                for st in tokens {
+                    let kv = slots[st.slot].as_mut().expect("validated above");
+                    out.push(self.engine.decode_one(st.token, kv, &mut self.ws));
+                }
+                Ok(out)
+            }
+            BatchState::NativePaged { pool, slots } => {
+                for st in tokens {
+                    let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
+                        bail!("decode: slot {} is not occupied", st.slot);
+                    };
+                    if kv.remaining() == 0 {
+                        bail!("slot {}: kv view full", st.slot);
+                    }
+                    // pages were reserved by prepare_decode; this is a
+                    // no-op backstop for callers that skipped it
+                    let pos = kv.len();
+                    pool.ensure_range(kv, pos, pos + 1)
+                        .with_context(|| format!("decoding slot {} at position {pos}", st.slot))?;
+                }
+                let mut out = Vec::with_capacity(tokens.len());
+                for st in tokens {
+                    let kv = slots[st.slot].as_mut().expect("validated above");
+                    let mut bound = PagedKvRef { pool: &mut *pool, kv };
+                    out.push(self.engine.decode_one(st.token, &mut bound, &mut self.ws));
+                }
+                Ok(out)
+            }
+            _ => bail!("native backend got a foreign batch state"),
+        }
     }
 }
 
@@ -355,22 +440,35 @@ impl Backend for NativeBackend {
     }
 
     fn decode(&mut self, state: &mut BatchState, tokens: &[SlotToken]) -> Result<Vec<Vec<f32>>> {
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.sequential_decode {
+            return self.decode_sequential(state, tokens);
+        }
         match state {
             BatchState::Native { slots } => {
-                let mut out = Vec::with_capacity(tokens.len());
+                // distinct slots own distinct caches: split the borrows
+                let mut refs: Vec<Option<&mut KvCache>> =
+                    slots.iter_mut().map(|s| s.as_mut()).collect();
+                let mut batch: Vec<&mut dyn KvSlot> = Vec::with_capacity(tokens.len());
+                let mut toks = Vec::with_capacity(tokens.len());
                 for st in tokens {
-                    let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
-                        bail!("decode: slot {} is not occupied", st.slot);
+                    let Some(kv) = refs.get_mut(st.slot).and_then(|r| r.take()) else {
+                        bail!("decode: slot {} is not occupied (or listed twice)", st.slot);
                     };
                     if kv.remaining() == 0 {
                         bail!("slot {}: kv cache full", st.slot);
                     }
-                    out.push(self.engine.decode_one(st.token, kv, &mut self.ws));
+                    toks.push(st.token);
+                    batch.push(kv as &mut dyn KvSlot);
                 }
-                Ok(out)
+                let mut sb = SlotBatch { slots: batch };
+                Ok(self.engine.step_batch(&toks, &mut sb, &mut self.ws))
             }
             BatchState::NativePaged { pool, slots } => {
-                let mut out = Vec::with_capacity(tokens.len());
+                // pages were reserved by prepare_decode; this is a no-op
+                // backstop for callers that skipped it
                 for st in tokens {
                     let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
                         bail!("decode: slot {} is not occupied", st.slot);
@@ -378,15 +476,23 @@ impl Backend for NativeBackend {
                     if kv.remaining() == 0 {
                         bail!("slot {}: kv view full", st.slot);
                     }
-                    // pages were reserved by prepare_decode; this is a
-                    // no-op backstop for callers that skipped it
                     let pos = kv.len();
                     pool.ensure_range(kv, pos, pos + 1)
                         .with_context(|| format!("decoding slot {} at position {pos}", st.slot))?;
-                    let mut bound = PagedKvRef { pool: &mut *pool, kv };
-                    out.push(self.engine.decode_one(st.token, &mut bound, &mut self.ws));
                 }
-                Ok(out)
+                let mut refs: Vec<Option<&mut PagedKv>> =
+                    slots.iter_mut().map(|s| s.as_mut()).collect();
+                let mut sel: Vec<&mut PagedKv> = Vec::with_capacity(tokens.len());
+                let mut toks = Vec::with_capacity(tokens.len());
+                for st in tokens {
+                    let Some(kv) = refs.get_mut(st.slot).and_then(|r| r.take()) else {
+                        bail!("decode: slot {} listed twice", st.slot);
+                    };
+                    toks.push(st.token);
+                    sel.push(kv);
+                }
+                let mut sb = PagedSlotBatch { pool, slots: sel };
+                Ok(self.engine.step_batch(&toks, &mut sb, &mut self.ws))
             }
             _ => bail!("native backend got a foreign batch state"),
         }

@@ -27,6 +27,12 @@ use crate::quant::pack::word_codes;
 pub struct Traffic {
     pub bytes_read: u64,
     pub bytes_written: u64,
+    /// Persistent model-tensor bytes within `bytes_read`: packed codes,
+    /// scales/zeros, sub-branch A/B and dense weight matrices. This is
+    /// the component the weight-stationary batched decode amortizes —
+    /// on [`QuantLinear::gemv_multi`] it is charged once per step
+    /// regardless of how many slot activations ride along.
+    pub weight_bytes: u64,
     pub kernel_launches: u64,
     pub macs: u64,
 }
@@ -79,6 +85,94 @@ pub struct Workspace {
     pub xa: Vec<f32>,
     pub xs: Vec<f32>,
     pub bt: Vec<f32>,
+    /// per-(slot, group) activation sums for the fused partial-sum identity
+    pub xsum: Vec<f32>,
+    /// `[out, m]` output tile of the serial weight-stationary kernel
+    pub ytile: Vec<f32>,
+}
+
+/// Work floor (MACs) below which row-parallel kernels stay serial: at toy
+/// sizes the scoped-thread fan-out costs more than it saves.
+const PAR_MIN_MACS: usize = 1 << 22;
+
+/// Worker count for a row-parallel kernel invocation of `macs` total work:
+/// 1 (serial) under the floor, otherwise the `FBQ_THREADS` pool width.
+pub(crate) fn plan_threads(macs: usize) -> usize {
+    if macs < PAR_MIN_MACS {
+        return 1;
+    }
+    crate::util::pool::decode_threads()
+}
+
+/// Split `n` rows into at most `parts` contiguous `(start, end)` chunks.
+pub(crate) fn split_rows(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    let (base, rem) = (n / parts, n % parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        if len == 0 {
+            continue;
+        }
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Scatter a row-major `[rows, m]` tile into `ys [m, out]` at row offset
+/// `o0` (the transpose from the kernel's weight-stationary layout back to
+/// the engine's slot-major layout).
+pub(crate) fn scatter_tile(tile: &[f32], m: usize, out: usize, o0: usize, ys: &mut [f32]) {
+    let rows = tile.len() / m;
+    for r in 0..rows {
+        for i in 0..m {
+            ys[i * out + o0 + r] = tile[r * m + i];
+        }
+    }
+}
+
+/// Shared row-parallel scaffold for the weight-stationary kernels: run
+/// `fill(lo, hi, tile)` over chunks of `n_rows` output rows — serially
+/// when `threads <= 1`, otherwise on scoped workers that each own a
+/// disjoint slice of the same `ytile` scratch (no per-chunk allocation)
+/// — then scatter the `[rows, m]` tile back into slot-major `ys`. Every
+/// output element is produced by exactly one `fill` invocation, so the
+/// fan-out never changes results.
+pub(crate) fn row_parallel<F>(
+    n_rows: usize,
+    m: usize,
+    threads: usize,
+    ytile: &mut Vec<f32>,
+    ys: &mut [f32],
+    fill: F,
+) where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    ytile.clear();
+    ytile.resize(n_rows * m, 0.0);
+    if threads <= 1 {
+        fill(0, n_rows, ytile);
+    } else {
+        let chunks = split_rows(n_rows, threads);
+        // carve ytile into one disjoint [rows, m] tile per worker
+        let mut tiles: Vec<&mut [f32]> = Vec::with_capacity(chunks.len());
+        let mut rest: &mut [f32] = ytile;
+        for &(lo, hi) in &chunks {
+            let taken = std::mem::take(&mut rest);
+            let (tile, tail) = taken.split_at_mut((hi - lo) * m);
+            tiles.push(tile);
+            rest = tail;
+        }
+        std::thread::scope(|s| {
+            for (&(lo, hi), tile) in chunks.iter().zip(tiles) {
+                let fill = &fill;
+                s.spawn(move || fill(lo, hi, tile));
+            }
+        });
+    }
+    scatter_tile(ytile, m, n_rows, 0, ys);
 }
 
 /// Transpose B `[out, rank]` into `bt [rank, out]` (GEMM up-projection runs
@@ -109,7 +203,7 @@ impl QuantLinear {
     pub fn gemv(&self, x: &[f32], y: &mut [f32], mode: SubMode, ws: &mut Workspace, t: &mut Traffic) {
         debug_assert_eq!(x.len(), self.cin);
         debug_assert_eq!(y.len(), self.out);
-        let Workspace { dequant, xa, xs, .. } = ws;
+        let Workspace { dequant, xa, xs, xsum, .. } = ws;
         // optional AWQ column scaling, applied once — both branches then
         // read the scaled buffer.
         let x: &[f32] = match &self.col_scale {
@@ -122,13 +216,13 @@ impl QuantLinear {
         };
         match mode {
             SubMode::None => {
-                self.gemv_main_fused(x, y, t);
+                self.gemv_main_fused(x, y, xsum, t);
             }
             SubMode::Fused => {
                 // kernel 1: down-projection (xa stays hot for kernel 2)
                 let has_sub = self.compute_xa(x, xa, t);
                 // kernel 2: dequant + main GEMV + up-projection, one pass
-                self.gemv_main_fused(x, y, t);
+                self.gemv_main_fused(x, y, xsum, t);
                 if has_sub {
                     self.add_up_projection_inline(xa, y, t);
                 }
@@ -150,6 +244,7 @@ impl QuantLinear {
                 if has_sub {
                     t.kernel_launches += 1;
                     t.bytes_read += 4 * (self.out + self.out * self.rank + self.rank) as u64;
+                    t.weight_bytes += 4 * (self.out * self.rank) as u64;
                     t.bytes_written += 4 * self.out as u64;
                     t.macs += (self.out * self.rank) as u64;
                     let b = self.b.as_ref().unwrap();
@@ -168,17 +263,20 @@ impl QuantLinear {
 
     /// Fused single-pass main path: dequantize per packed word inside the
     /// accumulation loop using the per-group partial-sum identity
-    /// Σ (c−z)·s·x = s·(Σ c·x − z·Σ x).
-    fn gemv_main_fused(&self, x: &[f32], y: &mut [f32], t: &mut Traffic) {
+    /// Σ (c−z)·s·x = s·(Σ c·x − z·Σ x). `xsum` is caller-provided scratch
+    /// (the hot loop stays allocation-free).
+    fn gemv_main_fused(&self, x: &[f32], y: &mut [f32], xsum: &mut Vec<f32>, t: &mut Traffic) {
         t.kernel_launches += 1;
         t.bytes_read += self.code_bytes() + self.meta_bytes() + 4 * self.cin as u64;
+        t.weight_bytes += self.code_bytes() + self.meta_bytes();
         t.bytes_written += 4 * self.out as u64;
         t.macs += (self.out * self.cin) as u64;
         let ngroups = self.cin / self.group;
         let words_per_group = self.group / 8;
         let words_per_row = self.cin / 8;
         // per-group Σx is shared across all output rows: precompute.
-        let mut xsum = vec![0f32; ngroups];
+        xsum.clear();
+        xsum.resize(ngroups, 0.0);
         for g in 0..ngroups {
             xsum[g] = x[g * self.group..(g + 1) * self.group].iter().sum();
         }
@@ -215,6 +313,7 @@ impl QuantLinear {
         }
         t.kernel_launches += 1;
         t.bytes_read += 4 * (self.rank * self.cin + self.cin) as u64;
+        t.weight_bytes += 4 * (self.rank * self.cin) as u64;
         t.bytes_written += 4 * self.rank as u64;
         t.macs += (self.rank * self.cin) as u64;
         xa.clear();
@@ -230,6 +329,7 @@ impl QuantLinear {
     fn add_up_projection_inline(&self, xa: &[f32], y: &mut [f32], t: &mut Traffic) {
         let b = self.b.as_ref().unwrap();
         t.bytes_read += 4 * (self.out * self.rank) as u64;
+        t.weight_bytes += 4 * (self.out * self.rank) as u64;
         t.macs += (self.out * self.rank) as u64;
         for o in 0..self.out {
             y[o] += crate::tensor::ops::dot(xa, &b[o * self.rank..(o + 1) * self.rank]);
@@ -237,27 +337,273 @@ impl QuantLinear {
     }
 
     /// Dequantize the whole matrix into `dq` (the un-fused pipeline's
-    /// materialization kernel).
+    /// materialization kernel). Iterates group-major like
+    /// [`QuantLinear::gemv_main_fused`] — scale/zero are loop-invariant
+    /// per group, so the baseline pays no per-element integer division.
     fn dequant_to(&self, dq: &mut Vec<f32>, t: &mut Traffic) {
         t.kernel_launches += 1;
         t.bytes_read += self.code_bytes() + self.meta_bytes();
+        t.weight_bytes += self.code_bytes() + self.meta_bytes();
         t.bytes_written += 4 * (self.out * self.cin) as u64;
         dq.clear();
         dq.resize(self.out * self.cin, 0.0);
         let ngroups = self.cin / self.group;
+        let words_per_group = self.group / 8;
         let words_per_row = self.cin / 8;
         for o in 0..self.out {
             let row_words = &self.packed[o * words_per_row..(o + 1) * words_per_row];
             let drow = &mut dq[o * self.cin..(o + 1) * self.cin];
-            for wi in 0..words_per_row {
-                let codes = word_codes(row_words[wi]);
-                let base = wi * 8;
-                for j in 0..8 {
-                    let g = (base + j) / self.group;
-                    let scale = self.scales[o * ngroups + g];
-                    let zero = self.zeros[o * ngroups + g];
-                    drow[base + j] = (codes[j] - zero) * scale;
+            for g in 0..ngroups {
+                let scale = self.scales[o * ngroups + g];
+                let zero = self.zeros[o * ngroups + g];
+                for wi in 0..words_per_group {
+                    let codes = word_codes(row_words[g * words_per_group + wi]);
+                    let base = g * self.group + wi * 8;
+                    for (j, &c) in codes.iter().enumerate() {
+                        drow[base + j] = (c - zero) * scale;
+                    }
                 }
+            }
+        }
+    }
+
+    /// Weight-stationary batched decode GEMV: `xs [m, cin]` → `ys [m, out]`,
+    /// one slot activation per row.
+    ///
+    /// Unlike [`QuantLinear::gemm`] (which materializes a dequantized tile
+    /// for the compute-bound prefill shape), this streams the packed codes
+    /// exactly once per call: each packed word is unpacked while hot and
+    /// applied to all `m` rows via the per-group partial-sum identity, so
+    /// [`Traffic`] charges codes/scales (and sub-branch A/B) once per step
+    /// and only the activations `m` times. Row `i` performs bit-identical
+    /// float operations to `gemv(&xs[i*cin..], ..)` — batched and
+    /// sequential decode produce identical logits.
+    ///
+    /// Output rows are fanned out over scoped worker threads when the
+    /// call is large enough (`FBQ_THREADS` workers, see
+    /// [`crate::util::pool::decode_threads`]); each output element is
+    /// still computed by exactly one worker with the same operation
+    /// order, so threading never changes results.
+    pub fn gemv_multi(
+        &self,
+        xs: &[f32],
+        m: usize,
+        ys: &mut [f32],
+        mode: SubMode,
+        ws: &mut Workspace,
+        t: &mut Traffic,
+    ) {
+        debug_assert_eq!(xs.len(), m * self.cin);
+        debug_assert_eq!(ys.len(), m * self.out);
+        if m == 1 {
+            // trivially weight-stationary already
+            return self.gemv(xs, ys, mode, ws, t);
+        }
+        let Workspace { dequant, xa, xs: xsb, xsum, ytile, .. } = ws;
+        // optional AWQ column scaling, applied once per row
+        let xs: &[f32] = match &self.col_scale {
+            None => xs,
+            Some(cs) => {
+                xsb.clear();
+                xsb.reserve(m * self.cin);
+                for i in 0..m {
+                    xsb.extend(
+                        xs[i * self.cin..(i + 1) * self.cin]
+                            .iter()
+                            .zip(cs)
+                            .map(|(xi, ci)| xi * ci),
+                    );
+                }
+                xsb
+            }
+        };
+        match mode {
+            SubMode::None => {
+                self.gemv_main_fused_multi(xs, m, ys, xsum, ytile, t);
+            }
+            SubMode::Fused => {
+                let has_sub = self.compute_xa_multi(xs, m, xa, t);
+                self.gemv_main_fused_multi(xs, m, ys, xsum, ytile, t);
+                if has_sub {
+                    self.add_up_projection_multi(xa, m, ys, t);
+                }
+            }
+            SubMode::Unfused => {
+                // batch-amortized unfused pipeline: one materialization,
+                // then dense GEMVs from the scratch for every row
+                self.dequant_to(dequant, t);
+                t.kernel_launches += 1;
+                t.bytes_read += 4 * (self.out * self.cin + m * self.cin) as u64;
+                t.bytes_written += 4 * (m * self.out) as u64;
+                t.macs += (m * self.out * self.cin) as u64;
+                // row-outer so the scratch row really streams once
+                for o in 0..self.out {
+                    let drow = &dequant[o * self.cin..(o + 1) * self.cin];
+                    for i in 0..m {
+                        ys[i * self.out + o] =
+                            crate::tensor::ops::dot(&xs[i * self.cin..(i + 1) * self.cin], drow);
+                    }
+                }
+                let has_sub = self.compute_xa_multi(xs, m, xa, t);
+                if has_sub {
+                    t.kernel_launches += 1;
+                    t.bytes_read +=
+                        4 * (m * self.out + self.out * self.rank + m * self.rank) as u64;
+                    t.weight_bytes += 4 * (self.out * self.rank) as u64;
+                    t.bytes_written += 4 * (m * self.out) as u64;
+                    t.macs += (m * self.out * self.rank) as u64;
+                    let b = self.b.as_ref().unwrap();
+                    for o in 0..self.out {
+                        let brow = &b[o * self.rank..(o + 1) * self.rank];
+                        for i in 0..m {
+                            ys[i * self.out + o] += crate::tensor::ops::dot(
+                                &xa[i * self.rank..(i + 1) * self.rank],
+                                brow,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(bias) = &self.bias {
+            for i in 0..m {
+                for (yi, bi) in ys[i * self.out..(i + 1) * self.out].iter_mut().zip(bias) {
+                    *yi += bi;
+                }
+            }
+        }
+    }
+
+    /// Multi-activation fused main path. Codes/scales stream once; the
+    /// row loop optionally fans out over the thread pool.
+    fn gemv_main_fused_multi(
+        &self,
+        xs: &[f32],
+        m: usize,
+        ys: &mut [f32],
+        xsum: &mut Vec<f32>,
+        ytile: &mut Vec<f32>,
+        t: &mut Traffic,
+    ) {
+        t.kernel_launches += 1;
+        t.bytes_read += self.code_bytes() + self.meta_bytes() + 4 * (m * self.cin) as u64;
+        t.weight_bytes += self.code_bytes() + self.meta_bytes();
+        t.bytes_written += 4 * (m * self.out) as u64;
+        t.macs += (m * self.out * self.cin) as u64;
+        let ngroups = self.cin / self.group;
+        // per-(slot, group) Σx, shared across all output rows
+        xsum.clear();
+        xsum.resize(m * ngroups, 0.0);
+        for i in 0..m {
+            for g in 0..ngroups {
+                xsum[i * ngroups + g] = xs
+                    [i * self.cin + g * self.group..i * self.cin + (g + 1) * self.group]
+                    .iter()
+                    .sum();
+            }
+        }
+        let threads = plan_threads(m * self.out * self.cin);
+        let xsum: &[f32] = xsum;
+        row_parallel(self.out, m, threads, ytile, ys, |lo, hi, tile| {
+            self.fused_rows_multi(xs, m, lo, hi, xsum, tile);
+        });
+    }
+
+    /// Weight-stationary inner kernel over output rows `lo..hi`: unpack
+    /// each packed word once, apply it to all `m` activation rows while
+    /// hot. `tile` is `[hi-lo, m]` row-major. Per activation row the float
+    /// operation order matches [`QuantLinear::gemv_main_fused`] exactly.
+    fn fused_rows_multi(
+        &self,
+        xs: &[f32],
+        m: usize,
+        lo: usize,
+        hi: usize,
+        xsum: &[f32],
+        tile: &mut [f32],
+    ) {
+        let ngroups = self.cin / self.group;
+        let words_per_group = self.group / 8;
+        let words_per_row = self.cin / 8;
+        // per-row scratch: stack for realistic slot counts, heap beyond
+        // (the hot loop stays allocation-free up to 16 slots)
+        const STACK_M: usize = 16;
+        let mut s1_arr = [0f32; STACK_M];
+        let mut acc_arr = [0f32; STACK_M];
+        let mut s1_vec = Vec::new();
+        let mut acc_vec = Vec::new();
+        let (s1, acc): (&mut [f32], &mut [f32]) = if m <= STACK_M {
+            (&mut s1_arr[..m], &mut acc_arr[..m])
+        } else {
+            s1_vec.resize(m, 0.0);
+            acc_vec.resize(m, 0.0);
+            (&mut s1_vec[..], &mut acc_vec[..])
+        };
+        for o in lo..hi {
+            let row_words = &self.packed[o * words_per_row..(o + 1) * words_per_row];
+            acc.iter_mut().for_each(|v| *v = 0.0);
+            for g in 0..ngroups {
+                let scale = self.scales[o * ngroups + g];
+                let zero = self.zeros[o * ngroups + g];
+                s1.iter_mut().for_each(|v| *v = 0.0);
+                for wi in 0..words_per_group {
+                    let codes = word_codes(row_words[g * words_per_group + wi]);
+                    let off = g * self.group + wi * 8;
+                    for (i, s) in s1.iter_mut().enumerate() {
+                        let xb = &xs[i * self.cin + off..i * self.cin + off + 8];
+                        *s += codes[0] * xb[0]
+                            + codes[1] * xb[1]
+                            + codes[2] * xb[2]
+                            + codes[3] * xb[3]
+                            + codes[4] * xb[4]
+                            + codes[5] * xb[5]
+                            + codes[6] * xb[6]
+                            + codes[7] * xb[7];
+                    }
+                }
+                for i in 0..m {
+                    acc[i] += scale * (s1[i] - zero * xsum[i * ngroups + g]);
+                }
+            }
+            tile[(o - lo) * m..(o - lo + 1) * m].copy_from_slice(&*acc);
+        }
+    }
+
+    /// xa `[m, rank]` = A·xᵢ for every row (A streams once).
+    fn compute_xa_multi(&self, xs: &[f32], m: usize, xa: &mut Vec<f32>, t: &mut Traffic) -> bool {
+        let Some(a) = &self.a else { return false };
+        if self.b.is_none() {
+            return false;
+        }
+        t.kernel_launches += 1;
+        t.bytes_read += 4 * (self.rank * self.cin + m * self.cin) as u64;
+        t.weight_bytes += 4 * (self.rank * self.cin) as u64;
+        t.bytes_written += 4 * (m * self.rank) as u64;
+        t.macs += (m * self.rank * self.cin) as u64;
+        xa.clear();
+        xa.resize(m * self.rank, 0.0);
+        // A-row outer: each row of A is read once for all m activations
+        for r in 0..self.rank {
+            let arow = &a[r * self.cin..(r + 1) * self.cin];
+            for i in 0..m {
+                xa[i * self.rank + r] =
+                    crate::tensor::ops::dot(&xs[i * self.cin..(i + 1) * self.cin], arow);
+            }
+        }
+        true
+    }
+
+    /// Fused multi-row up-projection: B streams once for all `m` rows.
+    fn add_up_projection_multi(&self, xa: &[f32], m: usize, ys: &mut [f32], t: &mut Traffic) {
+        let b = self.b.as_ref().unwrap();
+        t.bytes_read += 4 * (self.out * self.rank) as u64;
+        t.weight_bytes += 4 * (self.out * self.rank) as u64;
+        t.macs += (m * self.out * self.rank) as u64;
+        for o in 0..self.out {
+            let brow = &b[o * self.rank..(o + 1) * self.rank];
+            for i in 0..m {
+                ys[i * self.out + o] +=
+                    crate::tensor::ops::dot(&xa[i * self.rank..(i + 1) * self.rank], brow);
             }
         }
     }
@@ -275,7 +621,7 @@ impl QuantLinear {
             // would materialize the whole weight matrix per token)
             return self.gemv(x, y, mode, ws, t);
         }
-        let Workspace { dequant, xa: xa_buf, xs, bt } = ws;
+        let Workspace { dequant, xa: xa_buf, xs, bt, .. } = ws;
         // column scaling applied once to the whole block
         let xbuf: &[f32] = match &self.col_scale {
             None => x,
@@ -331,6 +677,7 @@ impl QuantLinear {
                     // fused into the main kernel's accumulator tile
                     t.bytes_read += 4 * (self.out * self.rank) as u64;
                 }
+                t.weight_bytes += 4 * (self.out * self.rank) as u64;
                 t.macs += (m * self.out * self.rank) as u64;
                 transpose_b(b, self.out, self.rank, bt);
                 for i in 0..m {
@@ -358,6 +705,7 @@ impl QuantLinear {
         }
         t.kernel_launches += 1;
         t.bytes_read += 4 * (self.rank * self.cin + m * self.cin) as u64;
+        t.weight_bytes += 4 * (self.rank * self.cin) as u64;
         t.bytes_written += 4 * (m * self.rank) as u64;
         t.macs += (m * self.rank * self.cin) as u64;
         xa.clear();
@@ -493,6 +841,110 @@ mod tests {
         assert_eq!(tf.kernel_launches, 2);
         assert_eq!(tu.kernel_launches, 4);
         assert_eq!(tf.macs, tu.macs); // fusion changes traffic, not math
+    }
+
+    #[test]
+    fn gemv_multi_is_bitwise_identical_to_per_row_gemv() {
+        let mut rng = Pcg64::seeded(45);
+        for &(out, cin, rank, cs) in
+            &[(24usize, 64usize, 8usize, true), (16, 32, 4, false), (8, 64, 0, false)]
+        {
+            let (mut ql, _) = make_layer(&mut rng, out, cin, rank, 4, 16, cs);
+            if rank == 0 {
+                ql.a = None;
+                ql.b = None;
+                ql.rank = 0;
+            }
+            let m = 5usize;
+            let xs: Vec<f32> = (0..m * cin).map(|_| rng.normal() as f32).collect();
+            let mut ws = Workspace::default();
+            let mut t = Traffic::default();
+            for mode in [SubMode::None, SubMode::Fused, SubMode::Unfused] {
+                let mut ym = vec![0f32; m * out];
+                ql.gemv_multi(&xs, m, &mut ym, mode, &mut ws, &mut t);
+                for i in 0..m {
+                    let mut yv = vec![0f32; out];
+                    ql.gemv(&xs[i * cin..(i + 1) * cin], &mut yv, mode, &mut ws, &mut t);
+                    assert_eq!(
+                        &ym[i * out..(i + 1) * out],
+                        &yv[..],
+                        "{mode:?} row {i}: batched decode must be bit-identical"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_multi_weight_traffic_is_slot_independent() {
+        let mut rng = Pcg64::seeded(46);
+        let (ql, _) = make_layer(&mut rng, 128, 128, 16, 4, 32, false);
+        let mut ws = Workspace::default();
+        let weight_bytes_at = |m: usize, ws: &mut Workspace| -> Traffic {
+            let xs: Vec<f32> = (0..m * 128).map(|i| (i % 7) as f32 * 0.1).collect();
+            let mut ys = vec![0f32; m * 128];
+            let mut t = Traffic::default();
+            ql.gemv_multi(&xs, m, &mut ys, SubMode::Fused, ws, &mut t);
+            t
+        };
+        let t1 = weight_bytes_at(1, &mut ws);
+        let t3 = weight_bytes_at(3, &mut ws);
+        let t8 = weight_bytes_at(8, &mut ws);
+        assert_eq!(t1.weight_bytes, t3.weight_bytes, "weight traffic must not scale with slots");
+        assert_eq!(t1.weight_bytes, t8.weight_bytes, "weight traffic must not scale with slots");
+
+        // the sequential baseline re-streams the weights per slot
+        let mut tseq = Traffic::default();
+        let xs: Vec<f32> = (0..8 * 128).map(|i| (i % 7) as f32 * 0.1).collect();
+        for i in 0..8 {
+            let mut y = vec![0f32; 128];
+            ql.gemv(&xs[i * 128..(i + 1) * 128], &mut y, SubMode::Fused, &mut ws, &mut tseq);
+        }
+        assert_eq!(tseq.weight_bytes, 8 * t8.weight_bytes);
+        assert!(
+            tseq.bytes_read as f64 >= 4.0 * t8.bytes_read as f64,
+            "batched decode must cut per-step read traffic >=4x at m=8 \
+             (sequential {} vs batched {})",
+            tseq.bytes_read,
+            t8.bytes_read
+        );
+    }
+
+    #[test]
+    fn gemv_multi_above_parallel_floor_stays_exact() {
+        // 8 * 512 * 1024 MACs crosses PAR_MIN_MACS, so with >1 available
+        // cores this exercises the row-parallel fan-out path; results must
+        // stay bit-identical to the per-row kernel either way.
+        let mut rng = Pcg64::seeded(47);
+        let (ql, _) = make_layer(&mut rng, 512, 1024, 16, 4, 128, false);
+        let m = 8usize;
+        let xs: Vec<f32> = (0..m * 1024).map(|_| rng.normal() as f32).collect();
+        let mut ws = Workspace::default();
+        let mut t = Traffic::default();
+        let mut ym = vec![0f32; m * 512];
+        ql.gemv_multi(&xs, m, &mut ym, SubMode::Fused, &mut ws, &mut t);
+        for i in 0..m {
+            let mut yv = vec![0f32; 512];
+            ql.gemv(&xs[i * 1024..(i + 1) * 1024], &mut yv, SubMode::Fused, &mut ws, &mut t);
+            assert_eq!(&ym[i * 512..(i + 1) * 512], &yv[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn split_rows_covers_exactly_once() {
+        for (n, parts) in [(10usize, 3usize), (1, 8), (16, 16), (7, 2), (0, 4), (5, 1)] {
+            let chunks = split_rows(n, parts);
+            let mut covered = 0;
+            let mut expect_start = 0;
+            for &(lo, hi) in &chunks {
+                assert_eq!(lo, expect_start, "chunks must be contiguous");
+                assert!(hi > lo, "empty chunk");
+                covered += hi - lo;
+                expect_start = hi;
+            }
+            assert_eq!(covered, n, "split_rows({n}, {parts}) lost rows");
+            assert!(chunks.len() <= parts.max(1));
+        }
     }
 
     #[test]

@@ -619,22 +619,89 @@ impl KvPagePool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Paged gather core (shared by the single-slot ref and the batched view)
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn paged_offset(c: &KvPoolConfig, pages: &[u32], l: usize, pos: usize, h: usize) -> usize {
+    let stride = c.n_heads * c.head_dim;
+    let page = pages[pos / c.page_size] as usize;
+    ((page * c.n_layers + l) * c.page_size + pos % c.page_size) * stride + h * c.head_dim
+}
+
+fn paged_write(pool: &mut KvPagePool, kv: &PagedKv, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]) {
+    let c = pool.cfg;
+    let stride = c.n_heads * c.head_dim;
+    debug_assert!(pos / c.page_size < kv.pages.len(), "write to unmapped page");
+    debug_assert_eq!(
+        pool.refcount[kv.pages[pos / c.page_size] as usize],
+        1,
+        "write to a shared page without copy-on-write"
+    );
+    debug_assert_eq!(k_t.len(), stride);
+    let off = paged_offset(&c, &kv.pages, l, pos, 0);
+    pool.k[off..off + stride].copy_from_slice(k_t);
+    pool.v[off..off + stride].copy_from_slice(v_t);
+}
+
+// Per-page gathers: one page-table lookup per contiguous run instead of
+// one per position.
+fn paged_score_keys(
+    pool: &KvPagePool,
+    kv: &PagedKv,
+    l: usize,
+    h: usize,
+    q: &[f32],
+    scale: f32,
+    scores: &mut [f32],
+) {
+    let c = &pool.cfg;
+    let (ps, hd) = (c.page_size, c.head_dim);
+    let stride = c.n_heads * hd;
+    let mut j = 0usize;
+    while j < scores.len() {
+        let run = (ps - j % ps).min(scores.len() - j);
+        let page = kv.pages[j / ps] as usize;
+        let base = ((page * c.n_layers + l) * ps + j % ps) * stride + h * hd;
+        for r in 0..run {
+            let kt = &pool.k[base + r * stride..base + r * stride + hd];
+            scores[j + r] = ops::dot(q, kt) * scale;
+        }
+        j += run;
+    }
+}
+
+fn paged_accumulate_values(
+    pool: &KvPagePool,
+    kv: &PagedKv,
+    l: usize,
+    h: usize,
+    weights: &[f32],
+    out: &mut [f32],
+) {
+    let c = &pool.cfg;
+    let (ps, hd) = (c.page_size, c.head_dim);
+    let stride = c.n_heads * hd;
+    let mut j = 0usize;
+    while j < weights.len() {
+        let run = (ps - j % ps).min(weights.len() - j);
+        let page = kv.pages[j / ps] as usize;
+        let base = ((page * c.n_layers + l) * ps + j % ps) * stride + h * hd;
+        for r in 0..run {
+            let vt = &pool.v[base + r * stride..base + r * stride + hd];
+            ops::axpy(weights[j + r], vt, out);
+        }
+        j += run;
+    }
+}
+
 /// A [`PagedKv`] view bound to its pool: the borrow the engine decodes
 /// through. Pages for the positions being written must have been mapped
 /// first with [`KvPagePool::ensure_range`].
 pub struct PagedKvRef<'a> {
     pub pool: &'a mut KvPagePool,
     pub kv: &'a mut PagedKv,
-}
-
-impl PagedKvRef<'_> {
-    #[inline]
-    fn offset(&self, l: usize, pos: usize, h: usize) -> usize {
-        let c = &self.pool.cfg;
-        let stride = c.n_heads * c.head_dim;
-        let page = self.kv.pages[pos / c.page_size] as usize;
-        ((page * c.n_layers + l) * c.page_size + pos % c.page_size) * stride + h * c.head_dim
-    }
 }
 
 impl KvSlot for PagedKvRef<'_> {
@@ -651,18 +718,7 @@ impl KvSlot for PagedKvRef<'_> {
     }
 
     fn write(&mut self, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]) {
-        let c = self.pool.cfg;
-        let stride = c.n_heads * c.head_dim;
-        debug_assert!(pos / c.page_size < self.kv.pages.len(), "write to unmapped page");
-        debug_assert_eq!(
-            self.pool.refcount[self.kv.pages[pos / c.page_size] as usize],
-            1,
-            "write to a shared page without copy-on-write"
-        );
-        debug_assert_eq!(k_t.len(), stride);
-        let off = self.offset(l, pos, 0);
-        self.pool.k[off..off + stride].copy_from_slice(k_t);
-        self.pool.v[off..off + stride].copy_from_slice(v_t);
+        paged_write(&mut *self.pool, &*self.kv, l, pos, k_t, v_t);
     }
 
     fn advance(&mut self, n: usize) {
@@ -672,50 +728,124 @@ impl KvSlot for PagedKvRef<'_> {
 
     #[inline]
     fn k_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
-        let off = self.offset(l, pos, h);
+        let off = paged_offset(&self.pool.cfg, &self.kv.pages, l, pos, h);
         &self.pool.k[off..off + self.pool.cfg.head_dim]
     }
 
     #[inline]
     fn v_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
-        let off = self.offset(l, pos, h);
+        let off = paged_offset(&self.pool.cfg, &self.kv.pages, l, pos, h);
         &self.pool.v[off..off + self.pool.cfg.head_dim]
     }
 
-    // Per-page gathers: one page-table lookup per contiguous run instead
-    // of one per position.
     fn score_keys(&self, l: usize, h: usize, q: &[f32], scale: f32, scores: &mut [f32]) {
-        let c = &self.pool.cfg;
-        let (ps, hd) = (c.page_size, c.head_dim);
-        let stride = c.n_heads * hd;
-        let mut j = 0usize;
-        while j < scores.len() {
-            let run = (ps - j % ps).min(scores.len() - j);
-            let page = self.kv.pages[j / ps] as usize;
-            let base = ((page * c.n_layers + l) * ps + j % ps) * stride + h * hd;
-            for r in 0..run {
-                let kt = &self.pool.k[base + r * stride..base + r * stride + hd];
-                scores[j + r] = ops::dot(q, kt) * scale;
-            }
-            j += run;
-        }
+        paged_score_keys(&*self.pool, &*self.kv, l, h, q, scale, scores);
     }
 
     fn accumulate_values(&self, l: usize, h: usize, weights: &[f32], out: &mut [f32]) {
-        let c = &self.pool.cfg;
-        let (ps, hd) = (c.page_size, c.head_dim);
-        let stride = c.n_heads * hd;
-        let mut j = 0usize;
-        while j < weights.len() {
-            let run = (ps - j % ps).min(weights.len() - j);
-            let page = self.kv.pages[j / ps] as usize;
-            let base = ((page * c.n_layers + l) * ps + j % ps) * stride + h * hd;
-            for r in 0..run {
-                let vt = &self.pool.v[base + r * stride..base + r * stride + hd];
-                ops::axpy(weights[j + r], vt, out);
-            }
-            j += run;
-        }
+        paged_accumulate_values(&*self.pool, &*self.kv, l, h, weights, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched slot views (one decode step over m slots)
+// ---------------------------------------------------------------------------
+
+/// The batched-decode KV interface: `m` independent generation slots
+/// addressed by index, stepped together by
+/// [`crate::engine::NativeEngine::step_batch`].
+///
+/// This exists because the paged store cannot hand out `m` simultaneous
+/// [`PagedKvRef`]s (each would alias the pool mutably); a batch view
+/// holds the pool borrow once and routes per-slot reads/writes through
+/// it. [`SlotBatch`] adapts any collection of dense [`KvSlot`]s;
+/// [`PagedSlotBatch`] is the pool-backed equivalent.
+pub trait KvSlotBatch {
+    /// Number of slots in this batch.
+    fn n_slots(&self) -> usize;
+
+    /// Committed sequence length of slot `i` (its next write position).
+    fn len(&self, i: usize) -> usize;
+
+    /// Store `k_t`/`v_t` for slot `i`, layer `l`, position `pos`.
+    fn write(&mut self, i: usize, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]);
+
+    /// Commit `n` positions on slot `i` (after all layers are written).
+    fn advance(&mut self, i: usize, n: usize);
+
+    /// Attention scores `q . k_j * scale` over slot `i`'s history.
+    fn score_keys(&self, i: usize, l: usize, h: usize, q: &[f32], scale: f32, scores: &mut [f32]);
+
+    /// `out += sum_j weights[j] * v_j` over slot `i`'s history.
+    fn accumulate_values(&self, i: usize, l: usize, h: usize, weights: &[f32], out: &mut [f32]);
+}
+
+/// Batch adapter over independent [`KvSlot`]s (the dense path: each slot
+/// owns its own storage, so distinct `&mut` borrows coexist).
+pub struct SlotBatch<'a> {
+    pub slots: Vec<&'a mut dyn KvSlot>,
+}
+
+impl KvSlotBatch for SlotBatch<'_> {
+    fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn len(&self, i: usize) -> usize {
+        self.slots[i].len()
+    }
+
+    fn write(&mut self, i: usize, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]) {
+        self.slots[i].write(l, pos, k_t, v_t);
+    }
+
+    fn advance(&mut self, i: usize, n: usize) {
+        self.slots[i].advance(n);
+    }
+
+    fn score_keys(&self, i: usize, l: usize, h: usize, q: &[f32], scale: f32, scores: &mut [f32]) {
+        self.slots[i].score_keys(l, h, q, scale, scores);
+    }
+
+    fn accumulate_values(&self, i: usize, l: usize, h: usize, weights: &[f32], out: &mut [f32]) {
+        self.slots[i].accumulate_values(l, h, weights, out);
+    }
+}
+
+/// Batched view over one shared [`KvPagePool`]: the pool is borrowed
+/// once, per-slot page tables route every access. Pages for the
+/// positions being written must have been mapped with
+/// [`KvPagePool::ensure_range`] (the serving loop's `prepare_decode`).
+pub struct PagedSlotBatch<'a> {
+    pub pool: &'a mut KvPagePool,
+    pub slots: Vec<&'a mut PagedKv>,
+}
+
+impl KvSlotBatch for PagedSlotBatch<'_> {
+    fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn len(&self, i: usize) -> usize {
+        self.slots[i].len
+    }
+
+    fn write(&mut self, i: usize, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]) {
+        paged_write(&mut *self.pool, &*self.slots[i], l, pos, k_t, v_t);
+    }
+
+    fn advance(&mut self, i: usize, n: usize) {
+        let kv = &mut *self.slots[i];
+        kv.len += n;
+        debug_assert!(kv.len <= kv.max_seq);
+    }
+
+    fn score_keys(&self, i: usize, l: usize, h: usize, q: &[f32], scale: f32, scores: &mut [f32]) {
+        paged_score_keys(&*self.pool, &*self.slots[i], l, h, q, scale, scores);
+    }
+
+    fn accumulate_values(&self, i: usize, l: usize, h: usize, weights: &[f32], out: &mut [f32]) {
+        paged_accumulate_values(&*self.pool, &*self.slots[i], l, h, weights, out);
     }
 }
 

@@ -11,12 +11,17 @@
 //!   variants, with byte-traffic accounting,
 //! * [`kv`] — KV storage behind the [`kv::KvSlot`] interface: the dense
 //!   per-session cache and the paged, prefix-sharing [`kv::KvPagePool`],
-//! * [`native`] — the full transformer forward (prefill + decode).
+//!   plus the [`kv::KvSlotBatch`] views the batched decode steps through,
+//! * [`native`] — the full transformer forward (prefill + single-slot and
+//!   weight-stationary batched decode).
 
 pub mod kernels;
 pub mod kv;
 pub mod native;
 
 pub use kernels::{QuantLinear, SubMode, Traffic};
-pub use kv::{KvCache, KvPagePool, KvPoolConfig, KvPoolStats, KvSlot, PagedKv, PagedKvRef};
+pub use kv::{
+    KvCache, KvPagePool, KvPoolConfig, KvPoolStats, KvSlot, KvSlotBatch, PagedKv, PagedKvRef,
+    PagedSlotBatch, SlotBatch,
+};
 pub use native::NativeEngine;

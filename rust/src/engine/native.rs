@@ -3,9 +3,14 @@
 //! Numerically mirrors `python/compile/model.py` (same norm/activation/RoPE
 //! conventions) so logits agree with the JAX reference to float tolerance —
 //! asserted by `tests/cross_engine.rs` against the AOT selftest archive.
+//!
+//! Decode comes in two shapes: [`NativeEngine::decode_one`] steps a single
+//! slot, and [`NativeEngine::step_batch`] steps every occupied slot of a
+//! continuous batch through one weight-stationary pass (weights stream
+//! once per step, not once per slot) with bit-identical per-slot results.
 
-use super::kernels::{QuantLinear, SubMode, Traffic, Workspace};
-use super::kv::KvSlot;
+use super::kernels::{self, QuantLinear, SubMode, Traffic, Workspace};
+use super::kv::{KvSlot, KvSlotBatch};
 use crate::model::{Config, LinearWeights, WeightStore};
 use crate::tensor::ops;
 use anyhow::{bail, Result};
@@ -61,6 +66,7 @@ impl LinearExec {
             LinearExec::Dense { out, cin, w, bias } => {
                 t.kernel_launches += 1;
                 t.bytes_read += 4 * (w.len() + cin) as u64;
+                t.weight_bytes += 4 * w.len() as u64;
                 t.bytes_written += 4 * *out as u64;
                 t.macs += (*out * *cin) as u64;
                 for o in 0..*out {
@@ -76,11 +82,50 @@ impl LinearExec {
         }
     }
 
+    /// Batched-decode GEMV: `xs [m, cin]` → `ys [m, out]`, weights
+    /// streamed once for all `m` slot rows. Row `i` is bit-identical to
+    /// `gemv(&xs[i*cin..], ..)` — see [`QuantLinear::gemv_multi`].
+    pub fn gemv_multi(
+        &self,
+        xs: &[f32],
+        m: usize,
+        ys: &mut [f32],
+        mode: SubMode,
+        ws: &mut Workspace,
+        t: &mut Traffic,
+    ) {
+        match self {
+            LinearExec::Dense { out, cin, w, bias } => {
+                t.kernel_launches += 1;
+                t.bytes_read += 4 * (w.len() + m * cin) as u64;
+                t.weight_bytes += 4 * w.len() as u64;
+                t.bytes_written += 4 * (m * out) as u64;
+                t.macs += (m * out * cin) as u64;
+                // weight-row outer: W really streams once for all m rows
+                for o in 0..*out {
+                    let wrow = &w[o * cin..(o + 1) * cin];
+                    for i in 0..m {
+                        ys[i * out + o] = ops::dot(&xs[i * cin..(i + 1) * cin], wrow);
+                    }
+                }
+                if let Some(b) = bias {
+                    for i in 0..m {
+                        for (yv, bv) in ys[i * out..(i + 1) * out].iter_mut().zip(b) {
+                            *yv += bv;
+                        }
+                    }
+                }
+            }
+            LinearExec::Quant(q) => q.gemv_multi(xs, m, ys, mode, ws, t),
+        }
+    }
+
     pub fn gemm(&self, x: &[f32], m: usize, y: &mut [f32], mode: SubMode, ws: &mut Workspace, t: &mut Traffic) {
         match self {
             LinearExec::Dense { out, cin, w, bias } => {
                 t.kernel_launches += 1;
                 t.bytes_read += 4 * (w.len() + m * cin) as u64;
+                t.weight_bytes += 4 * w.len() as u64;
                 t.bytes_written += 4 * (m * out) as u64;
                 t.macs += (m * out * cin) as u64;
                 ops::matmul_t(x, w, y, m, *cin, *out);
@@ -141,6 +186,8 @@ pub struct EngineWs {
     m1: Vec<f32>,
     m2: Vec<f32>,
     m3: Vec<f32>,
+    /// final-norm output row(s) — hoisted so decode steps allocate nothing
+    hrow: Vec<f32>,
 }
 
 /// The native model.
@@ -354,17 +401,21 @@ impl NativeEngine {
         // final norm + lm head
         let vocab = cfg.vocab;
         let mut logits = vec![0f32; t_len * vocab];
-        ws.h.resize(t_len * d, 0.0);
+        ws.hrow.resize(d, 0.0);
         for i in 0..t_len {
-            let xrow = &ws.x[i * d..(i + 1) * d];
-            let mut hrow = vec![0f32; d];
-            self.norm(&self.final_norm_w, self.final_norm_b.as_ref(), xrow, &mut hrow);
+            self.norm(
+                &self.final_norm_w,
+                self.final_norm_b.as_ref(),
+                &ws.x[i * d..(i + 1) * d],
+                &mut ws.hrow,
+            );
             ws.traffic.kernel_launches += 1;
             ws.traffic.bytes_read += 4 * (self.lm_head.len() + d) as u64;
+            ws.traffic.weight_bytes += 4 * self.lm_head.len() as u64;
             ws.traffic.bytes_written += 4 * vocab as u64;
             ws.traffic.macs += (vocab * d) as u64;
             for o in 0..vocab {
-                logits[i * vocab + o] = ops::dot(&hrow, &self.lm_head[o * d..(o + 1) * d]);
+                logits[i * vocab + o] = ops::dot(&ws.hrow, &self.lm_head[o * d..(o + 1) * d]);
             }
         }
         logits
@@ -465,17 +516,223 @@ impl NativeEngine {
         if !want_logits {
             return Vec::new();
         }
-        let mut hrow = vec![0f32; d];
-        self.norm(&self.final_norm_w, self.final_norm_b.as_ref(), &ws.x, &mut hrow);
+        ws.hrow.resize(d, 0.0);
+        self.norm(&self.final_norm_w, self.final_norm_b.as_ref(), &ws.x, &mut ws.hrow);
         let vocab = cfg.vocab;
         let mut logits = vec![0f32; vocab];
         ws.traffic.kernel_launches += 1;
         ws.traffic.bytes_read += 4 * (self.lm_head.len() + d) as u64;
+        ws.traffic.weight_bytes += 4 * self.lm_head.len() as u64;
         ws.traffic.bytes_written += 4 * vocab as u64;
         ws.traffic.macs += (vocab * d) as u64;
         for o in 0..vocab {
-            logits[o] = ops::dot(&hrow, &self.lm_head[o * d..(o + 1) * d]);
+            logits[o] = ops::dot(&ws.hrow, &self.lm_head[o * d..(o + 1) * d]);
         }
         logits
+    }
+
+    /// One **weight-stationary batched decode step** over `m` occupied
+    /// slots: `tokens[i]` is slot `i`'s last sampled token, `kv` the
+    /// batched KV view pairing each row with its history (see
+    /// [`KvSlotBatch`]). Returns next-token logits per slot.
+    ///
+    /// All norms, projections and MLPs run as `m`-row batched kernels
+    /// ([`QuantLinear::gemv_multi`]), so quantized weights, scales and
+    /// sub-branch matrices stream **once per step** instead of once per
+    /// slot — [`Traffic::weight_bytes`] per step is independent of `m`.
+    /// Execution only forks per slot where state genuinely differs: RoPE
+    /// rotation at each slot's own position, the KV append, and the
+    /// paged/dense attention gathers. Every row performs bit-identical
+    /// float operations to [`NativeEngine::decode_one`] on that slot, so
+    /// batched and sequential decode yield identical logits. Slot
+    /// positions may differ arbitrarily (continuous batching).
+    pub fn step_batch(
+        &self,
+        tokens: &[u32],
+        kv: &mut dyn KvSlotBatch,
+        ws: &mut EngineWs,
+    ) -> Vec<Vec<f32>> {
+        let m = tokens.len();
+        assert!(m > 0, "batched step over zero slots");
+        assert_eq!(m, kv.n_slots(), "token/slot count mismatch");
+        let cfg = &self.cfg;
+        let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
+        let mut pos = Vec::with_capacity(m);
+        for i in 0..m {
+            let p = kv.len(i);
+            assert!(p < cfg.max_seq, "kv cache full on slot {i}");
+            pos.push(p);
+        }
+
+        // embed (per-slot fork: each row has its own token and position)
+        ws.x.resize(m * d, 0.0);
+        for i in 0..m {
+            let tok = tokens[i] as usize;
+            let xrow = &mut ws.x[i * d..(i + 1) * d];
+            xrow.copy_from_slice(&self.tok_emb[tok * d..(tok + 1) * d]);
+            if let Some(pe) = &self.pos_emb {
+                for (xv, pv) in xrow.iter_mut().zip(&pe[pos[i] * d..(pos[i] + 1) * d]) {
+                    *xv += pv;
+                }
+            }
+        }
+
+        for (l, blk) in self.blocks.iter().enumerate() {
+            // --- attention ---
+            ws.h.resize(m * d, 0.0);
+            let mut hbuf = std::mem::take(&mut ws.h);
+            for i in 0..m {
+                self.norm(
+                    &blk.attn_norm_w,
+                    blk.attn_norm_b.as_ref(),
+                    &ws.x[i * d..(i + 1) * d],
+                    &mut hbuf[i * d..(i + 1) * d],
+                );
+            }
+            ws.qb.resize(m * d, 0.0);
+            ws.kb.resize(m * d, 0.0);
+            ws.vb.resize(m * d, 0.0);
+            let mut qb = std::mem::take(&mut ws.qb);
+            let mut kb = std::mem::take(&mut ws.kb);
+            let mut vb = std::mem::take(&mut ws.vb);
+            blk.q.gemv_multi(&hbuf, m, &mut qb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            blk.k.gemv_multi(&hbuf, m, &mut kb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            blk.v.gemv_multi(&hbuf, m, &mut vb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            // per-slot fork: rotate at each slot's own position, append
+            for i in 0..m {
+                if cfg.rope() {
+                    for h in 0..nh {
+                        ops::rope_rotate(
+                            &mut qb[i * d + h * hd..i * d + (h + 1) * hd],
+                            pos[i],
+                            cfg.rope_theta,
+                        );
+                        ops::rope_rotate(
+                            &mut kb[i * d + h * hd..i * d + (h + 1) * hd],
+                            pos[i],
+                            cfg.rope_theta,
+                        );
+                    }
+                }
+                kv.write(i, l, pos[i], &kb[i * d..(i + 1) * d], &vb[i * d..(i + 1) * d]);
+            }
+            // per-slot fork: attention over each slot's own history
+            ws.attn.resize(m * d, 0.0);
+            let mut attn = std::mem::take(&mut ws.attn);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for i in 0..m {
+                let plen = pos[i] + 1;
+                ws.scores.resize(plen, 0.0);
+                for h in 0..nh {
+                    let qv = &qb[i * d + h * hd..i * d + (h + 1) * hd];
+                    kv.score_keys(i, l, h, qv, scale, &mut ws.scores[..plen]);
+                    ops::softmax_rows(&mut ws.scores[..plen], 1, plen);
+                    let out = &mut attn[i * d + h * hd..i * d + (h + 1) * hd];
+                    out.fill(0.0);
+                    kv.accumulate_values(i, l, h, &ws.scores[..plen], out);
+                }
+            }
+            blk.o.gemv_multi(&attn, m, &mut hbuf, self.mode, &mut ws.kernel, &mut ws.traffic);
+            for (xv, hv) in ws.x.iter_mut().zip(&hbuf) {
+                *xv += hv;
+            }
+            ws.attn = attn;
+            ws.qb = qb;
+            ws.kb = kb;
+            ws.vb = vb;
+
+            // --- mlp ---
+            for i in 0..m {
+                self.norm(
+                    &blk.mlp_norm_w,
+                    blk.mlp_norm_b.as_ref(),
+                    &ws.x[i * d..(i + 1) * d],
+                    &mut hbuf[i * d..(i + 1) * d],
+                );
+            }
+            ws.m3.resize(m * d, 0.0);
+            let mut mout = std::mem::take(&mut ws.m3);
+            self.mlp_multi(blk, &hbuf, m, ws, &mut mout);
+            for (xv, mv) in ws.x.iter_mut().zip(&mout) {
+                *xv += mv;
+            }
+            ws.m3 = mout;
+            ws.h = hbuf;
+        }
+        for i in 0..m {
+            kv.advance(i, 1);
+        }
+
+        // final norm (per row) + one batched lm-head
+        ws.hrow.resize(m * d, 0.0);
+        let mut hbuf = std::mem::take(&mut ws.hrow);
+        for i in 0..m {
+            self.norm(
+                &self.final_norm_w,
+                self.final_norm_b.as_ref(),
+                &ws.x[i * d..(i + 1) * d],
+                &mut hbuf[i * d..(i + 1) * d],
+            );
+        }
+        let vocab = cfg.vocab;
+        let mut flat = vec![0f32; m * vocab];
+        self.lm_head_multi(&hbuf, m, &mut flat, ws);
+        ws.hrow = hbuf;
+        (0..m).map(|i| flat[i * vocab..(i + 1) * vocab].to_vec()).collect()
+    }
+
+    /// Batched MLP mirroring [`NativeEngine::mlp`] with the
+    /// weight-stationary kernels (bit-identical per row).
+    fn mlp_multi(&self, blk: &Block, h: &[f32], m: usize, ws: &mut EngineWs, out: &mut [f32]) {
+        let d_ff = self.cfg.d_ff;
+        let mode = self.mode;
+        if let Some(down) = &blk.m3 {
+            // gated: down( silu(gate(h)) * up(h) )
+            ws.m1.resize(m * d_ff, 0.0);
+            ws.m2.resize(m * d_ff, 0.0);
+            let (m1, m2) = (&mut ws.m1, &mut ws.m2);
+            blk.m1.gemv_multi(h, m, m1, mode, &mut ws.kernel, &mut ws.traffic);
+            blk.m2.gemv_multi(h, m, m2, mode, &mut ws.kernel, &mut ws.traffic);
+            for i in 0..m * d_ff {
+                m1[i] = ops::silu(m1[i]) * m2[i];
+            }
+            down.gemv_multi(m1, m, out, mode, &mut ws.kernel, &mut ws.traffic);
+        } else {
+            // gelu MLP: proj(gelu(fc(h)))
+            ws.m1.resize(m * d_ff, 0.0);
+            let m1 = &mut ws.m1;
+            blk.m1.gemv_multi(h, m, m1, mode, &mut ws.kernel, &mut ws.traffic);
+            for v in m1.iter_mut() {
+                *v = ops::gelu(*v);
+            }
+            blk.m2.gemv_multi(m1, m, out, mode, &mut ws.kernel, &mut ws.traffic);
+        }
+    }
+
+    /// Batched dense lm-head: `h [m, d]` → `out [m, vocab]`. The weight
+    /// matrix streams once for all rows; vocab rows fan out over the
+    /// `FBQ_THREADS` pool when the call is large enough (each logit is
+    /// still computed by exactly one worker with the serial operation
+    /// order, so threading never changes results).
+    fn lm_head_multi(&self, h: &[f32], m: usize, out: &mut [f32], ws: &mut EngineWs) {
+        let (d, vocab) = (self.cfg.d_model, self.cfg.vocab);
+        {
+            let t = &mut ws.traffic;
+            t.kernel_launches += 1;
+            t.bytes_read += 4 * (self.lm_head.len() + m * d) as u64;
+            t.weight_bytes += 4 * self.lm_head.len() as u64;
+            t.bytes_written += 4 * (m * vocab) as u64;
+            t.macs += (m * vocab * d) as u64;
+        }
+        let threads = kernels::plan_threads(m * vocab * d);
+        // weight-row outer: each lm-head row streams once for all slots
+        kernels::row_parallel(vocab, m, threads, &mut ws.kernel.ytile, out, |lo, hi, tile| {
+            for o in lo..hi {
+                let wrow = &self.lm_head[o * d..(o + 1) * d];
+                for i in 0..m {
+                    tile[(o - lo) * m + i] = ops::dot(&h[i * d..(i + 1) * d], wrow);
+                }
+            }
+        });
     }
 }

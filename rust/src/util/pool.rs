@@ -1,8 +1,14 @@
 //! Minimal scoped thread pool (offline substitute for rayon).
 //!
-//! Used for data-parallel work outside the serving hot loop: batch
-//! evaluation, quantization sweeps and benchmark fan-out. The serving
-//! coordinator uses dedicated long-lived threads instead (see
+//! Used for data-parallel work: batch evaluation, quantization sweeps
+//! and benchmark fan-out. [`decode_threads`] (the `FBQ_THREADS` knob)
+//! also sizes the row-parallel decode kernels in `engine::kernels`,
+//! which spawn their own scoped workers over disjoint output-row slices;
+//! those only fan out above a multi-million-MAC work floor (see
+//! `engine::kernels::plan_threads`), so the spawn/join cost is amortized
+//! against >=1ms of compute per call — a persistent worker pool would
+//! shave that further (ROADMAP). The serving coordinator's own
+//! scheduling uses dedicated long-lived threads instead (see
 //! `coordinator::server`).
 
 use std::sync::mpsc;
@@ -57,6 +63,22 @@ where
 /// Default worker count: physical parallelism, capped.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Worker count for the row-parallel decode kernels, from the
+/// `FBQ_THREADS` environment knob (cached after first read).
+///
+/// `FBQ_THREADS=1` (or `0`) forces the serial path; unset or unparsable
+/// falls back to [`default_threads`]. Thread count never changes results —
+/// parallel kernels partition output rows, so every element is computed by
+/// exactly one worker in the same operation order as the serial loop.
+pub fn decode_threads() -> usize {
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| match std::env::var("FBQ_THREADS") {
+        // 0 means "no extra threads" by the usual convention: run serial
+        Ok(v) => v.trim().parse::<usize>().map(|n| n.max(1)).unwrap_or_else(|_| default_threads()),
+        Err(_) => default_threads(),
+    })
 }
 
 #[cfg(test)]

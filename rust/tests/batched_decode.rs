@@ -1,0 +1,290 @@
+//! Batched-decode equivalence and traffic tests: the weight-stationary
+//! `step_batch` path must produce **bit-identical** logits to the
+//! per-slot sequential decode over random interleavings of admissions,
+//! decode steps and releases — across dense and paged KV states, slot
+//! counts m ∈ {1, 3, 8}, and layers with and without sub-branches /
+//! col_scale — while its weight+metadata read traffic per step stays
+//! independent of the occupied-slot count.
+//!
+//! The tests synthesize tiny quantized checkpoints in a temp dir (no
+//! build artifacts required).
+
+use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::model::WeightStore;
+use fbquant::prop_assert_ok;
+use fbquant::quant::formats::{f32_bytes, u32_bytes, Archive, Dtype};
+use fbquant::quant::groupwise;
+use fbquant::quant::pack::pack_codes;
+use fbquant::testing::check;
+use fbquant::util::json::Json;
+use fbquant::util::Pcg64;
+
+/// Write a tiny quantized llamoid checkpoint (4-bit groupwise, optional
+/// sub-branch + col_scale) and load it back as a `WeightStore`.
+#[allow(clippy::too_many_arguments)]
+fn synth_store(
+    tag: &str,
+    d: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_ff: usize,
+    vocab: usize,
+    max_seq: usize,
+    group: usize,
+    rank: usize,
+    col_scale: bool,
+) -> WeightStore {
+    let dir = std::env::temp_dir().join("fbq_batched_decode");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}.fbqw"));
+    let mut rng = Pcg64::seeded(0xbd0 ^ (d as u64) ^ ((rank as u64) << 8));
+    let mut tensors: Vec<(String, Dtype, Vec<usize>, Vec<u8>)> = Vec::new();
+
+    let randn = |rng: &mut Pcg64, n: usize, s: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * s).collect()
+    };
+    let tok_emb = randn(&mut rng, vocab * d, 0.5);
+    let lm_head = randn(&mut rng, vocab * d, 0.2);
+    tensors.push(("tok_emb".to_string(), Dtype::F32, vec![vocab, d], f32_bytes(&tok_emb)));
+    tensors.push(("lm_head".to_string(), Dtype::F32, vec![vocab, d], f32_bytes(&lm_head)));
+    let fnw: Vec<f32> = (0..d).map(|i| 1.0 + 0.01 * (i % 7) as f32).collect();
+    tensors.push(("final_norm.w".to_string(), Dtype::F32, vec![d], f32_bytes(&fnw)));
+
+    for l in 0..n_layers {
+        for nm in ["attn_norm", "mlp_norm"] {
+            let w: Vec<f32> = (0..d).map(|i| 1.0 + 0.02 * ((i + l) % 5) as f32).collect();
+            tensors.push((format!("l{l}.{nm}.w"), Dtype::F32, vec![d], f32_bytes(&w)));
+        }
+        for name in ["q", "k", "v", "o", "gate", "up", "down"] {
+            let (out, cin) = match name {
+                "q" | "k" | "v" | "o" => (d, d),
+                "gate" | "up" => (d_ff, d),
+                _ => (d, d_ff),
+            };
+            let prefix = format!("l{l}.{name}");
+            let w = randn(&mut rng, out * cin, 0.2);
+            let p = groupwise::quant_params(&w, out, cin, 4, group);
+            let codes = groupwise::quantize(&w, out, cin, &p);
+            let packed = pack_codes(&codes, out, cin);
+            tensors.push((
+                format!("{prefix}/codes_packed"),
+                Dtype::U32,
+                vec![out, cin / 8],
+                u32_bytes(&packed),
+            ));
+            tensors.push((
+                format!("{prefix}/scales"),
+                Dtype::F32,
+                vec![out, cin / group],
+                f32_bytes(&p.scales),
+            ));
+            tensors.push((
+                format!("{prefix}/zeros"),
+                Dtype::F32,
+                vec![out, cin / group],
+                f32_bytes(&p.zeros),
+            ));
+            if rank > 0 {
+                let a = randn(&mut rng, rank * cin, 0.05);
+                let b = randn(&mut rng, out * rank, 0.05);
+                tensors.push((format!("{prefix}/a"), Dtype::F32, vec![rank, cin], f32_bytes(&a)));
+                tensors.push((format!("{prefix}/b"), Dtype::F32, vec![out, rank], f32_bytes(&b)));
+            }
+            if col_scale {
+                let cs: Vec<f32> = (0..cin).map(|_| 0.5 + rng.next_f32()).collect();
+                tensors.push((
+                    format!("{prefix}/col_scale"),
+                    Dtype::F32,
+                    vec![cin],
+                    f32_bytes(&cs),
+                ));
+            }
+        }
+    }
+
+    let cfg = Json::obj(vec![
+        ("name", Json::from(tag)),
+        ("family", Json::from("llamoid")),
+        ("d_model", Json::from(d)),
+        ("n_layers", Json::from(n_layers)),
+        ("n_heads", Json::from(n_heads)),
+        ("d_ff", Json::from(d_ff)),
+        ("vocab", Json::from(vocab)),
+        ("max_seq", Json::from(max_seq)),
+        ("rope_theta", Json::from(10000.0f64)),
+    ]);
+    let meta = Json::obj(vec![
+        ("config", cfg),
+        ("scheme", Json::from("quant")),
+        ("method", Json::from("synthetic")),
+        ("bits", Json::from(4usize)),
+        ("group", Json::from(group)),
+        ("rank", Json::from(rank)),
+    ]);
+    Archive::write(&path, &tensors, &meta).unwrap();
+    WeightStore::load(&path).unwrap()
+}
+
+fn mk_backend(store: &WeightStore, paged: bool, sequential: bool) -> NativeBackend {
+    let engine = NativeEngine::from_store(store, SubMode::Fused).unwrap();
+    let mut b = NativeBackend::new(engine, "bd").with_max_slots(8);
+    if !paged {
+        b = b.with_dense();
+    }
+    if sequential {
+        b = b.with_sequential_decode();
+    }
+    b
+}
+
+#[test]
+fn batched_decode_matches_sequential_at_fixed_occupancies() {
+    for &(rank, cs) in &[(0usize, false), (4usize, true)] {
+        let store =
+            synth_store(&format!("fix_r{rank}_cs{cs}"), 64, 2, 4, 96, 50, 64, 16, rank, cs);
+        for paged in [false, true] {
+            for m in [1usize, 3, 8] {
+                let mut bb = mk_backend(&store, paged, false);
+                let mut bs = mk_backend(&store, paged, true);
+                let mut state_b = bb.open_batch(8).unwrap();
+                let mut state_s = bs.open_batch(8).unwrap();
+                let mut last = vec![0u32; m];
+                for slot in 0..m {
+                    // distinct lengths: slots sit at different positions
+                    let prompt: Vec<u32> =
+                        (0..5 + slot).map(|i| ((slot * 11 + i * 7) % 50) as u32).collect();
+                    let lb = bb.prefill_slot(&mut state_b, slot, &prompt).unwrap();
+                    let ls = bs.prefill_slot(&mut state_s, slot, &prompt).unwrap();
+                    assert_eq!(lb, ls, "prefill diverged (m={m} slot={slot})");
+                    last[slot] = fbquant::tensor::ops::argmax(&lb) as u32;
+                }
+                for step in 0..6 {
+                    let toks: Vec<SlotToken> =
+                        (0..m).map(|s| SlotToken { slot: s, token: last[s] }).collect();
+                    let lb = bb.decode(&mut state_b, &toks).unwrap();
+                    let ls = bs.decode(&mut state_s, &toks).unwrap();
+                    assert_eq!(
+                        lb, ls,
+                        "decode diverged (paged={paged} m={m} step={step} rank={rank})"
+                    );
+                    for s in 0..m {
+                        last[s] = fbquant::tensor::ops::argmax(&lb[s]) as u32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batched_decode_bit_identical_over_random_interleavings() {
+    let store_plain = synth_store("prop_plain", 64, 2, 4, 96, 50, 64, 16, 0, false);
+    let store_sub = synth_store("prop_sub", 64, 2, 4, 96, 50, 64, 16, 4, true);
+    for (store, tag) in [(&store_plain, "plain"), (&store_sub, "sub")] {
+        for paged in [false, true] {
+            prop_assert_ok!(check(&format!("batched_equiv_{tag}_{paged}"), 8, |g| {
+                let cap = 4usize;
+                let mut bb = mk_backend(store, paged, false);
+                let mut bs = mk_backend(store, paged, true);
+                let mut state_b = bb.open_batch(cap).map_err(|e| e.to_string())?;
+                let mut state_s = bs.open_batch(cap).map_err(|e| e.to_string())?;
+                let mut last: Vec<Option<u32>> = vec![None; cap];
+                let n_ops = g.usize_range(8, 24);
+                for _ in 0..n_ops {
+                    match g.rng.below(4) {
+                        0 | 1 => {
+                            // admit into the first free slot, if any
+                            if let Some(slot) = (0..cap).find(|&s| last[s].is_none()) {
+                                let plen = g.usize_range(1, 8);
+                                let prompt: Vec<u32> =
+                                    (0..plen).map(|_| g.rng.below(50) as u32).collect();
+                                let lb = bb
+                                    .prefill_slot(&mut state_b, slot, &prompt)
+                                    .map_err(|e| e.to_string())?;
+                                let ls = bs
+                                    .prefill_slot(&mut state_s, slot, &prompt)
+                                    .map_err(|e| e.to_string())?;
+                                if lb != ls {
+                                    return Err(format!("prefill diverged at slot {slot}"));
+                                }
+                                last[slot] = Some(fbquant::tensor::ops::argmax(&lb) as u32);
+                            }
+                        }
+                        2 => {
+                            // release a random occupied slot
+                            let occ: Vec<usize> =
+                                (0..cap).filter(|&s| last[s].is_some()).collect();
+                            if !occ.is_empty() {
+                                let s = occ[g.rng.below(occ.len())];
+                                bb.release_slot(&mut state_b, s).map_err(|e| e.to_string())?;
+                                bs.release_slot(&mut state_s, s).map_err(|e| e.to_string())?;
+                                last[s] = None;
+                            }
+                        }
+                        _ => {
+                            // one batched step over every occupied slot
+                            let toks: Vec<SlotToken> = (0..cap)
+                                .filter_map(|s| {
+                                    last[s].map(|t| SlotToken { slot: s, token: t })
+                                })
+                                .collect();
+                            if toks.is_empty() {
+                                continue;
+                            }
+                            let lb =
+                                bb.decode(&mut state_b, &toks).map_err(|e| e.to_string())?;
+                            let ls =
+                                bs.decode(&mut state_s, &toks).map_err(|e| e.to_string())?;
+                            if lb != ls {
+                                return Err(format!(
+                                    "decode diverged over {} slots (paged={paged})",
+                                    toks.len()
+                                ));
+                            }
+                            for (st, l) in toks.iter().zip(&lb) {
+                                last[st.slot] = Some(fbquant::tensor::ops::argmax(l) as u32);
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+    }
+}
+
+#[test]
+fn batched_weight_traffic_is_slot_count_independent() {
+    // sizes chosen so weight bytes dominate activation bytes
+    let store = synth_store("traffic", 128, 2, 4, 256, 96, 64, 32, 8, false);
+    let run = |m: usize, sequential: bool| -> (u64, u64) {
+        let mut b = mk_backend(&store, true, sequential);
+        let mut state = b.open_batch(8).unwrap();
+        let mut last = vec![0u32; m];
+        for slot in 0..m {
+            let prompt: Vec<u32> = (0..6).map(|i| ((slot * 13 + i * 5) % 96) as u32).collect();
+            let lg = b.prefill_slot(&mut state, slot, &prompt).unwrap();
+            last[slot] = fbquant::tensor::ops::argmax(&lg) as u32;
+        }
+        b.reset_traffic();
+        let toks: Vec<SlotToken> =
+            (0..m).map(|s| SlotToken { slot: s, token: last[s] }).collect();
+        b.decode(&mut state, &toks).unwrap();
+        let t = b.traffic();
+        (t.weight_bytes, t.bytes_read)
+    };
+    let (w1, _) = run(1, false);
+    let (w3, _) = run(3, false);
+    let (w8, r8) = run(8, false);
+    assert_eq!(w1, w3, "weight+metadata bytes per batched step must not scale with slots");
+    assert_eq!(w1, w8, "weight+metadata bytes per batched step must not scale with slots");
+
+    let (ws8, rs8) = run(8, true);
+    assert_eq!(ws8, 8 * w8, "sequential decode re-streams the weights per slot");
+    assert!(
+        rs8 as f64 >= 4.0 * r8 as f64,
+        "batched decode must cut per-step read traffic >=4x at m=8 \
+         (sequential {rs8} vs batched {r8})"
+    );
+}
