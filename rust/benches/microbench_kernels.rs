@@ -6,6 +6,11 @@
 //!   `gemv_multi` vs the per-slot loop, emitted to `BENCH_decode.json`
 //!   (tokens/s + weight bytes/token) as the perf trajectory file CI
 //!   smokes on every push,
+//! * the speculative sweep (K × draft-mode) on a synthesized
+//!   checkpoint: acceptance rate, tokens/s and weight bytes per
+//!   committed token vs the K=0 baseline, with a blocking assertion
+//!   that the verifier's weight traffic is charged once per step
+//!   regardless of K,
 //! * the PJRT `kernel_fused`/`kernel_unfused` artifacts (the Pallas
 //!   pair lowered by aot.py) — dispatch-count effect at the XLA level.
 
@@ -13,10 +18,16 @@ mod common;
 
 use common::*;
 use fbquant::bench::Bench;
+use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
 use fbquant::engine::kernels::{QuantLinear, SubMode, Traffic, Workspace};
+use fbquant::engine::NativeEngine;
 use fbquant::quant::groupwise;
 use fbquant::quant::pack::pack_codes;
+use fbquant::spec::{DraftMode, SpeculativeConfig};
+use fbquant::testing::{synth_checkpoint, SynthSpec};
+use fbquant::util::json::Json;
 use fbquant::util::Pcg64;
+use std::time::Instant;
 
 fn layer(d: usize, r: usize, bits: u8) -> (QuantLinear, Vec<f32>) {
     let mut rng = Pcg64::seeded(6);
@@ -46,9 +57,7 @@ fn layer(d: usize, r: usize, bits: u8) -> (QuantLinear, Vec<f32>) {
 /// per-slot `gemv` loop over slots × bits × rank, on one square decode
 /// layer as the per-layer proxy. Emits `BENCH_decode.json` so the perf
 /// trajectory (tokens/s, weight bytes/token) is tracked from CI.
-fn batched_decode_sweep(bench: &Bench) -> anyhow::Result<()> {
-    use fbquant::util::json::Json;
-
+fn batched_decode_sweep(bench: &Bench, spec_rows: Vec<Json>) -> anyhow::Result<()> {
     let d: usize = if fast() { 256 } else { 512 };
     let bits_list: &[u8] = if fast() { &[4] } else { &[3, 4] };
     let rank_list: &[usize] = &[0, 16];
@@ -140,14 +149,177 @@ fn batched_decode_sweep(bench: &Bench) -> anyhow::Result<()> {
             }
         }
     }
+    let n_rows = rows.len();
+    let n_spec = spec_rows.len();
     let doc = Json::obj(vec![
         ("bench", Json::from("batched_decode_sweep")),
         ("unit", Json::from("per-layer decode proxy (one square quantized linear)")),
         ("rows", Json::Arr(rows)),
+        ("speculative", Json::Arr(spec_rows)),
     ]);
     std::fs::write("BENCH_decode.json", doc.to_string_pretty())?;
-    println!("\nwrote BENCH_decode.json ({} rows)", slot_list.len() * bits_list.len() * rank_list.len() * 2);
+    println!("\nwrote BENCH_decode.json ({n_rows} kernel rows + {n_spec} speculative rows)");
     Ok(())
+}
+
+/// End-to-end speculative sweep on a synthesized checkpoint: for each
+/// draft mode and K, run a 4-slot greedy decode through the backend and
+/// record acceptance rate, committed tokens/step, tokens/s and weight
+/// bytes per committed token (target + draft) against the K=0 baseline.
+/// Asserts — blocking in the CI smoke run — that the **verifier's**
+/// weight traffic per step is identical across K: all K+1 positions ride
+/// one weight-stationary pass.
+fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
+    // sub_scale 0.0: the target pays the full sub-branch weight stream
+    // (A/B are read) while contributing exactly nothing, so the bare
+    // branch drafts the target's own chain — acceptance on the no-sub
+    // rows is total by construction and the traffic effect is isolated
+    // deterministically; the shadow rows show realistic partial
+    // acceptance (2-bit grid vs 4-bit chain)
+    let geom = SynthSpec {
+        d: if bench_fast { 128 } else { 256 },
+        d_ff: if bench_fast { 256 } else { 512 },
+        vocab: 96,
+        group: 32,
+        rank: 8,
+        sub_scale: 0.0,
+        max_seq: 256,
+        ..SynthSpec::default()
+    };
+    let store = synth_checkpoint("bench_spec", geom);
+    let decode_steps = if bench_fast { 12 } else { 24 };
+    let m = 4usize;
+    let plen = 16usize;
+
+    println!(
+        "\n=== speculative decode sweep: draft bare/shadow branch, batched multi-position verify \
+         (d={}, {m} slots) ===",
+        geom.d
+    );
+    println!(
+        "{:<10} {:<3} {:>8} {:>9} {:>12} {:>13} {:>15}",
+        "draft", "K", "accept", "tok/step", "tokens/s", "W B/token", "verify W/step"
+    );
+    println!("{}", "-".repeat(78));
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut target_weight_totals: Vec<(String, u64)> = Vec::new();
+    let mut base_wbpt = 0f64;
+    for (dname, draft) in [
+        ("baseline", None),
+        ("no-sub", Some(DraftMode::NoSub)),
+        ("shadow2", Some(DraftMode::Shadow { bits: 2 })),
+    ] {
+        let k_list: &[usize] = if draft.is_none() { &[0] } else { &[1, 2, 4] };
+        for &k in k_list {
+            let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+            let mut backend = NativeBackend::new(engine, "spec").with_max_slots(m);
+            if let Some(dm) = draft {
+                backend = backend.with_speculative(SpeculativeConfig { k, draft: dm });
+            }
+            let mut state = backend.open_batch(m)?;
+            let mut cur = vec![0u32; m];
+            for slot in 0..m {
+                let prompt: Vec<u32> =
+                    (0..plen).map(|i| ((slot * 13 + i * 5) % 96) as u32).collect();
+                let lg = backend.prefill_slot(&mut state, slot, &prompt)?;
+                cur[slot] = fbquant::tensor::ops::argmax(&lg) as u32;
+            }
+            backend.reset_traffic();
+            let mut committed = 0usize;
+            let mut proposed = 0usize;
+            let mut accepted = 0usize;
+            let t0 = Instant::now();
+            for _ in 0..decode_steps {
+                let toks: Vec<SlotToken> =
+                    (0..m).map(|s| SlotToken { slot: s, token: cur[s] }).collect();
+                if draft.is_some() {
+                    let steps = backend.decode_speculative(&mut state, &toks)?;
+                    for (slot, sp) in steps.iter().enumerate() {
+                        committed += sp.accepted.len() + 1;
+                        proposed += sp.proposed;
+                        accepted += sp.accepted.len();
+                        cur[slot] = sp.next;
+                    }
+                } else {
+                    let lg = backend.decode(&mut state, &toks)?;
+                    for (slot, l) in lg.iter().enumerate() {
+                        committed += 1;
+                        cur[slot] = fbquant::tensor::ops::argmax(l) as u32;
+                    }
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let target_w = backend.traffic().weight_bytes;
+            let draft_w = backend.draft_traffic().map_or(0, |t| t.weight_bytes);
+            let wbpt = (target_w + draft_w) as f64 / committed as f64;
+            let accept_rate =
+                if proposed > 0 { accepted as f64 / proposed as f64 } else { 0.0 };
+            let tok_per_step = committed as f64 / decode_steps as f64;
+            let tps = committed as f64 / wall;
+            let verify_w_step = target_w as f64 / decode_steps as f64;
+            if draft.is_none() {
+                base_wbpt = wbpt;
+            }
+            println!(
+                "{:<10} {:<3} {:>8.2} {:>9.2} {:>12.0} {:>13.0} {:>15.0}",
+                dname, k, accept_rate, tok_per_step, tps, wbpt, verify_w_step
+            );
+            rows.push(Json::obj(vec![
+                ("draft", Json::from(dname)),
+                ("k", Json::from(k)),
+                ("slots", Json::from(m)),
+                ("decode_steps", Json::from(decode_steps)),
+                ("acceptance_rate", Json::from(accept_rate)),
+                ("tokens_per_step", Json::from(tok_per_step)),
+                ("tokens_per_s", Json::from(tps)),
+                ("weight_bytes_per_token", Json::from(wbpt)),
+                ("verify_weight_bytes_per_step", Json::from(verify_w_step)),
+            ]));
+            target_weight_totals.push((format!("{dname}/K{k}"), target_w));
+            // acceptance criterion: the no-sub rows accept everything on
+            // this fixture (the bare branch drafts the target's own
+            // chain), so mean acceptance is K ≥ 1 token/step and the
+            // amortized weight stream must strictly beat the K=0
+            // baseline — the draft skips the A/B read the target pays
+            if matches!(draft, Some(DraftMode::NoSub)) {
+                assert_eq!(
+                    accepted, proposed,
+                    "{dname}/K{k}: bare-branch drafts of a zero-sub model must all verify"
+                );
+                assert!(
+                    wbpt < base_wbpt,
+                    "{dname}/K{k}: weight bytes/token {wbpt:.0} not below the K=0 \
+                     baseline {base_wbpt:.0} at acceptance {accept_rate:.2}"
+                );
+            } else if draft.is_some()
+                && accepted as f64 / decode_steps as f64 >= 1.0
+                && wbpt >= base_wbpt
+            {
+                eprintln!(
+                    "warning: {dname}/K{k} at acceptance {accept_rate:.2} did not beat the \
+                     baseline weight stream ({wbpt:.0} vs {base_wbpt:.0} B/token)"
+                );
+            }
+        }
+    }
+    // the verifier streams its weights once per step no matter how many
+    // draft positions ride along: every config ran the same step count,
+    // so the target-side totals must be exactly equal
+    let name0 = target_weight_totals[0].0.clone();
+    let w0 = target_weight_totals[0].1;
+    for (name, w) in &target_weight_totals {
+        assert_eq!(
+            *w, w0,
+            "verifier weight traffic depends on K: {name} streamed {w} vs {name0} {w0}"
+        );
+    }
+    println!(
+        "\nverifier weight traffic: {} bytes/step for every config (charged once per step, \
+         independent of K); draft stream is the only extra weight cost.",
+        fbquant::util::human_bytes((w0 as usize) / decode_steps)
+    );
+    Ok(rows)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -201,7 +373,8 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    batched_decode_sweep(&bench)?;
+    let spec_rows = speculative_sweep(fast())?;
+    batched_decode_sweep(&bench, spec_rows)?;
 
     // PJRT kernel artifacts
     if have_artifacts() {

@@ -26,6 +26,10 @@
 //!   configurable [`NativeBackend::with_max_slots`] — decoupled from any
 //!   compiled lane count. [`NativeBackend::with_dense`] restores the
 //!   one-dense-`KvCache`-per-slot baseline.
+//!   [`NativeBackend::with_speculative`] adds **self-speculative
+//!   decoding**: greedy slots draft K tokens on the degraded branch and
+//!   verify them all in one multi-position pass
+//!   ([`Backend::decode_speculative`], see [`crate::spec`]).
 //! * [`PjrtBackend`] in **per-lane** mode (`with_per_lane(true)`) — each
 //!   slot is an independent batch-1 surface with its own position
 //!   counter, so admission is continuous too (per-slot position
@@ -50,6 +54,9 @@ use crate::engine::{KvCache, NativeEngine, SubMode};
 use crate::model::{Config, WeightStore};
 use crate::runtime::exec::{build_weight_feed, Value};
 use crate::runtime::{ExecRegistry, LoadedExec, Manifest};
+use crate::spec::{
+    draft_tokens, greedy_accept, DraftKv, DraftMode, SpecDecoder, SpecStep, SpeculativeConfig,
+};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
@@ -143,6 +150,37 @@ pub trait Backend {
     /// [`Backend::prepare_decode`]d this step.
     fn decode(&mut self, state: &mut BatchState, tokens: &[SlotToken]) -> Result<Vec<Vec<f32>>>;
 
+    /// Speculative-decoding configuration when this backend drafts and
+    /// verifies its own tokens (None = plain decode only).
+    fn speculative(&self) -> Option<SpeculativeConfig> {
+        None
+    }
+
+    /// One **speculative** step over the listed occupied slots: each
+    /// slot drafts up to K tokens on its degraded branch, verifies all
+    /// of them (plus the input token) in one multi-position batched
+    /// pass, and commits `1..=K+1` tokens ([`SpecStep`]). Acceptance is
+    /// greedy, so the committed stream is token-identical to
+    /// non-speculative greedy decode. Only meaningful when
+    /// [`Backend::speculative`] returns a config; a slot must be driven
+    /// by either this or [`Backend::decode`] for its whole lifetime,
+    /// never both (the draft KV mirrors the target step for step).
+    fn decode_speculative(
+        &mut self,
+        _state: &mut BatchState,
+        _tokens: &[SlotToken],
+    ) -> Result<Vec<SpecStep>> {
+        bail!("backend {} does not support speculative decoding", self.name())
+    }
+
+    /// Cumulative persistent-weight read bytes (target plus draft), when
+    /// the backend meters traffic. The serving loop snapshots this into
+    /// [`super::metrics::ServeMetrics`] so weight bytes per generated
+    /// token are reportable per run.
+    fn weight_bytes(&self) -> Option<u64> {
+        None
+    }
+
     /// Free `slot` so a queued request can be admitted into it.
     fn release_slot(&mut self, state: &mut BatchState, slot: usize) -> Result<()>;
 
@@ -219,6 +257,8 @@ pub struct NativeBackend {
     /// step (re-streaming the weights per slot) instead of the
     /// weight-stationary batched step.
     sequential_decode: bool,
+    /// Self-speculative decoding state (None = plain decode).
+    spec: Option<SpecDecoder>,
 }
 
 impl NativeBackend {
@@ -232,6 +272,7 @@ impl NativeBackend {
             page_size: DEFAULT_PAGE_SIZE,
             pool_pages: 0,
             sequential_decode: false,
+            spec: None,
         }
     }
 
@@ -281,6 +322,26 @@ impl NativeBackend {
         self
     }
 
+    /// Enable self-speculative decoding: draft up to `cfg.k` tokens per
+    /// slot per step on the degraded branch ([`DraftMode::NoSub`]: the
+    /// target's own weights with the sub-branch skipped;
+    /// [`DraftMode::Shadow`]: a lower-bit shadow re-pack), then verify
+    /// every draft in ONE multi-position weight-stationary pass. Greedy
+    /// output is token-identical to plain decode. Speculating slots gain
+    /// a rollback-able draft KV mirror under the same paging discipline
+    /// as the target; mirrors fill lazily on a slot's first speculative
+    /// step, so slots that only ever plain-decode pay no draft compute —
+    /// and on the (default) paged store, no draft pages either (dense
+    /// mirrors preallocate capacity up front like every dense cache);
+    /// `open_batch` resets the mirrors, so a speculative
+    /// backend drives one live batch at a time, and a slot must be
+    /// stepped via [`Backend::decode_speculative`] for its whole
+    /// lifetime.
+    pub fn with_speculative(mut self, cfg: SpeculativeConfig) -> NativeBackend {
+        self.spec = Some(SpecDecoder::new(cfg, &self.engine));
+        self
+    }
+
     pub fn engine(&self) -> &NativeEngine {
         &self.engine
     }
@@ -289,8 +350,33 @@ impl NativeBackend {
         &self.ws.traffic
     }
 
+    /// Draft-side traffic, metered apart from the target counters in
+    /// [`NativeBackend::traffic`] (None when speculation is off). The
+    /// verifier's `weight_bytes` land in the target counters — charged
+    /// once per step regardless of K — while every draft step charges
+    /// the (cheaper) draft stream here.
+    pub fn draft_traffic(&self) -> Option<&crate::engine::Traffic> {
+        self.spec.as_ref().map(|s| &s.ws.traffic)
+    }
+
     pub fn reset_traffic(&mut self) {
         self.ws.traffic.reset();
+        if let Some(spec) = self.spec.as_mut() {
+            spec.ws.traffic.reset();
+        }
+    }
+
+    /// Draft-pool counters when speculation runs on the paged store
+    /// (None otherwise). The draft pool is sized like the target's — an
+    /// explicit [`NativeBackend::with_kv_pool`] budget applies to EACH
+    /// pool, so a speculative backend's total KV memory is up to 2× the
+    /// configured budget; [`Backend::kv_stats`] reports the target pool
+    /// only.
+    pub fn draft_kv_stats(&self) -> Option<KvPoolStats> {
+        match self.spec.as_ref().map(|s| &s.kv) {
+            Some(DraftKv::Paged { pool, .. }) => Some(pool.stats()),
+            _ => None,
+        }
     }
 
     /// The per-slot decode loop ([`NativeBackend::with_sequential_decode`]):
@@ -354,6 +440,23 @@ impl NativeBackend {
             _ => bail!("native backend got a foreign batch state"),
         }
     }
+
+    /// Register an admission with the speculative state: an empty draft
+    /// mirror plus the prompt queued in the slot's lazy catch-up list
+    /// (the draft engine attends over its own representations, so the
+    /// prompt is mirrored by the slot's FIRST draft pass — and never, if
+    /// the slot never speculates).
+    fn draft_admit(&mut self, slot: usize, prompt: &[u32]) -> Result<()> {
+        let spec = self.spec.as_mut().expect("draft_admit without speculative config");
+        spec.kv.occupy(&self.engine.cfg, slot)?;
+        let p = spec
+            .pending
+            .get_mut(slot)
+            .with_context(|| format!("draft admit: slot {slot} out of range"))?;
+        p.clear();
+        p.extend_from_slice(prompt);
+        Ok(())
+    }
 }
 
 impl Backend for NativeBackend {
@@ -374,12 +477,32 @@ impl Backend for NativeBackend {
         if capacity == 0 {
             bail!("zero-capacity batch");
         }
-        if !self.paged {
-            return Ok(BatchState::Native { slots: (0..capacity).map(|_| None).collect() });
-        }
         let cfg = &self.engine.cfg;
         let pages_per_seq = (cfg.max_seq + self.page_size - 1) / self.page_size;
         let n_pages = if self.pool_pages > 0 { self.pool_pages } else { capacity * pages_per_seq };
+        // the draft KV mirrors the target's paging discipline; opening a
+        // batch resets the mirrors (one live batch per speculative
+        // backend). The draft pool runs without a prefix cache — its
+        // pages are per-step scratch, never shared.
+        if let Some(spec) = self.spec.as_mut() {
+            if self.paged {
+                let mut pc = KvPoolConfig::new(
+                    cfg.n_layers,
+                    cfg.n_heads,
+                    cfg.head_dim(),
+                    self.page_size,
+                    n_pages,
+                );
+                pc.max_cached_prefixes = 0;
+                spec.kv.open_paged(pc, capacity);
+            } else {
+                spec.kv.open_dense(capacity);
+            }
+            spec.pending = (0..capacity).map(|_| Vec::new()).collect();
+        }
+        if !self.paged {
+            return Ok(BatchState::Native { slots: (0..capacity).map(|_| None).collect() });
+        }
         let pool = KvPagePool::new(KvPoolConfig::new(
             cfg.n_layers,
             cfg.n_heads,
@@ -390,53 +513,132 @@ impl Backend for NativeBackend {
         Ok(BatchState::NativePaged { pool, slots: (0..capacity).map(|_| None).collect() })
     }
 
+    /// Admit one prompt — a group of one through the same
+    /// weight-stationary multi-position pass as [`Backend::prefill_slots`],
+    /// so even a lone continuous-mode admission streams the quantized
+    /// weights once per transformer layer instead of once per prompt
+    /// position.
     fn prefill_slot(&mut self, state: &mut BatchState, slot: usize, prompt: &[u32])
         -> Result<Vec<f32>> {
-        if prompt.is_empty() {
-            bail!("empty prompt");
+        let mut out = self.prefill_slots(state, &[(slot, prompt)])?;
+        Ok(out.remove(0))
+    }
+
+    /// **Batched prefill**: the whole admission group flows through ONE
+    /// multi-position weight-stationary pass
+    /// ([`NativeEngine::step_batch_multi`]), so quantized weights stream
+    /// once per transformer layer for the group instead of once per
+    /// prompt position — per position-row the float operations (and so
+    /// the logits) are bit-identical to sequential per-position prefill.
+    /// Prompts need not be length-aligned — the native engine has no
+    /// lock-step restriction.
+    fn prefill_slots(
+        &mut self,
+        state: &mut BatchState,
+        admissions: &[(usize, &[u32])],
+    ) -> Result<Vec<Vec<f32>>> {
+        if admissions.is_empty() {
+            return Ok(Vec::new());
         }
-        match state {
+        for (idx, &(slot, prompt)) in admissions.iter().enumerate() {
+            if prompt.is_empty() {
+                bail!("empty prompt");
+            }
+            if admissions[..idx].iter().any(|&(s, _)| s == slot) {
+                bail!("slot {slot} admitted twice");
+            }
+        }
+        let logits: Vec<Vec<f32>> = match state {
             BatchState::Native { slots } => {
-                if slot >= slots.len() {
-                    bail!("slot {slot} out of range ({} slots)", slots.len());
-                }
-                if slots[slot].is_some() {
-                    bail!("slot {slot} is already occupied");
+                for &(slot, _) in admissions {
+                    if slot >= slots.len() {
+                        bail!("slot {slot} out of range ({} slots)", slots.len());
+                    }
+                    if slots[slot].is_some() {
+                        bail!("slot {slot} is already occupied");
+                    }
                 }
                 let cfg = &self.engine.cfg;
-                let mut kv = KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim());
-                let logits = self.engine.prefill(prompt, &mut kv, &mut self.ws);
-                slots[slot] = Some(kv);
-                Ok(logits)
+                let mut caches: Vec<KvCache> = admissions
+                    .iter()
+                    .map(|_| KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim()))
+                    .collect();
+                let groups: Vec<&[u32]> = admissions.iter().map(|&(_, p)| p).collect();
+                let flat = {
+                    let batch: Vec<&mut dyn KvSlot> =
+                        caches.iter_mut().map(|c| c as &mut dyn KvSlot).collect();
+                    let mut sb = SlotBatch { slots: batch };
+                    self.engine.step_batch_multi(&groups, &mut sb, &mut self.ws, false)
+                };
+                for (&(slot, _), kv) in admissions.iter().zip(caches) {
+                    slots[slot] = Some(kv);
+                }
+                flat.into_iter().map(|mut per| per.pop().expect("one logits row")).collect()
             }
             BatchState::NativePaged { pool, slots } => {
-                if slot >= slots.len() {
-                    bail!("slot {slot} out of range ({} slots)", slots.len());
+                for &(slot, _) in admissions {
+                    if slot >= slots.len() {
+                        bail!("slot {slot} out of range ({} slots)", slots.len());
+                    }
+                    if slots[slot].is_some() {
+                        bail!("slot {slot} is already occupied");
+                    }
                 }
-                if slots[slot].is_some() {
-                    bail!("slot {slot} is already occupied");
+                // map prefixes + make every prompt writable BEFORE the
+                // engine runs: exhaustion sheds the whole group here with
+                // no engine state touched
+                let mut kvs: Vec<PagedKv> = Vec::with_capacity(admissions.len());
+                let mut reused: Vec<usize> = Vec::with_capacity(admissions.len());
+                for &(_, prompt) in admissions {
+                    let mut kv = pool.new_kv(self.engine.cfg.max_seq);
+                    let r = pool.adopt_prefix(&mut kv, prompt);
+                    if let Err(e) = pool.ensure_range(&mut kv, r, prompt.len()) {
+                        pool.release_kv(&mut kv);
+                        for mut k in kvs {
+                            pool.release_kv(&mut k);
+                        }
+                        return Err(e).with_context(|| {
+                            format!(
+                                "admitting a {}-token prompt in a group of {}",
+                                prompt.len(),
+                                admissions.len()
+                            )
+                        });
+                    }
+                    kvs.push(kv);
+                    reused.push(r);
                 }
-                let mut kv = pool.new_kv(self.engine.cfg.max_seq);
-                // map any cached page-aligned prefix, then make the rest
-                // of the prompt writable (copy-on-write included) before
-                // the engine runs — exhaustion sheds here, not mid-step
-                let reused = pool.adopt_prefix(&mut kv, prompt);
-                if let Err(e) = pool.ensure_range(&mut kv, reused, prompt.len()) {
-                    pool.release_kv(&mut kv);
-                    return Err(e)
-                        .with_context(|| format!("admitting a {}-token prompt", prompt.len()));
+                for &r in &reused {
+                    pool.record_reuse(r);
                 }
-                pool.record_reuse(reused);
-                let logits = {
-                    let mut bound = PagedKvRef { pool: &mut *pool, kv: &mut kv };
-                    self.engine.prefill(&prompt[reused..], &mut bound, &mut self.ws)
+                let groups: Vec<&[u32]> =
+                    admissions.iter().zip(&reused).map(|(&(_, p), &r)| &p[r..]).collect();
+                let flat = {
+                    let sel: Vec<&mut PagedKv> = kvs.iter_mut().collect();
+                    let mut sb = PagedSlotBatch { pool, slots: sel };
+                    self.engine.step_batch_multi(&groups, &mut sb, &mut self.ws, false)
                 };
-                pool.register_prefix(&kv, prompt);
-                slots[slot] = Some(kv);
-                Ok(logits)
+                for (&(slot, prompt), kv) in admissions.iter().zip(kvs) {
+                    pool.register_prefix(&kv, prompt);
+                    slots[slot] = Some(kv);
+                }
+                flat.into_iter().map(|mut per| per.pop().expect("one logits row")).collect()
             }
             _ => bail!("native backend got a foreign batch state"),
+        };
+        if self.spec.is_some() {
+            for &(slot, prompt) in admissions {
+                if let Err(e) = self.draft_admit(slot, prompt) {
+                    // aligned-group admission fails as a unit: unwind the
+                    // slots already placed so target and draft agree
+                    for &(s, _) in admissions {
+                        let _ = self.release_slot(state, s);
+                    }
+                    return Err(e).context("draft admission");
+                }
+            }
         }
+        Ok(logits)
     }
 
     fn decode(&mut self, state: &mut BatchState, tokens: &[SlotToken]) -> Result<Vec<Vec<f32>>> {
@@ -513,6 +715,189 @@ impl Backend for NativeBackend {
             .with_context(|| format!("slot {slot} cannot advance past position {pos}"))
     }
 
+    fn speculative(&self) -> Option<SpeculativeConfig> {
+        self.spec.as_ref().map(|s| s.cfg)
+    }
+
+    /// One self-speculative step over the listed slots: batched drafting
+    /// on the degraded branch, ONE multi-position verify pass over the
+    /// target ([`NativeEngine::step_batch_multi`] — verifier weights
+    /// stream once per step regardless of K), greedy acceptance, and KV
+    /// rollback of every rejected position on both caches. Near
+    /// `max_seq` the draft window clamps; under pool pressure a slot
+    /// degrades to a plain (k = 0) verify step instead of erroring.
+    fn decode_speculative(
+        &mut self,
+        state: &mut BatchState,
+        tokens: &[SlotToken],
+    ) -> Result<Vec<SpecStep>> {
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        let Some(spec_cfg) = self.spec.as_ref().map(|s| s.cfg) else {
+            bail!("speculative decoding is not configured on this backend");
+        };
+        for (idx, st) in tokens.iter().enumerate() {
+            if tokens[..idx].iter().any(|p| p.slot == st.slot) {
+                bail!("decode: slot {} listed twice", st.slot);
+            }
+        }
+        let max_seq = self.engine.cfg.max_seq;
+        let n = tokens.len();
+
+        // Phase 0: validate slots, clamp each draft window to the space
+        // left before max_seq, and reserve the verify rows' pages.
+        let mut lens: Vec<usize> = Vec::with_capacity(n);
+        let mut ks: Vec<usize> = Vec::with_capacity(n);
+        match state {
+            BatchState::Native { slots } => {
+                for st in tokens {
+                    let Some(kv) = slots.get(st.slot).and_then(|s| s.as_ref()) else {
+                        bail!("decode: slot {} is not occupied", st.slot);
+                    };
+                    if kv.remaining() == 0 {
+                        bail!("slot {}: kv cache full", st.slot);
+                    }
+                    lens.push(kv.len);
+                    ks.push(spec_cfg.k.min(max_seq - kv.len - 1));
+                }
+            }
+            BatchState::NativePaged { pool, slots } => {
+                for st in tokens {
+                    let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
+                        bail!("decode: slot {} is not occupied", st.slot);
+                    };
+                    if kv.remaining() == 0 {
+                        bail!("slot {}: kv view full", st.slot);
+                    }
+                    let len = kv.len();
+                    let mut k = spec_cfg.k.min(max_seq - len - 1);
+                    if k > 0 && pool.ensure_range(kv, len, len + 1 + k).is_err() {
+                        k = 0; // pool pressure: degrade to a plain step
+                    }
+                    pool.ensure_range(kv, len, len + 1)
+                        .with_context(|| format!("decoding slot {} at position {len}", st.slot))?;
+                    lens.push(len);
+                    ks.push(k);
+                }
+            }
+            _ => bail!("native backend got a foreign batch state"),
+        }
+
+        // Phase 0b: the draft mirror (plus its lazy catch-up queue) must
+        // sit exactly at the target's length — decode and
+        // decode_speculative cannot be mixed on one slot — and a
+        // drafting slot needs `pending + k_i` mirror positions (the
+        // queued catch-up tokens ride the first draft pass).
+        {
+            let spec = self.spec.as_mut().expect("config checked above");
+            for (i, st) in tokens.iter().enumerate() {
+                let Some(dlen) = spec.kv.len(st.slot) else {
+                    bail!("slot {}: no draft kv mirror (admitted without speculation?)", st.slot);
+                };
+                let lag = spec.pending.get(st.slot).map_or(0, |p| p.len());
+                if dlen + lag != lens[i] {
+                    bail!(
+                        "slot {}: draft kv at {dlen} (+{lag} pending) but target at {} \
+                         (mixed decode/decode_speculative on one slot?)",
+                        st.slot,
+                        lens[i]
+                    );
+                }
+                // degraded (k = 0) slots write nothing to the mirror —
+                // their committed tokens queue in `pending` instead
+                if ks[i] > 0 && spec.kv.ensure(st.slot, lag + ks[i]).is_err() {
+                    ks[i] = 0; // draft pool pressure: degrade, not error
+                }
+            }
+        }
+
+        // Phase 1: batched greedy drafting on the degraded branch. For
+        // NoSub the draft engine IS the target with its sub-branch
+        // switched off for the duration of the draft steps.
+        let drafts: Vec<Vec<u32>> = {
+            let saved = self.engine.mode;
+            if matches!(spec_cfg.draft, DraftMode::NoSub) {
+                self.engine.mode = SubMode::None;
+            }
+            let spec = self.spec.as_mut().expect("config checked above");
+            let SpecDecoder { shadow, ws, kv, pending, .. } = spec;
+            let draft_engine: &NativeEngine = match shadow {
+                Some(e) => e,
+                None => &self.engine,
+            };
+            let slot_ids: Vec<usize> = tokens.iter().map(|t| t.slot).collect();
+            let cur0: Vec<u32> = tokens.iter().map(|t| t.token).collect();
+            let out = draft_tokens(draft_engine, kv, ws, &slot_ids, pending, &cur0, &ks);
+            self.engine.mode = saved;
+            out
+        };
+
+        // Phase 2: verify — every slot's input token plus all its drafts
+        // in ONE multi-position weight-stationary pass over the target.
+        let groups_store: Vec<Vec<u32>> = tokens
+            .iter()
+            .zip(&drafts)
+            .map(|(st, d)| {
+                let mut g = Vec::with_capacity(1 + d.len());
+                g.push(st.token);
+                g.extend_from_slice(d);
+                g
+            })
+            .collect();
+        let groups: Vec<&[u32]> = groups_store.iter().map(|g| g.as_slice()).collect();
+        let slot_ids: Vec<usize> = tokens.iter().map(|t| t.slot).collect();
+        let verify: Vec<Vec<Vec<f32>>> = match state {
+            BatchState::Native { slots } => {
+                let mut sb = SlotBatch::select(slots, &slot_ids);
+                self.engine.step_batch_multi(&groups, &mut sb, &mut self.ws, true)
+            }
+            BatchState::NativePaged { pool, slots } => {
+                let mut sb = PagedSlotBatch::select(pool, slots, &slot_ids);
+                self.engine.step_batch_multi(&groups, &mut sb, &mut self.ws, true)
+            }
+            _ => unreachable!("state variant validated in phase 0"),
+        };
+
+        // Phase 3: greedy acceptance and rollback of rejected positions
+        // on both caches. On full acceptance the mirror never fed the
+        // last committed token — it queues in the lazy catch-up list and
+        // rides the NEXT step's first draft pass (no extra draft weight
+        // stream).
+        let mut out: Vec<SpecStep> = Vec::with_capacity(n);
+        for (i, st) in tokens.iter().enumerate() {
+            let (a, next) = greedy_accept(&drafts[i], &verify[i]);
+            let committed = lens[i] + 1 + a;
+            match state {
+                BatchState::Native { slots } => {
+                    slots[st.slot].as_mut().expect("validated above").truncate(committed);
+                }
+                BatchState::NativePaged { pool, slots } => {
+                    let kv = slots[st.slot].as_mut().expect("validated above");
+                    pool.truncate_kv(kv, committed);
+                }
+                _ => unreachable!("state variant validated in phase 0"),
+            }
+            let spec = self.spec.as_mut().expect("config checked above");
+            if a == ks[i] {
+                let last = if ks[i] == 0 { st.token } else { drafts[i][ks[i] - 1] };
+                spec.pending[st.slot].push(last);
+            } else {
+                // the drafting pass drained this slot's pending queue, so
+                // the mirror holds exactly the committed prefix after the
+                // truncate
+                spec.kv.truncate(st.slot, committed);
+            }
+            out.push(SpecStep { accepted: drafts[i][..a].to_vec(), next, proposed: ks[i] });
+        }
+        Ok(out)
+    }
+
+    fn weight_bytes(&self) -> Option<u64> {
+        let draft = self.spec.as_ref().map_or(0, |s| s.ws.traffic.weight_bytes);
+        Some(self.ws.traffic.weight_bytes + draft)
+    }
+
     fn release_slot(&mut self, state: &mut BatchState, slot: usize) -> Result<()> {
         match state {
             BatchState::Native { slots } => {
@@ -520,7 +905,6 @@ impl Backend for NativeBackend {
                     bail!("release: slot {slot} out of range ({} slots)", slots.len());
                 }
                 slots[slot] = None;
-                Ok(())
             }
             BatchState::NativePaged { pool, slots } => {
                 if slot >= slots.len() {
@@ -531,10 +915,16 @@ impl Backend for NativeBackend {
                     // stay resident; private pages return to the free list
                     pool.release_kv(&mut kv);
                 }
-                Ok(())
             }
             _ => bail!("native backend got a foreign batch state"),
         }
+        if let Some(spec) = self.spec.as_mut() {
+            spec.kv.release(slot);
+            if let Some(p) = spec.pending.get_mut(slot) {
+                p.clear();
+            }
+        }
+        Ok(())
     }
 
     fn kv_stats(&self, state: &BatchState) -> Option<KvPoolStats> {

@@ -46,6 +46,18 @@ pub struct ServeMetrics {
     pub peak_occupied: usize,
     /// decode steps by occupied-slot count (index = occupied slots)
     pub occupancy_hist: Vec<usize>,
+    /// speculative steps executed (slots × scheduling steps on the
+    /// speculative path)
+    pub spec_steps: usize,
+    /// draft tokens proposed across all speculative steps
+    pub spec_proposed: usize,
+    /// draft tokens accepted (each one a token committed without its
+    /// own verifier weight stream)
+    pub spec_accepted: usize,
+    /// decode-phase persistent-weight read bytes (target + draft),
+    /// accumulated per scheduling step when the backend meters traffic
+    /// (prefill traffic deliberately excluded); 0 otherwise
+    pub weight_bytes: u64,
     /// queue wait: request arrival → slot admission
     pub admission_wait: LatencyStats,
     pub ttft: LatencyStats,
@@ -72,6 +84,10 @@ impl Default for ServeMetrics {
             slot_occupancy_sum: 0.0,
             peak_occupied: 0,
             occupancy_hist: Vec::new(),
+            spec_steps: 0,
+            spec_proposed: 0,
+            spec_accepted: 0,
+            weight_bytes: 0,
             admission_wait: LatencyStats::new(),
             ttft: LatencyStats::new(),
             per_token: LatencyStats::new(),
@@ -143,6 +159,36 @@ impl ServeMetrics {
         }
     }
 
+    /// Fraction of proposed draft tokens the verifier accepted.
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_proposed as f64
+        }
+    }
+
+    /// Mean committed tokens per speculative step (1.0 = no speculation
+    /// win; up to K+1).
+    pub fn spec_tokens_per_step(&self) -> f64 {
+        if self.spec_steps == 0 {
+            0.0
+        } else {
+            (self.spec_steps + self.spec_accepted) as f64 / self.spec_steps as f64
+        }
+    }
+
+    /// Decode-phase persistent-weight bytes streamed per generated
+    /// (accepted + corrected) token — the number speculation exists to
+    /// lower. Prefill traffic is excluded by construction.
+    pub fn weight_bytes_per_token(&self) -> f64 {
+        if self.tokens_generated == 0 {
+            0.0
+        } else {
+            self.weight_bytes as f64 / self.tokens_generated as f64
+        }
+    }
+
     /// Decode throughput over the whole run (tokens/second).
     pub fn decode_tps(&self) -> f64 {
         let elapsed = self.started.elapsed().as_secs_f64();
@@ -171,6 +217,18 @@ impl ServeMetrics {
             self.batches_formed,
             self.mean_occupancy(),
         );
+        if self.spec_steps > 0 {
+            out.push_str(&format!(
+                "\n  speculative: steps {} proposed {} accepted {} (rate {:.2}, {:.2} tok/step) \
+                 weight {:.0} B/tok",
+                self.spec_steps,
+                self.spec_proposed,
+                self.spec_accepted,
+                self.spec_acceptance_rate(),
+                self.spec_tokens_per_step(),
+                self.weight_bytes_per_token(),
+            ));
+        }
         if let Some(p) = &self.kv_pool {
             out.push_str(&format!(
                 "\n  kv pool: pages {}/{} (peak {}) prefix hits {}/{} reused {} tok \
@@ -222,6 +280,20 @@ mod tests {
         assert_eq!(m.occupancy_hist[2], 1);
         assert_eq!(m.occupancy_hist[4], 2);
         assert_eq!(m.occupancy_histogram(), "2:1 4:2");
+    }
+
+    #[test]
+    fn speculative_counters() {
+        let mut m = ServeMetrics::new();
+        m.spec_steps = 4;
+        m.spec_proposed = 8;
+        m.spec_accepted = 6;
+        m.tokens_generated = 10;
+        m.weight_bytes = 1000;
+        assert!((m.spec_acceptance_rate() - 0.75).abs() < 1e-9);
+        assert!((m.spec_tokens_per_step() - 2.5).abs() < 1e-9);
+        assert!((m.weight_bytes_per_token() - 100.0).abs() < 1e-9);
+        assert!(m.report().contains("speculative: steps 4"));
     }
 
     #[test]

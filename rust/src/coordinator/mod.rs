@@ -18,7 +18,8 @@
 //! * [`backend`] — the slot-pool execution abstraction
 //!   (`open_batch` / `prefill_slot` / `decode` / `release_slot`) over
 //!   the native engine (default: paged KV pool with prompt-prefix
-//!   reuse, see [`crate::engine::kv`]) or the PJRT artifacts,
+//!   reuse, see [`crate::engine::kv`]; optional self-speculative
+//!   decoding, see [`crate::spec`]) or the PJRT artifacts,
 //! * [`server`] — the continuous scheduling loop: admit whenever a slot
 //!   frees, step the occupied slots, stream events,
 //! * [`metrics`] — TTFT / per-token latency / throughput, slot-occupancy

@@ -198,6 +198,24 @@ impl<'a> ServeLoop<'a> {
         }
     }
 
+    /// Release a completed slot and build its terminal `Done` event
+    /// (shared by the plain commit path and the speculative path).
+    fn finish_slot(&mut self, slot: usize) -> Result<GenEvent> {
+        let a = self.slots[slot].take().expect("finish of an empty slot");
+        self.backend.release_slot(&mut self.state, slot)?;
+        let total_us = a.req.arrived.elapsed().as_secs_f64() * 1e6;
+        self.metrics.e2e.record_us(total_us);
+        self.metrics.requests_done += 1;
+        Ok(GenEvent::Done(GenResponse {
+            id: a.req.id,
+            prompt_len: a.req.prompt.len(),
+            tokens: a.output,
+            ttft_us: a.ttft_us.unwrap_or(total_us),
+            total_us,
+            decode_s: a.prefill_done.elapsed().as_secs_f64(),
+        }))
+    }
+
     /// Bookkeeping shared by both admission paths.
     fn place(&mut self, slot: usize, req: GenRequest, logits: &[f32], wait_us: f64) -> Result<()> {
         self.metrics.tokens_prefilled += req.prompt.len();
@@ -297,12 +315,18 @@ impl<'a> ServeLoop<'a> {
 
     /// One scheduling step: commit the sampled token of every occupied
     /// slot (emitting `Token` events), finish + release completed slots
-    /// (emitting `Done`), then run one batched decode over the survivors.
-    /// Returns false when no slot was occupied (nothing to do).
+    /// (emitting `Done`), then run one batched decode over the
+    /// survivors. On a speculative backend, greedy slots route through
+    /// [`Backend::decode_speculative`] instead and may commit up to K
+    /// extra accepted tokens this same step (`1..=K+1` per slot);
+    /// non-greedy slots keep the plain sampled path. Returns false when
+    /// no slot was occupied (nothing to do).
     fn step(&mut self) -> Result<bool> {
         let step_t0 = Instant::now();
+        let spec_on = self.backend.speculative().is_some();
         let mut events: Vec<GenEvent> = Vec::new();
         let mut to_decode: Vec<SlotToken> = Vec::new();
+        let mut to_spec: Vec<SlotToken> = Vec::new();
         for i in 0..self.slots.len() {
             let done = {
                 let Some(a) = self.slots[i].as_mut() else { continue };
@@ -321,19 +345,7 @@ impl<'a> ServeLoop<'a> {
                 Some(a.current) == a.req.stop_token || a.output.len() >= a.req.max_new_tokens
             };
             if done {
-                let a = self.slots[i].take().expect("slot emptied mid-step");
-                self.backend.release_slot(&mut self.state, i)?;
-                let total_us = a.req.arrived.elapsed().as_secs_f64() * 1e6;
-                self.metrics.e2e.record_us(total_us);
-                self.metrics.requests_done += 1;
-                events.push(GenEvent::Done(GenResponse {
-                    id: a.req.id,
-                    prompt_len: a.req.prompt.len(),
-                    tokens: a.output,
-                    ttft_us: a.ttft_us.unwrap_or(total_us),
-                    total_us,
-                    decode_s: a.prefill_done.elapsed().as_secs_f64(),
-                }));
+                events.push(self.finish_slot(i)?);
             } else {
                 // reserve what the slot needs for its next step; a slot
                 // that cannot advance (e.g. KV pool exhausted mid-decode)
@@ -341,7 +353,14 @@ impl<'a> ServeLoop<'a> {
                 match self.backend.prepare_decode(&mut self.state, i) {
                     Ok(()) => {
                         let a = self.slots[i].as_ref().expect("slot emptied mid-step");
-                        to_decode.push(SlotToken { slot: i, token: a.current });
+                        let st = SlotToken { slot: i, token: a.current };
+                        // speculative acceptance is greedy (argmax vs
+                        // argmax): sampled requests take the plain path
+                        if spec_on && a.req.params.temperature <= 0.0 {
+                            to_spec.push(st);
+                        } else {
+                            to_decode.push(st);
+                        }
                     }
                     Err(e) => {
                         let a = self.slots[i].take().expect("slot emptied mid-step");
@@ -356,16 +375,67 @@ impl<'a> ServeLoop<'a> {
         for ev in events {
             self.emit(ev);
         }
-        if to_decode.is_empty() {
+        if to_decode.is_empty() && to_spec.is_empty() {
             return Ok(progressed);
         }
         // denominator: the configured pool in continuous mode; an aligned
         // group can be wider than `cfg.slots`, so never report above 1.0
-        self.metrics.record_step(to_decode.len(), self.pool_capacity.max(self.slots.len()));
-        let logits = self.backend.decode(&mut self.state, &to_decode)?;
-        for (st, lg) in to_decode.iter().zip(&logits) {
-            let a = self.slots[st.slot].as_mut().expect("decoded slot vanished");
-            a.current = self.sampler.sample(lg, &a.req.params);
+        self.metrics.record_step(
+            to_decode.len() + to_spec.len(),
+            self.pool_capacity.max(self.slots.len()),
+        );
+        // meter decode-phase weight traffic only (prefill would swamp
+        // the per-generated-token number this metric exists to expose)
+        let weight_before = self.backend.weight_bytes().unwrap_or(0);
+        if !to_decode.is_empty() {
+            let logits = self.backend.decode(&mut self.state, &to_decode)?;
+            for (st, lg) in to_decode.iter().zip(&logits) {
+                let a = self.slots[st.slot].as_mut().expect("decoded slot vanished");
+                a.current = self.sampler.sample(lg, &a.req.params);
+            }
+        }
+        if !to_spec.is_empty() {
+            let steps = self.backend.decode_speculative(&mut self.state, &to_spec)?;
+            let mut spec_events: Vec<GenEvent> = Vec::new();
+            for (st, sp) in to_spec.iter().zip(steps) {
+                self.metrics.spec_steps += 1;
+                self.metrics.spec_proposed += sp.proposed;
+                self.metrics.spec_accepted += sp.accepted.len();
+                let mut finished = false;
+                {
+                    let a = self.slots[st.slot].as_mut().expect("decoded slot vanished");
+                    // commit every accepted draft token now (the slot
+                    // emits 1..=K+1 tokens this scheduling step); the
+                    // correction/bonus token becomes the next feed
+                    for &tok in &sp.accepted {
+                        a.output.push(tok);
+                        self.metrics.tokens_generated += 1;
+                        spec_events.push(GenEvent::Token {
+                            id: a.req.id,
+                            index: a.output.len() - 1,
+                            token: tok,
+                        });
+                        if Some(tok) == a.req.stop_token
+                            || a.output.len() >= a.req.max_new_tokens
+                        {
+                            finished = true;
+                            break;
+                        }
+                    }
+                    if !finished {
+                        a.current = sp.next;
+                    }
+                }
+                if finished {
+                    spec_events.push(self.finish_slot(st.slot)?);
+                }
+            }
+            for ev in spec_events {
+                self.emit(ev);
+            }
+        }
+        if let Some(w) = self.backend.weight_bytes() {
+            self.metrics.weight_bytes += w.saturating_sub(weight_before);
         }
         self.metrics.per_token.record(step_t0.elapsed());
         self.snapshot_kv();

@@ -20,7 +20,8 @@
 //! so wall-clock differences measured by the Fig-4/7 benches are genuine
 //! memory effects, not simulated sleeps.
 
-use crate::quant::pack::word_codes;
+use crate::quant::groupwise::{self, QuantParams};
+use crate::quant::pack::{pack_codes, unpack_codes, word_codes};
 
 /// Byte-traffic and dispatch accounting (one per engine/bench run).
 #[derive(Debug, Clone, Default)]
@@ -196,6 +197,38 @@ impl QuantLinear {
 
     fn meta_bytes(&self) -> u64 {
         4 * (self.scales.len() + self.zeros.len()) as u64
+    }
+
+    /// Shadow re-pack for self-speculative drafting: the main branch is
+    /// de-quantized and RTN-requantized at `bits`
+    /// ([`groupwise::requantize`]), the sub-branch is dropped (the draft
+    /// is the bare branch by construction) and `col_scale`/`bias` are
+    /// kept — they act on activations/outputs, not on the codes. The
+    /// result streams `bits/8` logical bytes per weight where the target
+    /// streams `self.bits/8` plus A/B.
+    pub fn shadow(&self, bits: u8) -> QuantLinear {
+        let codes = unpack_codes(&self.packed, self.out, self.cin);
+        let p = QuantParams {
+            bits: self.bits,
+            group: self.group,
+            scales: self.scales.clone(),
+            zeros: self.zeros.clone(),
+        };
+        let (codes2, p2) = groupwise::requantize(&codes, self.out, self.cin, &p, bits);
+        QuantLinear {
+            out: self.out,
+            cin: self.cin,
+            bits,
+            group: self.group,
+            packed: pack_codes(&codes2, self.out, self.cin),
+            scales: p2.scales,
+            zeros: p2.zeros,
+            rank: 0,
+            a: None,
+            b: None,
+            col_scale: self.col_scale.clone(),
+            bias: self.bias.clone(),
+        }
     }
 
     /// y = quantized-GEMV(x), dispatching on `mode`. `x: [cin]`,

@@ -37,7 +37,12 @@ use std::collections::{HashMap, VecDeque};
 /// The engine-facing KV interface: one generation slot's readable and
 /// appendable key/value history. Implemented by the dense [`KvCache`]
 /// and by [`PagedKvRef`] (a [`PagedKv`] view bound to its pool).
-pub trait KvSlot {
+///
+/// `Sync` is a supertrait so batched views over slots can be shared
+/// read-only across the attention-gather worker threads (see
+/// [`KvSlotBatch`]); every implementor is plain owned data or exclusive
+/// borrows of it.
+pub trait KvSlot: Sync {
     /// Committed sequence length (next write position).
     fn len(&self) -> usize;
 
@@ -57,6 +62,13 @@ pub trait KvSlot {
     fn write(&mut self, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]);
 
     fn advance(&mut self, n: usize);
+
+    /// Roll the committed length back to `len` (`len <= self.len()`),
+    /// discarding everything past it — the rollback primitive
+    /// speculative decoding uses to drop rejected draft positions. On
+    /// the paged store, pages past the new length are released (shared
+    /// pages just drop one reference).
+    fn truncate(&mut self, len: usize);
 
     /// K vector of (layer, position, head).
     fn k_at(&self, l: usize, pos: usize, h: usize) -> &[f32];
@@ -150,6 +162,14 @@ impl KvCache {
         debug_assert!(self.len <= self.max_seq);
     }
 
+    /// Roll back to `len` positions; stale data past the new length is
+    /// never read (gathers are bounded by `len`) and is overwritten by
+    /// the next append.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len, "truncate {len} past len {}", self.len);
+        self.len = len;
+    }
+
     /// K vector of (layer, position, head).
     #[inline]
     pub fn k_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
@@ -185,6 +205,10 @@ impl KvSlot for KvCache {
 
     fn advance(&mut self, n: usize) {
         KvCache::advance(self, n);
+    }
+
+    fn truncate(&mut self, len: usize) {
+        KvCache::truncate(self, len);
     }
 
     fn k_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
@@ -530,6 +554,25 @@ impl KvPagePool {
         kv.len = 0;
     }
 
+    /// Roll `kv` back to `len` positions, releasing every page past the
+    /// last one still needed (speculative rollback: rejected draft
+    /// positions — and any pages over-reserved for them — return to the
+    /// free list). A released page shared with the prefix cache or a
+    /// sibling slot only drops this view's reference. The retained
+    /// boundary page keeps any stale data past `len`; it is never read
+    /// (gathers are bounded by `len`) and the next write to a shared
+    /// boundary page still goes through [`KvPagePool::ensure_range`]'s
+    /// copy-on-write.
+    pub fn truncate_kv(&mut self, kv: &mut PagedKv, len: usize) {
+        assert!(len <= kv.len, "truncate {len} past len {}", kv.len);
+        let keep = if len == 0 { 0 } else { (len - 1) / self.cfg.page_size + 1 };
+        while kv.pages.len() > keep {
+            let p = kv.pages.pop().expect("len checked above");
+            self.release_page(p);
+        }
+        kv.len = len;
+    }
+
     /// Map the longest cached page-aligned prefix of `prompt` into the
     /// empty view `kv` (bumping page refcounts) and return the number of
     /// positions reused. At least one prompt position is always left
@@ -726,6 +769,10 @@ impl KvSlot for PagedKvRef<'_> {
         debug_assert!(self.kv.len <= self.kv.max_seq);
     }
 
+    fn truncate(&mut self, len: usize) {
+        self.pool.truncate_kv(self.kv, len);
+    }
+
     #[inline]
     fn k_at(&self, l: usize, pos: usize, h: usize) -> &[f32] {
         let off = paged_offset(&self.pool.cfg, &self.kv.pages, l, pos, h);
@@ -760,7 +807,12 @@ impl KvSlot for PagedKvRef<'_> {
 /// holds the pool borrow once and routes per-slot reads/writes through
 /// it. [`SlotBatch`] adapts any collection of dense [`KvSlot`]s;
 /// [`PagedSlotBatch`] is the pool-backed equivalent.
-pub trait KvSlotBatch {
+///
+/// `Sync` is a supertrait: after the per-step writes complete, the
+/// engine shares the view read-only across worker threads for the
+/// per-row attention gathers (`FBQ_THREADS`); gathers only use `&self`
+/// methods, so no synchronization beyond the type bound is needed.
+pub trait KvSlotBatch: Sync {
     /// Number of slots in this batch.
     fn n_slots(&self) -> usize;
 
@@ -784,6 +836,26 @@ pub trait KvSlotBatch {
 /// owns its own storage, so distinct `&mut` borrows coexist).
 pub struct SlotBatch<'a> {
     pub slots: Vec<&'a mut dyn KvSlot>,
+}
+
+impl<'a> SlotBatch<'a> {
+    /// Select `ids` out of a dense slot table as a batch view (the
+    /// split-the-borrows dance shared by every batched caller).
+    ///
+    /// Panics if a listed slot is unoccupied or repeated — callers
+    /// validate occupancy up front and own the error reporting.
+    pub fn select<S: KvSlot + 'a>(slots: &'a mut [Option<S>], ids: &[usize]) -> SlotBatch<'a> {
+        let mut refs: Vec<Option<&'a mut S>> = slots.iter_mut().map(|s| s.as_mut()).collect();
+        let mut batch: Vec<&'a mut dyn KvSlot> = Vec::with_capacity(ids.len());
+        for &i in ids {
+            let kv = refs
+                .get_mut(i)
+                .and_then(|r| r.take())
+                .expect("selected slot occupied and listed once");
+            batch.push(kv as &'a mut dyn KvSlot);
+        }
+        SlotBatch { slots: batch }
+    }
 }
 
 impl KvSlotBatch for SlotBatch<'_> {
@@ -819,6 +891,30 @@ impl KvSlotBatch for SlotBatch<'_> {
 pub struct PagedSlotBatch<'a> {
     pub pool: &'a mut KvPagePool,
     pub slots: Vec<&'a mut PagedKv>,
+}
+
+impl<'a> PagedSlotBatch<'a> {
+    /// Pool-backed twin of [`SlotBatch::select`]: select `ids` out of a
+    /// paged slot table, borrowing the pool once. Panics if a listed
+    /// slot is unoccupied or repeated — callers validate occupancy up
+    /// front and own the error reporting.
+    pub fn select(
+        pool: &'a mut KvPagePool,
+        slots: &'a mut [Option<PagedKv>],
+        ids: &[usize],
+    ) -> PagedSlotBatch<'a> {
+        let mut refs: Vec<Option<&'a mut PagedKv>> =
+            slots.iter_mut().map(|s| s.as_mut()).collect();
+        let mut sel: Vec<&'a mut PagedKv> = Vec::with_capacity(ids.len());
+        for &i in ids {
+            sel.push(
+                refs.get_mut(i)
+                    .and_then(|r| r.take())
+                    .expect("selected slot occupied and listed once"),
+            );
+        }
+        PagedSlotBatch { pool, slots: sel }
+    }
 }
 
 impl KvSlotBatch for PagedSlotBatch<'_> {
@@ -892,6 +988,59 @@ mod tests {
         assert_eq!(slot.resident_bytes(), 2 * page_bytes);
         pool.release_kv(&mut kv);
         assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn dense_truncate_rolls_back_and_rewrites() {
+        let mut kv = KvCache::new(1, 8, 1, 2);
+        for pos in 0..5 {
+            kv.write(0, pos, &[pos as f32, 0.0], &[0.0, pos as f32]);
+            kv.advance(1);
+        }
+        kv.truncate(2);
+        assert_eq!(kv.len, 2);
+        // re-append over the discarded positions
+        kv.write(0, 2, &[9.0, 9.0], &[9.0, 9.0]);
+        kv.advance(1);
+        assert_eq!(kv.k_at(0, 2, 0), &[9.0, 9.0]);
+        assert_eq!(kv.k_at(0, 1, 0), &[1.0, 0.0], "kept history untouched");
+    }
+
+    #[test]
+    fn paged_truncate_releases_whole_pages_only() {
+        let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 4, 8));
+        let mut kv = pool.new_kv(32);
+        pool.ensure_range(&mut kv, 0, 10).unwrap();
+        assert_eq!(pool.pages_in_use(), 3);
+        // 10 -> 6 positions: page 3 (positions 8..10) frees, page 2 stays
+        kv.len = 10;
+        pool.truncate_kv(&mut kv, 6);
+        assert_eq!(kv.len(), 6);
+        assert_eq!(kv.n_pages(), 2);
+        assert_eq!(pool.pages_in_use(), 2);
+        // truncate to a page boundary keeps exactly len/page_size pages
+        pool.truncate_kv(&mut kv, 4);
+        assert_eq!(kv.n_pages(), 1);
+        // to zero: everything returns to the free list
+        pool.truncate_kv(&mut kv, 0);
+        assert_eq!(kv.n_pages(), 0);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn paged_truncate_releases_over_reserved_pages() {
+        // ensure_range can map pages past the committed length (the
+        // speculative path reserves K+1 positions up front); truncate
+        // must return those to the free list even though len never
+        // covered them
+        let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 2, 8));
+        let mut kv = pool.new_kv(32);
+        pool.ensure_range(&mut kv, 0, 8).unwrap();
+        kv.len = 3; // committed less than reserved
+        assert_eq!(pool.pages_in_use(), 4);
+        pool.truncate_kv(&mut kv, 3);
+        assert_eq!(kv.n_pages(), 2);
+        assert_eq!(pool.pages_in_use(), 2);
     }
 
     #[test]

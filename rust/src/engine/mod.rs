@@ -12,8 +12,10 @@
 //! * [`kv`] — KV storage behind the [`kv::KvSlot`] interface: the dense
 //!   per-session cache and the paged, prefix-sharing [`kv::KvPagePool`],
 //!   plus the [`kv::KvSlotBatch`] views the batched decode steps through,
-//! * [`native`] — the full transformer forward (prefill + single-slot and
-//!   weight-stationary batched decode).
+//! * [`native`] — the full transformer forward (prefill, single-slot
+//!   decode, and the weight-stationary batched step — including its
+//!   multi-position generalization backing speculative verification and
+//!   batched prefill).
 
 pub mod kernels;
 pub mod kv;

@@ -4,10 +4,14 @@
 //! conventions) so logits agree with the JAX reference to float tolerance —
 //! asserted by `tests/cross_engine.rs` against the AOT selftest archive.
 //!
-//! Decode comes in two shapes: [`NativeEngine::decode_one`] steps a single
-//! slot, and [`NativeEngine::step_batch`] steps every occupied slot of a
-//! continuous batch through one weight-stationary pass (weights stream
-//! once per step, not once per slot) with bit-identical per-slot results.
+//! Decode comes in three shapes: [`NativeEngine::decode_one`] steps a
+//! single slot; [`NativeEngine::step_batch`] steps every occupied slot of
+//! a continuous batch through one weight-stationary pass (weights stream
+//! once per step, not once per slot) with bit-identical per-slot results;
+//! and [`NativeEngine::step_batch_multi`] generalizes that from slot-rows
+//! to **position-rows** — each slot consumes a group of consecutive
+//! tokens in the same pass, which is how speculative verification scores
+//! all K+1 draft positions and how concurrent prefills batch.
 
 use super::kernels::{self, QuantLinear, SubMode, Traffic, Workspace};
 use super::kv::{KvSlot, KvSlotBatch};
@@ -141,6 +145,16 @@ impl LinearExec {
         }
     }
 
+    /// Shadow variant for self-speculative drafting: quantized layers
+    /// re-packed at `bits` with the sub-branch dropped
+    /// ([`QuantLinear::shadow`]); dense layers pass through unchanged.
+    pub fn shadow(&self, bits: u8) -> LinearExec {
+        match self {
+            LinearExec::Dense { .. } => self.clone(),
+            LinearExec::Quant(q) => LinearExec::Quant(q.shadow(bits)),
+        }
+    }
+
     pub fn resident_bytes(&self) -> usize {
         match self {
             LinearExec::Dense { w, bias, .. } => 4 * (w.len() + bias.as_ref().map_or(0, |b| b.len())),
@@ -245,6 +259,41 @@ impl NativeEngine {
             cfg,
             mode,
         })
+    }
+
+    /// Build the **shadow draft engine** for self-speculative decoding:
+    /// every quantized linear re-packed at `bits` with the sub-branch
+    /// dropped ([`QuantLinear::shadow`]); embeddings, norms and the
+    /// lm-head are copied as-is. The shadow always runs `SubMode::None`
+    /// — it *is* the bare branch, just on a coarser grid.
+    pub fn shadow(&self, bits: u8) -> NativeEngine {
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|b| Block {
+                attn_norm_w: b.attn_norm_w.clone(),
+                attn_norm_b: b.attn_norm_b.clone(),
+                mlp_norm_w: b.mlp_norm_w.clone(),
+                mlp_norm_b: b.mlp_norm_b.clone(),
+                q: b.q.shadow(bits),
+                k: b.k.shadow(bits),
+                v: b.v.shadow(bits),
+                o: b.o.shadow(bits),
+                m1: b.m1.shadow(bits),
+                m2: b.m2.shadow(bits),
+                m3: b.m3.as_ref().map(|m| m.shadow(bits)),
+            })
+            .collect();
+        NativeEngine {
+            cfg: self.cfg.clone(),
+            mode: SubMode::None,
+            tok_emb: self.tok_emb.clone(),
+            pos_emb: self.pos_emb.clone(),
+            lm_head: self.lm_head.clone(),
+            final_norm_w: self.final_norm_w.clone(),
+            final_norm_b: self.final_norm_b.clone(),
+            blocks,
+        }
     }
 
     /// Total weight bytes resident (Fig. 1 memory axis).
@@ -536,103 +585,152 @@ impl NativeEngine {
     /// batched KV view pairing each row with its history (see
     /// [`KvSlotBatch`]). Returns next-token logits per slot.
     ///
-    /// All norms, projections and MLPs run as `m`-row batched kernels
-    /// ([`QuantLinear::gemv_multi`]), so quantized weights, scales and
-    /// sub-branch matrices stream **once per step** instead of once per
-    /// slot — [`Traffic::weight_bytes`] per step is independent of `m`.
-    /// Execution only forks per slot where state genuinely differs: RoPE
-    /// rotation at each slot's own position, the KV append, and the
-    /// paged/dense attention gathers. Every row performs bit-identical
-    /// float operations to [`NativeEngine::decode_one`] on that slot, so
-    /// batched and sequential decode yield identical logits. Slot
-    /// positions may differ arbitrarily (continuous batching).
+    /// This is [`NativeEngine::step_batch_multi`] with exactly one
+    /// position per slot — see there for the execution contract (weights
+    /// stream once per step; per-row float operations bit-identical to
+    /// [`NativeEngine::decode_one`]).
     pub fn step_batch(
         &self,
         tokens: &[u32],
         kv: &mut dyn KvSlotBatch,
         ws: &mut EngineWs,
     ) -> Vec<Vec<f32>> {
-        let m = tokens.len();
+        let groups: Vec<&[u32]> = tokens.iter().map(std::slice::from_ref).collect();
+        self.step_batch_multi(&groups, kv, ws, true)
+            .into_iter()
+            .map(|mut per_pos| per_pos.pop().expect("one position per slot"))
+            .collect()
+    }
+
+    /// One weight-stationary **multi-position** batched step: slot `i`
+    /// consumes the `groups[i]` tokens at consecutive positions starting
+    /// from its current length, all `Σ len(groups[i])` position-rows
+    /// flowing through the same batched kernels in ONE pass. This is the
+    /// entry point speculative verification scores `m·(K+1)` rows
+    /// through, and the one concurrent prefills batch through — the
+    /// generalization of [`NativeEngine::step_batch`] from slot-rows to
+    /// position-rows.
+    ///
+    /// All norms, projections and MLPs run as row-batched kernels
+    /// ([`QuantLinear::gemv_multi`]), so quantized weights, scales and
+    /// sub-branch matrices stream **once per step** regardless of slot
+    /// count or positions per slot — [`Traffic::weight_bytes`] per step
+    /// is independent of both. Execution only forks per row where state
+    /// genuinely differs: the embedding position, RoPE rotation, the KV
+    /// append and the attention gathers (threaded over rows via
+    /// `FBQ_THREADS` above the work floor). Within a slot, rows append
+    /// K/V in position order before any row gathers, so later rows
+    /// attend over earlier same-step rows exactly as sequential decode
+    /// would — every row performs bit-identical float operations to
+    /// [`NativeEngine::decode_one`] at that position.
+    ///
+    /// Returns logits per slot per position when `all_logits` (the
+    /// verifier shape), or only each slot's last position when not (the
+    /// prefill shape — one `[vocab]` row per slot).
+    pub fn step_batch_multi(
+        &self,
+        groups: &[&[u32]],
+        kv: &mut dyn KvSlotBatch,
+        ws: &mut EngineWs,
+        all_logits: bool,
+    ) -> Vec<Vec<Vec<f32>>> {
+        let m = groups.len();
         assert!(m > 0, "batched step over zero slots");
-        assert_eq!(m, kv.n_slots(), "token/slot count mismatch");
+        assert_eq!(m, kv.n_slots(), "group/slot count mismatch");
         let cfg = &self.cfg;
         let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
-        let mut pos = Vec::with_capacity(m);
-        for i in 0..m {
-            let p = kv.len(i);
-            assert!(p < cfg.max_seq, "kv cache full on slot {i}");
-            pos.push(p);
+        let rows: usize = groups.iter().map(|g| g.len()).sum();
+        let mut pos = Vec::with_capacity(rows);
+        let mut row_slot = Vec::with_capacity(rows);
+        for (i, g) in groups.iter().enumerate() {
+            assert!(!g.is_empty(), "empty token group for slot {i}");
+            let p0 = kv.len(i);
+            assert!(p0 + g.len() <= cfg.max_seq, "kv cache full on slot {i}");
+            for j in 0..g.len() {
+                row_slot.push(i);
+                pos.push(p0 + j);
+            }
         }
 
-        // embed (per-slot fork: each row has its own token and position)
-        ws.x.resize(m * d, 0.0);
-        for i in 0..m {
-            let tok = tokens[i] as usize;
-            let xrow = &mut ws.x[i * d..(i + 1) * d];
-            xrow.copy_from_slice(&self.tok_emb[tok * d..(tok + 1) * d]);
-            if let Some(pe) = &self.pos_emb {
-                for (xv, pv) in xrow.iter_mut().zip(&pe[pos[i] * d..(pos[i] + 1) * d]) {
-                    *xv += pv;
+        // embed (per-row fork: each row has its own token and position)
+        ws.x.resize(rows * d, 0.0);
+        {
+            let mut r = 0usize;
+            for g in groups {
+                for &tok in g.iter() {
+                    let tok = tok as usize;
+                    let xrow = &mut ws.x[r * d..(r + 1) * d];
+                    xrow.copy_from_slice(&self.tok_emb[tok * d..(tok + 1) * d]);
+                    if let Some(pe) = &self.pos_emb {
+                        for (xv, pv) in xrow.iter_mut().zip(&pe[pos[r] * d..(pos[r] + 1) * d]) {
+                            *xv += pv;
+                        }
+                    }
+                    r += 1;
                 }
             }
         }
 
         for (l, blk) in self.blocks.iter().enumerate() {
             // --- attention ---
-            ws.h.resize(m * d, 0.0);
+            ws.h.resize(rows * d, 0.0);
             let mut hbuf = std::mem::take(&mut ws.h);
-            for i in 0..m {
+            for r in 0..rows {
                 self.norm(
                     &blk.attn_norm_w,
                     blk.attn_norm_b.as_ref(),
-                    &ws.x[i * d..(i + 1) * d],
-                    &mut hbuf[i * d..(i + 1) * d],
+                    &ws.x[r * d..(r + 1) * d],
+                    &mut hbuf[r * d..(r + 1) * d],
                 );
             }
-            ws.qb.resize(m * d, 0.0);
-            ws.kb.resize(m * d, 0.0);
-            ws.vb.resize(m * d, 0.0);
+            ws.qb.resize(rows * d, 0.0);
+            ws.kb.resize(rows * d, 0.0);
+            ws.vb.resize(rows * d, 0.0);
             let mut qb = std::mem::take(&mut ws.qb);
             let mut kb = std::mem::take(&mut ws.kb);
             let mut vb = std::mem::take(&mut ws.vb);
-            blk.q.gemv_multi(&hbuf, m, &mut qb, self.mode, &mut ws.kernel, &mut ws.traffic);
-            blk.k.gemv_multi(&hbuf, m, &mut kb, self.mode, &mut ws.kernel, &mut ws.traffic);
-            blk.v.gemv_multi(&hbuf, m, &mut vb, self.mode, &mut ws.kernel, &mut ws.traffic);
-            // per-slot fork: rotate at each slot's own position, append
-            for i in 0..m {
+            blk.q.gemv_multi(&hbuf, rows, &mut qb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            blk.k.gemv_multi(&hbuf, rows, &mut kb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            blk.v.gemv_multi(&hbuf, rows, &mut vb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            // per-row fork: rotate at the row's own position, append.
+            // Same-slot rows append in position order so the gathers
+            // below see this step's earlier keys (prefill causality).
+            for r in 0..rows {
                 if cfg.rope() {
                     for h in 0..nh {
                         ops::rope_rotate(
-                            &mut qb[i * d + h * hd..i * d + (h + 1) * hd],
-                            pos[i],
+                            &mut qb[r * d + h * hd..r * d + (h + 1) * hd],
+                            pos[r],
                             cfg.rope_theta,
                         );
                         ops::rope_rotate(
-                            &mut kb[i * d + h * hd..i * d + (h + 1) * hd],
-                            pos[i],
+                            &mut kb[r * d + h * hd..r * d + (h + 1) * hd],
+                            pos[r],
                             cfg.rope_theta,
                         );
                     }
                 }
-                kv.write(i, l, pos[i], &kb[i * d..(i + 1) * d], &vb[i * d..(i + 1) * d]);
+                kv.write(row_slot[r], l, pos[r], &kb[r * d..(r + 1) * d], &vb[r * d..(r + 1) * d]);
             }
-            // per-slot fork: attention over each slot's own history
-            ws.attn.resize(m * d, 0.0);
+            // per-row fork: attention over each row's own causal history,
+            // fanned over the FBQ_THREADS workers when large enough
+            ws.attn.resize(rows * d, 0.0);
             let mut attn = std::mem::take(&mut ws.attn);
             let scale = 1.0 / (hd as f32).sqrt();
-            for i in 0..m {
-                let plen = pos[i] + 1;
-                ws.scores.resize(plen, 0.0);
-                for h in 0..nh {
-                    let qv = &qb[i * d + h * hd..i * d + (h + 1) * hd];
-                    kv.score_keys(i, l, h, qv, scale, &mut ws.scores[..plen]);
-                    ops::softmax_rows(&mut ws.scores[..plen], 1, plen);
-                    let out = &mut attn[i * d + h * hd..i * d + (h + 1) * hd];
-                    out.fill(0.0);
-                    kv.accumulate_values(i, l, h, &ws.scores[..plen], out);
-                }
-            }
-            blk.o.gemv_multi(&attn, m, &mut hbuf, self.mode, &mut ws.kernel, &mut ws.traffic);
+            attention_rows(
+                &*kv,
+                l,
+                nh,
+                hd,
+                d,
+                scale,
+                &qb,
+                &pos,
+                &row_slot,
+                &mut attn,
+                &mut ws.scores,
+            );
+            blk.o.gemv_multi(&attn, rows, &mut hbuf, self.mode, &mut ws.kernel, &mut ws.traffic);
             for (xv, hv) in ws.x.iter_mut().zip(&hbuf) {
                 *xv += hv;
             }
@@ -642,43 +740,74 @@ impl NativeEngine {
             ws.vb = vb;
 
             // --- mlp ---
-            for i in 0..m {
+            for r in 0..rows {
                 self.norm(
                     &blk.mlp_norm_w,
                     blk.mlp_norm_b.as_ref(),
-                    &ws.x[i * d..(i + 1) * d],
-                    &mut hbuf[i * d..(i + 1) * d],
+                    &ws.x[r * d..(r + 1) * d],
+                    &mut hbuf[r * d..(r + 1) * d],
                 );
             }
-            ws.m3.resize(m * d, 0.0);
+            ws.m3.resize(rows * d, 0.0);
             let mut mout = std::mem::take(&mut ws.m3);
-            self.mlp_multi(blk, &hbuf, m, ws, &mut mout);
+            self.mlp_multi(blk, &hbuf, rows, ws, &mut mout);
             for (xv, mv) in ws.x.iter_mut().zip(&mout) {
                 *xv += mv;
             }
             ws.m3 = mout;
             ws.h = hbuf;
         }
-        for i in 0..m {
-            kv.advance(i, 1);
+        for (i, g) in groups.iter().enumerate() {
+            kv.advance(i, g.len());
         }
 
-        // final norm (per row) + one batched lm-head
-        ws.hrow.resize(m * d, 0.0);
-        let mut hbuf = std::mem::take(&mut ws.hrow);
-        for i in 0..m {
-            self.norm(
-                &self.final_norm_w,
-                self.final_norm_b.as_ref(),
-                &ws.x[i * d..(i + 1) * d],
-                &mut hbuf[i * d..(i + 1) * d],
-            );
-        }
+        // final norm + ONE batched lm-head over the rows needing logits
         let vocab = cfg.vocab;
-        let mut flat = vec![0f32; m * vocab];
-        self.lm_head_multi(&hbuf, m, &mut flat, ws);
-        ws.hrow = hbuf;
-        (0..m).map(|i| flat[i * vocab..(i + 1) * vocab].to_vec()).collect()
+        if all_logits {
+            ws.hrow.resize(rows * d, 0.0);
+            let mut hbuf = std::mem::take(&mut ws.hrow);
+            for r in 0..rows {
+                self.norm(
+                    &self.final_norm_w,
+                    self.final_norm_b.as_ref(),
+                    &ws.x[r * d..(r + 1) * d],
+                    &mut hbuf[r * d..(r + 1) * d],
+                );
+            }
+            let mut flat = vec![0f32; rows * vocab];
+            self.lm_head_multi(&hbuf, rows, &mut flat, ws);
+            ws.hrow = hbuf;
+            let mut out = Vec::with_capacity(m);
+            let mut r = 0usize;
+            for g in groups {
+                let mut per = Vec::with_capacity(g.len());
+                for _ in 0..g.len() {
+                    per.push(flat[r * vocab..(r + 1) * vocab].to_vec());
+                    r += 1;
+                }
+                out.push(per);
+            }
+            out
+        } else {
+            // only each slot's last position feeds sampling (prefill)
+            ws.hrow.resize(m * d, 0.0);
+            let mut hbuf = std::mem::take(&mut ws.hrow);
+            let mut consumed = 0usize;
+            for (i, g) in groups.iter().enumerate() {
+                consumed += g.len();
+                let r = consumed - 1;
+                self.norm(
+                    &self.final_norm_w,
+                    self.final_norm_b.as_ref(),
+                    &ws.x[r * d..(r + 1) * d],
+                    &mut hbuf[i * d..(i + 1) * d],
+                );
+            }
+            let mut flat = vec![0f32; m * vocab];
+            self.lm_head_multi(&hbuf, m, &mut flat, ws);
+            ws.hrow = hbuf;
+            (0..m).map(|i| vec![flat[i * vocab..(i + 1) * vocab].to_vec()]).collect()
+        }
     }
 
     /// Batched MLP mirroring [`NativeEngine::mlp`] with the
@@ -735,4 +864,73 @@ impl NativeEngine {
             }
         });
     }
+}
+
+/// Per-row attention gathers (scores → softmax → weighted values) of the
+/// batched step: row `r` attends over slot `row_slot[r]`'s history
+/// `0..=pos[r]` through the shared [`KvSlotBatch`] view. Rows fan out
+/// over the `FBQ_THREADS` workers when the gathered work clears the
+/// parallel floor (gathers are read-only and rows write disjoint `attn`
+/// slices — embarrassingly parallel); each row is produced by exactly
+/// one worker with the serial operation order, so threading never
+/// changes results.
+#[allow(clippy::too_many_arguments)]
+fn attention_rows(
+    kv: &dyn KvSlotBatch,
+    l: usize,
+    nh: usize,
+    hd: usize,
+    d: usize,
+    scale: f32,
+    qb: &[f32],
+    pos: &[usize],
+    row_slot: &[usize],
+    attn: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    let rows = pos.len();
+    let gather = |r: usize, out_row: &mut [f32], scores: &mut Vec<f32>| {
+        let i = row_slot[r];
+        let plen = pos[r] + 1;
+        scores.resize(plen, 0.0);
+        for h in 0..nh {
+            let qv = &qb[r * d + h * hd..r * d + (h + 1) * hd];
+            kv.score_keys(i, l, h, qv, scale, &mut scores[..plen]);
+            ops::softmax_rows(&mut scores[..plen], 1, plen);
+            let out = &mut out_row[h * hd..(h + 1) * hd];
+            out.fill(0.0);
+            kv.accumulate_values(i, l, h, &scores[..plen], out);
+        }
+    };
+    // ~2·d MACs per history position per row (score + accumulate)
+    let total_macs: usize = pos.iter().map(|&p| 2 * (p + 1) * d).sum();
+    let threads = kernels::plan_threads(total_macs);
+    if threads <= 1 || rows == 1 {
+        for r in 0..rows {
+            let out_row = &mut attn[r * d..(r + 1) * d];
+            gather(r, out_row, &mut *scores);
+        }
+        return;
+    }
+    let chunks = kernels::split_rows(rows, threads);
+    // carve attn into one disjoint [rows_chunk, d] tile per worker
+    let mut tiles: Vec<&mut [f32]> = Vec::with_capacity(chunks.len());
+    let mut rest: &mut [f32] = attn;
+    for &(lo, hi) in &chunks {
+        let taken = std::mem::take(&mut rest);
+        let (tile, tail) = taken.split_at_mut((hi - lo) * d);
+        tiles.push(tile);
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        for (&(lo, hi), tile) in chunks.iter().zip(tiles) {
+            let gather = &gather;
+            s.spawn(move || {
+                let mut local: Vec<f32> = Vec::new();
+                for r in lo..hi {
+                    gather(r, &mut tile[(r - lo) * d..(r - lo + 1) * d], &mut local);
+                }
+            });
+        }
+    });
 }

@@ -11,6 +11,9 @@
 //! * [`model`] — model configurations, weight stores and the byte tokenizer,
 //! * [`engine`] — the native inference engine with fused / un-fused
 //!   quantized kernels (the wall-clock testbed for Figs 1/4/7),
+//! * [`spec`] — self-speculative decoding: draft on the bare quantized
+//!   branch (or a lower-bit shadow pack), verify all draft positions in
+//!   one weight-stationary multi-position pass,
 //! * [`runtime`] — the PJRT runtime loading AOT HLO artifacts produced by
 //!   `python/compile/aot.py`,
 //! * [`coordinator`] — request router, dynamic batcher, prefill/decode
@@ -25,6 +28,7 @@ pub mod tensor;
 pub mod quant;
 pub mod model;
 pub mod engine;
+pub mod spec;
 pub mod runtime;
 pub mod coordinator;
 pub mod eval;

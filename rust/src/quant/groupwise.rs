@@ -105,6 +105,25 @@ pub fn quantize_dequantize(w: &[f32], out: usize, cin: usize, bits: u8, group: u
     dequantize(&codes, out, cin, &p)
 }
 
+/// Re-quantize an already-quantized matrix at a (lower) bit-width: the
+/// **shadow pack** a self-speculative draft decodes on. The main branch
+/// is de-quantized (sub-branch excluded — the draft is the bare branch)
+/// and RTN-requantized at `bits` with the same group geometry, so the
+/// shadow approximates the codes the verifier streams, at a fraction of
+/// the weight bytes.
+pub fn requantize(
+    codes: &[i8],
+    out: usize,
+    cin: usize,
+    p: &QuantParams,
+    bits: u8,
+) -> (Vec<i8>, QuantParams) {
+    let w = dequantize(codes, out, cin, p);
+    let p2 = quant_params(&w, out, cin, bits, p.group);
+    let c2 = quantize(&w, out, cin, &p2);
+    (c2, p2)
+}
+
 impl GroupQuant {
     pub fn from_weights(w: &[f32], out: usize, cin: usize, bits: u8, group: usize) -> Self {
         let params = quant_params(w, out, cin, bits, group);
@@ -168,6 +187,31 @@ mod tests {
         };
         assert!(mse(4) < mse(3));
         assert!(mse(3) < mse(2));
+    }
+
+    #[test]
+    fn requantize_tracks_the_dequantized_matrix() {
+        let mut rng = Pcg64::seeded(14);
+        let (out, cin, group) = (8usize, 64usize, 16usize);
+        let w = rand_w(&mut rng, out * cin, 0.6);
+        let p4 = quant_params(&w, out, cin, 4, group);
+        let c4 = quantize(&w, out, cin, &p4);
+        let w4 = dequantize(&c4, out, cin, &p4);
+        let (c2, p2) = requantize(&c4, out, cin, &p4, 2);
+        assert_eq!(p2.bits, 2);
+        assert_eq!(p2.group, group);
+        assert!(c2.iter().all(|&c| (0..=3).contains(&c)));
+        // the shadow's error is bounded by its own grid, relative to the
+        // 4-bit matrix it was re-packed from
+        let w2 = dequantize(&c2, out, cin, &p2);
+        let ngroups = cin / group;
+        for r in 0..out {
+            for c in 0..cin {
+                let s = p2.scales[r * ngroups + c / group];
+                let err = (w4[r * cin + c] - w2[r * cin + c]).abs();
+                assert!(err <= s / 2.0 + 1e-6, "err={err} s/2={}", s / 2.0);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Draft-side KV state for self-speculative decoding.
+//!
+//! The draft engine attends over its *own* K/V history (its
+//! representations differ from the target's), so every speculative slot
+//! carries a second, rollback-able KV mirror: the same committed token
+//! sequence, draft-engine values. [`DraftKv`] manages those mirrors with
+//! the same paging discipline as the target backend — one dense cache
+//! per slot, or a private page pool. The paged pool runs with the prefix
+//! cache disabled: draft pages are transient scratch that is truncated
+//! every step, never shared across admissions.
+
+use crate::engine::kv::{KvCache, KvPagePool, KvPoolConfig, PagedKv, PagedSlotBatch, SlotBatch};
+use crate::engine::native::{EngineWs, NativeEngine};
+use crate::model::Config;
+use anyhow::{bail, Context, Result};
+
+/// The draft KV mirrors of one open batch, addressed by target slot id.
+pub enum DraftKv {
+    /// No batch open yet.
+    Unopened,
+    /// One dense full-capacity cache per occupied slot.
+    Dense { slots: Vec<Option<KvCache>> },
+    /// Pool-backed mirrors (the backend's paged mode).
+    Paged { pool: KvPagePool, slots: Vec<Option<PagedKv>> },
+}
+
+impl DraftKv {
+    pub fn open_dense(&mut self, capacity: usize) {
+        *self = DraftKv::Dense { slots: (0..capacity).map(|_| None).collect() };
+    }
+
+    pub fn open_paged(&mut self, cfg: KvPoolConfig, capacity: usize) {
+        *self = DraftKv::Paged {
+            pool: KvPagePool::new(cfg),
+            slots: (0..capacity).map(|_| None).collect(),
+        };
+    }
+
+    /// Committed draft length of `slot` (None when unoccupied).
+    pub fn len(&self, slot: usize) -> Option<usize> {
+        match self {
+            DraftKv::Unopened => None,
+            DraftKv::Dense { slots } => slots.get(slot).and_then(|s| s.as_ref()).map(|kv| kv.len),
+            DraftKv::Paged { slots, .. } => {
+                slots.get(slot).and_then(|s| s.as_ref()).map(|kv| kv.len())
+            }
+        }
+    }
+
+    /// Drop `slot`'s mirror (pages return to the pool). Unoccupied slots
+    /// are ignored so release stays idempotent with the target's.
+    pub fn release(&mut self, slot: usize) {
+        match self {
+            DraftKv::Unopened => {}
+            DraftKv::Dense { slots } => {
+                if let Some(s) = slots.get_mut(slot) {
+                    *s = None;
+                }
+            }
+            DraftKv::Paged { pool, slots } => {
+                if let Some(s) = slots.get_mut(slot) {
+                    if let Some(mut kv) = s.take() {
+                        pool.release_kv(&mut kv);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Create an **empty** mirror for a newly admitted `slot`. No engine
+    /// work happens here (and on the paged store, no page allocation):
+    /// the prompt queues in the slot's lazy catch-up list and is
+    /// mirrored by the first draft pass of the slot's first speculative
+    /// step — so slots that never speculate (sampled requests) pay no
+    /// draft compute and, on the paged store, no draft-KV pages at all.
+    pub fn occupy(&mut self, cfg: &Config, slot: usize) -> Result<()> {
+        match self {
+            DraftKv::Unopened => bail!("draft kv: no open batch"),
+            DraftKv::Dense { slots } => {
+                if slot >= slots.len() {
+                    bail!("draft kv: slot {slot} out of range ({} slots)", slots.len());
+                }
+                if slots[slot].is_some() {
+                    bail!("draft kv: slot {slot} is already occupied");
+                }
+                slots[slot] =
+                    Some(KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim()));
+            }
+            DraftKv::Paged { pool, slots } => {
+                if slot >= slots.len() {
+                    bail!("draft kv: slot {slot} out of range ({} slots)", slots.len());
+                }
+                if slots[slot].is_some() {
+                    bail!("draft kv: slot {slot} is already occupied");
+                }
+                slots[slot] = Some(pool.new_kv(cfg.max_seq));
+            }
+        }
+        Ok(())
+    }
+
+    /// Make the next `n` positions of `slot` writable (page mapping plus
+    /// copy-on-write on the paged store; a capacity check on dense).
+    pub fn ensure(&mut self, slot: usize, n: usize) -> Result<()> {
+        match self {
+            DraftKv::Unopened => bail!("draft kv: no open batch"),
+            DraftKv::Dense { slots } => {
+                let kv = slots
+                    .get(slot)
+                    .and_then(|s| s.as_ref())
+                    .with_context(|| format!("draft kv: slot {slot} is not occupied"))?;
+                if kv.remaining() < n {
+                    bail!(
+                        "draft kv: slot {slot} has {} positions left, needs {n}",
+                        kv.remaining()
+                    );
+                }
+                Ok(())
+            }
+            DraftKv::Paged { pool, slots } => {
+                let kv = slots
+                    .get_mut(slot)
+                    .and_then(|s| s.as_mut())
+                    .with_context(|| format!("draft kv: slot {slot} is not occupied"))?;
+                let len = kv.len();
+                pool.ensure_range(kv, len, len + n)
+            }
+        }
+    }
+
+    /// Roll `slot` back to `len` committed positions (speculative
+    /// rollback; whole pages past the boundary — including over-reserved
+    /// ones — return to the pool).
+    pub fn truncate(&mut self, slot: usize, len: usize) {
+        match self {
+            DraftKv::Unopened => {}
+            DraftKv::Dense { slots } => {
+                if let Some(kv) = slots.get_mut(slot).and_then(|s| s.as_mut()) {
+                    kv.truncate(len);
+                }
+            }
+            DraftKv::Paged { pool, slots } => {
+                if let Some(kv) = slots.get_mut(slot).and_then(|s| s.as_mut()) {
+                    pool.truncate_kv(kv, len);
+                }
+            }
+        }
+    }
+
+    /// One batched draft step over the listed slots (`toks[i]` feeds
+    /// `sel[i]`): the draft analogue of the backend's weight-stationary
+    /// decode — draft weights stream once per draft step across all
+    /// drafting slots. Returns next-token logits per listed slot.
+    pub fn step(
+        &mut self,
+        engine: &NativeEngine,
+        sel: &[usize],
+        toks: &[u32],
+        ws: &mut EngineWs,
+    ) -> Vec<Vec<f32>> {
+        let groups: Vec<&[u32]> = toks.iter().map(std::slice::from_ref).collect();
+        self.step_multi(engine, sel, &groups, ws)
+    }
+
+    /// Multi-position batched draft step: slot `sel[i]` consumes the
+    /// `groups[i]` tokens in one pass (the lazy catch-up path — tokens
+    /// the target committed while the mirror lagged ride the first
+    /// draft pass as extra rows, costing no extra weight stream).
+    /// Returns each listed slot's **last-position** logits.
+    pub fn step_multi(
+        &mut self,
+        engine: &NativeEngine,
+        sel: &[usize],
+        groups: &[&[u32]],
+        ws: &mut EngineWs,
+    ) -> Vec<Vec<f32>> {
+        match self {
+            DraftKv::Unopened => panic!("draft kv: no open batch"),
+            DraftKv::Dense { slots } => {
+                let mut sb = SlotBatch::select(slots, sel);
+                engine
+                    .step_batch_multi(groups, &mut sb, ws, false)
+                    .into_iter()
+                    .map(|mut per| per.pop().expect("one logits row"))
+                    .collect()
+            }
+            DraftKv::Paged { pool, slots } => {
+                let mut sb = PagedSlotBatch::select(pool, slots, sel);
+                engine
+                    .step_batch_multi(groups, &mut sb, ws, false)
+                    .into_iter()
+                    .map(|mut per| per.pop().expect("one logits row"))
+                    .collect()
+            }
+        }
+    }
+}

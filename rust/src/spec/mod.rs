@@ -1,0 +1,249 @@
+//! Self-speculative decoding: draft on the bare quantized branch,
+//! verify through the batched multi-position step.
+//!
+//! FBQuant's architecture is a free draft/verify pair. The packed main
+//! branch alone is a cheap approximation of the model — exactly what a
+//! speculative *draft* needs — and the sub-branch feedback correction
+//! recovers the accuracy the *verifier* demands. No second model, no
+//! distillation: the draft is the target with the sub-branch skipped
+//! ([`DraftMode::NoSub`], zero extra resident bytes) or a lower-bit
+//! shadow re-pack of the same codes ([`DraftMode::Shadow`], produced by
+//! `quant::groupwise::requantize`).
+//!
+//! One speculative step per slot:
+//!
+//! ```text
+//!   target KV at L, input token t (sampled, uncommitted)
+//!     draft:   K greedy steps on the degraded branch  → d_1 .. d_K
+//!              (batched across slots; draft KV mirrors advance to L+K)
+//!     verify:  ONE multi-position pass over the target
+//!              (NativeEngine::step_batch_multi, rows = m·(K+1)):
+//!              feed [t, d_1 .. d_K]  → logits at every position
+//!     accept:  greedy — d_j commits while d_j == argmax(logits_{j-1});
+//!              first mismatch yields the correction token instead
+//!     commit:  a accepted drafts + 1 correction/bonus = 1..=K+1 tokens
+//!     rollback: truncate BOTH caches to L+1+a (KvSlot::truncate /
+//!              KvPagePool::truncate_kv — rejected positions and page
+//!              over-reservations return to the pool); on FULL
+//!              acceptance the mirror's missing last token queues in a
+//!              lazy catch-up list and rides the next step's first
+//!              draft pass (no extra draft weight stream)
+//! ```
+//!
+//! Because acceptance compares against the verifier's own greedy argmax
+//! and the multi-position step is bit-identical per row to sequential
+//! decode, the committed stream is **token-identical to non-speculative
+//! greedy decode** — speculation only changes how many weight streams
+//! each token costs, never which token is emitted. The verifier streams
+//! its weights once per step regardless of K, so weight bytes per
+//! committed token fall whenever at least one draft survives per step
+//! on average.
+//!
+//! Wiring lives in `coordinator::backend`
+//! (`NativeBackend::with_speculative`, `Backend::decode_speculative`)
+//! and `coordinator::server` (slots emit `1..=K+1` tokens per scheduling
+//! step); this module owns the draft state ([`DraftKv`]), the drafting
+//! loop ([`draft_tokens`]) and the acceptance rule ([`greedy_accept`]).
+
+pub mod draft;
+
+pub use draft::DraftKv;
+
+use crate::engine::native::{EngineWs, NativeEngine};
+use crate::tensor::ops;
+
+/// Which degraded configuration drafts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftMode {
+    /// Draft on the target's own weights with the sub-branch skipped
+    /// (`SubMode::None`): zero extra resident bytes — the draft *is*
+    /// FBQuant's bare packed branch.
+    NoSub,
+    /// Draft on a lower-bit shadow re-pack of the main branch (see
+    /// `QuantLinear::shadow`): a cheaper weight stream per draft step,
+    /// at some acceptance-rate cost.
+    Shadow { bits: u8 },
+}
+
+/// Speculative-decoding configuration carried by a backend.
+#[derive(Debug, Clone, Copy)]
+pub struct SpeculativeConfig {
+    /// Draft depth: up to `k` proposals per slot per step (each step
+    /// commits `1..=k+1` tokens).
+    pub k: usize,
+    pub draft: DraftMode,
+}
+
+/// Outcome of one speculative step for one slot.
+#[derive(Debug, Clone)]
+pub struct SpecStep {
+    /// Draft tokens accepted this step, in order — all committed.
+    pub accepted: Vec<u32>,
+    /// The correction/bonus token: sampled but not yet committed (the
+    /// slot's next feed token, exactly like plain decode's sample).
+    pub next: u32,
+    /// Draft tokens proposed (acceptance-rate denominator; can be less
+    /// than the configured `k` near `max_seq` or under pool pressure).
+    pub proposed: usize,
+}
+
+/// Per-backend speculative state: the config, the optional shadow
+/// engine, the draft-side workspace (draft traffic is metered apart
+/// from the target's), the draft KV mirrors and the per-slot **lazy
+/// catch-up queues** — tokens the target committed that the mirror has
+/// not fed yet. They ride the NEXT step's first draft pass as extra
+/// positions, so full acceptance never costs an extra draft weight
+/// stream.
+pub struct SpecDecoder {
+    pub cfg: SpeculativeConfig,
+    pub(crate) shadow: Option<NativeEngine>,
+    pub(crate) ws: EngineWs,
+    pub(crate) kv: DraftKv,
+    /// Per target-slot committed-but-unmirrored tokens (invariant:
+    /// `draft_len(slot) + pending[slot].len() == target_len(slot)`).
+    pub(crate) pending: Vec<Vec<u32>>,
+}
+
+impl SpecDecoder {
+    pub fn new(cfg: SpeculativeConfig, target: &NativeEngine) -> SpecDecoder {
+        assert!(cfg.k >= 1, "speculative draft depth must be >= 1");
+        let shadow = match cfg.draft {
+            DraftMode::NoSub => None,
+            DraftMode::Shadow { bits } => Some(target.shadow(bits)),
+        };
+        SpecDecoder {
+            cfg,
+            shadow,
+            ws: EngineWs::default(),
+            kv: DraftKv::Unopened,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Extra weight bytes the draft engine pins (0 for
+    /// [`DraftMode::NoSub`] — it reuses the target's tensors).
+    pub fn resident_bytes(&self) -> usize {
+        self.shadow.as_ref().map_or(0, |e| e.resident_bytes())
+    }
+}
+
+/// Greedy acceptance for one slot: `verify[j]` are the target logits
+/// after feeding the j-th token of `[t, drafts...]`
+/// (`verify.len() == drafts.len() + 1`). Returns `(a, next)`: the count
+/// of leading drafts that match the verifier's argmax chain, and the
+/// token the slot feeds next (the correction at the first mismatch, or
+/// the bonus token after full acceptance). The committed stream
+/// `drafts[..a] ++ [next]` equals sequential greedy decode exactly.
+pub fn greedy_accept(drafts: &[u32], verify: &[Vec<f32>]) -> (usize, u32) {
+    debug_assert_eq!(verify.len(), drafts.len() + 1, "one logits row per fed token");
+    for (j, &d) in drafts.iter().enumerate() {
+        let g = ops::argmax(&verify[j]) as u32;
+        if g != d {
+            return (j, g);
+        }
+    }
+    (drafts.len(), ops::argmax(&verify[drafts.len()]) as u32)
+}
+
+/// The drafting loop, batched across slots: draft step `j` feeds every
+/// slot still within its budget (`ks[i] > j`) through one
+/// weight-stationary pass on the draft engine, and extends that slot's
+/// proposal chain greedily. `cur0[i]` is slot `i`'s input token;
+/// `pending` holds each slot's committed-but-unmirrored catch-up tokens
+/// (drained here for every slot that drafts — they ride the FIRST draft
+/// pass as extra positions, costing no extra weight stream). The draft
+/// KV mirrors advance by `pending + ks[i]` positions. Returns the
+/// proposal lists (len `ks[i]` each).
+pub fn draft_tokens(
+    draft: &NativeEngine,
+    kv: &mut DraftKv,
+    ws: &mut EngineWs,
+    slots: &[usize],
+    pending: &mut [Vec<u32>],
+    cur0: &[u32],
+    ks: &[usize],
+) -> Vec<Vec<u32>> {
+    let n = slots.len();
+    debug_assert_eq!(n, cur0.len());
+    debug_assert_eq!(n, ks.len());
+    let k_max = ks.iter().copied().max().unwrap_or(0);
+    let mut drafts: Vec<Vec<u32>> = vec![Vec::new(); n];
+    if k_max == 0 {
+        return drafts;
+    }
+    let mut cur = cur0.to_vec();
+    // first draft pass: catch-up tokens + the input token per slot, as
+    // one multi-position group each
+    {
+        let mut sel: Vec<usize> = Vec::new();
+        let mut groups_store: Vec<Vec<u32>> = Vec::new();
+        for i in 0..n {
+            if ks[i] > 0 {
+                let mut g = std::mem::take(&mut pending[slots[i]]);
+                g.push(cur[i]);
+                sel.push(slots[i]);
+                groups_store.push(g);
+            }
+        }
+        let groups: Vec<&[u32]> = groups_store.iter().map(|g| g.as_slice()).collect();
+        let logits = kv.step_multi(draft, &sel, &groups, ws);
+        let mut li = 0usize;
+        for i in 0..n {
+            if ks[i] > 0 {
+                let t = ops::argmax(&logits[li]) as u32;
+                drafts[i].push(t);
+                cur[i] = t;
+                li += 1;
+            }
+        }
+    }
+    // remaining draft steps: single position per still-drafting slot
+    for j in 1..k_max {
+        let mut sel: Vec<usize> = Vec::new();
+        let mut toks: Vec<u32> = Vec::new();
+        for i in 0..n {
+            if ks[i] > j {
+                sel.push(slots[i]);
+                toks.push(cur[i]);
+            }
+        }
+        if sel.is_empty() {
+            break;
+        }
+        let logits = kv.step(draft, &sel, &toks, ws);
+        let mut li = 0usize;
+        for i in 0..n {
+            if ks[i] > j {
+                let t = ops::argmax(&logits[li]) as u32;
+                drafts[i].push(t);
+                cur[i] = t;
+                li += 1;
+            }
+        }
+    }
+    drafts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits_for(argmax: usize, vocab: usize) -> Vec<f32> {
+        let mut l = vec![0f32; vocab];
+        l[argmax] = 5.0;
+        l
+    }
+
+    #[test]
+    fn greedy_accept_full_partial_and_none() {
+        // verifier chain: argmax after t is 7, after 7 is 3, after 3 is 9
+        let verify = vec![logits_for(7, 16), logits_for(3, 16), logits_for(9, 16)];
+        // full acceptance: drafts match the chain, bonus token follows
+        assert_eq!(greedy_accept(&[7, 3], &verify), (2, 9));
+        // first mismatch: correction replaces the draft
+        assert_eq!(greedy_accept(&[7, 4], &verify), (1, 3));
+        assert_eq!(greedy_accept(&[6, 3], &verify), (0, 7));
+        // k = 0 degenerates to a plain greedy step
+        assert_eq!(greedy_accept(&[], &verify[..1]), (0, 7));
+    }
+}

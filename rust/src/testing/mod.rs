@@ -4,7 +4,13 @@
 //! runs a property over N generated cases and, on failure, retries with a
 //! simple halving shrink over the generator's `size` parameter to report a
 //! smaller counterexample. Coordinator invariants and quantization
-//! round-trip properties use this from `rust/tests/`.
+//! round-trip properties use this from `rust/tests/`. [`synth`] writes
+//! tiny quantized checkpoints so engine-level tests and benches run
+//! without build artifacts.
+
+pub mod synth;
+
+pub use synth::{synth_checkpoint, SynthSpec};
 
 use crate::util::Pcg64;
 

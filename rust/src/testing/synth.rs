@@ -1,0 +1,149 @@
+//! Synthesized tiny quantized checkpoints: artifact-free model fixtures
+//! for tests and benches.
+//!
+//! Writes a 4-bit group-wise "llamoid" checkpoint (optional sub-branch
+//! A/B and AWQ-style `col_scale`) into the system temp dir and loads it
+//! back as a [`WeightStore`] — no python build required. Used by
+//! `rust/tests/batched_decode.rs`, `rust/tests/spec_decode.rs` and the
+//! `microbench_kernels` speculative sweep.
+
+use crate::model::WeightStore;
+use crate::quant::formats::{f32_bytes, u32_bytes, Archive, Dtype};
+use crate::quant::groupwise;
+use crate::quant::pack::pack_codes;
+use crate::util::json::Json;
+use crate::util::Pcg64;
+
+/// Geometry + quantization knobs of a synthesized checkpoint.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthSpec {
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub group: usize,
+    /// 0 = no sub-branch tensors
+    pub rank: usize,
+    /// Scale of the random sub-branch A/B entries. 0.0 writes all-zero
+    /// A/B: the layer still *reads* the sub-branch (full weight
+    /// traffic) while contributing exactly nothing — the deterministic
+    /// full-acceptance fixture for speculative-decode tests.
+    pub sub_scale: f32,
+    pub col_scale: bool,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            d: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 96,
+            vocab: 50,
+            max_seq: 64,
+            group: 16,
+            rank: 4,
+            sub_scale: 0.05,
+            col_scale: false,
+        }
+    }
+}
+
+/// Write a tiny quantized llamoid checkpoint (4-bit groupwise) named by
+/// `tag` under the system temp dir and load it back. Deterministic for a
+/// given `(tag, spec)`.
+pub fn synth_checkpoint(tag: &str, spec: SynthSpec) -> WeightStore {
+    let SynthSpec { d, n_layers, n_heads, d_ff, vocab, max_seq, group, rank, sub_scale, col_scale } =
+        spec;
+    let dir = std::env::temp_dir().join("fbq_synth_ckpts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}.fbqw"));
+    let mut rng = Pcg64::seeded(0xbd0 ^ (d as u64) ^ ((rank as u64) << 8));
+    let mut tensors: Vec<(String, Dtype, Vec<usize>, Vec<u8>)> = Vec::new();
+
+    let randn = |rng: &mut Pcg64, n: usize, s: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * s).collect()
+    };
+    let tok_emb = randn(&mut rng, vocab * d, 0.5);
+    let lm_head = randn(&mut rng, vocab * d, 0.2);
+    tensors.push(("tok_emb".to_string(), Dtype::F32, vec![vocab, d], f32_bytes(&tok_emb)));
+    tensors.push(("lm_head".to_string(), Dtype::F32, vec![vocab, d], f32_bytes(&lm_head)));
+    let fnw: Vec<f32> = (0..d).map(|i| 1.0 + 0.01 * (i % 7) as f32).collect();
+    tensors.push(("final_norm.w".to_string(), Dtype::F32, vec![d], f32_bytes(&fnw)));
+
+    for l in 0..n_layers {
+        for nm in ["attn_norm", "mlp_norm"] {
+            let w: Vec<f32> = (0..d).map(|i| 1.0 + 0.02 * ((i + l) % 5) as f32).collect();
+            tensors.push((format!("l{l}.{nm}.w"), Dtype::F32, vec![d], f32_bytes(&w)));
+        }
+        for name in ["q", "k", "v", "o", "gate", "up", "down"] {
+            let (out, cin) = match name {
+                "q" | "k" | "v" | "o" => (d, d),
+                "gate" | "up" => (d_ff, d),
+                _ => (d, d_ff),
+            };
+            let prefix = format!("l{l}.{name}");
+            let w = randn(&mut rng, out * cin, 0.2);
+            let p = groupwise::quant_params(&w, out, cin, 4, group);
+            let codes = groupwise::quantize(&w, out, cin, &p);
+            let packed = pack_codes(&codes, out, cin);
+            tensors.push((
+                format!("{prefix}/codes_packed"),
+                Dtype::U32,
+                vec![out, cin / 8],
+                u32_bytes(&packed),
+            ));
+            tensors.push((
+                format!("{prefix}/scales"),
+                Dtype::F32,
+                vec![out, cin / group],
+                f32_bytes(&p.scales),
+            ));
+            tensors.push((
+                format!("{prefix}/zeros"),
+                Dtype::F32,
+                vec![out, cin / group],
+                f32_bytes(&p.zeros),
+            ));
+            if rank > 0 {
+                let a = randn(&mut rng, rank * cin, sub_scale);
+                let b = randn(&mut rng, out * rank, sub_scale);
+                tensors.push((format!("{prefix}/a"), Dtype::F32, vec![rank, cin], f32_bytes(&a)));
+                tensors.push((format!("{prefix}/b"), Dtype::F32, vec![out, rank], f32_bytes(&b)));
+            }
+            if col_scale {
+                let cs: Vec<f32> = (0..cin).map(|_| 0.5 + rng.next_f32()).collect();
+                tensors.push((
+                    format!("{prefix}/col_scale"),
+                    Dtype::F32,
+                    vec![cin],
+                    f32_bytes(&cs),
+                ));
+            }
+        }
+    }
+
+    let cfg = Json::obj(vec![
+        ("name", Json::from(tag)),
+        ("family", Json::from("llamoid")),
+        ("d_model", Json::from(d)),
+        ("n_layers", Json::from(n_layers)),
+        ("n_heads", Json::from(n_heads)),
+        ("d_ff", Json::from(d_ff)),
+        ("vocab", Json::from(vocab)),
+        ("max_seq", Json::from(max_seq)),
+        ("rope_theta", Json::from(10000.0f64)),
+    ]);
+    let meta = Json::obj(vec![
+        ("config", cfg),
+        ("scheme", Json::from("quant")),
+        ("method", Json::from("synthetic")),
+        ("bits", Json::from(4usize)),
+        ("group", Json::from(group)),
+        ("rank", Json::from(rank)),
+    ]);
+    Archive::write(&path, &tensors, &meta).unwrap();
+    WeightStore::load(&path).unwrap()
+}

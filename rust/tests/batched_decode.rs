@@ -7,124 +7,13 @@
 //! independent of the occupied-slot count.
 //!
 //! The tests synthesize tiny quantized checkpoints in a temp dir (no
-//! build artifacts required).
+//! build artifacts required) via `fbquant::testing::synth`.
 
 use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
 use fbquant::engine::{NativeEngine, SubMode};
 use fbquant::model::WeightStore;
 use fbquant::prop_assert_ok;
-use fbquant::quant::formats::{f32_bytes, u32_bytes, Archive, Dtype};
-use fbquant::quant::groupwise;
-use fbquant::quant::pack::pack_codes;
-use fbquant::testing::check;
-use fbquant::util::json::Json;
-use fbquant::util::Pcg64;
-
-/// Write a tiny quantized llamoid checkpoint (4-bit groupwise, optional
-/// sub-branch + col_scale) and load it back as a `WeightStore`.
-#[allow(clippy::too_many_arguments)]
-fn synth_store(
-    tag: &str,
-    d: usize,
-    n_layers: usize,
-    n_heads: usize,
-    d_ff: usize,
-    vocab: usize,
-    max_seq: usize,
-    group: usize,
-    rank: usize,
-    col_scale: bool,
-) -> WeightStore {
-    let dir = std::env::temp_dir().join("fbq_batched_decode");
-    std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join(format!("{tag}.fbqw"));
-    let mut rng = Pcg64::seeded(0xbd0 ^ (d as u64) ^ ((rank as u64) << 8));
-    let mut tensors: Vec<(String, Dtype, Vec<usize>, Vec<u8>)> = Vec::new();
-
-    let randn = |rng: &mut Pcg64, n: usize, s: f32| -> Vec<f32> {
-        (0..n).map(|_| rng.normal() as f32 * s).collect()
-    };
-    let tok_emb = randn(&mut rng, vocab * d, 0.5);
-    let lm_head = randn(&mut rng, vocab * d, 0.2);
-    tensors.push(("tok_emb".to_string(), Dtype::F32, vec![vocab, d], f32_bytes(&tok_emb)));
-    tensors.push(("lm_head".to_string(), Dtype::F32, vec![vocab, d], f32_bytes(&lm_head)));
-    let fnw: Vec<f32> = (0..d).map(|i| 1.0 + 0.01 * (i % 7) as f32).collect();
-    tensors.push(("final_norm.w".to_string(), Dtype::F32, vec![d], f32_bytes(&fnw)));
-
-    for l in 0..n_layers {
-        for nm in ["attn_norm", "mlp_norm"] {
-            let w: Vec<f32> = (0..d).map(|i| 1.0 + 0.02 * ((i + l) % 5) as f32).collect();
-            tensors.push((format!("l{l}.{nm}.w"), Dtype::F32, vec![d], f32_bytes(&w)));
-        }
-        for name in ["q", "k", "v", "o", "gate", "up", "down"] {
-            let (out, cin) = match name {
-                "q" | "k" | "v" | "o" => (d, d),
-                "gate" | "up" => (d_ff, d),
-                _ => (d, d_ff),
-            };
-            let prefix = format!("l{l}.{name}");
-            let w = randn(&mut rng, out * cin, 0.2);
-            let p = groupwise::quant_params(&w, out, cin, 4, group);
-            let codes = groupwise::quantize(&w, out, cin, &p);
-            let packed = pack_codes(&codes, out, cin);
-            tensors.push((
-                format!("{prefix}/codes_packed"),
-                Dtype::U32,
-                vec![out, cin / 8],
-                u32_bytes(&packed),
-            ));
-            tensors.push((
-                format!("{prefix}/scales"),
-                Dtype::F32,
-                vec![out, cin / group],
-                f32_bytes(&p.scales),
-            ));
-            tensors.push((
-                format!("{prefix}/zeros"),
-                Dtype::F32,
-                vec![out, cin / group],
-                f32_bytes(&p.zeros),
-            ));
-            if rank > 0 {
-                let a = randn(&mut rng, rank * cin, 0.05);
-                let b = randn(&mut rng, out * rank, 0.05);
-                tensors.push((format!("{prefix}/a"), Dtype::F32, vec![rank, cin], f32_bytes(&a)));
-                tensors.push((format!("{prefix}/b"), Dtype::F32, vec![out, rank], f32_bytes(&b)));
-            }
-            if col_scale {
-                let cs: Vec<f32> = (0..cin).map(|_| 0.5 + rng.next_f32()).collect();
-                tensors.push((
-                    format!("{prefix}/col_scale"),
-                    Dtype::F32,
-                    vec![cin],
-                    f32_bytes(&cs),
-                ));
-            }
-        }
-    }
-
-    let cfg = Json::obj(vec![
-        ("name", Json::from(tag)),
-        ("family", Json::from("llamoid")),
-        ("d_model", Json::from(d)),
-        ("n_layers", Json::from(n_layers)),
-        ("n_heads", Json::from(n_heads)),
-        ("d_ff", Json::from(d_ff)),
-        ("vocab", Json::from(vocab)),
-        ("max_seq", Json::from(max_seq)),
-        ("rope_theta", Json::from(10000.0f64)),
-    ]);
-    let meta = Json::obj(vec![
-        ("config", cfg),
-        ("scheme", Json::from("quant")),
-        ("method", Json::from("synthetic")),
-        ("bits", Json::from(4usize)),
-        ("group", Json::from(group)),
-        ("rank", Json::from(rank)),
-    ]);
-    Archive::write(&path, &tensors, &meta).unwrap();
-    WeightStore::load(&path).unwrap()
-}
+use fbquant::testing::{check, synth_checkpoint, SynthSpec};
 
 fn mk_backend(store: &WeightStore, paged: bool, sequential: bool) -> NativeBackend {
     let engine = NativeEngine::from_store(store, SubMode::Fused).unwrap();
@@ -141,8 +30,10 @@ fn mk_backend(store: &WeightStore, paged: bool, sequential: bool) -> NativeBacke
 #[test]
 fn batched_decode_matches_sequential_at_fixed_occupancies() {
     for &(rank, cs) in &[(0usize, false), (4usize, true)] {
-        let store =
-            synth_store(&format!("fix_r{rank}_cs{cs}"), 64, 2, 4, 96, 50, 64, 16, rank, cs);
+        let store = synth_checkpoint(
+            &format!("fix_r{rank}_cs{cs}"),
+            SynthSpec { rank, col_scale: cs, ..SynthSpec::default() },
+        );
         for paged in [false, true] {
             for m in [1usize, 3, 8] {
                 let mut bb = mk_backend(&store, paged, false);
@@ -179,8 +70,10 @@ fn batched_decode_matches_sequential_at_fixed_occupancies() {
 
 #[test]
 fn prop_batched_decode_bit_identical_over_random_interleavings() {
-    let store_plain = synth_store("prop_plain", 64, 2, 4, 96, 50, 64, 16, 0, false);
-    let store_sub = synth_store("prop_sub", 64, 2, 4, 96, 50, 64, 16, 4, true);
+    let store_plain =
+        synth_checkpoint("prop_plain", SynthSpec { rank: 0, ..SynthSpec::default() });
+    let store_sub =
+        synth_checkpoint("prop_sub", SynthSpec { rank: 4, col_scale: true, ..SynthSpec::default() });
     for (store, tag) in [(&store_plain, "plain"), (&store_sub, "sub")] {
         for paged in [false, true] {
             prop_assert_ok!(check(&format!("batched_equiv_{tag}_{paged}"), 8, |g| {
@@ -255,9 +148,73 @@ fn prop_batched_decode_bit_identical_over_random_interleavings() {
 }
 
 #[test]
+fn batched_group_prefill_matches_per_slot_prefill() {
+    // NativeBackend::prefill_slots runs a whole admission group (mixed
+    // prompt lengths) through ONE multi-position pass; logits must be
+    // bit-identical to per-slot prefill, and the slots must be fully
+    // decodable afterwards
+    let store = synth_checkpoint(
+        "group_prefill",
+        SynthSpec { rank: 4, col_scale: true, ..SynthSpec::default() },
+    );
+    for paged in [false, true] {
+        let mut ba = mk_backend(&store, paged, false);
+        let mut bb = mk_backend(&store, paged, false);
+        let mut sa = ba.open_batch(4).unwrap();
+        let mut sb = bb.open_batch(4).unwrap();
+        let prompts: Vec<Vec<u32>> = (0..3)
+            .map(|s| (0..4 + 3 * s).map(|i| ((s * 7 + i * 5) % 50) as u32).collect())
+            .collect();
+        let admissions: Vec<(usize, &[u32])> =
+            prompts.iter().enumerate().map(|(s, p)| (s, p.as_slice())).collect();
+        let group = ba.prefill_slots(&mut sa, &admissions).unwrap();
+        let mut per_slot = Vec::with_capacity(admissions.len());
+        for &(s, p) in &admissions {
+            per_slot.push(bb.prefill_slot(&mut sb, s, p).unwrap());
+        }
+        assert_eq!(group, per_slot, "group prefill must be bit-identical (paged={paged})");
+        let toks: Vec<SlotToken> = group
+            .iter()
+            .enumerate()
+            .map(|(s, lg)| SlotToken { slot: s, token: fbquant::tensor::ops::argmax(lg) as u32 })
+            .collect();
+        let la = ba.decode(&mut sa, &toks).unwrap();
+        let lb = bb.decode(&mut sb, &toks).unwrap();
+        assert_eq!(la, lb, "decode after group prefill diverged (paged={paged})");
+    }
+}
+
+#[test]
+fn group_prefill_exhaustion_unwinds_cleanly() {
+    // a pool too small for the group: admission must fail as a unit,
+    // release every page it mapped, and leave the surface usable
+    let store = synth_checkpoint("group_shed", SynthSpec { rank: 0, ..SynthSpec::default() });
+    let engine = NativeEngine::from_store(&store, SubMode::Fused).unwrap();
+    let mut b = NativeBackend::new(engine, "shed").with_max_slots(4).with_kv_pool(4, 3);
+    let mut st = b.open_batch(4).unwrap();
+    let prompts: Vec<Vec<u32>> =
+        (0..2).map(|s| (0..10).map(|i| ((s * 7 + i) % 50) as u32).collect()).collect();
+    let admissions: Vec<(usize, &[u32])> =
+        prompts.iter().enumerate().map(|(s, p)| (s, p.as_slice())).collect();
+    // 2 x 10 tokens need 6 four-position pages; the pool has 3
+    let err = b.prefill_slots(&mut st, &admissions).unwrap_err();
+    assert!(err.to_string().contains("admitting"), "unexpected error: {err}");
+    let stats = b.kv_stats(&st).expect("paged backend reports stats");
+    assert_eq!(stats.pages_in_use, 0, "failed group admission must release all pages");
+    // a single admission that fits still goes through afterwards
+    let one: Vec<(usize, &[u32])> = vec![(0, prompts[0].as_slice())];
+    b.prefill_slots(&mut st, &one).unwrap();
+    let stats = b.kv_stats(&st).expect("paged backend reports stats");
+    assert_eq!(stats.pages_in_use, 3);
+}
+
+#[test]
 fn batched_weight_traffic_is_slot_count_independent() {
     // sizes chosen so weight bytes dominate activation bytes
-    let store = synth_store("traffic", 128, 2, 4, 256, 96, 64, 32, 8, false);
+    let store = synth_checkpoint(
+        "traffic",
+        SynthSpec { d: 128, d_ff: 256, vocab: 96, group: 32, rank: 8, ..SynthSpec::default() },
+    );
     let run = |m: usize, sequential: bool| -> (u64, u64) {
         let mut b = mk_backend(&store, true, sequential);
         let mut state = b.open_batch(8).unwrap();

@@ -187,6 +187,64 @@ fn refcounts_track_sharing_and_release() {
 }
 
 #[test]
+fn truncate_interacts_safely_with_prefix_sharing() {
+    // speculative rollback (KvPagePool::truncate_kv) on views that share
+    // pages with the prefix cache: releases drop one reference only,
+    // cached entries stay adoptable, and writes past a shrink point on a
+    // still-shared boundary page go through copy-on-write
+    let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 4, 8));
+    let prompt: Vec<u32> = (0..8).collect();
+    let mut kv1 = pool.new_kv(16);
+    pool.ensure_range(&mut kv1, 0, 8).unwrap();
+    {
+        let mut bound = PagedKvRef { pool: &mut pool, kv: &mut kv1 };
+        bound.advance(8);
+    }
+    pool.register_prefix(&kv1, &prompt);
+    let pages: Vec<u32> = kv1.page_ids().to_vec();
+    assert_eq!(pool.page_refcount(pages[0]), 3, "slot + k=1 + k=2 cache entries");
+    assert_eq!(pool.page_refcount(pages[1]), 2, "slot + k=2 cache entry");
+
+    // rollback 8 -> 4: the dropped page keeps the cache's reference and
+    // does NOT return to the free list
+    pool.truncate_kv(&mut kv1, 4);
+    assert_eq!(kv1.len(), 4);
+    assert_eq!(kv1.n_pages(), 1);
+    assert_eq!(pool.page_refcount(pages[0]), 3, "kept page untouched");
+    assert_eq!(pool.page_refcount(pages[1]), 1, "cache still holds the dropped page");
+    assert_eq!(pool.pages_in_use(), 2, "cached page stays resident after rollback");
+
+    // the cached prefix remains adoptable after the shrink
+    let longer: Vec<u32> = (0..9).collect();
+    let mut kv2 = pool.new_kv(16);
+    let reused = pool.adopt_prefix(&mut kv2, &longer);
+    assert_eq!(reused, 8, "shrinking one view must not invalidate the cache");
+    assert_eq!(pool.page_refcount(pages[0]), 4);
+    assert_eq!(pool.page_refcount(pages[1]), 2);
+
+    // rollback the adopted view onto the shared boundary page, then
+    // extend past the shrink point: the write target is still shared, so
+    // ensure_range must privatize it
+    pool.truncate_kv(&mut kv2, 2);
+    assert_eq!(kv2.n_pages(), 1);
+    let cow_before = pool.stats().cow_copies;
+    pool.ensure_range(&mut kv2, 2, 3).unwrap();
+    assert_eq!(
+        pool.stats().cow_copies,
+        cow_before + 1,
+        "write into a shared boundary page after rollback must copy-on-write"
+    );
+    assert_ne!(kv2.page_ids()[0], pages[0], "privatized away from the cached page");
+    pool.release_kv(&mut kv2);
+
+    // re-extending the truncated original maps a fresh page — the
+    // cache's dropped page is never silently re-adopted
+    pool.ensure_range(&mut kv1, 4, 6).unwrap();
+    assert_eq!(kv1.n_pages(), 2);
+    assert_ne!(kv1.page_ids()[1], pages[1]);
+}
+
+#[test]
 fn cow_preserves_original_and_copies_prefix() {
     // a prompt of exactly one page admitted twice: the second admission
     // adopts the shared page and must privatize it before rewriting the

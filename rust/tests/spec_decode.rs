@@ -1,0 +1,415 @@
+//! Self-speculative decoding equivalence and traffic tests.
+//!
+//! The hard invariant: **greedy speculative decode is token-identical to
+//! non-speculative greedy decode** — for every draft depth K ∈ {1, 2, 4},
+//! both draft modes (bare branch / 2-bit shadow), dense and paged KV,
+//! fixed occupancies and random admission/release interleavings. The
+//! plain backend is stepped one token at a time and must reproduce the
+//! speculative backend's committed stream exactly.
+//!
+//! Traffic invariants: the verifier's weight bytes per step do not scale
+//! with K (all K+1 positions ride one weight-stationary pass), and with
+//! acceptance ≥ 1 token/step the combined (target + draft) weight bytes
+//! per committed token beat the K=0 baseline.
+//!
+//! All fixtures are synthesized tiny checkpoints
+//! (`fbquant::testing::synth`) — no build artifacts needed.
+
+use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
+use fbquant::coordinator::request::{GenRequest, SamplingParams};
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::model::WeightStore;
+use fbquant::prop_assert_ok;
+use fbquant::spec::{DraftMode, SpeculativeConfig};
+use fbquant::testing::{check, synth_checkpoint, SynthSpec};
+
+fn argmax(l: &[f32]) -> u32 {
+    fbquant::tensor::ops::argmax(l) as u32
+}
+
+fn plain_backend(store: &WeightStore, paged: bool) -> NativeBackend {
+    let engine = NativeEngine::from_store(store, SubMode::Fused).unwrap();
+    let mut b = NativeBackend::new(engine, "plain").with_max_slots(4);
+    if !paged {
+        b = b.with_dense();
+    }
+    b
+}
+
+fn spec_backend(store: &WeightStore, paged: bool, k: usize, draft: DraftMode) -> NativeBackend {
+    let engine = NativeEngine::from_store(store, SubMode::Fused).unwrap();
+    let mut b = NativeBackend::new(engine, "spec")
+        .with_max_slots(4)
+        .with_speculative(SpeculativeConfig { k, draft });
+    if !paged {
+        b = b.with_dense();
+    }
+    b
+}
+
+/// Advance the plain backend by `n` greedy single-token steps on `slot`,
+/// appending to its stream.
+fn plain_steps(
+    pb: &mut NativeBackend,
+    ps: &mut fbquant::coordinator::backend::BatchState,
+    slot: usize,
+    n: usize,
+    last: &mut u32,
+    stream: &mut Vec<u32>,
+) {
+    for _ in 0..n {
+        let lg = pb.decode(ps, &[SlotToken { slot, token: *last }]).unwrap();
+        let t = argmax(&lg[0]);
+        stream.push(t);
+        *last = t;
+    }
+}
+
+#[test]
+fn speculative_decode_is_token_identical_to_plain_greedy() {
+    let store = synth_checkpoint(
+        "spec_fixed",
+        SynthSpec { rank: 4, col_scale: true, ..SynthSpec::default() },
+    );
+    for paged in [false, true] {
+        for &k in &[1usize, 2, 4] {
+            for draft in [DraftMode::NoSub, DraftMode::Shadow { bits: 2 }] {
+                let m = 3usize;
+                let mut pb = plain_backend(&store, paged);
+                let mut sb = spec_backend(&store, paged, k, draft);
+                let mut ps = pb.open_batch(m).unwrap();
+                let mut ss = sb.open_batch(m).unwrap();
+                let mut last_p = vec![0u32; m];
+                let mut cur_s = vec![0u32; m];
+                let mut stream_p: Vec<Vec<u32>> = vec![Vec::new(); m];
+                let mut stream_s: Vec<Vec<u32>> = vec![Vec::new(); m];
+                for slot in 0..m {
+                    let prompt: Vec<u32> =
+                        (0..6 + slot).map(|i| ((slot * 11 + i * 7) % 50) as u32).collect();
+                    let lp = pb.prefill_slot(&mut ps, slot, &prompt).unwrap();
+                    let ls = sb.prefill_slot(&mut ss, slot, &prompt).unwrap();
+                    assert_eq!(lp, ls, "prefill diverged (k={k} slot={slot})");
+                    last_p[slot] = argmax(&lp);
+                    cur_s[slot] = argmax(&ls);
+                }
+                for step in 0..5 {
+                    let toks: Vec<SlotToken> =
+                        (0..m).map(|s| SlotToken { slot: s, token: cur_s[s] }).collect();
+                    let steps = sb.decode_speculative(&mut ss, &toks).unwrap();
+                    assert_eq!(steps.len(), m);
+                    for (slot, sp) in steps.iter().enumerate() {
+                        assert!(sp.proposed <= k, "over-proposed");
+                        assert!(sp.accepted.len() <= sp.proposed, "over-accepted");
+                        stream_s[slot].extend_from_slice(&sp.accepted);
+                        stream_s[slot].push(sp.next);
+                        cur_s[slot] = sp.next;
+                        plain_steps(
+                            &mut pb,
+                            &mut ps,
+                            slot,
+                            sp.accepted.len() + 1,
+                            &mut last_p[slot],
+                            &mut stream_p[slot],
+                        );
+                        assert_eq!(
+                            stream_p[slot], stream_s[slot],
+                            "streams diverged (paged={paged} k={k} draft={draft:?} \
+                             slot={slot} step={step})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_speculative_token_identical_over_random_interleavings() {
+    let store = synth_checkpoint(
+        "spec_prop",
+        SynthSpec { rank: 4, col_scale: true, ..SynthSpec::default() },
+    );
+    for draft in [DraftMode::NoSub, DraftMode::Shadow { bits: 2 }] {
+        for paged in [false, true] {
+            prop_assert_ok!(check(&format!("spec_equiv_{paged}_{draft:?}"), 6, |g| {
+                let cap = 3usize;
+                let k = *g.pick(&[1usize, 2, 4]);
+                let mut pb = plain_backend(&store, paged);
+                let mut sb = spec_backend(&store, paged, k, draft);
+                let mut ps = pb.open_batch(cap).map_err(|e| e.to_string())?;
+                let mut ss = sb.open_batch(cap).map_err(|e| e.to_string())?;
+                // per occupied slot: (plain last, spec cur, both streams)
+                let mut live: Vec<Option<(u32, u32, Vec<u32>, Vec<u32>)>> = (0..cap)
+                    .map(|_| None)
+                    .collect();
+                let n_ops = g.usize_range(6, 16);
+                for _ in 0..n_ops {
+                    match g.rng.below(4) {
+                        0 | 1 => {
+                            // admit into the first free slot, if any
+                            if let Some(slot) = (0..cap).find(|&s| live[s].is_none()) {
+                                let plen = g.usize_range(1, 6);
+                                let prompt: Vec<u32> =
+                                    (0..plen).map(|_| g.rng.below(50) as u32).collect();
+                                let lp = pb
+                                    .prefill_slot(&mut ps, slot, &prompt)
+                                    .map_err(|e| e.to_string())?;
+                                let ls = sb
+                                    .prefill_slot(&mut ss, slot, &prompt)
+                                    .map_err(|e| e.to_string())?;
+                                if lp != ls {
+                                    return Err(format!("prefill diverged at slot {slot}"));
+                                }
+                                let t = argmax(&lp);
+                                live[slot] = Some((t, t, Vec::new(), Vec::new()));
+                            }
+                        }
+                        2 => {
+                            // release a random occupied slot
+                            let occ: Vec<usize> =
+                                (0..cap).filter(|&s| live[s].is_some()).collect();
+                            if !occ.is_empty() {
+                                let s = occ[g.rng.below(occ.len())];
+                                pb.release_slot(&mut ps, s).map_err(|e| e.to_string())?;
+                                sb.release_slot(&mut ss, s).map_err(|e| e.to_string())?;
+                                live[s] = None;
+                            }
+                        }
+                        _ => {
+                            // retire long streams so max_seq stays distant,
+                            // then one speculative step over the rest
+                            for s in 0..cap {
+                                let long = matches!(&live[s], Some((_, _, sp, _)) if sp.len() >= 20);
+                                if long {
+                                    pb.release_slot(&mut ps, s).map_err(|e| e.to_string())?;
+                                    sb.release_slot(&mut ss, s).map_err(|e| e.to_string())?;
+                                    live[s] = None;
+                                }
+                            }
+                            let toks: Vec<SlotToken> = (0..cap)
+                                .filter_map(|s| {
+                                    live[s]
+                                        .as_ref()
+                                        .map(|(_, cur, _, _)| SlotToken { slot: s, token: *cur })
+                                })
+                                .collect();
+                            if toks.is_empty() {
+                                continue;
+                            }
+                            let steps =
+                                sb.decode_speculative(&mut ss, &toks).map_err(|e| e.to_string())?;
+                            for (st, sp) in toks.iter().zip(&steps) {
+                                let (last_p, cur_s, stream_p, stream_s) =
+                                    live[st.slot].as_mut().expect("stepped slot is live");
+                                stream_s.extend_from_slice(&sp.accepted);
+                                stream_s.push(sp.next);
+                                *cur_s = sp.next;
+                                for _ in 0..sp.accepted.len() + 1 {
+                                    let lg = pb
+                                        .decode(&mut ps, &[SlotToken { slot: st.slot, token: *last_p }])
+                                        .map_err(|e| e.to_string())?;
+                                    let t = argmax(&lg[0]);
+                                    stream_p.push(t);
+                                    *last_p = t;
+                                }
+                                if stream_p != stream_s {
+                                    return Err(format!(
+                                        "streams diverged at slot {} (k={k})",
+                                        st.slot
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+    }
+}
+
+#[test]
+fn nosub_draft_on_sub_free_model_accepts_every_proposal() {
+    // rank 0: the bare branch IS the model, so the draft chain equals
+    // the verifier chain and every proposal must be accepted
+    let store = synth_checkpoint("spec_rank0", SynthSpec { rank: 0, ..SynthSpec::default() });
+    let mut sb = spec_backend(&store, true, 4, DraftMode::NoSub);
+    let mut ss = sb.open_batch(2).unwrap();
+    let mut cur = vec![0u32; 2];
+    for slot in 0..2 {
+        let prompt: Vec<u32> = (0..6).map(|i| ((slot * 13 + i * 5) % 50) as u32).collect();
+        let lg = sb.prefill_slot(&mut ss, slot, &prompt).unwrap();
+        cur[slot] = argmax(&lg);
+    }
+    for _ in 0..4 {
+        let toks: Vec<SlotToken> =
+            (0..2).map(|s| SlotToken { slot: s, token: cur[s] }).collect();
+        let steps = sb.decode_speculative(&mut ss, &toks).unwrap();
+        for (slot, sp) in steps.iter().enumerate() {
+            assert_eq!(sp.proposed, 4, "full draft window expected");
+            assert_eq!(
+                sp.accepted.len(),
+                4,
+                "a sub-free model must accept its own bare-branch drafts"
+            );
+            cur[slot] = sp.next;
+        }
+    }
+}
+
+#[test]
+fn verifier_weight_traffic_is_independent_of_k() {
+    let store = synth_checkpoint(
+        "spec_traffic",
+        SynthSpec { d: 128, d_ff: 256, vocab: 96, group: 32, rank: 8, ..SynthSpec::default() },
+    );
+    let run = |k: usize| -> (u64, usize) {
+        let mut b = spec_backend(&store, true, k, DraftMode::NoSub);
+        let mut st = b.open_batch(2).unwrap();
+        let mut cur = vec![0u32; 2];
+        for slot in 0..2 {
+            let prompt: Vec<u32> = (0..6).map(|i| ((slot * 13 + i * 5) % 96) as u32).collect();
+            let lg = b.prefill_slot(&mut st, slot, &prompt).unwrap();
+            cur[slot] = argmax(&lg);
+        }
+        b.reset_traffic();
+        let mut committed = 0usize;
+        for _ in 0..4 {
+            let toks: Vec<SlotToken> =
+                (0..2).map(|s| SlotToken { slot: s, token: cur[s] }).collect();
+            let steps = b.decode_speculative(&mut st, &toks).unwrap();
+            for (slot, sp) in steps.iter().enumerate() {
+                committed += sp.accepted.len() + 1;
+                cur[slot] = sp.next;
+            }
+        }
+        (b.traffic().weight_bytes, committed)
+    };
+    let (w1, _) = run(1);
+    let (w2, _) = run(2);
+    let (w4, c4) = run(4);
+    assert_eq!(w1, w2, "verifier weight bytes per step must not scale with K");
+    assert_eq!(w1, w4, "verifier weight bytes per step must not scale with K");
+    assert!(c4 >= 8, "4 steps over 2 slots commit at least one token each");
+}
+
+#[test]
+fn weight_bytes_per_committed_token_beat_the_k0_baseline() {
+    // all-zero A/B: the target still streams the sub-branch (full
+    // verifier traffic) but the bare-branch draft chain matches it
+    // exactly → acceptance is total, and the speculative win is the
+    // deterministic (W_target + K·W_draft) / (K+1) < W_target
+    let store = synth_checkpoint(
+        "spec_wbpt",
+        SynthSpec {
+            d: 128,
+            d_ff: 256,
+            vocab: 96,
+            group: 32,
+            rank: 8,
+            sub_scale: 0.0,
+            ..SynthSpec::default()
+        },
+    );
+    // K=0 baseline: plain greedy decode, weight bytes per token
+    let mut pb = plain_backend(&store, true);
+    let mut ps = pb.open_batch(1).unwrap();
+    let prompt: Vec<u32> = (0..6).map(|i| ((i * 5) % 96) as u32).collect();
+    let lg = pb.prefill_slot(&mut ps, 0, &prompt).unwrap();
+    let mut last = argmax(&lg);
+    pb.reset_traffic();
+    let base_steps = 8usize;
+    for _ in 0..base_steps {
+        let lg = pb.decode(&mut ps, &[SlotToken { slot: 0, token: last }]).unwrap();
+        last = argmax(&lg[0]);
+    }
+    let base_wbpt = pb.traffic().weight_bytes as f64 / base_steps as f64;
+
+    let k = 4usize;
+    let mut sb = spec_backend(&store, true, k, DraftMode::NoSub);
+    let mut ss = sb.open_batch(1).unwrap();
+    let lg = sb.prefill_slot(&mut ss, 0, &prompt).unwrap();
+    let mut cur = argmax(&lg);
+    sb.reset_traffic();
+    let mut committed = 0usize;
+    let mut proposed = 0usize;
+    let mut accepted = 0usize;
+    let spec_steps = 4usize;
+    for _ in 0..spec_steps {
+        let steps = sb.decode_speculative(&mut ss, &[SlotToken { slot: 0, token: cur }]).unwrap();
+        let sp = &steps[0];
+        committed += sp.accepted.len() + 1;
+        proposed += sp.proposed;
+        accepted += sp.accepted.len();
+        cur = sp.next;
+    }
+    assert_eq!(accepted, proposed, "zero sub-branch ⇒ total acceptance");
+    assert!(
+        accepted as f64 / spec_steps as f64 >= 1.0,
+        "mean acceptance below 1 token/step"
+    );
+    let spec_weight =
+        sb.traffic().weight_bytes + sb.draft_traffic().expect("speculative backend").weight_bytes;
+    let spec_wbpt = spec_weight as f64 / committed as f64;
+    assert!(
+        spec_wbpt < base_wbpt,
+        "speculative weight bytes/token {spec_wbpt:.0} not below baseline {base_wbpt:.0}"
+    );
+}
+
+#[test]
+fn coordinator_speculative_serving_is_token_identical_with_metrics() {
+    let store = synth_checkpoint("spec_serve", SynthSpec { rank: 4, ..SynthSpec::default() });
+    let make_reqs = |n: usize| -> Vec<GenRequest> {
+        (0..n)
+            .map(|i| {
+                let plen = 4 + (i % 3) * 3;
+                let prompt: Vec<u32> =
+                    (0..plen).map(|j| ((i * 17 + j * 5) % 50) as u32).collect();
+                GenRequest::new(i as u64 + 1, prompt, 6 + (i % 5) * 3)
+            })
+            .collect()
+    };
+    let n = 7usize;
+    let mut pb = plain_backend(&store, true);
+    let (rp, _) =
+        Coordinator::run_closed_loop(&mut pb, make_reqs(n), &CoordinatorConfig::default())
+            .unwrap();
+    let mut sb = spec_backend(&store, true, 2, DraftMode::NoSub);
+    let (rs, ms) =
+        Coordinator::run_closed_loop(&mut sb, make_reqs(n), &CoordinatorConfig::default())
+            .unwrap();
+    assert_eq!(rp.len(), n);
+    assert_eq!(rs.len(), n);
+    for (a, b) in rp.iter().zip(&rs) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "speculative serving changed greedy output");
+    }
+    assert!(ms.spec_steps > 0, "speculative path never engaged");
+    assert!(ms.spec_tokens_per_step() >= 1.0);
+    assert!(ms.weight_bytes > 0, "weight traffic not surfaced to metrics");
+}
+
+#[test]
+fn mixed_greedy_and_sampled_requests_coexist_on_a_speculative_backend() {
+    let store = synth_checkpoint("spec_mixed", SynthSpec { rank: 4, ..SynthSpec::default() });
+    let mut sb = spec_backend(&store, true, 2, DraftMode::NoSub);
+    let mut reqs = Vec::new();
+    for i in 0..4u64 {
+        let prompt: Vec<u32> = (0..6).map(|j| ((i as usize * 9 + j * 5) % 50) as u32).collect();
+        let mut r = GenRequest::new(i + 1, prompt, 8);
+        if i % 2 == 1 {
+            // sampled requests take the plain decode path per slot
+            r.params = SamplingParams { temperature: 0.8, top_k: 8, seed: 7 };
+        }
+        reqs.push(r);
+    }
+    let (rs, ms) =
+        Coordinator::run_closed_loop(&mut sb, reqs, &CoordinatorConfig::default()).unwrap();
+    assert_eq!(rs.len(), 4);
+    for r in &rs {
+        assert_eq!(r.tokens.len(), 8, "request {} lost tokens", r.id);
+    }
+    assert!(ms.spec_steps > 0, "greedy slots should take the speculative path");
+}
