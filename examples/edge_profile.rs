@@ -19,7 +19,10 @@ fn main() -> anyhow::Result<()> {
     let prompt: Vec<u32> = stream.tokens()[..64].iter().map(|&b| b as u32).collect();
     let decode = 48;
 
-    println!("=== edge profile: {model} (prompt {} tokens, {decode} generated) ===\n", prompt.len());
+    println!(
+        "=== edge profile: {model} (prompt {} tokens, {decode} generated) ===\n",
+        prompt.len()
+    );
     println!(
         "{:<18} {:>12} {:>11} {:>11} {:>14}",
         "config", "weights", "decode tk/s", "ttft(ms)", "bytes/token"

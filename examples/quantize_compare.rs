@@ -29,7 +29,9 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{}", "-".repeat(70));
 
-    for method in ["rtn", "gptq", "awq", "omniquant", "loftq", "svdquant", "caldera", "eora", "fbquant"] {
+    let methods =
+        ["rtn", "gptq", "awq", "omniquant", "loftq", "svdquant", "caldera", "eora", "fbquant"];
+    for method in methods {
         let path = WeightStore::path_for(&artifacts, &model, method, bits);
         let Ok(store) = WeightStore::load(&path) else {
             println!("{method:<11} (missing)");
@@ -53,7 +55,8 @@ fn main() -> anyhow::Result<()> {
                 let w_eff = q.effective_dense();
                 let sigma = match lw {
                     LinearWeights::Quant { a: Some(a), b: Some(b), rank, .. } => {
-                        subbranch::SubBranch::new(a.clone(), b.clone(), *rank, cin, out).dense_sigma()
+                        subbranch::SubBranch::new(a.clone(), b.clone(), *rank, cin, out)
+                            .dense_sigma()
                     }
                     _ => vec![0f32; out * cin],
                 };

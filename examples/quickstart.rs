@@ -42,10 +42,16 @@ fn main() -> anyhow::Result<()> {
 
     // 3) generate a few continuations
     let tok = ByteTokenizer::default();
-    for prompt in ["= sea =\nthe salty crab ", "= winter =\nthe pale snow ", "two plus three equals "] {
+    let prompts =
+        ["= sea =\nthe salty crab ", "= winter =\nthe pale snow ", "two plus three equals "];
+    for prompt in prompts {
         let req = GenRequest::new(0, tok.encode(prompt), 40);
         let (mut responses, _metrics) =
-            Coordinator::run_closed_loop(backend.as_mut(), vec![req], &CoordinatorConfig::default())?;
+            Coordinator::run_closed_loop(
+                backend.as_mut(),
+                vec![req],
+                &CoordinatorConfig::default(),
+            )?;
         let r = responses.remove(0);
         println!(
             "\n> {prompt}{}\n  [{:.1} tk/s decode, ttft {:.1} ms]",

@@ -38,7 +38,8 @@ fn main() -> anyhow::Result<()> {
         },
     );
 
-    let store = WeightStore::load(&WeightStore::path_for(&artifacts, "llamoid-tiny", "fbquant", 4))?;
+    let store =
+        WeightStore::load(&WeightStore::path_for(&artifacts, "llamoid-tiny", "fbquant", 4))?;
     let handle = Coordinator::spawn(
         move || -> anyhow::Result<Box<dyn Backend>> {
             Ok(Box::new(NativeBackend::new(
@@ -98,7 +99,8 @@ fn main() -> anyhow::Result<()> {
         metrics.pools_opened,
     );
     println!(
-        "streamed ttft p50 {:.0}ms p95 {:.0}ms | ttft p50 {:.0}ms p95 {:.0}ms | e2e p50 {:.0}ms p95 {:.0}ms",
+        "streamed ttft p50 {:.0}ms p95 {:.0}ms | ttft p50 {:.0}ms p95 {:.0}ms | \
+         e2e p50 {:.0}ms p95 {:.0}ms",
         fbquant::util::percentile(&client_ttfts, 50.0),
         fbquant::util::percentile(&client_ttfts, 95.0),
         fbquant::util::percentile(&ttfts, 50.0),

@@ -83,6 +83,9 @@ fn main() -> anyhow::Result<()> {
             if all_bounded { "yes" } else { "NO" }
         );
     }
-    println!("\nexpected: rtn + fbquant bounded; conventional sub-branch methods exceed the grid bound.");
+    println!(
+        "\nexpected: rtn + fbquant bounded; conventional sub-branch methods \
+         exceed the grid bound."
+    );
     Ok(())
 }

@@ -46,8 +46,11 @@ fn main() -> anyhow::Result<()> {
     let prompt: Vec<u32> = stream.tokens()[..128].iter().map(|&b| b as u32).collect();
     let decode = 80;
 
-    println!("\n=== Fig 1: weight-only quantization impact ({model}, prefill {} + decode {decode}) ===",
-             prompt.len());
+    println!(
+        "\n=== Fig 1: weight-only quantization impact \
+         ({model}, prefill {} + decode {decode}) ===",
+        prompt.len()
+    );
     let (t_fp, b_fp, traffic_fp) = run_case(model, "fp", 4, SubMode::None, &prompt, decode)?;
     let (t_q, b_q, traffic_q) = run_case(model, "rtn", 4, SubMode::None, &prompt, decode)?;
 

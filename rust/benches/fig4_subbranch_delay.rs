@@ -90,7 +90,10 @@ fn main() -> anyhow::Result<()> {
         let (t_naive, tr_naive) = (results[1].0, results[1].1.clone());
         let (t_fused, tr_fused) = (results[2].0, results[2].1.clone());
         println!("\n[{phase}] (normalised to plain INT4)");
-        println!("{:<14} {:>11} {:>8} {:>10} {:>9}", "impl", "latency(us)", "norm.", "bytes", "launches");
+        println!(
+            "{:<14} {:>11} {:>8} {:>10} {:>9}",
+            "impl", "latency(us)", "norm.", "bytes", "launches"
+        );
         for (name, t, tr) in [
             ("INT4", t_plain, &tr_plain),
             ("INT4-Sub", t_naive, &tr_naive),

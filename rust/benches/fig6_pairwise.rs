@@ -25,7 +25,10 @@ fn main() -> anyhow::Result<()> {
         vec!["awq", "omniquant", "caldera", "svdquant"]
     };
 
-    println!("\n=== Fig 6: pairwise comparison, {model} w{bits} ({} questions x 2 orders) ===", set.len());
+    println!(
+        "\n=== Fig 6: pairwise comparison, {model} w{bits} ({} questions x 2 orders) ===",
+        set.len()
+    );
     let mut fbq = native_scorer(model, "fbquant", bits)?;
     let nll_fbq = question_nlls(&mut fbq, &set)?;
 

@@ -88,10 +88,14 @@ fn serving_workload(stream: &TokenStream, n: usize) -> Vec<GenRequest> {
 /// Continuous vs batch-synchronous serving through the coordinator: same
 /// backend, same workload, only the scheduling discipline differs.
 fn serving_comparison(model: &str, stream: &TokenStream, n: usize) -> anyhow::Result<()> {
-    println!("\n=== serving: continuous (slot pool) vs batch-synchronous ({model}, {n} reqs, mixed 16/32/64-token prompts) ===");
+    println!(
+        "\n=== serving: continuous (slot pool) vs batch-synchronous \
+         ({model}, {n} reqs, mixed 16/32/64-token prompts) ==="
+    );
     println!(
         "{:<14} {:>9} {:>10} {:>10} {:>7} {:>16} {:>13} {:>13}",
-        "scheduler", "gen toks", "wall s", "gen tk/s", "occup.", "occupancy hist", "ttft p50 ms", "e2e p95 ms"
+        "scheduler", "gen toks", "wall s", "gen tk/s", "occup.", "occupancy hist",
+        "ttft p50 ms", "e2e p95 ms"
     );
     println!("{}", "-".repeat(98));
     let store = WeightStore::load(&ckpt(model, "fbquant", 4))?;
@@ -118,12 +122,14 @@ fn serving_comparison(model: &str, stream: &TokenStream, n: usize) -> anyhow::Re
             metrics.ttft.percentile_us(50.0) / 1e3,
             metrics.e2e.percentile_us(95.0) / 1e3,
         );
-        results.push((label, metrics.mean_slot_occupancy(), metrics.tokens_generated as f64 / wall));
+        let tps = metrics.tokens_generated as f64 / wall;
+        results.push((label, metrics.mean_slot_occupancy(), tps));
     }
     let (_, cont_occ, cont_tps) = results[0];
     let (_, sync_occ, sync_tps) = results[1];
     println!(
-        "\ncontinuous sustains {:.2}x the decode-slot occupancy ({:.2} vs {:.2}) at {:.2}x tokens/s ({:.1} vs {:.1});",
+        "\ncontinuous sustains {:.2}x the decode-slot occupancy ({:.2} vs {:.2}) \
+         at {:.2}x tokens/s ({:.1} vs {:.1});",
         cont_occ / sync_occ.max(1e-9), cont_occ, sync_occ,
         cont_tps / sync_tps.max(1e-9), cont_tps, sync_tps,
     );
@@ -144,7 +150,8 @@ fn batched_vs_sequential(model: &str, stream: &TokenStream) -> anyhow::Result<()
     let reps = 2;
 
     println!(
-        "\n=== decode: weight-stationary batched vs per-slot sequential ({model}, equal slot count) ==="
+        "\n=== decode: weight-stationary batched vs per-slot sequential \
+         ({model}, equal slot count) ==="
     );
     println!(
         "{:<6} {:<12} {:>10} {:>13} {:>9}",
@@ -212,7 +219,8 @@ fn batched_vs_sequential(model: &str, stream: &TokenStream) -> anyhow::Result<()
         if m == 8 {
             assert!(
                 bat_tps > seq_tps,
-                "batched decode must out-run sequential at m={m} ({bat_tps:.1} vs {seq_tps:.1} tk/s)"
+                "batched decode must out-run sequential at m={m} \
+                 ({bat_tps:.1} vs {seq_tps:.1} tk/s)"
             );
         } else if m >= 4 && bat_tps <= seq_tps {
             eprintln!(
@@ -253,7 +261,8 @@ fn paged_vs_dense(model: &str, stream: &TokenStream, n: usize) -> anyhow::Result
     );
     println!(
         "{:<8} {:>6} {:>9} {:>10} {:>10} {:>9} {:>13} {:>11} {:>9}",
-        "kv", "slots", "gen toks", "wall s", "gen tk/s", "peak occ", "peak kv bytes", "prefix hit", "cow"
+        "kv", "slots", "gen toks", "wall s", "gen tk/s", "peak occ", "peak kv bytes",
+        "prefix hit", "cow"
     );
     println!("{}", "-".repeat(92));
     let mut peaks = Vec::new();
@@ -330,7 +339,10 @@ fn prefix_reuse_demo(model: &str, stream: &TokenStream) -> anyhow::Result<()> {
         Coordinator::run_closed_loop(&mut backend, reqs, &CoordinatorConfig::default())?;
     assert_eq!(responses.len(), n);
     let pool = metrics.kv_pool.expect("paged backend reports pool stats");
-    println!("\n=== serving: prefix reuse on a templated workload ({model}, {n} reqs, shared 48-token template) ===");
+    println!(
+        "\n=== serving: prefix reuse on a templated workload \
+         ({model}, {n} reqs, shared 48-token template) ==="
+    );
     println!(
         "prefix cache: {} hits / {} admissions, {} of {} prompt tokens served from shared \
          pages ({:.0}%), {} copy-on-write page copies, peak {} pages",
@@ -356,7 +368,8 @@ fn prefix_reuse_demo(model: &str, stream: &TokenStream) -> anyhow::Result<()> {
 fn speculative_serving(model: &str, stream: &TokenStream, n: usize) -> anyhow::Result<()> {
     let store = WeightStore::load(&ckpt(model, "fbquant", 4))?;
     println!(
-        "\n=== serving: self-speculative (draft = bare branch) vs plain decode ({model}, {n} reqs, greedy) ==="
+        "\n=== serving: self-speculative (draft = bare branch) vs plain decode \
+         ({model}, {n} reqs, greedy) ==="
     );
     println!(
         "{:<12} {:>9} {:>10} {:>10} {:>9} {:>10} {:>13}",
@@ -369,7 +382,7 @@ fn speculative_serving(model: &str, stream: &TokenStream, n: usize) -> anyhow::R
         let mut backend = NativeBackend::new(engine, "spec");
         if spec_k > 0 {
             backend = backend
-                .with_speculative(SpeculativeConfig { k: spec_k, draft: DraftMode::NoSub });
+                .with_speculative(SpeculativeConfig::new(spec_k, DraftMode::NoSub));
         }
         // serving_workload defaults to greedy sampling, which is what
         // the speculative path accelerates

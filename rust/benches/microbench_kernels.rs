@@ -18,7 +18,7 @@ mod common;
 
 use common::*;
 use fbquant::bench::Bench;
-use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
+use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken, SpecSlot};
 use fbquant::engine::kernels::{QuantLinear, SubMode, Traffic, Workspace};
 use fbquant::engine::NativeEngine;
 use fbquant::quant::groupwise;
@@ -63,7 +63,9 @@ fn batched_decode_sweep(bench: &Bench, spec_rows: Vec<Json>) -> anyhow::Result<(
     let rank_list: &[usize] = &[0, 16];
     let slot_list: &[usize] = &[1, 2, 4, 8];
 
-    println!("\n=== batched decode sweep: weight-stationary gemv_multi vs per-slot gemv (d={d}) ===");
+    println!(
+        "\n=== batched decode sweep: weight-stationary gemv_multi vs per-slot gemv (d={d}) ==="
+    );
     println!(
         "{:<5} {:<5} {:<5} {:<12} {:>11} {:>12} {:>13} {:>9}",
         "bits", "rank", "m", "impl", "latency(us)", "tokens/s", "W bytes/tok", "speedup"
@@ -215,7 +217,7 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
             let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
             let mut backend = NativeBackend::new(engine, "spec").with_max_slots(m);
             if let Some(dm) = draft {
-                backend = backend.with_speculative(SpeculativeConfig { k, draft: dm });
+                backend = backend.with_speculative(SpeculativeConfig::new(k, dm));
             }
             let mut state = backend.open_batch(m)?;
             let mut cur = vec![0u32; m];
@@ -234,7 +236,9 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
                 let toks: Vec<SlotToken> =
                     (0..m).map(|s| SlotToken { slot: s, token: cur[s] }).collect();
                 if draft.is_some() {
-                    let steps = backend.decode_speculative(&mut state, &toks)?;
+                    let reqs: Vec<SpecSlot> =
+                        (0..m).map(|s| SpecSlot::greedy(s, cur[s])).collect();
+                    let steps = backend.decode_speculative(&mut state, &reqs)?;
                     for (slot, sp) in steps.iter().enumerate() {
                         committed += sp.accepted.len() + 1;
                         proposed += sp.proposed;

@@ -20,7 +20,10 @@ fn main() -> anyhow::Result<()> {
     let models = bench_models();
 
     println!("\n=== Table 1: WikiText2-analog validation perplexity (lower is better) ===");
-    println!("(seq={} tokens={}; group=128; rank=d/8; see EXPERIMENTS.md)", cfg.seq, cfg.max_tokens);
+    println!(
+        "(seq={} tokens={}; group=128; rank=d/8; see EXPERIMENTS.md)",
+        cfg.seq, cfg.max_tokens
+    );
     let mut header = format!("{:<10} {:>5}", "Method", "WBit");
     for m in &models {
         header.push_str(&format!(" {:>14}", m));

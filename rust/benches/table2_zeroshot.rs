@@ -36,7 +36,10 @@ fn main() -> anyhow::Result<()> {
         vec!["llamoid-tiny", "qwenoid-tiny", "gptoid-tiny"]
     };
 
-    println!("\n=== Table 2: zero-shot accuracy, avg over {} tasks (higher is better) ===", tasks.len());
+    println!(
+        "\n=== Table 2: zero-shot accuracy, avg over {} tasks (higher is better) ===",
+        tasks.len()
+    );
     println!("(questions/task={maxq}; length-normalised log-likelihood scoring)");
     let mut header = format!("{:<10} {:>5}", "Method", "WBit");
     for m in &models {

@@ -27,9 +27,12 @@
 //!   compiled lane count. [`NativeBackend::with_dense`] restores the
 //!   one-dense-`KvCache`-per-slot baseline.
 //!   [`NativeBackend::with_speculative`] adds **self-speculative
-//!   decoding**: greedy slots draft K tokens on the degraded branch and
+//!   decoding**: slots draft up to K tokens on the degraded branch and
 //!   verify them all in one multi-position pass
-//!   ([`Backend::decode_speculative`], see [`crate::spec`]).
+//!   ([`Backend::decode_speculative`], see [`crate::spec`]) — greedy
+//!   slots under argmax acceptance (token-identical output), sampled
+//!   slots under rejection-sampling acceptance (distribution-identical
+//!   output), with optional per-slot adaptive draft depth.
 //! * [`PjrtBackend`] in **per-lane** mode (`with_per_lane(true)`) — each
 //!   slot is an independent batch-1 surface with its own position
 //!   counter, so admission is continuous too (per-slot position
@@ -45,17 +48,19 @@
 //!   batch dimension). Recompiling the artifacts with a per-lane
 //!   position vector would lift this restriction — see ROADMAP.
 
-use super::request::GenRequest;
+use super::request::{GenRequest, SamplingParams};
+use super::sampler::distribution;
 use crate::engine::kv::{
     KvPagePool, KvPoolConfig, KvPoolStats, KvSlot, PagedKv, PagedKvRef, PagedSlotBatch, SlotBatch,
 };
-use crate::engine::native::EngineWs;
+use crate::engine::native::{EngineWs, RowsWant, SlotLogits};
 use crate::engine::{KvCache, NativeEngine, SubMode};
 use crate::model::{Config, WeightStore};
 use crate::runtime::exec::{build_weight_feed, Value};
 use crate::runtime::{ExecRegistry, LoadedExec, Manifest};
 use crate::spec::{
-    draft_tokens, greedy_accept, DraftKv, DraftMode, SpecDecoder, SpecStep, SpeculativeConfig,
+    draft_tokens, greedy_accept_ids, stochastic_accept_with, DraftKv, DraftMode, KController,
+    SpecDecoder, SpecStep, SpeculativeConfig,
 };
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -66,6 +71,26 @@ use std::sync::Arc;
 pub struct SlotToken {
     pub slot: usize,
     pub token: u32,
+}
+
+/// One slot's input to a speculative step: its last sampled token plus
+/// the request's sampling params. Greedy params (`temperature <= 0`)
+/// select argmax acceptance; sampled params select rejection-sampling
+/// acceptance under the same temperature / top-k / top-p the plain
+/// decode path would sample with — so speculation preserves the output
+/// distribution exactly (see `crate::spec::accept`).
+#[derive(Debug, Clone)]
+pub struct SpecSlot {
+    pub slot: usize,
+    pub token: u32,
+    pub sampling: SamplingParams,
+}
+
+impl SpecSlot {
+    /// Greedy-request convenience (argmax acceptance).
+    pub fn greedy(slot: usize, token: u32) -> SpecSlot {
+        SpecSlot { slot, token, sampling: SamplingParams::default() }
+    }
 }
 
 /// One per-slot PJRT surface (batch-1 artifacts, own position counter).
@@ -159,16 +184,18 @@ pub trait Backend {
     /// One **speculative** step over the listed occupied slots: each
     /// slot drafts up to K tokens on its degraded branch, verifies all
     /// of them (plus the input token) in one multi-position batched
-    /// pass, and commits `1..=K+1` tokens ([`SpecStep`]). Acceptance is
-    /// greedy, so the committed stream is token-identical to
-    /// non-speculative greedy decode. Only meaningful when
+    /// pass, and commits `1..=K+1` tokens ([`SpecStep`]). Greedy slots
+    /// use argmax acceptance (committed stream token-identical to
+    /// non-speculative greedy decode); sampled slots use
+    /// rejection-sampling acceptance (committed stream distributed
+    /// exactly as plain sampled decode). Only meaningful when
     /// [`Backend::speculative`] returns a config; a slot must be driven
     /// by either this or [`Backend::decode`] for its whole lifetime,
     /// never both (the draft KV mirrors the target step for step).
     fn decode_speculative(
         &mut self,
         _state: &mut BatchState,
-        _tokens: &[SlotToken],
+        _reqs: &[SpecSlot],
     ) -> Result<Vec<SpecStep>> {
         bail!("backend {} does not support speculative decoding", self.name())
     }
@@ -253,6 +280,8 @@ pub struct NativeBackend {
     /// pool size in pages; 0 = worst case (`capacity * max_seq` worth,
     /// so decode can never exhaust the pool mid-flight)
     pool_pages: usize,
+    /// draft-mirror pool size in pages; None = mirror the target's
+    draft_pool_pages: Option<usize>,
     /// A/B escape hatch: decode each listed slot with its own engine
     /// step (re-streaming the weights per slot) instead of the
     /// weight-stationary batched step.
@@ -271,12 +300,17 @@ impl NativeBackend {
             max_slots: 4,
             page_size: DEFAULT_PAGE_SIZE,
             pool_pages: 0,
+            draft_pool_pages: None,
             sequential_decode: false,
             spec: None,
         }
     }
 
-    pub fn from_checkpoint(path: &std::path::Path, mode: SubMode, label: &str) -> Result<NativeBackend> {
+    pub fn from_checkpoint(
+        path: &std::path::Path,
+        mode: SubMode,
+        label: &str,
+    ) -> Result<NativeBackend> {
         let store = WeightStore::load(path)?;
         Ok(NativeBackend::new(NativeEngine::from_store(&store, mode)?, label))
     }
@@ -312,6 +346,18 @@ impl NativeBackend {
         self
     }
 
+    /// Cap the **draft mirrors'** page pool at `n_pages` (paged mode
+    /// only; the target pool keeps its own budget). Mid-decode draft
+    /// pool exhaustion never sheds a request — the affected slot
+    /// degrades to a plain (k = 0) step while its neighbors keep
+    /// speculating — so a tight draft budget trades speculation breadth
+    /// for memory per slot.
+    pub fn with_draft_kv_pool(mut self, n_pages: usize) -> NativeBackend {
+        assert!(n_pages > 0, "degenerate draft pool");
+        self.draft_pool_pages = Some(n_pages);
+        self
+    }
+
     /// Decode listed slots one engine step at a time instead of through
     /// the weight-stationary batched step — the pre-batched behaviour,
     /// kept as an A/B baseline for the fig7/microbench comparisons.
@@ -327,16 +373,19 @@ impl NativeBackend {
     /// target's own weights with the sub-branch skipped;
     /// [`DraftMode::Shadow`]: a lower-bit shadow re-pack), then verify
     /// every draft in ONE multi-position weight-stationary pass. Greedy
-    /// output is token-identical to plain decode. Speculating slots gain
-    /// a rollback-able draft KV mirror under the same paging discipline
-    /// as the target; mirrors fill lazily on a slot's first speculative
-    /// step, so slots that only ever plain-decode pay no draft compute —
-    /// and on the (default) paged store, no draft pages either (dense
-    /// mirrors preallocate capacity up front like every dense cache);
-    /// `open_batch` resets the mirrors, so a speculative
-    /// backend drives one live batch at a time, and a slot must be
-    /// stepped via [`Backend::decode_speculative`] for its whole
-    /// lifetime.
+    /// output is token-identical to plain decode; sampled output is
+    /// distribution-identical to plain sampled decode (rejection
+    /// sampling, see [`crate::spec::accept`]); with
+    /// [`SpeculativeConfig::adaptive`] each slot's window follows its
+    /// acceptance-rate EWMA. Speculating slots gain a rollback-able
+    /// draft KV mirror under the same paging discipline as the target;
+    /// mirrors fill lazily on a slot's first speculative step, so slots
+    /// that only ever plain-decode pay no draft compute — and on the
+    /// (default) paged store, no draft pages either (dense mirrors
+    /// preallocate capacity up front like every dense cache);
+    /// `open_batch` resets the mirrors, so a speculative backend drives
+    /// one live batch at a time, and a slot must be stepped via
+    /// [`Backend::decode_speculative`] for its whole lifetime.
     pub fn with_speculative(mut self, cfg: SpeculativeConfig) -> NativeBackend {
         self.spec = Some(SpecDecoder::new(cfg, &self.engine));
         self
@@ -455,6 +504,10 @@ impl NativeBackend {
             .with_context(|| format!("draft admit: slot {slot} out of range"))?;
         p.clear();
         p.extend_from_slice(prompt);
+        // a fresh request starts its adaptive window optimistic
+        if let Some(c) = spec.ctrl.get_mut(slot) {
+            *c = KController::new(spec.cfg.k);
+        }
         Ok(())
     }
 }
@@ -491,7 +544,7 @@ impl Backend for NativeBackend {
                     cfg.n_heads,
                     cfg.head_dim(),
                     self.page_size,
-                    n_pages,
+                    self.draft_pool_pages.unwrap_or(n_pages),
                 );
                 pc.max_cached_prefixes = 0;
                 spec.kv.open_paged(pc, capacity);
@@ -499,6 +552,7 @@ impl Backend for NativeBackend {
                 spec.kv.open_dense(capacity);
             }
             spec.pending = (0..capacity).map(|_| Vec::new()).collect();
+            spec.ctrl = (0..capacity).map(|_| KController::new(spec.cfg.k)).collect();
         }
         if !self.paged {
             return Ok(BatchState::Native { slots: (0..capacity).map(|_| None).collect() });
@@ -720,38 +774,59 @@ impl Backend for NativeBackend {
     }
 
     /// One self-speculative step over the listed slots: batched drafting
-    /// on the degraded branch, ONE multi-position verify pass over the
-    /// target ([`NativeEngine::step_batch_multi`] — verifier weights
-    /// stream once per step regardless of K), greedy acceptance, and KV
-    /// rollback of every rejected position on both caches. Near
-    /// `max_seq` the draft window clamps; under pool pressure a slot
-    /// degrades to a plain (k = 0) verify step instead of erroring.
+    /// on the degraded branch (argmax chains for greedy slots, draws
+    /// from the draft's post-params distribution for sampled slots), ONE
+    /// multi-position verify pass over the target
+    /// ([`NativeEngine::step_batch_multi_sel`] — verifier weights stream
+    /// once per step regardless of K, greedy slots fetch only argmax
+    /// ids, sampled slots fetch the full rows they need), per-mode
+    /// acceptance (argmax match vs rejection sampling with residual
+    /// resampling), and KV rollback of every rejected position on both
+    /// caches. Near `max_seq` the draft window clamps; under pool
+    /// pressure a slot degrades to a plain (k = 0) verify step instead
+    /// of erroring; with [`SpeculativeConfig::adaptive`] each slot's
+    /// window follows its acceptance-rate EWMA.
     fn decode_speculative(
         &mut self,
         state: &mut BatchState,
-        tokens: &[SlotToken],
+        reqs: &[SpecSlot],
     ) -> Result<Vec<SpecStep>> {
-        if tokens.is_empty() {
+        if reqs.is_empty() {
             return Ok(Vec::new());
         }
         let Some(spec_cfg) = self.spec.as_ref().map(|s| s.cfg) else {
             bail!("speculative decoding is not configured on this backend");
         };
-        for (idx, st) in tokens.iter().enumerate() {
-            if tokens[..idx].iter().any(|p| p.slot == st.slot) {
+        for (idx, st) in reqs.iter().enumerate() {
+            if reqs[..idx].iter().any(|p| p.slot == st.slot) {
                 bail!("decode: slot {} listed twice", st.slot);
             }
         }
         let max_seq = self.engine.cfg.max_seq;
-        let n = tokens.len();
+        let n = reqs.len();
 
-        // Phase 0: validate slots, clamp each draft window to the space
-        // left before max_seq, and reserve the verify rows' pages.
+        // Phase 0: pick each slot's draft window — the adaptive
+        // controller's when enabled, else the configured K — then
+        // validate slots, clamp the window to the space left before
+        // max_seq, and reserve the verify rows' pages.
+        let mut base_k: Vec<usize> = Vec::with_capacity(n);
+        if spec_cfg.adaptive {
+            let spec = self.spec.as_mut().expect("config checked above");
+            for st in reqs {
+                let c = spec
+                    .ctrl
+                    .get_mut(st.slot)
+                    .with_context(|| format!("decode: slot {} out of range", st.slot))?;
+                base_k.push(c.next_k());
+            }
+        } else {
+            base_k.resize(n, spec_cfg.k);
+        }
         let mut lens: Vec<usize> = Vec::with_capacity(n);
         let mut ks: Vec<usize> = Vec::with_capacity(n);
         match state {
             BatchState::Native { slots } => {
-                for st in tokens {
+                for (i, st) in reqs.iter().enumerate() {
                     let Some(kv) = slots.get(st.slot).and_then(|s| s.as_ref()) else {
                         bail!("decode: slot {} is not occupied", st.slot);
                     };
@@ -759,11 +834,11 @@ impl Backend for NativeBackend {
                         bail!("slot {}: kv cache full", st.slot);
                     }
                     lens.push(kv.len);
-                    ks.push(spec_cfg.k.min(max_seq - kv.len - 1));
+                    ks.push(base_k[i].min(max_seq - kv.len - 1));
                 }
             }
             BatchState::NativePaged { pool, slots } => {
-                for st in tokens {
+                for (i, st) in reqs.iter().enumerate() {
                     let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
                         bail!("decode: slot {} is not occupied", st.slot);
                     };
@@ -771,7 +846,7 @@ impl Backend for NativeBackend {
                         bail!("slot {}: kv view full", st.slot);
                     }
                     let len = kv.len();
-                    let mut k = spec_cfg.k.min(max_seq - len - 1);
+                    let mut k = base_k[i].min(max_seq - len - 1);
                     if k > 0 && pool.ensure_range(kv, len, len + 1 + k).is_err() {
                         k = 0; // pool pressure: degrade to a plain step
                     }
@@ -791,7 +866,7 @@ impl Backend for NativeBackend {
         // queued catch-up tokens ride the first draft pass).
         {
             let spec = self.spec.as_mut().expect("config checked above");
-            for (i, st) in tokens.iter().enumerate() {
+            for (i, st) in reqs.iter().enumerate() {
                 let Some(dlen) = spec.kv.len(st.slot) else {
                     bail!("slot {}: no draft kv mirror (admitted without speculation?)", st.slot);
                 };
@@ -812,30 +887,40 @@ impl Backend for NativeBackend {
             }
         }
 
-        // Phase 1: batched greedy drafting on the degraded branch. For
-        // NoSub the draft engine IS the target with its sub-branch
-        // switched off for the duration of the draft steps.
-        let drafts: Vec<Vec<u32>> = {
+        // Phase 1: batched drafting on the degraded branch — argmax
+        // chains for greedy slots, q-distribution draws for sampled ones
+        // (q recorded per position for the accept ratio). For NoSub the
+        // draft engine IS the target with its sub-branch switched off
+        // for the duration of the draft steps.
+        let samplings: Vec<Option<&SamplingParams>> = reqs
+            .iter()
+            .map(|r| if r.sampling.is_sampled() { Some(&r.sampling) } else { None })
+            .collect();
+        let (drafts, qs): (Vec<Vec<u32>>, Vec<Vec<Vec<f64>>>) = {
             let saved = self.engine.mode;
             if matches!(spec_cfg.draft, DraftMode::NoSub) {
                 self.engine.mode = SubMode::None;
             }
             let spec = self.spec.as_mut().expect("config checked above");
-            let SpecDecoder { shadow, ws, kv, pending, .. } = spec;
+            let SpecDecoder { shadow, ws, kv, pending, rng, .. } = spec;
             let draft_engine: &NativeEngine = match shadow {
                 Some(e) => e,
                 None => &self.engine,
             };
-            let slot_ids: Vec<usize> = tokens.iter().map(|t| t.slot).collect();
-            let cur0: Vec<u32> = tokens.iter().map(|t| t.token).collect();
-            let out = draft_tokens(draft_engine, kv, ws, &slot_ids, pending, &cur0, &ks);
+            let slot_ids: Vec<usize> = reqs.iter().map(|t| t.slot).collect();
+            let cur0: Vec<u32> = reqs.iter().map(|t| t.token).collect();
+            let out =
+                draft_tokens(draft_engine, kv, ws, &slot_ids, pending, &cur0, &ks, &samplings, rng);
             self.engine.mode = saved;
             out
         };
 
         // Phase 2: verify — every slot's input token plus all its drafts
         // in ONE multi-position weight-stationary pass over the target.
-        let groups_store: Vec<Vec<u32>> = tokens
+        // Greedy slots only need the argmax id per row (no rows × vocab
+        // logits materialized); sampled slots need the full rows to form
+        // the target distributions.
+        let groups_store: Vec<Vec<u32>> = reqs
             .iter()
             .zip(&drafts)
             .map(|(st, d)| {
@@ -846,27 +931,48 @@ impl Backend for NativeBackend {
             })
             .collect();
         let groups: Vec<&[u32]> = groups_store.iter().map(|g| g.as_slice()).collect();
-        let slot_ids: Vec<usize> = tokens.iter().map(|t| t.slot).collect();
-        let verify: Vec<Vec<Vec<f32>>> = match state {
+        let slot_ids: Vec<usize> = reqs.iter().map(|t| t.slot).collect();
+        let want: Vec<RowsWant> = samplings
+            .iter()
+            .map(|s| if s.is_some() { RowsWant::All } else { RowsWant::Argmax })
+            .collect();
+        let verify: Vec<SlotLogits> = match state {
             BatchState::Native { slots } => {
                 let mut sb = SlotBatch::select(slots, &slot_ids);
-                self.engine.step_batch_multi(&groups, &mut sb, &mut self.ws, true)
+                self.engine.step_batch_multi_sel(&groups, &mut sb, &mut self.ws, &want)
             }
             BatchState::NativePaged { pool, slots } => {
                 let mut sb = PagedSlotBatch::select(pool, slots, &slot_ids);
-                self.engine.step_batch_multi(&groups, &mut sb, &mut self.ws, true)
+                self.engine.step_batch_multi_sel(&groups, &mut sb, &mut self.ws, &want)
             }
             _ => unreachable!("state variant validated in phase 0"),
         };
 
-        // Phase 3: greedy acceptance and rollback of rejected positions
-        // on both caches. On full acceptance the mirror never fed the
-        // last committed token — it queues in the lazy catch-up list and
-        // rides the NEXT step's first draft pass (no extra draft weight
-        // stream).
+        // Phase 3: per-mode acceptance and rollback of rejected
+        // positions on both caches. On full acceptance the mirror never
+        // fed the last committed token — it queues in the lazy catch-up
+        // list and rides the NEXT step's first draft pass (no extra
+        // draft weight stream).
         let mut out: Vec<SpecStep> = Vec::with_capacity(n);
-        for (i, st) in tokens.iter().enumerate() {
-            let (a, next) = greedy_accept(&drafts[i], &verify[i]);
+        for (i, st) in reqs.iter().enumerate() {
+            let spec = self.spec.as_mut().expect("config checked above");
+            let (a, next) = match &verify[i] {
+                SlotLogits::Argmax(ids) => greedy_accept_ids(&drafts[i], ids),
+                SlotLogits::Rows(rows) => {
+                    let params = samplings[i].expect("full rows only fetched for sampled slots");
+                    // target rows build lazily: rows past the first
+                    // rejection never pay the distribution() sort
+                    stochastic_accept_with(
+                        &drafts[i],
+                        &qs[i],
+                        |j| distribution(&rows[j], params),
+                        &mut spec.rng,
+                    )
+                }
+            };
+            if spec_cfg.adaptive {
+                spec.ctrl[st.slot].observe(ks[i], a);
+            }
             let committed = lens[i] + 1 + a;
             match state {
                 BatchState::Native { slots } => {
@@ -922,6 +1028,9 @@ impl Backend for NativeBackend {
             spec.kv.release(slot);
             if let Some(p) = spec.pending.get_mut(slot) {
                 p.clear();
+            }
+            if let Some(c) = spec.ctrl.get_mut(slot) {
+                *c = KController::new(spec.cfg.k);
             }
         }
         Ok(())
@@ -1019,7 +1128,10 @@ impl PjrtBackend {
         self.kv_numel / base_b * capacity
     }
 
-    fn decode_exec(&self, capacity: usize) -> Result<&(usize, Arc<LoadedExec>, Arc<Vec<xla::Literal>>)> {
+    fn decode_exec(
+        &self,
+        capacity: usize,
+    ) -> Result<&(usize, Arc<LoadedExec>, Arc<Vec<xla::Literal>>)> {
         self.arts
             .decode
             .iter()

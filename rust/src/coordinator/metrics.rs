@@ -20,6 +20,34 @@ use crate::engine::kv::KvPoolStats;
 use crate::util::timer::LatencyStats;
 use std::time::Instant;
 
+/// Speculative-decoding counters for one acceptance mode (greedy argmax
+/// vs stochastic rejection sampling). The serving loop keeps one per
+/// mode so mixed traffic reports per-mode acceptance rates; the legacy
+/// totals on [`ServeMetrics`] stay the across-mode sums.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecModeStats {
+    /// speculative steps executed (slots × scheduling steps)
+    pub steps: usize,
+    /// draft tokens proposed
+    pub proposed: usize,
+    /// draft tokens the verifier accepted
+    pub accepted: usize,
+    /// accepted draft tokens actually emitted to streams (≤ `accepted`:
+    /// a stop token or budget can truncate a step's tail)
+    pub committed: usize,
+}
+
+impl SpecModeStats {
+    /// Fraction of proposed draft tokens accepted in this mode.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct ServeMetrics {
     pub started: Instant,
@@ -54,6 +82,10 @@ pub struct ServeMetrics {
     /// draft tokens accepted (each one a token committed without its
     /// own verifier weight stream)
     pub spec_accepted: usize,
+    /// speculative counters for greedy (argmax-accept) slots
+    pub spec_greedy: SpecModeStats,
+    /// speculative counters for sampled (rejection-sampling) slots
+    pub spec_sampled: SpecModeStats,
     /// decode-phase persistent-weight read bytes (target + draft),
     /// accumulated per scheduling step when the backend meters traffic
     /// (prefill traffic deliberately excluded); 0 otherwise
@@ -87,6 +119,8 @@ impl Default for ServeMetrics {
             spec_steps: 0,
             spec_proposed: 0,
             spec_accepted: 0,
+            spec_greedy: SpecModeStats::default(),
+            spec_sampled: SpecModeStats::default(),
             weight_bytes: 0,
             admission_wait: LatencyStats::new(),
             ttft: LatencyStats::new(),
@@ -159,6 +193,28 @@ impl ServeMetrics {
         }
     }
 
+    /// One speculative step for one slot. `sampled` picks the mode
+    /// bucket (stochastic vs greedy acceptance); `committed` is how many
+    /// accepted drafts were actually emitted to the stream (a stop token
+    /// or generation budget can truncate the tail). The legacy totals
+    /// stay the across-mode sums.
+    pub fn record_spec_step(
+        &mut self,
+        sampled: bool,
+        proposed: usize,
+        accepted: usize,
+        committed: usize,
+    ) {
+        self.spec_steps += 1;
+        self.spec_proposed += proposed;
+        self.spec_accepted += accepted;
+        let m = if sampled { &mut self.spec_sampled } else { &mut self.spec_greedy };
+        m.steps += 1;
+        m.proposed += proposed;
+        m.accepted += accepted;
+        m.committed += committed;
+    }
+
     /// Fraction of proposed draft tokens the verifier accepted.
     pub fn spec_acceptance_rate(&self) -> f64 {
         if self.spec_proposed == 0 {
@@ -228,6 +284,19 @@ impl ServeMetrics {
                 self.spec_tokens_per_step(),
                 self.weight_bytes_per_token(),
             ));
+            for (name, m) in [("greedy", &self.spec_greedy), ("sampled", &self.spec_sampled)] {
+                if m.steps > 0 {
+                    out.push_str(&format!(
+                        "\n    {name}: steps {} proposed {} accepted {} committed {} \
+                         (rate {:.2})",
+                        m.steps,
+                        m.proposed,
+                        m.accepted,
+                        m.committed,
+                        m.acceptance_rate(),
+                    ));
+                }
+            }
         }
         if let Some(p) = &self.kv_pool {
             out.push_str(&format!(
@@ -294,6 +363,21 @@ mod tests {
         assert!((m.spec_tokens_per_step() - 2.5).abs() < 1e-9);
         assert!((m.weight_bytes_per_token() - 100.0).abs() < 1e-9);
         assert!(m.report().contains("speculative: steps 4"));
+    }
+
+    #[test]
+    fn per_mode_spec_counters_sum_to_totals() {
+        let mut m = ServeMetrics::new();
+        m.record_spec_step(false, 4, 3, 3);
+        m.record_spec_step(true, 4, 2, 1);
+        m.record_spec_step(true, 2, 2, 2);
+        assert_eq!(m.spec_steps, m.spec_greedy.steps + m.spec_sampled.steps);
+        assert_eq!(m.spec_proposed, m.spec_greedy.proposed + m.spec_sampled.proposed);
+        assert_eq!(m.spec_accepted, m.spec_greedy.accepted + m.spec_sampled.accepted);
+        assert_eq!(m.spec_sampled.committed, 3);
+        assert!((m.spec_greedy.acceptance_rate() - 0.75).abs() < 1e-9);
+        assert!((m.spec_sampled.acceptance_rate() - 4.0 / 6.0).abs() < 1e-9);
+        assert!(m.report().contains("sampled: steps 2"));
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //!
 //! * [`request`] — request/response types, per-stage timestamps and the
 //!   streaming event enum,
-//! * [`sampler`] — greedy / temperature / top-k sampling,
+//! * [`sampler`] — greedy / temperature / top-k / top-p sampling (and
+//!   the [`sampler::distribution`] definition the stochastic
+//!   speculative path shares),
 //! * [`batcher`] — FIFO admission queue with two release disciplines:
 //!   continuous per-slot pops, or wait-timeout aligned groups for
 //!   lock-step surfaces,
@@ -35,9 +37,9 @@ pub mod sampler;
 pub mod server;
 pub mod workload;
 
-pub use backend::{Backend, BatchState, NativeBackend, PjrtBackend, SlotToken};
+pub use backend::{Backend, BatchState, NativeBackend, PjrtBackend, SlotToken, SpecSlot};
 pub use batcher::{Batcher, BatcherConfig};
-pub use metrics::ServeMetrics;
+pub use metrics::{ServeMetrics, SpecModeStats};
 pub use request::{GenEvent, GenRequest, GenResponse, SamplingParams};
 pub use sampler::Sampler;
 pub use server::{Coordinator, CoordinatorConfig, CoordinatorHandle};

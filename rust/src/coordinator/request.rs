@@ -8,12 +8,21 @@ pub struct SamplingParams {
     pub temperature: f32,
     /// 0 => full distribution
     pub top_k: usize,
+    /// nucleus mass kept; >= 1.0 => full distribution
+    pub top_p: f32,
     pub seed: u64,
+}
+
+impl SamplingParams {
+    /// Whether these params sample (vs the greedy argmax fast path).
+    pub fn is_sampled(&self) -> bool {
+        self.temperature > 0.0
+    }
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
     }
 }
 

@@ -1,8 +1,92 @@
-//! Token sampling: greedy, temperature and top-k over logits.
+//! Token sampling: greedy, temperature, top-k and top-p (nucleus) over
+//! logits.
+//!
+//! [`distribution`] is the single source of truth for what "sampling
+//! with these params" means: it maps a logits row to the full-vocab
+//! probability vector (temperature-scaled softmax restricted to the
+//! top-k / top-p candidate set, renormalized). [`Sampler::sample`] draws
+//! from exactly that vector, and the stochastic speculative path
+//! (`crate::spec::accept`) builds its target/draft distributions through
+//! the same function — which is what makes rejection-sampling acceptance
+//! provably distribution-preserving: both sides of the `p/q` ratio come
+//! from one definition.
 
 use super::request::SamplingParams;
 use crate::tensor::ops;
 use crate::util::Pcg64;
+
+/// The full-vocab sampling distribution for `logits` under `p`
+/// (`p.temperature > 0`): temperature-scaled softmax over the top-k
+/// candidate set (all tokens when `top_k == 0`), then restricted to the
+/// smallest descending-probability prefix reaching `top_p` mass and
+/// renormalized. Entries outside the candidate set are exactly `0.0`.
+/// Computed in f64 so the speculative accept ratios are stable.
+pub fn distribution(logits: &[f32], p: &SamplingParams) -> Vec<f64> {
+    debug_assert!(p.temperature > 0.0, "distribution of a greedy request");
+    let n = logits.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    let truncate_k = p.top_k > 0 && p.top_k < n;
+    if truncate_k || p.top_p < 1.0 {
+        // stable sort: equal logits keep ascending token order, so the
+        // candidate set is deterministic
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    }
+    if truncate_k {
+        idx.truncate(p.top_k);
+    }
+    let m = idx.iter().map(|&i| logits[i] as f64).fold(f64::NEG_INFINITY, f64::max);
+    let mut w: Vec<f64> =
+        idx.iter().map(|&i| ((logits[i] as f64 - m) / p.temperature as f64).exp()).collect();
+    let total: f64 = w.iter().sum();
+    for v in w.iter_mut() {
+        *v /= total;
+    }
+    if p.top_p < 1.0 {
+        // idx is descending by logit, hence descending by probability:
+        // keep the smallest prefix reaching the nucleus mass
+        let mut cum = 0.0;
+        let mut keep = w.len();
+        for (j, &wv) in w.iter().enumerate() {
+            cum += wv;
+            if cum >= p.top_p as f64 {
+                keep = j + 1;
+                break;
+            }
+        }
+        idx.truncate(keep);
+        w.truncate(keep);
+        let kept: f64 = w.iter().sum();
+        for v in w.iter_mut() {
+            *v /= kept;
+        }
+    }
+    let mut probs = vec![0f64; n];
+    for (&i, &wv) in idx.iter().zip(&w) {
+        probs[i] = wv;
+    }
+    probs
+}
+
+/// Draw an index from a (possibly unnormalized) non-negative probability
+/// vector. Zero-probability entries are never returned.
+pub fn draw_from(rng: &mut Pcg64, probs: &[f64]) -> u32 {
+    let total: f64 = probs.iter().sum();
+    debug_assert!(total > 0.0, "drawing from an empty distribution");
+    let mut t = rng.next_f64() * total;
+    let mut last = 0usize;
+    for (i, &w) in probs.iter().enumerate() {
+        if w <= 0.0 {
+            continue;
+        }
+        last = i;
+        t -= w;
+        if t <= 0.0 {
+            return i as u32;
+        }
+    }
+    // float round-off on the cumulative walk: the last supported index
+    last as u32
+}
 
 #[derive(Debug)]
 pub struct Sampler {
@@ -15,21 +99,11 @@ impl Sampler {
     }
 
     pub fn sample(&mut self, logits: &[f32], p: &SamplingParams) -> u32 {
-        if p.temperature <= 0.0 {
+        if !p.is_sampled() {
             return ops::argmax(logits) as u32;
         }
-        // temperature scaling on a (possibly top-k-restricted) candidate set
-        let mut idx: Vec<usize> = (0..logits.len()).collect();
-        if p.top_k > 0 && p.top_k < logits.len() {
-            idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-            idx.truncate(p.top_k);
-        }
-        let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
-        let weights: Vec<f64> = idx
-            .iter()
-            .map(|&i| (((logits[i] - m) / p.temperature) as f64).exp())
-            .collect();
-        idx[self.rng.weighted(&weights)] as u32
+        let probs = distribution(logits, p);
+        draw_from(&mut self.rng, &probs)
     }
 }
 
@@ -41,7 +115,7 @@ mod tests {
     fn greedy_is_argmax() {
         let mut s = Sampler::new(0);
         let logits = vec![0.1, 2.0, -1.0, 1.9];
-        let p = SamplingParams { temperature: 0.0, top_k: 0, seed: 0 };
+        let p = SamplingParams { temperature: 0.0, ..SamplingParams::default() };
         for _ in 0..5 {
             assert_eq!(s.sample(&logits, &p), 1);
         }
@@ -51,7 +125,7 @@ mod tests {
     fn top_k_restricts_support() {
         let mut s = Sampler::new(1);
         let logits = vec![5.0, 4.9, -100.0, -100.0];
-        let p = SamplingParams { temperature: 1.0, top_k: 2, seed: 0 };
+        let p = SamplingParams { temperature: 1.0, top_k: 2, ..SamplingParams::default() };
         for _ in 0..200 {
             let t = s.sample(&logits, &p);
             assert!(t == 0 || t == 1);
@@ -62,11 +136,55 @@ mod tests {
     fn temperature_spreads_mass() {
         let mut s = Sampler::new(2);
         let logits = vec![1.0, 0.8, 0.6, 0.4];
-        let hot = SamplingParams { temperature: 5.0, top_k: 0, seed: 0 };
+        let hot = SamplingParams { temperature: 5.0, ..SamplingParams::default() };
         let mut seen = [0usize; 4];
         for _ in 0..400 {
             seen[s.sample(&logits, &hot) as usize] += 1;
         }
         assert!(seen.iter().all(|&c| c > 20), "{seen:?}");
+    }
+
+    #[test]
+    fn distribution_is_normalized_and_top_p_truncates() {
+        let logits = vec![2.0, 1.0, 0.0, -1.0];
+        let full = SamplingParams { temperature: 1.0, ..SamplingParams::default() };
+        let d = distribution(&logits, &full);
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(d.windows(2).all(|w| w[0] > w[1]), "descending logits, descending probs");
+
+        // top_p = 0.5: the head token alone carries ~0.64 mass, so the
+        // nucleus is exactly {0}
+        let narrow =
+            SamplingParams { temperature: 1.0, top_p: 0.5, ..SamplingParams::default() };
+        let d = distribution(&logits, &narrow);
+        assert!((d[0] - 1.0).abs() < 1e-12, "{d:?}");
+        assert!(d[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sample_matches_distribution_support() {
+        let mut s = Sampler::new(3);
+        let logits = vec![3.0, 2.9, 0.1, -5.0];
+        let p = SamplingParams {
+            temperature: 0.9,
+            top_k: 3,
+            top_p: 0.9,
+            ..SamplingParams::default()
+        };
+        let d = distribution(&logits, &p);
+        for _ in 0..300 {
+            let t = s.sample(&logits, &p) as usize;
+            assert!(d[t] > 0.0, "sampled outside the distribution's support");
+        }
+    }
+
+    #[test]
+    fn draw_from_respects_zero_mass() {
+        let mut rng = Pcg64::seeded(9);
+        let probs = vec![0.0, 0.3, 0.0, 0.7];
+        for _ in 0..200 {
+            let t = draw_from(&mut rng, &probs) as usize;
+            assert!(t == 1 || t == 3);
+        }
     }
 }

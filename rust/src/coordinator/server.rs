@@ -34,7 +34,7 @@
 //! after prefix-cache eviction) is shed with a terminal `Error` event
 //! rather than aborting the loop.
 
-use super::backend::{validate_batch, validate_request, Backend, BatchState, SlotToken};
+use super::backend::{validate_batch, validate_request, Backend, BatchState, SlotToken, SpecSlot};
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::ServeMetrics;
 use super::request::{GenEvent, GenRequest, GenResponse};
@@ -316,17 +316,18 @@ impl<'a> ServeLoop<'a> {
     /// One scheduling step: commit the sampled token of every occupied
     /// slot (emitting `Token` events), finish + release completed slots
     /// (emitting `Done`), then run one batched decode over the
-    /// survivors. On a speculative backend, greedy slots route through
-    /// [`Backend::decode_speculative`] instead and may commit up to K
-    /// extra accepted tokens this same step (`1..=K+1` per slot);
-    /// non-greedy slots keep the plain sampled path. Returns false when
-    /// no slot was occupied (nothing to do).
+    /// survivors. On a speculative backend EVERY slot routes through
+    /// [`Backend::decode_speculative`] and may commit up to K extra
+    /// accepted tokens this same step (`1..=K+1` per slot): greedy slots
+    /// under argmax acceptance (token-identical output), sampled slots
+    /// under rejection-sampling acceptance (distribution-identical
+    /// output). Returns false when no slot was occupied (nothing to do).
     fn step(&mut self) -> Result<bool> {
         let step_t0 = Instant::now();
         let spec_on = self.backend.speculative().is_some();
         let mut events: Vec<GenEvent> = Vec::new();
         let mut to_decode: Vec<SlotToken> = Vec::new();
-        let mut to_spec: Vec<SlotToken> = Vec::new();
+        let mut to_spec: Vec<SpecSlot> = Vec::new();
         for i in 0..self.slots.len() {
             let done = {
                 let Some(a) = self.slots[i].as_mut() else { continue };
@@ -353,13 +354,19 @@ impl<'a> ServeLoop<'a> {
                 match self.backend.prepare_decode(&mut self.state, i) {
                     Ok(()) => {
                         let a = self.slots[i].as_ref().expect("slot emptied mid-step");
-                        let st = SlotToken { slot: i, token: a.current };
-                        // speculative acceptance is greedy (argmax vs
-                        // argmax): sampled requests take the plain path
-                        if spec_on && a.req.params.temperature <= 0.0 {
-                            to_spec.push(st);
+                        // a speculative backend serves every slot through
+                        // the speculative path — greedy under argmax
+                        // acceptance, sampled under rejection sampling
+                        // (both output-preserving; a slot must stay on
+                        // one decode path for its whole lifetime)
+                        if spec_on {
+                            to_spec.push(SpecSlot {
+                                slot: i,
+                                token: a.current,
+                                sampling: a.req.params.clone(),
+                            });
                         } else {
-                            to_decode.push(st);
+                            to_decode.push(SlotToken { slot: i, token: a.current });
                         }
                     }
                     Err(e) => {
@@ -398,10 +405,9 @@ impl<'a> ServeLoop<'a> {
             let steps = self.backend.decode_speculative(&mut self.state, &to_spec)?;
             let mut spec_events: Vec<GenEvent> = Vec::new();
             for (st, sp) in to_spec.iter().zip(steps) {
-                self.metrics.spec_steps += 1;
-                self.metrics.spec_proposed += sp.proposed;
-                self.metrics.spec_accepted += sp.accepted.len();
                 let mut finished = false;
+                let mut committed = 0usize;
+                let sampled = st.sampling.is_sampled();
                 {
                     let a = self.slots[st.slot].as_mut().expect("decoded slot vanished");
                     // commit every accepted draft token now (the slot
@@ -409,6 +415,7 @@ impl<'a> ServeLoop<'a> {
                     // correction/bonus token becomes the next feed
                     for &tok in &sp.accepted {
                         a.output.push(tok);
+                        committed += 1;
                         self.metrics.tokens_generated += 1;
                         spec_events.push(GenEvent::Token {
                             id: a.req.id,
@@ -426,6 +433,7 @@ impl<'a> ServeLoop<'a> {
                         a.current = sp.next;
                     }
                 }
+                self.metrics.record_spec_step(sampled, sp.proposed, sp.accepted.len(), committed);
                 if finished {
                     spec_events.push(self.finish_slot(st.slot)?);
                 }

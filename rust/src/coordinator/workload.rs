@@ -52,7 +52,12 @@ pub fn generate(stream: &TokenStream, cfg: &WorkloadConfig) -> Workload {
         let start = rng.below(toks.len().saturating_sub(plen + 1));
         let prompt: Vec<u32> = toks[start..start + plen].iter().map(|&b| b as u32).collect();
         let mut req = GenRequest::new((i + 1) as u64, prompt, cfg.max_new_tokens);
-        req.params = SamplingParams { temperature: cfg.temperature, top_k: 8, seed: cfg.seed ^ i as u64 };
+        req.params = SamplingParams {
+            temperature: cfg.temperature,
+            top_k: 8,
+            seed: cfg.seed ^ i as u64,
+            ..SamplingParams::default()
+        };
         requests.push(req);
         if cfg.arrival_rate > 0.0 {
             t += Duration::from_secs_f64(rng.exponential(cfg.arrival_rate));

@@ -233,7 +233,14 @@ impl QuantLinear {
 
     /// y = quantized-GEMV(x), dispatching on `mode`. `x: [cin]`,
     /// `y: [out]` (overwritten; bias included).
-    pub fn gemv(&self, x: &[f32], y: &mut [f32], mode: SubMode, ws: &mut Workspace, t: &mut Traffic) {
+    pub fn gemv(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        mode: SubMode,
+        ws: &mut Workspace,
+        t: &mut Traffic,
+    ) {
         debug_assert_eq!(x.len(), self.cin);
         debug_assert_eq!(y.len(), self.out);
         let Workspace { dequant, xa, xs, xsum, .. } = ws;
@@ -646,7 +653,15 @@ impl QuantLinear {
     /// Fused: each weight row is de-quantized once into a stack tile and
     /// reused across all m activation rows (the VMEM-tile analogue);
     /// un-fused: full materialization then dense GEMM + two extra passes.
-    pub fn gemm(&self, x: &[f32], m: usize, y: &mut [f32], mode: SubMode, ws: &mut Workspace, t: &mut Traffic) {
+    pub fn gemm(
+        &self,
+        x: &[f32],
+        m: usize,
+        y: &mut [f32],
+        mode: SubMode,
+        ws: &mut Workspace,
+        t: &mut Traffic,
+    ) {
         debug_assert_eq!(x.len(), m * self.cin);
         debug_assert_eq!(y.len(), m * self.out);
         if m == 1 {
@@ -704,7 +719,8 @@ impl QuantLinear {
                 if mode == SubMode::Unfused {
                     // separate up-projection kernel: y round-trips memory
                     t.kernel_launches += 1;
-                    t.bytes_read += 4 * (m * self.out + self.out * self.rank + m * self.rank) as u64;
+                    t.bytes_read +=
+                        4 * (m * self.out + self.out * self.rank + m * self.rank) as u64;
                     t.bytes_written += 4 * (m * self.out) as u64;
                 } else {
                     // fused into the main kernel's accumulator tile
@@ -746,7 +762,8 @@ impl QuantLinear {
         for i in 0..m {
             let xi = &x[i * self.cin..(i + 1) * self.cin];
             for r in 0..self.rank {
-                xa[i * self.rank + r] = crate::tensor::ops::dot(xi, &a[r * self.cin..(r + 1) * self.cin]);
+                let arow = &a[r * self.cin..(r + 1) * self.cin];
+                xa[i * self.rank + r] = crate::tensor::ops::dot(xi, arow);
             }
         }
         true
@@ -822,7 +839,8 @@ mod tests {
                 let mut y = vec![0f32; out];
                 ql.gemv(&x, &mut y, mode, &mut ws, &mut t);
                 for o in 0..out {
-                    assert!((y[o] - want[o]).abs() < 1e-3, "{mode:?} o={o}: {} vs {}", y[o], want[o]);
+                    let (got, exp) = (y[o], want[o]);
+                    assert!((got - exp).abs() < 1e-3, "{mode:?} o={o}: {got} vs {exp}");
                 }
             }
             // SubMode::None drops the sub-branch

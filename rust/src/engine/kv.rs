@@ -673,7 +673,14 @@ fn paged_offset(c: &KvPoolConfig, pages: &[u32], l: usize, pos: usize, h: usize)
     ((page * c.n_layers + l) * c.page_size + pos % c.page_size) * stride + h * c.head_dim
 }
 
-fn paged_write(pool: &mut KvPagePool, kv: &PagedKv, l: usize, pos: usize, k_t: &[f32], v_t: &[f32]) {
+fn paged_write(
+    pool: &mut KvPagePool,
+    kv: &PagedKv,
+    l: usize,
+    pos: usize,
+    k_t: &[f32],
+    v_t: &[f32],
+) {
     let c = pool.cfg;
     let stride = c.n_heads * c.head_dim;
     debug_assert!(pos / c.page_size < kv.pages.len(), "write to unmapped page");

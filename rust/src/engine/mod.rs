@@ -26,4 +26,4 @@ pub use kv::{
     KvCache, KvPagePool, KvPoolConfig, KvPoolStats, KvSlot, KvSlotBatch, PagedKv, PagedKvRef,
     PagedSlotBatch, SlotBatch,
 };
-pub use native::NativeEngine;
+pub use native::{NativeEngine, RowsWant, SlotLogits};

@@ -12,6 +12,10 @@
 //! to **position-rows** — each slot consumes a group of consecutive
 //! tokens in the same pass, which is how speculative verification scores
 //! all K+1 draft positions and how concurrent prefills batch.
+//! [`NativeEngine::step_batch_multi_sel`] adds a per-slot output
+//! selection ([`RowsWant`]): greedy verification fetches only the argmax
+//! id per position (no `rows × vocab` materialization) while stochastic
+//! verification fetches the full rows it needs, all in one pass.
 
 use super::kernels::{self, QuantLinear, SubMode, Traffic, Workspace};
 use super::kv::{KvSlot, KvSlotBatch};
@@ -65,7 +69,14 @@ impl LinearExec {
         }
     }
 
-    pub fn gemv(&self, x: &[f32], y: &mut [f32], mode: SubMode, ws: &mut Workspace, t: &mut Traffic) {
+    pub fn gemv(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        mode: SubMode,
+        ws: &mut Workspace,
+        t: &mut Traffic,
+    ) {
         match self {
             LinearExec::Dense { out, cin, w, bias } => {
                 t.kernel_launches += 1;
@@ -124,7 +135,15 @@ impl LinearExec {
         }
     }
 
-    pub fn gemm(&self, x: &[f32], m: usize, y: &mut [f32], mode: SubMode, ws: &mut Workspace, t: &mut Traffic) {
+    pub fn gemm(
+        &self,
+        x: &[f32],
+        m: usize,
+        y: &mut [f32],
+        mode: SubMode,
+        ws: &mut Workspace,
+        t: &mut Traffic,
+    ) {
         match self {
             LinearExec::Dense { out, cin, w, bias } => {
                 t.kernel_launches += 1;
@@ -157,7 +176,9 @@ impl LinearExec {
 
     pub fn resident_bytes(&self) -> usize {
         match self {
-            LinearExec::Dense { w, bias, .. } => 4 * (w.len() + bias.as_ref().map_or(0, |b| b.len())),
+            LinearExec::Dense { w, bias, .. } => {
+                4 * (w.len() + bias.as_ref().map_or(0, |b| b.len()))
+            }
             LinearExec::Quant(q) => {
                 (q.code_bytes() as usize)
                     + 4 * (q.scales.len() + q.zeros.len())
@@ -183,6 +204,51 @@ struct Block {
     m1: LinearExec,
     m2: LinearExec,
     m3: Option<LinearExec>,
+}
+
+/// Per-slot request for what a multi-position batched step returns (see
+/// [`NativeEngine::step_batch_multi_sel`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowsWant {
+    /// Full logits at the last position only (the prefill / plain-decode
+    /// shape).
+    Last,
+    /// Full logits at every position of the slot's group (stochastic
+    /// verification scores the target distribution at every draft
+    /// position).
+    All,
+    /// Only the argmax token id per position: greedy verification
+    /// reduces each row to one id, so no `rows × vocab` floats are
+    /// materialized for the slot.
+    Argmax,
+}
+
+/// Per-slot result of [`NativeEngine::step_batch_multi_sel`].
+#[derive(Debug, Clone)]
+pub enum SlotLogits {
+    /// One `[vocab]` row per requested position ([`RowsWant::Last`]
+    /// yields exactly one).
+    Rows(Vec<Vec<f32>>),
+    /// One argmax id per position ([`RowsWant::Argmax`]).
+    Argmax(Vec<u32>),
+}
+
+impl SlotLogits {
+    /// The full logits rows (panics on an argmax-only result).
+    pub fn into_rows(self) -> Vec<Vec<f32>> {
+        match self {
+            SlotLogits::Rows(r) => r,
+            SlotLogits::Argmax(_) => panic!("argmax-only result has no logits rows"),
+        }
+    }
+
+    /// The argmax ids (panics on a full-rows result).
+    pub fn into_argmax(self) -> Vec<u32> {
+        match self {
+            SlotLogits::Argmax(ids) => ids,
+            SlotLogits::Rows(_) => panic!("full-rows result; use into_rows"),
+        }
+    }
 }
 
 /// Reusable engine buffers (one per worker thread / session).
@@ -227,7 +293,8 @@ impl NativeEngine {
         for l in 0..cfg.n_layers {
             let lin = |name: &str| -> Result<LinearExec> {
                 let (out, cin) = cfg.linear_shape(name);
-                Ok(LinearExec::from_weights_shaped(store.linear(&format!("l{l}.{name}"))?, out, cin))
+                let lw = store.linear(&format!("l{l}.{name}"))?;
+                Ok(LinearExec::from_weights_shaped(lw, out, cin))
             };
             let get_opt = |n: String| store.float(&n).ok().map(|v| v.to_vec());
             let (m1, m2, m3) = if cfg.gated() {
@@ -377,7 +444,8 @@ impl NativeEngine {
                     if self.cfg.rms() {
                         ops::rmsnorm(xrow, &blk.attn_norm_w, hrow, 1e-5);
                     } else {
-                        ops::layernorm(xrow, &blk.attn_norm_w, blk.attn_norm_b.as_ref().unwrap(), hrow, 1e-5);
+                        let b = blk.attn_norm_b.as_ref().unwrap();
+                        ops::layernorm(xrow, &blk.attn_norm_w, b, hrow, 1e-5);
                     }
                 }
             }
@@ -390,8 +458,9 @@ impl NativeEngine {
             if cfg.rope() {
                 for i in 0..t_len {
                     for h in 0..nh {
-                        ops::rope_rotate(&mut ws.qb[i * d + h * hd..i * d + (h + 1) * hd], i, cfg.rope_theta);
-                        ops::rope_rotate(&mut ws.kb[i * d + h * hd..i * d + (h + 1) * hd], i, cfg.rope_theta);
+                        let span = i * d + h * hd..i * d + (h + 1) * hd;
+                        ops::rope_rotate(&mut ws.qb[span.clone()], i, cfg.rope_theta);
+                        ops::rope_rotate(&mut ws.kb[span], i, cfg.rope_theta);
                     }
                 }
             }
@@ -433,7 +502,8 @@ impl NativeEngine {
                     if self.cfg.rms() {
                         ops::rmsnorm(xrow, &blk.mlp_norm_w, hrow, 1e-5);
                     } else {
-                        ops::layernorm(xrow, &blk.mlp_norm_w, blk.mlp_norm_b.as_ref().unwrap(), hrow, 1e-5);
+                        let b = blk.mlp_norm_b.as_ref().unwrap();
+                        ops::layernorm(xrow, &blk.mlp_norm_w, b, hrow, 1e-5);
                     }
                 }
                 ws.m3.resize(t_len * d, 0.0);
@@ -488,7 +558,13 @@ impl NativeEngine {
         self.step(token, kv, ws, true)
     }
 
-    fn step(&self, token: u32, kv: &mut dyn KvSlot, ws: &mut EngineWs, want_logits: bool) -> Vec<f32> {
+    fn step(
+        &self,
+        token: u32,
+        kv: &mut dyn KvSlot,
+        ws: &mut EngineWs,
+        want_logits: bool,
+    ) -> Vec<f32> {
         let cfg = &self.cfg;
         let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
         let pos = kv.len();
@@ -625,8 +701,10 @@ impl NativeEngine {
     /// [`NativeEngine::decode_one`] at that position.
     ///
     /// Returns logits per slot per position when `all_logits` (the
-    /// verifier shape), or only each slot's last position when not (the
-    /// prefill shape — one `[vocab]` row per slot).
+    /// full-rows verifier shape), or only each slot's last position when
+    /// not (the prefill shape — one `[vocab]` row per slot). This is
+    /// [`NativeEngine::step_batch_multi_sel`] with a uniform
+    /// [`RowsWant`] across slots.
     pub fn step_batch_multi(
         &self,
         groups: &[&[u32]],
@@ -634,7 +712,33 @@ impl NativeEngine {
         ws: &mut EngineWs,
         all_logits: bool,
     ) -> Vec<Vec<Vec<f32>>> {
+        let want = vec![if all_logits { RowsWant::All } else { RowsWant::Last }; groups.len()];
+        self.step_batch_multi_sel(groups, kv, ws, &want)
+            .into_iter()
+            .map(SlotLogits::into_rows)
+            .collect()
+    }
+
+    /// [`NativeEngine::step_batch_multi`] with a **per-slot output
+    /// selection**: `want[i]` picks what slot `i` gets back — its last
+    /// full row, every full row, or only the argmax id per row. All
+    /// selections ride the same single weight-stationary pass (the
+    /// transformer body is identical; only the final-norm + lm-head tail
+    /// differs), and the lm-head weights stream **once** for the whole
+    /// batch regardless of the mix, so verify weight traffic is
+    /// independent of both K and the greedy/sampled composition.
+    /// Argmax rows reduce to a running `(value, id)` maximum inside the
+    /// lm-head kernel — no `rows × vocab` logits buffer exists for them,
+    /// and ties resolve exactly as `ops::argmax` (first maximum).
+    pub fn step_batch_multi_sel(
+        &self,
+        groups: &[&[u32]],
+        kv: &mut dyn KvSlotBatch,
+        ws: &mut EngineWs,
+        want: &[RowsWant],
+    ) -> Vec<SlotLogits> {
         let m = groups.len();
+        assert_eq!(m, want.len(), "one RowsWant per slot group");
         assert!(m > 0, "batched step over zero slots");
         assert_eq!(m, kv.n_slots(), "group/slot count mismatch");
         let cfg = &self.cfg;
@@ -761,53 +865,73 @@ impl NativeEngine {
             kv.advance(i, g.len());
         }
 
-        // final norm + ONE batched lm-head over the rows needing logits
+        // final norm + ONE batched lm-head pass over exactly the rows
+        // the caller selected: full-logits rows first, then argmax-only
+        // rows (which never materialize a vocab-sized buffer)
         let vocab = cfg.vocab;
-        if all_logits {
-            ws.hrow.resize(rows * d, 0.0);
-            let mut hbuf = std::mem::take(&mut ws.hrow);
-            for r in 0..rows {
-                self.norm(
-                    &self.final_norm_w,
-                    self.final_norm_b.as_ref(),
-                    &ws.x[r * d..(r + 1) * d],
-                    &mut hbuf[r * d..(r + 1) * d],
-                );
-            }
-            let mut flat = vec![0f32; rows * vocab];
-            self.lm_head_multi(&hbuf, rows, &mut flat, ws);
-            ws.hrow = hbuf;
-            let mut out = Vec::with_capacity(m);
+        let mut row0 = Vec::with_capacity(m);
+        {
             let mut r = 0usize;
             for g in groups {
-                let mut per = Vec::with_capacity(g.len());
-                for _ in 0..g.len() {
-                    per.push(flat[r * vocab..(r + 1) * vocab].to_vec());
-                    r += 1;
-                }
-                out.push(per);
+                row0.push(r);
+                r += g.len();
             }
-            out
-        } else {
-            // only each slot's last position feeds sampling (prefill)
-            ws.hrow.resize(m * d, 0.0);
-            let mut hbuf = std::mem::take(&mut ws.hrow);
-            let mut consumed = 0usize;
-            for (i, g) in groups.iter().enumerate() {
-                consumed += g.len();
-                let r = consumed - 1;
-                self.norm(
-                    &self.final_norm_w,
-                    self.final_norm_b.as_ref(),
-                    &ws.x[r * d..(r + 1) * d],
-                    &mut hbuf[i * d..(i + 1) * d],
-                );
-            }
-            let mut flat = vec![0f32; m * vocab];
-            self.lm_head_multi(&hbuf, m, &mut flat, ws);
-            ws.hrow = hbuf;
-            (0..m).map(|i| vec![flat[i * vocab..(i + 1) * vocab].to_vec()]).collect()
         }
+        let mut full_rows: Vec<usize> = Vec::new();
+        let mut amax_rows: Vec<usize> = Vec::new();
+        for (i, g) in groups.iter().enumerate() {
+            match want[i] {
+                RowsWant::Last => full_rows.push(row0[i] + g.len() - 1),
+                RowsWant::All => full_rows.extend(row0[i]..row0[i] + g.len()),
+                RowsWant::Argmax => amax_rows.extend(row0[i]..row0[i] + g.len()),
+            }
+        }
+        let (n_full, n_amax) = (full_rows.len(), amax_rows.len());
+        ws.hrow.resize((n_full + n_amax) * d, 0.0);
+        let mut hbuf = std::mem::take(&mut ws.hrow);
+        for (j, &r) in full_rows.iter().chain(amax_rows.iter()).enumerate() {
+            self.norm(
+                &self.final_norm_w,
+                self.final_norm_b.as_ref(),
+                &ws.x[r * d..(r + 1) * d],
+                &mut hbuf[j * d..(j + 1) * d],
+            );
+        }
+        let mut flat = vec![0f32; n_full * vocab];
+        let mut best = vec![(f32::NEG_INFINITY, 0u32); n_amax];
+        self.lm_head_select(&hbuf, n_full, n_amax, &mut flat, &mut best, ws);
+        ws.hrow = hbuf;
+        let mut out = Vec::with_capacity(m);
+        let (mut fi, mut ai) = (0usize, 0usize);
+        for (i, g) in groups.iter().enumerate() {
+            match want[i] {
+                RowsWant::Last => {
+                    out.push(SlotLogits::Rows(vec![flat[fi * vocab..(fi + 1) * vocab].to_vec()]));
+                    fi += 1;
+                }
+                RowsWant::All => {
+                    let per = (0..g.len())
+                        .map(|_| {
+                            let row = flat[fi * vocab..(fi + 1) * vocab].to_vec();
+                            fi += 1;
+                            row
+                        })
+                        .collect();
+                    out.push(SlotLogits::Rows(per));
+                }
+                RowsWant::Argmax => {
+                    let ids = (0..g.len())
+                        .map(|_| {
+                            let id = best[ai].1;
+                            ai += 1;
+                            id
+                        })
+                        .collect();
+                    out.push(SlotLogits::Argmax(ids));
+                }
+            }
+        }
+        out
     }
 
     /// Batched MLP mirroring [`NativeEngine::mlp`] with the
@@ -860,6 +984,97 @@ impl NativeEngine {
                 let wrow = &self.lm_head[o * d..(o + 1) * d];
                 for i in 0..m {
                     tile[(o - lo) * m + i] = ops::dot(&h[i * d..(i + 1) * d], wrow);
+                }
+            }
+        });
+    }
+
+    /// One lm-head pass over `n_full + n_amax` normed rows (`h` holds
+    /// the full-logits rows first, then the argmax-only rows): full rows
+    /// land in `flat [n_full, vocab]`, argmax rows reduce to a running
+    /// `(value, id)` maximum in `best` — no vocab-sized buffer is ever
+    /// written for them. The weight matrix streams once for the whole
+    /// mix (one traffic charge, independent of the full/argmax split);
+    /// vocab rows fan out over the `FBQ_THREADS` pool when large enough,
+    /// and chunk results merge in ascending vocab order with a strict
+    /// `>` so argmax ties resolve exactly as the serial first-max scan
+    /// (`ops::argmax`).
+    fn lm_head_select(
+        &self,
+        h: &[f32],
+        n_full: usize,
+        n_amax: usize,
+        flat: &mut [f32],
+        best: &mut [(f32, u32)],
+        ws: &mut EngineWs,
+    ) {
+        let (d, vocab) = (self.cfg.d_model, self.cfg.vocab);
+        if n_amax == 0 {
+            // pure full-rows shape: the allocation-free tiled kernel
+            self.lm_head_multi(h, n_full, flat, ws);
+            return;
+        }
+        {
+            let t = &mut ws.traffic;
+            t.kernel_launches += 1;
+            t.bytes_read += 4 * (self.lm_head.len() + (n_full + n_amax) * d) as u64;
+            t.weight_bytes += 4 * self.lm_head.len() as u64;
+            t.bytes_written += 4 * (n_full * vocab + n_amax) as u64;
+            t.macs += ((n_full + n_amax) * vocab * d) as u64;
+        }
+        let (h_full, h_amax) = h.split_at(n_full * d);
+        let threads = kernels::plan_threads((n_full + n_amax) * vocab * d);
+        if threads <= 1 {
+            for o in 0..vocab {
+                let wrow = &self.lm_head[o * d..(o + 1) * d];
+                for i in 0..n_full {
+                    flat[i * vocab + o] = ops::dot(&h_full[i * d..(i + 1) * d], wrow);
+                }
+                for j in 0..n_amax {
+                    let v = ops::dot(&h_amax[j * d..(j + 1) * d], wrow);
+                    if v > best[j].0 {
+                        best[j] = (v, o as u32);
+                    }
+                }
+            }
+            return;
+        }
+        let chunks = kernels::split_rows(vocab, threads);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = chunks
+                .iter()
+                .map(|&(lo, hi)| {
+                    s.spawn(move || {
+                        let mut tile = vec![0f32; (hi - lo) * n_full];
+                        let mut lbest = vec![(f32::NEG_INFINITY, 0u32); n_amax];
+                        for o in lo..hi {
+                            let wrow = &self.lm_head[o * d..(o + 1) * d];
+                            for i in 0..n_full {
+                                tile[(o - lo) * n_full + i] =
+                                    ops::dot(&h_full[i * d..(i + 1) * d], wrow);
+                            }
+                            for j in 0..n_amax {
+                                let v = ops::dot(&h_amax[j * d..(j + 1) * d], wrow);
+                                if v > lbest[j].0 {
+                                    lbest[j] = (v, o as u32);
+                                }
+                            }
+                        }
+                        (lo, hi, tile, lbest)
+                    })
+                })
+                .collect();
+            for hnd in handles {
+                let (lo, hi, tile, lbest) = hnd.join().expect("lm-head worker panicked");
+                for o in lo..hi {
+                    for i in 0..n_full {
+                        flat[i * vocab + o] = tile[(o - lo) * n_full + i];
+                    }
+                }
+                for j in 0..n_amax {
+                    if lbest[j].0 > best[j].0 {
+                        best[j] = lbest[j];
+                    }
                 }
             }
         });

@@ -84,7 +84,8 @@ pub fn cmd_info(_args: &Args) -> Result<()> {
         Ok(m) => {
             println!("HLO artifacts ({}):", m.artifacts.len());
             for a in &m.artifacts {
-                println!("  {:40} kind={} batch={} inputs={}", a.name, a.kind, a.batch, a.inputs.len());
+                let n_inputs = a.inputs.len();
+                println!("  {:40} kind={} batch={} inputs={n_inputs}", a.name, a.kind, a.batch);
             }
         }
         Err(_) => println!("no HLO manifest (run `make artifacts`)"),
@@ -145,7 +146,8 @@ pub fn cmd_judge(args: &Args) -> Result<()> {
     }
     let r = super::judge::compare(&nlls[0], &nlls[1], margin);
     println!(
-        "{model} w{bits}: {method_a} vs {method_b}: win {:.1}% / tie {:.1}% / loss {:.1}% ({} trials)",
+        "{model} w{bits}: {method_a} vs {method_b}: \
+         win {:.1}% / tie {:.1}% / loss {:.1}% ({} trials)",
         r.win_pct(),
         r.tie_pct(),
         r.loss_pct(),
@@ -234,7 +236,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let mut receivers = Vec::new();
     for (req, arrival) in workload.requests.into_iter().zip(workload.arrivals) {
         if wl_cfg.arrival_rate > 0.0 {
-            std::thread::sleep(arrival.saturating_sub(std::time::Duration::ZERO).min(std::time::Duration::from_millis(50)));
+            let nap = arrival
+                .saturating_sub(std::time::Duration::ZERO)
+                .min(std::time::Duration::from_millis(50));
+            std::thread::sleep(nap);
         }
         receivers.push(handle.submit(req));
     }

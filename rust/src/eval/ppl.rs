@@ -27,7 +27,11 @@ pub struct PplResult {
     pub tokens: usize,
 }
 
-pub fn perplexity(scorer: &mut dyn Scorer, stream: &TokenStream, cfg: PplConfig) -> Result<PplResult> {
+pub fn perplexity(
+    scorer: &mut dyn Scorer,
+    stream: &TokenStream,
+    cfg: PplConfig,
+) -> Result<PplResult> {
     let max_windows = cfg.max_tokens / cfg.seq;
     let windows = stream.windows(cfg.seq, max_windows);
     let mut total_ll = 0f64;

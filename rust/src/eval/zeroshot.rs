@@ -26,7 +26,11 @@ impl TaskResult {
 }
 
 /// Evaluate one task. `max_questions` truncates for fast subset runs.
-pub fn eval_task(scorer: &mut dyn Scorer, task: &McTask, max_questions: usize) -> Result<TaskResult> {
+pub fn eval_task(
+    scorer: &mut dyn Scorer,
+    task: &McTask,
+    max_questions: usize,
+) -> Result<TaskResult> {
     let mut correct = 0usize;
     let n = task.questions.len().min(max_questions);
     for q in task.questions.iter().take(n) {
@@ -130,7 +134,8 @@ mod tests {
         .unwrap();
         let mut s = AscScorer { cfg: Config::from_json(&j).unwrap() };
         let q = McQuestion { context: vec![1], options: vec![vec![2], vec![5]], correct: 0 };
-        let task = McTask { name: "t".into(), n_options: 2, questions: vec![q.clone(), q.clone(), q] };
+        let task =
+            McTask { name: "t".into(), n_options: 2, questions: vec![q.clone(), q.clone(), q] };
         let r = eval_task(&mut s, &task, 2).unwrap();
         assert_eq!(r.n, 2);
     }

@@ -154,7 +154,8 @@ impl WeightStore {
                 let lw = if arc.contains(&format!("{prefix}/codes_packed")) {
                     let packed_t = arc.get(&format!("{prefix}/codes_packed"))?;
                     if packed_t.shape != vec![out, cin / 8] {
-                        bail!("{prefix}: packed shape {:?} != [{out}, {}]", packed_t.shape, cin / 8);
+                        let ps = &packed_t.shape;
+                        bail!("{prefix}: packed shape {ps:?} != [{out}, {}]", cin / 8);
                     }
                     let get_opt = |suffix: &str| -> Result<Option<Vec<f32>>> {
                         let n = format!("{prefix}/{suffix}");

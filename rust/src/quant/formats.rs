@@ -154,10 +154,18 @@ impl Archive {
         let meta = header.get("meta").cloned().unwrap_or(Json::Obj(vec![]));
         let mut order = Vec::new();
         let mut tensors = HashMap::new();
-        for e in header.req("tensors").map_err(anyhow::Error::msg)?.as_arr().context("tensors not array")? {
-            let name = e.req("name").map_err(anyhow::Error::msg)?.as_str().context("name")?.to_string();
-            let dtype = Dtype::from_name(e.req("dtype").map_err(anyhow::Error::msg)?.as_str().context("dtype")?)?;
-            let shape = e.req("shape").map_err(anyhow::Error::msg)?.as_usize_vec().context("shape")?;
+        fn req<'a>(e: &'a Json, key: &str) -> Result<&'a Json> {
+            e.req(key).map_err(anyhow::Error::msg)
+        }
+        let entries = header
+            .req("tensors")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("tensors not array")?;
+        for e in entries {
+            let name = req(e, "name")?.as_str().context("name")?.to_string();
+            let dtype = Dtype::from_name(req(e, "dtype")?.as_str().context("dtype")?)?;
+            let shape = req(e, "shape")?.as_usize_vec().context("shape")?;
             let offset = e.req("offset").map_err(anyhow::Error::msg)?.as_usize().context("offset")?;
             let nbytes = e.req("nbytes").map_err(anyhow::Error::msg)?.as_usize().context("nbytes")?;
             if offset + nbytes > payload.len() {
@@ -193,7 +201,11 @@ impl Archive {
     }
 
     /// Write an archive (used by tests and weight-conversion tools).
-    pub fn write(path: &Path, tensors: &[(String, Dtype, Vec<usize>, Vec<u8>)], meta: &Json) -> Result<()> {
+    pub fn write(
+        path: &Path,
+        tensors: &[(String, Dtype, Vec<usize>, Vec<u8>)],
+        meta: &Json,
+    ) -> Result<()> {
         let mut entries = Vec::new();
         let mut offset = 0usize;
         let mut blobs: Vec<(usize, &Vec<u8>)> = Vec::new();

@@ -21,7 +21,12 @@ impl TensorSpec {
         Ok(TensorSpec {
             name: j.req("name").map_err(anyhow::Error::msg)?.as_str().context("name")?.to_string(),
             shape: j.req("shape").map_err(anyhow::Error::msg)?.as_usize_vec().context("shape")?,
-            dtype: j.req("dtype").map_err(anyhow::Error::msg)?.as_str().context("dtype")?.to_string(),
+            dtype: j
+                .req("dtype")
+                .map_err(anyhow::Error::msg)?
+                .as_str()
+                .context("dtype")?
+                .to_string(),
         })
     }
 }
@@ -58,8 +63,18 @@ impl Manifest {
         for a in j.req("artifacts").map_err(anyhow::Error::msg)?.as_arr().context("artifacts")? {
             let get_usize = |k: &str| a.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
             artifacts.push(ArtifactSpec {
-                name: a.req("name").map_err(anyhow::Error::msg)?.as_str().context("name")?.to_string(),
-                path: a.req("path").map_err(anyhow::Error::msg)?.as_str().context("path")?.to_string(),
+                name: a
+                    .req("name")
+                    .map_err(anyhow::Error::msg)?
+                    .as_str()
+                    .context("name")?
+                    .to_string(),
+                path: a
+                    .req("path")
+                    .map_err(anyhow::Error::msg)?
+                    .as_str()
+                    .context("path")?
+                    .to_string(),
                 kind: a.get("kind").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
                 model: a.get("model").and_then(|v| v.as_str()).map(|s| s.to_string()),
                 quantized: a.get("quantized").and_then(|v| v.as_bool()).unwrap_or(false),

@@ -210,7 +210,10 @@ pub fn build_weight_feed(spec: &ArtifactSpec, store: &WeightStore) -> Result<Vec
                     }
                 }
                 (crate::model::LinearWeights::Dense { .. }, _) => {
-                    bail!("artifact '{}' is quantized but checkpoint layer '{prefix}' is dense", spec.name)
+                    bail!(
+                        "artifact '{}' is quantized but checkpoint layer '{prefix}' is dense",
+                        spec.name
+                    )
                 }
                 (_, other) => bail!("unknown quant field '{other}'"),
             }

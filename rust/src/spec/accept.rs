@@ -1,0 +1,227 @@
+//! Rejection-sampling acceptance for stochastic speculative decoding.
+//!
+//! The classic speculative-sampling rule (Leviathan et al. / Chen et
+//! al.): a draft token `d ~ q(·)` is accepted with probability
+//! `min(1, p(d)/q(d))`; on rejection the slot resamples from the
+//! normalized residual `r(x) ∝ max(0, p(x) − q(x))`. The marginal of the
+//! emitted token is then *exactly* `p` — acceptance contributes
+//! `q(x)·min(1, p(x)/q(x)) = min(p(x), q(x))` and the rejection branch
+//! contributes `(1 − Σ min(p, q)) · r(x) = max(0, p(x) − q(x))`, which
+//! sum to `p(x)` pointwise. Speculation therefore changes how many
+//! weight streams a sampled token costs, never its distribution — the
+//! invariant `rust/tests/spec_sampled.rs` pins statistically.
+//!
+//! `p` and `q` here are *post-sampling-params* distributions (temperature
+//! / top-k / top-p applied, see `crate::coordinator::sampler::
+//! distribution`), so the guarantee is equality with the plain sampled
+//! decode path, not with the raw softmax.
+
+use crate::coordinator::sampler::draw_from;
+use crate::util::Pcg64;
+
+/// Probability of accepting draft token `d` given target mass `p_d` and
+/// draft mass `q_d` at that token: `min(1, p_d/q_d)`. A draft token the
+/// target assigns zero mass is always rejected; `q_d` is positive for
+/// any token actually drawn from `q`.
+pub fn accept_prob(p_d: f64, q_d: f64) -> f64 {
+    if p_d <= 0.0 {
+        0.0
+    } else if q_d <= 0.0 || p_d >= q_d {
+        1.0
+    } else {
+        p_d / q_d
+    }
+}
+
+/// The normalized residual distribution `max(0, p − q) / Σ max(0, p − q)`
+/// a rejected position resamples from. When the residual carries no mass
+/// (`p == q` up to float noise — a rejection is then itself a
+/// measure-zero float artifact), falls back to `p` so the draw stays
+/// well-defined and still distributed as the target.
+pub fn residual(p: &[f64], q: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(p.len(), q.len(), "residual over mismatched supports");
+    let mut r: Vec<f64> = p.iter().zip(q).map(|(&pv, &qv)| (pv - qv).max(0.0)).collect();
+    let mass: f64 = r.iter().sum();
+    if mass <= f64::EPSILON {
+        return p.to_vec();
+    }
+    for v in r.iter_mut() {
+        *v /= mass;
+    }
+    r
+}
+
+/// Analytic per-position acceptance rate `Σ_x min(p(x), q(x))` — the
+/// probability a draft drawn from `q` survives verification against `p`.
+pub fn analytic_accept_rate(p: &[f64], q: &[f64]) -> f64 {
+    p.iter().zip(q).map(|(&pv, &qv)| pv.min(qv)).sum()
+}
+
+/// Stochastic acceptance for one slot's speculative step, with the
+/// target distributions supplied **lazily**: `target(j)` builds the
+/// target's post-params distribution after feeding the j-th token of
+/// `[t, drafts...]` (`j` ranges over `0..=drafts.len()`). The accept
+/// loop consumes each row at most once and stops at the first
+/// rejection, so rows past it — at real vocab sizes each a sort plus a
+/// vocab-sized allocation — are never built. `drafts` were drawn
+/// sequentially from the draft distributions `qs` (`qs[j]` is the draft
+/// model's post-params distribution at position `j`). Returns
+/// `(a, next)`: the number of leading drafts accepted, and the slot's
+/// next feed token — a residual resample at the first rejection, or a
+/// bonus draw from the target's last row after full acceptance. The
+/// committed stream `drafts[..a] ++ [next]` is distributed exactly as
+/// sequential sampling from the target.
+pub fn stochastic_accept_with<F>(
+    drafts: &[u32],
+    qs: &[Vec<f64>],
+    mut target: F,
+    rng: &mut Pcg64,
+) -> (usize, u32)
+where
+    F: FnMut(usize) -> Vec<f64>,
+{
+    debug_assert_eq!(qs.len(), drafts.len(), "one draft row per proposal");
+    for (j, &d) in drafts.iter().enumerate() {
+        let p = target(j);
+        let acc = accept_prob(p[d as usize], qs[j][d as usize]);
+        if rng.next_f64() >= acc {
+            let r = residual(&p, &qs[j]);
+            return (j, draw_from(rng, &r));
+        }
+    }
+    (drafts.len(), draw_from(rng, &target(drafts.len())))
+}
+
+/// [`stochastic_accept_with`] over precomputed target rows
+/// (`ps.len() == drafts.len() + 1`) — the shape the property tests and
+/// hand-built p/q cases use.
+pub fn stochastic_accept(
+    drafts: &[u32],
+    qs: &[Vec<f64>],
+    ps: &[Vec<f64>],
+    rng: &mut Pcg64,
+) -> (usize, u32) {
+    debug_assert_eq!(ps.len(), drafts.len() + 1, "one target row per fed token");
+    stochastic_accept_with(drafts, qs, |j| ps[j].clone(), rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen};
+    use crate::prop_assert_ok;
+
+    fn random_dist(g: &mut Gen, n: usize) -> Vec<f64> {
+        let mut d: Vec<f64> = (0..n).map(|_| g.rng.next_f64() + 1e-3).collect();
+        // sparsify some entries to exercise disjoint supports
+        for v in d.iter_mut() {
+            if g.rng.below(4) == 0 {
+                *v = 0.0;
+            }
+        }
+        if d.iter().sum::<f64>() <= 0.0 {
+            d[0] = 1.0;
+        }
+        let total: f64 = d.iter().sum();
+        d.into_iter().map(|v| v / total).collect()
+    }
+
+    #[test]
+    fn prop_residual_is_a_valid_distribution() {
+        prop_assert_ok!(check("residual_valid", 200, |g| {
+            let n = g.usize_range(2, 24);
+            let p = random_dist(g, n);
+            let q = random_dist(g, n);
+            let r = residual(&p, &q);
+            if r.iter().any(|&v| v < 0.0) {
+                return Err("negative residual mass".into());
+            }
+            let total: f64 = r.iter().sum();
+            if (total - 1.0).abs() > 1e-9 {
+                return Err(format!("residual sums to {total}"));
+            }
+            // residual support lies inside p's support
+            for (i, (&rv, &pv)) in r.iter().zip(&p).enumerate() {
+                if rv > 0.0 && pv <= 0.0 {
+                    return Err(format!("residual puts mass at {i} where p has none"));
+                }
+            }
+            Ok(())
+        }));
+    }
+
+    #[test]
+    fn residual_of_identical_distributions_falls_back_to_target() {
+        let p = vec![0.25, 0.5, 0.25];
+        assert_eq!(residual(&p, &p), p);
+    }
+
+    #[test]
+    fn accept_prob_clamps() {
+        assert_eq!(accept_prob(0.0, 0.5), 0.0);
+        assert_eq!(accept_prob(0.5, 0.25), 1.0);
+        assert!((accept_prob(0.2, 0.4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn acceptance_matches_analytic_rate_on_handbuilt_pairs() {
+        // q proposes the wrong head token half the time: p = (0.8, 0.2),
+        // q = (0.4, 0.6) → analytic rate = min(.8,.4) + min(.2,.6) = 0.6
+        let p = vec![0.8, 0.2];
+        let q = vec![0.4, 0.6];
+        let rate = analytic_accept_rate(&p, &q);
+        assert!((rate - 0.6).abs() < 1e-12);
+        let mut rng = Pcg64::seeded(0xacce);
+        let n = 40_000usize;
+        let mut accepted = 0usize;
+        let mut emitted = vec![0usize; 2];
+        for _ in 0..n {
+            let d = draw_from(&mut rng, &q);
+            let (a, next) =
+                stochastic_accept(&[d], &[q.clone()], &[p.clone(), p.clone()], &mut rng);
+            accepted += a;
+            // the first emitted token: the accepted draft or the residual
+            // resample — must be ~ p either way
+            emitted[if a == 1 { d as usize } else { next as usize }] += 1;
+        }
+        let emp_rate = accepted as f64 / n as f64;
+        assert!((emp_rate - rate).abs() < 0.01, "empirical {emp_rate} vs analytic {rate}");
+        let emp_p0 = emitted[0] as f64 / n as f64;
+        assert!((emp_p0 - p[0]).abs() < 0.01, "emitted marginal {emp_p0} vs target {}", p[0]);
+    }
+
+    #[test]
+    fn prop_first_emitted_token_is_target_distributed() {
+        prop_assert_ok!(check("stochastic_marginal", 6, |g| {
+            let n = g.usize_range(2, 8);
+            let p = random_dist(g, n);
+            let q = {
+                // q must cover nothing beyond proposals it can draw; any
+                // q works for correctness — use an independent random one
+                let mut q = random_dist(g, n);
+                if q.iter().sum::<f64>() <= 0.0 {
+                    q = p.clone();
+                }
+                q
+            };
+            let trials = 30_000usize;
+            let mut counts = vec![0usize; n];
+            for _ in 0..trials {
+                let d = draw_from(g.rng, &q);
+                let (a, next) =
+                    stochastic_accept(&[d], &[q.clone()], &[p.clone(), p.clone()], g.rng);
+                counts[if a == 1 { d as usize } else { next as usize }] += 1;
+            }
+            let tv: f64 = counts
+                .iter()
+                .zip(&p)
+                .map(|(&c, &pv)| (c as f64 / trials as f64 - pv).abs())
+                .sum::<f64>()
+                / 2.0;
+            if tv > 0.02 {
+                return Err(format!("total variation {tv:.4} from target"));
+            }
+            Ok(())
+        }));
+    }
+}

@@ -1,0 +1,182 @@
+//! Per-slot adaptive draft depth from a running acceptance-rate EWMA.
+//!
+//! Drafting is only free while proposals survive verification: every
+//! rejected draft cost a draft weight stream (and draft-KV pages) for
+//! nothing. [`KController`] tracks each slot's acceptance rate with an
+//! exponentially-weighted moving average and scales the next step's
+//! draft window proportionally — `k = round(rate · k_max)`, clamped to
+//! `[1, k_max]` while the rate sits above the degrade threshold (a k=0
+//! step observes nothing, so it must only happen on the probed degrade
+//! path below). Below [`DEGRADE_RATE`] the slot degrades to
+//! plain decode (`k = 0`) but keeps probing with a single draft every
+//! [`PROBE_EVERY`] steps so a slot whose text becomes draft-friendly
+//! again (e.g. leaves a hard span) can climb back out.
+//!
+//! The controller starts optimistic (`rate = 1.0` → `k_max`): the first
+//! steps measure the actual rate and the EWMA converges within a few
+//! observations at `alpha = `[`EWMA_ALPHA`].
+
+/// EWMA weight of the newest observation.
+pub const EWMA_ALPHA: f64 = 0.25;
+
+/// Acceptance rate below which a slot stops drafting (plain decode).
+pub const DEGRADE_RATE: f64 = 0.125;
+
+/// While degraded, probe with one draft every this many steps.
+pub const PROBE_EVERY: usize = 16;
+
+/// One slot's adaptive draft-depth state.
+#[derive(Debug, Clone)]
+pub struct KController {
+    k_max: usize,
+    rate: f64,
+    steps_since_probe: usize,
+}
+
+impl KController {
+    pub fn new(k_max: usize) -> KController {
+        KController { k_max, rate: 1.0, steps_since_probe: 0 }
+    }
+
+    /// Current acceptance-rate estimate in `[0, 1]`.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Draft window for the next step, in `[0, k_max]`. Advances the
+    /// probe counter, so call once per speculative step.
+    pub fn next_k(&mut self) -> usize {
+        if self.rate < DEGRADE_RATE {
+            self.steps_since_probe += 1;
+            if self.steps_since_probe >= PROBE_EVERY {
+                self.steps_since_probe = 0;
+                return 1.min(self.k_max);
+            }
+            return 0;
+        }
+        self.steps_since_probe = 0;
+        // floor at 1 above the degrade threshold: at small k_max,
+        // rounding alone could yield 0 in the band
+        // [DEGRADE_RATE, 0.5/k_max) — and a k=0 step observes nothing,
+        // which would freeze the estimate (and the slot) there forever.
+        // (The 1.min guards a directly-constructed k_max = 0 controller
+        // — the backend rejects that at config time — since
+        // usize::clamp panics when min > max.)
+        ((self.rate * self.k_max as f64).round() as usize).clamp(1.min(self.k_max), self.k_max)
+    }
+
+    /// Fold one step's outcome into the estimate. Steps that proposed
+    /// nothing (window clamped to zero by max_seq or pool pressure)
+    /// carry no acceptance signal and leave the estimate unchanged.
+    /// Inputs are clamped so an adversarial `accepted > proposed` report
+    /// cannot push the estimate outside `[0, 1]`.
+    pub fn observe(&mut self, proposed: usize, accepted: usize) {
+        if proposed == 0 {
+            return;
+        }
+        let r = (accepted as f64 / proposed as f64).clamp(0.0, 1.0);
+        self.rate = (1.0 - EWMA_ALPHA) * self.rate + EWMA_ALPHA * r;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert_ok;
+    use crate::testing::check;
+
+    #[test]
+    fn full_acceptance_holds_k_max() {
+        let mut c = KController::new(4);
+        for _ in 0..50 {
+            let k = c.next_k();
+            assert_eq!(k, 4);
+            c.observe(k, k);
+        }
+        assert!((c.rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_acceptance_degrades_to_plain_decode_with_probes() {
+        let mut c = KController::new(4);
+        let mut ks = Vec::new();
+        for _ in 0..200 {
+            let k = c.next_k();
+            ks.push(k);
+            c.observe(k, 0);
+        }
+        // converges to 0 with periodic single-draft probes
+        let tail = &ks[ks.len() - 3 * PROBE_EVERY..];
+        assert!(tail.iter().all(|&k| k <= 1), "{tail:?}");
+        assert!(tail.contains(&0), "never degraded: {tail:?}");
+        assert!(tail.contains(&1), "never probed: {tail:?}");
+        assert_eq!(
+            tail.iter().filter(|&&k| k == 1).count(),
+            3,
+            "one probe per {PROBE_EVERY} steps: {tail:?}"
+        );
+    }
+
+    #[test]
+    fn recovers_after_a_hard_span() {
+        let mut c = KController::new(4);
+        for _ in 0..100 {
+            let k = c.next_k();
+            c.observe(k, 0);
+        }
+        assert_eq!(c.next_k(), 0, "degraded after sustained rejection");
+        // acceptance returns: probes pull the estimate back up
+        for _ in 0..200 {
+            let k = c.next_k();
+            c.observe(k, k);
+        }
+        assert_eq!(c.next_k(), 4, "failed to climb back to k_max");
+    }
+
+    #[test]
+    fn small_k_max_never_freezes_between_degrade_and_probe() {
+        // regression: with k_max = 1, a rate in [DEGRADE_RATE, 0.5)
+        // would round to 0 without entering the probe branch — the slot
+        // must keep drafting (k = 1) so the estimate stays live
+        for k_max in 1..=3usize {
+            let mut c = KController::new(k_max);
+            for step in 0..300 {
+                let k = c.next_k();
+                if c.rate() >= DEGRADE_RATE {
+                    assert!(k >= 1, "k_max={k_max} step={step}: live slot stopped drafting");
+                }
+                // alternate rejection/acceptance so the rate hovers
+                c.observe(k, if step % 2 == 0 { 0 } else { k });
+            }
+            // and it can still climb back to full depth
+            for _ in 0..100 {
+                let k = c.next_k();
+                c.observe(k, k);
+            }
+            assert_eq!(c.next_k(), k_max, "k_max={k_max} failed to recover");
+        }
+    }
+
+    #[test]
+    fn prop_k_never_leaves_bounds_under_adversarial_streams() {
+        prop_assert_ok!(check("adaptive_k_bounds", 100, |g| {
+            let k_max = g.usize_range(1, 8);
+            let mut c = KController::new(k_max);
+            for _ in 0..300 {
+                let k = c.next_k();
+                if k > k_max {
+                    return Err(format!("k={k} above k_max={k_max}"));
+                }
+                // adversarial: proposed/accepted unrelated to k, accepted
+                // may even exceed proposed
+                let proposed = g.usize_range(0, 8);
+                let accepted = g.usize_range(0, 12);
+                c.observe(proposed, accepted);
+                if !(0.0..=1.0).contains(&c.rate()) {
+                    return Err(format!("rate {} outside [0, 1]", c.rate()));
+                }
+            }
+            Ok(())
+        }));
+    }
+}

@@ -14,13 +14,21 @@
 //!
 //! ```text
 //!   target KV at L, input token t (sampled, uncommitted)
-//!     draft:   K greedy steps on the degraded branch  → d_1 .. d_K
-//!              (batched across slots; draft KV mirrors advance to L+K)
+//!     draft:   K steps on the degraded branch → d_1 .. d_K
+//!              greedy slots: argmax chain; sampled slots: d_j ~ q_j,
+//!              the draft's post-params distribution (recorded for the
+//!              accept ratio). Batched across slots; draft KV mirrors
+//!              advance to L+K.
 //!     verify:  ONE multi-position pass over the target
-//!              (NativeEngine::step_batch_multi, rows = m·(K+1)):
-//!              feed [t, d_1 .. d_K]  → logits at every position
-//!     accept:  greedy — d_j commits while d_j == argmax(logits_{j-1});
-//!              first mismatch yields the correction token instead
+//!              (NativeEngine::step_batch_multi_sel, rows = m·(K+1)):
+//!              feed [t, d_1 .. d_K] — greedy slots fetch only the
+//!              argmax id per row (no rows×vocab materialization),
+//!              sampled slots fetch the full logits rows they need
+//!     accept:  greedy — d_j commits while d_j == argmax_{j-1}
+//!              ([`greedy_accept_ids`]); sampled — d_j commits with
+//!              probability min(1, p_j(d_j)/q_j(d_j)) and the first
+//!              rejection resamples from the normalized residual
+//!              max(0, p_j − q_j) ([`accept::stochastic_accept`])
 //!     commit:  a accepted drafts + 1 correction/bonus = 1..=K+1 tokens
 //!     rollback: truncate BOTH caches to L+1+a (KvSlot::truncate /
 //!              KvPagePool::truncate_kv — rejected positions and page
@@ -30,27 +38,45 @@
 //!              draft pass (no extra draft weight stream)
 //! ```
 //!
-//! Because acceptance compares against the verifier's own greedy argmax
-//! and the multi-position step is bit-identical per row to sequential
-//! decode, the committed stream is **token-identical to non-speculative
-//! greedy decode** — speculation only changes how many weight streams
-//! each token costs, never which token is emitted. The verifier streams
-//! its weights once per step regardless of K, so weight bytes per
-//! committed token fall whenever at least one draft survives per step
-//! on average.
+//! Greedy acceptance compares against the verifier's own argmax, and the
+//! multi-position step is bit-identical per row to sequential decode, so
+//! the greedy committed stream is **token-identical to non-speculative
+//! greedy decode**. Stochastic acceptance is the classic rejection rule
+//! (see [`accept`]): the committed stream is **distributed exactly as
+//! plain sampled decode** — `rust/tests/spec_sampled.rs` pins that with
+//! a seeded conformance harness. Either way, speculation only changes
+//! how many weight streams each token costs, never what is emitted (in
+//! value or in law). The verifier streams its weights once per step
+//! regardless of K, so weight bytes per committed token fall whenever at
+//! least one draft survives per step on average.
+//!
+//! With [`SpeculativeConfig::adaptive`], each slot's draft window tracks
+//! its own acceptance-rate EWMA ([`adaptive::KController`]): `k` scales
+//! with the measured rate within `[0, k_max]`, degrading to plain decode
+//! (with periodic probes) on draft-hostile text.
 //!
 //! Wiring lives in `coordinator::backend`
 //! (`NativeBackend::with_speculative`, `Backend::decode_speculative`)
 //! and `coordinator::server` (slots emit `1..=K+1` tokens per scheduling
 //! step); this module owns the draft state ([`DraftKv`]), the drafting
-//! loop ([`draft_tokens`]) and the acceptance rule ([`greedy_accept`]).
+//! loop ([`draft_tokens`]) and the acceptance rules ([`greedy_accept_ids`],
+//! [`accept::stochastic_accept`]).
 
+pub mod accept;
+pub mod adaptive;
 pub mod draft;
 
+pub use accept::{
+    accept_prob, analytic_accept_rate, residual, stochastic_accept, stochastic_accept_with,
+};
+pub use adaptive::KController;
 pub use draft::DraftKv;
 
+use crate::coordinator::request::SamplingParams;
+use crate::coordinator::sampler::{distribution, draw_from};
 use crate::engine::native::{EngineWs, NativeEngine};
 use crate::tensor::ops;
+use crate::util::Pcg64;
 
 /// Which degraded configuration drafts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,10 +94,25 @@ pub enum DraftMode {
 /// Speculative-decoding configuration carried by a backend.
 #[derive(Debug, Clone, Copy)]
 pub struct SpeculativeConfig {
-    /// Draft depth: up to `k` proposals per slot per step (each step
-    /// commits `1..=k+1` tokens).
+    /// Draft depth ceiling: up to `k` proposals per slot per step (each
+    /// step commits `1..=k+1` tokens). With `adaptive`, the per-slot
+    /// window moves within `[0, k]`.
     pub k: usize,
     pub draft: DraftMode,
+    /// Drive each slot's draft window from its acceptance-rate EWMA
+    /// ([`adaptive::KController`]) instead of always drafting `k`.
+    pub adaptive: bool,
+}
+
+impl SpeculativeConfig {
+    pub fn new(k: usize, draft: DraftMode) -> SpeculativeConfig {
+        SpeculativeConfig { k, draft, adaptive: false }
+    }
+
+    pub fn with_adaptive(mut self) -> SpeculativeConfig {
+        self.adaptive = true;
+        self
+    }
 }
 
 /// Outcome of one speculative step for one slot.
@@ -83,17 +124,19 @@ pub struct SpecStep {
     /// slot's next feed token, exactly like plain decode's sample).
     pub next: u32,
     /// Draft tokens proposed (acceptance-rate denominator; can be less
-    /// than the configured `k` near `max_seq` or under pool pressure).
+    /// than the configured `k` near `max_seq`, under pool pressure, or
+    /// under an adaptive controller).
     pub proposed: usize,
 }
 
 /// Per-backend speculative state: the config, the optional shadow
 /// engine, the draft-side workspace (draft traffic is metered apart
-/// from the target's), the draft KV mirrors and the per-slot **lazy
+/// from the target's), the draft KV mirrors, the per-slot **lazy
 /// catch-up queues** — tokens the target committed that the mirror has
-/// not fed yet. They ride the NEXT step's first draft pass as extra
+/// not fed yet (they ride the NEXT step's first draft pass as extra
 /// positions, so full acceptance never costs an extra draft weight
-/// stream.
+/// stream) — plus the stochastic-acceptance RNG and the per-slot
+/// adaptive-K controllers.
 pub struct SpecDecoder {
     pub cfg: SpeculativeConfig,
     pub(crate) shadow: Option<NativeEngine>,
@@ -102,6 +145,11 @@ pub struct SpecDecoder {
     /// Per target-slot committed-but-unmirrored tokens (invariant:
     /// `draft_len(slot) + pending[slot].len() == target_len(slot)`).
     pub(crate) pending: Vec<Vec<u32>>,
+    /// Draws for draft sampling, accept/reject and residual resampling
+    /// (one seeded stream per backend: serving runs stay reproducible).
+    pub(crate) rng: Pcg64,
+    /// Per-slot adaptive draft-depth state (used when `cfg.adaptive`).
+    pub(crate) ctrl: Vec<KController>,
 }
 
 impl SpecDecoder {
@@ -117,6 +165,8 @@ impl SpecDecoder {
             ws: EngineWs::default(),
             kv: DraftKv::Unopened,
             pending: Vec::new(),
+            rng: Pcg64::seeded(0x5bec_acce),
+            ctrl: Vec::new(),
         }
     }
 
@@ -127,33 +177,48 @@ impl SpecDecoder {
     }
 }
 
-/// Greedy acceptance for one slot: `verify[j]` are the target logits
-/// after feeding the j-th token of `[t, drafts...]`
-/// (`verify.len() == drafts.len() + 1`). Returns `(a, next)`: the count
-/// of leading drafts that match the verifier's argmax chain, and the
+/// Greedy acceptance for one slot over precomputed verifier argmax ids:
+/// `ids[j]` is the target's argmax after feeding the j-th token of
+/// `[t, drafts...]` (`ids.len() == drafts.len() + 1` — the shape
+/// `NativeEngine::step_batch_multi_sel` returns for `RowsWant::Argmax`,
+/// with no `rows × vocab` logits materialized). Returns `(a, next)`: the
+/// count of leading drafts matching the verifier's argmax chain, and the
 /// token the slot feeds next (the correction at the first mismatch, or
 /// the bonus token after full acceptance). The committed stream
 /// `drafts[..a] ++ [next]` equals sequential greedy decode exactly.
-pub fn greedy_accept(drafts: &[u32], verify: &[Vec<f32>]) -> (usize, u32) {
-    debug_assert_eq!(verify.len(), drafts.len() + 1, "one logits row per fed token");
+pub fn greedy_accept_ids(drafts: &[u32], ids: &[u32]) -> (usize, u32) {
+    debug_assert_eq!(ids.len(), drafts.len() + 1, "one argmax per fed token");
     for (j, &d) in drafts.iter().enumerate() {
-        let g = ops::argmax(&verify[j]) as u32;
-        if g != d {
-            return (j, g);
+        if ids[j] != d {
+            return (j, ids[j]);
         }
     }
-    (drafts.len(), ops::argmax(&verify[drafts.len()]) as u32)
+    (drafts.len(), ids[drafts.len()])
+}
+
+/// [`greedy_accept_ids`] over full logits rows (reduces each row to its
+/// argmax first). Kept for the full-logits verify path and for the
+/// regression test pinning the argmax-only return bit-identical to it.
+pub fn greedy_accept(drafts: &[u32], verify: &[Vec<f32>]) -> (usize, u32) {
+    debug_assert_eq!(verify.len(), drafts.len() + 1, "one logits row per fed token");
+    let ids: Vec<u32> = verify.iter().map(|row| ops::argmax(row) as u32).collect();
+    greedy_accept_ids(drafts, &ids)
 }
 
 /// The drafting loop, batched across slots: draft step `j` feeds every
 /// slot still within its budget (`ks[i] > j`) through one
 /// weight-stationary pass on the draft engine, and extends that slot's
-/// proposal chain greedily. `cur0[i]` is slot `i`'s input token;
-/// `pending` holds each slot's committed-but-unmirrored catch-up tokens
-/// (drained here for every slot that drafts — they ride the FIRST draft
-/// pass as extra positions, costing no extra weight stream). The draft
-/// KV mirrors advance by `pending + ks[i]` positions. Returns the
-/// proposal lists (len `ks[i]` each).
+/// proposal chain — greedily for `samplings[i] == None`, else by
+/// sampling from the draft's post-params distribution `q_j` (recorded
+/// per position so verification can form the accept ratio and residual).
+/// `cur0[i]` is slot `i`'s input token; `pending` holds each slot's
+/// committed-but-unmirrored catch-up tokens (drained here for every slot
+/// that drafts — they ride the FIRST draft pass as extra positions,
+/// costing no extra weight stream). The draft KV mirrors advance by
+/// `pending + ks[i]` positions. Returns the proposal lists (len `ks[i]`
+/// each) and, per slot, the draft distributions `q_1..q_{ks[i]}` (empty
+/// for greedy slots).
+#[allow(clippy::too_many_arguments)]
 pub fn draft_tokens(
     draft: &NativeEngine,
     kv: &mut DraftKv,
@@ -162,16 +227,39 @@ pub fn draft_tokens(
     pending: &mut [Vec<u32>],
     cur0: &[u32],
     ks: &[usize],
-) -> Vec<Vec<u32>> {
+    samplings: &[Option<&SamplingParams>],
+    rng: &mut Pcg64,
+) -> (Vec<Vec<u32>>, Vec<Vec<Vec<f64>>>) {
     let n = slots.len();
     debug_assert_eq!(n, cur0.len());
     debug_assert_eq!(n, ks.len());
+    debug_assert_eq!(n, samplings.len());
     let k_max = ks.iter().copied().max().unwrap_or(0);
     let mut drafts: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut qs: Vec<Vec<Vec<f64>>> = vec![Vec::new(); n];
     if k_max == 0 {
-        return drafts;
+        return (drafts, qs);
     }
     let mut cur = cur0.to_vec();
+    // extend slot i's chain from its latest draft logits
+    let propose = |i: usize,
+                   logits: &[f32],
+                   drafts: &mut Vec<Vec<u32>>,
+                   qs: &mut Vec<Vec<Vec<f64>>>,
+                   cur: &mut Vec<u32>,
+                   rng: &mut Pcg64| {
+        let t = match samplings[i] {
+            None => ops::argmax(logits) as u32,
+            Some(p) => {
+                let q = distribution(logits, p);
+                let t = draw_from(rng, &q);
+                qs[i].push(q);
+                t
+            }
+        };
+        drafts[i].push(t);
+        cur[i] = t;
+    };
     // first draft pass: catch-up tokens + the input token per slot, as
     // one multi-position group each
     {
@@ -190,9 +278,7 @@ pub fn draft_tokens(
         let mut li = 0usize;
         for i in 0..n {
             if ks[i] > 0 {
-                let t = ops::argmax(&logits[li]) as u32;
-                drafts[i].push(t);
-                cur[i] = t;
+                propose(i, &logits[li], &mut drafts, &mut qs, &mut cur, rng);
                 li += 1;
             }
         }
@@ -214,14 +300,12 @@ pub fn draft_tokens(
         let mut li = 0usize;
         for i in 0..n {
             if ks[i] > j {
-                let t = ops::argmax(&logits[li]) as u32;
-                drafts[i].push(t);
-                cur[i] = t;
+                propose(i, &logits[li], &mut drafts, &mut qs, &mut cur, rng);
                 li += 1;
             }
         }
     }
-    drafts
+    (drafts, qs)
 }
 
 #[cfg(test)]
@@ -245,5 +329,18 @@ mod tests {
         assert_eq!(greedy_accept(&[6, 3], &verify), (0, 7));
         // k = 0 degenerates to a plain greedy step
         assert_eq!(greedy_accept(&[], &verify[..1]), (0, 7));
+    }
+
+    #[test]
+    fn greedy_accept_ids_matches_logits_variant() {
+        let verify = vec![logits_for(7, 16), logits_for(3, 16), logits_for(9, 16)];
+        let ids = vec![7u32, 3, 9];
+        for drafts in [vec![7u32, 3], vec![7, 4], vec![6, 3], vec![]] {
+            assert_eq!(
+                greedy_accept_ids(&drafts, &ids[..drafts.len() + 1]),
+                greedy_accept(&drafts, &verify[..drafts.len() + 1]),
+                "drafts={drafts:?}"
+            );
+        }
     }
 }

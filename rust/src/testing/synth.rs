@@ -55,8 +55,18 @@ impl Default for SynthSpec {
 /// `tag` under the system temp dir and load it back. Deterministic for a
 /// given `(tag, spec)`.
 pub fn synth_checkpoint(tag: &str, spec: SynthSpec) -> WeightStore {
-    let SynthSpec { d, n_layers, n_heads, d_ff, vocab, max_seq, group, rank, sub_scale, col_scale } =
-        spec;
+    let SynthSpec {
+        d,
+        n_layers,
+        n_heads,
+        d_ff,
+        vocab,
+        max_seq,
+        group,
+        rank,
+        sub_scale,
+        col_scale,
+    } = spec;
     let dir = std::env::temp_dir().join("fbq_synth_ckpts");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join(format!("{tag}.fbqw"));

@@ -107,7 +107,8 @@ pub fn run() -> Result<()> {
         return Ok(());
     }
     let cmd = raw.remove(0);
-    let args = Args::parse(raw, &["help", "detail", "fused", "verbose", "quiet", "no-sub", "sync"])?;
+    let args =
+        Args::parse(raw, &["help", "detail", "fused", "verbose", "quiet", "no-sub", "sync"])?;
     if args.flag("verbose") {
         super::logging::set_level(super::logging::Level::Debug);
     }

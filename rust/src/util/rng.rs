@@ -99,19 +99,6 @@ impl Pcg64 {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len())]
     }
-
-    /// Sample an index from unnormalized non-negative weights.
-    pub fn weighted(&mut self, weights: &[f64]) -> usize {
-        let total: f64 = weights.iter().sum();
-        let mut t = self.next_f64() * total;
-        for (i, w) in weights.iter().enumerate() {
-            t -= w;
-            if t <= 0.0 {
-                return i;
-            }
-        }
-        weights.len() - 1
-    }
 }
 
 #[cfg(test)]

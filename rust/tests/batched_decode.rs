@@ -72,8 +72,10 @@ fn batched_decode_matches_sequential_at_fixed_occupancies() {
 fn prop_batched_decode_bit_identical_over_random_interleavings() {
     let store_plain =
         synth_checkpoint("prop_plain", SynthSpec { rank: 0, ..SynthSpec::default() });
-    let store_sub =
-        synth_checkpoint("prop_sub", SynthSpec { rank: 4, col_scale: true, ..SynthSpec::default() });
+    let store_sub = synth_checkpoint(
+        "prop_sub",
+        SynthSpec { rank: 4, col_scale: true, ..SynthSpec::default() },
+    );
     for (store, tag) in [(&store_plain, "plain"), (&store_sub, "sub")] {
         for paged in [false, true] {
             prop_assert_ok!(check(&format!("batched_equiv_{tag}_{paged}"), 8, |g| {

@@ -31,7 +31,8 @@ fn greedy_generation_is_deterministic_and_onpolicy() {
     let run = |backend: &mut NativeBackend| {
         let req = GenRequest::new(1, prompt.clone(), 24);
         let (mut r, _) =
-            Coordinator::run_closed_loop(backend, vec![req], &CoordinatorConfig::default()).unwrap();
+            Coordinator::run_closed_loop(backend, vec![req], &CoordinatorConfig::default())
+                .unwrap();
         r.remove(0).tokens
     };
     let a = run(&mut backend);
@@ -100,7 +101,8 @@ fn pjrt_generation_agrees_with_native() {
     let mut native = native_backend(&root, "fbquant", 4);
     let req = GenRequest::new(1, prompt.clone(), 16);
     let (mut rn, _) =
-        Coordinator::run_closed_loop(&mut native, vec![req], &CoordinatorConfig::default()).unwrap();
+        Coordinator::run_closed_loop(&mut native, vec![req], &CoordinatorConfig::default())
+            .unwrap();
     let native_tokens = rn.remove(0).tokens;
 
     let mut reg = ExecRegistry::open(&root).unwrap();
@@ -132,7 +134,10 @@ fn pjrt_generation_agrees_with_native() {
     let (responses, metrics) =
         Coordinator::run_closed_loop(&mut pjrt, reqs, &CoordinatorConfig::default()).unwrap();
     assert_eq!(responses.len(), 2);
-    assert_eq!(responses[0].tokens, responses[1].tokens, "identical prompts, identical greedy output");
+    assert_eq!(
+        responses[0].tokens, responses[1].tokens,
+        "identical prompts, identical greedy output"
+    );
     assert_eq!(metrics.batches_formed, 1, "lock-step pjrt forms aligned groups");
 }
 
@@ -150,7 +155,8 @@ fn pjrt_per_lane_continuous_agrees_with_native() {
     let mut native = native_backend(&root, "fbquant", 4);
     let req = GenRequest::new(1, prompt.clone(), 12);
     let (mut rn, _) =
-        Coordinator::run_closed_loop(&mut native, vec![req], &CoordinatorConfig::default()).unwrap();
+        Coordinator::run_closed_loop(&mut native, vec![req], &CoordinatorConfig::default())
+            .unwrap();
     let native_tokens = rn.remove(0).tokens;
 
     // per-lane mode: every slot is an independent batch-1 surface, so the

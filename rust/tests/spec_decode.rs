@@ -15,10 +15,12 @@
 //! All fixtures are synthesized tiny checkpoints
 //! (`fbquant::testing::synth`) — no build artifacts needed.
 
-use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
+use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken, SpecSlot};
 use fbquant::coordinator::request::{GenRequest, SamplingParams};
 use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
-use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::engine::kv::SlotBatch;
+use fbquant::engine::native::EngineWs;
+use fbquant::engine::{KvCache, NativeEngine, RowsWant, SubMode};
 use fbquant::model::WeightStore;
 use fbquant::prop_assert_ok;
 use fbquant::spec::{DraftMode, SpeculativeConfig};
@@ -41,7 +43,7 @@ fn spec_backend(store: &WeightStore, paged: bool, k: usize, draft: DraftMode) ->
     let engine = NativeEngine::from_store(store, SubMode::Fused).unwrap();
     let mut b = NativeBackend::new(engine, "spec")
         .with_max_slots(4)
-        .with_speculative(SpeculativeConfig { k, draft });
+        .with_speculative(SpeculativeConfig::new(k, draft));
     if !paged {
         b = b.with_dense();
     }
@@ -94,8 +96,8 @@ fn speculative_decode_is_token_identical_to_plain_greedy() {
                     cur_s[slot] = argmax(&ls);
                 }
                 for step in 0..5 {
-                    let toks: Vec<SlotToken> =
-                        (0..m).map(|s| SlotToken { slot: s, token: cur_s[s] }).collect();
+                    let toks: Vec<SpecSlot> =
+                        (0..m).map(|s| SpecSlot::greedy(s, cur_s[s])).collect();
                     let steps = sb.decode_speculative(&mut ss, &toks).unwrap();
                     assert_eq!(steps.len(), m);
                     for (slot, sp) in steps.iter().enumerate() {
@@ -180,18 +182,19 @@ fn prop_speculative_token_identical_over_random_interleavings() {
                             // retire long streams so max_seq stays distant,
                             // then one speculative step over the rest
                             for s in 0..cap {
-                                let long = matches!(&live[s], Some((_, _, sp, _)) if sp.len() >= 20);
+                                let long =
+                                    matches!(&live[s], Some((_, _, sp, _)) if sp.len() >= 20);
                                 if long {
                                     pb.release_slot(&mut ps, s).map_err(|e| e.to_string())?;
                                     sb.release_slot(&mut ss, s).map_err(|e| e.to_string())?;
                                     live[s] = None;
                                 }
                             }
-                            let toks: Vec<SlotToken> = (0..cap)
+                            let toks: Vec<SpecSlot> = (0..cap)
                                 .filter_map(|s| {
                                     live[s]
                                         .as_ref()
-                                        .map(|(_, cur, _, _)| SlotToken { slot: s, token: *cur })
+                                        .map(|(_, cur, _, _)| SpecSlot::greedy(s, *cur))
                                 })
                                 .collect();
                             if toks.is_empty() {
@@ -206,8 +209,9 @@ fn prop_speculative_token_identical_over_random_interleavings() {
                                 stream_s.push(sp.next);
                                 *cur_s = sp.next;
                                 for _ in 0..sp.accepted.len() + 1 {
+                                    let st_tok = SlotToken { slot: st.slot, token: *last_p };
                                     let lg = pb
-                                        .decode(&mut ps, &[SlotToken { slot: st.slot, token: *last_p }])
+                                        .decode(&mut ps, &[st_tok])
                                         .map_err(|e| e.to_string())?;
                                     let t = argmax(&lg[0]);
                                     stream_p.push(t);
@@ -243,8 +247,7 @@ fn nosub_draft_on_sub_free_model_accepts_every_proposal() {
         cur[slot] = argmax(&lg);
     }
     for _ in 0..4 {
-        let toks: Vec<SlotToken> =
-            (0..2).map(|s| SlotToken { slot: s, token: cur[s] }).collect();
+        let toks: Vec<SpecSlot> = (0..2).map(|s| SpecSlot::greedy(s, cur[s])).collect();
         let steps = sb.decode_speculative(&mut ss, &toks).unwrap();
         for (slot, sp) in steps.iter().enumerate() {
             assert_eq!(sp.proposed, 4, "full draft window expected");
@@ -276,8 +279,7 @@ fn verifier_weight_traffic_is_independent_of_k() {
         b.reset_traffic();
         let mut committed = 0usize;
         for _ in 0..4 {
-            let toks: Vec<SlotToken> =
-                (0..2).map(|s| SlotToken { slot: s, token: cur[s] }).collect();
+            let toks: Vec<SpecSlot> = (0..2).map(|s| SpecSlot::greedy(s, cur[s])).collect();
             let steps = b.decode_speculative(&mut st, &toks).unwrap();
             for (slot, sp) in steps.iter().enumerate() {
                 committed += sp.accepted.len() + 1;
@@ -337,7 +339,7 @@ fn weight_bytes_per_committed_token_beat_the_k0_baseline() {
     let mut accepted = 0usize;
     let spec_steps = 4usize;
     for _ in 0..spec_steps {
-        let steps = sb.decode_speculative(&mut ss, &[SlotToken { slot: 0, token: cur }]).unwrap();
+        let steps = sb.decode_speculative(&mut ss, &[SpecSlot::greedy(0, cur)]).unwrap();
         let sp = &steps[0];
         committed += sp.accepted.len() + 1;
         proposed += sp.proposed;
@@ -400,8 +402,10 @@ fn mixed_greedy_and_sampled_requests_coexist_on_a_speculative_backend() {
         let prompt: Vec<u32> = (0..6).map(|j| ((i as usize * 9 + j * 5) % 50) as u32).collect();
         let mut r = GenRequest::new(i + 1, prompt, 8);
         if i % 2 == 1 {
-            // sampled requests take the plain decode path per slot
-            r.params = SamplingParams { temperature: 0.8, top_k: 8, seed: 7 };
+            // sampled requests speculate too, under rejection-sampling
+            // acceptance (PR5) — both modes share the verify pass
+            r.params =
+                SamplingParams { temperature: 0.8, top_k: 8, ..SamplingParams::default() };
         }
         reqs.push(r);
     }
@@ -411,5 +415,110 @@ fn mixed_greedy_and_sampled_requests_coexist_on_a_speculative_backend() {
     for r in &rs {
         assert_eq!(r.tokens.len(), 8, "request {} lost tokens", r.id);
     }
-    assert!(ms.spec_steps > 0, "greedy slots should take the speculative path");
+    assert!(ms.spec_greedy.steps > 0, "greedy slots should take the speculative path");
+    assert!(ms.spec_sampled.steps > 0, "sampled slots should take the speculative path");
+    assert_eq!(ms.spec_steps, ms.spec_greedy.steps + ms.spec_sampled.steps);
+    assert_eq!(ms.spec_accepted, ms.spec_greedy.accepted + ms.spec_sampled.accepted);
+}
+
+#[test]
+fn argmax_only_verify_is_bit_identical_to_full_logits_rows() {
+    // The PR4 regression guard: `RowsWant::Argmax` must reproduce the
+    // argmax of the full-logits verify rows exactly (same dot products,
+    // same first-max tie rule) while charging identical weight traffic —
+    // the return shape is a materialization detail, never a result
+    // change.
+    let store = synth_checkpoint(
+        "spec_amax",
+        SynthSpec { rank: 4, col_scale: true, ..SynthSpec::default() },
+    );
+    let engine = NativeEngine::from_store(&store, SubMode::Fused).unwrap();
+    let cfg = engine.cfg.clone();
+    let mk_caches = || -> Vec<Option<KvCache>> {
+        (0..2)
+            .map(|_| Some(KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim())))
+            .collect()
+    };
+    let prompts: Vec<Vec<u32>> = (0..2usize)
+        .map(|s| (0..5 + s).map(|i| ((s * 7 + i * 3) % 50) as u32).collect())
+        .collect();
+    let groups: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let mut ws_a = EngineWs::default();
+    let mut ws_b = EngineWs::default();
+    let mut caches_a = mk_caches();
+    let mut caches_b = mk_caches();
+    {
+        let mut sb = SlotBatch::select(&mut caches_a, &[0, 1]);
+        engine.step_batch_multi(&groups, &mut sb, &mut ws_a, false);
+    }
+    {
+        let mut sb = SlotBatch::select(&mut caches_b, &[0, 1]);
+        engine.step_batch_multi(&groups, &mut sb, &mut ws_b, false);
+    }
+    // a K=2-shaped verify group per slot over identical KV states
+    let vgroups: Vec<Vec<u32>> =
+        (0..2usize).map(|s| (0..3).map(|j| ((s * 5 + j * 11) % 50) as u32).collect()).collect();
+    let vg: Vec<&[u32]> = vgroups.iter().map(|g| g.as_slice()).collect();
+    ws_a.traffic.reset();
+    ws_b.traffic.reset();
+    let full = {
+        let mut sb = SlotBatch::select(&mut caches_a, &[0, 1]);
+        engine.step_batch_multi_sel(&vg, &mut sb, &mut ws_a, &[RowsWant::All; 2])
+    };
+    let amax = {
+        let mut sb = SlotBatch::select(&mut caches_b, &[0, 1]);
+        engine.step_batch_multi_sel(&vg, &mut sb, &mut ws_b, &[RowsWant::Argmax; 2])
+    };
+    for (f, a) in full.into_iter().zip(amax) {
+        let rows = f.into_rows();
+        let ids = a.into_argmax();
+        assert_eq!(rows.len(), ids.len());
+        for (row, &id) in rows.iter().zip(&ids) {
+            assert_eq!(
+                argmax(row),
+                id,
+                "argmax-only verify diverged from the full-logits rows"
+            );
+        }
+    }
+    assert_eq!(
+        ws_a.traffic.weight_bytes, ws_b.traffic.weight_bytes,
+        "verify weight traffic must not depend on the return shape"
+    );
+}
+
+#[test]
+fn adaptive_k_keeps_greedy_serving_token_identical() {
+    // greedy acceptance is argmax-vs-argmax at every K, so an adaptive
+    // per-slot window changes only the weight traffic, never the stream
+    let store = synth_checkpoint("spec_adapt", SynthSpec { rank: 4, ..SynthSpec::default() });
+    let make_reqs = || -> Vec<GenRequest> {
+        (0..5u64)
+            .map(|i| {
+                let plen = 4 + (i as usize % 3);
+                let prompt: Vec<u32> =
+                    (0..plen).map(|j| ((i as usize * 17 + j * 5) % 50) as u32).collect();
+                GenRequest::new(i + 1, prompt, 10)
+            })
+            .collect()
+    };
+    let mut pb = plain_backend(&store, true);
+    let (rp, _) =
+        Coordinator::run_closed_loop(&mut pb, make_reqs(), &CoordinatorConfig::default()).unwrap();
+    let k_max = 4usize;
+    let engine = NativeEngine::from_store(&store, SubMode::Fused).unwrap();
+    let mut ab = NativeBackend::new(engine, "adaptive")
+        .with_max_slots(4)
+        .with_speculative(SpeculativeConfig::new(k_max, DraftMode::NoSub).with_adaptive());
+    let (ra, ms) =
+        Coordinator::run_closed_loop(&mut ab, make_reqs(), &CoordinatorConfig::default()).unwrap();
+    assert_eq!(rp.len(), ra.len());
+    for (a, b) in rp.iter().zip(&ra) {
+        assert_eq!(a.tokens, b.tokens, "adaptive-K changed greedy output (req {})", a.id);
+    }
+    assert!(ms.spec_steps > 0);
+    assert!(
+        ms.spec_proposed <= ms.spec_steps * k_max,
+        "adaptive windows exceeded k_max somewhere"
+    );
 }

@@ -1,0 +1,548 @@
+//! Distribution-conformance harness for stochastic speculative decoding.
+//!
+//! The hard invariant: **stochastic-speculative decode is
+//! distribution-identical to plain sampled decode**. Rejection-sampling
+//! acceptance (accept `d ~ q` with probability `min(1, p(d)/q(d))`,
+//! resample rejections from the normalized residual `max(0, p − q)`)
+//! provably preserves the target distribution; this harness pins the
+//! implementation to the theorem statistically, over seeded trials, for
+//! every K × draft-mode × KV-cache combination.
+//!
+//! Per case: fix a context `[prompt, t0]`, compute the target
+//! distribution `p` exactly (plain decode logits through the shared
+//! `sampler::distribution` definition), then compare
+//! * the empirical distribution of the speculative step's **first
+//!   committed token** over ≥10k fresh-slot trials against exact `p`
+//!   (total-variation ε gate + merged-cell chi-square gate), and against
+//! * the empirical distribution of plain sampled decode over the same
+//!   logits (two-sample TV gate).
+//!
+//! A pair-level case extends the gate to the joint distribution of the
+//! first TWO committed tokens (exercising KV rollback and the
+//! conditional chain), and coordinator-level cases cover mixed
+//! greedy/sampled/degraded traffic with per-mode metric reconciliation.
+//!
+//! All fixtures are synthesized tiny checkpoints
+//! (`fbquant::testing::synth`) — no build artifacts needed — and every
+//! RNG is seeded, so the gates are deterministic.
+
+use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken, SpecSlot};
+use fbquant::coordinator::request::{GenRequest, SamplingParams};
+use fbquant::coordinator::sampler::{distribution, Sampler};
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::model::WeightStore;
+use fbquant::spec::{DraftMode, SpeculativeConfig};
+use fbquant::testing::{synth_checkpoint, SynthSpec};
+
+fn argmax(l: &[f32]) -> u32 {
+    fbquant::tensor::ops::argmax(l) as u32
+}
+
+/// Tiny geometry: 1 layer, d=16, vocab=16 — the conformance loops run
+/// hundreds of thousands of engine rows, so every MAC counts. The
+/// sizable `sub_scale` makes the bare-branch draft genuinely differ from
+/// the target, exercising the rejection + residual paths.
+fn conformance_spec() -> SynthSpec {
+    SynthSpec {
+        d: 16,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 24,
+        vocab: 16,
+        max_seq: 32,
+        group: 8,
+        rank: 4,
+        sub_scale: 0.4,
+        col_scale: false,
+    }
+}
+
+fn plain_backend(store: &WeightStore, paged: bool) -> NativeBackend {
+    let engine = NativeEngine::from_store(store, SubMode::Fused).unwrap();
+    let mut b = NativeBackend::new(engine, "plain").with_max_slots(4);
+    if !paged {
+        b = b.with_dense();
+    }
+    b
+}
+
+fn spec_backend(
+    store: &WeightStore,
+    paged: bool,
+    k: usize,
+    draft: DraftMode,
+    slots: usize,
+) -> NativeBackend {
+    let engine = NativeEngine::from_store(store, SubMode::Fused).unwrap();
+    let mut b = NativeBackend::new(engine, "spec")
+        .with_max_slots(slots)
+        .with_speculative(SpeculativeConfig::new(k, draft));
+    if !paged {
+        b = b.with_dense();
+    }
+    b
+}
+
+// ---------------------------------------------------------------------------
+// statistics
+// ---------------------------------------------------------------------------
+
+/// Total variation between an empirical count vector and exact probs.
+fn tv_vs_exact(counts: &[usize], probs: &[f64], n: usize) -> f64 {
+    counts
+        .iter()
+        .zip(probs)
+        .map(|(&c, &p)| (c as f64 / n as f64 - p).abs())
+        .sum::<f64>()
+        / 2.0
+}
+
+/// Total variation between two empirical count vectors.
+fn tv_two_sample(a: &[usize], b: &[usize], na: usize, nb: usize) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&ca, &cb)| (ca as f64 / na as f64 - cb as f64 / nb as f64).abs())
+        .sum::<f64>()
+        / 2.0
+}
+
+/// Pearson chi-square goodness-of-fit against exact probs, with cells of
+/// expected count < 5 pooled into one bucket (the standard small-cell
+/// correction). Returns `(statistic, degrees_of_freedom)`; df can be 0
+/// for near-degenerate distributions (caller skips the gate then).
+fn chi_square_merged(counts: &[usize], probs: &[f64], n: usize) -> (f64, usize) {
+    let mut stat = 0.0;
+    let mut cells = 0usize;
+    let (mut pooled_obs, mut pooled_exp) = (0.0f64, 0.0f64);
+    for (&c, &p) in counts.iter().zip(probs) {
+        if p <= 0.0 {
+            continue; // support violations are asserted separately
+        }
+        let e = p * n as f64;
+        if e < 5.0 {
+            pooled_obs += c as f64;
+            pooled_exp += e;
+        } else {
+            stat += (c as f64 - e) * (c as f64 - e) / e;
+            cells += 1;
+        }
+    }
+    if pooled_exp > 0.0 {
+        stat += (pooled_obs - pooled_exp) * (pooled_obs - pooled_exp) / pooled_exp;
+        cells += 1;
+    }
+    (stat, cells.saturating_sub(1))
+}
+
+/// Upper chi-square critical value via the Wilson–Hilferty cube
+/// approximation; `z` is the standard-normal quantile of the target
+/// confidence (4.265 ≈ 1 − 1e-5).
+fn chi2_crit(df: usize, z: f64) -> f64 {
+    let d = df as f64;
+    let t = 1.0 - 2.0 / (9.0 * d) + z * (2.0 / (9.0 * d)).sqrt();
+    d * t * t * t
+}
+
+const CHI2_Z: f64 = 4.265; // alpha ≈ 1e-5 per gate; every RNG is seeded
+
+// ---------------------------------------------------------------------------
+// the conformance core
+// ---------------------------------------------------------------------------
+
+const TRIALS: usize = 10_000;
+const SLOTS_PER_ROUND: usize = 4;
+
+/// One conformance case: first-committed-token distribution of
+/// stochastic speculative decode vs plain sampled decode on the fixed
+/// context `[prompt, t0]`.
+fn conformance_case(
+    store: &WeightStore,
+    paged: bool,
+    k: usize,
+    draft: DraftMode,
+    params: &SamplingParams,
+    seed: u64,
+    label: &str,
+) {
+    let vocab = store.cfg.vocab;
+    let prompt: Vec<u32> = (0..3).map(|i| ((i * 7 + 2) % vocab) as u32).collect();
+
+    // exact target distribution after [prompt, t0], from the plain path
+    let mut pb = plain_backend(store, paged);
+    let mut pstate = pb.open_batch(1).unwrap();
+    let l0 = pb.prefill_slot(&mut pstate, 0, &prompt).unwrap();
+    let t0 = argmax(&l0);
+    let l1 = pb.decode(&mut pstate, &[SlotToken { slot: 0, token: t0 }]).unwrap().remove(0);
+    let p_exact = distribution(&l1, params);
+
+    // plain-sampled empirical distribution over the same logits row
+    let mut sampler = Sampler::new(seed ^ 0x9e37_79b9);
+    let mut plain_counts = vec![0usize; vocab];
+    for _ in 0..TRIALS {
+        plain_counts[sampler.sample(&l1, params) as usize] += 1;
+    }
+
+    // stochastic-speculative empirical distribution: fresh slot per
+    // trial, batched SLOTS_PER_ROUND trials per engine round
+    let mut sb = spec_backend(store, paged, k, draft, SLOTS_PER_ROUND);
+    let mut sstate = sb.open_batch(SLOTS_PER_ROUND).unwrap();
+    let mut spec_counts = vec![0usize; vocab];
+    let mut done = 0usize;
+    while done < TRIALS {
+        let n = SLOTS_PER_ROUND.min(TRIALS - done);
+        let admissions: Vec<(usize, &[u32])> = (0..n).map(|s| (s, prompt.as_slice())).collect();
+        sb.prefill_slots(&mut sstate, &admissions).unwrap();
+        let reqs: Vec<SpecSlot> = (0..n)
+            .map(|s| SpecSlot { slot: s, token: t0, sampling: params.clone() })
+            .collect();
+        let steps = sb.decode_speculative(&mut sstate, &reqs).unwrap();
+        for sp in &steps {
+            assert!(sp.proposed >= 1, "{label}: draft window collapsed without pressure");
+            let first = sp.accepted.first().copied().unwrap_or(sp.next);
+            spec_counts[first as usize] += 1;
+        }
+        for s in 0..n {
+            sb.release_slot(&mut sstate, s).unwrap();
+        }
+        done += n;
+    }
+
+    // hard support gate: speculation must never emit a token the target
+    // distribution excludes (top-k/top-p truncation included)
+    for (i, &c) in spec_counts.iter().enumerate() {
+        assert!(
+            c == 0 || p_exact[i] > 0.0,
+            "{label}: token {i} emitted {c} times outside the target support"
+        );
+    }
+    let tve = tv_vs_exact(&spec_counts, &p_exact, TRIALS);
+    assert!(tve < 0.06, "{label}: TV(spec, exact target) = {tve:.4} (counts {spec_counts:?})");
+    let tv2 = tv_two_sample(&spec_counts, &plain_counts, TRIALS, TRIALS);
+    assert!(tv2 < 0.08, "{label}: TV(spec, plain sampled) = {tv2:.4}");
+    let (stat, df) = chi_square_merged(&spec_counts, &p_exact, TRIALS);
+    if df >= 1 {
+        let crit = chi2_crit(df, CHI2_Z);
+        assert!(stat < crit, "{label}: chi2 = {stat:.1} > crit {crit:.1} (df {df})");
+    }
+}
+
+/// The temperature / top-p / top-k points the combos rotate through.
+fn param_points() -> [SamplingParams; 3] {
+    [
+        SamplingParams { temperature: 0.9, ..SamplingParams::default() },
+        SamplingParams { temperature: 1.2, top_p: 0.9, ..SamplingParams::default() },
+        SamplingParams { temperature: 0.8, top_k: 8, top_p: 0.95, ..SamplingParams::default() },
+    ]
+}
+
+fn conformance_sweep(tag: &str, draft: DraftMode, paged: bool) {
+    // one synth tag per #[test]: tests run in parallel and the synth
+    // checkpoint is written to a shared temp path per tag
+    let store = synth_checkpoint(tag, conformance_spec());
+    let points = param_points();
+    for (i, &k) in [1usize, 2, 4].iter().enumerate() {
+        let params = &points[i % points.len()];
+        conformance_case(
+            &store,
+            paged,
+            k,
+            draft,
+            params,
+            0xc0f0 + i as u64,
+            &format!(
+                "k={k} draft={draft:?} paged={paged} temp={} top_k={} top_p={}",
+                params.temperature, params.top_k, params.top_p
+            ),
+        );
+    }
+}
+
+#[test]
+fn stochastic_conformance_nosub_paged() {
+    conformance_sweep("spec_conf_np", DraftMode::NoSub, true);
+}
+
+#[test]
+fn stochastic_conformance_nosub_dense() {
+    conformance_sweep("spec_conf_nd", DraftMode::NoSub, false);
+}
+
+#[test]
+fn stochastic_conformance_shadow2_paged() {
+    conformance_sweep("spec_conf_sp", DraftMode::Shadow { bits: 2 }, true);
+}
+
+#[test]
+fn stochastic_conformance_shadow2_dense() {
+    conformance_sweep("spec_conf_sd", DraftMode::Shadow { bits: 2 }, false);
+}
+
+#[test]
+fn stochastic_conformance_temperature_top_p_sweep() {
+    // every temperature/top-p point gets its own ≥10k-trial gate on one
+    // fixed combo (K=2, bare-branch draft, paged KV)
+    let store = synth_checkpoint("spec_conf_sweep", conformance_spec());
+    for (i, params) in param_points().iter().enumerate() {
+        conformance_case(
+            &store,
+            true,
+            2,
+            DraftMode::NoSub,
+            params,
+            0x5eed + i as u64,
+            &format!(
+                "sweep temp={} top_k={} top_p={}",
+                params.temperature, params.top_k, params.top_p
+            ),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// joint (pair) conformance: the first TWO committed tokens
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stochastic_pair_conformance_follows_the_target_chain() {
+    // The marginal gate above cannot see a bug that emits the right
+    // first token but corrupts the post-acceptance state (bad KV
+    // rollback, draft-mirror drift). The joint distribution of the
+    // first two committed tokens can: compute the exact target joint
+    // p(x1, x2) = p1(x1) · p2(x2 | x1) from plain decode logits, and
+    // gate the speculative pair counts against it.
+    let store = synth_checkpoint("spec_conf_pair", conformance_spec());
+    let vocab = store.cfg.vocab;
+    let params = SamplingParams { temperature: 1.0, ..SamplingParams::default() };
+    let prompt: Vec<u32> = (0..3).map(|i| ((i * 7 + 2) % vocab) as u32).collect();
+
+    // exact chain from the plain path: l1 after [prompt, t0]; l2[x1]
+    // after [prompt, t0, x1] for every x1 in p1's support
+    let (t0, p1, p2s) = {
+        let mut pb = plain_backend(&store, true);
+        let mut st = pb.open_batch(1).unwrap();
+        let l0 = pb.prefill_slot(&mut st, 0, &prompt).unwrap();
+        let t0 = argmax(&l0);
+        let l1 = pb.decode(&mut st, &[SlotToken { slot: 0, token: t0 }]).unwrap().remove(0);
+        let p1 = distribution(&l1, &params);
+        let mut p2s: Vec<Option<Vec<f64>>> = vec![None; vocab];
+        for x1 in 0..vocab {
+            if p1[x1] <= 0.0 {
+                continue;
+            }
+            let mut st = pb.open_batch(1).unwrap();
+            pb.prefill_slot(&mut st, 0, &prompt).unwrap();
+            pb.decode(&mut st, &[SlotToken { slot: 0, token: t0 }]).unwrap();
+            let l2 = pb
+                .decode(&mut st, &[SlotToken { slot: 0, token: x1 as u32 }])
+                .unwrap()
+                .remove(0);
+            p2s[x1] = Some(distribution(&l2, &params));
+        }
+        (t0, p1, p2s)
+    };
+    let mut p_joint = vec![0f64; vocab * vocab];
+    for x1 in 0..vocab {
+        if let Some(p2) = &p2s[x1] {
+            for x2 in 0..vocab {
+                p_joint[x1 * vocab + x2] = p1[x1] * p2[x2];
+            }
+        }
+    }
+
+    // speculative pairs: run spec steps until two tokens committed
+    let trials = 10_000usize;
+    let mut sb = spec_backend(&store, true, 2, DraftMode::NoSub, SLOTS_PER_ROUND);
+    let mut ss = sb.open_batch(SLOTS_PER_ROUND).unwrap();
+    let mut pair_counts = vec![0usize; vocab * vocab];
+    let mut done = 0usize;
+    while done < trials {
+        let n = SLOTS_PER_ROUND.min(trials - done);
+        let admissions: Vec<(usize, &[u32])> = (0..n).map(|s| (s, prompt.as_slice())).collect();
+        sb.prefill_slots(&mut ss, &admissions).unwrap();
+        let reqs: Vec<SpecSlot> = (0..n)
+            .map(|s| SpecSlot { slot: s, token: t0, sampling: params.clone() })
+            .collect();
+        let steps = sb.decode_speculative(&mut ss, &reqs).unwrap();
+        let mut streams: Vec<Vec<u32>> = steps
+            .iter()
+            .map(|sp| {
+                let mut v = sp.accepted.clone();
+                v.push(sp.next);
+                v
+            })
+            .collect();
+        // slots whose first step committed a single token need a second
+        // step (fed with that step's bonus/correction token)
+        let pending: Vec<SpecSlot> = (0..n)
+            .filter(|&s| streams[s].len() < 2)
+            .map(|s| SpecSlot {
+                slot: s,
+                token: *streams[s].last().unwrap(),
+                sampling: params.clone(),
+            })
+            .collect();
+        if !pending.is_empty() {
+            let steps2 = sb.decode_speculative(&mut ss, &pending).unwrap();
+            for (req, sp) in pending.iter().zip(&steps2) {
+                streams[req.slot].extend_from_slice(&sp.accepted);
+                streams[req.slot].push(sp.next);
+            }
+        }
+        for stream in streams.iter().take(n) {
+            assert!(stream.len() >= 2, "a speculative step commits at least one token");
+            pair_counts[stream[0] as usize * vocab + stream[1] as usize] += 1;
+        }
+        for s in 0..n {
+            sb.release_slot(&mut ss, s).unwrap();
+        }
+        done += n;
+    }
+
+    for (cell, &c) in pair_counts.iter().enumerate() {
+        assert!(
+            c == 0 || p_joint[cell] > 0.0,
+            "pair ({}, {}) emitted outside the target joint support",
+            cell / vocab,
+            cell % vocab
+        );
+    }
+    let tvj = tv_vs_exact(&pair_counts, &p_joint, trials);
+    assert!(tvj < 0.12, "TV(spec pairs, exact joint) = {tvj:.4}");
+    let (stat, df) = chi_square_merged(&pair_counts, &p_joint, trials);
+    if df >= 1 {
+        let crit = chi2_crit(df, CHI2_Z);
+        assert!(stat < crit, "pair chi2 = {stat:.1} > crit {crit:.1} (df {df})");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator-level mixed traffic + degrade
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_traffic_per_mode_metrics_reconcile_with_emitted_tokens() {
+    // greedy + sampled requests with uneven prompt/generation lengths
+    // over a 3-slot pool: admissions and releases interleave randomly
+    // (seeded), both acceptance modes share verify passes, and the
+    // per-mode ServeMetrics must reconcile with what the streams
+    // actually carried.
+    let store = synth_checkpoint("spec_sampled_mixed", conformance_spec());
+    let engine = NativeEngine::from_store(&store, SubMode::Fused).unwrap();
+    let mut sb = NativeBackend::new(engine, "mixed")
+        .with_max_slots(3)
+        .with_speculative(SpeculativeConfig::new(2, DraftMode::NoSub));
+    let n = 12usize;
+    let reqs: Vec<GenRequest> = (0..n as u64)
+        .map(|i| {
+            let plen = 2 + (i as usize * 5) % 4;
+            let prompt: Vec<u32> =
+                (0..plen).map(|j| ((i as usize * 13 + j * 7) % 16) as u32).collect();
+            let mut r = GenRequest::new(i + 1, prompt, 1 + (i as usize * 7) % 9);
+            if i % 3 != 0 {
+                r.params = SamplingParams {
+                    temperature: 0.8 + 0.1 * (i % 3) as f32,
+                    top_k: if i % 2 == 0 { 8 } else { 0 },
+                    ..SamplingParams::default()
+                };
+            }
+            r
+        })
+        .collect();
+    let budgets: Vec<usize> = reqs.iter().map(|r| r.max_new_tokens).collect();
+    let (rs, ms) =
+        Coordinator::run_closed_loop(&mut sb, reqs, &CoordinatorConfig::default()).unwrap();
+    assert_eq!(rs.len(), n);
+    for (r, &budget) in rs.iter().zip(&budgets) {
+        assert_eq!(r.tokens.len(), budget, "request {} lost tokens", r.id);
+    }
+    // stream-level reconciliation
+    let emitted: usize = rs.iter().map(|r| r.tokens.len()).sum();
+    assert_eq!(ms.tokens_generated, emitted, "metrics disagree with streams");
+    // per-mode sums equal the legacy totals
+    assert_eq!(ms.spec_steps, ms.spec_greedy.steps + ms.spec_sampled.steps);
+    assert_eq!(ms.spec_proposed, ms.spec_greedy.proposed + ms.spec_sampled.proposed);
+    assert_eq!(ms.spec_accepted, ms.spec_greedy.accepted + ms.spec_sampled.accepted);
+    assert!(ms.spec_greedy.steps > 0, "greedy slots never speculated");
+    assert!(ms.spec_sampled.steps > 0, "sampled slots never speculated");
+    // every emitted token is either a scheduling-step commit or an
+    // accepted-draft commit; each spec step implies one same-step commit
+    // and each finished request at most one commit-only step
+    let committed = ms.spec_greedy.committed + ms.spec_sampled.committed;
+    assert!(committed <= ms.spec_accepted, "committed counts exceed acceptance");
+    let step_commits = ms.tokens_generated - committed;
+    assert!(
+        step_commits >= ms.spec_steps,
+        "fewer step commits ({step_commits}) than spec steps ({})",
+        ms.spec_steps
+    );
+    assert!(
+        step_commits <= ms.spec_steps + ms.requests_done,
+        "step commits ({step_commits}) exceed spec steps + finishes"
+    );
+}
+
+#[test]
+fn draft_pool_pressure_degrades_one_slot_without_perturbing_neighbors() {
+    // A draft page pool with room for exactly ONE mirror: the first slot
+    // speculates normally, the second cannot get draft pages and
+    // degrades to k = 0 — it must still decode correctly (greedy
+    // identity with the plain backend) and the speculating neighbor must
+    // be unaffected.
+    let store = synth_checkpoint(
+        "spec_sampled_pressure",
+        SynthSpec { rank: 4, ..SynthSpec::default() },
+    );
+    let k = 2usize;
+    let engine = NativeEngine::from_store(&store, SubMode::Fused).unwrap();
+    let mut sb = NativeBackend::new(engine, "pressure")
+        .with_max_slots(2)
+        .with_speculative(SpeculativeConfig::new(k, DraftMode::NoSub))
+        .with_draft_kv_pool(1);
+    let mut ss = sb.open_batch(2).unwrap();
+    let mut pb = plain_backend(&store, true);
+    let mut ps = pb.open_batch(2).unwrap();
+    let mut cur = vec![0u32; 2];
+    let mut last = vec![0u32; 2];
+    for slot in 0..2 {
+        let prompt: Vec<u32> = (0..4).map(|i| ((slot * 9 + i * 5) % 50) as u32).collect();
+        let ls = sb.prefill_slot(&mut ss, slot, &prompt).unwrap();
+        let lp = pb.prefill_slot(&mut ps, slot, &prompt).unwrap();
+        assert_eq!(ls, lp);
+        cur[slot] = argmax(&ls);
+        last[slot] = argmax(&lp);
+    }
+    let mut stream_s: Vec<Vec<u32>> = vec![Vec::new(); 2];
+    let mut stream_p: Vec<Vec<u32>> = vec![Vec::new(); 2];
+    for _ in 0..3 {
+        let reqs: Vec<SpecSlot> = (0..2).map(|s| SpecSlot::greedy(s, cur[s])).collect();
+        let steps = sb.decode_speculative(&mut ss, &reqs).unwrap();
+        assert_eq!(steps[0].proposed, k, "slot 0 lost its draft window");
+        assert_eq!(
+            steps[1].proposed, 0,
+            "slot 1 should degrade to k = 0 under draft-pool pressure"
+        );
+        for (slot, sp) in steps.iter().enumerate() {
+            stream_s[slot].extend_from_slice(&sp.accepted);
+            stream_s[slot].push(sp.next);
+            cur[slot] = sp.next;
+            for _ in 0..sp.accepted.len() + 1 {
+                let lg = pb
+                    .decode(&mut ps, &[SlotToken { slot, token: last[slot] }])
+                    .unwrap();
+                let t = argmax(&lg[0]);
+                stream_p[slot].push(t);
+                last[slot] = t;
+            }
+        }
+    }
+    for slot in 0..2 {
+        assert_eq!(
+            stream_p[slot], stream_s[slot],
+            "slot {slot} diverged from plain greedy under draft-pool pressure"
+        );
+    }
+    let stats = sb.draft_kv_stats().expect("paged draft mirrors expose stats");
+    assert!(stats.alloc_failures > 0, "pressure never hit the draft pool");
+    assert!(stats.pages_in_use <= 1, "draft pool exceeded its budget");
+}
