@@ -1,23 +1,24 @@
-//! Serving under concurrent load: spawn the coordinator worker, submit a
-//! Poisson-arrival workload, consume the per-request event streams and
-//! report latency, throughput and slot-occupancy percentiles.
+//! Serving under concurrent load: spawn the coordinator worker, replay a
+//! Poisson-arrival workload open-loop through the in-process harness and
+//! report latency percentiles, goodput and slot occupancy.
 //!
 //! Tokens arrive incrementally (continuous batching streams every sampled
 //! token), so the client-side time-to-first-token is measured from the
-//! first `Token` event — not from the final response.
+//! first `Token` event — not from the final response. The HTTP flavor of
+//! the same replay is `fbquant loadgen` (which writes BENCH_serve.json).
 //!
 //! ```sh
 //! cargo run --release --example serve_batch -- [requests] [rate_rps]
 //! ```
 
-use fbquant::coordinator::request::GenEvent;
 use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
-use fbquant::coordinator::workload::{generate, WorkloadConfig};
+use fbquant::coordinator::workload::{generate, Arrival, WorkloadConfig};
 use fbquant::coordinator::Backend;
 use fbquant::coordinator::NativeBackend;
 use fbquant::engine::{NativeEngine, SubMode};
 use fbquant::eval::data::TokenStream;
 use fbquant::model::WeightStore;
+use fbquant::serve::run_in_process;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -26,20 +27,18 @@ fn main() -> anyhow::Result<()> {
     let artifacts = fbquant::artifacts_dir();
 
     let stream = TokenStream::load(&artifacts.join("data/corpus_val.fbqw"))?;
-    let workload = generate(
-        &stream,
-        &WorkloadConfig {
-            n_requests,
-            prompt_lens: vec![32, 64],
-            max_new_tokens: 24,
-            arrival_rate: rate,
-            temperature: 0.7,
-            seed: 11,
-        },
-    );
-
     let store =
         WeightStore::load(&WeightStore::path_for(&artifacts, "llamoid-tiny", "fbquant", 4))?;
+    let cfg = WorkloadConfig {
+        n_requests,
+        arrival: if rate > 0.0 { Arrival::Poisson { rate } } else { Arrival::Closed },
+        temperature: 0.7,
+        seed: 11,
+        ..WorkloadConfig::default()
+    };
+    let mut workload = generate(&cfg, Some(&stream));
+    workload.clamp_to(store.cfg.max_seq);
+
     let handle = Coordinator::spawn(
         move || -> anyhow::Result<Box<dyn Backend>> {
             Ok(Box::new(NativeBackend::new(
@@ -50,63 +49,29 @@ fn main() -> anyhow::Result<()> {
         CoordinatorConfig::default(),
     );
 
-    println!("submitting {n_requests} requests at ~{rate} rps (Poisson)...");
-    let t0 = std::time::Instant::now();
-    let mut receivers = Vec::new();
-    let mut prev = std::time::Duration::ZERO;
-    for (req, arrival) in workload.requests.into_iter().zip(workload.arrivals) {
-        std::thread::sleep(arrival.saturating_sub(prev));
-        prev = arrival;
-        receivers.push((std::time::Instant::now(), handle.submit(req)));
-    }
-    let mut client_ttfts = Vec::new();
-    let mut ttfts = Vec::new();
-    let mut e2es = Vec::new();
-    for (submitted, rx) in receivers {
-        let mut first_token: Option<f64> = None;
-        for ev in rx {
-            match ev {
-                GenEvent::Token { .. } => {
-                    if first_token.is_none() {
-                        first_token = Some(submitted.elapsed().as_secs_f64() * 1e3);
-                    }
-                }
-                GenEvent::Done(r) => {
-                    ttfts.push(r.ttft_us / 1e3);
-                    e2es.push(r.total_us / 1e3);
-                    break;
-                }
-                GenEvent::Error { id, message } => {
-                    eprintln!("request {id} failed: {message}");
-                    break;
-                }
-            }
-        }
-        if let Some(ms) = first_token {
-            client_ttfts.push(ms);
-        }
-    }
-    let wall = t0.elapsed().as_secs_f64();
+    println!("replaying {n_requests} requests at ~{rate} rps (Poisson, open loop)...");
+    let res = run_in_process(&handle.client(), &workload);
     let metrics = handle.shutdown()?;
 
     println!("\n{}", metrics.report());
+    let done: Vec<_> = res.records.iter().filter(|r| r.ok).collect();
+    let ttft: Vec<f64> = done.iter().map(|r| r.ttft_us / 1e3).collect();
+    let e2e: Vec<f64> = done.iter().map(|r| r.e2e_us / 1e3).collect();
     println!(
-        "\nwall {:.2}s | slot occupancy {:.2} (peak {}) | {} admissions into {} pool(s)",
-        wall,
+        "\nwall {:.2}s | goodput {:.0} tok/s | {} done, {} shed | slot occupancy {:.2} (peak {})",
+        res.wall_s,
+        res.goodput_tps(),
+        done.len(),
+        res.shed(),
         metrics.mean_slot_occupancy(),
         metrics.peak_occupied,
-        metrics.admissions,
-        metrics.pools_opened,
     );
     println!(
-        "streamed ttft p50 {:.0}ms p95 {:.0}ms | ttft p50 {:.0}ms p95 {:.0}ms | \
-         e2e p50 {:.0}ms p95 {:.0}ms",
-        fbquant::util::percentile(&client_ttfts, 50.0),
-        fbquant::util::percentile(&client_ttfts, 95.0),
-        fbquant::util::percentile(&ttfts, 50.0),
-        fbquant::util::percentile(&ttfts, 95.0),
-        fbquant::util::percentile(&e2es, 50.0),
-        fbquant::util::percentile(&e2es, 95.0),
+        "ttft p50 {:.0}ms p95 {:.0}ms | e2e p50 {:.0}ms p95 {:.0}ms",
+        fbquant::util::percentile(&ttft, 50.0),
+        fbquant::util::percentile(&ttft, 95.0),
+        fbquant::util::percentile(&e2e, 50.0),
+        fbquant::util::percentile(&e2e, 95.0),
     );
     Ok(())
 }

@@ -11,6 +11,8 @@
 //!   committed token vs the K=0 baseline, with a blocking assertion
 //!   that the verifier's weight traffic is charged once per step
 //!   regardless of K,
+//! * the sampled-speculation sweep: rejection-sampling acceptance vs
+//!   temperature on a draft that genuinely differs from its target,
 //! * the PJRT `kernel_fused`/`kernel_unfused` artifacts (the Pallas
 //!   pair lowered by aot.py) — dispatch-count effect at the XLA level.
 
@@ -19,6 +21,7 @@ mod common;
 use common::*;
 use fbquant::bench::Bench;
 use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken, SpecSlot};
+use fbquant::coordinator::request::SamplingParams;
 use fbquant::engine::kernels::{QuantLinear, SubMode, Traffic, Workspace};
 use fbquant::engine::NativeEngine;
 use fbquant::quant::groupwise;
@@ -270,6 +273,8 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
                 dname, k, accept_rate, tok_per_step, tps, wbpt, verify_w_step
             );
             rows.push(Json::obj(vec![
+                ("mode", Json::from("greedy")),
+                ("temperature", Json::from(0.0f64)),
                 ("draft", Json::from(dname)),
                 ("k", Json::from(k)),
                 ("slots", Json::from(m)),
@@ -326,6 +331,98 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
     Ok(rows)
 }
 
+/// Sampled speculation vs temperature: rejection-sampling acceptance on
+/// a fixture whose draft genuinely differs from its target
+/// (`sub_scale > 0`), at a fixed K over a temperature ladder. Emitted as
+/// `mode: "sampled"` rows in the `speculative` section of
+/// `BENCH_decode.json` so the acceptance-vs-temperature trajectory is
+/// tracked alongside the greedy sweep. No monotonicity assertion — the
+/// overlap `sum min(p, q)` need not move one way in temperature — but
+/// the invariants (acceptance in [0, 1], every step commits >= 1 token)
+/// are checked.
+fn sampled_temperature_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
+    let geom = SynthSpec {
+        d: if bench_fast { 64 } else { 128 },
+        d_ff: if bench_fast { 96 } else { 256 },
+        vocab: 96,
+        group: 32,
+        rank: 8,
+        sub_scale: 0.25,
+        max_seq: 256,
+        ..SynthSpec::default()
+    };
+    let store = synth_checkpoint("bench_spec_sampled", geom);
+    let decode_steps = if bench_fast { 16 } else { 32 };
+    let (m, k, plen) = (4usize, 2usize, 16usize);
+
+    println!(
+        "\n=== sampled speculation vs temperature (no-sub draft, K={k}, {m} slots, \
+         rejection-sampling acceptance) ==="
+    );
+    println!("{:<6} {:>8} {:>9} {:>12}", "temp", "accept", "tok/step", "tokens/s");
+    println!("{}", "-".repeat(40));
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &temp in &[0.4f32, 0.8, 1.2] {
+        let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+        let mut backend = NativeBackend::new(engine, "spec-sampled")
+            .with_max_slots(m)
+            .with_speculative(SpeculativeConfig::new(k, DraftMode::NoSub));
+        let mut state = backend.open_batch(m)?;
+        let mut cur = vec![0u32; m];
+        for slot in 0..m {
+            let prompt: Vec<u32> = (0..plen).map(|i| ((slot * 17 + i * 3) % 96) as u32).collect();
+            let lg = backend.prefill_slot(&mut state, slot, &prompt)?;
+            cur[slot] = fbquant::tensor::ops::argmax(&lg) as u32;
+        }
+        let (mut committed, mut proposed, mut accepted) = (0usize, 0usize, 0usize);
+        let t0 = Instant::now();
+        for step in 0..decode_steps {
+            let reqs: Vec<SpecSlot> = (0..m)
+                .map(|s| SpecSlot {
+                    slot: s,
+                    token: cur[s],
+                    sampling: SamplingParams {
+                        temperature: temp,
+                        top_k: 0,
+                        top_p: 1.0,
+                        seed: 0x5eed ^ ((step as u64) << 8) ^ s as u64,
+                    },
+                })
+                .collect();
+            let steps = backend.decode_speculative(&mut state, &reqs)?;
+            for (slot, sp) in steps.iter().enumerate() {
+                assert!(sp.accepted.len() <= sp.proposed, "accepted more than proposed");
+                committed += sp.accepted.len() + 1;
+                proposed += sp.proposed;
+                accepted += sp.accepted.len();
+                cur[slot] = sp.next;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let accept_rate = if proposed > 0 { accepted as f64 / proposed as f64 } else { 0.0 };
+        let tok_per_step = committed as f64 / decode_steps as f64;
+        let tps = committed as f64 / wall;
+        assert!(
+            committed >= decode_steps * m,
+            "every speculative step must commit at least the resampled token"
+        );
+        println!("{:<6.1} {:>8.2} {:>9.2} {:>12.0}", temp, accept_rate, tok_per_step, tps);
+        rows.push(Json::obj(vec![
+            ("mode", Json::from("sampled")),
+            ("temperature", Json::from(temp as f64)),
+            ("draft", Json::from("no-sub")),
+            ("k", Json::from(k)),
+            ("slots", Json::from(m)),
+            ("decode_steps", Json::from(decode_steps)),
+            ("acceptance_rate", Json::from(accept_rate)),
+            ("tokens_per_step", Json::from(tok_per_step)),
+            ("tokens_per_s", Json::from(tps)),
+        ]));
+    }
+    Ok(rows)
+}
+
 fn main() -> anyhow::Result<()> {
     let sizes: &[usize] = if fast() { &[256, 512] } else { &[256, 512, 1024] };
     let iters = if fast() { 3 } else { 8 };
@@ -377,7 +474,8 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let spec_rows = speculative_sweep(fast())?;
+    let mut spec_rows = speculative_sweep(fast())?;
+    spec_rows.extend(sampled_temperature_sweep(fast())?);
     batched_decode_sweep(&bench, spec_rows)?;
 
     // PJRT kernel artifacts

@@ -17,6 +17,7 @@
 //! reused, copy-on-write copies, and failed (shed) allocations.
 
 use crate::engine::kv::KvPoolStats;
+use crate::util::json::Json;
 use crate::util::timer::LatencyStats;
 use std::time::Instant;
 
@@ -48,13 +49,16 @@ impl SpecModeStats {
     }
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct ServeMetrics {
     pub started: Instant,
     pub requests_in: usize,
     pub requests_done: usize,
     /// shed (queue overflow) or rejected (validation) requests
     pub requests_shed: usize,
+    /// requests abandoned mid-stream (event sink dropped): slot released,
+    /// KV pages freed, decoding stopped
+    pub cancellations: usize,
     /// prompt positions the engine actually prefilled (positions served
     /// from the KV prefix cache are excluded on the continuous path)
     pub tokens_prefilled: usize,
@@ -93,6 +97,10 @@ pub struct ServeMetrics {
     /// queue wait: request arrival → slot admission
     pub admission_wait: LatencyStats,
     pub ttft: LatencyStats,
+    /// server-side inter-token latency: gap between consecutive token
+    /// emissions of the same request (speculative bursts record 0-gap
+    /// entries for the extra tokens committed in one step)
+    pub itl: LatencyStats,
     pub per_token: LatencyStats,
     pub e2e: LatencyStats,
     /// latest paged KV-pool snapshot (None on dense/PJRT backends)
@@ -106,6 +114,7 @@ impl Default for ServeMetrics {
             requests_in: 0,
             requests_done: 0,
             requests_shed: 0,
+            cancellations: 0,
             tokens_prefilled: 0,
             tokens_generated: 0,
             batches_formed: 0,
@@ -124,6 +133,7 @@ impl Default for ServeMetrics {
             weight_bytes: 0,
             admission_wait: LatencyStats::new(),
             ttft: LatencyStats::new(),
+            itl: LatencyStats::new(),
             per_token: LatencyStats::new(),
             e2e: LatencyStats::new(),
             kv_pool: None,
@@ -257,11 +267,12 @@ impl ServeMetrics {
 
     pub fn report(&self) -> String {
         let mut out = format!(
-            "requests={}/{} (shed {}) prefill_tokens={} gen_tokens={} tps={:.1}\n  \
+            "requests={}/{} (shed {}, cancelled {}) prefill_tokens={} gen_tokens={} tps={:.1}\n  \
              slots: occupancy={:.2} peak={} hist[{}] admissions={} pools={} groups={} (occ {:.2})",
             self.requests_done,
             self.requests_in,
             self.requests_shed,
+            self.cancellations,
             self.tokens_prefilled,
             self.tokens_generated,
             self.decode_tps(),
@@ -316,6 +327,7 @@ impl ServeMetrics {
         for line in [
             self.admission_wait.report("admission"),
             self.ttft.report("ttft"),
+            self.itl.report("itl"),
             self.per_token.report("per-token"),
             self.e2e.report("e2e"),
         ] {
@@ -324,6 +336,72 @@ impl ServeMetrics {
         }
         out
     }
+
+    /// Snapshot as JSON (the `GET /metrics` response body and the
+    /// `BENCH_serve.json` building block).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("uptime_s", self.started.elapsed().as_secs_f64().into()),
+            ("requests_in", self.requests_in.into()),
+            ("requests_done", self.requests_done.into()),
+            ("requests_shed", self.requests_shed.into()),
+            ("cancellations", self.cancellations.into()),
+            ("tokens_prefilled", self.tokens_prefilled.into()),
+            ("tokens_generated", self.tokens_generated.into()),
+            ("decode_tps", self.decode_tps().into()),
+            ("admissions", self.admissions.into()),
+            ("decode_steps", self.decode_steps.into()),
+            ("mean_slot_occupancy", self.mean_slot_occupancy().into()),
+            ("peak_occupied", self.peak_occupied.into()),
+            ("weight_bytes", (self.weight_bytes as f64).into()),
+            ("admission_wait", lat_json(&self.admission_wait)),
+            ("ttft", lat_json(&self.ttft)),
+            ("itl", lat_json(&self.itl)),
+            ("per_token", lat_json(&self.per_token)),
+            ("e2e", lat_json(&self.e2e)),
+        ];
+        if self.spec_steps > 0 {
+            fields.push((
+                "speculative",
+                Json::obj(vec![
+                    ("steps", self.spec_steps.into()),
+                    ("proposed", self.spec_proposed.into()),
+                    ("accepted", self.spec_accepted.into()),
+                    ("acceptance_rate", self.spec_acceptance_rate().into()),
+                    ("tokens_per_step", self.spec_tokens_per_step().into()),
+                ]),
+            ));
+        }
+        if let Some(p) = &self.kv_pool {
+            fields.push((
+                "kv_pool",
+                Json::obj(vec![
+                    ("pages_total", p.pages_total.into()),
+                    ("pages_in_use", p.pages_in_use.into()),
+                    ("peak_pages_in_use", p.peak_pages_in_use.into()),
+                    ("prefix_lookups", p.prefix_lookups.into()),
+                    ("prefix_hits", p.prefix_hits.into()),
+                    ("prefix_tokens_reused", p.prefix_tokens_reused.into()),
+                    ("cow_copies", p.cow_copies.into()),
+                    ("alloc_failures", p.alloc_failures.into()),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Latency summary as JSON: count, mean and the tail percentiles every
+/// serving dashboard wants.
+fn lat_json(l: &LatencyStats) -> Json {
+    Json::obj(vec![
+        ("n", l.count().into()),
+        ("mean_us", l.mean_us().into()),
+        ("p50_us", l.percentile_us(50.0).into()),
+        ("p95_us", l.percentile_us(95.0).into()),
+        ("p99_us", l.percentile_us(99.0).into()),
+        ("max_us", l.max_us().into()),
+    ])
 }
 
 #[cfg(test)]
@@ -378,6 +456,25 @@ mod tests {
         assert!((m.spec_greedy.acceptance_rate() - 0.75).abs() < 1e-9);
         assert!((m.spec_sampled.acceptance_rate() - 4.0 / 6.0).abs() < 1e-9);
         assert!(m.report().contains("sampled: steps 2"));
+    }
+
+    #[test]
+    fn json_snapshot_has_latency_keys() {
+        let mut m = ServeMetrics::new();
+        m.requests_in = 3;
+        m.requests_done = 2;
+        m.cancellations = 1;
+        m.ttft.record_us(1000.0);
+        m.itl.record_us(200.0);
+        let j = m.to_json();
+        assert_eq!(j.get("cancellations").and_then(Json::as_usize), Some(1));
+        for lat in ["ttft", "itl", "e2e"] {
+            let l = j.get(lat).unwrap_or_else(|| panic!("missing {lat}"));
+            for k in ["n", "mean_us", "p50_us", "p95_us", "p99_us", "max_us"] {
+                assert!(l.get(k).is_some(), "{lat} missing {k}");
+            }
+        }
+        assert!(j.get("speculative").is_none(), "no spec steps → no spec block");
     }
 
     #[test]

@@ -26,8 +26,10 @@
 //!   frees, step the occupied slots, stream events,
 //! * [`metrics`] — TTFT / per-token latency / throughput, slot-occupancy
 //!   histogram and admission-latency accounting,
-//! * [`workload`] — synthetic request generators for `serve` and the
-//!   Fig-7 bench.
+//! * [`workload`] — the trace-driven load generator: Poisson / bursty
+//!   arrivals, lognormal length mixes with straggler tails, templated
+//!   shared prefixes and a greedy/sampled split (drives the `loadgen`
+//!   harness and the Fig-7 bench).
 
 pub mod backend;
 pub mod batcher;
@@ -42,4 +44,5 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::{ServeMetrics, SpecModeStats};
 pub use request::{GenEvent, GenRequest, GenResponse, SamplingParams};
 pub use sampler::Sampler;
-pub use server::{Coordinator, CoordinatorConfig, CoordinatorHandle};
+pub use server::{Coordinator, CoordinatorClient, CoordinatorConfig, CoordinatorHandle};
+pub use workload::{Arrival, LenDist, ReqMeta, Workload, WorkloadConfig};

@@ -70,6 +70,8 @@ struct Active {
     output: Vec<u32>,
     ttft_us: Option<f64>,
     prefill_done: Instant,
+    /// when the previous token event was emitted (inter-token latency)
+    last_token_at: Option<Instant>,
 }
 
 /// The scheduling core shared by the closed loop and the spawned worker:
@@ -86,6 +88,9 @@ struct ServeLoop<'a> {
     sampler: Sampler,
     metrics: ServeMetrics,
     sinks: HashMap<u64, mpsc::Sender<GenEvent>>,
+    /// in-flight ids whose sink dropped mid-stream (client disconnect),
+    /// awaiting slot release at the next reap point
+    cancelled: Vec<u64>,
     finished: Vec<GenResponse>,
     collect: bool,
 }
@@ -120,6 +125,7 @@ impl<'a> ServeLoop<'a> {
             sampler: Sampler::new(0xfb90),
             metrics,
             sinks: HashMap::new(),
+            cancelled: Vec::new(),
             finished: Vec::new(),
             collect,
         })
@@ -135,6 +141,10 @@ impl<'a> ServeLoop<'a> {
 
     /// Deliver an event to its request's sink (if any); terminal events
     /// close the sink, `Done` responses are collected in closed-loop mode.
+    /// A failed send on a non-terminal event means the receiver is gone
+    /// (HTTP client disconnected): the id is marked for cancellation so
+    /// the next reap point frees its slot and KV pages instead of
+    /// decoding for a dead stream.
     fn emit(&mut self, ev: GenEvent) {
         let id = ev.id();
         let terminal = ev.is_terminal();
@@ -144,11 +154,41 @@ impl<'a> ServeLoop<'a> {
             }
         }
         if let Some(sink) = self.sinks.get(&id) {
-            let _ = sink.send(ev);
+            if sink.send(ev).is_err() && !terminal {
+                self.sinks.remove(&id);
+                self.cancelled.push(id);
+            }
         }
         if terminal {
             self.sinks.remove(&id);
         }
+    }
+
+    /// Release the slots of requests whose stream receiver dropped:
+    /// frees the slot (returning its KV pages to the pool), strikes the
+    /// slot from this step's decode set, and counts the cancellation.
+    fn reap_cancelled(
+        &mut self,
+        to_decode: &mut Vec<SlotToken>,
+        to_spec: &mut Vec<SpecSlot>,
+    ) -> Result<()> {
+        if self.cancelled.is_empty() {
+            return Ok(());
+        }
+        for id in std::mem::take(&mut self.cancelled) {
+            let slot =
+                self.slots.iter().position(|s| s.as_ref().is_some_and(|a| a.req.id == id));
+            // a request can finish (stop token, budget) between the failed
+            // send and the reap — nothing left to release then
+            let Some(slot) = slot else { continue };
+            self.slots[slot] = None;
+            self.backend.release_slot(&mut self.state, slot)?;
+            self.metrics.cancellations += 1;
+            to_decode.retain(|st| st.slot != slot);
+            to_spec.retain(|sp| sp.slot != slot);
+        }
+        self.snapshot_kv();
+        Ok(())
     }
 
     /// Accept a request into the admission queue. Invalid requests error
@@ -245,6 +285,7 @@ impl<'a> ServeLoop<'a> {
             output: Vec::new(),
             ttft_us: None,
             prefill_done: Instant::now(),
+            last_token_at: None,
         });
         Ok(())
     }
@@ -337,6 +378,11 @@ impl<'a> ServeLoop<'a> {
                     a.ttft_us = Some(us);
                     self.metrics.ttft.record_us(us);
                 }
+                let now = Instant::now();
+                if let Some(prev) = a.last_token_at {
+                    self.metrics.itl.record(now - prev);
+                }
+                a.last_token_at = Some(now);
                 self.metrics.tokens_generated += 1;
                 events.push(GenEvent::Token {
                     id: a.req.id,
@@ -382,6 +428,8 @@ impl<'a> ServeLoop<'a> {
         for ev in events {
             self.emit(ev);
         }
+        // reap disconnected clients before spending a decode on them
+        self.reap_cancelled(&mut to_decode, &mut to_spec)?;
         if to_decode.is_empty() && to_spec.is_empty() {
             return Ok(progressed);
         }
@@ -416,6 +464,11 @@ impl<'a> ServeLoop<'a> {
                     for &tok in &sp.accepted {
                         a.output.push(tok);
                         committed += 1;
+                        let now = Instant::now();
+                        if let Some(prev) = a.last_token_at {
+                            self.metrics.itl.record(now - prev);
+                        }
+                        a.last_token_at = Some(now);
                         self.metrics.tokens_generated += 1;
                         spec_events.push(GenEvent::Token {
                             id: a.req.id,
@@ -461,6 +514,9 @@ impl<'a> ServeLoop<'a> {
                 anyhow::bail!("scheduler stalled with {} queued requests", self.batcher.len());
             }
         }
+        // step() early-returns before its KV snapshot when the last slot
+        // finishes; take a final one so the drained pool counters land
+        self.snapshot_kv();
         Ok(())
     }
 
@@ -520,12 +576,20 @@ impl Coordinator {
                                 WorkItem::Request(req, sink) => {
                                     let _ = lp.submit(req, Some(sink));
                                 }
+                                WorkItem::Metrics(reply) => {
+                                    lp.snapshot_kv();
+                                    let _ = reply.send(lp.metrics.clone());
+                                }
                                 WorkItem::Shutdown => {
                                     lp.drain_all()?;
                                     return Ok(lp.into_parts().1);
                                 }
                             }
                         }
+                    }
+                    Ok(WorkItem::Metrics(reply)) => {
+                        lp.snapshot_kv();
+                        let _ = reply.send(lp.metrics.clone());
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Ok(WorkItem::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -538,20 +602,77 @@ impl Coordinator {
                 lp.step()?;
             }
         });
-        CoordinatorHandle { tx, join: Some(join), next_id: std::sync::atomic::AtomicU64::new(1) }
+        CoordinatorHandle {
+            client: CoordinatorClient {
+                tx,
+                next_id: std::sync::Arc::new(std::sync::atomic::AtomicU64::new(1)),
+            },
+            join: Some(join),
+        }
     }
 }
 
 enum WorkItem {
     Request(GenRequest, mpsc::Sender<GenEvent>),
+    /// Live metrics snapshot request (the `GET /metrics` endpoint).
+    Metrics(mpsc::Sender<ServeMetrics>),
     Shutdown,
 }
 
-/// Client handle to a spawned coordinator.
-pub struct CoordinatorHandle {
+/// Cheap, cloneable submit handle to a spawned coordinator: what each
+/// server connection thread holds. Shares the id counter with every
+/// sibling clone; does not own the worker — shutdown (and the final
+/// metrics) stay with the [`CoordinatorHandle`].
+#[derive(Clone)]
+pub struct CoordinatorClient {
     tx: mpsc::Sender<WorkItem>,
+    next_id: std::sync::Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl CoordinatorClient {
+    /// Submit a request; returns its event stream (see
+    /// [`CoordinatorHandle::submit`]).
+    pub fn submit(&self, mut req: GenRequest) -> mpsc::Receiver<GenEvent> {
+        if req.id == 0 {
+            req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        req.arrived = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(WorkItem::Request(req, tx));
+        rx
+    }
+
+    /// Convenience: submit and block for the final response, discarding
+    /// intermediate token events.
+    pub fn submit_wait(&self, req: GenRequest) -> Result<GenResponse> {
+        let rx = self.submit(req);
+        for ev in rx {
+            match ev {
+                GenEvent::Done(r) => return Ok(r),
+                GenEvent::Error { id, message } => {
+                    anyhow::bail!("request {id} failed: {message}")
+                }
+                GenEvent::Token { .. } => {}
+            }
+        }
+        anyhow::bail!("coordinator dropped the event stream")
+    }
+
+    /// Live metrics snapshot from the serving loop (blocks until the
+    /// worker answers between scheduling steps).
+    pub fn metrics(&self) -> Result<ServeMetrics> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(WorkItem::Metrics(tx))
+            .map_err(|_| anyhow::anyhow!("coordinator worker is gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("coordinator worker dropped the metrics reply"))
+    }
+}
+
+/// Owning handle to a spawned coordinator (shutdown joins the worker).
+pub struct CoordinatorHandle {
+    client: CoordinatorClient,
     join: Option<std::thread::JoinHandle<Result<ServeMetrics>>>,
-    next_id: std::sync::atomic::AtomicU64,
 }
 
 impl CoordinatorHandle {
@@ -589,35 +710,29 @@ impl CoordinatorHandle {
     /// # Ok(())
     /// # }
     /// ```
-    pub fn submit(&self, mut req: GenRequest) -> mpsc::Receiver<GenEvent> {
-        if req.id == 0 {
-            req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        }
-        req.arrived = Instant::now();
-        let (tx, rx) = mpsc::channel();
-        let _ = self.tx.send(WorkItem::Request(req, tx));
-        rx
+    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<GenEvent> {
+        self.client.submit(req)
     }
 
     /// Convenience: submit and block for the final response, discarding
     /// intermediate token events.
     pub fn submit_wait(&self, req: GenRequest) -> Result<GenResponse> {
-        let rx = self.submit(req);
-        for ev in rx {
-            match ev {
-                GenEvent::Done(r) => return Ok(r),
-                GenEvent::Error { id, message } => {
-                    anyhow::bail!("request {id} failed: {message}")
-                }
-                GenEvent::Token { .. } => {}
-            }
-        }
-        anyhow::bail!("coordinator dropped the event stream")
+        self.client.submit_wait(req)
+    }
+
+    /// Live metrics snapshot (see [`CoordinatorClient::metrics`]).
+    pub fn metrics(&self) -> Result<ServeMetrics> {
+        self.client.metrics()
+    }
+
+    /// A cloneable submit handle for connection threads.
+    pub fn client(&self) -> CoordinatorClient {
+        self.client.clone()
     }
 
     /// Graceful shutdown; returns final metrics.
     pub fn shutdown(mut self) -> Result<ServeMetrics> {
-        let _ = self.tx.send(WorkItem::Shutdown);
+        let _ = self.client.tx.send(WorkItem::Shutdown);
         self.join
             .take()
             .expect("already joined")
@@ -628,7 +743,7 @@ impl CoordinatorHandle {
 
 impl Drop for CoordinatorHandle {
     fn drop(&mut self) {
-        let _ = self.tx.send(WorkItem::Shutdown);
+        let _ = self.client.tx.send(WorkItem::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }

@@ -1,103 +1,441 @@
-//! Synthetic request workloads for the `serve` command and the Fig-7 /
-//! serving benches: prompts sampled from the held-out corpus, fixed or
-//! Poisson arrivals.
+//! Trace-driven synthetic workloads for the serving front end, the
+//! `loadgen` harness and the Fig-7 / serving benches.
+//!
+//! A [`Workload`] is a seeded, reproducible request trace with the
+//! statistical structure production traffic has and uniform smoke
+//! traffic lacks:
+//!
+//! * **arrivals** — closed-loop (everything at t=0), Poisson at a fixed
+//!   rate, or bursty: a two-state on/off modulated Poisson process whose
+//!   phase durations are themselves exponential (tail latency lives in
+//!   the bursts, not the average rate),
+//! * **lengths** — prompt and output budgets drawn from clamped
+//!   lognormal distributions ([`LenDist`]), plus a configurable fraction
+//!   of long-tail *straggler* outputs that occupy slots far longer than
+//!   the median request,
+//! * **templated prefixes** — a fraction of prompts share one of
+//!   `n_templates` fixed prefixes (system-prompt style), which exercises
+//!   the paged KV pool's prefix cache,
+//! * **sampling mix** — a fraction of requests decode stochastically
+//!   (temperature sampling), the rest greedy; on a speculative backend
+//!   this splits traffic across both acceptance modes.
+//!
+//! Everything is deterministic per seed: the same config yields the same
+//! trace, so the in-process and HTTP-loopback harness modes (and any two
+//! commits) measure identical traffic.
 
 use super::request::{GenRequest, SamplingParams};
 use crate::eval::data::TokenStream;
 use crate::util::Pcg64;
 use std::time::Duration;
 
+/// Arrival process for open-loop load generation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// No schedule: every request is available at t=0 (closed loop).
+    Closed,
+    /// Poisson arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// On/off modulated Poisson: requests arrive at `rate_on` req/s
+    /// during bursts and `rate_off` req/s between them; phase durations
+    /// are exponential with means `mean_on_s` / `mean_off_s` seconds.
+    Bursty { rate_on: f64, rate_off: f64, mean_on_s: f64, mean_off_s: f64 },
+}
+
+/// Discretized lognormal length distribution clamped to `[min, max]`:
+/// `round(exp(log_mean + log_sigma * N(0,1)))`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LenDist {
+    /// mean of ln(length) — `exp(log_mean)` is the median length
+    pub log_mean: f64,
+    /// standard deviation of ln(length)
+    pub log_sigma: f64,
+    pub min: usize,
+    pub max: usize,
+}
+
+impl LenDist {
+    pub fn new(log_mean: f64, log_sigma: f64, min: usize, max: usize) -> Self {
+        LenDist { log_mean, log_sigma, min, max }
+    }
+
+    /// A degenerate point distribution (every draw returns `n`).
+    pub fn fixed(n: usize) -> Self {
+        LenDist { log_mean: (n.max(1) as f64).ln(), log_sigma: 0.0, min: n, max: n }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let x = (self.log_mean + self.log_sigma * rng.normal()).exp();
+        (x.round() as usize).clamp(self.min, self.max.max(self.min))
+    }
+}
+
+/// Per-request trace annotations: which generator paths produced it.
+/// The harness groups its latency records by these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReqMeta {
+    /// index of the shared prompt-prefix template, if any
+    pub template: Option<usize>,
+    /// long-tail output (budget multiplied by `straggler_mult`)
+    pub straggler: bool,
+    /// stochastic (temperature) sampling instead of greedy
+    pub sampled: bool,
+}
+
 #[derive(Debug, Clone)]
 pub struct WorkloadConfig {
     pub n_requests: usize,
-    /// prompt lengths are drawn from this set (position-aligned batching
-    /// needs a small set of lengths to bucket on)
-    pub prompt_lens: Vec<usize>,
-    pub max_new_tokens: usize,
-    /// requests per second for open-loop generation (0 = closed loop)
-    pub arrival_rate: f64,
+    pub arrival: Arrival,
+    pub prompt_len: LenDist,
+    /// per-request generation budget (`max_new_tokens`)
+    pub output_len: LenDist,
+    /// fraction of requests whose output budget is multiplied by
+    /// `straggler_mult` (long-tail stragglers)
+    pub straggler_frac: f64,
+    pub straggler_mult: usize,
+    /// distinct shared prompt-prefix templates in the trace
+    pub n_templates: usize,
+    /// shared prefix length per template, in tokens
+    pub template_len: usize,
+    /// fraction of prompts that start with a templated prefix
+    pub template_frac: f64,
+    /// fraction of requests decoded with temperature sampling
+    pub sampled_frac: f64,
     pub temperature: f32,
+    pub top_k: usize,
+    /// synthetic token id space when no corpus stream is supplied
+    pub vocab: u32,
     pub seed: u64,
 }
 
 impl Default for WorkloadConfig {
     fn default() -> Self {
         WorkloadConfig {
-            n_requests: 16,
-            prompt_lens: vec![32, 64],
-            max_new_tokens: 32,
-            arrival_rate: 0.0,
-            temperature: 0.0,
+            n_requests: 32,
+            arrival: Arrival::Poisson { rate: 16.0 },
+            // median ~30-token prompts, ~16-token outputs
+            prompt_len: LenDist::new(3.4, 0.4, 8, 96),
+            output_len: LenDist::new(2.8, 0.5, 4, 64),
+            straggler_frac: 0.05,
+            straggler_mult: 4,
+            n_templates: 4,
+            template_len: 24,
+            template_frac: 0.5,
+            sampled_frac: 0.25,
+            temperature: 0.8,
+            top_k: 8,
+            vocab: 96,
             seed: 7,
         }
     }
 }
 
-/// A generated workload: requests plus (for open loop) arrival offsets.
-#[derive(Debug)]
+/// A generated trace: requests, their arrival offsets, per-request
+/// annotations and the shared template prefixes.
+#[derive(Debug, Clone)]
 pub struct Workload {
     pub requests: Vec<GenRequest>,
+    /// arrival offset of each request from trace start (all zero for
+    /// [`Arrival::Closed`])
     pub arrivals: Vec<Duration>,
+    pub meta: Vec<ReqMeta>,
+    /// the shared prompt-prefix templates (token ids)
+    pub templates: Vec<Vec<u32>>,
 }
 
-/// Sample prompts from a held-out token stream.
-pub fn generate(stream: &TokenStream, cfg: &WorkloadConfig) -> Workload {
+impl Workload {
+    /// Largest prompt + output footprint in the trace (for sizing
+    /// `max_seq` and KV pools).
+    pub fn max_seq(&self) -> usize {
+        self.requests.iter().map(|r| r.prompt.len() + r.max_new_tokens).max().unwrap_or(0)
+    }
+
+    /// Total generation budget across the trace.
+    pub fn total_output_budget(&self) -> usize {
+        self.requests.iter().map(|r| r.max_new_tokens).sum()
+    }
+
+    /// Clamp every request to fit a model context of `max_seq` tokens
+    /// (truncating prompts, shrinking budgets) so a synthetic trace
+    /// stays valid on a tiny model instead of drawing 400s.
+    pub fn clamp_to(&mut self, max_seq: usize) {
+        for r in &mut self.requests {
+            let cap = max_seq.saturating_sub(1).max(1);
+            r.prompt.truncate(cap);
+            let room = max_seq.saturating_sub(r.prompt.len()).max(1);
+            r.max_new_tokens = r.max_new_tokens.clamp(1, room);
+        }
+    }
+}
+
+/// Phase state for the bursty arrival process.
+struct BurstState {
+    on: bool,
+    /// seconds left in the current phase
+    left: f64,
+}
+
+impl BurstState {
+    fn init(rng: &mut Pcg64, arrival: &Arrival) -> BurstState {
+        match *arrival {
+            Arrival::Bursty { mean_on_s, .. } => {
+                BurstState { on: true, left: rng.exponential(1.0 / mean_on_s.max(1e-9)) }
+            }
+            _ => BurstState { on: true, left: 0.0 },
+        }
+    }
+}
+
+/// Seconds until the next arrival under `arrival`, advancing the burst
+/// phase state as needed (standard Markov-modulated Poisson stepping:
+/// if the candidate wait overruns the phase, consume the phase and
+/// redraw in the next one).
+fn next_arrival(rng: &mut Pcg64, arrival: &Arrival, state: &mut BurstState) -> f64 {
+    match *arrival {
+        Arrival::Closed => 0.0,
+        Arrival::Poisson { rate } => rng.exponential(rate.max(1e-9)),
+        Arrival::Bursty { rate_on, rate_off, mean_on_s, mean_off_s } => {
+            let mut gap = 0.0;
+            loop {
+                let rate = if state.on { rate_on } else { rate_off };
+                let wait = if rate > 0.0 { rng.exponential(rate) } else { f64::INFINITY };
+                if wait <= state.left {
+                    state.left -= wait;
+                    return gap + wait;
+                }
+                gap += state.left;
+                state.on = !state.on;
+                let mean = if state.on { mean_on_s } else { mean_off_s };
+                state.left = rng.exponential(1.0 / mean.max(1e-9));
+            }
+        }
+    }
+}
+
+/// Draw `len` prompt tokens: a random window of the corpus stream when
+/// one is supplied (real byte statistics), uniform ids below `vocab`
+/// otherwise (synthetic checkpoints).
+fn draw_tokens(rng: &mut Pcg64, corpus: Option<&TokenStream>, vocab: u32, len: usize) -> Vec<u32> {
+    if len == 0 {
+        return Vec::new();
+    }
+    match corpus {
+        Some(stream) if stream.tokens().len() > len => {
+            let toks = stream.tokens();
+            let start = rng.below(toks.len() - len);
+            toks[start..start + len].iter().map(|&b| b as u32).collect()
+        }
+        _ => (0..len).map(|_| rng.next_u32() % vocab.max(1)).collect(),
+    }
+}
+
+/// Generate a seeded trace. `corpus` supplies prompt bytes when present
+/// (the held-out eval stream); synthetic ids below `cfg.vocab` otherwise.
+pub fn generate(cfg: &WorkloadConfig, corpus: Option<&TokenStream>) -> Workload {
     let mut rng = Pcg64::seeded(cfg.seed);
-    let toks = stream.tokens();
+    let templates: Vec<Vec<u32>> = (0..cfg.n_templates)
+        .map(|_| draw_tokens(&mut rng, corpus, cfg.vocab, cfg.template_len))
+        .collect();
+    let mut burst = BurstState::init(&mut rng, &cfg.arrival);
     let mut requests = Vec::with_capacity(cfg.n_requests);
     let mut arrivals = Vec::with_capacity(cfg.n_requests);
+    let mut meta = Vec::with_capacity(cfg.n_requests);
     let mut t = Duration::ZERO;
     for i in 0..cfg.n_requests {
-        let plen = *rng.choose(&cfg.prompt_lens);
-        let start = rng.below(toks.len().saturating_sub(plen + 1));
-        let prompt: Vec<u32> = toks[start..start + plen].iter().map(|&b| b as u32).collect();
-        let mut req = GenRequest::new((i + 1) as u64, prompt, cfg.max_new_tokens);
-        req.params = SamplingParams {
-            temperature: cfg.temperature,
-            top_k: 8,
-            seed: cfg.seed ^ i as u64,
-            ..SamplingParams::default()
+        let template = (!templates.is_empty() && rng.next_f64() < cfg.template_frac)
+            .then(|| rng.below(templates.len()));
+        let plen = cfg.prompt_len.sample(&mut rng).max(1);
+        let mut prompt = match template {
+            Some(ti) => templates[ti].clone(),
+            None => Vec::new(),
         };
-        requests.push(req);
-        if cfg.arrival_rate > 0.0 {
-            t += Duration::from_secs_f64(rng.exponential(cfg.arrival_rate));
+        // unique tail: ≥1 token so two requests on the same template are
+        // still distinct sequences past the shared prefix
+        let tail = plen.saturating_sub(prompt.len()).max(1);
+        prompt.extend(draw_tokens(&mut rng, corpus, cfg.vocab, tail));
+        let straggler = rng.next_f64() < cfg.straggler_frac;
+        let mut output = cfg.output_len.sample(&mut rng).max(1);
+        if straggler {
+            output *= cfg.straggler_mult.max(1);
         }
+        let sampled = rng.next_f64() < cfg.sampled_frac;
+        let mut req = GenRequest::new((i + 1) as u64, prompt, output);
+        if sampled {
+            req.params = SamplingParams {
+                temperature: cfg.temperature,
+                top_k: cfg.top_k,
+                seed: cfg.seed ^ i as u64,
+                ..SamplingParams::default()
+            };
+        }
+        t += Duration::from_secs_f64(next_arrival(&mut rng, &cfg.arrival, &mut burst));
+        requests.push(req);
         arrivals.push(t);
+        meta.push(ReqMeta { template, straggler, sampled });
     }
-    Workload { requests, arrivals }
+    Workload { requests, arrivals, meta, templates }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn stream() -> TokenStream {
-        TokenStream::from_vec((0..10_000u32).map(|i| (i % 251) as u8).collect())
+    fn gaps(w: &Workload) -> Vec<f64> {
+        w.arrivals.windows(2).map(|p| (p[1] - p[0]).as_secs_f64()).collect()
     }
 
-    #[test]
-    fn generates_requested_count_and_lengths() {
-        let w = generate(&stream(), &WorkloadConfig::default());
-        assert_eq!(w.requests.len(), 16);
-        for r in &w.requests {
-            assert!(r.prompt.len() == 32 || r.prompt.len() == 64);
-        }
+    fn mean(xs: &[f64]) -> f64 {
+        xs.iter().sum::<f64>() / xs.len() as f64
     }
 
-    #[test]
-    fn open_loop_arrivals_increase() {
-        let cfg = WorkloadConfig { arrival_rate: 100.0, ..Default::default() };
-        let w = generate(&stream(), &cfg);
-        for pair in w.arrivals.windows(2) {
-            assert!(pair[1] >= pair[0]);
-        }
-        assert!(*w.arrivals.last().unwrap() > Duration::ZERO);
+    fn cv(xs: &[f64]) -> f64 {
+        let m = mean(xs);
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+        var.sqrt() / m
     }
 
     #[test]
     fn deterministic_per_seed() {
-        let a = generate(&stream(), &WorkloadConfig::default());
-        let b = generate(&stream(), &WorkloadConfig::default());
-        assert_eq!(a.requests[3].prompt, b.requests[3].prompt);
+        let cfg = WorkloadConfig::default();
+        let a = generate(&cfg, None);
+        let b = generate(&cfg, None);
+        for (ra, rb) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(ra.prompt, rb.prompt);
+            assert_eq!(ra.max_new_tokens, rb.max_new_tokens);
+        }
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.meta, b.meta);
+        let c = generate(&WorkloadConfig { seed: 8, ..cfg }, None);
+        assert_ne!(a.arrivals, c.arrivals);
+    }
+
+    #[test]
+    fn closed_arrivals_are_zero_and_poisson_increase() {
+        let closed =
+            generate(&WorkloadConfig { arrival: Arrival::Closed, ..Default::default() }, None);
+        assert!(closed.arrivals.iter().all(|a| *a == Duration::ZERO));
+        let open = generate(&WorkloadConfig::default(), None);
+        for p in open.arrivals.windows(2) {
+            assert!(p[1] >= p[0]);
+        }
+        assert!(*open.arrivals.last().unwrap() > Duration::ZERO);
+    }
+
+    #[test]
+    fn poisson_interarrival_mean_and_cv() {
+        let cfg = WorkloadConfig {
+            n_requests: 4000,
+            arrival: Arrival::Poisson { rate: 50.0 },
+            seed: 11,
+            ..Default::default()
+        };
+        let w = generate(&cfg, None);
+        let g = gaps(&w);
+        // Exp(50): mean 0.02 s, CV 1 — generous n=4000 tolerance bands
+        assert!((mean(&g) - 0.02).abs() < 0.002, "mean gap {}", mean(&g));
+        assert!((cv(&g) - 1.0).abs() < 0.15, "cv {}", cv(&g));
+    }
+
+    #[test]
+    fn bursty_arrivals_are_overdispersed() {
+        let cfg = WorkloadConfig {
+            n_requests: 4000,
+            arrival: Arrival::Bursty {
+                rate_on: 200.0,
+                rate_off: 0.0,
+                mean_on_s: 0.05,
+                mean_off_s: 0.05,
+            },
+            seed: 12,
+            ..Default::default()
+        };
+        let w = generate(&cfg, None);
+        let g = gaps(&w);
+        // 50% duty cycle at 200 req/s on → average rate ≈ 100 req/s
+        assert!((mean(&g) - 0.01).abs() < 0.0025, "mean gap {}", mean(&g));
+        // on/off modulation: inter-arrival CV well above the Poisson 1.0
+        assert!(cv(&g) > 1.2, "cv {} not bursty", cv(&g));
+    }
+
+    #[test]
+    fn length_mix_and_straggler_fraction() {
+        let cfg = WorkloadConfig {
+            n_requests: 4000,
+            template_frac: 0.0,
+            straggler_frac: 0.1,
+            seed: 13,
+            ..Default::default()
+        };
+        let w = generate(&cfg, None);
+        let mut plens: Vec<usize> = w.requests.iter().map(|r| r.prompt.len()).collect();
+        plens.sort_unstable();
+        let median = plens[plens.len() / 2] as f64;
+        // lognormal median = exp(log_mean) ≈ 30
+        let expect = cfg.prompt_len.log_mean.exp();
+        assert!((median - expect).abs() / expect < 0.2, "median {median} vs {expect}");
+        assert!(plens.iter().all(|&l| l >= cfg.prompt_len.min && l <= cfg.prompt_len.max));
+        let frac = w.meta.iter().filter(|m| m.straggler).count() as f64 / w.requests.len() as f64;
+        assert!((frac - 0.1).abs() < 0.02, "straggler frac {frac}");
+        // stragglers carry a multiplied budget: their mean budget must
+        // dominate the non-straggler mean
+        let (mut s_sum, mut s_n, mut n_sum, mut n_n) = (0usize, 0usize, 0usize, 0usize);
+        for (r, m) in w.requests.iter().zip(&w.meta) {
+            if m.straggler {
+                s_sum += r.max_new_tokens;
+                s_n += 1;
+            } else {
+                n_sum += r.max_new_tokens;
+                n_n += 1;
+            }
+        }
+        assert!(s_sum * n_n > 2 * n_sum * s_n, "straggler budgets not long-tailed");
+    }
+
+    #[test]
+    fn templated_prefix_share_and_uniqueness() {
+        let cfg = WorkloadConfig { n_requests: 2000, seed: 14, ..Default::default() };
+        let w = generate(&cfg, None);
+        let templated = w.meta.iter().filter(|m| m.template.is_some()).count();
+        let frac = templated as f64 / w.requests.len() as f64;
+        assert!((frac - cfg.template_frac).abs() < 0.05, "template frac {frac}");
+        for (r, m) in w.requests.iter().zip(&w.meta) {
+            if let Some(ti) = m.template {
+                let tpl = &w.templates[ti];
+                assert!(r.prompt.len() > tpl.len(), "templated prompt has no unique tail");
+                assert_eq!(&r.prompt[..tpl.len()], &tpl[..], "prompt does not share prefix");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_mix_matches_config() {
+        let cfg = WorkloadConfig { n_requests: 2000, seed: 15, ..Default::default() };
+        let w = generate(&cfg, None);
+        let frac = w.meta.iter().filter(|m| m.sampled).count() as f64 / w.requests.len() as f64;
+        assert!((frac - cfg.sampled_frac).abs() < 0.04, "sampled frac {frac}");
+        for (r, m) in w.requests.iter().zip(&w.meta) {
+            assert_eq!(m.sampled, r.params.is_sampled());
+        }
+    }
+
+    #[test]
+    fn corpus_prompts_come_from_stream() {
+        let stream = TokenStream::from_vec((0..10_000u32).map(|i| (i % 251) as u8).collect());
+        let cfg = WorkloadConfig { n_requests: 64, template_frac: 0.0, ..Default::default() };
+        let w = generate(&cfg, Some(&stream));
+        for r in &w.requests {
+            assert!(r.prompt.iter().all(|&t| t < 251));
+        }
+    }
+
+    #[test]
+    fn clamp_to_fits_context() {
+        let mut w = generate(&WorkloadConfig::default(), None);
+        w.clamp_to(48);
+        for r in &w.requests {
+            assert!(r.prompt.len() + r.max_new_tokens <= 48);
+            assert!(r.max_new_tokens >= 1);
+        }
+        assert!(w.max_seq() <= 48);
     }
 }

@@ -5,13 +5,15 @@ use super::ppl::{perplexity, PplConfig};
 use super::scorer::{NativeScorer, PjrtScorer, Scorer};
 use super::zeroshot::eval_suite;
 use crate::coordinator::backend::{Backend, NativeBackend, PjrtBackend};
-use crate::coordinator::server::{Coordinator, CoordinatorConfig};
-use crate::coordinator::workload::{generate, WorkloadConfig};
+use crate::coordinator::server::{Coordinator, CoordinatorConfig, CoordinatorHandle};
+use crate::coordinator::workload::{self, Arrival, Workload, WorkloadConfig};
 use crate::engine::{NativeEngine, SubMode};
 use crate::model::{ByteTokenizer, WeightStore};
 use crate::runtime::ExecRegistry;
+use crate::serve::{self, harness, ServeConfig};
 use crate::util::cli::Args;
-use anyhow::{bail, Context, Result};
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
 use std::path::PathBuf;
 
 fn artifacts() -> PathBuf {
@@ -193,27 +195,40 @@ pub fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-pub fn cmd_serve(args: &Args) -> Result<()> {
-    let store = load_store(args)?;
-    let stream = TokenStream::load(&artifacts().join("data/corpus_val.fbqw"))?;
-    let wl_cfg = WorkloadConfig {
-        n_requests: args.get_usize("requests", 16)?,
-        prompt_lens: vec![32, 64],
-        max_new_tokens: args.get_usize("tokens", 32)?,
-        arrival_rate: args.get_f64("rate", 0.0)?,
-        temperature: 0.8,
-        seed: args.get_u64("seed", 7)?,
-    };
-    let workload = generate(&stream, &wl_cfg);
-    let backend_kind = args.get_or("backend", "native").to_string();
-    let submode = parse_submode(args);
-    let art = artifacts();
+/// Spawn the coordinator worker selected by the CLI args and return the
+/// handle plus the model context length (used to clamp workloads).
+/// `--synth` serves a synthesized checkpoint — no `make artifacts`
+/// needed, which is what the CI serve-smoke job runs on.
+fn spawn_coordinator(args: &Args) -> Result<(CoordinatorHandle, usize)> {
     // --sync forces the batch-synchronous aligned-group baseline; pjrt
     // runs per-lane surfaces when continuous (the lock-step artifacts
     // cannot admit mid-flight)
     let continuous = !args.flag("sync");
-
     let cfg = CoordinatorConfig { continuous, ..CoordinatorConfig::default() };
+    let submode = parse_submode(args);
+    if args.flag("synth") {
+        let spec = crate::testing::SynthSpec {
+            vocab: 96,
+            max_seq: 256,
+            ..crate::testing::SynthSpec::default()
+        };
+        let store = crate::testing::synth_checkpoint("serve_synth", spec);
+        let max_seq = store.cfg.max_seq;
+        let handle = Coordinator::spawn(
+            move || -> Result<Box<dyn Backend>> {
+                Ok(Box::new(NativeBackend::new(
+                    NativeEngine::from_store(&store, submode)?,
+                    "serve-synth",
+                )))
+            },
+            cfg,
+        );
+        return Ok((handle, max_seq));
+    }
+    let store = load_store(args)?;
+    let max_seq = store.cfg.max_seq;
+    let backend_kind = args.get_or("backend", "native").to_string();
+    let art = artifacts();
     let handle = Coordinator::spawn(
         move || -> Result<Box<dyn Backend>> {
             Ok(match backend_kind.as_str() {
@@ -232,47 +247,131 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         },
         cfg,
     );
+    Ok((handle, max_seq))
+}
 
-    let mut receivers = Vec::new();
-    for (req, arrival) in workload.requests.into_iter().zip(workload.arrivals) {
-        if wl_cfg.arrival_rate > 0.0 {
-            let nap = arrival
-                .saturating_sub(std::time::Duration::ZERO)
-                .min(std::time::Duration::from_millis(50));
-            std::thread::sleep(nap);
-        }
-        receivers.push(handle.submit(req));
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let (handle, _) = spawn_coordinator(args)?;
+    let scfg = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:8090").to_string(),
+        ..ServeConfig::default()
+    };
+    let server = serve::Server::start(handle, &scfg)?;
+    let addr = server.local_addr();
+    println!("serving on http://{addr}");
+    println!("  curl http://{addr}/healthz");
+    println!("  curl http://{addr}/metrics");
+    println!(
+        "  curl -N -X POST http://{addr}/v1/generate \\\n       \
+         -d '{{\"prompt\":[61,32,115,101,97,32,61],\"max_new_tokens\":24}}'"
+    );
+    println!("reading stdin; EOF (Ctrl-D) shuts down gracefully");
+    let mut line = String::new();
+    while std::io::stdin().read_line(&mut line)? > 0 {
+        line.clear();
     }
-    let tok = ByteTokenizer::default();
-    for (i, rx) in receivers.into_iter().enumerate() {
-        // consume the event stream: count streamed tokens, keep the final
-        // response
-        let mut streamed = 0usize;
-        let mut done: Option<crate::coordinator::request::GenResponse> = None;
-        for ev in rx {
-            match ev {
-                crate::coordinator::request::GenEvent::Token { .. } => streamed += 1,
-                crate::coordinator::request::GenEvent::Done(r) => {
-                    done = Some(r);
-                    break;
-                }
-                crate::coordinator::request::GenEvent::Error { message, .. } => {
-                    crate::log_warn!("req {i}: {message}");
-                    break;
-                }
-            }
-        }
-        let Some(r) = done else { continue };
-        crate::log_info!(
-            "req {i}: {} tokens ({} streamed), ttft {:.1}ms -> {:?}",
-            r.tokens.len(),
-            streamed,
-            r.ttft_us / 1e3,
-            tok.decode(&r.tokens).chars().take(40).collect::<String>()
-        );
-    }
-    let metrics = handle.shutdown()?;
+    let metrics = server.shutdown()?;
     println!("{}", metrics.report());
+    Ok(())
+}
+
+/// One trace block for `BENCH_serve.json` (records what was replayed).
+fn trace_json(cfg: &WorkloadConfig, wl: &Workload) -> Json {
+    let arrival = match cfg.arrival {
+        Arrival::Closed => Json::from("closed"),
+        Arrival::Poisson { rate } => {
+            Json::obj(vec![("kind", "poisson".into()), ("rate", rate.into())])
+        }
+        Arrival::Bursty { rate_on, rate_off, mean_on_s, mean_off_s } => Json::obj(vec![
+            ("kind", "bursty".into()),
+            ("rate_on", rate_on.into()),
+            ("rate_off", rate_off.into()),
+            ("mean_on_s", mean_on_s.into()),
+            ("mean_off_s", mean_off_s.into()),
+        ]),
+    };
+    Json::obj(vec![
+        ("requests", wl.requests.len().into()),
+        ("arrival", arrival),
+        ("seed", (cfg.seed as f64).into()),
+        ("templates", cfg.n_templates.into()),
+        ("template_frac", cfg.template_frac.into()),
+        ("sampled_frac", cfg.sampled_frac.into()),
+        ("straggler_frac", cfg.straggler_frac.into()),
+        ("total_output_budget", wl.total_output_budget().into()),
+        ("max_seq_needed", wl.max_seq().into()),
+    ])
+}
+
+/// Trace-driven open-loop load harness: replay one seeded workload trace
+/// twice — straight into the coordinator, then over HTTP loopback — and
+/// write both latency rows (TTFT/ITL/e2e percentiles, goodput, shed
+/// rate) to `BENCH_serve.json`. The difference between the rows is the
+/// measured server tax.
+pub fn cmd_loadgen(args: &Args) -> Result<()> {
+    let rate = args.get_f64("rate", 16.0)?;
+    let arrival = if args.flag("bursty") {
+        Arrival::Bursty {
+            rate_on: 2.0 * rate,
+            rate_off: 0.1 * rate,
+            mean_on_s: 0.2,
+            mean_off_s: 0.2,
+        }
+    } else if rate > 0.0 {
+        Arrival::Poisson { rate }
+    } else {
+        Arrival::Closed
+    };
+    let wl_cfg = WorkloadConfig {
+        n_requests: args.get_usize("requests", 32)?,
+        arrival,
+        seed: args.get_u64("seed", 7)?,
+        ..WorkloadConfig::default()
+    };
+    let corpus = TokenStream::load(&artifacts().join("data/corpus_val.fbqw")).ok();
+    let trace = workload::generate(&wl_cfg, corpus.as_ref());
+
+    // mode 1: in-process (scheduler + engine, no HTTP)
+    let (handle, max_seq) = spawn_coordinator(args)?;
+    let mut wl = trace.clone();
+    wl.clamp_to(max_seq);
+    crate::log_info!("replaying {} requests in-process (max_seq {max_seq})", wl.requests.len());
+    let res_in = harness::run_in_process(&handle.client(), &wl);
+    let metrics_in = handle.shutdown()?;
+
+    // mode 2: the same trace over HTTP loopback (server tax on top)
+    let (handle, _) = spawn_coordinator(args)?;
+    let server = serve::Server::start(handle, &ServeConfig::default())?;
+    crate::log_info!("replaying the same trace over http://{}", server.local_addr());
+    let res_http = harness::run_http(server.local_addr(), &wl);
+    let metrics_http = server.shutdown()?;
+
+    for res in [&res_in, &res_http] {
+        println!(
+            "{:<11} {} done / {} shed of {} in {:.2}s | goodput {:.0} tok/s",
+            res.mode,
+            res.completed(),
+            res.shed(),
+            res.records.len(),
+            res.wall_s,
+            res.goodput_tps(),
+        );
+        ensure!(res.shed_rate() <= 1.0, "{} shed rate out of range", res.mode);
+    }
+    let doc = Json::obj(vec![
+        ("bench", "serve_loadgen".into()),
+        ("trace", trace_json(&wl_cfg, &wl)),
+        ("modes", Json::Arr(vec![res_in.to_json(), res_http.to_json()])),
+        (
+            "coordinator",
+            Json::obj(vec![
+                ("in_process", metrics_in.to_json()),
+                ("http", metrics_http.to_json()),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_serve.json", doc.to_string_pretty())?;
+    println!("wrote BENCH_serve.json (in_process vs http on the same seeded trace)");
     Ok(())
 }
 

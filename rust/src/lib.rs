@@ -18,6 +18,9 @@
 //!   `python/compile/aot.py`,
 //! * [`coordinator`] — request router, dynamic batcher, prefill/decode
 //!   scheduler, sessions, sampling and metrics,
+//! * [`serve`] — the std-only HTTP/1.1 + SSE serving front end over the
+//!   spawned coordinator, its loopback client and the open-loop load
+//!   harness behind `BENCH_serve.json`,
 //! * [`eval`] — perplexity, zero-shot multiple-choice and pairwise-judge
 //!   harnesses reproducing the paper's Tables 1–8 and Fig 6,
 //! * [`bench`] / [`testing`] — in-repo micro-benchmark and property-test
@@ -31,6 +34,7 @@ pub mod engine;
 pub mod spec;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod eval;
 pub mod bench;
 pub mod testing;

@@ -1,0 +1,156 @@
+//! Minimal loopback HTTP/SSE client: what the load harness and the e2e
+//! tests speak to the server with (std-only, one connection per request).
+
+use super::{http, sse};
+use crate::coordinator::request::GenRequest;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Outcome of one `POST /v1/generate` call, with client-side receipt
+/// timestamps (the HTTP-mode TTFT/ITL numbers come from these).
+#[derive(Debug)]
+pub struct GenOutcome {
+    pub status: u16,
+    /// streamed token ids in arrival order
+    pub tokens: Vec<u32>,
+    /// receipt time of each token frame
+    pub token_times: Vec<Instant>,
+    /// `done` payload (completed requests only)
+    pub done: Option<Json>,
+    /// error-response body or `error` event message
+    pub error: Option<String>,
+    /// just before the request bytes hit the socket
+    pub sent_at: Instant,
+    /// when the terminal frame (or error response) was read
+    pub finished_at: Instant,
+}
+
+/// Serialize a [`GenRequest`] as a `/v1/generate` POST body (the id is
+/// server-assigned and deliberately not sent).
+pub fn gen_body(req: &GenRequest) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("prompt", Json::Arr(req.prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+        ("max_new_tokens", req.max_new_tokens.into()),
+    ];
+    if req.params.is_sampled() {
+        fields.push(("temperature", (req.params.temperature as f64).into()));
+        fields.push(("top_k", req.params.top_k.into()));
+        fields.push(("top_p", (req.params.top_p as f64).into()));
+        fields.push(("seed", (req.params.seed as f64).into()));
+    }
+    if let Some(st) = req.stop_token {
+        fields.push(("stop_token", (st as f64).into()));
+    }
+    Json::obj(fields)
+}
+
+/// POST a generate request and consume its SSE stream.
+/// `disconnect_after` hard-drops the connection after that many token
+/// frames (mid-stream client-disconnect testing); `None` reads through
+/// to the terminal event.
+pub fn post_generate(
+    addr: SocketAddr,
+    body: &Json,
+    disconnect_after: Option<usize>,
+) -> Result<GenOutcome> {
+    let mut stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let payload = body.to_string_compact();
+    let sent_at = Instant::now();
+    write!(
+        stream,
+        "POST /v1/generate HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{payload}",
+        payload.len()
+    )?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let (status, headers) = http::read_response_head(&mut reader)?;
+    let mut out = GenOutcome {
+        status,
+        tokens: Vec::new(),
+        token_times: Vec::new(),
+        done: None,
+        error: None,
+        sent_at,
+        finished_at: Instant::now(),
+    };
+    if status != 200 {
+        let body = read_sized_body(&mut reader, &headers)?;
+        let msg = Json::parse(&body)
+            .ok()
+            .and_then(|j| j.get("error").and_then(Json::as_str).map(str::to_string));
+        out.error = Some(msg.unwrap_or(body));
+        out.finished_at = Instant::now();
+        return Ok(out);
+    }
+    while let Some(ev) = sse::read_event(&mut reader)? {
+        match ev.event.as_str() {
+            "message" => {
+                let j = Json::parse(&ev.data).map_err(|e| anyhow!("bad token frame: {e}"))?;
+                let tok = j
+                    .get("token")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow!("token frame without token id"))?;
+                out.tokens.push(tok as u32);
+                out.token_times.push(Instant::now());
+                if disconnect_after.is_some_and(|n| out.tokens.len() >= n) {
+                    // dropping the stream mid-flight aborts the
+                    // connection — the server sees the next write fail
+                    out.finished_at = Instant::now();
+                    return Ok(out);
+                }
+            }
+            "done" => {
+                out.done =
+                    Some(Json::parse(&ev.data).map_err(|e| anyhow!("bad done frame: {e}"))?);
+                break;
+            }
+            "error" => {
+                let msg = Json::parse(&ev.data)
+                    .ok()
+                    .and_then(|j| j.get("message").and_then(Json::as_str).map(str::to_string));
+                out.error = Some(msg.unwrap_or(ev.data));
+                break;
+            }
+            _ => {}
+        }
+    }
+    out.finished_at = Instant::now();
+    Ok(out)
+}
+
+/// Plain GET; returns (status, body text).
+pub fn get(addr: SocketAddr, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let (status, headers) = http::read_response_head(&mut reader)?;
+    let body = read_sized_body(&mut reader, &headers)?;
+    Ok((status, body))
+}
+
+/// Read a Content-Length body (or to EOF without one).
+fn read_sized_body(r: &mut impl BufRead, headers: &[(String, String)]) -> Result<String> {
+    let len = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse::<usize>().ok());
+    let mut buf = Vec::new();
+    match len {
+        Some(n) => {
+            buf.resize(n, 0);
+            r.read_exact(&mut buf)?;
+        }
+        None => {
+            r.read_to_end(&mut buf)?;
+        }
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}

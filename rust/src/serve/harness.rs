@@ -1,0 +1,278 @@
+//! Open-loop load harness: replay a seeded [`Workload`] trace against
+//! the coordinator and record per-request TTFT, inter-token latency and
+//! end-to-end latency.
+//!
+//! Two modes over the **same** trace:
+//! * [`run_in_process`] — submit through [`CoordinatorClient`] directly
+//!   (the floor: scheduler + engine only),
+//! * [`run_http`] — submit over HTTP loopback through the full server
+//!   (socket accept, HTTP parse, SSE framing), so the server tax is the
+//!   measured difference between the two mode rows in `BENCH_serve.json`.
+//!
+//! Open loop means arrivals are paced by the trace clock, never by
+//! completions — when the server falls behind, requests pile up and the
+//! tail percentiles show it (a closed loop would politely wait and hide
+//! the overload).
+
+use super::client;
+use crate::coordinator::request::GenEvent;
+use crate::coordinator::server::CoordinatorClient;
+use crate::coordinator::workload::Workload;
+use crate::util::json::Json;
+use crate::util::{mean, percentile};
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-request latency record.
+#[derive(Debug, Clone)]
+pub struct ReqRecord {
+    pub id: u64,
+    /// completed with a terminal `done`
+    pub ok: bool,
+    /// shed by admission control (429 or a shed/exhausted error)
+    pub shed: bool,
+    /// tokens streamed before the terminal event
+    pub tokens: usize,
+    /// submit → first token
+    pub ttft_us: f64,
+    /// gaps between consecutive token receipts
+    pub itl_us: Vec<f64>,
+    /// submit → terminal event
+    pub e2e_us: f64,
+}
+
+impl ReqRecord {
+    fn new(id: u64) -> ReqRecord {
+        ReqRecord {
+            id,
+            ok: false,
+            shed: false,
+            tokens: 0,
+            ttft_us: 0.0,
+            itl_us: Vec::new(),
+            e2e_us: 0.0,
+        }
+    }
+}
+
+/// One harness run over a trace.
+#[derive(Debug)]
+pub struct HarnessResult {
+    pub mode: &'static str,
+    /// per-request records, sorted by request id
+    pub records: Vec<ReqRecord>,
+    /// trace-start → last terminal event
+    pub wall_s: f64,
+}
+
+impl HarnessResult {
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| r.ok).count()
+    }
+
+    pub fn shed(&self) -> usize {
+        self.records.iter().filter(|r| r.shed).count()
+    }
+
+    /// Fraction of submitted requests shed by admission control.
+    pub fn shed_rate(&self) -> f64 {
+        if self.records.is_empty() {
+            0.0
+        } else {
+            self.shed() as f64 / self.records.len() as f64
+        }
+    }
+
+    /// Tokens per second delivered to requests that completed (shed and
+    /// failed requests contribute nothing — goodput, not throughput).
+    pub fn goodput_tps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        let toks: usize = self.records.iter().filter(|r| r.ok).map(|r| r.tokens).sum();
+        toks as f64 / self.wall_s
+    }
+
+    /// One mode row for `BENCH_serve.json`.
+    pub fn to_json(&self) -> Json {
+        let done: Vec<&ReqRecord> = self.records.iter().filter(|r| r.ok).collect();
+        let ttft: Vec<f64> = done.iter().filter(|r| r.tokens > 0).map(|r| r.ttft_us).collect();
+        let itl: Vec<f64> = done.iter().flat_map(|r| r.itl_us.iter().copied()).collect();
+        let e2e: Vec<f64> = done.iter().map(|r| r.e2e_us).collect();
+        Json::obj(vec![
+            ("mode", self.mode.into()),
+            ("requests", self.records.len().into()),
+            ("completed", done.len().into()),
+            ("shed", self.shed().into()),
+            ("wall_s", self.wall_s.into()),
+            ("goodput_tps", self.goodput_tps().into()),
+            ("shed_rate", self.shed_rate().into()),
+            ("ttft_us", pct_json(&ttft)),
+            ("itl_us", pct_json(&itl)),
+            ("e2e_us", pct_json(&e2e)),
+        ])
+    }
+}
+
+/// Latency summary with the percentile keys the CI gate asserts on.
+fn pct_json(xs: &[f64]) -> Json {
+    Json::obj(vec![
+        ("n", xs.len().into()),
+        ("mean_us", mean(xs).into()),
+        ("p50_us", percentile(xs, 50.0).into()),
+        ("p95_us", percentile(xs, 95.0).into()),
+        ("p99_us", percentile(xs, 99.0).into()),
+        ("max_us", xs.iter().copied().fold(0.0f64, f64::max).into()),
+    ])
+}
+
+/// Sleep until the trace clock reaches `arrival`.
+fn pace(start: Instant, arrival: Duration) {
+    let elapsed = start.elapsed();
+    if arrival > elapsed {
+        std::thread::sleep(arrival - elapsed);
+    }
+}
+
+fn push_record(out: &Arc<Mutex<Vec<ReqRecord>>>, rec: ReqRecord) {
+    out.lock().expect("harness records poisoned").push(rec);
+}
+
+fn finish(
+    mode: &'static str,
+    records: Arc<Mutex<Vec<ReqRecord>>>,
+    start: Instant,
+) -> HarnessResult {
+    let wall_s = start.elapsed().as_secs_f64();
+    let mut records = match Arc::try_unwrap(records) {
+        Ok(m) => m.into_inner().expect("harness records poisoned"),
+        Err(arc) => arc.lock().expect("harness records poisoned").clone(),
+    };
+    records.sort_by_key(|r| r.id);
+    HarnessResult { mode, records, wall_s }
+}
+
+/// Replay the trace open-loop straight into the coordinator (no HTTP).
+/// One consumer thread per request drains its event stream and stamps
+/// receipt times.
+pub fn run_in_process(client: &CoordinatorClient, workload: &Workload) -> HarnessResult {
+    let records = Arc::new(Mutex::new(Vec::new()));
+    let start = Instant::now();
+    let mut joins = Vec::new();
+    for (req, arrival) in workload.requests.iter().zip(&workload.arrivals) {
+        pace(start, *arrival);
+        let id = req.id;
+        let submitted = Instant::now();
+        let rx = client.submit(req.clone());
+        let out = records.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rec = ReqRecord::new(id);
+            let mut last: Option<Instant> = None;
+            for ev in rx {
+                match ev {
+                    GenEvent::Token { .. } => {
+                        let now = Instant::now();
+                        match last {
+                            None => rec.ttft_us = (now - submitted).as_secs_f64() * 1e6,
+                            Some(prev) => rec.itl_us.push((now - prev).as_secs_f64() * 1e6),
+                        }
+                        last = Some(now);
+                        rec.tokens += 1;
+                    }
+                    GenEvent::Done(_) => {
+                        rec.ok = true;
+                        break;
+                    }
+                    GenEvent::Error { message, .. } => {
+                        rec.shed = super::overload_message(&message);
+                        break;
+                    }
+                }
+            }
+            rec.e2e_us = submitted.elapsed().as_secs_f64() * 1e6;
+            push_record(&out, rec);
+        }));
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+    finish("in_process", records, start)
+}
+
+/// Replay the trace open-loop over HTTP loopback (one connection per
+/// request, like real SSE clients).
+pub fn run_http(addr: SocketAddr, workload: &Workload) -> HarnessResult {
+    let records = Arc::new(Mutex::new(Vec::new()));
+    let start = Instant::now();
+    let mut joins = Vec::new();
+    for (req, arrival) in workload.requests.iter().zip(&workload.arrivals) {
+        pace(start, *arrival);
+        let id = req.id;
+        let body = client::gen_body(req);
+        let out = records.clone();
+        joins.push(std::thread::spawn(move || {
+            let rec = match client::post_generate(addr, &body, None) {
+                Ok(o) => outcome_record(id, &o),
+                Err(_) => ReqRecord::new(id), // connect/read failure: not ok, not shed
+            };
+            push_record(&out, rec);
+        }));
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+    finish("http", records, start)
+}
+
+fn outcome_record(id: u64, o: &client::GenOutcome) -> ReqRecord {
+    let mut rec = ReqRecord::new(id);
+    rec.ok = o.done.is_some();
+    rec.shed = o.status == 429 || o.status == 503;
+    rec.tokens = o.tokens.len();
+    rec.e2e_us = (o.finished_at - o.sent_at).as_secs_f64() * 1e6;
+    if let Some(err) = &o.error {
+        rec.shed = rec.shed || super::overload_message(err);
+    }
+    if let Some(&first) = o.token_times.first() {
+        rec.ttft_us = (first - o.sent_at).as_secs_f64() * 1e6;
+    }
+    for p in o.token_times.windows(2) {
+        rec.itl_us.push((p[1] - p[0]).as_secs_f64() * 1e6);
+    }
+    rec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_math() {
+        let mut res = HarnessResult { mode: "in_process", records: Vec::new(), wall_s: 2.0 };
+        assert_eq!(res.shed_rate(), 0.0);
+        let mut a = ReqRecord::new(1);
+        a.ok = true;
+        a.tokens = 10;
+        a.ttft_us = 100.0;
+        a.itl_us = vec![10.0, 20.0];
+        a.e2e_us = 500.0;
+        let mut b = ReqRecord::new(2);
+        b.shed = true;
+        res.records = vec![a, b];
+        assert_eq!(res.completed(), 1);
+        assert_eq!(res.shed(), 1);
+        assert!((res.shed_rate() - 0.5).abs() < 1e-9);
+        assert!((res.goodput_tps() - 5.0).abs() < 1e-9);
+        let j = res.to_json();
+        assert_eq!(j.get("mode").and_then(Json::as_str), Some("in_process"));
+        assert_eq!(j.get("completed").and_then(Json::as_usize), Some(1));
+        for lat in ["ttft_us", "itl_us", "e2e_us"] {
+            let l = j.get(lat).unwrap();
+            for k in ["p50_us", "p95_us", "p99_us"] {
+                assert!(l.get(k).is_some(), "{lat} missing {k}");
+            }
+        }
+        assert!(res.shed_rate() <= 1.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Hand-rolled HTTP/1.1 primitives for the serving front end.
+//!
+//! Deliberately minimal — the workspace builds offline against vendored
+//! shims, so there is no tokio/hyper to lean on. One request per
+//! connection (`Connection: close` on every response): the serving
+//! protocol is a single long-lived SSE stream per generation, so
+//! keep-alive would buy nothing and complicate draining.
+
+use anyhow::{bail, Result};
+use std::io::{BufRead, Read, Write};
+
+/// A parsed HTTP request head plus its (Content-Length-sized) body.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one request from the connection. Bounds: 100 headers, 8 KiB per
+/// header line, `max_body` body bytes — a malformed or hostile peer gets
+/// an error (the connection handler answers 400), never unbounded memory.
+pub fn read_request(r: &mut impl BufRead, max_body: usize) -> Result<HttpRequest> {
+    let line = read_crlf_line(r)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        bail!("malformed request line: {line:?}");
+    }
+    let mut headers = Vec::new();
+    loop {
+        let h = read_crlf_line(r)?;
+        if h.is_empty() {
+            break;
+        }
+        let Some((k, v)) = h.split_once(':') else { bail!("malformed header: {h:?}") };
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+        if headers.len() > 100 {
+            bail!("too many headers");
+        }
+    }
+    let len = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.parse::<usize>())
+        .transpose()
+        .map_err(|_| anyhow::anyhow!("bad content-length"))?
+        .unwrap_or(0);
+    if len > max_body {
+        bail!("body too large: {len} > {max_body}");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(HttpRequest { method, path, headers, body })
+}
+
+/// One header line, CRLF (or bare LF) stripped, length-bounded.
+fn read_crlf_line(r: &mut impl BufRead) -> Result<String> {
+    let mut buf = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte)? {
+            0 => {
+                if buf.is_empty() {
+                    bail!("connection closed before request");
+                }
+                break;
+            }
+            _ => {
+                if byte[0] == b'\n' {
+                    break;
+                }
+                buf.push(byte[0]);
+                if buf.len() > 8192 {
+                    bail!("header line too long");
+                }
+            }
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| anyhow::anyhow!("non-utf8 header line"))
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete (non-streaming) response and flush it.
+pub fn write_response(
+    w: &mut impl Write,
+    code: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        code,
+        status_text(code),
+        content_type,
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write the response head that opens an SSE stream (the body follows as
+/// events, terminated by connection close).
+pub fn write_sse_head(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+          Connection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// Read a response head from a client-side connection: status code plus
+/// headers (the body handling depends on the content type).
+pub fn read_response_head(r: &mut impl BufRead) -> Result<(u16, Vec<(String, String)>)> {
+    let line = read_crlf_line(r)?;
+    let mut parts = line.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("malformed status line: {line:?}");
+    }
+    let code: u16 = parts.next().unwrap_or("").parse()?;
+    let mut headers = Vec::new();
+    loop {
+        let h = read_crlf_line(r)?;
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    Ok((code, headers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = read_request(&mut BufReader::new(&raw[..]), 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn rejects_oversized_body_and_garbage() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\n";
+        assert!(read_request(&mut BufReader::new(&raw[..]), 10).is_err());
+        let raw = b"not an http request\r\n\r\n";
+        assert!(read_request(&mut BufReader::new(&raw[..]), 10).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", b"{\"error\":\"shed\"}").unwrap();
+        let text = String::from_utf8(out.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.ends_with("{\"error\":\"shed\"}"));
+        let mut r = BufReader::new(&out[..]);
+        let (code, headers) = read_response_head(&mut r).unwrap();
+        assert_eq!(code, 429);
+        assert!(headers.iter().any(|(k, v)| k == "Content-Length" && v == "16"));
+    }
+}

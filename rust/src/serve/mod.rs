@@ -1,0 +1,364 @@
+//! Layer-4 serving front end: a std-only HTTP/1.1 + SSE server over the
+//! spawned coordinator.
+//!
+//! The workspace builds offline against vendored shims, so the server is
+//! hand-rolled on `std::net::TcpListener` — thread-per-connection behind
+//! a bounded accept pool, no async runtime. That is a feature: the whole
+//! request path (socket → JSON body → [`CoordinatorClient::submit`] →
+//! SSE frames) is ~4 small modules of inspectable code.
+//!
+//! Routes:
+//! * `POST /v1/generate` — JSON body (`prompt`, `max_new_tokens`,
+//!   optional `temperature`/`top_k`/`top_p`/`seed`/`stop_token`) → an
+//!   SSE stream: one `data:` frame per sampled token, then a terminal
+//!   `event: done` (the full [`GenResponse`]) or `event: error` frame.
+//!   The **first** coordinator event decides the HTTP status: a shed /
+//!   pool-exhausted request answers `429`, an invalid one `400`, and
+//!   only a request that actually streams opens a `200`.
+//! * `GET /metrics` — live [`ServeMetrics`] snapshot as JSON.
+//! * `GET /healthz` — liveness probe.
+//!
+//! A client that disconnects mid-stream is detected by the failed SSE
+//! write: the connection thread drops its event receiver, the serving
+//! loop's next emit fails, and the request's slot + KV pages are
+//! reclaimed (counted in [`ServeMetrics::cancellations`]).
+//!
+//! [`GenResponse`]: crate::coordinator::request::GenResponse
+//! [`ServeMetrics`]: crate::coordinator::metrics::ServeMetrics
+//! [`ServeMetrics::cancellations`]: crate::coordinator::metrics::ServeMetrics::cancellations
+
+pub mod client;
+pub mod harness;
+pub mod http;
+pub mod sse;
+
+use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::request::{GenEvent, GenRequest, GenResponse};
+use crate::coordinator::server::{CoordinatorClient, CoordinatorHandle};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub use client::{gen_body, post_generate, GenOutcome};
+pub use harness::{run_http, run_in_process, HarnessResult, ReqRecord};
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// bind address; port 0 picks an ephemeral port (see
+    /// [`Server::local_addr`])
+    pub addr: String,
+    /// connections served concurrently before new ones answer 503
+    pub max_connections: usize,
+    /// request body cap in bytes (a prompt at 7 bytes/token JSON is far
+    /// below this)
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 64,
+            max_body_bytes: 1 << 20,
+        }
+    }
+}
+
+/// The running server: an accept-loop thread plus one thread per live
+/// connection, all submitting through [`CoordinatorClient`] clones.
+pub struct Server {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    handle: CoordinatorHandle,
+}
+
+impl Server {
+    /// Bind and start serving. Takes ownership of the coordinator handle;
+    /// [`Server::shutdown`] drains and returns the final metrics.
+    pub fn start(handle: CoordinatorHandle, cfg: &ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let active = Arc::new(AtomicUsize::new(0));
+        let client = handle.client();
+        let (max_conn, max_body) = (cfg.max_connections, cfg.max_body_bytes);
+        let accept = {
+            let (stop, active) = (stop.clone(), active.clone());
+            std::thread::spawn(move || {
+                accept_loop(listener, client, stop, active, max_conn, max_body)
+            })
+        };
+        Ok(Server { local_addr, stop, active, accept: Some(accept), handle })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// A coordinator submit handle bypassing HTTP (the in-process
+    /// harness mode measures against this).
+    pub fn client(&self) -> CoordinatorClient {
+        self.handle.client()
+    }
+
+    /// Currently served connections.
+    pub fn active_connections(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: stop accepting, wait for in-flight streams to
+    /// drain (bounded), then shut the coordinator down and return its
+    /// final metrics.
+    pub fn shutdown(mut self) -> Result<ServeMetrics> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while self.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.handle.shutdown()
+    }
+}
+
+/// Decrements the live-connection counter even if the handler panics.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    client: CoordinatorClient,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    max_conn: usize,
+    max_body: usize,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                if active.load(Ordering::SeqCst) >= max_conn {
+                    // accept-pool overflow: connection-level shed
+                    let _ = http::write_response(
+                        &mut stream,
+                        503,
+                        "application/json",
+                        b"{\"error\":\"connection pool exhausted\"}",
+                    );
+                    continue;
+                }
+                active.fetch_add(1, Ordering::SeqCst);
+                let client = client.clone();
+                let guard = ConnGuard(active.clone());
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    handle_conn(stream, &client, max_body);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, client: &CoordinatorClient, max_body: usize) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let req = match http::read_request(&mut reader, max_body) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = error_response(&mut writer, 400, &e.to_string());
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => handle_generate(&mut writer, client, &req.body),
+        ("GET", "/healthz") => {
+            let _ = http::write_response(&mut writer, 200, "application/json", b"{\"ok\":true}");
+        }
+        ("GET", "/metrics") => match client.metrics() {
+            Ok(m) => {
+                let body = m.to_json().to_string_pretty();
+                let _ =
+                    http::write_response(&mut writer, 200, "application/json", body.as_bytes());
+            }
+            Err(e) => {
+                let _ = error_response(&mut writer, 500, &e.to_string());
+            }
+        },
+        ("GET", _) | ("POST", _) => {
+            let _ = error_response(&mut writer, 404, "no such route");
+        }
+        _ => {
+            let _ = error_response(&mut writer, 405, "method not allowed");
+        }
+    }
+}
+
+/// `POST /v1/generate`: parse, submit, map the first coordinator event
+/// to an HTTP status, then stream SSE frames until the terminal event.
+/// A failed frame write means the client disconnected — returning drops
+/// the receiver, which cancels the request in the serving loop.
+fn handle_generate(writer: &mut TcpStream, client: &CoordinatorClient, body: &[u8]) {
+    let req = match parse_gen_request(body) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = error_response(writer, 400, &e.to_string());
+            return;
+        }
+    };
+    let rx = client.submit(req);
+    match rx.recv_timeout(Duration::from_secs(120)) {
+        Err(_) => {
+            let _ = error_response(writer, 500, "coordinator did not answer");
+        }
+        Ok(GenEvent::Error { message, .. }) => {
+            let code = if overload_message(&message) { 429 } else { 400 };
+            let _ = error_response(writer, code, &message);
+        }
+        Ok(first) => {
+            if http::write_sse_head(writer).is_err() {
+                return;
+            }
+            let terminal = first.is_terminal();
+            if write_event(writer, &first).is_err() || terminal {
+                return;
+            }
+            for ev in rx.iter() {
+                let terminal = ev.is_terminal();
+                if write_event(writer, &ev).is_err() || terminal {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Overload (shed) vs caller error: admission-queue sheds and KV-pool
+/// exhaustion map to 429 Too Many Requests; everything else the caller
+/// can fix maps to 400.
+pub fn overload_message(message: &str) -> bool {
+    let m = message.to_ascii_lowercase();
+    m.contains("shed") || m.contains("queue full") || m.contains("exhaust")
+}
+
+fn error_response(w: &mut impl Write, code: u16, message: &str) -> std::io::Result<()> {
+    let body = Json::obj(vec![("error", message.into())]).to_string_compact();
+    http::write_response(w, code, "application/json", body.as_bytes())
+}
+
+/// Serialize one [`GenEvent`] as its SSE frame and flush it.
+fn write_event(w: &mut impl Write, ev: &GenEvent) -> std::io::Result<()> {
+    let frame = match ev {
+        GenEvent::Token { id, index, token } => {
+            let j = Json::obj(vec![
+                ("id", (*id as f64).into()),
+                ("index", (*index).into()),
+                ("token", (*token as f64).into()),
+            ]);
+            sse::data_frame(&j.to_string_compact())
+        }
+        GenEvent::Done(r) => sse::event_frame("done", &response_json(r).to_string_compact()),
+        GenEvent::Error { id, message } => {
+            let j = Json::obj(vec![
+                ("id", (*id as f64).into()),
+                ("message", message.as_str().into()),
+            ]);
+            sse::event_frame("error", &j.to_string_compact())
+        }
+    };
+    w.write_all(frame.as_bytes())?;
+    w.flush()
+}
+
+/// The `done` frame payload.
+fn response_json(r: &GenResponse) -> Json {
+    Json::obj(vec![
+        ("id", (r.id as f64).into()),
+        ("prompt_len", r.prompt_len.into()),
+        ("tokens", Json::Arr(r.tokens.iter().map(|&t| Json::Num(t as f64)).collect())),
+        ("ttft_us", r.ttft_us.into()),
+        ("total_us", r.total_us.into()),
+        ("decode_s", r.decode_s.into()),
+    ])
+}
+
+/// Parse a `/v1/generate` body. Ids are server-assigned (a client-sent
+/// `id` is ignored) so two HTTP clients can never collide in flight.
+fn parse_gen_request(body: &[u8]) -> Result<GenRequest> {
+    let text = std::str::from_utf8(body).map_err(|_| anyhow!("body is not utf-8"))?;
+    let j = Json::parse(text).map_err(|e| anyhow!("invalid json: {e}"))?;
+    let prompt_field = j.get("prompt").ok_or_else(|| anyhow!("missing 'prompt'"))?;
+    let prompt: Vec<u32> = prompt_field
+        .as_arr()
+        .ok_or_else(|| anyhow!("'prompt' must be an array of token ids"))?
+        .iter()
+        .map(|t| t.as_i64().map(|v| v as u32))
+        .collect::<Option<Vec<u32>>>()
+        .ok_or_else(|| anyhow!("'prompt' must contain numeric token ids"))?;
+    let max_new = j
+        .get("max_new_tokens")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing numeric 'max_new_tokens'"))?;
+    let mut req = GenRequest::new(0, prompt, max_new);
+    if let Some(t) = j.get("temperature").and_then(Json::as_f64) {
+        req.params.temperature = t as f32;
+    }
+    if let Some(k) = j.get("top_k").and_then(Json::as_usize) {
+        req.params.top_k = k;
+    }
+    if let Some(p) = j.get("top_p").and_then(Json::as_f64) {
+        req.params.top_p = p as f32;
+    }
+    if let Some(s) = j.get("seed").and_then(Json::as_i64) {
+        req.params.seed = s as u64;
+    }
+    if let Some(st) = j.get("stop_token").and_then(Json::as_i64) {
+        req.stop_token = Some(st as u32);
+    }
+    Ok(req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generate_body() {
+        let body = br#"{"prompt":[1,2,3],"max_new_tokens":8,"temperature":0.5,"top_k":4}"#;
+        let req = parse_gen_request(body).unwrap();
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+        assert_eq!(req.max_new_tokens, 8);
+        assert!(req.params.is_sampled());
+        assert_eq!(req.params.top_k, 4);
+        assert!(parse_gen_request(b"{}").is_err());
+        assert!(parse_gen_request(b"{\"prompt\":\"hi\",\"max_new_tokens\":4}").is_err());
+        assert!(parse_gen_request(b"not json").is_err());
+    }
+
+    #[test]
+    fn overload_classification() {
+        assert!(overload_message("admission queue full: request shed"));
+        assert!(overload_message("kv page pool exhausted"));
+        assert!(!overload_message("prompt exceeds max_seq"));
+        assert!(!overload_message("request id 3 is already in flight"));
+    }
+}

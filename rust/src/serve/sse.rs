@@ -1,0 +1,96 @@
+//! Server-Sent Events framing: writer-side frames and a client-side
+//! incremental parser (used by the loopback harness and the e2e tests).
+//!
+//! Wire format per event: optional `event: <name>` line, one or more
+//! `data: <payload>` lines, blank-line terminator. Unnamed frames carry
+//! the default event name `message` (one per [`GenEvent::Token`]);
+//! terminal frames are named `done` / `error`.
+//!
+//! [`GenEvent::Token`]: crate::coordinator::request::GenEvent
+
+use anyhow::Result;
+use std::io::BufRead;
+
+/// A data-only frame (default `message` event).
+pub fn data_frame(data: &str) -> String {
+    format!("data: {data}\n\n")
+}
+
+/// A named event frame.
+pub fn event_frame(name: &str, data: &str) -> String {
+    format!("event: {name}\ndata: {data}\n\n")
+}
+
+/// One parsed client-side event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SseEvent {
+    /// event name (`message` when the frame carried no `event:` line)
+    pub event: String,
+    pub data: String,
+}
+
+/// Read the next event from an SSE stream; `None` on clean end-of-stream.
+/// Multi-line `data:` payloads are joined with `\n` per the SSE spec;
+/// comment lines (leading `:`) are ignored.
+pub fn read_event(r: &mut impl BufRead) -> Result<Option<SseEvent>> {
+    let mut event = String::from("message");
+    let mut data = String::new();
+    let mut saw_data = false;
+    loop {
+        let mut line = String::new();
+        let n = r.read_line(&mut line)?;
+        if n == 0 {
+            return Ok(saw_data.then_some(SseEvent { event, data }));
+        }
+        let line = line.trim_end_matches(['\r', '\n']);
+        if line.is_empty() {
+            if saw_data {
+                return Ok(Some(SseEvent { event, data }));
+            }
+            continue;
+        }
+        if line.starts_with(':') {
+            continue;
+        }
+        if let Some(v) = line.strip_prefix("event:") {
+            event = v.trim_start().to_string();
+        } else if let Some(v) = line.strip_prefix("data:") {
+            if saw_data {
+                data.push('\n');
+            }
+            data.push_str(v.strip_prefix(' ').unwrap_or(v));
+            saw_data = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn frames_roundtrip() {
+        let wire = format!(
+            "{}{}{}",
+            data_frame("{\"token\":7}"),
+            event_frame("done", "{\"tokens\":[7]}"),
+            ": keep-alive comment\n\n"
+        );
+        let mut r = BufReader::new(wire.as_bytes());
+        let a = read_event(&mut r).unwrap().unwrap();
+        assert_eq!(a.event, "message");
+        assert_eq!(a.data, "{\"token\":7}");
+        let b = read_event(&mut r).unwrap().unwrap();
+        assert_eq!(b.event, "done");
+        assert_eq!(b.data, "{\"tokens\":[7]}");
+        assert!(read_event(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn multiline_data_joined() {
+        let mut r = BufReader::new("data: a\ndata: b\n\n".as_bytes());
+        let ev = read_event(&mut r).unwrap().unwrap();
+        assert_eq!(ev.data, "a\nb");
+    }
+}

@@ -81,8 +81,11 @@ USAGE: fbquant <COMMAND> [OPTIONS]
 COMMANDS:
   info                       Inventory of artifacts, models and executables
   generate                   Generate tokens from a model (native engine or PJRT)
-  serve                      Run the serving coordinator on a synthetic workload
-                             (continuous batching; --sync for the lock-step baseline)
+  serve                      HTTP/SSE serving front end over the coordinator
+                             (POST /v1/generate streams tokens; GET /metrics,
+                             /healthz; --synth serves a synthesized checkpoint)
+  loadgen                    Trace-driven open-loop load harness: one seeded trace
+                             in-process and over HTTP loopback -> BENCH_serve.json
   eval-ppl                   Perplexity on the held-out validation set (Table 1 cell)
   eval-zeroshot              Zero-shot multiple-choice accuracy (Table 2 cell)
   judge                      Pairwise model comparison (Fig 6 cell)
@@ -107,8 +110,10 @@ pub fn run() -> Result<()> {
         return Ok(());
     }
     let cmd = raw.remove(0);
-    let args =
-        Args::parse(raw, &["help", "detail", "fused", "verbose", "quiet", "no-sub", "sync"])?;
+    let args = Args::parse(
+        raw,
+        &["help", "detail", "fused", "verbose", "quiet", "no-sub", "sync", "synth", "bursty"],
+    )?;
     if args.flag("verbose") {
         super::logging::set_level(super::logging::Level::Debug);
     }
@@ -126,6 +131,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "info" => crate::eval::commands::cmd_info(args),
         "generate" => crate::eval::commands::cmd_generate(args),
         "serve" => crate::eval::commands::cmd_serve(args),
+        "loadgen" => crate::eval::commands::cmd_loadgen(args),
         "eval-ppl" => crate::eval::commands::cmd_eval_ppl(args),
         "eval-zeroshot" => crate::eval::commands::cmd_eval_zeroshot(args),
         "judge" => crate::eval::commands::cmd_judge(args),

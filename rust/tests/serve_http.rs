@@ -1,0 +1,183 @@
+//! End-to-end tests for the HTTP/SSE serving front end on synthesized
+//! checkpoints (no build artifacts needed).
+//!
+//! The gates:
+//! * the SSE token stream is byte-identical to `submit_wait` on the same
+//!   seeded backend,
+//! * a mid-stream client disconnect cancels the request — the slot is
+//!   reclaimed, the KV page pool reconciles to zero pages in use, and
+//!   the cancellation is counted,
+//! * status mapping: 400 for caller errors, 429 for shed load,
+//! * the `/healthz` and `/metrics` routes answer.
+
+use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::coordinator::batcher::BatcherConfig;
+use fbquant::coordinator::request::GenRequest;
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::serve::{client, Server, ServeConfig};
+use fbquant::testing::{synth_checkpoint, SynthSpec};
+use fbquant::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn spec() -> SynthSpec {
+    SynthSpec { vocab: 64, max_seq: 64, ..SynthSpec::default() }
+}
+
+/// A deliberately heavier fixture for the disconnect test: each decode
+/// step takes long enough that the client's RST reaches the server well
+/// before the token budget runs out, so the cancellation path (not a
+/// completed stream) is what the test exercises.
+fn slow_spec() -> SynthSpec {
+    SynthSpec { d: 128, n_layers: 4, d_ff: 256, vocab: 64, max_seq: 64, ..SynthSpec::default() }
+}
+
+fn start_server(
+    tag: &'static str,
+    spec: SynthSpec,
+    kv: Option<(usize, usize)>,
+    cfg: CoordinatorConfig,
+) -> Server {
+    let store = synth_checkpoint(tag, spec);
+    let handle = Coordinator::spawn(
+        move || -> anyhow::Result<Box<dyn Backend>> {
+            let mut b = NativeBackend::new(NativeEngine::from_store(&store, SubMode::Fused)?, tag);
+            if let Some((page, pages)) = kv {
+                b = b.with_kv_pool(page, pages);
+            }
+            Ok(Box::new(b))
+        },
+        cfg,
+    );
+    Server::start(handle, &ServeConfig::default()).unwrap()
+}
+
+#[test]
+fn sse_stream_matches_submit_wait() {
+    let server = start_server("http_e2e_identity", spec(), None, CoordinatorConfig::default());
+    let addr = server.local_addr();
+    let prompt: Vec<u32> = (0..12).map(|i| (i * 5 % 64) as u32).collect();
+
+    // reference: blocking in-process call on the same seeded backend
+    let reference = server.client().submit_wait(GenRequest::new(0, prompt.clone(), 16)).unwrap();
+    assert_eq!(reference.tokens.len(), 16);
+
+    let body = client::gen_body(&GenRequest::new(0, prompt, 16));
+    let o = client::post_generate(addr, &body, None).unwrap();
+    assert_eq!(o.status, 200);
+    assert_eq!(o.tokens, reference.tokens, "SSE stream diverged from submit_wait");
+
+    // the done frame carries the same tokens the stream delivered
+    let done = o.done.expect("stream ended without a done frame");
+    let done_tokens: Vec<u32> = done
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .expect("done frame without tokens")
+        .iter()
+        .map(|t| t.as_i64().unwrap() as u32)
+        .collect();
+    assert_eq!(done_tokens, o.tokens, "done payload disagrees with streamed frames");
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests_done, 2);
+    assert_eq!(metrics.cancellations, 0);
+}
+
+#[test]
+fn mid_stream_disconnect_frees_slot_and_kv_pages() {
+    // page_size 8 with a 6-token prompt: no page ever fills during the
+    // prompt, so nothing is published to the prefix cache and a clean
+    // cancel must reconcile the pool to exactly zero pages in use
+    let server = start_server(
+        "http_e2e_disconnect",
+        slow_spec(),
+        Some((8, 64)),
+        CoordinatorConfig::default(),
+    );
+    let addr = server.local_addr();
+    let prompt: Vec<u32> = (0..6).map(|i| (i * 7 % 64) as u32).collect();
+
+    let body = client::gen_body(&GenRequest::new(0, prompt.clone(), 40));
+    let o = client::post_generate(addr, &body, Some(3)).unwrap();
+    assert_eq!(o.status, 200);
+    assert_eq!(o.tokens.len(), 3, "client should have hung up after 3 tokens");
+    assert!(o.done.is_none(), "disconnected stream cannot carry a done frame");
+
+    // the serving loop notices the dead sink on a later emit; poll the
+    // live metrics until the cancellation lands
+    let handle = server.client();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let kv = loop {
+        let m = handle.metrics().unwrap();
+        if m.cancellations >= 1 {
+            break m.kv_pool.expect("paged backend must report kv stats");
+        }
+        assert!(Instant::now() < deadline, "cancellation never recorded");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(kv.pages_in_use, 0, "cancelled request leaked KV pages");
+    assert!(kv.pages_total >= 64);
+
+    // the freed slot serves a fresh request end to end
+    let r2 = handle.submit_wait(GenRequest::new(0, prompt, 4)).unwrap();
+    assert_eq!(r2.tokens.len(), 4);
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.cancellations, 1);
+    assert_eq!(metrics.requests_done, 1, "the cancelled request must not count as done");
+    let kv = metrics.kv_pool.expect("final snapshot must carry kv stats");
+    assert_eq!(kv.pages_in_use, 0, "pool did not reconcile after drain");
+}
+
+#[test]
+fn routes_and_caller_errors_map_to_400() {
+    let server = start_server("http_e2e_routes", spec(), None, CoordinatorConfig::default());
+    let addr = server.local_addr();
+
+    let (code, body) = client::get(addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("ok"));
+
+    let (code, body) = client::get(addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.get("requests_in").is_some(), "metrics missing requests_in: {body}");
+    assert!(j.get("ttft").is_some());
+
+    let (code, _) = client::get(addr, "/no/such/route").unwrap();
+    assert_eq!(code, 404);
+
+    // malformed body: prompt is not an array
+    let bad = Json::obj(vec![("prompt", "hi".into()), ("max_new_tokens", 4usize.into())]);
+    let o = client::post_generate(addr, &bad, None).unwrap();
+    assert_eq!(o.status, 400);
+    assert!(o.error.is_some());
+
+    // valid JSON but prompt + budget exceed the model context: the
+    // coordinator rejects it, and the rejection is not an overload
+    let long = client::gen_body(&GenRequest::new(0, vec![1; 60], 40));
+    let o = client::post_generate(addr, &long, None).unwrap();
+    assert_eq!(o.status, 400, "context overflow must map to 400, got {:?}", o.error);
+
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn shed_load_maps_to_429() {
+    // max_queue 0: every admission sheds — the deterministic overload
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_queue: 0, ..BatcherConfig::default() },
+        ..CoordinatorConfig::default()
+    };
+    let server = start_server("http_e2e_shed", spec(), None, cfg);
+    let addr = server.local_addr();
+
+    let body = client::gen_body(&GenRequest::new(0, vec![1, 2, 3], 4));
+    let o = client::post_generate(addr, &body, None).unwrap();
+    assert_eq!(o.status, 429, "shed request must answer 429, got {:?}", o.error);
+    assert!(o.error.unwrap().contains("shed"));
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests_shed, 1);
+    assert_eq!(metrics.requests_done, 0);
+}
