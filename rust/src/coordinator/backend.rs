@@ -51,7 +51,8 @@
 use super::request::{GenRequest, SamplingParams};
 use super::sampler::distribution;
 use crate::engine::kv::{
-    KvPagePool, KvPoolConfig, KvPoolStats, KvSlot, PagedKv, PagedKvRef, PagedSlotBatch, SlotBatch,
+    KvPagePool, KvPoolConfig, KvPoolStats, KvSlot, PagedKv, PagedKvRef, PagedSlotBatch, ParkedKv,
+    SlotBatch,
 };
 use crate::engine::native::{EngineWs, RowsWant, SlotLogits};
 use crate::engine::{KvCache, NativeEngine, SubMode};
@@ -122,6 +123,36 @@ pub enum BatchState {
     },
     /// PJRT per-lane surfaces: independent batch-1 KV + position per slot.
     PjrtLanes { lanes: Vec<Option<PjrtLane>> },
+}
+
+/// A preempted slot's full engine-side state, detached from any batch:
+/// the target KV (bit-exact copy of the committed positions), the
+/// speculative draft mirror when the slot had one, the mirror's lazy
+/// catch-up queue, and the adaptive-K controller. Produced by
+/// [`Backend::swap_out`]; [`Backend::swap_in`] restores it into a free
+/// slot such that subsequent decode output is bit-identical to a run
+/// that was never preempted.
+pub struct ParkedSlot {
+    target: ParkedKv,
+    draft: Option<ParkedKv>,
+    pending: Vec<u32>,
+    ctrl: Option<KController>,
+}
+
+impl ParkedSlot {
+    /// Committed target positions held by this parking buffer.
+    pub fn len(&self) -> usize {
+        self.target.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.target.is_empty()
+    }
+
+    /// Host bytes held while parked (swap accounting).
+    pub fn bytes(&self) -> usize {
+        self.target.bytes() + self.draft.as_ref().map_or(0, |d| d.bytes())
+    }
 }
 
 pub trait Backend {
@@ -208,6 +239,54 @@ pub trait Backend {
         None
     }
 
+    /// Whether this backend supports preemption via
+    /// [`Backend::swap_out`] / [`Backend::swap_in`].
+    fn preemptible(&self) -> bool {
+        false
+    }
+
+    /// Swap the occupied `slot` out into a host-side [`ParkedSlot`] and
+    /// free the slot (paged KV pages return to the pool — that is the
+    /// point: swap-out frees the memory another admission needs).
+    fn swap_out(&mut self, _state: &mut BatchState, _slot: usize) -> Result<ParkedSlot> {
+        bail!("backend {} does not support preemption", self.name())
+    }
+
+    /// Restore a parked slot into the free slot `slot` bit-exactly. On
+    /// error the surface is left unchanged and `parked` remains valid,
+    /// so the caller can retry once pressure eases.
+    fn swap_in(&mut self, _state: &mut BatchState, _slot: usize, _parked: &ParkedSlot)
+        -> Result<()> {
+        bail!("backend {} does not support preemption", self.name())
+    }
+
+    /// Load-adaptive degradation: cap every slot's speculative draft
+    /// window at `cap` drafts per step (None lifts the cap). Capping at
+    /// 0 degrades speculation to plain verify steps without touching
+    /// the draft mirrors, so lifting the cap resumes drafting exactly.
+    /// A no-op for backends without speculation.
+    fn set_spec_k_cap(&mut self, _cap: Option<usize>) {}
+
+    /// Load-adaptive degradation: drop to the bare quantized branch
+    /// (sub-branch correction off) while `bare` is true; restoring
+    /// brings the saved sub-branch mode back. A no-op for backends
+    /// without a sub-branch.
+    fn set_bare_branch(&mut self, _bare: bool) {}
+
+    /// Load-adaptive degradation: route `slot`'s plain decode through a
+    /// lower-bit shadow engine (`on = true`) or back through the full
+    /// engine. The shadow shares the slot's KV geometry, so flipping
+    /// mid-flight keeps the stream valid (though not bit-identical to
+    /// the undegraded run). Errors when unsupported.
+    fn set_slot_shadow(&mut self, _slot: usize, _on: bool) -> Result<()> {
+        bail!("backend {} does not support shadow degradation", self.name())
+    }
+
+    /// Whether `slot` currently decodes through the shadow engine.
+    fn slot_shadowed(&self, _slot: usize) -> bool {
+        false
+    }
+
     /// Free `slot` so a queued request can be admitted into it.
     fn release_slot(&mut self, state: &mut BatchState, slot: usize) -> Result<()>;
 
@@ -288,6 +367,18 @@ pub struct NativeBackend {
     sequential_decode: bool,
     /// Self-speculative decoding state (None = plain decode).
     spec: Option<SpecDecoder>,
+    /// Degradation knob: global cap on per-slot draft windows.
+    spec_k_cap: Option<usize>,
+    /// Degradation knob: saved sub-branch mode while the bare branch is
+    /// forced (None = not degraded).
+    saved_mode: Option<SubMode>,
+    /// Degradation knob: per-slot shadow-engine routing (indexed by
+    /// slot id; reset on `open_batch`, cleared on `release_slot`).
+    shadowed: Vec<bool>,
+    /// Re-pack width of the lazily built shadow engine.
+    shadow_bits: u8,
+    /// Lower-bit shadow engine, built on the first shadow degrade.
+    shadow_engine: Option<NativeEngine>,
 }
 
 impl NativeBackend {
@@ -303,6 +394,11 @@ impl NativeBackend {
             draft_pool_pages: None,
             sequential_decode: false,
             spec: None,
+            spec_k_cap: None,
+            saved_mode: None,
+            shadowed: Vec::new(),
+            shadow_bits: 2,
+            shadow_engine: None,
         }
     }
 
@@ -355,6 +451,15 @@ impl NativeBackend {
     pub fn with_draft_kv_pool(mut self, n_pages: usize) -> NativeBackend {
         assert!(n_pages > 0, "degenerate draft pool");
         self.draft_pool_pages = Some(n_pages);
+        self
+    }
+
+    /// Re-pack width for the shadow-degradation engine (default 2
+    /// bits). The engine itself is built lazily on the first
+    /// [`Backend::set_slot_shadow`] call.
+    pub fn with_shadow_bits(mut self, bits: u8) -> NativeBackend {
+        assert!(bits > 0, "zero-bit shadow");
+        self.shadow_bits = bits;
         self
     }
 
@@ -460,7 +565,12 @@ impl NativeBackend {
                 let mut out = Vec::with_capacity(tokens.len());
                 for st in tokens {
                     let kv = slots[st.slot].as_mut().expect("validated above");
-                    out.push(self.engine.decode_one(st.token, kv, &mut self.ws));
+                    let eng = if self.shadowed.get(st.slot).copied().unwrap_or(false) {
+                        self.shadow_engine.as_ref().unwrap_or(&self.engine)
+                    } else {
+                        &self.engine
+                    };
+                    out.push(eng.decode_one(st.token, kv, &mut self.ws));
                 }
                 Ok(out)
             }
@@ -481,10 +591,86 @@ impl NativeBackend {
                 let mut out = Vec::with_capacity(tokens.len());
                 for st in tokens {
                     let kv = slots[st.slot].as_mut().expect("validated above");
+                    let eng = if self.shadowed.get(st.slot).copied().unwrap_or(false) {
+                        self.shadow_engine.as_ref().unwrap_or(&self.engine)
+                    } else {
+                        &self.engine
+                    };
                     let mut bound = PagedKvRef { pool: &mut *pool, kv };
-                    out.push(self.engine.decode_one(st.token, &mut bound, &mut self.ws));
+                    out.push(eng.decode_one(st.token, &mut bound, &mut self.ws));
                 }
                 Ok(out)
+            }
+            _ => bail!("native backend got a foreign batch state"),
+        }
+    }
+
+    /// One weight-stationary batched step over the listed slots through
+    /// either the full engine or the lower-bit shadow re-pack (the
+    /// `decode` wrapper partitions by [`Backend::slot_shadowed`]; both
+    /// engines share the KV geometry, so shadow steps write the same
+    /// cache layout and the slot stays resumable on the full engine).
+    fn decode_batched(
+        &mut self,
+        state: &mut BatchState,
+        tokens: &[SlotToken],
+        use_shadow: bool,
+    ) -> Result<Vec<Vec<f32>>> {
+        if tokens.is_empty() {
+            return Ok(Vec::new());
+        }
+        let engine = if use_shadow {
+            self.shadow_engine.as_ref().context("shadow engine not built")?
+        } else {
+            &self.engine
+        };
+        match state {
+            BatchState::Native { slots } => {
+                // distinct slots own distinct caches: split the borrows
+                let mut refs: Vec<Option<&mut KvCache>> =
+                    slots.iter_mut().map(|s| s.as_mut()).collect();
+                let mut batch: Vec<&mut dyn KvSlot> = Vec::with_capacity(tokens.len());
+                let mut toks = Vec::with_capacity(tokens.len());
+                for st in tokens {
+                    let Some(kv) = refs.get_mut(st.slot).and_then(|r| r.take()) else {
+                        bail!("decode: slot {} is not occupied (or listed twice)", st.slot);
+                    };
+                    if kv.remaining() == 0 {
+                        bail!("slot {}: kv cache full", st.slot);
+                    }
+                    toks.push(st.token);
+                    batch.push(kv as &mut dyn KvSlot);
+                }
+                let mut sb = SlotBatch { slots: batch };
+                Ok(engine.step_batch(&toks, &mut sb, &mut self.ws))
+            }
+            BatchState::NativePaged { pool, slots } => {
+                // pages were reserved by prepare_decode; this is a no-op
+                // backstop for callers that skipped it
+                for st in tokens {
+                    let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
+                        bail!("decode: slot {} is not occupied", st.slot);
+                    };
+                    if kv.remaining() == 0 {
+                        bail!("slot {}: kv view full", st.slot);
+                    }
+                    let pos = kv.len();
+                    pool.ensure_range(kv, pos, pos + 1)
+                        .with_context(|| format!("decoding slot {} at position {pos}", st.slot))?;
+                }
+                let mut refs: Vec<Option<&mut PagedKv>> =
+                    slots.iter_mut().map(|s| s.as_mut()).collect();
+                let mut sel: Vec<&mut PagedKv> = Vec::with_capacity(tokens.len());
+                let mut toks = Vec::with_capacity(tokens.len());
+                for st in tokens {
+                    let Some(kv) = refs.get_mut(st.slot).and_then(|r| r.take()) else {
+                        bail!("decode: slot {} listed twice", st.slot);
+                    };
+                    toks.push(st.token);
+                    sel.push(kv);
+                }
+                let mut sb = PagedSlotBatch { pool, slots: sel };
+                Ok(engine.step_batch(&toks, &mut sb, &mut self.ws))
             }
             _ => bail!("native backend got a foreign batch state"),
         }
@@ -530,6 +716,8 @@ impl Backend for NativeBackend {
         if capacity == 0 {
             bail!("zero-capacity batch");
         }
+        self.shadowed.clear();
+        self.shadowed.resize(capacity, false);
         let cfg = &self.engine.cfg;
         let pages_per_seq = (cfg.max_seq + self.page_size - 1) / self.page_size;
         let n_pages = if self.pool_pages > 0 { self.pool_pages } else { capacity * pages_per_seq };
@@ -699,59 +887,50 @@ impl Backend for NativeBackend {
         if tokens.is_empty() {
             return Ok(Vec::new());
         }
-        if self.sequential_decode {
-            return self.decode_sequential(state, tokens);
-        }
-        match state {
-            BatchState::Native { slots } => {
-                // distinct slots own distinct caches: split the borrows
-                let mut refs: Vec<Option<&mut KvCache>> =
-                    slots.iter_mut().map(|s| s.as_mut()).collect();
-                let mut batch: Vec<&mut dyn KvSlot> = Vec::with_capacity(tokens.len());
-                let mut toks = Vec::with_capacity(tokens.len());
-                for st in tokens {
-                    let Some(kv) = refs.get_mut(st.slot).and_then(|r| r.take()) else {
-                        bail!("decode: slot {} is not occupied (or listed twice)", st.slot);
-                    };
-                    if kv.remaining() == 0 {
-                        bail!("slot {}: kv cache full", st.slot);
-                    }
-                    toks.push(st.token);
-                    batch.push(kv as &mut dyn KvSlot);
+        let out = if self.sequential_decode {
+            self.decode_sequential(state, tokens)?
+        } else if tokens.iter().any(|st| self.slot_shadowed(st.slot)) {
+            // split shadow-routed slots from full-engine slots, step each
+            // group through its engine, reassemble in input order
+            let mut norm: Vec<SlotToken> = Vec::new();
+            let mut nidx: Vec<usize> = Vec::new();
+            let mut shad: Vec<SlotToken> = Vec::new();
+            let mut sidx: Vec<usize> = Vec::new();
+            for (i, st) in tokens.iter().enumerate() {
+                if self.slot_shadowed(st.slot) {
+                    shad.push(*st);
+                    sidx.push(i);
+                } else {
+                    norm.push(*st);
+                    nidx.push(i);
                 }
-                let mut sb = SlotBatch { slots: batch };
-                Ok(self.engine.step_batch(&toks, &mut sb, &mut self.ws))
             }
-            BatchState::NativePaged { pool, slots } => {
-                // pages were reserved by prepare_decode; this is a no-op
-                // backstop for callers that skipped it
-                for st in tokens {
-                    let Some(kv) = slots.get_mut(st.slot).and_then(|s| s.as_mut()) else {
-                        bail!("decode: slot {} is not occupied", st.slot);
-                    };
-                    if kv.remaining() == 0 {
-                        bail!("slot {}: kv view full", st.slot);
-                    }
-                    let pos = kv.len();
-                    pool.ensure_range(kv, pos, pos + 1)
-                        .with_context(|| format!("decoding slot {} at position {pos}", st.slot))?;
-                }
-                let mut refs: Vec<Option<&mut PagedKv>> =
-                    slots.iter_mut().map(|s| s.as_mut()).collect();
-                let mut sel: Vec<&mut PagedKv> = Vec::with_capacity(tokens.len());
-                let mut toks = Vec::with_capacity(tokens.len());
-                for st in tokens {
-                    let Some(kv) = refs.get_mut(st.slot).and_then(|r| r.take()) else {
-                        bail!("decode: slot {} listed twice", st.slot);
-                    };
-                    toks.push(st.token);
-                    sel.push(kv);
-                }
-                let mut sb = PagedSlotBatch { pool, slots: sel };
-                Ok(self.engine.step_batch(&toks, &mut sb, &mut self.ws))
+            let mut merged: Vec<Option<Vec<f32>>> = vec![None; tokens.len()];
+            for (i, row) in nidx.into_iter().zip(self.decode_batched(state, &norm, false)?) {
+                merged[i] = Some(row);
             }
-            _ => bail!("native backend got a foreign batch state"),
+            for (i, row) in sidx.into_iter().zip(self.decode_batched(state, &shad, true)?) {
+                merged[i] = Some(row);
+            }
+            merged.into_iter().map(|r| r.expect("every listed slot decoded")).collect()
+        } else {
+            self.decode_batched(state, tokens, false)?
+        };
+        // plain-decoded tokens of speculative slots queue in the mirror's
+        // lazy catch-up list, so a slot degraded to plain decode (shadow
+        // routing, K capped to 0) can return to speculative stepping
+        // with `draft len + pending == target len` intact
+        if let Some(spec) = self.spec.as_mut() {
+            for st in tokens {
+                if spec.kv.len(st.slot).is_none() {
+                    continue;
+                }
+                if let Some(p) = spec.pending.get_mut(st.slot) {
+                    p.push(st.token);
+                }
+            }
         }
+        Ok(out)
     }
 
     fn prepare_decode(&mut self, state: &mut BatchState, slot: usize) -> Result<()> {
@@ -821,6 +1000,14 @@ impl Backend for NativeBackend {
             }
         } else {
             base_k.resize(n, spec_cfg.k);
+        }
+        if let Some(cap) = self.spec_k_cap {
+            // load-adaptive degradation: every slot's window is capped
+            // this step; cap 0 degrades to plain verify steps without
+            // touching the mirrors, so lifting the cap resumes drafting
+            for k in &mut base_k {
+                *k = (*k).min(cap);
+            }
         }
         let mut lens: Vec<usize> = Vec::with_capacity(n);
         let mut ks: Vec<usize> = Vec::with_capacity(n);
@@ -1004,6 +1191,145 @@ impl Backend for NativeBackend {
         Some(self.ws.traffic.weight_bytes + draft)
     }
 
+    fn preemptible(&self) -> bool {
+        true
+    }
+
+    /// Swap `slot` out into a host-side parking buffer: a bit-exact copy
+    /// of the committed target KV, the draft mirror (when the slot
+    /// speculates), the mirror's lazy catch-up queue, and the adaptive-K
+    /// controller. The slot is freed — on the paged store its pages
+    /// return to the pool, which is the memory another admission needs.
+    fn swap_out(&mut self, state: &mut BatchState, slot: usize) -> Result<ParkedSlot> {
+        let target = match state {
+            BatchState::Native { slots } => {
+                let kv = slots
+                    .get_mut(slot)
+                    .and_then(|s| s.take())
+                    .with_context(|| format!("swap out: slot {slot} is not occupied"))?;
+                kv.park()
+            }
+            BatchState::NativePaged { pool, slots } => {
+                let mut kv = slots
+                    .get_mut(slot)
+                    .and_then(|s| s.take())
+                    .with_context(|| format!("swap out: slot {slot} is not occupied"))?;
+                pool.park_kv(&mut kv)
+            }
+            _ => bail!("native backend got a foreign batch state"),
+        };
+        let (draft, pending, ctrl) = match self.spec.as_mut() {
+            Some(spec) => {
+                let draft = spec.kv.park(slot);
+                let pending = spec.pending.get_mut(slot).map(std::mem::take).unwrap_or_default();
+                let ctrl = spec.ctrl.get(slot).cloned();
+                if let Some(c) = spec.ctrl.get_mut(slot) {
+                    *c = KController::new(spec.cfg.k);
+                }
+                (draft, pending, ctrl)
+            }
+            None => (None, Vec::new(), None),
+        };
+        // shadow routing is a property of the live slot, not the request
+        if let Some(s) = self.shadowed.get_mut(slot) {
+            *s = false;
+        }
+        Ok(ParkedSlot { target, draft, pending, ctrl })
+    }
+
+    /// Restore a parked slot into the free slot `slot`: target KV first,
+    /// then the draft mirror, catch-up queue and controller, so a
+    /// subsequent (greedy) decode is bit-identical to a run that was
+    /// never preempted. A mid-restore failure unwinds the target so the
+    /// surface is unchanged and `parked` stays valid for a later retry.
+    fn swap_in(&mut self, state: &mut BatchState, slot: usize, parked: &ParkedSlot)
+        -> Result<()> {
+        match state {
+            BatchState::Native { slots } => {
+                if slot >= slots.len() {
+                    bail!("swap in: slot {slot} out of range ({} slots)", slots.len());
+                }
+                if slots[slot].is_some() {
+                    bail!("swap in: slot {slot} is already occupied");
+                }
+                let cfg = &self.engine.cfg;
+                let mut kv = KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim());
+                kv.unpark(&parked.target);
+                slots[slot] = Some(kv);
+            }
+            BatchState::NativePaged { pool, slots } => {
+                if slot >= slots.len() {
+                    bail!("swap in: slot {slot} out of range ({} slots)", slots.len());
+                }
+                if slots[slot].is_some() {
+                    bail!("swap in: slot {slot} is already occupied");
+                }
+                let kv = pool
+                    .unpark_kv(&parked.target, self.engine.cfg.max_seq)
+                    .context("swap in: target kv")?;
+                slots[slot] = Some(kv);
+            }
+            _ => bail!("native backend got a foreign batch state"),
+        }
+        if let Some(spec) = self.spec.as_mut() {
+            let restored = match parked.draft.as_ref() {
+                Some(d) => spec.kv.unpark(&self.engine.cfg, slot, d),
+                // parked before the slot ever speculated on a then-
+                // non-speculative backend: resume with an empty mirror
+                None => spec.kv.occupy(&self.engine.cfg, slot),
+            };
+            if let Err(e) = restored {
+                match state {
+                    BatchState::Native { slots } => slots[slot] = None,
+                    BatchState::NativePaged { pool, slots } => {
+                        if let Some(mut kv) = slots[slot].take() {
+                            pool.release_kv(&mut kv);
+                        }
+                    }
+                    _ => unreachable!("state variant validated above"),
+                }
+                return Err(e).context("swap in: draft kv mirror");
+            }
+            let p = spec.pending.get_mut(slot).expect("mirror restored into this slot");
+            p.clear();
+            p.extend_from_slice(&parked.pending);
+            if let Some(c) = spec.ctrl.get_mut(slot) {
+                *c = parked.ctrl.clone().unwrap_or_else(|| KController::new(spec.cfg.k));
+            }
+        }
+        Ok(())
+    }
+
+    fn set_spec_k_cap(&mut self, cap: Option<usize>) {
+        self.spec_k_cap = cap;
+    }
+
+    fn set_bare_branch(&mut self, bare: bool) {
+        if bare {
+            if self.saved_mode.is_none() {
+                self.saved_mode = Some(self.engine.mode);
+                self.engine.mode = SubMode::None;
+            }
+        } else if let Some(m) = self.saved_mode.take() {
+            self.engine.mode = m;
+        }
+    }
+
+    fn set_slot_shadow(&mut self, slot: usize, on: bool) -> Result<()> {
+        if slot >= self.shadowed.len() {
+            bail!("shadow: slot {slot} out of range ({} slots)", self.shadowed.len());
+        }
+        if on && self.shadow_engine.is_none() {
+            self.shadow_engine = Some(self.engine.shadow(self.shadow_bits));
+        }
+        self.shadowed[slot] = on;
+        Ok(())
+    }
+
+    fn slot_shadowed(&self, slot: usize) -> bool {
+        self.shadowed.get(slot).copied().unwrap_or(false)
+    }
+
     fn release_slot(&mut self, state: &mut BatchState, slot: usize) -> Result<()> {
         match state {
             BatchState::Native { slots } => {
@@ -1032,6 +1358,9 @@ impl Backend for NativeBackend {
             if let Some(c) = spec.ctrl.get_mut(slot) {
                 *c = KController::new(spec.cfg.k);
             }
+        }
+        if let Some(s) = self.shadowed.get_mut(slot) {
+            *s = false;
         }
         Ok(())
     }

@@ -1,24 +1,54 @@
 //! Dynamic batcher: admission queue + batch forming.
 //!
-//! Two release disciplines sit on one FIFO admission queue:
+//! Two release disciplines sit on one insertion-ordered admission queue:
 //!
-//! * **Continuous** ([`Batcher::pop_ready`]) — pop the oldest request the
-//!   moment a decode slot frees. Pure arrival order: no length bucketing
-//!   is needed when slots are filled independently, and FIFO is
-//!   starvation-free by construction.
+//! * **Continuous** ([`Batcher::pop_ready`]) — pop the best queued
+//!   request the moment a decode slot frees. "Best" is lowest
+//!   *effective class* (declared [`Priority`] improved by one step per
+//!   [`BatcherConfig::age_after`] waited — the aging bound below), FIFO
+//!   within a class. With a single class this degenerates to pure
+//!   arrival order.
 //! * **Aligned groups** ([`Batcher::next_batch`]) — for lock-step
 //!   surfaces (the PJRT artifacts share a scalar `pos0` across batch
 //!   slots, so a batch must be position-aligned): gather requests with
-//!   the oldest request's prompt length, release when a full batch is
-//!   available or the oldest has waited `max_wait`. Because grouping
-//!   always keys off the *oldest* request, an odd-length request rises
+//!   the best request's prompt length, release when a full batch is
+//!   available or the best has waited `max_wait`. Because grouping
+//!   always keys off the *best* request, an odd-length request rises
 //!   to the front as earlier arrivals drain and is released within its
 //!   own `max_wait` — a stream of other lengths cannot starve it (see
 //!   the anti-starvation test).
+//!
+//! **Anti-starvation aging.** Strict priority order would let a
+//! sustained stream of high-class arrivals starve the batch class
+//! forever. Instead a queued request's effective class improves by one
+//! step for every `age_after` it has waited, so after
+//! `(N_CLASSES - 1) * age_after` the lowest class competes at the top
+//! class's level and plain FIFO order admits it.
+//!
+//! **Displacement.** When the queue is full, an arriving request of a
+//! strictly higher class displaces the youngest queued request of the
+//! worst (declared) class below it instead of being shed; the displaced
+//! request is handed back to the caller to emit its shed event. A
+//! lower-or-equal class arrival into a full queue is shed as before.
 
 use super::request::GenRequest;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+/// Effective class index of a waiting request at `now`: the declared
+/// class improved one step per `age_after` waited, saturating at the
+/// top class (zero `age_after` disables aging). Shared by the batcher's
+/// queue ordering and the serving loop's parked-request resume ordering
+/// so one starvation bound covers both waiting sets.
+pub(crate) fn effective_class(age_after: Duration, req: &GenRequest, now: Instant) -> usize {
+    let class = req.class.index();
+    if age_after.is_zero() {
+        return class;
+    }
+    let waited = now.saturating_duration_since(req.arrived);
+    let steps = (waited.as_nanos() / age_after.as_nanos()) as usize;
+    class.saturating_sub(steps)
+}
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -27,6 +57,9 @@ pub struct BatcherConfig {
     pub max_wait: Duration,
     /// admission bound; submit fails beyond this
     pub max_queue: usize,
+    /// anti-starvation aging: a queued request's effective class
+    /// improves one step per `age_after` waited (zero disables aging)
+    pub age_after: Duration,
 }
 
 impl Default for BatcherConfig {
@@ -35,7 +68,25 @@ impl Default for BatcherConfig {
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(20),
             max_queue: 1024,
+            age_after: Duration::from_millis(500),
         }
+    }
+}
+
+/// Outcome of [`Batcher::submit`].
+#[derive(Debug)]
+pub enum Submitted {
+    /// Queued. `displaced` carries the lower-class request this one
+    /// pushed out of a full queue (the caller emits its shed event).
+    Queued { displaced: Option<GenRequest> },
+    /// Queue full of same-or-higher-class requests: shed the arrival.
+    Shed(GenRequest),
+}
+
+impl Submitted {
+    /// Whether the submitted request itself was admitted.
+    pub fn admitted(&self) -> bool {
+        matches!(self, Submitted::Queued { .. })
     }
 }
 
@@ -73,18 +124,61 @@ impl Batcher {
         *self.cfg.batch_sizes.last().unwrap()
     }
 
-    /// Admission control: false = queue full, caller should shed load.
-    pub fn submit(&mut self, req: GenRequest) -> bool {
+    /// Admission control. A full queue sheds the arrival unless a
+    /// strictly lower-class request can be displaced in its favour.
+    pub fn submit(&mut self, req: GenRequest) -> Submitted {
         if self.queue.len() >= self.cfg.max_queue {
-            return false;
+            // youngest queued request of the worst declared class
+            let victim = self
+                .queue
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.class > req.class)
+                .max_by_key(|(_, r)| (r.class, r.arrived));
+            return match victim.map(|(i, _)| i) {
+                Some(i) => {
+                    let displaced = self.queue.remove(i).unwrap();
+                    self.queue.push_back(req);
+                    Submitted::Queued { displaced: Some(displaced) }
+                }
+                None => Submitted::Shed(req),
+            };
         }
         self.queue.push_back(req);
-        true
+        Submitted::Queued { displaced: None }
     }
 
-    /// Continuous admission: pop the oldest queued request (FIFO).
-    pub fn pop_ready(&mut self) -> Option<GenRequest> {
-        self.queue.pop_front()
+    /// Queue index of the best request at `now`: lowest effective
+    /// class, FIFO within a class.
+    fn best_index(&self, now: Instant) -> Option<usize> {
+        self.queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, r)| (effective_class(self.cfg.age_after, r, now), r.arrived))
+            .map(|(i, _)| i)
+    }
+
+    /// The request [`Batcher::pop_ready`] would return at `now`, without
+    /// removing it (the serving loop compares it against parked
+    /// candidates before committing to an admission).
+    pub fn peek_ready(&self, now: Instant) -> Option<&GenRequest> {
+        self.best_index(now).map(|i| &self.queue[i])
+    }
+
+    /// Continuous admission: pop the best queued request (effective
+    /// class order, FIFO within a class).
+    pub fn pop_ready(&mut self, now: Instant) -> Option<GenRequest> {
+        let i = self.best_index(now)?;
+        self.queue.remove(i)
+    }
+
+    /// Per-class queue depths (indexed by [`Priority::index`]).
+    pub fn queued_by_class(&self) -> [usize; crate::coordinator::request::N_CLASSES] {
+        let mut n = [0usize; crate::coordinator::request::N_CLASSES];
+        for r in &self.queue {
+            n[r.class.index()] += 1;
+        }
+        n
     }
 
     /// The smallest compiled batch size that fits `n` requests.
@@ -99,12 +193,14 @@ impl Batcher {
 
     /// Form the next batch, or None if the queue should keep waiting.
     ///
-    /// Policy: take the oldest request; gather up to `max_batch` requests
-    /// with the SAME prompt length (position alignment); release when the
-    /// group fills the largest batch or the oldest has waited `max_wait`.
+    /// Policy: take the best request (effective class order, FIFO
+    /// within a class); gather up to `max_batch` requests with the SAME
+    /// prompt length (position alignment); release when the group fills
+    /// the largest batch or the best has waited `max_wait`.
     pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
-        let oldest = self.queue.front()?;
-        let len0 = oldest.prompt.len();
+        let best = &self.queue[self.best_index(now)?];
+        let len0 = best.prompt.len();
+        let arrived0 = best.arrived;
         let matching: Vec<usize> = self
             .queue
             .iter()
@@ -114,7 +210,7 @@ impl Batcher {
             .take(self.max_batch())
             .collect();
 
-        let timed_out = now.duration_since(oldest.arrived) >= self.cfg.max_wait;
+        let timed_out = now.duration_since(arrived0) >= self.cfg.max_wait;
         if matching.len() < self.max_batch() && !timed_out {
             return None;
         }
@@ -133,9 +229,14 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Priority;
 
     fn req(id: u64, plen: usize) -> GenRequest {
         GenRequest::new(id, vec![1; plen], 8)
+    }
+
+    fn preq(id: u64, class: Priority) -> GenRequest {
+        GenRequest::new(id, vec![1; 8], 8).with_class(class)
     }
 
     fn cfg(wait_ms: u64) -> BatcherConfig {
@@ -143,6 +244,8 @@ mod tests {
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(wait_ms),
             max_queue: 8,
+            // effectively no aging within a test's timescale
+            age_after: Duration::from_secs(3600),
         }
     }
 
@@ -150,7 +253,7 @@ mod tests {
     fn fills_full_batch_immediately() {
         let mut b = Batcher::new(cfg(1000));
         for i in 0..5 {
-            assert!(b.submit(req(i, 16)));
+            assert!(b.submit(req(i, 16)).admitted());
         }
         let batch = b.next_batch(Instant::now()).expect("full batch");
         assert_eq!(batch.requests.len(), 4);
@@ -188,9 +291,12 @@ mod tests {
     fn admission_control_sheds_load() {
         let mut b = Batcher::new(cfg(1000));
         for i in 0..8 {
-            assert!(b.submit(req(i, 4)));
+            assert!(b.submit(req(i, 4)).admitted());
         }
-        assert!(!b.submit(req(99, 4)));
+        match b.submit(req(99, 4)) {
+            Submitted::Shed(r) => assert_eq!(r.id, 99),
+            other => panic!("expected shed, got {other:?}"),
+        }
     }
 
     #[test]
@@ -199,10 +305,63 @@ mod tests {
         b.submit(req(1, 16));
         b.submit(req(2, 32));
         b.submit(req(3, 16));
-        assert_eq!(b.pop_ready().unwrap().id, 1);
-        assert_eq!(b.pop_ready().unwrap().id, 2);
-        assert_eq!(b.pop_ready().unwrap().id, 3);
-        assert!(b.pop_ready().is_none());
+        let now = Instant::now();
+        assert_eq!(b.pop_ready(now).unwrap().id, 1);
+        assert_eq!(b.pop_ready(now).unwrap().id, 2);
+        assert_eq!(b.pop_ready(now).unwrap().id, 3);
+        assert!(b.pop_ready(now).is_none());
+    }
+
+    #[test]
+    fn pop_ready_orders_by_class_then_fifo() {
+        let mut b = Batcher::new(cfg(1000));
+        b.submit(preq(1, Priority::Batch));
+        b.submit(preq(2, Priority::Standard));
+        b.submit(preq(3, Priority::Interactive));
+        b.submit(preq(4, Priority::Interactive));
+        let now = Instant::now();
+        let order: Vec<u64> = std::iter::from_fn(|| b.pop_ready(now).map(|r| r.id)).collect();
+        assert_eq!(order, vec![3, 4, 2, 1]);
+    }
+
+    #[test]
+    fn aging_admits_lowest_class_under_pressure() {
+        let mut c = cfg(1000);
+        c.age_after = Duration::from_millis(10);
+        let mut b = Batcher::new(c);
+        b.submit(preq(1, Priority::Batch));
+        for id in 2..6 {
+            b.submit(preq(id, Priority::Interactive));
+        }
+        // freshly queued: interactive wins
+        assert_eq!(b.pop_ready(Instant::now()).unwrap().id, 2);
+        // after 2 aging steps the batch request competes at class 0 and
+        // is the oldest there, so sustained pressure no longer starves it
+        let later = Instant::now() + Duration::from_millis(25);
+        assert_eq!(b.pop_ready(later).unwrap().id, 1);
+        assert_eq!(b.queued_by_class(), [3, 0, 0]);
+    }
+
+    #[test]
+    fn full_queue_displaces_lower_class_only() {
+        let mut b = Batcher::new(cfg(1000));
+        for i in 0..7 {
+            assert!(b.submit(preq(i, Priority::Standard)).admitted());
+        }
+        assert!(b.submit(preq(7, Priority::Batch)).admitted());
+        // full queue: an interactive arrival displaces the youngest of
+        // the worst class (the batch request), never a peer or better
+        match b.submit(preq(100, Priority::Interactive)) {
+            Submitted::Queued { displaced: Some(d) } => assert_eq!(d.id, 7),
+            other => panic!("expected displacement, got {other:?}"),
+        }
+        assert_eq!(b.len(), 8);
+        // still full, now all standard-or-better: a batch arrival sheds
+        // itself and a standard arrival has no strictly-lower victim
+        assert!(matches!(b.submit(preq(101, Priority::Batch)), Submitted::Shed(_)));
+        assert!(matches!(b.submit(preq(102, Priority::Standard)), Submitted::Shed(_)));
+        // the displaced-in interactive request pops first
+        assert_eq!(b.pop_ready(Instant::now()).unwrap().id, 100);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! capacity-sized `resident_bytes`), prefix-cache hits and tokens
 //! reused, copy-on-write copies, and failed (shed) allocations.
 
+use super::request::{Priority, N_CLASSES};
 use crate::engine::kv::KvPoolStats;
 use crate::util::json::Json;
 use crate::util::timer::LatencyStats;
@@ -47,6 +48,33 @@ impl SpecModeStats {
             self.accepted as f64 / self.proposed as f64
         }
     }
+}
+
+/// Per-priority-class lifecycle counters. Every overload transition the
+/// coordinator takes — preempting a slot to host KV, resuming it,
+/// degrading a running slot's decode mode, shedding — lands in exactly
+/// one class bucket, so a trace can be reconciled class by class:
+/// `submitted == done + shed + still-in-flight` and
+/// `preemptions == resumes + still-parked`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassStats {
+    /// requests submitted declaring this class
+    pub submitted: usize,
+    /// requests of this class that completed
+    pub done: usize,
+    /// requests of this class shed (queue overflow, displacement, or
+    /// unrecoverable exhaustion)
+    pub shed: usize,
+    /// times a running slot of this class was preempted (KV swapped out
+    /// to the host parking buffer, pages freed)
+    pub preemptions: usize,
+    /// times a parked request of this class was swapped back in
+    pub resumes: usize,
+    /// degradation transitions applied while a request of this class
+    /// occupied a slot (spec-K cap, bare branch, or shadow routing)
+    pub degrades: usize,
+    /// degradation transitions lifted (pressure receded)
+    pub restores: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -105,6 +133,13 @@ pub struct ServeMetrics {
     pub e2e: LatencyStats,
     /// latest paged KV-pool snapshot (None on dense/PJRT backends)
     pub kv_pool: Option<KvPoolStats>,
+    /// per-priority-class lifecycle counters, indexed by
+    /// [`Priority::index`]
+    pub classes: [ClassStats; N_CLASSES],
+    /// bytes moved through the host parking buffer by KV swap-outs
+    pub swapped_bytes: u64,
+    /// requests currently parked (swapped out, awaiting resume)
+    pub parked: usize,
 }
 
 impl Default for ServeMetrics {
@@ -137,6 +172,9 @@ impl Default for ServeMetrics {
             per_token: LatencyStats::new(),
             e2e: LatencyStats::new(),
             kv_pool: None,
+            classes: [ClassStats::default(); N_CLASSES],
+            swapped_bytes: 0,
+            parked: 0,
         }
     }
 }
@@ -225,6 +263,22 @@ impl ServeMetrics {
         m.committed += committed;
     }
 
+    /// Mutable per-class counter bucket for `class`.
+    pub fn class(&mut self, class: Priority) -> &mut ClassStats {
+        &mut self.classes[class.index()]
+    }
+
+    /// Whether any overload machinery fired (preempt, resume, degrade,
+    /// restore, or swap traffic) — gates the report/JSON class blocks so
+    /// calm runs keep their legacy shape.
+    fn overload_active(&self) -> bool {
+        self.swapped_bytes > 0
+            || self.parked > 0
+            || self.classes.iter().any(|c| {
+                c.preemptions > 0 || c.resumes > 0 || c.degrades > 0 || c.restores > 0
+            })
+    }
+
     /// Fraction of proposed draft tokens the verifier accepted.
     pub fn spec_acceptance_rate(&self) -> f64 {
         if self.spec_proposed == 0 {
@@ -309,6 +363,29 @@ impl ServeMetrics {
                 }
             }
         }
+        if self.overload_active() {
+            out.push_str(&format!(
+                "\n  overload: parked {} swapped {} B",
+                self.parked, self.swapped_bytes,
+            ));
+            for (i, c) in self.classes.iter().enumerate() {
+                if *c == ClassStats::default() {
+                    continue;
+                }
+                out.push_str(&format!(
+                    "\n    {}: submitted {} done {} shed {} preempt {} resume {} \
+                     degrade {} restore {}",
+                    Priority::from_index(i).name(),
+                    c.submitted,
+                    c.done,
+                    c.shed,
+                    c.preemptions,
+                    c.resumes,
+                    c.degrades,
+                    c.restores,
+                ));
+            }
+        }
         if let Some(p) = &self.kv_pool {
             out.push_str(&format!(
                 "\n  kv pool: pages {}/{} (peak {}) prefix hits {}/{} reused {} tok \
@@ -354,6 +431,9 @@ impl ServeMetrics {
             ("mean_slot_occupancy", self.mean_slot_occupancy().into()),
             ("peak_occupied", self.peak_occupied.into()),
             ("weight_bytes", (self.weight_bytes as f64).into()),
+            ("swapped_bytes", (self.swapped_bytes as f64).into()),
+            ("parked", self.parked.into()),
+            ("classes", self.classes_json()),
             ("admission_wait", lat_json(&self.admission_wait)),
             ("ttft", lat_json(&self.ttft)),
             ("itl", lat_json(&self.itl)),
@@ -388,6 +468,33 @@ impl ServeMetrics {
             ));
         }
         Json::obj(fields)
+    }
+
+    /// Per-class counters as a JSON object keyed by class name. Always
+    /// present in [`ServeMetrics::to_json`] (with zeros when the
+    /// overload tier never fired) so dashboards and the CI serve-smoke
+    /// check can rely on the keys existing.
+    fn classes_json(&self) -> Json {
+        Json::obj(
+            self.classes
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    (
+                        Priority::from_index(i).name(),
+                        Json::obj(vec![
+                            ("submitted", c.submitted.into()),
+                            ("done", c.done.into()),
+                            ("shed", c.shed.into()),
+                            ("preemptions", c.preemptions.into()),
+                            ("resumes", c.resumes.into()),
+                            ("degrades", c.degrades.into()),
+                            ("restores", c.restores.into()),
+                        ]),
+                    )
+                })
+                .collect::<Vec<_>>(),
+        )
     }
 }
 
@@ -475,6 +582,38 @@ mod tests {
             }
         }
         assert!(j.get("speculative").is_none(), "no spec steps → no spec block");
+    }
+
+    #[test]
+    fn class_counters_and_json_keys() {
+        let mut m = ServeMetrics::new();
+        assert!(!m.overload_active());
+        m.class(Priority::Batch).submitted += 1;
+        m.class(Priority::Batch).preemptions += 1;
+        m.class(Priority::Batch).resumes += 1;
+        m.class(Priority::Interactive).submitted += 2;
+        m.class(Priority::Interactive).done += 2;
+        m.swapped_bytes = 4096;
+        assert!(m.overload_active());
+        let rep = m.report();
+        assert!(rep.contains("overload: parked 0 swapped 4096 B"));
+        assert!(rep.contains("batch: submitted 1 done 0 shed 0 preempt 1 resume 1"));
+        assert!(!rep.contains("standard:"), "all-zero classes stay silent");
+        let j = m.to_json();
+        let classes = j.get("classes").expect("classes object always present");
+        for name in ["interactive", "standard", "batch"] {
+            let c = classes.get(name).unwrap_or_else(|| panic!("missing class {name}"));
+            for k in ["submitted", "done", "shed", "preemptions", "resumes", "degrades", "restores"]
+            {
+                assert!(c.get(k).is_some(), "{name} missing {k}");
+            }
+        }
+        assert_eq!(
+            classes.get("batch").and_then(|c| c.get("preemptions")).and_then(Json::as_usize),
+            Some(1)
+        );
+        assert!(j.get("swapped_bytes").is_some());
+        assert!(j.get("parked").is_some());
     }
 
     #[test]

@@ -23,9 +23,16 @@
 //!   reuse, see [`crate::engine::kv`]; optional self-speculative
 //!   decoding, see [`crate::spec`]) or the PJRT artifacts,
 //! * [`server`] — the continuous scheduling loop: admit whenever a slot
-//!   frees, step the occupied slots, stream events,
+//!   frees, step the occupied slots, stream events; under exhaustion it
+//!   preempts the lowest priority class via exact KV swap-out instead
+//!   of shedding,
+//! * [`overload`] — the load-adaptive degradation policy: a hysteretic
+//!   pressure controller that caps speculative K, drops to the bare
+//!   quantized branch, or routes slots through a lower-bit shadow
+//!   engine as pressure rises,
 //! * [`metrics`] — TTFT / per-token latency / throughput, slot-occupancy
-//!   histogram and admission-latency accounting,
+//!   histogram, admission-latency and per-priority-class
+//!   preempt/degrade/shed accounting,
 //! * [`workload`] — the trace-driven load generator: Poisson / bursty
 //!   arrivals, lognormal length mixes with straggler tails, templated
 //!   shared prefixes and a greedy/sampled split (drives the `loadgen`
@@ -34,15 +41,19 @@
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod overload;
 pub mod request;
 pub mod sampler;
 pub mod server;
 pub mod workload;
 
-pub use backend::{Backend, BatchState, NativeBackend, PjrtBackend, SlotToken, SpecSlot};
-pub use batcher::{Batcher, BatcherConfig};
-pub use metrics::{ServeMetrics, SpecModeStats};
-pub use request::{GenEvent, GenRequest, GenResponse, SamplingParams};
+pub use backend::{
+    Backend, BatchState, NativeBackend, ParkedSlot, PjrtBackend, SlotToken, SpecSlot,
+};
+pub use batcher::{Batcher, BatcherConfig, Submitted};
+pub use metrics::{ClassStats, ServeMetrics, SpecModeStats};
+pub use overload::{DegradeConfig, PressureController};
+pub use request::{GenEvent, GenRequest, GenResponse, Priority, SamplingParams, N_CLASSES};
 pub use sampler::Sampler;
 pub use server::{Coordinator, CoordinatorClient, CoordinatorConfig, CoordinatorHandle};
 pub use workload::{Arrival, LenDist, ReqMeta, Workload, WorkloadConfig};

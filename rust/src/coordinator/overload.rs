@@ -1,0 +1,183 @@
+//! Load-adaptive degradation policy for the serving loop.
+//!
+//! Under pressure the coordinator trades decode quality/speed for
+//! survival in three reversible steps, driven by one scalar pressure
+//! signal in `[0, 1]` derived from live [`super::ServeMetrics`] inputs
+//! (KV-pool page utilisation, queue depth, parked requests):
+//!
+//! * **L1 — cap speculative K.** Every speculative slot's draft window
+//!   is clamped to [`DegradeConfig::k_cap`]; mirrors stay intact, so
+//!   lifting the cap resumes full drafting exactly.
+//! * **L2 — bare quantized branch.** The engine drops its sub-branch
+//!   correction ([`crate::engine::native::SubMode::None`]): faster,
+//!   coarser decode on the same weights and KV.
+//! * **L3 — shadow-engine routing.** The lowest-class occupied slots
+//!   route decode through a lower-bit shadow engine sharing the same KV
+//!   geometry, freeing verifier bandwidth for higher classes.
+//!
+//! Each level subsumes the ones below it. Transitions are hysteretic —
+//! a level is only left once pressure clears its entry threshold by
+//! [`DegradeConfig::hysteresis`] — so an oscillating signal near a
+//! threshold cannot flap the engine mode every step. The controller is
+//! pure state-machine (no clocks, no randomness): the same pressure
+//! trace always produces the same transition sequence, which is what
+//! lets the soak test assert exact per-class degrade/restore counts.
+
+/// Thresholds for the three degradation levels. Disabled by default:
+/// exactness tests and calm deployments see the stock engine behaviour
+/// unless a config opts in.
+#[derive(Debug, Clone)]
+pub struct DegradeConfig {
+    /// master switch; when false the controller always reports level 0
+    pub enabled: bool,
+    /// pressure at which speculative K is capped (level 1)
+    pub l1_pressure: f64,
+    /// pressure at which the bare quantized branch engages (level 2)
+    pub l2_pressure: f64,
+    /// pressure at which shadow-engine routing engages (level 3)
+    pub l3_pressure: f64,
+    /// margin below a level's entry threshold required to leave it
+    pub hysteresis: f64,
+    /// speculative-K clamp applied at level 1 and above (0 = no drafting)
+    pub k_cap: usize,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        DegradeConfig {
+            enabled: false,
+            l1_pressure: 0.70,
+            l2_pressure: 0.85,
+            l3_pressure: 0.95,
+            hysteresis: 0.10,
+            k_cap: 1,
+        }
+    }
+}
+
+impl DegradeConfig {
+    /// Enabled with the default thresholds.
+    pub fn enabled() -> DegradeConfig {
+        DegradeConfig { enabled: true, ..DegradeConfig::default() }
+    }
+
+    /// Entry threshold of `level` (1..=3).
+    fn threshold(&self, level: u8) -> f64 {
+        match level {
+            1 => self.l1_pressure,
+            2 => self.l2_pressure,
+            _ => self.l3_pressure,
+        }
+    }
+}
+
+/// Hysteretic three-level degradation state machine. Feed it the
+/// current pressure once per scheduling step; it reports the level the
+/// serving loop should be operating at.
+#[derive(Debug, Clone)]
+pub struct PressureController {
+    cfg: DegradeConfig,
+    level: u8,
+}
+
+impl PressureController {
+    pub fn new(cfg: DegradeConfig) -> PressureController {
+        PressureController { cfg, level: 0 }
+    }
+
+    /// Current degradation level (0 = none, 3 = shadow routing).
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Advance the state machine with the current pressure. Returns
+    /// `(old_level, new_level)`; the caller applies the backend knob
+    /// transitions for every level crossed.
+    pub fn update(&mut self, pressure: f64) -> (u8, u8) {
+        let old = self.level;
+        if !self.cfg.enabled {
+            return (old, old);
+        }
+        let mut target = 0u8;
+        for level in (1..=3u8).rev() {
+            if pressure >= self.cfg.threshold(level) {
+                target = level;
+                break;
+            }
+        }
+        if target > self.level {
+            // escalation is immediate: overload is the emergency
+            self.level = target;
+        } else {
+            // de-escalate only through levels whose entry threshold the
+            // pressure clears by the hysteresis margin
+            while self.level > 0
+                && pressure < self.cfg.threshold(self.level) - self.cfg.hysteresis
+            {
+                self.level -= 1;
+            }
+        }
+        (old, self.level)
+    }
+}
+
+/// Combine the serving loop's live signals into one pressure scalar:
+/// the max of KV-pool page utilisation and queue fill, saturating to
+/// 1.0 whenever any request sits parked (a parked request *is* the
+/// overload — capacity freed by preemption must not read as calm).
+pub fn pressure_signal(pool_frac: f64, queue_frac: f64, parked: usize) -> f64 {
+    if parked > 0 {
+        return 1.0;
+    }
+    pool_frac.max(queue_frac).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_controller_stays_flat() {
+        let mut c = PressureController::new(DegradeConfig::default());
+        assert_eq!(c.update(1.0), (0, 0));
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn escalates_immediately_and_descends_with_hysteresis() {
+        let mut c = PressureController::new(DegradeConfig::enabled());
+        assert_eq!(c.update(0.50), (0, 0));
+        assert_eq!(c.update(0.72), (0, 1));
+        // straight to L3 in one step when the signal spikes
+        assert_eq!(c.update(0.99), (1, 3));
+        // just under the L3 threshold: hysteresis holds the level
+        assert_eq!(c.update(0.90), (3, 3));
+        // clears l3 - hysteresis (0.85) but not l2 - hysteresis (0.75):
+        // one step down, then held
+        assert_eq!(c.update(0.80), (3, 2));
+        assert_eq!(c.update(0.80), (2, 2));
+        // calm signal walks the rest of the way down in one update
+        assert_eq!(c.update(0.10), (2, 0));
+    }
+
+    #[test]
+    fn same_trace_same_transitions() {
+        let trace = [0.2, 0.9, 0.97, 0.6, 0.3, 0.96, 0.1];
+        let run = |mut c: PressureController| {
+            trace.iter().map(|&p| c.update(p)).collect::<Vec<_>>()
+        };
+        let a = run(PressureController::new(DegradeConfig::enabled()));
+        let b = run(PressureController::new(DegradeConfig::enabled()));
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&(o, n)| n > o), "trace escalates");
+        assert!(a.iter().any(|&(o, n)| n < o), "trace recovers");
+    }
+
+    #[test]
+    fn pressure_signal_saturates_on_parked() {
+        assert_eq!(pressure_signal(0.2, 0.1, 0), 0.2);
+        assert_eq!(pressure_signal(0.1, 0.4, 0), 0.4);
+        assert_eq!(pressure_signal(0.0, 0.0, 1), 1.0);
+        assert_eq!(pressure_signal(2.0, 0.0, 0), 1.0);
+    }
+}

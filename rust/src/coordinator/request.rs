@@ -26,6 +26,61 @@ impl Default for SamplingParams {
     }
 }
 
+/// Priority class of a request. Lower [`Priority::index`] = more
+/// important. Admission orders by class (with anti-starvation aging in
+/// the batcher) and, under pool or slot exhaustion, the coordinator
+/// preempts the lowest class first — never a class above the candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive traffic; preempted last, shed last.
+    Interactive,
+    /// Default class for traffic that does not declare one.
+    #[default]
+    Standard,
+    /// Throughput traffic; first to be preempted, degraded or shed.
+    Batch,
+}
+
+/// Number of priority classes ([`Priority::index`] is `0..N_CLASSES`).
+pub const N_CLASSES: usize = 3;
+
+impl Priority {
+    /// Dense index for per-class metric arrays (0 = most important).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Priority {
+        match i {
+            0 => Priority::Interactive,
+            1 => Priority::Standard,
+            _ => Priority::Batch,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse the wire name (`/v1/generate`'s optional `priority` field).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "standard" => Some(Priority::Standard),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct GenRequest {
     pub id: u64,
@@ -34,6 +89,8 @@ pub struct GenRequest {
     pub params: SamplingParams,
     /// EOS byte (generation stops when sampled); None = run to budget.
     pub stop_token: Option<u32>,
+    /// Priority class: admission order, preemption order, shed order.
+    pub class: Priority,
     pub arrived: Instant,
 }
 
@@ -45,8 +102,15 @@ impl GenRequest {
             max_new_tokens,
             params: SamplingParams::default(),
             stop_token: None,
+            class: Priority::default(),
             arrived: Instant::now(),
         }
+    }
+
+    /// Builder: set the priority class.
+    pub fn with_class(mut self, class: Priority) -> GenRequest {
+        self.class = class;
+        self
     }
 }
 
@@ -103,6 +167,20 @@ impl GenResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn priority_round_trips() {
+        for i in 0..N_CLASSES {
+            let p = Priority::from_index(i);
+            assert_eq!(p.index(), i);
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::parse("vip"), None);
+        assert_eq!(Priority::default(), Priority::Standard);
+        assert!(Priority::Interactive < Priority::Batch);
+        let r = GenRequest::new(1, vec![1], 4).with_class(Priority::Batch);
+        assert_eq!(r.class, Priority::Batch);
+    }
 
     #[test]
     fn response_tps() {

@@ -30,19 +30,42 @@
 //! snapshots the pool's counters into [`ServeMetrics::kv_pool`] —
 //! admission accounting is **pages in use**, the bytes sequences
 //! actually occupy, not the `max_seq`-capacity figure dense caches
-//! would report. A request that cannot get pages (pool exhausted even
-//! after prefix-cache eviction) is shed with a terminal `Error` event
-//! rather than aborting the loop.
+//! would report.
+//!
+//! Overload tier (continuous mode, preemptible backends): exhaustion no
+//! longer sheds first. A request that cannot get pages — at prefill or
+//! mid-decode — **preempts** the lowest strictly-lower-priority
+//! occupant instead: the victim's full engine state (target KV, draft
+//! mirror, catch-up tokens, K controller) swaps out bit-exactly to a
+//! host-side parking buffer ([`super::backend::ParkedSlot`]), its pages
+//! return to the pool, and it resumes through [`Backend::swap_in`] when
+//! capacity frees — continuing its stream exactly where it stopped. A
+//! starved mid-decode slot likewise suspends rather than dying.
+//! Shedding remains only for requests that can never fit (or queue
+//! overflow), always with a terminal `Error` event rather than aborting
+//! the loop. Stacked on top, a hysteretic pressure controller
+//! ([`super::overload`]) degrades decode under load: speculative-K
+//! caps, the bare quantized branch, and per-slot lower-bit shadow
+//! routing — every transition counted per priority class in
+//! [`ServeMetrics::classes`].
 
-use super::backend::{validate_batch, validate_request, Backend, BatchState, SlotToken, SpecSlot};
-use super::batcher::{Batcher, BatcherConfig};
+use super::backend::{
+    validate_batch, validate_request, Backend, BatchState, ParkedSlot, SlotToken, SpecSlot,
+};
+use super::batcher::{effective_class, Batcher, BatcherConfig, Submitted};
 use super::metrics::ServeMetrics;
-use super::request::{GenEvent, GenRequest, GenResponse};
+use super::overload::{pressure_signal, DegradeConfig, PressureController};
+use super::request::{GenEvent, GenRequest, GenResponse, Priority};
 use super::sampler::Sampler;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// Consecutive park/resume round-trips a request may make without
+/// committing a single new token before it is declared unable to fit
+/// and shed (prevents a swap-in/starve/swap-out livelock).
+const MAX_STALLS: u32 = 3;
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -54,11 +77,18 @@ pub struct CoordinatorConfig {
     /// (non-continuous) groups are sized by the batcher's compiled batch
     /// sizes instead.
     pub slots: usize,
+    /// Load-adaptive degradation thresholds (disabled by default).
+    pub degrade: DegradeConfig,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { batcher: BatcherConfig::default(), continuous: true, slots: 0 }
+        CoordinatorConfig {
+            batcher: BatcherConfig::default(),
+            continuous: true,
+            slots: 0,
+            degrade: DegradeConfig::default(),
+        }
     }
 }
 
@@ -72,6 +102,32 @@ struct Active {
     prefill_done: Instant,
     /// when the previous token event was emitted (inter-token latency)
     last_token_at: Option<Instant>,
+    /// consecutive preemptions without a new committed token
+    stalls: u32,
+    /// output length at the previous preemption (`usize::MAX` = never
+    /// preempted, so the first park can't count as a stall)
+    parked_len: usize,
+    /// `current` was committed and emitted before a mid-decode
+    /// preemption: the next step must only re-feed it to the engine,
+    /// not emit it a second time
+    refeed: bool,
+}
+
+/// A preempted request: its scheduling state plus the host-side parking
+/// buffer holding its engine state. Holds no slot and no pool pages —
+/// that is the point — and restores both exactly via
+/// [`Backend::swap_in`] when capacity frees up.
+struct ParkedReq {
+    active: Active,
+    kv: ParkedSlot,
+}
+
+/// What `peek_candidate` nominated for the next free slot.
+enum Cand {
+    /// `parked[i]` — resume a preempted request
+    Parked(usize),
+    /// the batcher's best queued request
+    Queued,
 }
 
 /// The scheduling core shared by the closed loop and the spawned worker:
@@ -84,8 +140,16 @@ struct ServeLoop<'a> {
     max_wait: Duration,
     state: BatchState,
     slots: Vec<Option<Active>>,
+    /// preempted requests awaiting swap-in (unordered; admission picks
+    /// by effective class, FIFO within a class)
+    parked: Vec<ParkedReq>,
     batcher: Batcher,
     sampler: Sampler,
+    /// load-adaptive degradation state machine (level 0 when disabled)
+    pressure: PressureController,
+    degrade: DegradeConfig,
+    age_after: Duration,
+    max_queue: usize,
     metrics: ServeMetrics,
     sinks: HashMap<u64, mpsc::Sender<GenEvent>>,
     /// in-flight ids whose sink dropped mid-stream (client disconnect),
@@ -121,8 +185,13 @@ impl<'a> ServeLoop<'a> {
             max_wait: cfg.batcher.max_wait,
             state,
             slots,
+            parked: Vec::new(),
             batcher: Batcher::new(cfg.batcher.clone()),
             sampler: Sampler::new(0xfb90),
+            pressure: PressureController::new(cfg.degrade.clone()),
+            degrade: cfg.degrade.clone(),
+            age_after: cfg.batcher.age_after,
+            max_queue: cfg.batcher.max_queue,
             metrics,
             sinks: HashMap::new(),
             cancelled: Vec::new(),
@@ -136,7 +205,7 @@ impl<'a> ServeLoop<'a> {
     }
 
     fn idle(&self) -> bool {
-        self.occupied() == 0 && self.batcher.is_empty()
+        self.occupied() == 0 && self.batcher.is_empty() && self.parked.is_empty()
     }
 
     /// Deliver an event to its request's sink (if any); terminal events
@@ -176,6 +245,13 @@ impl<'a> ServeLoop<'a> {
             return Ok(());
         }
         for id in std::mem::take(&mut self.cancelled) {
+            // a parked request's buffer is host memory only: drop it
+            if let Some(pi) = self.parked.iter().position(|p| p.active.req.id == id) {
+                self.parked.swap_remove(pi);
+                self.metrics.parked = self.parked.len();
+                self.metrics.cancellations += 1;
+                continue;
+            }
             let slot =
                 self.slots.iter().position(|s| s.as_ref().is_some_and(|a| a.req.id == id));
             // a request can finish (stop token, budget) between the failed
@@ -197,6 +273,7 @@ impl<'a> ServeLoop<'a> {
     /// terminal `Error` — the sink never leaks) and returns `Ok(false)`.
     fn submit(&mut self, req: GenRequest, sink: Option<mpsc::Sender<GenEvent>>) -> Result<bool> {
         self.metrics.requests_in += 1;
+        self.metrics.class(req.class).submitted += 1;
         let id = req.id;
         if let Some(s) = sink {
             // a duplicate in-flight id would overwrite the first stream's
@@ -205,6 +282,7 @@ impl<'a> ServeLoop<'a> {
             // reusing explicit ids)
             if self.sinks.contains_key(&id) {
                 self.metrics.requests_shed += 1;
+                self.metrics.class(req.class).shed += 1;
                 let _ = s.send(GenEvent::Error {
                     id,
                     message: format!("request id {id} is already in flight"),
@@ -215,6 +293,7 @@ impl<'a> ServeLoop<'a> {
         }
         if let Err(e) = validate_request(self.backend.cfg(), &req) {
             self.metrics.requests_shed += 1;
+            self.metrics.class(req.class).shed += 1;
             if self.collect {
                 // closed loop: nobody watches an event stream — surface
                 // the rejection to the caller
@@ -223,12 +302,29 @@ impl<'a> ServeLoop<'a> {
             self.emit(GenEvent::Error { id, message: e.to_string() });
             return Ok(true); // rejected, but handled — not an overload signal
         }
-        if !self.batcher.submit(req) {
-            self.metrics.requests_shed += 1;
-            self.emit(GenEvent::Error { id, message: "admission queue full: request shed".into() });
-            return Ok(false);
+        match self.batcher.submit(req) {
+            Submitted::Queued { displaced: Some(d) } => {
+                // a full queue made room by pushing out its youngest
+                // strictly-lower-class entry; that one sheds instead
+                self.metrics.requests_shed += 1;
+                self.metrics.class(d.class).shed += 1;
+                self.emit(GenEvent::Error {
+                    id: d.id,
+                    message: "displaced by a higher-priority arrival: request shed".into(),
+                });
+                Ok(true)
+            }
+            Submitted::Queued { displaced: None } => Ok(true),
+            Submitted::Shed(r) => {
+                self.metrics.requests_shed += 1;
+                self.metrics.class(r.class).shed += 1;
+                self.emit(GenEvent::Error {
+                    id,
+                    message: "admission queue full: request shed".into(),
+                });
+                Ok(false)
+            }
         }
-        Ok(true)
     }
 
     /// Fold the backend's KV-pool counters (if any) into the metrics.
@@ -246,6 +342,7 @@ impl<'a> ServeLoop<'a> {
         let total_us = a.req.arrived.elapsed().as_secs_f64() * 1e6;
         self.metrics.e2e.record_us(total_us);
         self.metrics.requests_done += 1;
+        self.metrics.class(a.req.class).done += 1;
         Ok(GenEvent::Done(GenResponse {
             id: a.req.id,
             prompt_len: a.req.prompt.len(),
@@ -268,6 +365,7 @@ impl<'a> ServeLoop<'a> {
             self.metrics.ttft.record_us(total_us);
             self.metrics.e2e.record_us(total_us);
             self.metrics.requests_done += 1;
+            self.metrics.class(req.class).done += 1;
             self.emit(GenEvent::Done(GenResponse {
                 id: req.id,
                 prompt_len: req.prompt.len(),
@@ -286,38 +384,252 @@ impl<'a> ServeLoop<'a> {
             ttft_us: None,
             prefill_done: Instant::now(),
             last_token_at: None,
+            stalls: 0,
+            parked_len: usize::MAX,
+            refeed: false,
         });
         Ok(())
+    }
+
+    /// Preempt `slot`: swap its full engine state out to a host parking
+    /// buffer (pages return to the pool) and queue it for resume. Should
+    /// the swap itself fail (non-preemptible backend reached this path)
+    /// the request sheds with a terminal error — never silently lost.
+    fn park_slot(&mut self, slot: usize) -> Result<()> {
+        let mut a = self.slots[slot].take().expect("park of an empty slot");
+        match self.backend.swap_out(&mut self.state, slot) {
+            Ok(kv) => {
+                if a.parked_len == a.output.len() {
+                    // resumed and preempted again without committing a
+                    // token: starving, not just unlucky
+                    a.stalls += 1;
+                } else {
+                    a.stalls = 0;
+                }
+                a.parked_len = a.output.len();
+                self.metrics.swapped_bytes += kv.bytes() as u64;
+                self.metrics.class(a.req.class).preemptions += 1;
+                self.parked.push(ParkedReq { active: a, kv });
+                self.metrics.parked = self.parked.len();
+            }
+            Err(e) => {
+                self.backend.release_slot(&mut self.state, slot)?;
+                self.metrics.requests_shed += 1;
+                self.metrics.class(a.req.class).shed += 1;
+                self.emit(GenEvent::Error {
+                    id: a.req.id,
+                    message: format!("preemption failed ({e:#}): request shed"),
+                });
+            }
+        }
+        self.snapshot_kv();
+        Ok(())
+    }
+
+    /// Occupied slot to preempt in favour of a `class` candidate: the
+    /// youngest occupant of the worst **declared** class strictly below
+    /// the candidate's. Declared (not aged) classes on both sides keep
+    /// the relation antisymmetric — an aged batch request may be
+    /// *admitted* like an interactive one but can never evict one, so
+    /// two requests can't take turns preempting each other.
+    fn preempt_victim(&self, class: Priority) -> Option<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|a| (i, a)))
+            .filter(|(_, a)| a.req.class > class)
+            .max_by_key(|&(_, a)| (a.req.class, a.prefill_done))
+            .map(|(i, _)| i)
+    }
+
+    /// Swap `parked[idx]` back into the free `slot`, restoring its KV
+    /// (and draft mirror) bit-exactly. Returns whether admission made
+    /// progress: a failed swap-in with other work still holding pages
+    /// puts the buffer back and pauses admission (`false`); a failed
+    /// swap-in with the pool otherwise EMPTY can never succeed, so the
+    /// request sheds (`true` — the parked entry is gone).
+    fn resume_parked(&mut self, idx: usize, slot: usize) -> Result<bool> {
+        let pr = self.parked.swap_remove(idx);
+        match self.backend.swap_in(&mut self.state, slot, &pr.kv) {
+            Ok(()) => {
+                self.metrics.class(pr.active.req.class).resumes += 1;
+                self.slots[slot] = Some(pr.active);
+                self.metrics.parked = self.parked.len();
+                self.snapshot_kv();
+                Ok(true)
+            }
+            Err(e) => {
+                if self.occupied() == 0 {
+                    self.metrics.requests_shed += 1;
+                    self.metrics.class(pr.active.req.class).shed += 1;
+                    self.emit(GenEvent::Error {
+                        id: pr.active.req.id,
+                        message: format!("resume after preemption failed ({e:#}): request shed"),
+                    });
+                } else {
+                    self.parked.push(pr);
+                }
+                self.metrics.parked = self.parked.len();
+                Ok(self.occupied() == 0)
+            }
+        }
+    }
+
+    /// Nominate the next admission: the best of the parked set and the
+    /// batcher's queue by (effective class, arrival), parked winning
+    /// ties — a preempted request already paid its queue wait once.
+    /// Returns the candidate and its **declared** class (the preemption
+    /// currency).
+    fn peek_candidate(&self, now: Instant) -> Option<(Cand, Priority)> {
+        let queued = self
+            .batcher
+            .peek_ready(now)
+            .map(|r| (effective_class(self.age_after, r, now), r.arrived, r.class));
+        let parked = self
+            .parked
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let r = &p.active.req;
+                (i, effective_class(self.age_after, r, now), r.arrived, r.class)
+            })
+            .min_by_key(|&(_, ec, arrived, _)| (ec, arrived));
+        match (parked, queued) {
+            (None, None) => None,
+            (Some((i, _, _, c)), None) => Some((Cand::Parked(i), c)),
+            (None, Some((_, _, c))) => Some((Cand::Queued, c)),
+            (Some((i, pec, parr, pc)), Some((qec, qarr, qc))) => {
+                if (pec, parr) <= (qec, qarr) {
+                    Some((Cand::Parked(i), pc))
+                } else {
+                    Some((Cand::Queued, qc))
+                }
+            }
+        }
+    }
+
+    /// Prefill `req` into the free `slot`. Under pool exhaustion, a
+    /// preemptible backend makes room by parking strictly-lower-class
+    /// occupants (worst class first) and retrying; only when no such
+    /// victim remains does the request shed.
+    fn admit_prefill(&mut self, slot: usize, req: GenRequest) -> Result<()> {
+        let wait_us = req.arrived.elapsed().as_secs_f64() * 1e6;
+        let reused_before =
+            self.backend.kv_stats(&self.state).map_or(0, |s| s.prefix_tokens_reused);
+        let mut res = self.backend.prefill_slot(&mut self.state, slot, &req.prompt);
+        while res.is_err() && self.continuous && self.backend.preemptible() {
+            let Some(victim) = self.preempt_victim(req.class) else { break };
+            self.park_slot(victim)?;
+            res = self.backend.prefill_slot(&mut self.state, slot, &req.prompt);
+        }
+        match res {
+            Ok(logits) => {
+                // count engine-executed prefill work: positions served
+                // from the prefix cache were not prefilled
+                let reused = self
+                    .backend
+                    .kv_stats(&self.state)
+                    .map_or(0, |s| s.prefix_tokens_reused)
+                    .saturating_sub(reused_before);
+                self.place(slot, req, &logits, wait_us)?;
+                self.metrics.tokens_prefilled =
+                    self.metrics.tokens_prefilled.saturating_sub(reused);
+            }
+            Err(e) => {
+                self.metrics.requests_shed += 1;
+                self.metrics.class(req.class).shed += 1;
+                self.emit(GenEvent::Error { id: req.id, message: e.to_string() });
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive the degradation state machine with the current pressure
+    /// signal and apply whatever backend knob transitions the level
+    /// change demands (see [`super::overload`]). Runs once per
+    /// scheduling step; every transition is counted against the class of
+    /// each running request it touches.
+    fn apply_pressure(&mut self) {
+        if !self.degrade.enabled {
+            return;
+        }
+        let pool_frac = self.metrics.kv_pool.as_ref().map_or_else(
+            || self.occupied() as f64 / self.pool_capacity.max(1) as f64,
+            |p| p.pages_in_use as f64 / p.pages_total.max(1) as f64,
+        );
+        let queue_frac = self.batcher.len() as f64 / self.max_queue.max(1) as f64;
+        let p = pressure_signal(pool_frac, queue_frac, self.parked.len());
+        let (old, new) = self.pressure.update(p);
+        if new != old {
+            // global knobs at the L1/L2 boundaries (level 3 keeps both)
+            if new >= 1 && old < 1 {
+                self.backend.set_spec_k_cap(Some(self.degrade.k_cap));
+            } else if new < 1 && old >= 1 {
+                self.backend.set_spec_k_cap(None);
+            }
+            if new >= 2 && old < 2 {
+                self.backend.set_bare_branch(true);
+            } else if new < 2 && old >= 2 {
+                self.backend.set_bare_branch(false);
+            }
+            let levels = new.abs_diff(old) as usize;
+            for a in self.slots.iter().flatten() {
+                let c = &mut self.metrics.classes[a.req.class.index()];
+                if new > old {
+                    c.degrades += levels;
+                } else {
+                    c.restores += levels;
+                }
+            }
+        }
+        // L3 per-slot routing: send batch-class occupants through the
+        // lower-bit shadow engine (reconciled every step so admissions
+        // and releases during a sustained L3 episode are covered)
+        for i in 0..self.slots.len() {
+            let Some(a) = self.slots[i].as_ref() else { continue };
+            let class = a.req.class;
+            let want = new >= 3 && class == Priority::Batch;
+            if want != self.backend.slot_shadowed(i)
+                && self.backend.set_slot_shadow(i, want).is_ok()
+            {
+                let c = self.metrics.class(class);
+                if want {
+                    c.degrades += 1;
+                } else {
+                    c.restores += 1;
+                }
+            }
+        }
     }
 
     /// Admit queued requests into free slots. `now` drives the batcher's
     /// wait-timeout release on the aligned (non-continuous) path.
     fn admit(&mut self, now: Instant) -> Result<()> {
         if self.continuous {
-            while !self.batcher.is_empty() {
-                let Some(slot) = self.slots.iter().position(|s| s.is_none()) else { break };
-                let Some(req) = self.batcher.pop_ready() else { break };
-                let wait_us = req.arrived.elapsed().as_secs_f64() * 1e6;
-                let reused_before = self
-                    .backend
-                    .kv_stats(&self.state)
-                    .map_or(0, |s| s.prefix_tokens_reused);
-                match self.backend.prefill_slot(&mut self.state, slot, &req.prompt) {
-                    Ok(logits) => {
-                        // count engine-executed prefill work: positions
-                        // served from the prefix cache were not prefilled
-                        let reused = self
-                            .backend
-                            .kv_stats(&self.state)
-                            .map_or(0, |s| s.prefix_tokens_reused)
-                            .saturating_sub(reused_before);
-                        self.place(slot, req, &logits, wait_us)?;
-                        self.metrics.tokens_prefilled =
-                            self.metrics.tokens_prefilled.saturating_sub(reused);
+            loop {
+                let Some((cand, class)) = self.peek_candidate(now) else { break };
+                // a free slot, or one vacated by preempting a strictly
+                // lower-priority occupant on the candidate's behalf
+                let slot = match self.slots.iter().position(|s| s.is_none()) {
+                    Some(s) => s,
+                    None => {
+                        if !self.backend.preemptible() {
+                            break;
+                        }
+                        let Some(victim) = self.preempt_victim(class) else { break };
+                        self.park_slot(victim)?;
+                        victim
                     }
-                    Err(e) => {
-                        self.metrics.requests_shed += 1;
-                        self.emit(GenEvent::Error { id: req.id, message: e.to_string() });
+                };
+                match cand {
+                    Cand::Parked(idx) => {
+                        if !self.resume_parked(idx, slot)? {
+                            break;
+                        }
+                    }
+                    Cand::Queued => {
+                        let Some(req) = self.batcher.pop_ready(now) else { break };
+                        self.admit_prefill(slot, req)?;
                     }
                 }
             }
@@ -365,38 +677,55 @@ impl<'a> ServeLoop<'a> {
     /// output). Returns false when no slot was occupied (nothing to do).
     fn step(&mut self) -> Result<bool> {
         let step_t0 = Instant::now();
+        self.apply_pressure();
         let spec_on = self.backend.speculative().is_some();
         let mut events: Vec<GenEvent> = Vec::new();
         let mut to_decode: Vec<SlotToken> = Vec::new();
         let mut to_spec: Vec<SpecSlot> = Vec::new();
+        let mut parked_this_step = false;
         for i in 0..self.slots.len() {
             let done = {
                 let Some(a) = self.slots[i].as_mut() else { continue };
-                a.output.push(a.current);
-                if a.ttft_us.is_none() {
-                    let us = a.req.arrived.elapsed().as_secs_f64() * 1e6;
-                    a.ttft_us = Some(us);
-                    self.metrics.ttft.record_us(us);
+                if a.refeed {
+                    // resumed after a mid-decode preemption: `current`
+                    // already went out on the stream; it only needs to be
+                    // fed through the engine again (its KV position was
+                    // never written). The done-check already ran false
+                    // before the park.
+                    a.refeed = false;
+                    false
+                } else {
+                    a.output.push(a.current);
+                    if a.ttft_us.is_none() {
+                        let us = a.req.arrived.elapsed().as_secs_f64() * 1e6;
+                        a.ttft_us = Some(us);
+                        self.metrics.ttft.record_us(us);
+                    }
+                    let now = Instant::now();
+                    if let Some(prev) = a.last_token_at {
+                        self.metrics.itl.record(now - prev);
+                    }
+                    a.last_token_at = Some(now);
+                    self.metrics.tokens_generated += 1;
+                    events.push(GenEvent::Token {
+                        id: a.req.id,
+                        index: a.output.len() - 1,
+                        token: a.current,
+                    });
+                    Some(a.current) == a.req.stop_token
+                        || a.output.len() >= a.req.max_new_tokens
                 }
-                let now = Instant::now();
-                if let Some(prev) = a.last_token_at {
-                    self.metrics.itl.record(now - prev);
-                }
-                a.last_token_at = Some(now);
-                self.metrics.tokens_generated += 1;
-                events.push(GenEvent::Token {
-                    id: a.req.id,
-                    index: a.output.len() - 1,
-                    token: a.current,
-                });
-                Some(a.current) == a.req.stop_token || a.output.len() >= a.req.max_new_tokens
             };
             if done {
                 events.push(self.finish_slot(i)?);
             } else {
                 // reserve what the slot needs for its next step; a slot
                 // that cannot advance (e.g. KV pool exhausted mid-decode)
-                // finishes with a terminal error — the loop keeps serving
+                // SUSPENDS — swaps out to the parking buffer, resuming
+                // when pages free — rather than dying. Only when parking
+                // cannot help (non-preemptible backend, nothing else
+                // holds capacity, or the slot keeps starving) does the
+                // request shed with a terminal error
                 match self.backend.prepare_decode(&mut self.state, i) {
                     Ok(()) => {
                         let a = self.slots[i].as_ref().expect("slot emptied mid-step");
@@ -416,15 +745,37 @@ impl<'a> ServeLoop<'a> {
                         }
                     }
                     Err(e) => {
-                        let a = self.slots[i].take().expect("slot emptied mid-step");
-                        self.backend.release_slot(&mut self.state, i)?;
-                        self.metrics.requests_shed += 1;
-                        events.push(GenEvent::Error { id: a.req.id, message: e.to_string() });
+                        let can_park = {
+                            let a = self.slots[i].as_ref().expect("slot emptied mid-step");
+                            self.continuous
+                                && self.backend.preemptible()
+                                && a.stalls < MAX_STALLS
+                                && (self.occupied() > 1
+                                    || !self.batcher.is_empty()
+                                    || !self.parked.is_empty())
+                        };
+                        if can_park {
+                            // the token committed above must not re-emit
+                            // when this request resumes — only re-feed
+                            if let Some(a) = self.slots[i].as_mut() {
+                                a.refeed = true;
+                            }
+                            self.park_slot(i)?;
+                            parked_this_step = true;
+                        } else {
+                            let a = self.slots[i].take().expect("slot emptied mid-step");
+                            self.backend.release_slot(&mut self.state, i)?;
+                            self.metrics.requests_shed += 1;
+                            self.metrics.class(a.req.class).shed += 1;
+                            events.push(GenEvent::Error { id: a.req.id, message: e.to_string() });
+                        }
                     }
                 }
             }
         }
-        let progressed = !events.is_empty();
+        // a park IS progress: it frees pages the next admission round
+        // turns into an admission, a resume, or a terminal shed
+        let progressed = !events.is_empty() || parked_this_step;
         for ev in events {
             self.emit(ev);
         }
@@ -510,8 +861,12 @@ impl<'a> ServeLoop<'a> {
         while !self.idle() {
             let now = Instant::now() + self.max_wait + Duration::from_millis(1);
             self.admit(now)?;
-            if !self.step()? && self.occupied() == 0 && !self.batcher.is_empty() {
-                anyhow::bail!("scheduler stalled with {} queued requests", self.batcher.len());
+            if !self.step()? && self.occupied() == 0 && !self.idle() {
+                anyhow::bail!(
+                    "scheduler stalled with {} queued and {} parked requests",
+                    self.batcher.len(),
+                    self.parked.len()
+                );
             }
         }
         // step() early-returns before its KV snapshot when the last slot

@@ -18,13 +18,19 @@
 //!   the paged KV pool's prefix cache,
 //! * **sampling mix** — a fraction of requests decode stochastically
 //!   (temperature sampling), the rest greedy; on a speculative backend
-//!   this splits traffic across both acceptance modes.
+//!   this splits traffic across both acceptance modes,
+//! * **priority mix + chaos plan** — requests draw a priority class from
+//!   [`WorkloadConfig::class_mix`] and a fraction of clients disconnect
+//!   mid-stream ([`WorkloadConfig::drop_frac`]), driving the overload
+//!   tier's preemption and cancellation paths. Both are drawn from an
+//!   **auxiliary** rng stream so that enabling them leaves the base
+//!   trace (prompts, lengths, arrivals) bit-identical per seed.
 //!
 //! Everything is deterministic per seed: the same config yields the same
 //! trace, so the in-process and HTTP-loopback harness modes (and any two
 //! commits) measure identical traffic.
 
-use super::request::{GenRequest, SamplingParams};
+use super::request::{GenRequest, Priority, SamplingParams, N_CLASSES};
 use crate::eval::data::TokenStream;
 use crate::util::Pcg64;
 use std::time::Duration;
@@ -80,6 +86,11 @@ pub struct ReqMeta {
     pub straggler: bool,
     /// stochastic (temperature) sampling instead of greedy
     pub sampled: bool,
+    /// priority class drawn from [`WorkloadConfig::class_mix`]
+    pub class: Priority,
+    /// chaos plan: the client disconnects after streaming this many
+    /// token events (None = well-behaved client)
+    pub drop_after: Option<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -105,6 +116,13 @@ pub struct WorkloadConfig {
     pub top_k: usize,
     /// synthetic token id space when no corpus stream is supplied
     pub vocab: u32,
+    /// priority-class weights, indexed by [`Priority::index`]
+    /// (normalised at draw time; all-standard by default). Drawn from an
+    /// auxiliary rng so enabling a mix does not perturb the base trace.
+    pub class_mix: [f64; N_CLASSES],
+    /// fraction of requests whose client disconnects mid-stream (the
+    /// chaos plan; also drawn from the auxiliary rng)
+    pub drop_frac: f64,
     pub seed: u64,
 }
 
@@ -125,6 +143,8 @@ impl Default for WorkloadConfig {
             temperature: 0.8,
             top_k: 8,
             vocab: 96,
+            class_mix: [0.0, 1.0, 0.0],
+            drop_frac: 0.0,
             seed: 7,
         }
     }
@@ -229,10 +249,29 @@ fn draw_tokens(rng: &mut Pcg64, corpus: Option<&TokenStream>, vocab: u32, len: u
     }
 }
 
+/// Draw a priority class from the normalised `class_mix` weights.
+fn draw_class(rng: &mut Pcg64, mix: &[f64; N_CLASSES]) -> Priority {
+    let total: f64 = mix.iter().map(|w| w.max(0.0)).sum();
+    if total <= 0.0 {
+        return Priority::default();
+    }
+    let mut x = rng.next_f64() * total;
+    for (i, w) in mix.iter().enumerate() {
+        x -= w.max(0.0);
+        if x < 0.0 {
+            return Priority::from_index(i);
+        }
+    }
+    Priority::from_index(N_CLASSES - 1)
+}
+
 /// Generate a seeded trace. `corpus` supplies prompt bytes when present
 /// (the held-out eval stream); synthetic ids below `cfg.vocab` otherwise.
 pub fn generate(cfg: &WorkloadConfig, corpus: Option<&TokenStream>) -> Workload {
     let mut rng = Pcg64::seeded(cfg.seed);
+    // class/chaos draws come from their own stream so flipping them on
+    // cannot shift the base trace's prompts, lengths or arrivals
+    let mut aux = Pcg64::seeded(cfg.seed ^ 0x6f76_6572_6c6f_6164);
     let templates: Vec<Vec<u32>> = (0..cfg.n_templates)
         .map(|_| draw_tokens(&mut rng, corpus, cfg.vocab, cfg.template_len))
         .collect();
@@ -268,10 +307,16 @@ pub fn generate(cfg: &WorkloadConfig, corpus: Option<&TokenStream>) -> Workload 
                 ..SamplingParams::default()
             };
         }
+        let class = draw_class(&mut aux, &cfg.class_mix);
+        req.class = class;
+        // the roll is unconditional so changing `drop_frac` re-labels
+        // requests without reshuffling the class draws above
+        let drop_roll = aux.next_f64();
+        let drop_after = (drop_roll < cfg.drop_frac).then(|| aux.below(output.max(1)));
         t += Duration::from_secs_f64(next_arrival(&mut rng, &cfg.arrival, &mut burst));
         requests.push(req);
         arrivals.push(t);
-        meta.push(ReqMeta { template, straggler, sampled });
+        meta.push(ReqMeta { template, straggler, sampled, class, drop_after });
     }
     Workload { requests, arrivals, meta, templates }
 }

@@ -241,6 +241,74 @@ impl KvSlot for KvCache {
 }
 
 // ---------------------------------------------------------------------------
+// Parking buffer (preemption swap-out/swap-in)
+// ---------------------------------------------------------------------------
+
+/// Host-side parking buffer for a preempted slot: a bit-exact copy of
+/// the committed positions `0..len`, detached from any backing store.
+///
+/// Produced by [`KvCache::park`] / [`KvPagePool::park_kv`] and restored
+/// by [`KvCache::unpark`] / [`KvPagePool::unpark_kv`]. Parking a paged
+/// view releases its pages back to the pool (that is the point:
+/// swap-out frees the memory a higher-class admission needs); restoring
+/// maps fresh private pages and writes the exact same values back, so a
+/// resumed slot decodes bit-identically to one that was never parked.
+#[derive(Debug, Clone)]
+pub struct ParkedKv {
+    len: usize,
+    /// `n_heads * head_dim` (row width, for geometry checks on restore)
+    stride: usize,
+    /// per-layer `[len * stride]` rows
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl ParkedKv {
+    /// Committed positions held by this parking buffer.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Host bytes held while parked (swap accounting).
+    pub fn bytes(&self) -> usize {
+        2 * 4 * self.k.len() * self.len * self.stride
+    }
+}
+
+impl KvCache {
+    /// Copy the committed positions `0..len` into a [`ParkedKv`]. The
+    /// dense cache keeps its allocation (capacity is the dense cost
+    /// model), so parking here exists for exactness parity with the
+    /// paged path, not to free memory.
+    pub fn park(&self) -> ParkedKv {
+        let stride = self.n_heads * self.head_dim;
+        let take = |side: &[Vec<f32>]| -> Vec<Vec<f32>> {
+            side.iter().map(|l| l[..self.len * stride].to_vec()).collect()
+        };
+        ParkedKv { len: self.len, stride, k: take(&self.k), v: take(&self.v) }
+    }
+
+    /// Restore a parked slot: write the saved rows back over positions
+    /// `0..parked.len` and set the committed length. The cache must
+    /// have the same geometry it was parked from.
+    pub fn unpark(&mut self, parked: &ParkedKv) {
+        let stride = self.n_heads * self.head_dim;
+        assert_eq!(parked.stride, stride, "unpark into a different geometry");
+        assert_eq!(parked.k.len(), self.n_layers, "unpark layer mismatch");
+        assert!(parked.len <= self.max_seq, "parked slot exceeds max_seq");
+        for l in 0..self.n_layers {
+            self.k[l][..parked.len * stride].copy_from_slice(&parked.k[l]);
+            self.v[l][..parked.len * stride].copy_from_slice(&parked.v[l]);
+        }
+        self.len = parked.len;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Paged pool
 // ---------------------------------------------------------------------------
 
@@ -660,6 +728,54 @@ impl KvPagePool {
             }
         }
     }
+
+    /// Swap a slot out: copy its committed positions `0..len` into a
+    /// host-side [`ParkedKv`] and release every page reference (shared
+    /// prefix pages just drop one ref; private pages return to the free
+    /// list). The view is left empty and reusable.
+    pub fn park_kv(&mut self, kv: &mut PagedKv) -> ParkedKv {
+        let stride = self.cfg.n_heads * self.cfg.head_dim;
+        let mut k = vec![vec![0f32; kv.len * stride]; self.cfg.n_layers];
+        let mut v = vec![vec![0f32; kv.len * stride]; self.cfg.n_layers];
+        for l in 0..self.cfg.n_layers {
+            for pos in 0..kv.len {
+                let off = paged_offset(&self.cfg, &kv.pages, l, pos, 0);
+                k[l][pos * stride..(pos + 1) * stride]
+                    .copy_from_slice(&self.k[off..off + stride]);
+                v[l][pos * stride..(pos + 1) * stride]
+                    .copy_from_slice(&self.v[off..off + stride]);
+            }
+        }
+        let parked = ParkedKv { len: kv.len, stride, k, v };
+        self.release_kv(kv);
+        parked
+    }
+
+    /// Swap a parked slot back in: map fresh private pages for
+    /// `0..parked.len` and write the saved values back, yielding a view
+    /// that decodes bit-identically to the one that was parked. No
+    /// prefix adoption happens here — the restored pages carry the
+    /// exact parked values by construction. Errors (leaving the pool
+    /// untouched) when the pool cannot supply the pages; the caller
+    /// keeps the parking buffer and retries later.
+    pub fn unpark_kv(&mut self, parked: &ParkedKv, max_seq: usize) -> Result<PagedKv> {
+        let stride = self.cfg.n_heads * self.cfg.head_dim;
+        assert_eq!(parked.stride, stride, "unpark into a different geometry");
+        assert_eq!(parked.k.len(), self.cfg.n_layers, "unpark layer mismatch");
+        let mut kv = self.new_kv(max_seq);
+        if let Err(e) = self.ensure_range(&mut kv, 0, parked.len) {
+            self.release_kv(&mut kv);
+            return Err(e);
+        }
+        for l in 0..self.cfg.n_layers {
+            for pos in 0..parked.len {
+                let row = pos * stride..(pos + 1) * stride;
+                paged_write(self, &kv, l, pos, &parked.k[l][row.clone()], &parked.v[l][row]);
+            }
+        }
+        kv.len = parked.len;
+        Ok(kv)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1048,6 +1164,80 @@ mod tests {
         pool.truncate_kv(&mut kv, 3);
         assert_eq!(kv.n_pages(), 2);
         assert_eq!(pool.pages_in_use(), 2);
+    }
+
+    #[test]
+    fn dense_park_unpark_roundtrip() {
+        let mut kv = KvCache::new(2, 8, 1, 2);
+        for pos in 0..5 {
+            kv.write(0, pos, &[pos as f32, 1.0], &[2.0, pos as f32]);
+            kv.write(1, pos, &[-(pos as f32), 3.0], &[4.0, -(pos as f32)]);
+            kv.advance(1);
+        }
+        let parked = kv.park();
+        assert_eq!(parked.len(), 5);
+        assert!(parked.bytes() > 0);
+        let mut fresh = KvCache::new(2, 8, 1, 2);
+        fresh.unpark(&parked);
+        assert_eq!(fresh.len, 5);
+        for pos in 0..5 {
+            assert_eq!(fresh.k_at(0, pos, 0), kv.k_at(0, pos, 0));
+            assert_eq!(fresh.v_at(1, pos, 0), kv.v_at(1, pos, 0));
+        }
+    }
+
+    #[test]
+    fn paged_park_frees_pages_and_unpark_restores_bits() {
+        let mut pool = KvPagePool::new(KvPoolConfig::new(2, 1, 2, 4, 8));
+        let mut kv = pool.new_kv(32);
+        pool.ensure_range(&mut kv, 0, 10).unwrap();
+        for l in 0..2 {
+            for pos in 0..10 {
+                let t = (l * 100 + pos) as f32;
+                paged_write(&mut pool, &kv, l, pos, &[t, t + 0.5], &[-t, t - 0.5]);
+            }
+        }
+        kv.len = 10;
+        assert_eq!(pool.pages_in_use(), 3);
+        let parked = pool.park_kv(&mut kv);
+        assert_eq!(parked.len(), 10);
+        assert_eq!(pool.pages_in_use(), 0, "park releases every page");
+        assert_eq!(kv.len(), 0);
+        let mut restored = pool.unpark_kv(&parked, 32).unwrap();
+        assert_eq!(restored.len(), 10);
+        assert_eq!(pool.pages_in_use(), 3);
+        let slot = PagedKvRef { pool: &mut pool, kv: &mut restored };
+        for pos in 0..10 {
+            let t = (100 + pos) as f32;
+            assert_eq!(slot.k_at(1, pos, 0), &[t, t + 0.5]);
+            assert_eq!(slot.v_at(1, pos, 0), &[-t, t - 0.5]);
+        }
+    }
+
+    #[test]
+    fn paged_park_drops_shared_refs_and_unpark_fails_clean_when_exhausted() {
+        // a parked slot that adopted a cached prefix must only drop its
+        // own reference; the cached pages stay for other admissions
+        let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 2, 4));
+        let prompt: Vec<u32> = vec![7, 8, 9, 10];
+        let mut kv = pool.new_kv(8);
+        pool.ensure_range(&mut kv, 0, 4).unwrap();
+        kv.len = 4;
+        pool.register_prefix(&kv, &prompt);
+        let shared = kv.page_ids().to_vec();
+        let _parked = pool.park_kv(&mut kv);
+        for &p in &shared {
+            assert_eq!(pool.page_refcount(p), 1, "prefix cache keeps its ref");
+        }
+        // exhaust the pool (the prefix cache is evictable, so claim
+        // every page with refcounted views)
+        let mut hog = pool.new_kv(32);
+        pool.ensure_range(&mut hog, 0, 8).unwrap();
+        assert_eq!(pool.free_pages(), 0);
+        let big = ParkedKv { len: 6, stride: 2, k: vec![vec![0.0; 12]], v: vec![vec![0.0; 12]] };
+        let before = pool.pages_in_use();
+        assert!(pool.unpark_kv(&big, 8).is_err());
+        assert_eq!(pool.pages_in_use(), before, "failed unpark leaks nothing");
     }
 
     #[test]

@@ -5,6 +5,8 @@ use super::ppl::{perplexity, PplConfig};
 use super::scorer::{NativeScorer, PjrtScorer, Scorer};
 use super::zeroshot::eval_suite;
 use crate::coordinator::backend::{Backend, NativeBackend, PjrtBackend};
+use crate::coordinator::overload::DegradeConfig;
+use crate::coordinator::request::N_CLASSES;
 use crate::coordinator::server::{Coordinator, CoordinatorConfig, CoordinatorHandle};
 use crate::coordinator::workload::{self, Arrival, Workload, WorkloadConfig};
 use crate::engine::{NativeEngine, SubMode};
@@ -15,6 +17,9 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn artifacts() -> PathBuf {
     crate::artifacts_dir()
@@ -204,7 +209,16 @@ fn spawn_coordinator(args: &Args) -> Result<(CoordinatorHandle, usize)> {
     // runs per-lane surfaces when continuous (the lock-step artifacts
     // cannot admit mid-flight)
     let continuous = !args.flag("sync");
-    let cfg = CoordinatorConfig { continuous, ..CoordinatorConfig::default() };
+    let mut cfg = CoordinatorConfig { continuous, ..CoordinatorConfig::default() };
+    if args.flag("degrade") {
+        // load-adaptive degradation (spec-K cap / bare branch / shadow
+        // engine) — off unless asked for, thresholds at their defaults
+        cfg.degrade = DegradeConfig { enabled: true, ..DegradeConfig::default() };
+    }
+    // --pages shrinks the target KV pool (overload / preemption
+    // experiments); 0 keeps the backend's own sizing
+    let pages = args.get_usize("pages", 0)?;
+    let page_size = args.get_usize("page-size", 16)?;
     let submode = parse_submode(args);
     if args.flag("synth") {
         let spec = crate::testing::SynthSpec {
@@ -216,10 +230,14 @@ fn spawn_coordinator(args: &Args) -> Result<(CoordinatorHandle, usize)> {
         let max_seq = store.cfg.max_seq;
         let handle = Coordinator::spawn(
             move || -> Result<Box<dyn Backend>> {
-                Ok(Box::new(NativeBackend::new(
+                let mut be = NativeBackend::new(
                     NativeEngine::from_store(&store, submode)?,
                     "serve-synth",
-                )))
+                );
+                if pages > 0 {
+                    be = be.with_kv_pool(page_size, pages);
+                }
+                Ok(Box::new(be))
             },
             cfg,
         );
@@ -239,10 +257,16 @@ fn spawn_coordinator(args: &Args) -> Result<(CoordinatorHandle, usize)> {
                             .with_per_lane(continuous),
                     )
                 }
-                _ => Box::new(NativeBackend::new(
-                    NativeEngine::from_store(&store, submode)?,
-                    &store.cfg.name,
-                )),
+                _ => {
+                    let mut be = NativeBackend::new(
+                        NativeEngine::from_store(&store, submode)?,
+                        &store.cfg.name,
+                    );
+                    if pages > 0 {
+                        be = be.with_kv_pool(page_size, pages);
+                    }
+                    Box::new(be)
+                }
             })
         },
         cfg,
@@ -265,10 +289,26 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         "  curl -N -X POST http://{addr}/v1/generate \\\n       \
          -d '{{\"prompt\":[61,32,115,101,97,32,61],\"max_new_tokens\":24}}'"
     );
-    println!("reading stdin; EOF (Ctrl-D) shuts down gracefully");
-    let mut line = String::new();
-    while std::io::stdin().read_line(&mut line)? > 0 {
-        line.clear();
+    println!("stdin EOF (Ctrl-D) or POST /admin/shutdown (loopback) shuts down gracefully");
+    // stdin is watched from a side thread so the main loop can also poll
+    // the /admin/shutdown flag — EOF alone used to be the only way out,
+    // which headless callers (no tty, piped stdin held open) cannot send
+    let eof = Arc::new(AtomicBool::new(false));
+    {
+        let eof = eof.clone();
+        std::thread::spawn(move || {
+            let mut line = String::new();
+            loop {
+                match std::io::stdin().read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => line.clear(),
+                }
+            }
+            eof.store(true, Ordering::SeqCst);
+        });
+    }
+    while !eof.load(Ordering::SeqCst) && !server.shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(50));
     }
     let metrics = server.shutdown()?;
     println!("{}", metrics.report());
@@ -298,9 +338,30 @@ fn trace_json(cfg: &WorkloadConfig, wl: &Workload) -> Json {
         ("template_frac", cfg.template_frac.into()),
         ("sampled_frac", cfg.sampled_frac.into()),
         ("straggler_frac", cfg.straggler_frac.into()),
+        ("class_mix", Json::Arr(cfg.class_mix.iter().map(|&w| Json::Num(w)).collect())),
+        ("drop_frac", cfg.drop_frac.into()),
         ("total_output_budget", wl.total_output_budget().into()),
         ("max_seq_needed", wl.max_seq().into()),
     ])
+}
+
+/// Parse `--class-mix i,s,b` — the interactive/standard/batch arrival
+/// weights for the workload generator.
+fn parse_class_mix(args: &Args) -> Result<[f64; N_CLASSES]> {
+    let Some(s) = args.get("class-mix") else {
+        return Ok(WorkloadConfig::default().class_mix);
+    };
+    let parts: Vec<f64> = s
+        .split(',')
+        .map(|p| p.trim().parse::<f64>())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("--class-mix expects comma-separated weights, got '{s}'"))?;
+    ensure!(
+        parts.len() == N_CLASSES,
+        "--class-mix expects {N_CLASSES} weights (interactive,standard,batch), got {}",
+        parts.len()
+    );
+    Ok([parts[0], parts[1], parts[2]])
 }
 
 /// Trace-driven open-loop load harness: replay one seeded workload trace
@@ -326,6 +387,8 @@ pub fn cmd_loadgen(args: &Args) -> Result<()> {
         n_requests: args.get_usize("requests", 32)?,
         arrival,
         seed: args.get_u64("seed", 7)?,
+        class_mix: parse_class_mix(args)?,
+        drop_frac: args.get_f64("drop-frac", 0.0)?,
         ..WorkloadConfig::default()
     };
     let corpus = TokenStream::load(&artifacts().join("data/corpus_val.fbqw")).ok();
@@ -348,10 +411,11 @@ pub fn cmd_loadgen(args: &Args) -> Result<()> {
 
     for res in [&res_in, &res_http] {
         println!(
-            "{:<11} {} done / {} shed of {} in {:.2}s | goodput {:.0} tok/s",
+            "{:<11} {} done / {} shed / {} dropped of {} in {:.2}s | goodput {:.0} tok/s",
             res.mode,
             res.completed(),
             res.shed(),
+            res.dropped(),
             res.records.len(),
             res.wall_s,
             res.goodput_tps(),

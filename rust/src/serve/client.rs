@@ -2,7 +2,7 @@
 //! tests speak to the server with (std-only, one connection per request).
 
 use super::{http, sse};
-use crate::coordinator::request::GenRequest;
+use crate::coordinator::request::{GenRequest, Priority};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -43,6 +43,9 @@ pub fn gen_body(req: &GenRequest) -> Json {
     }
     if let Some(st) = req.stop_token {
         fields.push(("stop_token", (st as f64).into()));
+    }
+    if req.class != Priority::default() {
+        fields.push(("priority", req.class.name().into()));
     }
     Json::obj(fields)
 }

@@ -32,6 +32,9 @@ pub struct ReqRecord {
     pub ok: bool,
     /// shed by admission control (429 or a shed/exhausted error)
     pub shed: bool,
+    /// the client disconnected mid-stream per the trace's chaos plan
+    /// ([`crate::coordinator::workload::ReqMeta::drop_after`])
+    pub dropped: bool,
     /// tokens streamed before the terminal event
     pub tokens: usize,
     /// submit → first token
@@ -48,6 +51,7 @@ impl ReqRecord {
             id,
             ok: false,
             shed: false,
+            dropped: false,
             tokens: 0,
             ttft_us: 0.0,
             itl_us: Vec::new(),
@@ -73,6 +77,11 @@ impl HarnessResult {
 
     pub fn shed(&self) -> usize {
         self.records.iter().filter(|r| r.shed).count()
+    }
+
+    /// Requests whose client disconnected mid-stream (chaos plan).
+    pub fn dropped(&self) -> usize {
+        self.records.iter().filter(|r| r.dropped).count()
     }
 
     /// Fraction of submitted requests shed by admission control.
@@ -105,6 +114,7 @@ impl HarnessResult {
             ("requests", self.records.len().into()),
             ("completed", done.len().into()),
             ("shed", self.shed().into()),
+            ("dropped", self.dropped().into()),
             ("wall_s", self.wall_s.into()),
             ("goodput_tps", self.goodput_tps().into()),
             ("shed_rate", self.shed_rate().into()),
@@ -160,9 +170,11 @@ pub fn run_in_process(client: &CoordinatorClient, workload: &Workload) -> Harnes
     let records = Arc::new(Mutex::new(Vec::new()));
     let start = Instant::now();
     let mut joins = Vec::new();
-    for (req, arrival) in workload.requests.iter().zip(&workload.arrivals) {
+    let trace = workload.requests.iter().zip(&workload.arrivals).zip(&workload.meta);
+    for ((req, arrival), meta) in trace {
         pace(start, *arrival);
         let id = req.id;
+        let drop_after = meta.drop_after;
         let submitted = Instant::now();
         let rx = client.submit(req.clone());
         let out = records.clone();
@@ -179,6 +191,13 @@ pub fn run_in_process(client: &CoordinatorClient, workload: &Workload) -> Harnes
                         }
                         last = Some(now);
                         rec.tokens += 1;
+                        if drop_after.is_some_and(|n| rec.tokens >= n) {
+                            // breaking out drops the receiver — the
+                            // serving loop's next emit fails, exactly
+                            // like a mid-stream client disconnect
+                            rec.dropped = true;
+                            break;
+                        }
                     }
                     GenEvent::Done(_) => {
                         rec.ok = true;
@@ -206,14 +225,22 @@ pub fn run_http(addr: SocketAddr, workload: &Workload) -> HarnessResult {
     let records = Arc::new(Mutex::new(Vec::new()));
     let start = Instant::now();
     let mut joins = Vec::new();
-    for (req, arrival) in workload.requests.iter().zip(&workload.arrivals) {
+    let trace = workload.requests.iter().zip(&workload.arrivals).zip(&workload.meta);
+    for ((req, arrival), meta) in trace {
         pace(start, *arrival);
         let id = req.id;
+        let drop_after = meta.drop_after;
         let body = client::gen_body(req);
         let out = records.clone();
         joins.push(std::thread::spawn(move || {
-            let rec = match client::post_generate(addr, &body, None) {
-                Ok(o) => outcome_record(id, &o),
+            let rec = match client::post_generate(addr, &body, drop_after) {
+                Ok(o) => {
+                    let mut rec = outcome_record(id, &o);
+                    // a 200 that ended with neither `done` nor `error`
+                    // is the planned mid-stream disconnect
+                    rec.dropped = o.status == 200 && o.done.is_none() && o.error.is_none();
+                    rec
+                }
                 Err(_) => ReqRecord::new(id), // connect/read failure: not ok, not shed
             };
             push_record(&out, rec);

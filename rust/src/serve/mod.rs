@@ -9,14 +9,21 @@
 //!
 //! Routes:
 //! * `POST /v1/generate` — JSON body (`prompt`, `max_new_tokens`,
-//!   optional `temperature`/`top_k`/`top_p`/`seed`/`stop_token`) → an
-//!   SSE stream: one `data:` frame per sampled token, then a terminal
-//!   `event: done` (the full [`GenResponse`]) or `event: error` frame.
-//!   The **first** coordinator event decides the HTTP status: a shed /
-//!   pool-exhausted request answers `429`, an invalid one `400`, and
-//!   only a request that actually streams opens a `200`.
+//!   optional `temperature`/`top_k`/`top_p`/`seed`/`stop_token`/
+//!   `priority`, the latter one of `interactive`/`standard`/`batch`) →
+//!   an SSE stream: one `data:` frame per sampled token, then a
+//!   terminal `event: done` (the full [`GenResponse`]) or
+//!   `event: error` frame. The **first** coordinator event decides the
+//!   HTTP status: a shed / pool-exhausted request answers `429`, an
+//!   invalid one `400`, and only a request that actually streams opens
+//!   a `200`.
 //! * `GET /metrics` — live [`ServeMetrics`] snapshot as JSON.
 //! * `GET /healthz` — liveness probe.
+//! * `POST /admin/shutdown` — request a graceful shutdown. Gated on the
+//!   peer address: only loopback connections are honoured (`403`
+//!   otherwise). Sets a flag the embedding process polls via
+//!   [`Server::shutdown_requested`]; the route itself does not tear the
+//!   server down, so in-flight streams keep draining.
 //!
 //! A client that disconnects mid-stream is detected by the failed SSE
 //! write: the connection thread drops its event receiver, the serving
@@ -33,7 +40,7 @@ pub mod http;
 pub mod sse;
 
 use crate::coordinator::metrics::ServeMetrics;
-use crate::coordinator::request::{GenEvent, GenRequest, GenResponse};
+use crate::coordinator::request::{GenEvent, GenRequest, GenResponse, Priority};
 use crate::coordinator::server::{CoordinatorClient, CoordinatorHandle};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
@@ -73,6 +80,7 @@ impl Default for ServeConfig {
 pub struct Server {
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    shutdown_req: Arc<AtomicBool>,
     active: Arc<AtomicUsize>,
     accept: Option<std::thread::JoinHandle<()>>,
     handle: CoordinatorHandle,
@@ -86,16 +94,18 @@ impl Server {
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let shutdown_req = Arc::new(AtomicBool::new(false));
         let active = Arc::new(AtomicUsize::new(0));
         let client = handle.client();
         let (max_conn, max_body) = (cfg.max_connections, cfg.max_body_bytes);
         let accept = {
             let (stop, active) = (stop.clone(), active.clone());
+            let shutdown_req = shutdown_req.clone();
             std::thread::spawn(move || {
-                accept_loop(listener, client, stop, active, max_conn, max_body)
+                accept_loop(listener, client, stop, shutdown_req, active, max_conn, max_body)
             })
         };
-        Ok(Server { local_addr, stop, active, accept: Some(accept), handle })
+        Ok(Server { local_addr, stop, shutdown_req, active, accept: Some(accept), handle })
     }
 
     /// The bound address (resolves port 0 to the ephemeral port).
@@ -112,6 +122,13 @@ impl Server {
     /// Currently served connections.
     pub fn active_connections(&self) -> usize {
         self.active.load(Ordering::SeqCst)
+    }
+
+    /// True once a loopback client has hit `POST /admin/shutdown`. The
+    /// embedding process (e.g. `cmd serve`) polls this and then calls
+    /// [`Server::shutdown`].
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown_req.load(Ordering::SeqCst)
     }
 
     /// Graceful shutdown: stop accepting, wait for in-flight streams to
@@ -143,13 +160,14 @@ fn accept_loop(
     listener: TcpListener,
     client: CoordinatorClient,
     stop: Arc<AtomicBool>,
+    shutdown_req: Arc<AtomicBool>,
     active: Arc<AtomicUsize>,
     max_conn: usize,
     max_body: usize,
 ) {
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
-            Ok((mut stream, _peer)) => {
+            Ok((mut stream, peer)) => {
                 if active.load(Ordering::SeqCst) >= max_conn {
                     // accept-pool overflow: connection-level shed
                     let _ = http::write_response(
@@ -163,9 +181,10 @@ fn accept_loop(
                 active.fetch_add(1, Ordering::SeqCst);
                 let client = client.clone();
                 let guard = ConnGuard(active.clone());
+                let shutdown_req = shutdown_req.clone();
                 std::thread::spawn(move || {
                     let _guard = guard;
-                    handle_conn(stream, &client, max_body);
+                    handle_conn(stream, peer, &client, max_body, &shutdown_req);
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -176,7 +195,13 @@ fn accept_loop(
     }
 }
 
-fn handle_conn(stream: TcpStream, client: &CoordinatorClient, max_body: usize) {
+fn handle_conn(
+    stream: TcpStream,
+    peer: SocketAddr,
+    client: &CoordinatorClient,
+    max_body: usize,
+    shutdown_req: &AtomicBool,
+) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
     let Ok(read_half) = stream.try_clone() else { return };
@@ -204,6 +229,21 @@ fn handle_conn(stream: TcpStream, client: &CoordinatorClient, max_body: usize) {
                 let _ = error_response(&mut writer, 500, &e.to_string());
             }
         },
+        ("POST", "/admin/shutdown") => {
+            // control-plane route: honour it only from loopback peers so
+            // a forwarded / exposed port cannot kill the server
+            if peer.ip().is_loopback() {
+                shutdown_req.store(true, Ordering::SeqCst);
+                let _ = http::write_response(
+                    &mut writer,
+                    200,
+                    "application/json",
+                    b"{\"ok\":true,\"shutting_down\":true}",
+                );
+            } else {
+                let _ = error_response(&mut writer, 403, "shutdown is loopback-only");
+            }
+        }
         ("GET", _) | ("POST", _) => {
             let _ = error_response(&mut writer, 404, "no such route");
         }
@@ -334,6 +374,12 @@ fn parse_gen_request(body: &[u8]) -> Result<GenRequest> {
     if let Some(st) = j.get("stop_token").and_then(Json::as_i64) {
         req.stop_token = Some(st as u32);
     }
+    if let Some(p) = j.get("priority") {
+        let s = p.as_str().ok_or_else(|| anyhow!("'priority' must be a string"))?;
+        req.class = Priority::parse(s).ok_or_else(|| {
+            anyhow!("unknown 'priority' {s:?} (expected interactive|standard|batch)")
+        })?;
+    }
     Ok(req)
 }
 
@@ -352,6 +398,20 @@ mod tests {
         assert!(parse_gen_request(b"{}").is_err());
         assert!(parse_gen_request(b"{\"prompt\":\"hi\",\"max_new_tokens\":4}").is_err());
         assert!(parse_gen_request(b"not json").is_err());
+    }
+
+    #[test]
+    fn parses_priority_field() {
+        let body = br#"{"prompt":[1],"max_new_tokens":2}"#;
+        assert_eq!(parse_gen_request(body).unwrap().class, Priority::Standard);
+        let body = br#"{"prompt":[1],"max_new_tokens":2,"priority":"interactive"}"#;
+        assert_eq!(parse_gen_request(body).unwrap().class, Priority::Interactive);
+        let body = br#"{"prompt":[1],"max_new_tokens":2,"priority":"batch"}"#;
+        assert_eq!(parse_gen_request(body).unwrap().class, Priority::Batch);
+        let body = br#"{"prompt":[1],"max_new_tokens":2,"priority":"urgent"}"#;
+        assert!(parse_gen_request(body).is_err());
+        let body = br#"{"prompt":[1],"max_new_tokens":2,"priority":3}"#;
+        assert!(parse_gen_request(body).is_err());
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //! cache disabled: draft pages are transient scratch that is truncated
 //! every step, never shared across admissions.
 
-use crate::engine::kv::{KvCache, KvPagePool, KvPoolConfig, PagedKv, PagedSlotBatch, SlotBatch};
+use crate::engine::kv::{
+    KvCache, KvPagePool, KvPoolConfig, PagedKv, PagedSlotBatch, ParkedKv, SlotBatch,
+};
 use crate::engine::native::{EngineWs, NativeEngine};
 use crate::model::Config;
 use anyhow::{bail, Context, Result};
@@ -143,6 +145,46 @@ impl DraftKv {
                 if let Some(kv) = slots.get_mut(slot).and_then(|s| s.as_mut()) {
                     pool.truncate_kv(kv, len);
                 }
+            }
+        }
+    }
+
+    /// Swap `slot`'s mirror out into a host buffer and vacate the slot
+    /// (paged mirrors release their pages). `None` when the slot has no
+    /// mirror — a slot that never speculated has nothing to park.
+    pub fn park(&mut self, slot: usize) -> Option<ParkedKv> {
+        match self {
+            DraftKv::Unopened => None,
+            DraftKv::Dense { slots } => {
+                slots.get_mut(slot).and_then(|s| s.take()).map(|kv| kv.park())
+            }
+            DraftKv::Paged { pool, slots } => {
+                slots.get_mut(slot).and_then(|s| s.take()).map(|mut kv| pool.park_kv(&mut kv))
+            }
+        }
+    }
+
+    /// Restore a parked mirror into the vacated `slot` bit-exactly. On
+    /// failure (paged pool cannot supply the pages) the slot is left
+    /// vacant and the parking buffer remains valid for a later retry.
+    pub fn unpark(&mut self, cfg: &Config, slot: usize, parked: &ParkedKv) -> Result<()> {
+        match self {
+            DraftKv::Unopened => bail!("draft kv: no open batch"),
+            DraftKv::Dense { .. } => {
+                self.occupy(cfg, slot)?;
+                let DraftKv::Dense { slots } = self else { unreachable!() };
+                slots[slot].as_mut().expect("just occupied").unpark(parked);
+                Ok(())
+            }
+            DraftKv::Paged { pool, slots } => {
+                if slot >= slots.len() {
+                    bail!("draft kv: slot {slot} out of range ({} slots)", slots.len());
+                }
+                if slots[slot].is_some() {
+                    bail!("draft kv: slot {slot} is already occupied");
+                }
+                slots[slot] = Some(pool.unpark_kv(parked, cfg.max_seq)?);
+                Ok(())
             }
         }
     }

@@ -83,9 +83,13 @@ COMMANDS:
   generate                   Generate tokens from a model (native engine or PJRT)
   serve                      HTTP/SSE serving front end over the coordinator
                              (POST /v1/generate streams tokens; GET /metrics,
-                             /healthz; --synth serves a synthesized checkpoint)
+                             /healthz; loopback POST /admin/shutdown stops it;
+                             --synth serves a synthesized checkpoint)
   loadgen                    Trace-driven open-loop load harness: one seeded trace
                              in-process and over HTTP loopback -> BENCH_serve.json
+                             (--class-mix i,s,b --drop-frac f --degrade --pages n
+                             exercise the overload tier: priority preemption,
+                             mid-stream disconnects, adaptive degradation)
   eval-ppl                   Perplexity on the held-out validation set (Table 1 cell)
   eval-zeroshot              Zero-shot multiple-choice accuracy (Table 2 cell)
   judge                      Pairwise model comparison (Fig 6 cell)
@@ -112,7 +116,10 @@ pub fn run() -> Result<()> {
     let cmd = raw.remove(0);
     let args = Args::parse(
         raw,
-        &["help", "detail", "fused", "verbose", "quiet", "no-sub", "sync", "synth", "bursty"],
+        &[
+            "help", "detail", "fused", "verbose", "quiet", "no-sub", "sync", "synth", "bursty",
+            "degrade",
+        ],
     )?;
     if args.flag("verbose") {
         super::logging::set_level(super::logging::Level::Debug);

@@ -117,13 +117,14 @@ fn prop_batcher_conserves_and_aligns_requests() {
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(0),
             max_queue,
+            ..BatcherConfig::default()
         });
         let mut ids = Vec::new();
         for i in 0..n {
             let plen = *g.pick(&[8usize, 16, 32]);
             let req = GenRequest::new(i as u64 + 1, vec![1; plen], 4);
             ids.push(req.id);
-            if !batcher.submit(req) {
+            if !batcher.submit(req).admitted() {
                 return Err("queue rejected under capacity".into());
             }
         }
@@ -375,6 +376,7 @@ fn overloaded_queue_sheds_with_terminal_error_event() {
             batch_sizes: vec![1, 4],
             max_wait: Duration::from_millis(5),
             max_queue: 2,
+            ..BatcherConfig::default()
         },
         ..CoordinatorConfig::default()
     };

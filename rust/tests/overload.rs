@@ -1,0 +1,351 @@
+//! Overload-tier tests on synthesized checkpoints (no build artifacts
+//! needed): exactness of KV swap-out preemption, priority scheduling
+//! conservation laws, and a seeded chaos/soak run that drives the whole
+//! tier at once.
+//!
+//! The gates:
+//! * **swap exactness** — a request that is preempted (KV serialized to
+//!   the host parking buffer) and later resumed produces the exact
+//!   token stream of an uncontended run, on the paged pool and the
+//!   dense baseline, with and without speculative draft mirrors,
+//! * **priority conservation** — over random submit/pop traces every
+//!   request is accounted exactly once per class
+//!   (popped + shed + displaced), and the queue drains empty,
+//! * **chaos/soak** — a bursty (MMPP) trace with mixed priorities,
+//!   mid-stream disconnects, adaptive degradation and a starved page
+//!   pool: every request terminates, the pool reconciles to zero pages,
+//!   and the per-class preempt/degrade/shed counters reconcile.
+
+use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::coordinator::batcher::{Batcher, BatcherConfig, Submitted};
+use fbquant::coordinator::overload::DegradeConfig;
+use fbquant::coordinator::request::{GenEvent, GenRequest, Priority, N_CLASSES};
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::coordinator::workload::{self, Arrival, LenDist, WorkloadConfig};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::prop_assert_ok;
+use fbquant::serve::harness;
+use fbquant::spec::{DraftMode, SpeculativeConfig};
+use fbquant::testing::{check, synth_checkpoint, SynthSpec};
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+fn spec() -> SynthSpec {
+    SynthSpec { vocab: 64, max_seq: 64, ..SynthSpec::default() }
+}
+
+/// Heavier fixture: decode steps are slow enough that a request
+/// submitted mid-stream reliably lands while the first is still
+/// decoding.
+fn heavy_spec() -> SynthSpec {
+    SynthSpec { d: 128, n_layers: 4, d_ff: 256, vocab: 64, max_seq: 64, ..SynthSpec::default() }
+}
+
+/// Paged swap-out round trip is bit-identical: random prompt/budget
+/// mixes decode on a pool sized to admit everyone but starve decode
+/// (slots park mid-decode, swap to host, resume), and every stream must
+/// match the same trace on an ample pool. Runs with and without the
+/// speculative draft mirror (the parked state then carries the mirror
+/// and its pending tokens too).
+#[test]
+fn prop_paged_swap_roundtrip_is_bit_identical() {
+    let preempted = Cell::new(0usize);
+    let res = check("paged_swap_roundtrip", 8, |g| {
+        let spec_on = g.bool();
+        let page_size = *g.pick(&[4usize, 8]);
+        let n_req = g.usize_range(2, 3);
+        let max_new = g.usize_range(4, 10);
+        let prompts: Vec<Vec<u32>> = (0..n_req)
+            .map(|i| {
+                let len = g.usize_range(6, 18);
+                (0..len).map(|p| ((p * 7 + i * 13 + 5) % 64) as u32).collect()
+            })
+            .collect();
+        let reqs = || -> Vec<GenRequest> {
+            prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| GenRequest::new(i as u64 + 1, p.clone(), max_new))
+                .collect()
+        };
+        // every prompt admits, but decode has a single spare page to
+        // fight over — slots must park to make progress
+        let pages_admit: usize =
+            prompts.iter().map(|p| (p.len() + page_size - 1) / page_size).sum();
+        let run = |pages: usize| {
+            let store = synth_checkpoint("overload_swap_prop", spec());
+            let engine = NativeEngine::from_store(&store, SubMode::Fused)
+                .map_err(|e| e.to_string())?;
+            let mut be = NativeBackend::new(engine, "swap-prop")
+                .with_max_slots(n_req)
+                .with_kv_pool(page_size, pages);
+            if spec_on {
+                be = be.with_speculative(SpeculativeConfig::new(2, DraftMode::NoSub));
+            }
+            Coordinator::run_closed_loop(&mut be, reqs(), &CoordinatorConfig::default())
+                .map_err(|e| format!("{e:#}"))
+        };
+        let (tight, tm) = run(pages_admit + 1)?;
+        let (roomy, rm) = run(pages_admit + 8 * n_req)?;
+        if tight.len() != n_req || roomy.len() != n_req {
+            return Err(format!(
+                "requests lost: {}/{} tight, {}/{} roomy (shed {} / {})",
+                tight.len(),
+                n_req,
+                roomy.len(),
+                n_req,
+                tm.requests_shed,
+                rm.requests_shed
+            ));
+        }
+        let parks: usize = tm.classes.iter().map(|c| c.preemptions).sum();
+        let resumes: usize = tm.classes.iter().map(|c| c.resumes).sum();
+        if parks != resumes || tm.parked != 0 {
+            return Err(format!(
+                "parking did not reconcile: {parks} parks, {resumes} resumes, {} left",
+                tm.parked
+            ));
+        }
+        preempted.set(preempted.get() + parks);
+        for (a, b) in tight.iter().zip(&roomy) {
+            if a.id != b.id || a.tokens != b.tokens {
+                return Err(format!(
+                    "request {} diverged after swap (spec={spec_on}, page={page_size}):\
+                     \n tight: {:?}\n roomy: {:?}",
+                    a.id, a.tokens, b.tokens
+                ));
+            }
+        }
+        Ok(())
+    });
+    prop_assert_ok!(res);
+    assert!(preempted.get() > 0, "no case ever preempted — the tight pool was not tight");
+}
+
+/// Dense-baseline priority preemption is exact: a batch-class request
+/// mid-decode is swapped out for an interactive arrival (one slot, so
+/// preemption is the only way in), then resumes and finishes with the
+/// token stream of an uncontended solo run.
+#[test]
+fn dense_priority_preemption_swaps_and_resumes_exactly() {
+    let tag = "overload_dense_preempt";
+    let p1: Vec<u32> = (0..8).map(|i| (i * 5 % 64) as u32).collect();
+    let p2: Vec<u32> = (0..8).map(|i| ((i * 3 + 1) % 64) as u32).collect();
+    let solo = |prompt: &[u32], budget: usize| -> Vec<u32> {
+        let store = synth_checkpoint(tag, heavy_spec());
+        let engine = NativeEngine::from_store(&store, SubMode::Fused).unwrap();
+        let mut be = NativeBackend::new(engine, "solo").with_dense().with_max_slots(1);
+        let req = GenRequest::new(1, prompt.to_vec(), budget);
+        let (mut r, _) =
+            Coordinator::run_closed_loop(&mut be, vec![req], &CoordinatorConfig::default())
+                .unwrap();
+        r.remove(0).tokens
+    };
+    let ref1 = solo(&p1, 40);
+    let ref2 = solo(&p2, 8);
+
+    let handle = Coordinator::spawn(
+        move || -> anyhow::Result<Box<dyn Backend>> {
+            let store = synth_checkpoint(tag, heavy_spec());
+            let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+            Ok(Box::new(NativeBackend::new(engine, "preempt").with_dense().with_max_slots(1)))
+        },
+        CoordinatorConfig::default(),
+    );
+    let mut batch_req = GenRequest::new(0, p1.clone(), 40);
+    batch_req.class = Priority::Batch;
+    let rx = handle.submit(batch_req);
+    // once the first token streams, the batch request owns the only slot
+    match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        GenEvent::Token { .. } => {}
+        other => panic!("expected a token first, got {other:?}"),
+    }
+    let mut inter = GenRequest::new(0, p2.clone(), 8);
+    inter.class = Priority::Interactive;
+    let r2 = handle.client().submit_wait(inter).unwrap();
+    assert_eq!(r2.tokens, ref2, "the preempting interactive stream diverged");
+
+    let mut done = None;
+    while let Ok(ev) = rx.recv_timeout(Duration::from_secs(60)) {
+        match ev {
+            GenEvent::Token { .. } => {}
+            GenEvent::Done(r) => {
+                done = Some(r);
+                break;
+            }
+            GenEvent::Error { message, .. } => panic!("batch request died: {message}"),
+        }
+    }
+    let r1 = done.expect("batch stream ended without Done");
+    assert_eq!(r1.tokens, ref1, "suspend/resume changed the batch request's output");
+
+    let metrics = handle.shutdown().unwrap();
+    let batch = metrics.classes[Priority::Batch.index()];
+    assert!(batch.preemptions >= 1, "interactive arrival did not preempt the batch slot");
+    assert_eq!(batch.preemptions, batch.resumes, "every park must resume");
+    assert!(metrics.swapped_bytes > 0, "dense swap traffic not metered");
+    assert_eq!(metrics.parked, 0);
+    let inter_stats = metrics.classes[Priority::Interactive.index()];
+    assert_eq!(inter_stats.preemptions, 0, "the interactive request must never be the victim");
+}
+
+/// Conservation over random submit/pop traces: per class, everything
+/// submitted is popped, shed at the door, or displaced by a
+/// higher-priority arrival — nothing is lost, and the queue drains.
+#[test]
+fn prop_batcher_per_class_conservation_over_random_traces() {
+    let res = check("batcher_conservation", 60, |g| {
+        let cfg = BatcherConfig {
+            max_queue: g.usize_range(1, 6),
+            // aging off: class accounting must hold without it
+            age_after: Duration::from_secs(3600),
+            ..BatcherConfig::default()
+        };
+        let mut batcher = Batcher::new(cfg);
+        let now = Instant::now();
+        let (mut submitted, mut popped) = ([0usize; N_CLASSES], [0usize; N_CLASSES]);
+        let (mut shed, mut displaced) = ([0usize; N_CLASSES], [0usize; N_CLASSES]);
+        let mut next_id = 1u64;
+        for _ in 0..g.usize_range(10, 60) {
+            if g.bool() {
+                let mut req = GenRequest::new(next_id, vec![1, 2, 3], 4);
+                next_id += 1;
+                req.class = Priority::from_index(g.usize_range(0, N_CLASSES - 1));
+                submitted[req.class.index()] += 1;
+                match batcher.submit(req) {
+                    Submitted::Queued { displaced: Some(d) } => displaced[d.class.index()] += 1,
+                    Submitted::Queued { displaced: None } => {}
+                    Submitted::Shed(r) => shed[r.class.index()] += 1,
+                }
+            } else if let Some(r) = batcher.pop_ready(now) {
+                popped[r.class.index()] += 1;
+            }
+            let by_class = batcher.queued_by_class();
+            if by_class.iter().sum::<usize>() != batcher.len() {
+                return Err("queued_by_class disagrees with len".into());
+            }
+        }
+        let mut last_class = 0usize;
+        while let Some(r) = batcher.pop_ready(now) {
+            // with no interleaved submits the drain is class-ordered
+            if r.class.index() < last_class {
+                return Err(format!("drain popped class {} after {last_class}", r.class.index()));
+            }
+            last_class = r.class.index();
+            popped[r.class.index()] += 1;
+        }
+        if !batcher.is_empty() {
+            return Err("drain left the queue non-empty".into());
+        }
+        for c in 0..N_CLASSES {
+            if submitted[c] != popped[c] + shed[c] + displaced[c] {
+                return Err(format!(
+                    "class {c} leaked: {} submitted vs {} popped + {} shed + {} displaced",
+                    submitted[c], popped[c], shed[c], displaced[c]
+                ));
+            }
+        }
+        Ok(())
+    });
+    prop_assert_ok!(res);
+}
+
+/// The chaos/soak gate: a seeded bursty (on/off modulated Poisson)
+/// trace with mixed priority classes and planned mid-stream disconnects
+/// replays against a coordinator with a starved page pool, speculative
+/// decoding and load-adaptive degradation all enabled. Everything the
+/// tier can do — park, resume, displace, shed, degrade, cancel — is in
+/// play at once; afterwards every request must be accounted for, the
+/// page pool must be empty, and the per-class counters must reconcile.
+#[test]
+fn chaos_soak_every_request_terminates_and_the_pool_reconciles() {
+    const N: usize = 48;
+    let wl_cfg = WorkloadConfig {
+        n_requests: N,
+        arrival: Arrival::Bursty {
+            rate_on: 400.0,
+            rate_off: 20.0,
+            mean_on_s: 0.03,
+            mean_off_s: 0.03,
+        },
+        // prompts stay under one 16-position page so nothing is ever
+        // published to the prefix cache — the pool must reconcile to
+        // exactly zero pages after the drain
+        prompt_len: LenDist::new(2.0, 0.3, 4, 12),
+        output_len: LenDist::new(2.0, 0.4, 3, 12),
+        template_frac: 0.0,
+        vocab: 64,
+        class_mix: [0.3, 0.4, 0.3],
+        drop_frac: 0.25,
+        seed: 41,
+        ..WorkloadConfig::default()
+    };
+    let mut wl = workload::generate(&wl_cfg, None);
+    wl.clamp_to(64);
+    let planned_drops = wl.meta.iter().filter(|m| m.drop_after.is_some()).count();
+    assert!(planned_drops >= 1, "seed 41 planned no disconnects at all");
+    let classes_present: usize =
+        (0..N_CLASSES).filter(|&c| wl.meta.iter().any(|m| m.class.index() == c)).count();
+    assert_eq!(classes_present, N_CLASSES, "trace must mix all priority classes");
+
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_queue: 8, ..BatcherConfig::default() },
+        degrade: DegradeConfig { enabled: true, ..DegradeConfig::default() },
+        ..CoordinatorConfig::default()
+    };
+    let handle = Coordinator::spawn(
+        move || -> anyhow::Result<Box<dyn Backend>> {
+            let store = synth_checkpoint("overload_chaos", spec());
+            let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+            // 3 slots over 5 pages: sustained decode cannot fit, so the
+            // coordinator must park/resume its way through the trace
+            Ok(Box::new(
+                NativeBackend::new(engine, "chaos")
+                    .with_max_slots(3)
+                    .with_kv_pool(16, 5)
+                    .with_speculative(SpeculativeConfig::new(2, DraftMode::NoSub).with_adaptive()),
+            ))
+        },
+        cfg,
+    );
+    let res = harness::run_in_process(&handle.client(), &wl);
+    let metrics = handle.shutdown().unwrap();
+
+    // every request got a terminal record and the trace fully replayed
+    assert_eq!(res.records.len(), N, "requests vanished without a terminal event");
+    assert_eq!(metrics.requests_in, N);
+    assert!(res.dropped() >= 1, "no planned disconnect actually fired");
+
+    // per-class ledgers reconcile against the global counters
+    let sum = |f: fn(&fbquant::coordinator::ClassStats) -> usize| -> usize {
+        metrics.classes.iter().map(f).sum()
+    };
+    assert_eq!(sum(|c| c.submitted), N, "per-class submissions disagree with requests_in");
+    assert_eq!(sum(|c| c.done), metrics.requests_done);
+    assert_eq!(sum(|c| c.shed), metrics.requests_shed);
+    for c in &metrics.classes {
+        assert!(c.done + c.shed <= c.submitted, "class terminal events exceed submissions");
+        assert!(c.resumes <= c.preemptions, "resumed more than was ever parked");
+    }
+    // cancelled-while-parked requests never resume, so preemptions can
+    // exceed resumes — but the parking buffer itself must drain
+    assert_eq!(metrics.parked, 0, "requests left in the parking buffer");
+    assert_eq!(
+        metrics.requests_done + metrics.requests_shed + metrics.cancellations,
+        N,
+        "terminal outcomes do not cover the trace"
+    );
+
+    // the chaos actually bit: overload transitions happened and were
+    // attributed to classes
+    let pressure_events = sum(|c| c.preemptions) + sum(|c| c.degrades) + metrics.requests_shed;
+    assert!(pressure_events > 0, "nothing parked, degraded or shed — the pool was not starved");
+    if sum(|c| c.preemptions) > 0 {
+        assert!(metrics.swapped_bytes > 0, "parks happened but no swap traffic was metered");
+    }
+
+    // the starved pool reconciles to zero pages in use (sub-page
+    // prompts: nothing is retained by the prefix cache)
+    let pool = metrics.kv_pool.expect("paged backend must report pool stats");
+    assert_eq!(pool.pages_in_use, 0, "KV pages leaked: {} in use", pool.pages_in_use);
+}

@@ -163,6 +163,50 @@ fn routes_and_caller_errors_map_to_400() {
 }
 
 #[test]
+fn admin_shutdown_is_honoured_from_loopback() {
+    let server = start_server("http_e2e_shutdown", spec(), None, CoordinatorConfig::default());
+    let addr = server.local_addr();
+    assert!(!server.shutdown_requested());
+
+    // wrong method: the route is POST-only
+    let (code, _) = client::get(addr, "/admin/shutdown").unwrap();
+    assert_eq!(code, 404);
+    assert!(!server.shutdown_requested(), "a GET must not trigger shutdown");
+
+    let (code, body) = post_empty(addr, "/admin/shutdown");
+    assert_eq!(code, 200, "loopback shutdown refused: {body}");
+    assert!(body.contains("shutting_down"), "unexpected body: {body}");
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !server.shutdown_requested() {
+        assert!(Instant::now() < deadline, "shutdown flag never raised");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // the flag is advisory: the server keeps serving until the embedder
+    // acts on it
+    let (code, _) = client::get(addr, "/healthz").unwrap();
+    assert_eq!(code, 200, "server died before the embedder shut it down");
+    server.shutdown().unwrap();
+}
+
+/// Bare empty-body POST (the admin routes take no payload).
+fn post_empty(addr: std::net::SocketAddr, path: &str) -> (u16, String) {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 0\r\nConnection: close\r\n\r\n"
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut buf = String::new();
+    let _ = s.read_to_string(&mut buf);
+    let code =
+        buf.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0);
+    (code, buf)
+}
+
+#[test]
 fn shed_load_maps_to_429() {
     // max_queue 0: every admission sheds — the deterministic overload
     let cfg = CoordinatorConfig {
