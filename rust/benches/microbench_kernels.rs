@@ -6,6 +6,9 @@
 //!   `gemv_multi` vs the per-slot loop, emitted to `BENCH_decode.json`
 //!   (tokens/s + weight bytes/token) as the perf trajectory file CI
 //!   smokes on every push,
+//! * the {scalar, simd} × {scoped, pool} quadrant sweep on the fused
+//!   kernel, emitted to `BENCH_kernels.json`, with a blocking
+//!   SIMD+pool-beats-scalar+scoped assertion at the largest shape,
 //! * the speculative sweep (K × draft-mode) on a synthesized
 //!   checkpoint: acceptance rate, tokens/s and weight bytes per
 //!   committed token vs the K=0 baseline, with a blocking assertion
@@ -59,8 +62,14 @@ fn layer(d: usize, r: usize, bits: u8) -> (QuantLinear, Vec<f32>) {
 /// Batched-decode sweep: the weight-stationary `gemv_multi` against the
 /// per-slot `gemv` loop over slots × bits × rank, on one square decode
 /// layer as the per-layer proxy. Emits `BENCH_decode.json` so the perf
-/// trajectory (tokens/s, weight bytes/token) is tracked from CI.
-fn batched_decode_sweep(bench: &Bench, spec_rows: Vec<Json>) -> anyhow::Result<()> {
+/// trajectory (tokens/s, weight bytes/token) is tracked from CI; the
+/// `kernel_matrix` section embeds the {scalar, simd} × {scoped, pool}
+/// quadrant document ([`kernel_matrix_sweep`]).
+fn batched_decode_sweep(
+    bench: &Bench,
+    spec_rows: Vec<Json>,
+    kernel_matrix: Json,
+) -> anyhow::Result<()> {
     let d: usize = if fast() { 256 } else { 512 };
     let bits_list: &[u8] = if fast() { &[4] } else { &[3, 4] };
     let rank_list: &[usize] = &[0, 16];
@@ -161,10 +170,154 @@ fn batched_decode_sweep(bench: &Bench, spec_rows: Vec<Json>) -> anyhow::Result<(
         ("unit", Json::from("per-layer decode proxy (one square quantized linear)")),
         ("rows", Json::Arr(rows)),
         ("speculative", Json::Arr(spec_rows)),
+        ("kernel_matrix", kernel_matrix),
     ]);
     std::fs::write("BENCH_decode.json", doc.to_string_pretty())?;
     println!("\nwrote BENCH_decode.json ({n_rows} kernel rows + {n_spec} speculative rows)");
     Ok(())
+}
+
+/// Quadrant sweep {scalar, simd} × {scoped, pool} over bits × rank ×
+/// slots on the fused weight-stationary kernel, emitted to
+/// `BENCH_kernels.json` (schema_version 1) so the SIMD/pool perf
+/// trajectory is tracked from CI. Every grid point carries exactly four
+/// quadrant rows; the top-level `simd_available`/`simd_feature` flags
+/// say whether the `simd` rows actually vectorized (forcing the simd
+/// path without the feature or hardware falls back to scalar, so the
+/// schema never changes shape across builds). When SIMD is live, the
+/// largest m=8 shape must beat the scalar+scoped baseline on ns/MAC —
+/// blocking, with one re-measure to de-noise — and the remaining m=8
+/// points warn if they don't. Returns the emitted document so the same
+/// quadrant rows also ride along inside `BENCH_decode.json`.
+fn kernel_matrix_sweep(bench: &Bench) -> anyhow::Result<Json> {
+    use fbquant::tensor::simd;
+    use fbquant::util::pool;
+
+    let d: usize = if fast() { 256 } else { 512 };
+    let bits_list: &[u8] = if fast() { &[4] } else { &[2, 3, 4] };
+    let rank_list: &[usize] = &[0, 16];
+    let slot_list: &[usize] = &[1, 8];
+    let simd_on = cfg!(feature = "simd") && simd::available();
+    let overhead_ns = pool::global().dispatch_overhead_ns();
+    let largest = (*bits_list.last().unwrap(), *rank_list.last().unwrap());
+
+    println!(
+        "\n=== kernel matrix sweep: {{scalar,simd}} x {{scoped,pool}} (d={d}, simd {}) ===",
+        if simd_on { "on" } else { "off/fallback" }
+    );
+    println!(
+        "{:<5} {:<5} {:<3} {:<14} {:>9} {:>11} {:>12} {:>9}",
+        "bits", "rank", "m", "quadrant", "ns/MAC", "latency(us)", "tokens/s", "speedup"
+    );
+    println!("{}", "-".repeat(76));
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rng = Pcg64::seeded(13);
+    for &bits in bits_list {
+        for &rank in rank_list {
+            let (mut ql, _) = layer(d, rank, bits);
+            if rank == 0 {
+                ql.a = None;
+                ql.b = None;
+                ql.rank = 0;
+            }
+            for &m in slot_list {
+                let xs: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+                let mut ys = vec![0f32; m * d];
+                let mut ws = Workspace::default();
+                let macs = (m * d * d) as f64;
+                let mut t = Traffic::default();
+                ql.gemv_multi(&xs, m, &mut ys, SubMode::Fused, &mut ws, &mut t);
+                let wbpt = t.weight_bytes as f64 / m as f64;
+                let mut measure = |path: simd::Path, disp: pool::Dispatch| -> f64 {
+                    simd::force_path(Some(path));
+                    pool::force_dispatch(Some(disp));
+                    let r = bench.run("quadrant", || {
+                        let mut tt = Traffic::default();
+                        ql.gemv_multi(&xs, m, &mut ys, SubMode::Fused, &mut ws, &mut tt);
+                    });
+                    simd::force_path(None);
+                    pool::force_dispatch(None);
+                    r.min_s
+                };
+                let mut quad: Vec<(&str, &str, f64)> = Vec::new();
+                for (pname, path) in [("scalar", simd::Path::Scalar), ("simd", simd::Path::Simd)] {
+                    for (dname, disp) in
+                        [("scoped", pool::Dispatch::Scoped), ("pool", pool::Dispatch::Pool)]
+                    {
+                        quad.push((pname, dname, measure(path, disp)));
+                    }
+                }
+                // de-noise the two corner quadrants once before judging
+                let base_s = quad[0].2.min(measure(simd::Path::Scalar, pool::Dispatch::Scoped));
+                let best_s = quad[3].2.min(measure(simd::Path::Simd, pool::Dispatch::Pool));
+                quad[0].2 = base_s;
+                quad[3].2 = best_s;
+                for &(pname, dname, min_s) in &quad {
+                    let ns_mac = min_s * 1e9 / macs;
+                    let lat_us = min_s * 1e6;
+                    let tps = m as f64 / min_s;
+                    let speed = base_s / min_s;
+                    println!(
+                        "{:<5} {:<5} {:<3} {:<14} {:>9.4} {:>11.1} {:>12.0} {:>8.2}x",
+                        bits,
+                        rank,
+                        m,
+                        format!("{pname}+{dname}"),
+                        ns_mac,
+                        lat_us,
+                        tps,
+                        speed
+                    );
+                    rows.push(Json::obj(vec![
+                        ("d", Json::from(d)),
+                        ("bits", Json::from(bits as usize)),
+                        ("rank", Json::from(rank)),
+                        ("slots", Json::from(m)),
+                        ("path", Json::from(pname)),
+                        ("dispatch", Json::from(dname)),
+                        ("ns_per_mac", Json::from(ns_mac)),
+                        ("latency_us", Json::from(lat_us)),
+                        ("tokens_per_s", Json::from(tps)),
+                        ("weight_bytes_per_token", Json::from(wbpt)),
+                    ]));
+                }
+                if simd_on && m == 8 {
+                    if (bits, rank) == largest {
+                        assert!(
+                            best_s < base_s,
+                            "simd+pool ({:.4} ns/MAC) must beat scalar+scoped ({:.4} ns/MAC) \
+                             at the largest shape bits={bits} rank={rank} m={m}",
+                            best_s * 1e9 / macs,
+                            base_s * 1e9 / macs
+                        );
+                    } else if best_s >= base_s {
+                        eprintln!(
+                            "warning: simd+pool did not beat scalar+scoped at bits={bits} \
+                             rank={rank} m={m} ({:.4} vs {:.4} ns/MAC)",
+                            best_s * 1e9 / macs,
+                            base_s * 1e9 / macs
+                        );
+                    }
+                }
+            }
+        }
+    }
+    let n_rows = rows.len();
+    let doc = Json::obj(vec![
+        ("bench", Json::from("kernel_matrix")),
+        ("schema_version", Json::from(1usize)),
+        ("unit", Json::from("fused weight-stationary gemv_multi, one square decode layer")),
+        ("simd_feature", Json::from(cfg!(feature = "simd"))),
+        ("simd_available", Json::from(simd::available())),
+        ("threads", Json::from(pool::decode_threads())),
+        ("pool_workers", Json::from(pool::global().workers())),
+        ("pool_dispatch_overhead_ns", Json::from(overhead_ns as usize)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_kernels.json", doc.to_string_pretty())?;
+    println!("\nwrote BENCH_kernels.json ({n_rows} quadrant rows)");
+    Ok(doc)
 }
 
 /// End-to-end speculative sweep on a synthesized checkpoint: for each
@@ -474,9 +627,10 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    let kernel_matrix = kernel_matrix_sweep(&bench)?;
     let mut spec_rows = speculative_sweep(fast())?;
     spec_rows.extend(sampled_temperature_sweep(fast())?);
-    batched_decode_sweep(&bench, spec_rows)?;
+    batched_decode_sweep(&bench, spec_rows, kernel_matrix)?;
 
     // PJRT kernel artifacts
     if have_artifacts() {

@@ -21,7 +21,8 @@
 //! memory effects, not simulated sleeps.
 
 use crate::quant::groupwise::{self, QuantParams};
-use crate::quant::pack::{pack_codes, unpack_codes, word_codes};
+use crate::quant::pack::{pack_codes, unpack_codes};
+use crate::tensor::simd;
 
 /// Byte-traffic and dispatch accounting (one per engine/bench run).
 #[derive(Debug, Clone, Default)]
@@ -92,17 +93,56 @@ pub struct Workspace {
     pub ytile: Vec<f32>,
 }
 
-/// Work floor (MACs) below which row-parallel kernels stay serial: at toy
-/// sizes the scoped-thread fan-out costs more than it saves.
-const PAR_MIN_MACS: usize = 1 << 22;
+/// Clamp range for the parallel work floor (MACs). The floor itself is
+/// derived from the persistent pool's *measured* dispatch overhead (see
+/// [`par_floor_macs`]); the clamp keeps a mis-calibrated measurement
+/// from either serializing real kernels (upper bound = the old hard
+/// 4M-MAC floor) or fanning out toy ones (lower bound 256K MACs).
+const PAR_FLOOR_MIN_MACS: usize = 1 << 18;
+const PAR_FLOOR_MAX_MACS: usize = 1 << 22;
 
-/// Worker count for a row-parallel kernel invocation of `macs` total work:
-/// 1 (serial) under the floor, otherwise the `FBQ_THREADS` pool width.
+/// Fan out only when each extra worker amortizes its dispatch cost this
+/// many times over, assuming ~1 scalar MAC/ns: a kernel at the floor
+/// spends ≲1/16 of its serial runtime on pool dispatch.
+const MACS_PER_OVERHEAD_NS: usize = 16;
+
+/// Work floor (MACs) below which row-parallel kernels stay serial,
+/// re-derived once per process from the persistent pool's measured
+/// dispatch overhead instead of the old hard 4M-MAC cliff (which kept
+/// mid-size kernels — e.g. rank-64 sub-branch A/B at small m — serial
+/// even though pool dispatch is nearly free). `FBQ_PAR_FLOOR` overrides
+/// the measurement (in MACs) for benchmarking.
+pub(crate) fn par_floor_macs() -> usize {
+    static FLOOR: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *FLOOR.get_or_init(|| {
+        if let Ok(v) = std::env::var("FBQ_PAR_FLOOR") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        if crate::util::pool::decode_threads() <= 1 {
+            return PAR_FLOOR_MAX_MACS; // serial config: floor is moot
+        }
+        let overhead_ns = crate::util::pool::global().dispatch_overhead_ns() as usize;
+        (overhead_ns * MACS_PER_OVERHEAD_NS).clamp(PAR_FLOOR_MIN_MACS, PAR_FLOOR_MAX_MACS)
+    })
+}
+
+/// Worker count for a row-parallel kernel invocation of `macs` total
+/// work: 1 (serial) under the floor, then ramping one extra worker per
+/// floor's-worth of MACs up to the `FBQ_THREADS` pool width — monotone
+/// non-decreasing in `macs`, so no granularity cliff.
 pub(crate) fn plan_threads(macs: usize) -> usize {
-    if macs < PAR_MIN_MACS {
+    plan_threads_with(macs, par_floor_macs(), crate::util::pool::decode_threads())
+}
+
+/// [`plan_threads`] with the floor and pool width explicit (unit tests
+/// pin the ramp shape without depending on machine timing).
+pub(crate) fn plan_threads_with(macs: usize, floor: usize, threads: usize) -> usize {
+    if threads <= 1 || macs < floor {
         return 1;
     }
-    crate::util::pool::decode_threads()
+    threads.min(macs / floor + 1)
 }
 
 /// Split `n` rows into at most `parts` contiguous `(start, end)` chunks.
@@ -136,7 +176,9 @@ pub(crate) fn scatter_tile(tile: &[f32], m: usize, out: usize, o0: usize, ys: &m
 
 /// Shared row-parallel scaffold for the weight-stationary kernels: run
 /// `fill(lo, hi, tile)` over chunks of `n_rows` output rows — serially
-/// when `threads <= 1`, otherwise on scoped workers that each own a
+/// when `threads <= 1`, otherwise fanned out over the persistent worker
+/// pool (`util::pool`; the per-call scoped-spawn baseline remains
+/// selectable via `pool::force_dispatch`), each worker owning a
 /// disjoint slice of the same `ytile` scratch (no per-chunk allocation)
 /// — then scatter the `[rows, m]` tile back into slot-major `ys`. Every
 /// output element is produced by exactly one `fill` invocation, so the
@@ -166,12 +208,15 @@ pub(crate) fn row_parallel<F>(
             tiles.push(tile);
             rest = tail;
         }
-        std::thread::scope(|s| {
-            for (&(lo, hi), tile) in chunks.iter().zip(tiles) {
-                let fill = &fill;
-                s.spawn(move || fill(lo, hi, tile));
-            }
-        });
+        let fill = &fill;
+        let jobs: Vec<crate::util::pool::Task<'_>> = chunks
+            .iter()
+            .zip(tiles)
+            .map(|(&(lo, hi), tile)| {
+                Box::new(move || fill(lo, hi, tile)) as crate::util::pool::Task<'_>
+            })
+            .collect();
+        crate::util::pool::run_jobs(jobs);
     }
     scatter_tile(ytile, m, n_rows, 0, ys);
 }
@@ -243,7 +288,7 @@ impl QuantLinear {
     ) {
         debug_assert_eq!(x.len(), self.cin);
         debug_assert_eq!(y.len(), self.out);
-        let Workspace { dequant, xa, xs, xsum, .. } = ws;
+        let Workspace { dequant, xa, xs, xsum, ytile, .. } = ws;
         // optional AWQ column scaling, applied once — both branches then
         // read the scaled buffer.
         let x: &[f32] = match &self.col_scale {
@@ -256,13 +301,13 @@ impl QuantLinear {
         };
         match mode {
             SubMode::None => {
-                self.gemv_main_fused(x, y, xsum, t);
+                self.gemv_main_fused(x, y, xsum, ytile, t);
             }
             SubMode::Fused => {
                 // kernel 1: down-projection (xa stays hot for kernel 2)
                 let has_sub = self.compute_xa(x, xa, t);
                 // kernel 2: dequant + main GEMV + up-projection, one pass
-                self.gemv_main_fused(x, y, xsum, t);
+                self.gemv_main_fused(x, y, xsum, ytile, t);
                 if has_sub {
                     self.add_up_projection_inline(xa, y, t);
                 }
@@ -303,46 +348,39 @@ impl QuantLinear {
 
     /// Fused single-pass main path: dequantize per packed word inside the
     /// accumulation loop using the per-group partial-sum identity
-    /// Σ (c−z)·s·x = s·(Σ c·x − z·Σ x). `xsum` is caller-provided scratch
-    /// (the hot loop stays allocation-free).
-    fn gemv_main_fused(&self, x: &[f32], y: &mut [f32], xsum: &mut Vec<f32>, t: &mut Traffic) {
+    /// Σ (c−z)·s·x = s·(Σ c·x − z·Σ x). `xsum`/`ytile` are
+    /// caller-provided scratch (the hot loop stays allocation-free).
+    ///
+    /// This is the `m = 1` case of the weight-stationary row kernel
+    /// ([`QuantLinear::fused_rows_multi`]) — one implementation serves
+    /// both shapes, so the single-slot decode path gets the vectorized
+    /// unpack+dot core, software prefetch, and (above the work floor)
+    /// the persistent-pool row fan-out for free.
+    fn gemv_main_fused(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        xsum: &mut Vec<f32>,
+        ytile: &mut Vec<f32>,
+        t: &mut Traffic,
+    ) {
         t.kernel_launches += 1;
         t.bytes_read += self.code_bytes() + self.meta_bytes() + 4 * self.cin as u64;
         t.weight_bytes += self.code_bytes() + self.meta_bytes();
         t.bytes_written += 4 * self.out as u64;
         t.macs += (self.out * self.cin) as u64;
         let ngroups = self.cin / self.group;
-        let words_per_group = self.group / 8;
-        let words_per_row = self.cin / 8;
         // per-group Σx is shared across all output rows: precompute.
         xsum.clear();
         xsum.resize(ngroups, 0.0);
         for g in 0..ngroups {
             xsum[g] = x[g * self.group..(g + 1) * self.group].iter().sum();
         }
-        for o in 0..self.out {
-            let row_words = &self.packed[o * words_per_row..(o + 1) * words_per_row];
-            let mut acc = 0f32;
-            for g in 0..ngroups {
-                let scale = self.scales[o * ngroups + g];
-                let zero = self.zeros[o * ngroups + g];
-                let mut s1 = 0f32;
-                for wi in 0..words_per_group {
-                    let codes = word_codes(row_words[g * words_per_group + wi]);
-                    let xb = &x[g * self.group + wi * 8..g * self.group + wi * 8 + 8];
-                    s1 += codes[0] * xb[0]
-                        + codes[1] * xb[1]
-                        + codes[2] * xb[2]
-                        + codes[3] * xb[3]
-                        + codes[4] * xb[4]
-                        + codes[5] * xb[5]
-                        + codes[6] * xb[6]
-                        + codes[7] * xb[7];
-                }
-                acc += scale * (s1 - zero * xsum[g]);
-            }
-            y[o] = acc;
-        }
+        let threads = plan_threads(self.out * self.cin);
+        let xsum: &[f32] = xsum;
+        row_parallel(self.out, 1, threads, ytile, y, |lo, hi, tile| {
+            self.fused_rows_multi(x, 1, lo, hi, xsum, tile);
+        });
     }
 
     /// xa = A·x (kernel; returns false when the layer has no sub-branch).
@@ -379,7 +417,10 @@ impl QuantLinear {
     /// Dequantize the whole matrix into `dq` (the un-fused pipeline's
     /// materialization kernel). Iterates group-major like
     /// [`QuantLinear::gemv_main_fused`] — scale/zero are loop-invariant
-    /// per group, so the baseline pays no per-element integer division.
+    /// per group, so the baseline pays no per-element integer division —
+    /// with the per-group unpack/scale vectorized via
+    /// `simd::dequant_group` (element-wise, so the lane path is
+    /// trivially bit-identical to scalar).
     fn dequant_to(&self, dq: &mut Vec<f32>, t: &mut Traffic) {
         t.kernel_launches += 1;
         t.bytes_read += self.code_bytes() + self.meta_bytes();
@@ -390,19 +431,24 @@ impl QuantLinear {
         let ngroups = self.cin / self.group;
         let words_per_group = self.group / 8;
         let words_per_row = self.cin / 8;
+        let path = simd::active();
         for o in 0..self.out {
             let row_words = &self.packed[o * words_per_row..(o + 1) * words_per_row];
+            if o + 1 < self.out {
+                let next = &self.packed[(o + 1) * words_per_row..(o + 2) * words_per_row];
+                simd::prefetch_words(next);
+            }
             let drow = &mut dq[o * self.cin..(o + 1) * self.cin];
             for g in 0..ngroups {
                 let scale = self.scales[o * ngroups + g];
                 let zero = self.zeros[o * ngroups + g];
-                for wi in 0..words_per_group {
-                    let codes = word_codes(row_words[g * words_per_group + wi]);
-                    let base = g * self.group + wi * 8;
-                    for (j, &c) in codes.iter().enumerate() {
-                        drow[base + j] = (c - zero) * scale;
-                    }
-                }
+                simd::dequant_group(
+                    &row_words[g * words_per_group..(g + 1) * words_per_group],
+                    scale,
+                    zero,
+                    &mut drow[g * self.group..(g + 1) * self.group],
+                    path,
+                );
             }
         }
     }
@@ -419,11 +465,11 @@ impl QuantLinear {
     /// float operations to `gemv(&xs[i*cin..], ..)` — batched and
     /// sequential decode produce identical logits.
     ///
-    /// Output rows are fanned out over scoped worker threads when the
-    /// call is large enough (`FBQ_THREADS` workers, see
-    /// [`crate::util::pool::decode_threads`]); each output element is
-    /// still computed by exactly one worker with the same operation
-    /// order, so threading never changes results.
+    /// Output rows are fanned out over the persistent worker pool when
+    /// the call is large enough (`FBQ_THREADS` workers, see
+    /// [`crate::util::pool`]); each output element is still computed by
+    /// exactly one worker with the same operation order, so threading
+    /// never changes results.
     pub fn gemv_multi(
         &self,
         xs: &[f32],
@@ -550,9 +596,17 @@ impl QuantLinear {
     }
 
     /// Weight-stationary inner kernel over output rows `lo..hi`: unpack
-    /// each packed word once, apply it to all `m` activation rows while
-    /// hot. `tile` is `[hi-lo, m]` row-major. Per activation row the float
-    /// operation order matches [`QuantLinear::gemv_main_fused`] exactly.
+    /// each packed word once per activation row while the word is hot in
+    /// cache, accumulating in the crate-wide canonical lane order
+    /// (`tensor::simd`): per word, code `j` multiplies lane `j` into an
+    /// independent accumulator (no FMA), and each row's eight lanes
+    /// reduce through the fixed `simd::reduce8` tree at group end. The
+    /// scalar and AVX2/NEON paths of `simd::accum_group` perform those
+    /// float ops identically, so the lane path never changes results —
+    /// per activation row the operation order matches
+    /// [`QuantLinear::gemv_main_fused`] (its `m = 1` case) exactly.
+    /// `tile` is `[hi-lo, m]` row-major. The next row's packed words are
+    /// software-prefetched while the current row computes.
     fn fused_rows_multi(
         &self,
         xs: &[f32],
@@ -565,44 +619,44 @@ impl QuantLinear {
         let ngroups = self.cin / self.group;
         let words_per_group = self.group / 8;
         let words_per_row = self.cin / 8;
+        let path = simd::active();
         // per-row scratch: stack for realistic slot counts, heap beyond
         // (the hot loop stays allocation-free up to 16 slots)
         const STACK_M: usize = 16;
-        let mut s1_arr = [0f32; STACK_M];
+        let mut lanes_arr = [0f32; 8 * STACK_M];
         let mut acc_arr = [0f32; STACK_M];
-        let mut s1_vec = Vec::new();
+        let mut lanes_vec = Vec::new();
         let mut acc_vec = Vec::new();
-        let (s1, acc): (&mut [f32], &mut [f32]) = if m <= STACK_M {
-            (&mut s1_arr[..m], &mut acc_arr[..m])
+        let (lanes, acc): (&mut [f32], &mut [f32]) = if m <= STACK_M {
+            (&mut lanes_arr[..8 * m], &mut acc_arr[..m])
         } else {
-            s1_vec.resize(m, 0.0);
+            lanes_vec.resize(8 * m, 0.0);
             acc_vec.resize(m, 0.0);
-            (&mut s1_vec[..], &mut acc_vec[..])
+            (&mut lanes_vec[..], &mut acc_vec[..])
         };
         for o in lo..hi {
             let row_words = &self.packed[o * words_per_row..(o + 1) * words_per_row];
+            if o + 1 < hi {
+                let next = &self.packed[(o + 1) * words_per_row..(o + 2) * words_per_row];
+                simd::prefetch_words(next);
+            }
             acc.iter_mut().for_each(|v| *v = 0.0);
             for g in 0..ngroups {
                 let scale = self.scales[o * ngroups + g];
                 let zero = self.zeros[o * ngroups + g];
-                s1.iter_mut().for_each(|v| *v = 0.0);
-                for wi in 0..words_per_group {
-                    let codes = word_codes(row_words[g * words_per_group + wi]);
-                    let off = g * self.group + wi * 8;
-                    for (i, s) in s1.iter_mut().enumerate() {
-                        let xb = &xs[i * self.cin + off..i * self.cin + off + 8];
-                        *s += codes[0] * xb[0]
-                            + codes[1] * xb[1]
-                            + codes[2] * xb[2]
-                            + codes[3] * xb[3]
-                            + codes[4] * xb[4]
-                            + codes[5] * xb[5]
-                            + codes[6] * xb[6]
-                            + codes[7] * xb[7];
-                    }
-                }
+                lanes.iter_mut().for_each(|v| *v = 0.0);
+                simd::accum_group(
+                    &row_words[g * words_per_group..(g + 1) * words_per_group],
+                    xs,
+                    m,
+                    self.cin,
+                    g * self.group,
+                    lanes,
+                    path,
+                );
                 for i in 0..m {
-                    acc[i] += scale * (s1[i] - zero * xsum[i * ngroups + g]);
+                    let s1 = simd::reduce8(&lanes[i * 8..i * 8 + 8]);
+                    acc[i] += scale * (s1 - zero * xsum[i * ngroups + g]);
                 }
             }
             tile[(o - lo) * m..(o - lo + 1) * m].copy_from_slice(&*acc);
@@ -963,9 +1017,9 @@ mod tests {
 
     #[test]
     fn gemv_multi_above_parallel_floor_stays_exact() {
-        // 8 * 512 * 1024 MACs crosses PAR_MIN_MACS, so with >1 available
-        // cores this exercises the row-parallel fan-out path; results must
-        // stay bit-identical to the per-row kernel either way.
+        // 8 * 512 * 1024 MACs crosses even the maximum parallel floor, so
+        // with >1 available cores this exercises the pool fan-out path;
+        // results must stay bit-identical to the per-row kernel either way.
         let mut rng = Pcg64::seeded(47);
         let (ql, _) = make_layer(&mut rng, 512, 1024, 16, 4, 128, false);
         let m = 8usize;
@@ -978,6 +1032,96 @@ mod tests {
             let mut yv = vec![0f32; 512];
             ql.gemv(&xs[i * 1024..(i + 1) * 1024], &mut yv, SubMode::Fused, &mut ws, &mut t);
             assert_eq!(&ym[i * 512..(i + 1) * 512], &yv[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn plan_threads_ramp_is_monotone_and_honors_floor_and_width() {
+        let floor = 1 << 18;
+        for threads in [1usize, 2, 4, 8, 16] {
+            let mut prev = 0usize;
+            for shift in 10..=26 {
+                let macs = 1usize << shift;
+                let t = plan_threads_with(macs, floor, threads);
+                assert!(t >= 1 && t <= threads.max(1), "macs {macs} threads {threads} -> {t}");
+                assert!(t >= prev, "thread count must be monotone in MACs ({prev} -> {t})");
+                prev = t;
+            }
+            if threads > 1 {
+                assert_eq!(plan_threads_with(floor - 1, floor, threads), 1, "below floor = serial");
+                assert!(plan_threads_with(floor, floor, threads) >= 2, "at floor fans out");
+                assert_eq!(
+                    plan_threads_with(floor * threads * 4, floor, threads),
+                    threads,
+                    "large calls saturate the pool width"
+                );
+            }
+        }
+        // FBQ_THREADS=0/1 semantics: serial no matter the work size
+        assert_eq!(plan_threads_with(usize::MAX / 2, floor, 1), 1);
+        // the derived floor is always inside the clamp (or env-pinned)
+        if std::env::var("FBQ_PAR_FLOOR").is_err() {
+            let f = par_floor_macs();
+            assert!((PAR_FLOOR_MIN_MACS..=PAR_FLOOR_MAX_MACS).contains(&f), "floor {f}");
+        }
+    }
+
+    #[test]
+    fn row_parallel_conserves_rows_in_both_dispatch_modes() {
+        use crate::util::pool::{force_dispatch, Dispatch};
+        let mut rng = Pcg64::seeded(48);
+        for mode in [Dispatch::Pool, Dispatch::Scoped] {
+            for _ in 0..6 {
+                let n_rows = 1 + rng.below(97);
+                let m = 1 + rng.below(5);
+                let threads = 1 + rng.below(9); // includes serial and oversubscribed
+                let mut ytile = Vec::new();
+                let mut ys = vec![0f32; m * n_rows];
+                force_dispatch(Some(mode));
+                row_parallel(n_rows, m, threads, &mut ytile, &mut ys, |lo, hi, tile| {
+                    for r in lo..hi {
+                        for i in 0..m {
+                            tile[(r - lo) * m + i] += (r * 10 + i) as f32 + 1.0;
+                        }
+                    }
+                });
+                force_dispatch(None);
+                for r in 0..n_rows {
+                    for i in 0..m {
+                        assert_eq!(
+                            ys[i * n_rows + r],
+                            (r * 10 + i) as f32 + 1.0,
+                            "{mode:?} n={n_rows} m={m} t={threads}: row {r} slot {i} \
+                             written zero or multiple times"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_parallel_panicking_fill_surfaces_error_and_recovers() {
+        let mut ytile = Vec::new();
+        let mut ys = vec![0f32; 64];
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            row_parallel(64, 1, 4, &mut ytile, &mut ys, |lo, _hi, _tile| {
+                if lo > 0 {
+                    panic!("poisoned worker chunk at {lo}");
+                }
+            });
+        }));
+        assert!(res.is_err(), "worker panic must surface, not deadlock");
+        // the pool survives: the same call without the panic completes
+        let mut ytile = Vec::new();
+        let mut ys = vec![0f32; 64];
+        row_parallel(64, 1, 4, &mut ytile, &mut ys, |lo, hi, tile| {
+            for r in lo..hi {
+                tile[r - lo] = r as f32;
+            }
+        });
+        for (r, v) in ys.iter().enumerate() {
+            assert_eq!(*v, r as f32);
         }
     }
 

@@ -1040,44 +1040,49 @@ impl NativeEngine {
             return;
         }
         let chunks = kernels::split_rows(vocab, threads);
-        std::thread::scope(|s| {
-            let handles: Vec<_> = chunks
-                .iter()
-                .map(|&(lo, hi)| {
-                    s.spawn(move || {
-                        let mut tile = vec![0f32; (hi - lo) * n_full];
-                        let mut lbest = vec![(f32::NEG_INFINITY, 0u32); n_amax];
-                        for o in lo..hi {
-                            let wrow = &self.lm_head[o * d..(o + 1) * d];
-                            for i in 0..n_full {
-                                tile[(o - lo) * n_full + i] =
-                                    ops::dot(&h_full[i * d..(i + 1) * d], wrow);
-                            }
-                            for j in 0..n_amax {
-                                let v = ops::dot(&h_amax[j * d..(j + 1) * d], wrow);
-                                if v > lbest[j].0 {
-                                    lbest[j] = (v, o as u32);
-                                }
+        // per-chunk scratch owned by the submitter so pool workers only
+        // borrow disjoint &mut slices (no allocation inside the jobs)
+        let mut tiles: Vec<Vec<f32>> = chunks
+            .iter()
+            .map(|&(lo, hi)| vec![0f32; (hi - lo) * n_full])
+            .collect();
+        let mut lbests: Vec<Vec<(f32, u32)>> =
+            vec![vec![(f32::NEG_INFINITY, 0u32); n_amax]; chunks.len()];
+        let jobs: Vec<crate::util::pool::Task<'_>> = chunks
+            .iter()
+            .zip(tiles.iter_mut().zip(lbests.iter_mut()))
+            .map(|(&(lo, hi), (tile, lbest))| {
+                Box::new(move || {
+                    for o in lo..hi {
+                        let wrow = &self.lm_head[o * d..(o + 1) * d];
+                        for i in 0..n_full {
+                            tile[(o - lo) * n_full + i] =
+                                ops::dot(&h_full[i * d..(i + 1) * d], wrow);
+                        }
+                        for j in 0..n_amax {
+                            let v = ops::dot(&h_amax[j * d..(j + 1) * d], wrow);
+                            if v > lbest[j].0 {
+                                lbest[j] = (v, o as u32);
                             }
                         }
-                        (lo, hi, tile, lbest)
-                    })
-                })
-                .collect();
-            for hnd in handles {
-                let (lo, hi, tile, lbest) = hnd.join().expect("lm-head worker panicked");
-                for o in lo..hi {
-                    for i in 0..n_full {
-                        flat[i * vocab + o] = tile[(o - lo) * n_full + i];
                     }
-                }
-                for j in 0..n_amax {
-                    if lbest[j].0 > best[j].0 {
-                        best[j] = lbest[j];
-                    }
+                }) as crate::util::pool::Task<'_>
+            })
+            .collect();
+        crate::util::pool::run_jobs(jobs);
+        // merge in ascending chunk order: strict `>` keeps first-max ties
+        for (&(lo, hi), (tile, lbest)) in chunks.iter().zip(tiles.iter().zip(lbests.iter())) {
+            for o in lo..hi {
+                for i in 0..n_full {
+                    flat[i * vocab + o] = tile[(o - lo) * n_full + i];
                 }
             }
-        });
+            for j in 0..n_amax {
+                if lbest[j].0 > best[j].0 {
+                    best[j] = lbest[j];
+                }
+            }
+        }
     }
 }
 
@@ -1137,15 +1142,18 @@ fn attention_rows(
         tiles.push(tile);
         rest = tail;
     }
-    std::thread::scope(|s| {
-        for (&(lo, hi), tile) in chunks.iter().zip(tiles) {
-            let gather = &gather;
-            s.spawn(move || {
+    let gather = &gather;
+    let jobs: Vec<crate::util::pool::Task<'_>> = chunks
+        .iter()
+        .zip(tiles)
+        .map(|(&(lo, hi), tile)| {
+            Box::new(move || {
                 let mut local: Vec<f32> = Vec::new();
                 for r in lo..hi {
                     gather(r, &mut tile[(r - lo) * d..(r - lo + 1) * d], &mut local);
                 }
-            });
-        }
-    });
+            }) as crate::util::pool::Task<'_>
+        })
+        .collect();
+    crate::util::pool::run_jobs(jobs);
 }

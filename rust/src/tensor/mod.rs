@@ -2,6 +2,7 @@
 //! algebra and NN ops the native engine is built on.
 
 pub mod ops;
+pub mod simd;
 pub mod tensor;
 
 pub use tensor::Tensor;

@@ -19,25 +19,15 @@ pub fn matmul_t(x: &[f32], w: &[f32], y: &mut [f32], n: usize, cin: usize, out: 
     }
 }
 
-/// Unrolled dot product with 4 independent accumulators.
+/// Dot product in the crate-wide canonical 8-lane accumulation order
+/// (`tensor::simd`): eight independent lane accumulators, a fixed
+/// reduction tree, a sequential tail. Dispatches to the runtime-detected
+/// AVX2/NEON kernel when the `simd` feature is on — bit-identical to
+/// the scalar lane reference by construction, so the dense sub-branch,
+/// lm-head and attention paths never depend on which path ran.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    for c in 0..chunks {
-        let i = c * 8;
-        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
-        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
-        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
-        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
-    }
-    let mut tail = 0f32;
-    for i in chunks * 8..n {
-        tail += a[i] * b[i];
-    }
-    s0 + s1 + s2 + s3 + tail
+    crate::tensor::simd::dot(a, b)
 }
 
 /// y += alpha * x (axpy)

@@ -1,0 +1,555 @@
+//! Vectorized lane kernels for the decode hot loop, plus the runtime
+//! path control that keeps them bit-identical to the scalar reference.
+//!
+//! Every quantized kernel in this crate accumulates in one **canonical
+//! lane order**: for each packed 32-bit word, code `j` multiplies
+//! activation lane `j` into an independent accumulator `lanes[j]`
+//! (separate multiply and add — never an FMA), and a group's eight lane
+//! accumulators reduce through the fixed tree
+//! `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` ([`reduce8`]). The scalar
+//! implementations below *are* that definition; the AVX2/NEON variants
+//! perform the identical float operations per lane in the identical
+//! order, so `simd` and `scalar` paths agree **element-exactly** — the
+//! scalar path stays the bit-exactness oracle for every identity test.
+//!
+//! The vector paths compile only with the `simd` cargo feature and are
+//! runtime-detected (AVX2 on x86_64, NEON on aarch64); without the
+//! feature, on other arches, or when detection fails, every entry point
+//! falls back to the scalar lane kernels. `FBQ_SIMD=0` disables the
+//! vector path at runtime; [`force_path`] pins it programmatically
+//! (bench quadrants, oracle tests).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which lane-kernel implementation a call should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// Portable scalar lane kernels — the bit-exactness oracle.
+    Scalar,
+    /// Runtime-detected AVX2/NEON kernels (falls back to scalar when
+    /// the `simd` feature is off or the CPU lacks the extension).
+    Simd,
+}
+
+/// 0 = default (env + detection), 1 = force scalar, 2 = force simd.
+static FORCE: AtomicU8 = AtomicU8::new(0);
+
+/// Pin the lane-kernel path for the whole process (`None` restores the
+/// default of "vectorize when available"). Bench quadrants and the
+/// scalar-vs-SIMD oracle tests use this; concurrent callers see the
+/// flip immediately, and both settings are always *correct* — only the
+/// instruction sequence changes, never the result.
+pub fn force_path(p: Option<Path>) {
+    let v = match p {
+        None => 0,
+        Some(Path::Scalar) => 1,
+        Some(Path::Simd) => 2,
+    };
+    FORCE.store(v, Ordering::SeqCst);
+}
+
+/// True when a vector extension is compiled in *and* present at runtime.
+pub fn available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        return is_x86_feature_detected!("avx2");
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        return std::arch::is_aarch64_feature_detected!("neon");
+    }
+    #[allow(unreachable_code)]
+    false
+}
+
+fn default_is_simd() -> bool {
+    static DEFAULT: OnceLock<bool> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        if !available() {
+            return false;
+        }
+        match std::env::var("FBQ_SIMD") {
+            Ok(v) => v.trim() != "0",
+            Err(_) => true,
+        }
+    })
+}
+
+/// The path the lane kernels will take right now.
+#[inline]
+pub fn active() -> Path {
+    match FORCE.load(Ordering::Relaxed) {
+        1 => Path::Scalar,
+        2 => {
+            if available() {
+                Path::Simd
+            } else {
+                Path::Scalar
+            }
+        }
+        _ => {
+            if default_is_simd() {
+                Path::Simd
+            } else {
+                Path::Scalar
+            }
+        }
+    }
+}
+
+/// The canonical 8-lane reduction tree shared by the scalar and vector
+/// paths: `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+#[inline(always)]
+pub fn reduce8(l: &[f32]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Unpack the eight 4-bit codes of one packed word as floats (code `j`
+/// occupies bits `[4j, 4j+4)`). Mirrors `quant::pack::word_codes`;
+/// duplicated here so the lane kernels are self-contained.
+#[inline(always)]
+fn word_lanes(word: u32) -> [f32; 8] {
+    [
+        (word & 0xF) as f32,
+        ((word >> 4) & 0xF) as f32,
+        ((word >> 8) & 0xF) as f32,
+        ((word >> 12) & 0xF) as f32,
+        ((word >> 16) & 0xF) as f32,
+        ((word >> 20) & 0xF) as f32,
+        ((word >> 24) & 0xF) as f32,
+        ((word >> 28) & 0xF) as f32,
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// dot
+// ---------------------------------------------------------------------------
+
+/// Dense dot product in the canonical lane order, dispatched on
+/// [`active`]. Scalar and vector paths return bit-identical results.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_path(a, b, active())
+}
+
+/// [`dot`] with an explicit path (oracle tests compare the two).
+#[inline]
+pub fn dot_path(a: &[f32], b: &[f32], path: Path) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match path {
+        Path::Scalar => dot_scalar(a, b),
+        Path::Simd => dot_simd(a, b),
+    }
+}
+
+/// Scalar reference: 8 independent lane accumulators over the main
+/// body, [`reduce8`], then a sequential tail for `len % 8` elements.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 8;
+    let mut l = [0f32; 8];
+    for c in 0..chunks {
+        let i = c * 8;
+        l[0] += a[i] * b[i];
+        l[1] += a[i + 1] * b[i + 1];
+        l[2] += a[i + 2] * b[i + 2];
+        l[3] += a[i + 3] * b[i + 3];
+        l[4] += a[i + 4] * b[i + 4];
+        l[5] += a[i + 5] * b[i + 5];
+        l[6] += a[i + 6] * b[i + 6];
+        l[7] += a[i + 7] * b[i + 7];
+    }
+    let mut acc = reduce8(&l);
+    for i in chunks * 8..n {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+#[inline]
+fn dot_simd(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return unsafe { neon::dot(a, b) };
+        }
+    }
+    dot_scalar(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// fused unpack + lane-accumulate over one quantization group
+// ---------------------------------------------------------------------------
+
+/// Unpack every word of one quantization group and lane-accumulate the
+/// code/activation products for `m` activation rows:
+///
+/// `lanes[i*8 + j] += code_j(words[wi]) * xs[i*xstride + off + wi*8 + j]`
+///
+/// for all `wi` (ascending) and slots `i`. The caller owns zeroing
+/// `lanes`, reducing each row's 8 lanes via [`reduce8`], and applying
+/// the per-group scale/zero identity. Scalar and vector paths perform
+/// identical per-lane float ops in identical order.
+#[inline]
+pub fn accum_group(
+    words: &[u32],
+    xs: &[f32],
+    m: usize,
+    xstride: usize,
+    off: usize,
+    lanes: &mut [f32],
+    path: Path,
+) {
+    debug_assert!(lanes.len() >= 8 * m);
+    debug_assert!(xs.len() >= (m - 1) * xstride + off + words.len() * 8);
+    match path {
+        Path::Scalar => accum_group_scalar(words, xs, m, xstride, off, lanes),
+        Path::Simd => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            {
+                if is_x86_feature_detected!("avx2") {
+                    return unsafe { avx2::accum_group(words, xs, m, xstride, off, lanes) };
+                }
+            }
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            {
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    return unsafe { neon::accum_group(words, xs, m, xstride, off, lanes) };
+                }
+            }
+            accum_group_scalar(words, xs, m, xstride, off, lanes)
+        }
+    }
+}
+
+fn accum_group_scalar(
+    words: &[u32],
+    xs: &[f32],
+    m: usize,
+    xstride: usize,
+    off: usize,
+    lanes: &mut [f32],
+) {
+    for i in 0..m {
+        let l = &mut lanes[i * 8..i * 8 + 8];
+        let xrow = i * xstride + off;
+        for (wi, &w) in words.iter().enumerate() {
+            let codes = word_lanes(w);
+            let xb = &xs[xrow + wi * 8..xrow + wi * 8 + 8];
+            l[0] += codes[0] * xb[0];
+            l[1] += codes[1] * xb[1];
+            l[2] += codes[2] * xb[2];
+            l[3] += codes[3] * xb[3];
+            l[4] += codes[4] * xb[4];
+            l[5] += codes[5] * xb[5];
+            l[6] += codes[6] * xb[6];
+            l[7] += codes[7] * xb[7];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dequantize one group
+// ---------------------------------------------------------------------------
+
+/// Dequantize one group's packed words:
+/// `out[wi*8 + j] = (code_j(words[wi]) - zero) * scale`.
+/// Element-wise, so scalar and vector paths are trivially bit-identical.
+#[inline]
+pub fn dequant_group(words: &[u32], scale: f32, zero: f32, out: &mut [f32], path: Path) {
+    debug_assert!(out.len() >= words.len() * 8);
+    match path {
+        Path::Scalar => dequant_group_scalar(words, scale, zero, out),
+        Path::Simd => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            {
+                if is_x86_feature_detected!("avx2") {
+                    return unsafe { avx2::dequant_group(words, scale, zero, out) };
+                }
+            }
+            #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+            {
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    return unsafe { neon::dequant_group(words, scale, zero, out) };
+                }
+            }
+            dequant_group_scalar(words, scale, zero, out)
+        }
+    }
+}
+
+fn dequant_group_scalar(words: &[u32], scale: f32, zero: f32, out: &mut [f32]) {
+    for (wi, &w) in words.iter().enumerate() {
+        let codes = word_lanes(w);
+        let ob = &mut out[wi * 8..wi * 8 + 8];
+        for j in 0..8 {
+            ob[j] = (codes[j] - zero) * scale;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// software prefetch
+// ---------------------------------------------------------------------------
+
+/// Prefetch the packed code words of an upcoming row into L1 so the
+/// unpack loop streams from cache instead of stalling on DRAM. No-op
+/// off x86_64 (aarch64 has no stable prefetch intrinsic) and without
+/// the `simd` feature.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline(always)]
+pub fn prefetch_words(words: &[u32]) {
+    use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+    let base = words.as_ptr() as *const i8;
+    let bytes = std::mem::size_of_val(words);
+    let mut off = 0usize;
+    while off < bytes {
+        // SAFETY: `base + off` stays inside the `words` allocation.
+        unsafe { _mm_prefetch::<_MM_HINT_T0>(base.add(off)) };
+        off += 64;
+    }
+}
+
+/// Prefetch stub for targets without a stable prefetch intrinsic.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline(always)]
+pub fn prefetch_words(_words: &[u32]) {}
+
+// ---------------------------------------------------------------------------
+// AVX2
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Per-lane accumulate + the shared scalar tail/reduction; lane `j`
+    /// of `acc` sees exactly the ops of `dot_scalar`'s `l[j]`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut l = [0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), acc);
+        let mut s = super::reduce8(&l);
+        for i in chunks * 8..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// Word unpack via variable right-shift + mask, then lane-parallel
+    /// mul/add (kept separate so no FMA contraction can occur).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accum_group(
+        words: &[u32],
+        xs: &[f32],
+        m: usize,
+        xstride: usize,
+        off: usize,
+        lanes: &mut [f32],
+    ) {
+        let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let mask = _mm256_set1_epi32(0xF);
+        for i in 0..m {
+            let lp = lanes.as_mut_ptr().add(i * 8);
+            let mut acc = _mm256_loadu_ps(lp);
+            let xbase = xs.as_ptr().add(i * xstride + off);
+            for (wi, &w) in words.iter().enumerate() {
+                let wv = _mm256_set1_epi32(w as i32);
+                let codes =
+                    _mm256_cvtepi32_ps(_mm256_and_si256(_mm256_srlv_epi32(wv, shifts), mask));
+                let xv = _mm256_loadu_ps(xbase.add(wi * 8));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(codes, xv));
+            }
+            _mm256_storeu_ps(lp, acc);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_group(words: &[u32], scale: f32, zero: f32, out: &mut [f32]) {
+        let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let mask = _mm256_set1_epi32(0xF);
+        let vz = _mm256_set1_ps(zero);
+        let vs = _mm256_set1_ps(scale);
+        for (wi, &w) in words.iter().enumerate() {
+            let wv = _mm256_set1_epi32(w as i32);
+            let codes = _mm256_cvtepi32_ps(_mm256_and_si256(_mm256_srlv_epi32(wv, shifts), mask));
+            let v = _mm256_mul_ps(_mm256_sub_ps(codes, vz), vs);
+            _mm256_storeu_ps(out.as_mut_ptr().add(wi * 8), v);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Negative vector shifts = logical right shifts for the unpack.
+    const SH_LO: [i32; 4] = [0, -4, -8, -12];
+    const SH_HI: [i32; 4] = [-16, -20, -24, -28];
+
+    /// Two 4-lane halves mirror `dot_scalar`'s `l[0..4]` / `l[4..8]`;
+    /// `vmulq`+`vaddq` stay separate (never `vmlaq`, which fuses).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let pa = a.as_ptr().add(c * 8);
+            let pb = b.as_ptr().add(c * 8);
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa), vld1q_f32(pb)));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4))));
+        }
+        let mut l = [0f32; 8];
+        vst1q_f32(l.as_mut_ptr(), acc0);
+        vst1q_f32(l.as_mut_ptr().add(4), acc1);
+        let mut s = super::reduce8(&l);
+        for i in chunks * 8..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn accum_group(
+        words: &[u32],
+        xs: &[f32],
+        m: usize,
+        xstride: usize,
+        off: usize,
+        lanes: &mut [f32],
+    ) {
+        let sh_lo = vld1q_s32(SH_LO.as_ptr());
+        let sh_hi = vld1q_s32(SH_HI.as_ptr());
+        let mask = vdupq_n_u32(0xF);
+        for i in 0..m {
+            let lp = lanes.as_mut_ptr().add(i * 8);
+            let mut acc0 = vld1q_f32(lp);
+            let mut acc1 = vld1q_f32(lp.add(4));
+            let xbase = xs.as_ptr().add(i * xstride + off);
+            for (wi, &w) in words.iter().enumerate() {
+                let wv = vdupq_n_u32(w);
+                let c0 = vcvtq_f32_u32(vandq_u32(vshlq_u32(wv, sh_lo), mask));
+                let c1 = vcvtq_f32_u32(vandq_u32(vshlq_u32(wv, sh_hi), mask));
+                let xp = xbase.add(wi * 8);
+                acc0 = vaddq_f32(acc0, vmulq_f32(c0, vld1q_f32(xp)));
+                acc1 = vaddq_f32(acc1, vmulq_f32(c1, vld1q_f32(xp.add(4))));
+            }
+            vst1q_f32(lp, acc0);
+            vst1q_f32(lp.add(4), acc1);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequant_group(words: &[u32], scale: f32, zero: f32, out: &mut [f32]) {
+        let sh_lo = vld1q_s32(SH_LO.as_ptr());
+        let sh_hi = vld1q_s32(SH_HI.as_ptr());
+        let mask = vdupq_n_u32(0xF);
+        let vz = vdupq_n_f32(zero);
+        let vs = vdupq_n_f32(scale);
+        for (wi, &w) in words.iter().enumerate() {
+            let wv = vdupq_n_u32(w);
+            let c0 = vcvtq_f32_u32(vandq_u32(vshlq_u32(wv, sh_lo), mask));
+            let c1 = vcvtq_f32_u32(vandq_u32(vshlq_u32(wv, sh_hi), mask));
+            let op = out.as_mut_ptr().add(wi * 8);
+            vst1q_f32(op, vmulq_f32(vsubq_f32(c0, vz), vs));
+            vst1q_f32(op.add(4), vmulq_f32(vsubq_f32(c1, vz), vs));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn rand_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn dot_scalar_matches_sequential_sum_within_eps() {
+        let mut rng = Pcg64::seeded(7);
+        for n in [0usize, 1, 7, 8, 9, 24, 31, 100] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+            let got = dot_scalar(&a, &b) as f64;
+            assert!(
+                (naive - got).abs() <= 1e-4 * (n.max(1) as f64),
+                "n={n}: naive {naive} vs lane {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_paths_are_bit_identical_to_scalar() {
+        // When the feature/hardware is absent the Simd path falls back
+        // to scalar, so this holds (trivially) on every build.
+        let mut rng = Pcg64::seeded(11);
+        for n in [1usize, 8, 16, 24, 31, 40, 104, 257] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            assert_eq!(
+                dot_path(&a, &b, Path::Scalar).to_bits(),
+                dot_path(&a, &b, Path::Simd).to_bits(),
+                "dot diverged at n={n}"
+            );
+        }
+        for (m, nwords) in [(1usize, 1usize), (3, 4), (8, 13), (17, 5)] {
+            let words: Vec<u32> = (0..nwords).map(|_| rng.next_u32()).collect();
+            let xstride = nwords * 8 + 3;
+            let xs = rand_vec(&mut rng, m * xstride);
+            let mut lanes_a = vec![0.125f32; 8 * m];
+            let mut lanes_b = lanes_a.clone();
+            accum_group(&words, &xs, m, xstride, 0, &mut lanes_a, Path::Scalar);
+            accum_group(&words, &xs, m, xstride, 0, &mut lanes_b, Path::Simd);
+            for (x, y) in lanes_a.iter().zip(&lanes_b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "accum_group m={m} nw={nwords}");
+            }
+            let mut out_a = vec![0f32; nwords * 8];
+            let mut out_b = out_a.clone();
+            dequant_group(&words, 0.37, 5.0, &mut out_a, Path::Scalar);
+            dequant_group(&words, 0.37, 5.0, &mut out_b, Path::Simd);
+            assert_eq!(out_a, out_b);
+        }
+    }
+
+    #[test]
+    fn word_lanes_match_pack_word_codes() {
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..64 {
+            let w = rng.next_u32();
+            assert_eq!(word_lanes(w), crate::quant::pack::word_codes(w));
+        }
+    }
+
+    #[test]
+    fn prefetch_is_safe_on_any_slice() {
+        prefetch_words(&[]);
+        let v: Vec<u32> = (0..33).collect();
+        prefetch_words(&v);
+    }
+}

@@ -1,18 +1,296 @@
-//! Minimal scoped thread pool (offline substitute for rayon).
+//! Thread-pool utilities: the persistent pinned worker pool behind the
+//! row-parallel decode kernels, plus a scoped `parallel_map` (offline
+//! substitute for rayon) for batch evaluation and benchmark fan-out.
 //!
-//! Used for data-parallel work: batch evaluation, quantization sweeps
-//! and benchmark fan-out. [`decode_threads`] (the `FBQ_THREADS` knob)
-//! also sizes the row-parallel decode kernels in `engine::kernels`,
-//! which spawn their own scoped workers over disjoint output-row slices;
-//! those only fan out above a multi-million-MAC work floor (see
-//! `engine::kernels::plan_threads`), so the spawn/join cost is amortized
-//! against >=1ms of compute per call — a persistent worker pool would
-//! shave that further (ROADMAP). The serving coordinator's own
-//! scheduling uses dedicated long-lived threads instead (see
-//! `coordinator::server`).
+//! # Persistent pool
+//!
+//! The decode hot loop calls a row-parallel kernel thousands of times
+//! per second; spawning a fresh `std::thread::scope` per call pays
+//! clone/join syscalls each time. [`WorkerPool`] instead spawns
+//! `decode_threads() - 1` long-lived workers **once** (lazily, on first
+//! parallel kernel call), parks them on channel receives between
+//! steps, and pins each to a core on Linux (`FBQ_PIN=0` opts out).
+//! [`WorkerPool::run_scoped`] dispatches borrowed closures: the first
+//! job runs on the calling thread (the "leader") while the rest
+//! round-robin over the workers, and the call blocks on a completion
+//! latch before returning — which is what makes lending non-`'static`
+//! borrows to the long-lived workers sound. A panicking job poisons the
+//! latch and re-panics on the submitter after every sibling finishes,
+//! so a dying step surfaces an error instead of deadlocking and the
+//! pool stays usable.
+//!
+//! `FBQ_THREADS` still bounds the worker count (`0`/`1` = serial, no
+//! workers at all); [`force_dispatch`] lets benches and tests pin the
+//! per-call scoped-spawn fallback for A/B comparison. Pool dispatch
+//! overhead is measured once at startup ([`WorkerPool::dispatch_overhead_ns`])
+//! and feeds the kernel-side fan-out floor (`engine::kernels::plan_threads`).
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+/// A borrowed unit of work, callable exactly once.
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+// ---------------------------------------------------------------------------
+// dispatch mode
+// ---------------------------------------------------------------------------
+
+/// How [`run_jobs`] fans work out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Spawn a fresh `std::thread::scope` per call (the pre-pool
+    /// behavior, kept as the A/B baseline).
+    Scoped,
+    /// Reuse the lazily-spawned persistent [`WorkerPool`] (default).
+    Pool,
+}
+
+/// 0 = default (pool), 1 = scoped, 2 = pool.
+static FORCE_DISPATCH: AtomicU8 = AtomicU8::new(0);
+
+/// Pin the fan-out mechanism for the whole process (`None` restores the
+/// pool default). Both modes partition work identically, so results
+/// never depend on this — only dispatch latency does.
+pub fn force_dispatch(d: Option<Dispatch>) {
+    let v = match d {
+        None => 0,
+        Some(Dispatch::Scoped) => 1,
+        Some(Dispatch::Pool) => 2,
+    };
+    FORCE_DISPATCH.store(v, Ordering::SeqCst);
+}
+
+/// The fan-out mechanism [`run_jobs`] will use right now.
+pub fn dispatch_mode() -> Dispatch {
+    match FORCE_DISPATCH.load(Ordering::Relaxed) {
+        1 => Dispatch::Scoped,
+        _ => Dispatch::Pool,
+    }
+}
+
+/// Run borrowed jobs to completion via the current [`dispatch_mode`].
+/// Blocks until every job has finished; panics (after completion of the
+/// siblings) if any job panicked.
+pub fn run_jobs(jobs: Vec<Task<'_>>) {
+    match dispatch_mode() {
+        Dispatch::Pool => global().run_scoped(jobs),
+        Dispatch::Scoped => {
+            std::thread::scope(|s| {
+                for job in jobs {
+                    s.spawn(job);
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// completion latch
+// ---------------------------------------------------------------------------
+
+/// Counts outstanding dispatched jobs; the submitter blocks on it so
+/// borrowed closures never outlive their frame. `poisoned` records a
+/// worker-side panic to re-raise on the submitter.
+struct Latch {
+    left: Mutex<usize>,
+    cv: Condvar,
+    poisoned: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { left: Mutex::new(n), cv: Condvar::new(), poisoned: AtomicBool::new(false) }
+    }
+
+    fn done(&self) {
+        let mut g = self.left.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.left.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the pool
+// ---------------------------------------------------------------------------
+
+struct Job(Box<dyn FnOnce() + Send + 'static>);
+
+/// Long-lived, core-pinned workers parked on channel receives between
+/// kernel calls. See the module docs for the dispatch/soundness model.
+pub struct WorkerPool {
+    txs: Vec<mpsc::Sender<Job>>,
+    overhead_ns: u64,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` parked worker threads (0 = a serial pool that
+    /// runs everything inline on the submitter).
+    fn spawn(workers: usize) -> WorkerPool {
+        let pin = match std::env::var("FBQ_PIN") {
+            Ok(v) => v.trim() != "0",
+            Err(_) => true,
+        };
+        let mut txs = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            std::thread::Builder::new()
+                .name(format!("fbq-pool-{i}"))
+                .spawn(move || {
+                    if pin {
+                        pin_current_thread(i + 1);
+                    }
+                    while let Ok(job) = rx.recv() {
+                        (job.0)();
+                    }
+                })
+                .expect("failed to spawn fbq pool worker");
+            txs.push(tx);
+        }
+        let mut pool = WorkerPool { txs, overhead_ns: 0 };
+        pool.overhead_ns = pool.calibrate();
+        pool
+    }
+
+    /// Number of parked workers (the submitting thread adds one more
+    /// lane of parallelism on top).
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Measured wall-clock cost of one empty full-width dispatch
+    /// (round-trip: wake every worker, run nothing, settle the latch).
+    /// The kernel fan-out floor is derived from this.
+    pub fn dispatch_overhead_ns(&self) -> u64 {
+        self.overhead_ns
+    }
+
+    fn calibrate(&self) -> u64 {
+        if self.txs.is_empty() {
+            return 0;
+        }
+        let nop_round = |pool: &WorkerPool| {
+            let jobs: Vec<Task<'_>> =
+                (0..pool.txs.len() + 1).map(|_| Box::new(|| {}) as Task<'_>).collect();
+            pool.run_scoped(jobs);
+        };
+        // warm the workers out of their first park before timing
+        for _ in 0..2 {
+            nop_round(self);
+        }
+        const ROUNDS: u32 = 8;
+        let t0 = std::time::Instant::now();
+        for _ in 0..ROUNDS {
+            nop_round(self);
+        }
+        (t0.elapsed().as_nanos() as u64 / u64::from(ROUNDS)).max(1)
+    }
+
+    /// Run borrowed jobs to completion. Job 0 executes on the calling
+    /// thread while the rest round-robin over the parked workers; the
+    /// call returns only after every job has finished (or panicked), at
+    /// which point a worker-side panic is re-raised here.
+    pub fn run_scoped(&self, mut jobs: Vec<Task<'_>>) {
+        match jobs.len() {
+            0 => return,
+            1 => return (jobs.pop().expect("len checked"))(),
+            _ => {}
+        }
+        if self.txs.is_empty() {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let leader_job = jobs.remove(0);
+        let latch = Arc::new(Latch::new(jobs.len()));
+        for (w, job) in jobs.into_iter().enumerate() {
+            let latch = Arc::clone(&latch);
+            // SAFETY: `run_scoped` blocks on the latch below until every
+            // dispatched job has run (the wrapper settles the latch on
+            // success *and* panic), so the borrows captured in `job`
+            // strictly outlive its execution even though the worker
+            // thread sees a 'static closure.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + '_>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            let wrapped = Job(Box::new(move || {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    latch.poisoned.store(true, Ordering::SeqCst);
+                }
+                latch.done();
+            }));
+            if let Err(err) = self.txs[w % self.txs.len()].send(wrapped) {
+                // worker thread gone (only possible after an external
+                // kill): run inline — the wrapper settles the latch
+                let job = err.0;
+                (job.0)();
+            }
+        }
+        let leader = catch_unwind(AssertUnwindSafe(leader_job));
+        // MUST settle before unwinding: workers may still hold borrows
+        // into this frame.
+        latch.wait();
+        if let Err(p) = leader {
+            resume_unwind(p);
+        }
+        if latch.poisoned.load(Ordering::SeqCst) {
+            panic!("fbq worker pool: a dispatched job panicked");
+        }
+    }
+}
+
+/// The process-wide pool, spawned on first use and sized
+/// `decode_threads() - 1` (so `FBQ_THREADS=0`/`1` never spawns workers).
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::spawn(decode_threads().saturating_sub(1)))
+}
+
+/// Best-effort Linux core pinning via a hand-rolled `sched_setaffinity`
+/// binding (std-only crate — no libc dependency). Failure, non-Linux
+/// platforms, or `FBQ_PIN=0` leave the worker floating, which is always
+/// safe.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(core: usize) {
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; 16],
+    }
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    let ncores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16 * 64);
+    if ncores <= 1 {
+        return;
+    }
+    let core = core % ncores;
+    let mut set = CpuSet { bits: [0; 16] };
+    set.bits[core / 64] |= 1u64 << (core % 64);
+    // SAFETY: pid 0 = current thread; the mask outlives the call and
+    // its size is passed alongside. A nonzero return (cgroup cpuset
+    // restrictions etc.) is deliberately ignored.
+    let _ = unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) };
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_core: usize) {}
+
+// ---------------------------------------------------------------------------
+// scoped parallel_map (unchanged API)
+// ---------------------------------------------------------------------------
 
 /// Run `f(i)` for `i in 0..n` on up to `threads` workers, returning results
 /// in index order. Panics in workers are propagated.
@@ -84,6 +362,8 @@ pub fn decode_threads() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Pcg64;
+    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn maps_in_order() {
@@ -101,5 +381,161 @@ mod tests {
     fn more_threads_than_items() {
         let out = parallel_map(3, 64, |i| i);
         assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    /// Every job runs exactly once and writes exactly its own slice —
+    /// work conservation + result placement, under random job counts
+    /// against pools of random widths (including 0 = serial and widths
+    /// far above the job count, i.e. oversubscribed the other way).
+    #[test]
+    fn pool_conserves_work_and_placement() {
+        let mut rng = Pcg64::seeded(42);
+        for trial in 0..12 {
+            let workers = rng.below(5); // 0..=4, 0 exercises the serial path
+            let pool = WorkerPool::spawn(workers);
+            let njobs = 1 + rng.below(33);
+            let per_job = 1 + rng.below(7);
+            let mut out = vec![0usize; njobs * per_job];
+            {
+                let jobs: Vec<Task<'_>> = out
+                    .chunks_mut(per_job)
+                    .enumerate()
+                    .map(|(j, chunk)| {
+                        Box::new(move || {
+                            for (k, slot) in chunk.iter_mut().enumerate() {
+                                *slot += j * 1000 + k + 1;
+                            }
+                        }) as Task<'_>
+                    })
+                    .collect();
+                pool.run_scoped(jobs);
+            }
+            for j in 0..njobs {
+                for k in 0..per_job {
+                    assert_eq!(
+                        out[j * per_job + k],
+                        j * 1000 + k + 1,
+                        "trial {trial}: job {j} lane {k} ran zero or multiple times"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Many jobs over few workers: the round-robin queues drain fully.
+    #[test]
+    fn pool_oversubscribed_counts_every_job() {
+        let pool = WorkerPool::spawn(2);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<Task<'_>> = (0..97)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(hits.load(Ordering::SeqCst), 97);
+    }
+
+    /// A panicking job must surface an error on the submitter (not
+    /// deadlock), the sibling jobs must still run, and the pool must
+    /// stay usable afterwards.
+    #[test]
+    fn pool_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::spawn(3);
+        for round in 0..3 {
+            let survivors = AtomicUsize::new(0);
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                let jobs: Vec<Task<'_>> = (0..8)
+                    .map(|j| {
+                        let survivors = &survivors;
+                        Box::new(move || {
+                            if j == 5 {
+                                panic!("boom {j}");
+                            }
+                            survivors.fetch_add(1, Ordering::SeqCst);
+                        }) as Task<'_>
+                    })
+                    .collect();
+                pool.run_scoped(jobs);
+            }));
+            assert!(result.is_err(), "round {round}: panic was swallowed");
+            assert_eq!(survivors.load(Ordering::SeqCst), 7, "round {round}");
+        }
+        // and a clean dispatch still works on the same workers
+        let ok = AtomicUsize::new(0);
+        let jobs: Vec<Task<'_>> = (0..6)
+            .map(|_| {
+                Box::new(|| {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(ok.load(Ordering::SeqCst), 6);
+    }
+
+    /// A panic on the *leader* job (runs on the submitting thread) also
+    /// propagates, after the workers settle.
+    #[test]
+    fn pool_leader_panic_waits_for_workers() {
+        let pool = WorkerPool::spawn(2);
+        let done = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut jobs: Vec<Task<'_>> = vec![Box::new(|| panic!("leader down"))];
+            for _ in 0..4 {
+                jobs.push(Box::new(|| {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    done.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            pool.run_scoped(jobs);
+        }));
+        assert!(result.is_err());
+        assert_eq!(done.load(Ordering::SeqCst), 4, "leader unwound before workers settled");
+    }
+
+    #[test]
+    fn pool_zero_and_single_job_shortcuts() {
+        let pool = WorkerPool::spawn(2);
+        pool.run_scoped(Vec::new());
+        let mut x = 0u32;
+        pool.run_scoped(vec![Box::new(|| x += 7) as Task<'_>]);
+        assert_eq!(x, 7);
+    }
+
+    #[test]
+    fn calibration_measures_positive_overhead() {
+        let pool = WorkerPool::spawn(2);
+        assert!(pool.dispatch_overhead_ns() > 0);
+        let serial = WorkerPool::spawn(0);
+        assert_eq!(serial.dispatch_overhead_ns(), 0);
+    }
+
+    #[test]
+    fn run_jobs_works_in_both_dispatch_modes() {
+        for mode in [Dispatch::Scoped, Dispatch::Pool] {
+            force_dispatch(Some(mode));
+            let mut out = vec![0usize; 40];
+            {
+                let jobs: Vec<Task<'_>> = out
+                    .chunks_mut(10)
+                    .enumerate()
+                    .map(|(j, chunk)| {
+                        Box::new(move || {
+                            for slot in chunk.iter_mut() {
+                                *slot = j + 1;
+                            }
+                        }) as Task<'_>
+                    })
+                    .collect();
+                run_jobs(jobs);
+            }
+            force_dispatch(None);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i / 10 + 1, "mode {mode:?}");
+            }
+        }
     }
 }

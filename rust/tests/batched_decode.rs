@@ -247,3 +247,16 @@ fn batched_weight_traffic_is_slot_count_independent() {
          (sequential {rs8} vs batched {r8})"
     );
 }
+
+/// With `--features simd` on a capable host this binary's identity
+/// suite runs with the vector lane kernels active by default — pin that
+/// here so the e2e coverage above is real, not a silent scalar
+/// fallback (`tensor::simd` keeps both paths bit-identical).
+#[cfg(feature = "simd")]
+#[test]
+fn simd_feature_smoke() {
+    use fbquant::tensor::simd;
+    if simd::available() {
+        assert_eq!(simd::active(), simd::Path::Simd);
+    }
+}

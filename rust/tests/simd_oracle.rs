@@ -1,0 +1,191 @@
+//! SIMD-vs-scalar bit-exactness oracles.
+//!
+//! The crate's lane kernels (`tensor::simd`) promise that the vector
+//! path performs **identical float operations in identical order** to
+//! the scalar reference, so every result — from a bare dot product to a
+//! full multi-slot engine decode — must agree *exactly* (`==` on f32,
+//! no epsilon) between `Path::Scalar` and `Path::Simd`. On builds
+//! without the `simd` feature or hardware, the Simd path falls back to
+//! scalar and these tests pass trivially; under `--features simd` on
+//! AVX2/NEON hosts they pin the vector kernels bit-for-bit.
+//!
+//! Edge shapes deliberately use odd word counts per row (cin ∈
+//! {24, 40, 104} — `pack_codes` requires cin % 8 == 0, so "odd" means a
+//! non-power-of-two number of packed words) with tiny groups, odd row
+//! counts, and slot counts straddling the kernel's stack/heap scratch
+//! boundary.
+
+use fbquant::engine::kernels::{QuantLinear, Traffic, Workspace};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::quant::groupwise;
+use fbquant::quant::pack::pack_codes;
+use fbquant::tensor::simd::{self, Path};
+use fbquant::util::Pcg64;
+use std::sync::Mutex;
+
+/// `force_path` is process-global: tests that flip it hold this lock
+/// and restore the default on exit (even on panic) so parallel tests in
+/// this binary never observe a pinned path.
+static PATH_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` once under forced-scalar and once under forced-simd,
+/// returning both results. The default path is restored afterwards.
+fn run_both<R>(mut f: impl FnMut() -> R) -> (R, R) {
+    let _g = PATH_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            simd::force_path(None);
+        }
+    }
+    let _restore = Restore;
+    simd::force_path(Some(Path::Scalar));
+    let scalar = f();
+    simd::force_path(Some(Path::Simd));
+    let vector = f();
+    (scalar, vector)
+}
+
+fn randn(rng: &mut Pcg64, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * s).collect()
+}
+
+/// Quantize a random dense weight into a `QuantLinear` at the given
+/// edge shape (group 8 so every cin that is a multiple of 8 works).
+fn mk_layer(
+    out: usize,
+    cin: usize,
+    bits: u8,
+    rank: usize,
+    col_scale: bool,
+    seed: u64,
+) -> QuantLinear {
+    let mut rng = Pcg64::seeded(seed);
+    let w = randn(&mut rng, out * cin, 0.3);
+    let p = groupwise::quant_params(&w, out, cin, bits, 8);
+    let codes = groupwise::quantize(&w, out, cin, &p);
+    QuantLinear {
+        out,
+        cin,
+        bits,
+        group: 8,
+        packed: pack_codes(&codes, out, cin),
+        scales: p.scales,
+        zeros: p.zeros,
+        rank,
+        a: (rank > 0).then(|| randn(&mut rng, rank * cin, 0.02)),
+        b: (rank > 0).then(|| randn(&mut rng, out * rank, 0.02)),
+        col_scale: col_scale.then(|| (0..cin).map(|_| 0.5 + rng.next_f32()).collect()),
+        bias: None,
+    }
+}
+
+/// The bare dot product takes an explicit path — no global state, no
+/// lock — and must agree bitwise at every length class (sub-word,
+/// exact-word, tails of every residue).
+#[test]
+fn dot_is_bit_identical_across_paths() {
+    let mut rng = Pcg64::seeded(101);
+    for n in [1usize, 3, 7, 8, 9, 24, 40, 104, 129, 257] {
+        let a = randn(&mut rng, n, 1.0);
+        let b = randn(&mut rng, n, 1.0);
+        assert_eq!(
+            simd::dot_path(&a, &b, Path::Scalar).to_bits(),
+            simd::dot_path(&a, &b, Path::Simd).to_bits(),
+            "dot diverged at n={n}"
+        );
+    }
+}
+
+/// Every quantized kernel variant — single-row `gemv` and the
+/// weight-stationary `gemv_multi`, at bits ∈ {2, 3, 4} × odd-word-count
+/// cin × {no-sub, sub+col_scale} × every `SubMode` — produces exactly
+/// equal outputs on the scalar and vector paths. m straddles the
+/// kernel's stack-scratch boundary (16) and stays odd elsewhere.
+#[test]
+fn quantized_kernels_are_bit_identical_scalar_vs_simd() {
+    let mut seed = 0x51d0u64;
+    for &bits in &[2u8, 3, 4] {
+        for &cin in &[24usize, 40, 104] {
+            for &(rank, cs) in &[(0usize, false), (5, true)] {
+                seed += 1;
+                let ql = mk_layer(7, cin, bits, rank, cs, seed);
+                let mut rng = Pcg64::seeded(seed ^ 0xfeed);
+                for &m in &[1usize, 3, 16, 17] {
+                    let xs = randn(&mut rng, m * cin, 1.0);
+                    for mode in [SubMode::None, SubMode::Unfused, SubMode::Fused] {
+                        let (ys_scalar, ys_simd) = run_both(|| {
+                            let mut ys = vec![0f32; m * ql.out];
+                            let mut ws = Workspace::default();
+                            let mut t = Traffic::default();
+                            ql.gemv_multi(&xs, m, &mut ys, mode, &mut ws, &mut t);
+                            ys
+                        });
+                        assert_eq!(
+                            ys_scalar, ys_simd,
+                            "bits={bits} cin={cin} rank={rank} cs={cs} m={m} mode={mode:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end oracle: a full multi-slot greedy decode (prefill + 12
+/// batched steps) on a synthesized checkpoint returns bit-identical
+/// logits whether the engine runs the scalar or the vector path — the
+/// whole stack (attention, lm-head, fused quantized layers, the worker
+/// pool) preserves the canonical lane order.
+#[test]
+fn engine_decode_is_bit_identical_scalar_vs_simd() {
+    use fbquant::coordinator::backend::{Backend, NativeBackend, SlotToken};
+    use fbquant::testing::{synth_checkpoint, SynthSpec};
+
+    let store = synth_checkpoint(
+        "simd_oracle",
+        SynthSpec { rank: 4, col_scale: true, ..SynthSpec::default() },
+    );
+    let decode_all = || -> Vec<Vec<f32>> {
+        let engine = NativeEngine::from_store(&store, SubMode::Fused).unwrap();
+        let mut backend = NativeBackend::new(engine, "simd-oracle").with_max_slots(3);
+        let mut state = backend.open_batch(3).unwrap();
+        let mut cur = vec![0u32; 3];
+        let mut all: Vec<Vec<f32>> = Vec::new();
+        for slot in 0..3 {
+            let prompt: Vec<u32> =
+                (0..6 + slot).map(|i| ((slot * 7 + i * 3) % 50) as u32).collect();
+            let lg = backend.prefill_slot(&mut state, slot, &prompt).unwrap();
+            cur[slot] = fbquant::tensor::ops::argmax(&lg) as u32;
+            all.push(lg);
+        }
+        for _ in 0..12 {
+            let toks: Vec<SlotToken> =
+                (0..3).map(|s| SlotToken { slot: s, token: cur[s] }).collect();
+            let lg = backend.decode(&mut state, &toks).unwrap();
+            for (s, l) in lg.iter().enumerate() {
+                cur[s] = fbquant::tensor::ops::argmax(l) as u32;
+            }
+            all.extend(lg);
+        }
+        all
+    };
+    let (scalar, vector) = run_both(decode_all);
+    assert_eq!(scalar, vector, "decode logits diverged between scalar and simd paths");
+}
+
+/// Under `--features simd` on a capable host the vector path must be
+/// the *default* (no forcing), so the rest of this suite — and every
+/// other e2e test binary in the feature-matrix CI job — genuinely
+/// exercises the vector kernels.
+#[cfg(feature = "simd")]
+#[test]
+fn simd_is_the_default_path_when_available() {
+    let _g = PATH_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    simd::force_path(None);
+    if simd::available() {
+        assert_eq!(simd::active(), Path::Simd);
+    } else {
+        assert_eq!(simd::active(), Path::Scalar);
+    }
+}

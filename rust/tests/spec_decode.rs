@@ -522,3 +522,17 @@ fn adaptive_k_keeps_greedy_serving_token_identical() {
         "adaptive windows exceeded k_max somewhere"
     );
 }
+
+/// With `--features simd` on a capable host this binary's speculative
+/// conformance suite runs with the vector lane kernels active by
+/// default — pin that here so the e2e coverage above is real, not a
+/// silent scalar fallback (`tensor::simd` keeps both paths
+/// bit-identical).
+#[cfg(feature = "simd")]
+#[test]
+fn simd_feature_smoke() {
+    use fbquant::tensor::simd;
+    if simd::available() {
+        assert_eq!(simd::active(), simd::Path::Simd);
+    }
+}
