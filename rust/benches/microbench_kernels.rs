@@ -16,6 +16,9 @@
 //!   regardless of K,
 //! * the sampled-speculation sweep: rejection-sampling acceptance vs
 //!   temperature on a draft that genuinely differs from its target,
+//! * the flight-recorder overhead gate: decode tokens/s with tracing
+//!   off / request / kernel, blocking at 3% for the request level
+//!   (emitted as the `tracing` block of `BENCH_decode.json`),
 //! * the PJRT `kernel_fused`/`kernel_unfused` artifacts (the Pallas
 //!   pair lowered by aot.py) — dispatch-count effect at the XLA level.
 
@@ -69,6 +72,7 @@ fn batched_decode_sweep(
     bench: &Bench,
     spec_rows: Vec<Json>,
     kernel_matrix: Json,
+    tracing: Json,
 ) -> anyhow::Result<()> {
     let d: usize = if fast() { 256 } else { 512 };
     let bits_list: &[u8] = if fast() { &[4] } else { &[3, 4] };
@@ -171,6 +175,7 @@ fn batched_decode_sweep(
         ("rows", Json::Arr(rows)),
         ("speculative", Json::Arr(spec_rows)),
         ("kernel_matrix", kernel_matrix),
+        ("tracing", tracing),
     ]);
     std::fs::write("BENCH_decode.json", doc.to_string_pretty())?;
     println!("\nwrote BENCH_decode.json ({n_rows} kernel rows + {n_spec} speculative rows)");
@@ -576,6 +581,101 @@ fn sampled_temperature_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
     Ok(rows)
 }
 
+/// Flight-recorder overhead on the decode hot loop: the same 4-slot
+/// greedy decode measured with the recorder off, at request level, and
+/// at kernel level — interleaved best-of-N so machine drift hits every
+/// arm equally. Off vs request is the blocking 3% gate (request level is
+/// the `FBQ_TRACE` default on the serving path, and every kernel site it
+/// leaves disarmed costs a single relaxed load); kernel level actually
+/// records ~4 events per layer per step and only warns, since it is the
+/// documented heavier opt-in. Returns the `tracing` block that rides in
+/// `BENCH_decode.json`.
+fn tracing_overhead_sweep(bench_fast: bool) -> anyhow::Result<Json> {
+    use fbquant::trace::{self, Level};
+
+    let geom = SynthSpec {
+        d: if bench_fast { 128 } else { 256 },
+        d_ff: if bench_fast { 256 } else { 512 },
+        vocab: 96,
+        group: 32,
+        rank: 8,
+        max_seq: 256,
+        ..SynthSpec::default()
+    };
+    let store = synth_checkpoint("bench_trace", geom);
+    let decode_steps = if bench_fast { 16 } else { 32 };
+    let (m, plen) = (4usize, 8usize);
+    let rounds = if bench_fast { 3 } else { 5 };
+
+    println!(
+        "\n=== flight-recorder overhead: {m}-slot greedy decode, {decode_steps} steps, \
+         best of {rounds} ==="
+    );
+
+    let mut measure = |level: Level| -> anyhow::Result<f64> {
+        trace::set_level(level);
+        let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+        let mut backend = NativeBackend::new(engine, "trace-bench").with_max_slots(m);
+        let mut state = backend.open_batch(m)?;
+        let mut cur = vec![0u32; m];
+        for slot in 0..m {
+            let prompt: Vec<u32> =
+                (0..plen).map(|i| ((slot * 11 + i * 7) % 96) as u32).collect();
+            let lg = backend.prefill_slot(&mut state, slot, &prompt)?;
+            cur[slot] = fbquant::tensor::ops::argmax(&lg) as u32;
+        }
+        let t0 = Instant::now();
+        for _ in 0..decode_steps {
+            let toks: Vec<SlotToken> =
+                (0..m).map(|s| SlotToken { slot: s, token: cur[s] }).collect();
+            let lg = backend.decode(&mut state, &toks)?;
+            for (slot, l) in lg.iter().enumerate() {
+                cur[slot] = fbquant::tensor::ops::argmax(l) as u32;
+            }
+        }
+        let tps = (decode_steps * m) as f64 / t0.elapsed().as_secs_f64();
+        trace::set_level(Level::Off);
+        let _ = trace::drain(); // keep the rings from lapping across rounds
+        Ok(tps)
+    };
+
+    let levels = [("off", Level::Off), ("request", Level::Request), ("kernel", Level::Kernel)];
+    let mut best = [0f64; 3];
+    for _ in 0..rounds {
+        for (i, &(_, lvl)) in levels.iter().enumerate() {
+            best[i] = best[i].max(measure(lvl)?);
+        }
+    }
+    let [off_tps, req_tps, ker_tps] = best;
+    for ((name, _), tps) in levels.iter().zip(best.iter()) {
+        println!("{name:<8} {tps:>10.0} tokens/s ({:>6.2}% of off)", 100.0 * tps / off_tps);
+    }
+    assert!(
+        req_tps >= 0.97 * off_tps,
+        "request-level tracing cost the decode loop more than 3%: \
+         {req_tps:.0} vs {off_tps:.0} tokens/s"
+    );
+    if ker_tps < 0.90 * off_tps {
+        eprintln!(
+            "warning: kernel-level tracing cost more than 10%: \
+             {ker_tps:.0} vs {off_tps:.0} tokens/s"
+        );
+    }
+    Ok(Json::obj(vec![
+        (
+            "unit",
+            Json::from("4-slot greedy decode on a synthesized checkpoint, best-of-N tokens/s"),
+        ),
+        ("rounds", Json::from(rounds)),
+        ("decode_steps", Json::from(decode_steps)),
+        ("off_tokens_per_s", Json::from(off_tps)),
+        ("request_tokens_per_s", Json::from(req_tps)),
+        ("kernel_tokens_per_s", Json::from(ker_tps)),
+        ("request_relative", Json::from(req_tps / off_tps)),
+        ("kernel_relative", Json::from(ker_tps / off_tps)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     let sizes: &[usize] = if fast() { &[256, 512] } else { &[256, 512, 1024] };
     let iters = if fast() { 3 } else { 8 };
@@ -627,10 +727,13 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // the overhead gate runs first so its arms see a quiet process, and
+    // leaves the recorder disarmed for the remaining sweeps
+    let tracing = tracing_overhead_sweep(fast())?;
     let kernel_matrix = kernel_matrix_sweep(&bench)?;
     let mut spec_rows = speculative_sweep(fast())?;
     spec_rows.extend(sampled_temperature_sweep(fast())?);
-    batched_decode_sweep(&bench, spec_rows, kernel_matrix)?;
+    batched_decode_sweep(&bench, spec_rows, kernel_matrix, tracing)?;
 
     // PJRT kernel artifacts
     if have_artifacts() {

@@ -231,6 +231,15 @@ pub trait Backend {
         bail!("backend {} does not support speculative decoding", self.name())
     }
 
+    /// Draft and verify wall time (nanoseconds) accumulated by the
+    /// speculative path since the last call, consumed by the serving
+    /// loop's per-phase latency histograms after each
+    /// [`Backend::decode_speculative`]. Backends that don't meter their
+    /// phases return `(0, 0)` (the loop treats zero as "not measured").
+    fn take_step_phases(&mut self) -> (u64, u64) {
+        (0, 0)
+    }
+
     /// Cumulative persistent-weight read bytes (target plus draft), when
     /// the backend meters traffic. The serving loop snapshots this into
     /// [`super::metrics::ServeMetrics`] so weight bytes per generated
@@ -379,6 +388,10 @@ pub struct NativeBackend {
     shadow_bits: u8,
     /// Lower-bit shadow engine, built on the first shadow degrade.
     shadow_engine: Option<NativeEngine>,
+    /// Draft-phase wall time since the last `take_step_phases` (ns).
+    step_draft_ns: u64,
+    /// Verify-phase wall time since the last `take_step_phases` (ns).
+    step_verify_ns: u64,
 }
 
 impl NativeBackend {
@@ -399,6 +412,8 @@ impl NativeBackend {
             shadowed: Vec::new(),
             shadow_bits: 2,
             shadow_engine: None,
+            step_draft_ns: 0,
+            step_verify_ns: 0,
         }
     }
 
@@ -1083,6 +1098,7 @@ impl Backend for NativeBackend {
             .iter()
             .map(|r| if r.sampling.is_sampled() { Some(&r.sampling) } else { None })
             .collect();
+        let draft_t0 = std::time::Instant::now();
         let (drafts, qs): (Vec<Vec<u32>>, Vec<Vec<Vec<f64>>>) = {
             let saved = self.engine.mode;
             if matches!(spec_cfg.draft, DraftMode::NoSub) {
@@ -1101,6 +1117,19 @@ impl Backend for NativeBackend {
             self.engine.mode = saved;
             out
         };
+        let draft_ns = draft_t0.elapsed().as_nanos() as u64;
+        self.step_draft_ns += draft_ns;
+        if crate::trace::request_on() {
+            let end = crate::trace::now_ns();
+            crate::trace::span_closed(
+                crate::trace::Phase::Draft,
+                0,
+                crate::trace::SLOT_NONE,
+                end.saturating_sub(draft_ns),
+                end,
+                ks.iter().sum::<usize>() as u64,
+            );
+        }
 
         // Phase 2: verify — every slot's input token plus all its drafts
         // in ONE multi-position weight-stationary pass over the target.
@@ -1123,6 +1152,7 @@ impl Backend for NativeBackend {
             .iter()
             .map(|s| if s.is_some() { RowsWant::All } else { RowsWant::Argmax })
             .collect();
+        let verify_t0 = std::time::Instant::now();
         let verify: Vec<SlotLogits> = match state {
             BatchState::Native { slots } => {
                 let mut sb = SlotBatch::select(slots, &slot_ids);
@@ -1134,6 +1164,19 @@ impl Backend for NativeBackend {
             }
             _ => unreachable!("state variant validated in phase 0"),
         };
+        let verify_ns = verify_t0.elapsed().as_nanos() as u64;
+        self.step_verify_ns += verify_ns;
+        if crate::trace::request_on() {
+            let end = crate::trace::now_ns();
+            crate::trace::span_closed(
+                crate::trace::Phase::Verify,
+                0,
+                crate::trace::SLOT_NONE,
+                end.saturating_sub(verify_ns),
+                end,
+                groups.iter().map(|g| g.len()).sum::<usize>() as u64,
+            );
+        }
 
         // Phase 3: per-mode acceptance and rollback of rejected
         // positions on both caches. On full acceptance the mirror never
@@ -1189,6 +1232,10 @@ impl Backend for NativeBackend {
     fn weight_bytes(&self) -> Option<u64> {
         let draft = self.spec.as_ref().map_or(0, |s| s.ws.traffic.weight_bytes);
         Some(self.ws.traffic.weight_bytes + draft)
+    }
+
+    fn take_step_phases(&mut self) -> (u64, u64) {
+        (std::mem::take(&mut self.step_draft_ns), std::mem::take(&mut self.step_verify_ns))
     }
 
     fn preemptible(&self) -> bool {

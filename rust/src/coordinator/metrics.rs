@@ -18,9 +18,38 @@
 
 use super::request::{Priority, N_CLASSES};
 use crate::engine::kv::KvPoolStats;
+use crate::util::hist::Hist;
 use crate::util::json::Json;
-use crate::util::timer::LatencyStats;
 use std::time::Instant;
+
+/// Phases with a dedicated latency histogram on [`ServeMetrics`], indexed
+/// into [`ServeMetrics::phases`]. These mirror the flight recorder's span
+/// taxonomy ([`crate::trace::Phase`]) but aggregate constant-memory
+/// distributions instead of individual events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum MetricPhase {
+    /// Prompt prefill per admitted request.
+    Prefill = 0,
+    /// One batched decode step (wall time of the whole step).
+    DecodeStep = 1,
+    /// Speculative drafting share of a decode step.
+    Draft = 2,
+    /// Speculative verification share of a decode step.
+    Verify = 3,
+    /// Sampling share of a decode step.
+    Sampler = 4,
+    /// One KV swap-out or swap-in (overload preempt/resume traffic).
+    KvSwap = 5,
+}
+
+/// Number of [`MetricPhase`] buckets.
+pub const N_PHASES: usize = 6;
+
+/// Phase names, indexed like [`ServeMetrics::phases`] (stable: these are
+/// the Prometheus `phase` label values and the JSON `phases` keys).
+pub const PHASE_NAMES: [&str; N_PHASES] =
+    ["prefill", "decode_step", "draft", "verify", "sampler", "kv_swap"];
 
 /// Speculative-decoding counters for one acceptance mode (greedy argmax
 /// vs stochastic rejection sampling). The serving loop keeps one per
@@ -123,14 +152,18 @@ pub struct ServeMetrics {
     /// (prefill traffic deliberately excluded); 0 otherwise
     pub weight_bytes: u64,
     /// queue wait: request arrival → slot admission
-    pub admission_wait: LatencyStats,
-    pub ttft: LatencyStats,
+    pub admission_wait: Hist,
+    pub ttft: Hist,
     /// server-side inter-token latency: gap between consecutive token
     /// emissions of the same request (speculative bursts record 0-gap
     /// entries for the extra tokens committed in one step)
-    pub itl: LatencyStats,
-    pub per_token: LatencyStats,
-    pub e2e: LatencyStats,
+    pub itl: Hist,
+    pub per_token: Hist,
+    pub e2e: Hist,
+    /// per-phase latency histograms, indexed by [`MetricPhase`]
+    pub phases: [Hist; N_PHASES],
+    /// current degradation controller level (0 = none)
+    pub degrade_level: usize,
     /// latest paged KV-pool snapshot (None on dense/PJRT backends)
     pub kv_pool: Option<KvPoolStats>,
     /// per-priority-class lifecycle counters, indexed by
@@ -166,11 +199,13 @@ impl Default for ServeMetrics {
             spec_greedy: SpecModeStats::default(),
             spec_sampled: SpecModeStats::default(),
             weight_bytes: 0,
-            admission_wait: LatencyStats::new(),
-            ttft: LatencyStats::new(),
-            itl: LatencyStats::new(),
-            per_token: LatencyStats::new(),
-            e2e: LatencyStats::new(),
+            admission_wait: Hist::new(),
+            ttft: Hist::new(),
+            itl: Hist::new(),
+            per_token: Hist::new(),
+            e2e: Hist::new(),
+            phases: std::array::from_fn(|_| Hist::new()),
+            degrade_level: 0,
             kv_pool: None,
             classes: [ClassStats::default(); N_CLASSES],
             swapped_bytes: 0,
@@ -266,6 +301,24 @@ impl ServeMetrics {
     /// Mutable per-class counter bucket for `class`.
     pub fn class(&mut self, class: Priority) -> &mut ClassStats {
         &mut self.classes[class.index()]
+    }
+
+    /// Record one sample into a per-phase latency histogram.
+    pub fn record_phase_us(&mut self, phase: MetricPhase, us: f64) {
+        self.phases[phase as usize].record_us(us);
+    }
+
+    /// Record a nanosecond interval into a per-phase histogram (no-op for
+    /// zero, so absent backend phase timings don't pollute the buckets).
+    pub fn record_phase_ns(&mut self, phase: MetricPhase, ns: u64) {
+        if ns > 0 {
+            self.phases[phase as usize].record_ns(ns);
+        }
+    }
+
+    /// Read access to one phase histogram.
+    pub fn phase(&self, phase: MetricPhase) -> &Hist {
+        &self.phases[phase as usize]
     }
 
     /// Whether any overload machinery fired (preempt, resume, degrade,
@@ -411,6 +464,12 @@ impl ServeMetrics {
             out.push_str("\n  ");
             out.push_str(&line);
         }
+        for (name, h) in PHASE_NAMES.iter().zip(self.phases.iter()) {
+            if h.count() > 0 {
+                out.push_str("\n  ");
+                out.push_str(&h.report(&format!("phase/{name}")));
+            }
+        }
         out
     }
 
@@ -433,12 +492,14 @@ impl ServeMetrics {
             ("weight_bytes", (self.weight_bytes as f64).into()),
             ("swapped_bytes", (self.swapped_bytes as f64).into()),
             ("parked", self.parked.into()),
+            ("degrade_level", self.degrade_level.into()),
             ("classes", self.classes_json()),
             ("admission_wait", lat_json(&self.admission_wait)),
             ("ttft", lat_json(&self.ttft)),
             ("itl", lat_json(&self.itl)),
             ("per_token", lat_json(&self.per_token)),
             ("e2e", lat_json(&self.e2e)),
+            ("phases", self.phases_json()),
         ];
         if self.spec_steps > 0 {
             fields.push((
@@ -470,6 +531,19 @@ impl ServeMetrics {
         Json::obj(fields)
     }
 
+    /// Per-phase latency histograms as a JSON object keyed by phase name
+    /// (only phases that recorded at least one sample appear).
+    fn phases_json(&self) -> Json {
+        Json::obj(
+            PHASE_NAMES
+                .iter()
+                .zip(self.phases.iter())
+                .filter(|(_, h)| h.count() > 0)
+                .map(|(name, h)| (*name, h.to_json()))
+                .collect::<Vec<_>>(),
+        )
+    }
+
     /// Per-class counters as a JSON object keyed by class name. Always
     /// present in [`ServeMetrics::to_json`] (with zeros when the
     /// overload tier never fired) so dashboards and the CI serve-smoke
@@ -498,17 +572,11 @@ impl ServeMetrics {
     }
 }
 
-/// Latency summary as JSON: count, mean and the tail percentiles every
-/// serving dashboard wants.
-fn lat_json(l: &LatencyStats) -> Json {
-    Json::obj(vec![
-        ("n", l.count().into()),
-        ("mean_us", l.mean_us().into()),
-        ("p50_us", l.percentile_us(50.0).into()),
-        ("p95_us", l.percentile_us(95.0).into()),
-        ("p99_us", l.percentile_us(99.0).into()),
-        ("max_us", l.max_us().into()),
-    ])
+/// Latency summary as JSON: count, mean, the tail percentiles every
+/// serving dashboard wants, plus the sparse log-bucket array capturing
+/// distribution shape.
+fn lat_json(l: &Hist) -> Json {
+    l.to_json()
 }
 
 #[cfg(test)]
@@ -577,11 +645,31 @@ mod tests {
         assert_eq!(j.get("cancellations").and_then(Json::as_usize), Some(1));
         for lat in ["ttft", "itl", "e2e"] {
             let l = j.get(lat).unwrap_or_else(|| panic!("missing {lat}"));
-            for k in ["n", "mean_us", "p50_us", "p95_us", "p99_us", "max_us"] {
+            for k in ["n", "mean_us", "p50_us", "p95_us", "p99_us", "max_us", "buckets"] {
                 assert!(l.get(k).is_some(), "{lat} missing {k}");
             }
         }
         assert!(j.get("speculative").is_none(), "no spec steps → no spec block");
+        assert_eq!(j.get("degrade_level").and_then(Json::as_usize), Some(0));
+        assert!(j.get("phases").is_some(), "phases object always present");
+    }
+
+    #[test]
+    fn phase_histograms_record_and_export() {
+        let mut m = ServeMetrics::new();
+        m.record_phase_us(MetricPhase::Draft, 120.0);
+        m.record_phase_ns(MetricPhase::Verify, 90_000);
+        m.record_phase_ns(MetricPhase::Sampler, 0); // zero ns = no sample
+        assert_eq!(m.phase(MetricPhase::Draft).count(), 1);
+        assert_eq!(m.phase(MetricPhase::Verify).count(), 1);
+        assert_eq!(m.phase(MetricPhase::Sampler).count(), 0);
+        assert!((m.phase(MetricPhase::Verify).mean_us() - 90.0).abs() < 1e-9);
+        let phases = m.to_json();
+        let phases = phases.get("phases").unwrap();
+        assert!(phases.get("draft").is_some());
+        assert!(phases.get("verify").is_some());
+        assert!(phases.get("sampler").is_none(), "empty phases stay out of JSON");
+        assert!(m.report().contains("phase/draft"));
     }
 
     #[test]

@@ -30,9 +30,12 @@
 //!   pressure controller that caps speculative K, drops to the bare
 //!   quantized branch, or routes slots through a lower-bit shadow
 //!   engine as pressure rises,
-//! * [`metrics`] — TTFT / per-token latency / throughput, slot-occupancy
-//!   histogram, admission-latency and per-priority-class
-//!   preempt/degrade/shed accounting,
+//! * [`metrics`] — TTFT / per-token latency / throughput as log-bucketed
+//!   histograms, per-phase (prefill/draft/verify/sampler/KV-swap)
+//!   latency distributions, slot-occupancy histogram, admission-latency
+//!   and per-priority-class preempt/degrade/shed accounting,
+//! * [`prom`] — Prometheus text exposition of the above
+//!   (`GET /metrics?format=prometheus`),
 //! * [`workload`] — the trace-driven load generator: Poisson / bursty
 //!   arrivals, lognormal length mixes with straggler tails, templated
 //!   shared prefixes and a greedy/sampled split (drives the `loadgen`
@@ -42,6 +45,7 @@ pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod overload;
+pub mod prom;
 pub mod request;
 pub mod sampler;
 pub mod server;
@@ -51,7 +55,7 @@ pub use backend::{
     Backend, BatchState, NativeBackend, ParkedSlot, PjrtBackend, SlotToken, SpecSlot,
 };
 pub use batcher::{Batcher, BatcherConfig, Submitted};
-pub use metrics::{ClassStats, ServeMetrics, SpecModeStats};
+pub use metrics::{ClassStats, MetricPhase, ServeMetrics, SpecModeStats};
 pub use overload::{DegradeConfig, PressureController};
 pub use request::{GenEvent, GenRequest, GenResponse, Priority, SamplingParams, N_CLASSES};
 pub use sampler::Sampler;

@@ -1,0 +1,337 @@
+//! Prometheus text exposition (format 0.0.4) for [`ServeMetrics`].
+//!
+//! Rendered behind `GET /metrics?format=prometheus` alongside the JSON
+//! snapshot. Counters/gauges carry `class`/`event`/`mode` labels; the
+//! latency histograms reuse the log-bucket bounds of
+//! [`crate::util::hist::Hist`] directly as `le` boundaries (converted to
+//! seconds, per Prometheus convention). Only boundaries whose bucket is
+//! non-empty are emitted (plus the mandatory `+Inf`), which keeps the
+//! exposition compact and is valid: cumulative `_bucket` samples may list
+//! any subset of boundaries.
+
+use super::metrics::{ServeMetrics, PHASE_NAMES};
+use super::request::Priority;
+use crate::util::hist::{bucket_upper_us, Hist};
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{k}=\"{v}\""));
+        }
+        out.push('}');
+    }
+    if value.fract() == 0.0 && value.abs() < 9e15 {
+        out.push_str(&format!(" {}\n", value as i64));
+    } else {
+        out.push_str(&format!(" {value}\n"));
+    }
+}
+
+/// One histogram family whose series differ by a single label
+/// (`label_key=label_val`). Bounds are emitted in seconds.
+fn hist_family(out: &mut String, name: &str, help: &str, label_key: &str, series: &[(&str, &Hist)]) {
+    header(out, name, help, "histogram");
+    let bucket_name = format!("{name}_bucket");
+    for (label_val, h) in series {
+        let labels = [(label_key, *label_val)];
+        let mut cum = 0u64;
+        for (i, &n) in h.bucket_counts().iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            let le = bucket_upper_us(i);
+            if le.is_finite() {
+                let le_s = format!("{}", le / 1e6);
+                sample(
+                    out,
+                    &bucket_name,
+                    &[(label_key, label_val), ("le", le_s.as_str())],
+                    cum as f64,
+                );
+            }
+        }
+        sample(
+            out,
+            &bucket_name,
+            &[(label_key, label_val), ("le", "+Inf")],
+            h.count() as f64,
+        );
+        sample(out, &format!("{name}_sum"), &labels, h.sum_us() / 1e6);
+        sample(out, &format!("{name}_count"), &labels, h.count() as f64);
+    }
+}
+
+/// Render the full exposition document.
+pub fn render(m: &ServeMetrics) -> String {
+    let mut out = String::with_capacity(8192);
+
+    header(&mut out, "fbq_build_info", "Build metadata (value is always 1).", "gauge");
+    sample(&mut out, "fbq_build_info", &[("version", env!("CARGO_PKG_VERSION"))], 1.0);
+
+    header(&mut out, "fbq_uptime_seconds", "Seconds since the coordinator started.", "gauge");
+    sample(&mut out, "fbq_uptime_seconds", &[], m.started.elapsed().as_secs_f64());
+
+    header(&mut out, "fbq_requests_total", "Requests by lifecycle event.", "counter");
+    for (event, v) in [
+        ("in", m.requests_in),
+        ("done", m.requests_done),
+        ("shed", m.requests_shed),
+        ("cancelled", m.cancellations),
+    ] {
+        sample(&mut out, "fbq_requests_total", &[("event", event)], v as f64);
+    }
+
+    header(&mut out, "fbq_tokens_total", "Tokens processed by kind.", "counter");
+    for (kind, v) in [("prefilled", m.tokens_prefilled), ("generated", m.tokens_generated)] {
+        sample(&mut out, "fbq_tokens_total", &[("kind", kind)], v as f64);
+    }
+
+    header(&mut out, "fbq_admissions_total", "Requests admitted into decode slots.", "counter");
+    sample(&mut out, "fbq_admissions_total", &[], m.admissions as f64);
+
+    header(&mut out, "fbq_decode_steps_total", "Batched decode steps executed.", "counter");
+    sample(&mut out, "fbq_decode_steps_total", &[], m.decode_steps as f64);
+
+    header(&mut out, "fbq_decode_tokens_per_second", "Decode throughput over the run.", "gauge");
+    sample(&mut out, "fbq_decode_tokens_per_second", &[], m.decode_tps());
+
+    header(
+        &mut out,
+        "fbq_slot_occupancy_mean",
+        "Mean fraction of the slot pool occupied per decode step.",
+        "gauge",
+    );
+    sample(&mut out, "fbq_slot_occupancy_mean", &[], m.mean_slot_occupancy());
+
+    header(&mut out, "fbq_slots_peak_occupied", "Most slots ever simultaneously live.", "gauge");
+    sample(&mut out, "fbq_slots_peak_occupied", &[], m.peak_occupied as f64);
+
+    header(
+        &mut out,
+        "fbq_weight_bytes_total",
+        "Decode-phase persistent-weight bytes streamed.",
+        "counter",
+    );
+    sample(&mut out, "fbq_weight_bytes_total", &[], m.weight_bytes as f64);
+
+    header(
+        &mut out,
+        "fbq_swapped_bytes_total",
+        "Bytes moved through the KV parking buffer by preemptions.",
+        "counter",
+    );
+    sample(&mut out, "fbq_swapped_bytes_total", &[], m.swapped_bytes as f64);
+
+    header(&mut out, "fbq_parked_requests", "Requests currently swapped out.", "gauge");
+    sample(&mut out, "fbq_parked_requests", &[], m.parked as f64);
+
+    header(
+        &mut out,
+        "fbq_degrade_level",
+        "Current load-adaptive degradation level (0 = none).",
+        "gauge",
+    );
+    sample(&mut out, "fbq_degrade_level", &[], m.degrade_level as f64);
+
+    header(
+        &mut out,
+        "fbq_class_events_total",
+        "Per-priority-class lifecycle and overload events.",
+        "counter",
+    );
+    for (i, c) in m.classes.iter().enumerate() {
+        let class = Priority::from_index(i).name();
+        for (event, v) in [
+            ("submitted", c.submitted),
+            ("done", c.done),
+            ("shed", c.shed),
+            ("preemptions", c.preemptions),
+            ("resumes", c.resumes),
+            ("degrades", c.degrades),
+            ("restores", c.restores),
+        ] {
+            sample(
+                &mut out,
+                "fbq_class_events_total",
+                &[("class", class), ("event", event)],
+                v as f64,
+            );
+        }
+    }
+
+    header(
+        &mut out,
+        "fbq_spec_events_total",
+        "Speculative decoding counters by acceptance mode.",
+        "counter",
+    );
+    for (mode, s) in [("greedy", &m.spec_greedy), ("sampled", &m.spec_sampled)] {
+        for (event, v) in [
+            ("steps", s.steps),
+            ("proposed", s.proposed),
+            ("accepted", s.accepted),
+            ("committed", s.committed),
+        ] {
+            sample(
+                &mut out,
+                "fbq_spec_events_total",
+                &[("mode", mode), ("event", event)],
+                v as f64,
+            );
+        }
+    }
+
+    if let Some(p) = &m.kv_pool {
+        header(&mut out, "fbq_kv_pages_total", "KV pool page capacity.", "gauge");
+        sample(&mut out, "fbq_kv_pages_total", &[], p.pages_total as f64);
+        header(&mut out, "fbq_kv_pages_in_use", "KV pool pages currently in use.", "gauge");
+        sample(&mut out, "fbq_kv_pages_in_use", &[], p.pages_in_use as f64);
+        header(&mut out, "fbq_kv_prefix_lookups_total", "Prefix-cache lookups.", "counter");
+        sample(&mut out, "fbq_kv_prefix_lookups_total", &[], p.prefix_lookups as f64);
+        header(&mut out, "fbq_kv_prefix_hits_total", "Prefix-cache hits.", "counter");
+        sample(&mut out, "fbq_kv_prefix_hits_total", &[], p.prefix_hits as f64);
+        header(&mut out, "fbq_kv_cow_copies_total", "Copy-on-write page copies.", "counter");
+        sample(&mut out, "fbq_kv_cow_copies_total", &[], p.cow_copies as f64);
+        header(&mut out, "fbq_kv_alloc_failures_total", "Failed KV page allocations.", "counter");
+        sample(&mut out, "fbq_kv_alloc_failures_total", &[], p.alloc_failures as f64);
+    }
+
+    hist_family(
+        &mut out,
+        "fbq_latency_seconds",
+        "Request latency distributions by kind.",
+        "kind",
+        &[
+            ("admission_wait", &m.admission_wait),
+            ("ttft", &m.ttft),
+            ("itl", &m.itl),
+            ("per_token", &m.per_token),
+            ("e2e", &m.e2e),
+        ],
+    );
+
+    let phase_series: Vec<(&str, &Hist)> =
+        PHASE_NAMES.iter().copied().zip(m.phases.iter()).collect();
+    hist_family(
+        &mut out,
+        "fbq_phase_seconds",
+        "Per-phase decode latency distributions.",
+        "phase",
+        &phase_series,
+    );
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::MetricPhase;
+
+    /// Minimal exposition-syntax check: every line is a comment or
+    /// `name[{labels}] value` with a parseable value.
+    fn assert_valid_exposition(text: &str) {
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (metric, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad: {line}"));
+            assert!(value.parse::<f64>().is_ok() || value == "+Inf", "bad value in: {line}");
+            let name_end = metric.find('{').unwrap_or(metric.len());
+            let name = &metric[..name_end];
+            assert!(
+                !name.is_empty()
+                    && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                    && !name.starts_with(|c: char| c.is_ascii_digit()),
+                "bad metric name in: {line}"
+            );
+            if name_end < metric.len() {
+                assert!(metric.ends_with('}'), "unterminated labels in: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn golden_exposition() {
+        let mut m = ServeMetrics::new();
+        m.requests_in = 5;
+        m.requests_done = 3;
+        m.requests_shed = 1;
+        m.tokens_generated = 40;
+        m.admissions = 4;
+        m.degrade_level = 2;
+        m.parked = 1;
+        m.class(Priority::Interactive).submitted = 2;
+        m.class(Priority::Batch).preemptions = 3;
+        m.record_spec_step(false, 4, 3, 3);
+        m.ttft.record_us(1500.0);
+        m.ttft.record_us(2500.0);
+        m.record_phase_us(MetricPhase::Verify, 300.0);
+        let text = render(&m);
+        assert_valid_exposition(&text);
+
+        for needle in [
+            "# TYPE fbq_requests_total counter",
+            "fbq_requests_total{event=\"in\"} 5",
+            "fbq_requests_total{event=\"done\"} 3",
+            "fbq_tokens_total{kind=\"generated\"} 40",
+            "fbq_degrade_level 2",
+            "fbq_parked_requests 1",
+            "fbq_class_events_total{class=\"interactive\",event=\"submitted\"} 2",
+            "fbq_class_events_total{class=\"batch\",event=\"preemptions\"} 3",
+            "fbq_spec_events_total{mode=\"greedy\",event=\"accepted\"} 3",
+            "# TYPE fbq_latency_seconds histogram",
+            "fbq_latency_seconds_bucket{kind=\"ttft\",le=\"+Inf\"} 2",
+            "fbq_latency_seconds_count{kind=\"ttft\"} 2",
+            "# TYPE fbq_phase_seconds histogram",
+            "fbq_phase_seconds_bucket{phase=\"verify\",le=\"+Inf\"} 1",
+            "fbq_phase_seconds_count{phase=\"verify\"} 1",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Histogram sum is in seconds.
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("fbq_latency_seconds_sum{kind=\"ttft\"}"))
+            .expect("ttft sum line");
+        let v: f64 = sum_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+        assert!((v - 0.004).abs() < 1e-9, "ttft sum {v} != 4ms");
+        // Cumulative bucket counts are monotonically non-decreasing.
+        let mut last = 0.0;
+        for l in text.lines().filter(|l| {
+            l.starts_with("fbq_latency_seconds_bucket{kind=\"ttft\"")
+        }) {
+            let v: f64 = l.rsplit_once(' ').unwrap().1.parse().unwrap();
+            assert!(v >= last, "non-monotone buckets: {l}");
+            last = v;
+        }
+        assert_eq!(last, 2.0);
+    }
+
+    #[test]
+    fn empty_metrics_still_render_required_families() {
+        let text = render(&ServeMetrics::new());
+        assert_valid_exposition(&text);
+        for fam in [
+            "fbq_build_info",
+            "fbq_uptime_seconds",
+            "fbq_requests_total",
+            "fbq_latency_seconds",
+            "fbq_phase_seconds",
+        ] {
+            assert!(text.contains(&format!("# TYPE {fam} ")), "missing family {fam}");
+        }
+        // Empty histograms still expose +Inf/sum/count.
+        assert!(text.contains("fbq_latency_seconds_bucket{kind=\"e2e\",le=\"+Inf\"} 0"));
+    }
+}

@@ -152,6 +152,10 @@ pub struct GenResponse {
     pub total_us: f64,
     /// decode-phase seconds (for tk/s accounting)
     pub decode_s: f64,
+    /// admission queue wait (arrival → slot placement)
+    pub queue_us: f64,
+    /// prompt prefill wall time for this request
+    pub prefill_us: f64,
 }
 
 impl GenResponse {
@@ -191,6 +195,8 @@ mod tests {
             ttft_us: 100.0,
             total_us: 400.0,
             decode_s: 2.0,
+            queue_us: 50.0,
+            prefill_us: 30.0,
         };
         assert!((r.decode_tps() - 3.0).abs() < 1e-9);
     }

@@ -53,10 +53,11 @@ use super::backend::{
     validate_batch, validate_request, Backend, BatchState, ParkedSlot, SlotToken, SpecSlot,
 };
 use super::batcher::{effective_class, Batcher, BatcherConfig, Submitted};
-use super::metrics::ServeMetrics;
+use super::metrics::{MetricPhase, ServeMetrics};
 use super::overload::{pressure_signal, DegradeConfig, PressureController};
 use super::request::{GenEvent, GenRequest, GenResponse, Priority};
 use super::sampler::Sampler;
+use crate::trace::{self, Phase};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -111,6 +112,10 @@ struct Active {
     /// preemption: the next step must only re-feed it to the engine,
     /// not emit it a second time
     refeed: bool,
+    /// admission queue wait (arrival → slot placement), for the response
+    queue_us: f64,
+    /// prompt prefill wall time, for the response
+    prefill_us: f64,
 }
 
 /// A preempted request: its scheduling state plus the host-side parking
@@ -162,6 +167,9 @@ struct ServeLoop<'a> {
 impl<'a> ServeLoop<'a> {
     fn new(backend: &'a mut dyn Backend, cfg: &CoordinatorConfig, collect: bool)
         -> Result<ServeLoop<'a>> {
+        // pin the flight-recorder epoch so request timestamps are small
+        // positive offsets from serving start
+        trace::init();
         let continuous = cfg.continuous && backend.continuous();
         let pool_capacity = if cfg.slots > 0 {
             cfg.slots.min(backend.max_batch())
@@ -250,6 +258,7 @@ impl<'a> ServeLoop<'a> {
                 self.parked.swap_remove(pi);
                 self.metrics.parked = self.parked.len();
                 self.metrics.cancellations += 1;
+                trace::instant(Phase::Cancel, id, trace::SLOT_NONE, 0);
                 continue;
             }
             let slot =
@@ -260,6 +269,7 @@ impl<'a> ServeLoop<'a> {
             self.slots[slot] = None;
             self.backend.release_slot(&mut self.state, slot)?;
             self.metrics.cancellations += 1;
+            trace::instant(Phase::Cancel, id, slot as u16, 0);
             to_decode.retain(|st| st.slot != slot);
             to_spec.retain(|sp| sp.slot != slot);
         }
@@ -283,6 +293,7 @@ impl<'a> ServeLoop<'a> {
             if self.sinks.contains_key(&id) {
                 self.metrics.requests_shed += 1;
                 self.metrics.class(req.class).shed += 1;
+                trace::instant(Phase::Reject, id, trace::SLOT_NONE, 0);
                 let _ = s.send(GenEvent::Error {
                     id,
                     message: format!("request id {id} is already in flight"),
@@ -294,6 +305,7 @@ impl<'a> ServeLoop<'a> {
         if let Err(e) = validate_request(self.backend.cfg(), &req) {
             self.metrics.requests_shed += 1;
             self.metrics.class(req.class).shed += 1;
+            trace::instant(Phase::Reject, id, trace::SLOT_NONE, 0);
             if self.collect {
                 // closed loop: nobody watches an event stream — surface
                 // the rejection to the caller
@@ -308,6 +320,7 @@ impl<'a> ServeLoop<'a> {
                 // strictly-lower-class entry; that one sheds instead
                 self.metrics.requests_shed += 1;
                 self.metrics.class(d.class).shed += 1;
+                trace::instant(Phase::Shed, d.id, trace::SLOT_NONE, 0);
                 self.emit(GenEvent::Error {
                     id: d.id,
                     message: "displaced by a higher-priority arrival: request shed".into(),
@@ -318,6 +331,7 @@ impl<'a> ServeLoop<'a> {
             Submitted::Shed(r) => {
                 self.metrics.requests_shed += 1;
                 self.metrics.class(r.class).shed += 1;
+                trace::instant(Phase::Shed, id, trace::SLOT_NONE, 0);
                 self.emit(GenEvent::Error {
                     id,
                     message: "admission queue full: request shed".into(),
@@ -343,6 +357,7 @@ impl<'a> ServeLoop<'a> {
         self.metrics.e2e.record_us(total_us);
         self.metrics.requests_done += 1;
         self.metrics.class(a.req.class).done += 1;
+        trace::instant(Phase::Done, a.req.id, slot as u16, a.output.len() as u64);
         Ok(GenEvent::Done(GenResponse {
             id: a.req.id,
             prompt_len: a.req.prompt.len(),
@@ -350,13 +365,45 @@ impl<'a> ServeLoop<'a> {
             ttft_us: a.ttft_us.unwrap_or(total_us),
             total_us,
             decode_s: a.prefill_done.elapsed().as_secs_f64(),
+            queue_us: a.queue_us,
+            prefill_us: a.prefill_us,
         }))
     }
 
     /// Bookkeeping shared by both admission paths.
-    fn place(&mut self, slot: usize, req: GenRequest, logits: &[f32], wait_us: f64) -> Result<()> {
+    fn place(
+        &mut self,
+        slot: usize,
+        req: GenRequest,
+        logits: &[f32],
+        wait_us: f64,
+        prefill_us: f64,
+    ) -> Result<()> {
         self.metrics.tokens_prefilled += req.prompt.len();
         self.metrics.record_admission(wait_us);
+        self.metrics.record_phase_us(MetricPhase::Prefill, prefill_us);
+        if trace::request_on() {
+            // both spans were measured by the caller: queue wait ended at
+            // admission, prefill ended just now
+            let q0 = trace::instant_ns(req.arrived);
+            trace::span_closed(
+                Phase::Queue,
+                req.id,
+                slot as u16,
+                q0,
+                q0 + (wait_us * 1e3) as u64,
+                0,
+            );
+            let end = trace::now_ns();
+            trace::span_closed(
+                Phase::Prefill,
+                req.id,
+                slot as u16,
+                end.saturating_sub((prefill_us * 1e3) as u64),
+                end,
+                req.prompt.len() as u64,
+            );
+        }
         if req.max_new_tokens == 0 {
             // degenerate budget: complete immediately with zero tokens
             // rather than letting the step loop commit the sampled one
@@ -366,6 +413,7 @@ impl<'a> ServeLoop<'a> {
             self.metrics.e2e.record_us(total_us);
             self.metrics.requests_done += 1;
             self.metrics.class(req.class).done += 1;
+            trace::instant(Phase::Done, req.id, slot as u16, 0);
             self.emit(GenEvent::Done(GenResponse {
                 id: req.id,
                 prompt_len: req.prompt.len(),
@@ -373,6 +421,8 @@ impl<'a> ServeLoop<'a> {
                 ttft_us: total_us,
                 total_us,
                 decode_s: 0.0,
+                queue_us: wait_us,
+                prefill_us,
             }));
             return Ok(());
         }
@@ -387,6 +437,8 @@ impl<'a> ServeLoop<'a> {
             stalls: 0,
             parked_len: usize::MAX,
             refeed: false,
+            queue_us: wait_us,
+            prefill_us,
         });
         Ok(())
     }
@@ -397,8 +449,14 @@ impl<'a> ServeLoop<'a> {
     /// the request sheds with a terminal error — never silently lost.
     fn park_slot(&mut self, slot: usize) -> Result<()> {
         let mut a = self.slots[slot].take().expect("park of an empty slot");
+        let mut sw = trace::span(Phase::SwapOut, a.req.id, slot as u16);
+        let t_swap = Instant::now();
         match self.backend.swap_out(&mut self.state, slot) {
             Ok(kv) => {
+                sw.payload(kv.bytes() as u64);
+                sw.end();
+                self.metrics
+                    .record_phase_us(MetricPhase::KvSwap, t_swap.elapsed().as_secs_f64() * 1e6);
                 if a.parked_len == a.output.len() {
                     // resumed and preempted again without committing a
                     // token: starving, not just unlucky
@@ -413,9 +471,11 @@ impl<'a> ServeLoop<'a> {
                 self.metrics.parked = self.parked.len();
             }
             Err(e) => {
+                sw.end();
                 self.backend.release_slot(&mut self.state, slot)?;
                 self.metrics.requests_shed += 1;
                 self.metrics.class(a.req.class).shed += 1;
+                trace::instant(Phase::Shed, a.req.id, slot as u16, 0);
                 self.emit(GenEvent::Error {
                     id: a.req.id,
                     message: format!("preemption failed ({e:#}): request shed"),
@@ -450,8 +510,14 @@ impl<'a> ServeLoop<'a> {
     /// request sheds (`true` — the parked entry is gone).
     fn resume_parked(&mut self, idx: usize, slot: usize) -> Result<bool> {
         let pr = self.parked.swap_remove(idx);
+        let mut sw = trace::span(Phase::SwapIn, pr.active.req.id, slot as u16);
+        sw.payload(pr.kv.bytes() as u64);
+        let t_swap = Instant::now();
         match self.backend.swap_in(&mut self.state, slot, &pr.kv) {
             Ok(()) => {
+                sw.end();
+                self.metrics
+                    .record_phase_us(MetricPhase::KvSwap, t_swap.elapsed().as_secs_f64() * 1e6);
                 self.metrics.class(pr.active.req.class).resumes += 1;
                 self.slots[slot] = Some(pr.active);
                 self.metrics.parked = self.parked.len();
@@ -459,9 +525,11 @@ impl<'a> ServeLoop<'a> {
                 Ok(true)
             }
             Err(e) => {
+                sw.end();
                 if self.occupied() == 0 {
                     self.metrics.requests_shed += 1;
                     self.metrics.class(pr.active.req.class).shed += 1;
+                    trace::instant(Phase::Shed, pr.active.req.id, slot as u16, 0);
                     self.emit(GenEvent::Error {
                         id: pr.active.req.id,
                         message: format!("resume after preemption failed ({e:#}): request shed"),
@@ -516,14 +584,19 @@ impl<'a> ServeLoop<'a> {
         let wait_us = req.arrived.elapsed().as_secs_f64() * 1e6;
         let reused_before =
             self.backend.kv_stats(&self.state).map_or(0, |s| s.prefix_tokens_reused);
+        // time only the attempt that succeeds — preempt-and-retry rounds
+        // are accounted to the KV-swap phase, not to prefill
+        let mut t_pref = Instant::now();
         let mut res = self.backend.prefill_slot(&mut self.state, slot, &req.prompt);
         while res.is_err() && self.continuous && self.backend.preemptible() {
             let Some(victim) = self.preempt_victim(req.class) else { break };
             self.park_slot(victim)?;
+            t_pref = Instant::now();
             res = self.backend.prefill_slot(&mut self.state, slot, &req.prompt);
         }
         match res {
             Ok(logits) => {
+                let prefill_us = t_pref.elapsed().as_secs_f64() * 1e6;
                 // count engine-executed prefill work: positions served
                 // from the prefix cache were not prefilled
                 let reused = self
@@ -531,13 +604,14 @@ impl<'a> ServeLoop<'a> {
                     .kv_stats(&self.state)
                     .map_or(0, |s| s.prefix_tokens_reused)
                     .saturating_sub(reused_before);
-                self.place(slot, req, &logits, wait_us)?;
+                self.place(slot, req, &logits, wait_us, prefill_us)?;
                 self.metrics.tokens_prefilled =
                     self.metrics.tokens_prefilled.saturating_sub(reused);
             }
             Err(e) => {
                 self.metrics.requests_shed += 1;
                 self.metrics.class(req.class).shed += 1;
+                trace::instant(Phase::Shed, req.id, slot as u16, 0);
                 self.emit(GenEvent::Error { id: req.id, message: e.to_string() });
             }
         }
@@ -560,7 +634,9 @@ impl<'a> ServeLoop<'a> {
         let queue_frac = self.batcher.len() as f64 / self.max_queue.max(1) as f64;
         let p = pressure_signal(pool_frac, queue_frac, self.parked.len());
         let (old, new) = self.pressure.update(p);
+        self.metrics.degrade_level = new as usize;
         if new != old {
+            trace::instant(Phase::Degrade, 0, trace::SLOT_NONE, new as u64);
             // global knobs at the L1/L2 boundaries (level 3 keeps both)
             if new >= 1 && old < 1 {
                 self.backend.set_spec_k_cap(Some(self.degrade.k_cap));
@@ -655,11 +731,15 @@ impl<'a> ServeLoop<'a> {
                 .enumerate()
                 .map(|(i, r)| (i, r.prompt.as_slice()))
                 .collect();
+            let t_pref = Instant::now();
             let logits = self.backend.prefill_slots(&mut self.state, &admissions)?;
+            // lock-step group prefill: every member waits out the whole
+            // batched pass, so each is attributed the full duration
+            let prefill_us = t_pref.elapsed().as_secs_f64() * 1e6;
             for ((i, req), (lg, wait_us)) in
                 batch.requests.into_iter().enumerate().zip(logits.iter().zip(waits))
             {
-                self.place(i, req, lg, wait_us)?;
+                self.place(i, req, lg, wait_us, prefill_us)?;
             }
         }
         self.snapshot_kv();
@@ -793,17 +873,46 @@ impl<'a> ServeLoop<'a> {
         // meter decode-phase weight traffic only (prefill would swamp
         // the per-generated-token number this metric exists to expose)
         let weight_before = self.backend.weight_bytes().unwrap_or(0);
+        // one DecodeStep span per surviving slot covers this step's
+        // engine pass + sampling/commit (clock reads gated on the level)
+        let dec_t0_ns = if trace::request_on() { trace::now_ns() } else { 0 };
         if !to_decode.is_empty() {
             let logits = self.backend.decode(&mut self.state, &to_decode)?;
+            let mut samp_span = trace::span(Phase::Sampler, 0, trace::SLOT_NONE);
+            samp_span.payload(to_decode.len() as u64);
+            let t_samp = Instant::now();
             for (st, lg) in to_decode.iter().zip(&logits) {
                 let a = self.slots[st.slot].as_mut().expect("decoded slot vanished");
                 a.current = self.sampler.sample(lg, &a.req.params);
             }
+            self.metrics
+                .record_phase_us(MetricPhase::Sampler, t_samp.elapsed().as_secs_f64() * 1e6);
+            samp_span.end();
+            if trace::request_on() {
+                let end_ns = trace::now_ns();
+                for st in &to_decode {
+                    let rid = self.slots[st.slot].as_ref().map_or(0, |a| a.req.id);
+                    trace::span_closed(
+                        Phase::DecodeStep,
+                        rid,
+                        st.slot as u16,
+                        dec_t0_ns,
+                        end_ns,
+                        1,
+                    );
+                }
+            }
         }
         if !to_spec.is_empty() {
             let steps = self.backend.decode_speculative(&mut self.state, &to_spec)?;
+            // draft/verify wall time measured inside the engine this step
+            let (draft_ns, verify_ns) = self.backend.take_step_phases();
+            self.metrics.record_phase_ns(MetricPhase::Draft, draft_ns);
+            self.metrics.record_phase_ns(MetricPhase::Verify, verify_ns);
+            let dec_end_ns = if trace::request_on() { trace::now_ns() } else { 0 };
             let mut spec_events: Vec<GenEvent> = Vec::new();
             for (st, sp) in to_spec.iter().zip(steps) {
+                let rid = self.slots[st.slot].as_ref().map_or(0, |a| a.req.id);
                 let mut finished = false;
                 let mut committed = 0usize;
                 let sampled = st.sampling.is_sampled();
@@ -838,6 +947,14 @@ impl<'a> ServeLoop<'a> {
                     }
                 }
                 self.metrics.record_spec_step(sampled, sp.proposed, sp.accepted.len(), committed);
+                trace::span_closed(
+                    Phase::DecodeStep,
+                    rid,
+                    st.slot as u16,
+                    dec_t0_ns,
+                    dec_end_ns,
+                    committed as u64,
+                );
                 if finished {
                     spec_events.push(self.finish_slot(st.slot)?);
                 }
@@ -849,7 +966,9 @@ impl<'a> ServeLoop<'a> {
         if let Some(w) = self.backend.weight_bytes() {
             self.metrics.weight_bytes += w.saturating_sub(weight_before);
         }
-        self.metrics.per_token.record(step_t0.elapsed());
+        let step_el = step_t0.elapsed();
+        self.metrics.record_phase_us(MetricPhase::DecodeStep, step_el.as_secs_f64() * 1e6);
+        self.metrics.per_token.record(step_el);
         self.snapshot_kv();
         Ok(true)
     }
@@ -987,14 +1106,23 @@ pub struct CoordinatorClient {
 impl CoordinatorClient {
     /// Submit a request; returns its event stream (see
     /// [`CoordinatorHandle::submit`]).
-    pub fn submit(&self, mut req: GenRequest) -> mpsc::Receiver<GenEvent> {
+    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<GenEvent> {
+        self.submit_with_id(req).1
+    }
+
+    /// Submit a request and return the id it was admitted under alongside
+    /// its event stream. The id is stable from this point on — it is what
+    /// the `X-Request-Id` header, the SSE payloads and the flight
+    /// recorder all carry (id 0 auto-assigns here, before admission).
+    pub fn submit_with_id(&self, mut req: GenRequest) -> (u64, mpsc::Receiver<GenEvent>) {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
         req.arrived = Instant::now();
+        let id = req.id;
         let (tx, rx) = mpsc::channel();
         let _ = self.tx.send(WorkItem::Request(req, tx));
-        rx
+        (id, rx)
     }
 
     /// Convenience: submit and block for the final response, discarding

@@ -793,9 +793,14 @@ impl NativeEngine {
             let mut qb = std::mem::take(&mut ws.qb);
             let mut kb = std::mem::take(&mut ws.kb);
             let mut vb = std::mem::take(&mut ws.vb);
+            // kernel-level flight-recorder phases (FBQ_TRACE=kernel): the
+            // span constructor is one relaxed load when disarmed
+            let mut tr_qkv = crate::trace::span(crate::trace::Phase::Gemv, 0, crate::trace::SLOT_NONE);
+            tr_qkv.payload(rows as u64);
             blk.q.gemv_multi(&hbuf, rows, &mut qb, self.mode, &mut ws.kernel, &mut ws.traffic);
             blk.k.gemv_multi(&hbuf, rows, &mut kb, self.mode, &mut ws.kernel, &mut ws.traffic);
             blk.v.gemv_multi(&hbuf, rows, &mut vb, self.mode, &mut ws.kernel, &mut ws.traffic);
+            tr_qkv.end();
             // per-row fork: rotate at the row's own position, append.
             // Same-slot rows append in position order so the gathers
             // below see this step's earlier keys (prefill causality).
@@ -821,6 +826,9 @@ impl NativeEngine {
             ws.attn.resize(rows * d, 0.0);
             let mut attn = std::mem::take(&mut ws.attn);
             let scale = 1.0 / (hd as f32).sqrt();
+            let mut tr_attn =
+                crate::trace::span(crate::trace::Phase::Attention, 0, crate::trace::SLOT_NONE);
+            tr_attn.payload(rows as u64);
             attention_rows(
                 &*kv,
                 l,
@@ -834,6 +842,10 @@ impl NativeEngine {
                 &mut attn,
                 &mut ws.scores,
             );
+            tr_attn.end();
+            let mut tr_proj =
+                crate::trace::span(crate::trace::Phase::Gemv, 0, crate::trace::SLOT_NONE);
+            tr_proj.payload(rows as u64);
             blk.o.gemv_multi(&attn, rows, &mut hbuf, self.mode, &mut ws.kernel, &mut ws.traffic);
             for (xv, hv) in ws.x.iter_mut().zip(&hbuf) {
                 *xv += hv;
@@ -855,6 +867,7 @@ impl NativeEngine {
             ws.m3.resize(rows * d, 0.0);
             let mut mout = std::mem::take(&mut ws.m3);
             self.mlp_multi(blk, &hbuf, rows, ws, &mut mout);
+            tr_proj.end();
             for (xv, mv) in ws.x.iter_mut().zip(&mout) {
                 *xv += mv;
             }
@@ -899,7 +912,10 @@ impl NativeEngine {
         }
         let mut flat = vec![0f32; n_full * vocab];
         let mut best = vec![(f32::NEG_INFINITY, 0u32); n_amax];
+        let mut tr_lm = crate::trace::span(crate::trace::Phase::LmHead, 0, crate::trace::SLOT_NONE);
+        tr_lm.payload((n_full + n_amax) as u64);
         self.lm_head_select(&hbuf, n_full, n_amax, &mut flat, &mut best, ws);
+        tr_lm.end();
         ws.hrow = hbuf;
         let mut out = Vec::with_capacity(m);
         let (mut fi, mut ai) = (0usize, 0usize);

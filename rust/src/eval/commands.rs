@@ -407,6 +407,22 @@ pub fn cmd_loadgen(args: &Args) -> Result<()> {
     let server = serve::Server::start(handle, &ServeConfig::default())?;
     crate::log_info!("replaying the same trace over http://{}", server.local_addr());
     let res_http = harness::run_http(server.local_addr(), &wl);
+    // Optional observability dumps, scraped from the live server before
+    // shutdown so they exercise the real endpoints (the CI serve-smoke
+    // job validates both artifacts).
+    if let Some(path) = args.get("prom-out") {
+        let (code, body) =
+            serve::client::get(server.local_addr(), "/metrics?format=prometheus")?;
+        ensure!(code == 200, "prometheus scrape answered {code}");
+        std::fs::write(path, &body)?;
+        println!("wrote {path} (prometheus text exposition)");
+    }
+    if let Some(path) = args.get("trace-out") {
+        let (code, body) = serve::client::get(server.local_addr(), "/debug/trace")?;
+        ensure!(code == 200, "/debug/trace answered {code}");
+        std::fs::write(path, &body)?;
+        println!("wrote {path} (chrome trace-event json)");
+    }
     let metrics_http = server.shutdown()?;
 
     for res in [&res_in, &res_http] {

@@ -21,6 +21,9 @@
 //! * [`serve`] — the std-only HTTP/1.1 + SSE serving front end over the
 //!   spawned coordinator, its loopback client and the open-loop load
 //!   harness behind `BENCH_serve.json`,
+//! * [`trace`] — the flight recorder: lock-free per-thread span rings,
+//!   request/phase/kernel tracing levels (`FBQ_TRACE`), and the Chrome
+//!   trace-event renderer behind `GET /debug/trace`,
 //! * [`eval`] — perplexity, zero-shot multiple-choice and pairwise-judge
 //!   harnesses reproducing the paper's Tables 1–8 and Fig 6,
 //! * [`bench`] / [`testing`] — in-repo micro-benchmark and property-test
@@ -35,6 +38,7 @@ pub mod spec;
 pub mod runtime;
 pub mod coordinator;
 pub mod serve;
+pub mod trace;
 pub mod eval;
 pub mod bench;
 pub mod testing;

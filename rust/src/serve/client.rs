@@ -26,6 +26,9 @@ pub struct GenOutcome {
     pub sent_at: Instant,
     /// when the terminal frame (or error response) was read
     pub finished_at: Instant,
+    /// server-assigned id from the `X-Request-Id` response header
+    /// (present on every response that reached admission, 4xx included)
+    pub request_id: Option<u64>,
 }
 
 /// Serialize a [`GenRequest`] as a `/v1/generate` POST body (the id is
@@ -73,6 +76,10 @@ pub fn post_generate(
     stream.flush()?;
     let mut reader = BufReader::new(stream);
     let (status, headers) = http::read_response_head(&mut reader)?;
+    let request_id = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("x-request-id"))
+        .and_then(|(_, v)| v.parse::<u64>().ok());
     let mut out = GenOutcome {
         status,
         tokens: Vec::new(),
@@ -81,6 +88,7 @@ pub fn post_generate(
         error: None,
         sent_at,
         finished_at: Instant::now(),
+        request_id,
     };
     if status != 200 {
         let body = read_sized_body(&mut reader, &headers)?;

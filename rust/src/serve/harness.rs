@@ -19,7 +19,7 @@ use crate::coordinator::request::GenEvent;
 use crate::coordinator::server::CoordinatorClient;
 use crate::coordinator::workload::Workload;
 use crate::util::json::Json;
-use crate::util::{mean, percentile};
+use crate::util::Hist;
 use std::net::SocketAddr;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -125,16 +125,18 @@ impl HarnessResult {
     }
 }
 
-/// Latency summary with the percentile keys the CI gate asserts on.
+/// Latency summary with the percentile keys the CI gate asserts on,
+/// now backed by the log-bucketed [`Hist`]: same `n`/`mean_us`/`p50_us`/
+/// `p95_us`/`p99_us`/`max_us` keys (percentiles resolved to the bucket's
+/// ~1.2x width), plus a sparse `buckets` array of `[upper_us, count]`
+/// pairs so BENCH_serve.json captures distribution shape, not just
+/// point summaries.
 fn pct_json(xs: &[f64]) -> Json {
-    Json::obj(vec![
-        ("n", xs.len().into()),
-        ("mean_us", mean(xs).into()),
-        ("p50_us", percentile(xs, 50.0).into()),
-        ("p95_us", percentile(xs, 95.0).into()),
-        ("p99_us", percentile(xs, 99.0).into()),
-        ("max_us", xs.iter().copied().fold(0.0f64, f64::max).into()),
-    ])
+    let mut h = Hist::new();
+    for &x in xs {
+        h.record_us(x);
+    }
+    h.to_json()
 }
 
 /// Sleep until the trace clock reaches `arrival`.
@@ -296,9 +298,10 @@ mod tests {
         assert_eq!(j.get("completed").and_then(Json::as_usize), Some(1));
         for lat in ["ttft_us", "itl_us", "e2e_us"] {
             let l = j.get(lat).unwrap();
-            for k in ["p50_us", "p95_us", "p99_us"] {
+            for k in ["n", "mean_us", "p50_us", "p95_us", "p99_us", "max_us", "buckets"] {
                 assert!(l.get(k).is_some(), "{lat} missing {k}");
             }
+            assert!(l.get("buckets").unwrap().as_arr().is_some());
         }
         assert!(res.shed_rate() <= 1.0);
     }

@@ -117,14 +117,29 @@ pub fn write_response(
     content_type: &str,
     body: &[u8],
 ) -> std::io::Result<()> {
+    write_response_with(w, code, content_type, &[], body)
+}
+
+/// [`write_response`] with extra response headers (e.g. `X-Request-Id`).
+pub fn write_response_with(
+    w: &mut impl Write,
+    code: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
         code,
         status_text(code),
         content_type,
         body.len()
     )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"Connection: close\r\n\r\n")?;
     w.write_all(body)?;
     w.flush()
 }
@@ -132,10 +147,21 @@ pub fn write_response(
 /// Write the response head that opens an SSE stream (the body follows as
 /// events, terminated by connection close).
 pub fn write_sse_head(w: &mut impl Write) -> std::io::Result<()> {
+    write_sse_head_with(w, &[])
+}
+
+/// [`write_sse_head`] with extra response headers (e.g. `X-Request-Id`).
+pub fn write_sse_head_with(
+    w: &mut impl Write,
+    extra_headers: &[(&str, String)],
+) -> std::io::Result<()> {
     w.write_all(
-        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
-          Connection: close\r\n\r\n",
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n",
     )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"Connection: close\r\n\r\n")?;
     w.flush()
 }
 
@@ -183,6 +209,27 @@ mod tests {
         assert!(read_request(&mut BufReader::new(&raw[..]), 10).is_err());
         let raw = b"not an http request\r\n\r\n";
         assert!(read_request(&mut BufReader::new(&raw[..]), 10).is_err());
+    }
+
+    #[test]
+    fn extra_headers_are_emitted() {
+        let mut out = Vec::new();
+        write_response_with(
+            &mut out,
+            200,
+            "text/plain",
+            &[("X-Request-Id", "7".to_string())],
+            b"ok",
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("X-Request-Id: 7\r\n"), "{text}");
+        let mut sse = Vec::new();
+        write_sse_head_with(&mut sse, &[("X-Request-Id", "9".to_string())]).unwrap();
+        let text = String::from_utf8(sse).unwrap();
+        assert!(text.contains("text/event-stream"), "{text}");
+        assert!(text.contains("X-Request-Id: 9\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n"), "{text}");
     }
 
     #[test]

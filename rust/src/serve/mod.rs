@@ -12,13 +12,24 @@
 //!   optional `temperature`/`top_k`/`top_p`/`seed`/`stop_token`/
 //!   `priority`, the latter one of `interactive`/`standard`/`batch`) →
 //!   an SSE stream: one `data:` frame per sampled token, then a
-//!   terminal `event: done` (the full [`GenResponse`]) or
-//!   `event: error` frame. The **first** coordinator event decides the
-//!   HTTP status: a shed / pool-exhausted request answers `429`, an
-//!   invalid one `400`, and only a request that actually streams opens
-//!   a `200`.
-//! * `GET /metrics` — live [`ServeMetrics`] snapshot as JSON.
-//! * `GET /healthz` — liveness probe.
+//!   terminal `event: done` (the full [`GenResponse`], including
+//!   `queue_us`/`prefill_us` timing) or `event: error` frame. The
+//!   **first** coordinator event decides the HTTP status: a shed /
+//!   pool-exhausted request answers `429`, an invalid one `400`, and
+//!   only a request that actually streams opens a `200`. Every
+//!   response that reached admission — 200, 400 and 429 alike —
+//!   carries the request's stable id as an `X-Request-Id` header (and
+//!   in the terminal frame payload), the same id the flight recorder
+//!   and metrics attribute by.
+//! * `GET /metrics` — live [`ServeMetrics`] snapshot as JSON;
+//!   `GET /metrics?format=prometheus` renders the same snapshot in
+//!   Prometheus text exposition format 0.0.4.
+//! * `GET /debug/trace` — drain the flight recorder and render
+//!   Chrome trace-event JSON (load it in Perfetto / `chrome://tracing`;
+//!   one lane per slot plus one per recording thread). Draining
+//!   consumes: two consecutive fetches return disjoint events.
+//! * `GET /healthz` — liveness probe: build version, uptime seconds
+//!   and the current degradation level.
 //! * `POST /admin/shutdown` — request a graceful shutdown. Gated on the
 //!   peer address: only loopback connections are honoured (`403`
 //!   otherwise). Sets a flag the embedding process polls via
@@ -40,14 +51,16 @@ pub mod http;
 pub mod sse;
 
 use crate::coordinator::metrics::ServeMetrics;
+use crate::coordinator::prom;
 use crate::coordinator::request::{GenEvent, GenRequest, GenResponse, Priority};
 use crate::coordinator::server::{CoordinatorClient, CoordinatorHandle};
+use crate::trace;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 pub use client::{gen_body, post_generate, GenOutcome};
@@ -90,6 +103,7 @@ impl Server {
     /// Bind and start serving. Takes ownership of the coordinator handle;
     /// [`Server::shutdown`] drains and returns the final metrics.
     pub fn start(handle: CoordinatorHandle, cfg: &ServeConfig) -> Result<Server> {
+        let _ = server_epoch(); // pin the uptime epoch at first bind
         let listener = TcpListener::bind(&cfg.addr)?;
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
@@ -145,6 +159,28 @@ impl Server {
         }
         self.handle.shutdown()
     }
+}
+
+/// Process-wide serving epoch for `/healthz` uptime: pinned the first
+/// time a [`Server`] binds (or on first health probe, whichever comes
+/// first — either way monotone from then on).
+fn server_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Split a request target into `(path, query)`; the query is `""` when
+/// absent. Routing matches on the path, handlers inspect the query.
+fn split_query(target: &str) -> (&str, &str) {
+    match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    }
+}
+
+/// True when a query string selects Prometheus text exposition.
+fn wants_prometheus(query: &str) -> bool {
+    query.split('&').any(|kv| kv == "format=prometheus")
 }
 
 /// Decrements the live-connection counter even if the handler panics.
@@ -214,12 +250,33 @@ fn handle_conn(
             return;
         }
     };
-    match (req.method.as_str(), req.path.as_str()) {
+    let (path, query) = split_query(&req.path);
+    match (req.method.as_str(), path) {
         ("POST", "/v1/generate") => handle_generate(&mut writer, client, &req.body),
         ("GET", "/healthz") => {
-            let _ = http::write_response(&mut writer, 200, "application/json", b"{\"ok\":true}");
+            let degrade = match client.metrics() {
+                Ok(m) => Json::Num(m.degrade_level as f64),
+                Err(_) => Json::Null, // still alive even if the snapshot stalls
+            };
+            let body = Json::obj(vec![
+                ("ok", true.into()),
+                ("version", env!("CARGO_PKG_VERSION").into()),
+                ("uptime_s", server_epoch().elapsed().as_secs_f64().into()),
+                ("degrade_level", degrade),
+            ])
+            .to_string_compact();
+            let _ = http::write_response(&mut writer, 200, "application/json", body.as_bytes());
         }
         ("GET", "/metrics") => match client.metrics() {
+            Ok(m) if wants_prometheus(query) => {
+                let body = prom::render(&m);
+                let _ = http::write_response(
+                    &mut writer,
+                    200,
+                    "text/plain; version=0.0.4",
+                    body.as_bytes(),
+                );
+            }
             Ok(m) => {
                 let body = m.to_json().to_string_pretty();
                 let _ =
@@ -229,6 +286,13 @@ fn handle_conn(
                 let _ = error_response(&mut writer, 500, &e.to_string());
             }
         },
+        ("GET", "/debug/trace") => {
+            // Drain-and-render: consumes the recorder's buffered events so
+            // back-to-back fetches return disjoint windows.
+            let dump = trace::drain();
+            let body = trace::chrome::to_chrome_json(&dump).to_string_compact();
+            let _ = http::write_response(&mut writer, 200, "application/json", body.as_bytes());
+        }
         ("POST", "/admin/shutdown") => {
             // control-plane route: honour it only from loopback peers so
             // a forwarded / exposed port cannot kill the server
@@ -261,21 +325,23 @@ fn handle_generate(writer: &mut TcpStream, client: &CoordinatorClient, body: &[u
     let req = match parse_gen_request(body) {
         Ok(r) => r,
         Err(e) => {
+            // parse failure: no id was ever assigned, so no X-Request-Id
             let _ = error_response(writer, 400, &e.to_string());
             return;
         }
     };
-    let rx = client.submit(req);
+    let (id, rx) = client.submit_with_id(req);
+    let id_header = [("X-Request-Id", id.to_string())];
     match rx.recv_timeout(Duration::from_secs(120)) {
         Err(_) => {
-            let _ = error_response(writer, 500, "coordinator did not answer");
+            let _ = error_response_for(writer, 500, "coordinator did not answer", id);
         }
         Ok(GenEvent::Error { message, .. }) => {
             let code = if overload_message(&message) { 429 } else { 400 };
-            let _ = error_response(writer, code, &message);
+            let _ = error_response_for(writer, code, &message, id);
         }
         Ok(first) => {
-            if http::write_sse_head(writer).is_err() {
+            if http::write_sse_head_with(writer, &id_header).is_err() {
                 return;
             }
             let terminal = first.is_terminal();
@@ -303,6 +369,26 @@ pub fn overload_message(message: &str) -> bool {
 fn error_response(w: &mut impl Write, code: u16, message: &str) -> std::io::Result<()> {
     let body = Json::obj(vec![("error", message.into())]).to_string_compact();
     http::write_response(w, code, "application/json", body.as_bytes())
+}
+
+/// [`error_response`] for a request that already has an admission id:
+/// carries it both as `X-Request-Id` and in the body, so a 429/400 can
+/// still be correlated with trace events and server logs.
+fn error_response_for(
+    w: &mut impl Write,
+    code: u16,
+    message: &str,
+    id: u64,
+) -> std::io::Result<()> {
+    let body = Json::obj(vec![("error", message.into()), ("id", (id as f64).into())])
+        .to_string_compact();
+    http::write_response_with(
+        w,
+        code,
+        "application/json",
+        &[("X-Request-Id", id.to_string())],
+        body.as_bytes(),
+    )
 }
 
 /// Serialize one [`GenEvent`] as its SSE frame and flush it.
@@ -338,6 +424,8 @@ fn response_json(r: &GenResponse) -> Json {
         ("ttft_us", r.ttft_us.into()),
         ("total_us", r.total_us.into()),
         ("decode_s", r.decode_s.into()),
+        ("queue_us", r.queue_us.into()),
+        ("prefill_us", r.prefill_us.into()),
     ])
 }
 
@@ -412,6 +500,18 @@ mod tests {
         assert!(parse_gen_request(body).is_err());
         let body = br#"{"prompt":[1],"max_new_tokens":2,"priority":3}"#;
         assert!(parse_gen_request(body).is_err());
+    }
+
+    #[test]
+    fn splits_query_and_detects_prometheus() {
+        assert_eq!(split_query("/metrics"), ("/metrics", ""));
+        assert_eq!(split_query("/metrics?format=prometheus"), ("/metrics", "format=prometheus"));
+        assert_eq!(split_query("/a?b=c&d=e"), ("/a", "b=c&d=e"));
+        assert!(wants_prometheus("format=prometheus"));
+        assert!(wants_prometheus("x=1&format=prometheus"));
+        assert!(!wants_prometheus(""));
+        assert!(!wants_prometheus("format=json"));
+        assert!(!wants_prometheus("format=prometheus2"));
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Render a drained [`TraceDump`](super::TraceDump) as Chrome trace-event
+//! JSON — the `{"traceEvents": [...]}` format `chrome://tracing` and
+//! Perfetto load directly.
+//!
+//! Track layout: slot-bound request phases land on one lane per scheduler
+//! slot (`tid = slot`), while slotless events (admission-edge markers,
+//! batch-wide phases, kernel spans) land on one lane per recording thread
+//! (`tid = WORKER_TID_BASE + track`). Lane names are emitted as thread-name
+//! metadata events so the viewer labels them.
+
+use super::{SpanEvent, TraceDump, SLOT_NONE};
+use crate::util::Json;
+
+/// Offset separating per-worker lanes from per-slot lanes.
+const WORKER_TID_BASE: f64 = 1000.0;
+
+fn tid_of(e: &SpanEvent) -> f64 {
+    if e.slot != SLOT_NONE {
+        e.slot as f64
+    } else {
+        WORKER_TID_BASE + e.track as f64
+    }
+}
+
+fn args_of(e: &SpanEvent) -> Json {
+    let mut pairs = vec![("req", Json::Num(e.req as f64))];
+    if e.slot != SLOT_NONE {
+        pairs.push(("slot", Json::Num(e.slot as f64)));
+    }
+    pairs.push(("payload", Json::Num(e.payload as f64)));
+    Json::obj(pairs)
+}
+
+/// Render the dump. `ts`/`dur` are microseconds (floats), per the format.
+pub fn to_chrome_json(dump: &TraceDump) -> Json {
+    let mut events = Vec::with_capacity(dump.events.len() + 16);
+    let mut lanes: Vec<(f64, String)> = Vec::new();
+    for e in &dump.events {
+        let tid = tid_of(e);
+        if !lanes.iter().any(|(t, _)| *t == tid) {
+            let name = if e.slot != SLOT_NONE {
+                format!("slot {}", e.slot)
+            } else {
+                format!("worker {}", e.track)
+            };
+            lanes.push((tid, name));
+        }
+        let mut pairs = vec![
+            ("name", Json::Str(e.phase.name().to_string())),
+            (
+                "cat",
+                Json::Str(if e.phase.is_kernel() { "kernel" } else { "request" }.to_string()),
+            ),
+            ("ph", Json::Str(if e.phase.is_marker() { "i" } else { "X" }.to_string())),
+            ("ts", Json::Num(e.start_ns as f64 / 1e3)),
+        ];
+        if e.phase.is_marker() {
+            pairs.push(("s", Json::Str("t".to_string())));
+        } else {
+            pairs.push(("dur", Json::Num(e.dur_ns() as f64 / 1e3)));
+        }
+        pairs.push(("pid", Json::Num(1.0)));
+        pairs.push(("tid", Json::Num(tid)));
+        pairs.push(("args", args_of(e)));
+        events.push(Json::obj(pairs));
+    }
+    // Thread-name metadata events label the lanes in the viewer.
+    for (tid, name) in &lanes {
+        events.push(Json::obj(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(*tid)),
+            ("args", Json::obj(vec![("name", Json::Str(name.clone()))])),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("lost_events", Json::Num(dump.lost as f64)),
+                ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Phase;
+
+    fn ev(phase: Phase, req: u64, slot: u16, start: u64, end: u64) -> SpanEvent {
+        SpanEvent { req, start_ns: start, end_ns: end, payload: 3, phase, slot, track: 2 }
+    }
+
+    #[test]
+    fn renders_spans_markers_and_lanes() {
+        let dump = TraceDump {
+            events: vec![
+                ev(Phase::Prefill, 7, 1, 1000, 5000),
+                ev(Phase::Gemv, 0, SLOT_NONE, 1200, 1800),
+                ev(Phase::Done, 7, 1, 5000, 5000),
+            ],
+            lost: 4,
+        };
+        let j = to_chrome_json(&dump);
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 events + 2 lane metadata entries (slot 1, worker 2).
+        assert_eq!(evs.len(), 5);
+
+        let prefill = &evs[0];
+        assert_eq!(prefill.get("name").unwrap().as_str(), Some("prefill"));
+        assert_eq!(prefill.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(prefill.get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(prefill.get("dur").unwrap().as_f64(), Some(4.0));
+        assert_eq!(prefill.get("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(prefill.get("args").unwrap().get("req").unwrap().as_usize(), Some(7));
+
+        let gemv = &evs[1];
+        assert_eq!(gemv.get("cat").unwrap().as_str(), Some("kernel"));
+        assert_eq!(gemv.get("tid").unwrap().as_f64(), Some(WORKER_TID_BASE + 2.0));
+
+        let done = &evs[2];
+        assert_eq!(done.get("ph").unwrap().as_str(), Some("i"));
+        assert!(done.get("dur").is_none());
+
+        let meta = &evs[3];
+        assert_eq!(meta.get("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(meta.get("args").unwrap().get("name").unwrap().as_str(), Some("slot 1"));
+
+        assert_eq!(j.get("otherData").unwrap().get("lost_events").unwrap().as_usize(), Some(4));
+        // The whole document must reparse (valid JSON for Perfetto).
+        let text = j.to_string_compact();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,420 @@
+//! Flight recorder: low-overhead request/phase tracing for the serving
+//! stack.
+//!
+//! Every instrumented site records a compact binary [`SpanEvent`] (request
+//! id, slot, phase, nanosecond interval, one payload word) into a
+//! per-thread lock-free ring ([`ring`]). The hot path costs one relaxed
+//! atomic load when tracing is off, and two `Instant` reads plus five
+//! relaxed stores when on; draining, sorting and rendering all happen
+//! off-path (`GET /debug/trace`, tests, the loadgen dump).
+//!
+//! Levels, from the `FBQ_TRACE` environment variable:
+//! * `FBQ_TRACE=0` / `off` — recorder disarmed; event sites are a single
+//!   relaxed load.
+//! * unset / `1` / `request` — request-lifecycle phases: queue wait,
+//!   prefill, per-step decode/draft/verify/sampler, KV swap-out/in, and
+//!   the overload markers (shed, cancel, degrade transitions).
+//! * `kernel` — additionally records per-layer kernel phases
+//!   (gemv / attention / lm-head) from inside the engine step.
+//!
+//! The drained dump renders as Chrome trace-event JSON ([`chrome`]) that
+//! loads directly in Perfetto, one lane per slot plus one per recording
+//! thread.
+
+pub mod chrome;
+mod ring;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Slot value for events not bound to a scheduler slot.
+pub const SLOT_NONE: u16 = u16::MAX;
+
+/// Tracing verbosity tiers (`FBQ_TRACE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Recorder disarmed: every event site is one relaxed atomic load.
+    Off = 0,
+    /// Request-lifecycle phases and overload markers (the default).
+    Request = 1,
+    /// Request level plus per-layer kernel phases (gemv/attention/lm-head).
+    Kernel = 2,
+}
+
+/// Phase taxonomy. Span phases carry a real interval; marker phases
+/// (`is_marker`) are instantaneous lifecycle events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Phase {
+    /// Admission queue wait: submit → slot placement.
+    Queue = 0,
+    /// Prompt prefill for one request.
+    Prefill = 1,
+    /// One decode step's share for one slot (payload: tokens committed).
+    DecodeStep = 2,
+    /// Speculative drafting across the batch (payload: draft rows).
+    Draft = 3,
+    /// Speculative verification pass (payload: verified rows).
+    Verify = 4,
+    /// Token sampling for one step across the batch.
+    Sampler = 5,
+    /// KV swap-out to the parking buffer (payload: bytes).
+    SwapOut = 6,
+    /// KV swap-in from the parking buffer (payload: bytes).
+    SwapIn = 7,
+    /// Kernel: batched GEMV group (kernel level only; payload: rows).
+    Gemv = 8,
+    /// Kernel: attention score/mix for one layer (kernel level only).
+    Attention = 9,
+    /// Kernel: lm-head selection (kernel level only; payload: rows).
+    LmHead = 10,
+    /// Marker: request finished normally (payload: generated tokens).
+    Done = 11,
+    /// Marker: request shed by admission control or pool pressure.
+    Shed = 12,
+    /// Marker: request cancelled (client disconnect).
+    Cancel = 13,
+    /// Marker: degradation level transition (payload: new level; req 0).
+    Degrade = 14,
+    /// Marker: request rejected at the HTTP edge before admission.
+    Reject = 15,
+}
+
+impl Phase {
+    pub fn from_u8(v: u8) -> Option<Phase> {
+        use Phase::*;
+        Some(match v {
+            0 => Queue,
+            1 => Prefill,
+            2 => DecodeStep,
+            3 => Draft,
+            4 => Verify,
+            5 => Sampler,
+            6 => SwapOut,
+            7 => SwapIn,
+            8 => Gemv,
+            9 => Attention,
+            10 => LmHead,
+            11 => Done,
+            12 => Shed,
+            13 => Cancel,
+            14 => Degrade,
+            15 => Reject,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        use Phase::*;
+        match self {
+            Queue => "queue",
+            Prefill => "prefill",
+            DecodeStep => "decode_step",
+            Draft => "draft",
+            Verify => "verify",
+            Sampler => "sampler",
+            SwapOut => "swap_out",
+            SwapIn => "swap_in",
+            Gemv => "gemv",
+            Attention => "attention",
+            LmHead => "lm_head",
+            Done => "done",
+            Shed => "shed",
+            Cancel => "cancel",
+            Degrade => "degrade",
+            Reject => "reject",
+        }
+    }
+
+    /// Kernel-level phases are only recorded at [`Level::Kernel`].
+    pub fn is_kernel(&self) -> bool {
+        matches!(self, Phase::Gemv | Phase::Attention | Phase::LmHead)
+    }
+
+    /// Marker phases are instantaneous (start == end).
+    pub fn is_marker(&self) -> bool {
+        matches!(
+            self,
+            Phase::Done | Phase::Shed | Phase::Cancel | Phase::Degrade | Phase::Reject
+        )
+    }
+
+    /// Terminal markers end a request's timeline.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Phase::Done | Phase::Shed | Phase::Cancel | Phase::Reject)
+    }
+}
+
+/// One decoded flight-recorder event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Request id (0 for batch-wide or process-wide events).
+    pub req: u64,
+    /// Start, nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    /// End, nanoseconds since the epoch (== start for markers).
+    pub end_ns: u64,
+    /// Phase-specific payload word (tokens, rows, bytes, level...).
+    pub payload: u64,
+    pub phase: Phase,
+    /// Scheduler slot, or [`SLOT_NONE`].
+    pub slot: u16,
+    /// Recording thread's track id.
+    pub track: u32,
+}
+
+impl SpanEvent {
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// A drained flight-recorder snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct TraceDump {
+    /// Events sorted by start time.
+    pub events: Vec<SpanEvent>,
+    /// Events overwritten by writer lapping before they could be drained.
+    pub lost: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Level plumbing.
+
+/// u8::MAX = "not yet initialized from the environment".
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn init_level_from_env() -> u8 {
+    let lvl = match std::env::var("FBQ_TRACE").ok().as_deref().map(str::trim) {
+        Some("0") | Some("off") | Some("none") => Level::Off,
+        Some("kernel") | Some("2") => Level::Kernel,
+        _ => Level::Request,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current level as a raw u8 (one relaxed load on the fast path).
+#[inline]
+fn level_u8() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l == u8::MAX {
+        init_level_from_env()
+    } else {
+        l
+    }
+}
+
+/// Current tracing level.
+pub fn level() -> Level {
+    match level_u8() {
+        0 => Level::Off,
+        2 => Level::Kernel,
+        _ => Level::Request,
+    }
+}
+
+/// Override the level at runtime (tests, benches, admin tooling).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// True when request-lifecycle tracing is armed.
+#[inline]
+pub fn request_on() -> bool {
+    level_u8() >= Level::Request as u8
+}
+
+/// True when kernel-phase tracing is armed.
+#[inline]
+pub fn kernel_on() -> bool {
+    level_u8() >= Level::Kernel as u8
+}
+
+#[inline]
+fn armed_for(phase: Phase) -> bool {
+    if phase.is_kernel() {
+        kernel_on()
+    } else {
+        request_on()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Time base.
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Pin the trace epoch to "now" if it isn't already set. Called at
+/// coordinator/server startup so request timestamps are small positive
+/// offsets; safe to call repeatedly.
+pub fn init() {
+    let _ = epoch();
+}
+
+/// Nanoseconds since the trace epoch.
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// A captured [`Instant`] as nanoseconds since the trace epoch
+/// (saturating at 0 for instants predating the epoch).
+#[inline]
+pub fn instant_ns(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Recording API.
+
+/// RAII span: records `[construction, drop]` as one event when armed.
+/// When the recorder is off, construction is one relaxed load and drop
+/// is a no-op.
+#[must_use = "the span records its interval when dropped"]
+pub struct Span {
+    armed: bool,
+    phase: Phase,
+    req: u64,
+    slot: u16,
+    payload: u64,
+    start_ns: u64,
+}
+
+impl Span {
+    /// Set the payload word carried by the event (tokens, rows, bytes...).
+    #[inline]
+    pub fn payload(&mut self, p: u64) {
+        self.payload = p;
+    }
+
+    /// End the span now (equivalent to dropping it).
+    #[inline]
+    pub fn end(self) {}
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if self.armed {
+            ring::record(self.req, self.start_ns, now_ns(), self.payload, self.phase, self.slot);
+        }
+    }
+}
+
+/// Open a span for `phase` attributed to request `req` on `slot`
+/// (use 0 / [`SLOT_NONE`] when not applicable).
+#[inline]
+pub fn span(phase: Phase, req: u64, slot: u16) -> Span {
+    let armed = armed_for(phase);
+    let start_ns = if armed { now_ns() } else { 0 };
+    Span { armed, phase, req, slot, payload: 0, start_ns }
+}
+
+/// Record a span whose interval the caller already measured.
+#[inline]
+pub fn span_closed(phase: Phase, req: u64, slot: u16, start_ns: u64, end_ns: u64, payload: u64) {
+    if armed_for(phase) {
+        ring::record_closed(phase, req, slot, start_ns, end_ns, payload);
+    }
+}
+
+/// Record an instantaneous marker event.
+#[inline]
+pub fn instant(phase: Phase, req: u64, slot: u16, payload: u64) {
+    if armed_for(phase) {
+        ring::record_instant(phase, req, slot, now_ns(), payload);
+    }
+}
+
+/// Drain every thread's ring into one time-sorted dump. Draining consumes:
+/// a second immediate drain returns only events recorded in between.
+pub fn drain() -> TraceDump {
+    let (events, lost) = ring::drain_all();
+    TraceDump { events, lost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// The recorder and level are process-global, so tests that toggle the
+    /// level or drain must not interleave with each other; they also only
+    /// assert on events carrying their own request ids, never on global
+    /// emptiness (other tests in this binary may record concurrently).
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn span_records_when_armed() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        set_level(Level::Request);
+        let req = 0x5EED_0001;
+        {
+            let mut s = span(Phase::Prefill, req, 4);
+            s.payload(17);
+        }
+        instant(Phase::Done, req, 4, 9);
+        let dump = drain();
+        let mine: Vec<_> = dump.events.iter().filter(|e| e.req == req).collect();
+        assert_eq!(mine.len(), 2, "span + marker expected: {mine:?}");
+        let prefill = mine.iter().find(|e| e.phase == Phase::Prefill).unwrap();
+        assert!(prefill.end_ns >= prefill.start_ns);
+        assert_eq!(prefill.payload, 17);
+        assert_eq!(prefill.slot, 4);
+        let done = mine.iter().find(|e| e.phase == Phase::Done).unwrap();
+        assert_eq!(done.start_ns, done.end_ns);
+        assert_eq!(done.payload, 9);
+    }
+
+    #[test]
+    fn disabled_recorder_drops_events() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        set_level(Level::Off);
+        let req = 0x5EED_0002;
+        span(Phase::Prefill, req, 0).end();
+        instant(Phase::Done, req, 0, 0);
+        set_level(Level::Request);
+        let dump = drain();
+        assert!(
+            dump.events.iter().all(|e| e.req != req),
+            "events recorded while the level was Off"
+        );
+    }
+
+    #[test]
+    fn kernel_phases_gated_by_level() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        set_level(Level::Request);
+        let req = 0x5EED_0003;
+        span(Phase::Gemv, req, SLOT_NONE).end();
+        set_level(Level::Kernel);
+        span(Phase::Attention, req, SLOT_NONE).end();
+        set_level(Level::Request);
+        let dump = drain();
+        let mine: Vec<_> = dump.events.iter().filter(|e| e.req == req).collect();
+        assert_eq!(mine.len(), 1, "{mine:?}");
+        assert_eq!(mine[0].phase, Phase::Attention);
+    }
+
+    #[test]
+    fn phase_roundtrip_and_taxonomy() {
+        for v in 0..=15u8 {
+            let p = Phase::from_u8(v).unwrap();
+            assert_eq!(p as u8, v);
+            assert!(!p.name().is_empty());
+            if p.is_kernel() {
+                assert!(!p.is_marker());
+            }
+            if p.is_terminal() {
+                assert!(p.is_marker());
+            }
+        }
+        assert!(Phase::from_u8(16).is_none());
+    }
+}

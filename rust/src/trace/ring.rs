@@ -1,0 +1,365 @@
+//! Lock-free per-thread span rings behind the flight recorder.
+//!
+//! Each recording thread owns one [`Ring`]: a fixed-capacity circular
+//! buffer of 5-word binary events written with relaxed stores and published
+//! with one release store of the `written` counter — no locks, no
+//! allocation, no CAS on the hot path. A central drainer walks every
+//! registered ring off-path with the classic seqlock recipe: read the
+//! words, fence, re-read `written`, and discard any event the writer may
+//! have lapped during the read. Lapping therefore never blocks the writer
+//! (flight-recorder semantics: newest events win) and never yields torn
+//! events — it only increments a `lost` count the dump reports honestly.
+//!
+//! Rings are pooled: when a recording thread exits, its ring (events
+//! included) goes on a free list and the next new thread reuses it, so
+//! short-lived connection threads don't grow the registry without bound.
+
+use std::cell::RefCell;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::{Phase, SpanEvent};
+
+/// Words per encoded event: req, start_ns, end_ns, payload, meta.
+const WORDS: usize = 5;
+
+/// Default per-thread ring capacity in events (`FBQ_TRACE_BUF` overrides).
+const DEFAULT_CAP: usize = 8192;
+
+/// One single-writer, single-drainer event ring.
+pub(crate) struct Ring {
+    slots: Box<[AtomicU64]>,
+    cap: u64,
+    /// Events ever written (monotonic; publishes the slot words).
+    written: AtomicU64,
+    /// Events ever consumed or skipped by the drainer (drainer-only).
+    drained: AtomicU64,
+    /// Writer track id, for per-thread timeline lanes in the dump.
+    track: u32,
+}
+
+impl Ring {
+    pub(crate) fn new(cap: usize, track: u32) -> Ring {
+        let cap = cap.max(16);
+        let mut slots = Vec::with_capacity(cap * WORDS);
+        slots.resize_with(cap * WORDS, || AtomicU64::new(0));
+        Ring {
+            slots: slots.into_boxed_slice(),
+            cap: cap as u64,
+            written: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+            track,
+        }
+    }
+
+    /// Hot path: store the event words, then publish with one release
+    /// store. Single writer per ring, so plain (non-RMW) stores suffice.
+    #[inline]
+    pub(crate) fn push(&self, req: u64, start_ns: u64, end_ns: u64, payload: u64, meta: u64) {
+        let w = self.written.load(Ordering::Relaxed);
+        let base = (w % self.cap) as usize * WORDS;
+        self.slots[base].store(req, Ordering::Relaxed);
+        self.slots[base + 1].store(start_ns, Ordering::Relaxed);
+        self.slots[base + 2].store(end_ns, Ordering::Relaxed);
+        self.slots[base + 3].store(payload, Ordering::Relaxed);
+        self.slots[base + 4].store(meta, Ordering::Relaxed);
+        self.written.store(w + 1, Ordering::Release);
+    }
+
+    /// Drain all publishable events into `out`; returns how many events
+    /// were lost to writer lapping (overwritten before we could read them).
+    pub(crate) fn drain_into(&self, out: &mut Vec<SpanEvent>) -> u64 {
+        let mut d = self.drained.load(Ordering::Relaxed);
+        let w = self.written.load(Ordering::Acquire);
+        let mut lost = 0u64;
+        if w - d > self.cap {
+            // Writer lapped us before this drain even started.
+            lost += w - self.cap - d;
+            d = w - self.cap;
+        }
+        let first = out.len();
+        for e in d..w {
+            let base = (e % self.cap) as usize * WORDS;
+            let req = self.slots[base].load(Ordering::Relaxed);
+            let start_ns = self.slots[base + 1].load(Ordering::Relaxed);
+            let end_ns = self.slots[base + 2].load(Ordering::Relaxed);
+            let payload = self.slots[base + 3].load(Ordering::Relaxed);
+            let meta = self.slots[base + 4].load(Ordering::Relaxed);
+            match decode_meta(meta) {
+                Some((phase, slot)) => out.push(SpanEvent {
+                    req,
+                    start_ns,
+                    end_ns,
+                    payload,
+                    phase,
+                    slot,
+                    track: (meta >> 32) as u32,
+                }),
+                // Unknown phase byte: torn beyond recognition; count it.
+                None => lost += 1,
+            }
+        }
+        // Seqlock re-check: any event the writer may have been overwriting
+        // while we read (index < written_now + 1 - cap) is suspect — drop
+        // it from what we keep and count it as lost instead.
+        fence(Ordering::Acquire);
+        let w2 = self.written.load(Ordering::Relaxed);
+        let safe_min = (w2 + 1).saturating_sub(self.cap);
+        if safe_min > d {
+            let torn = (safe_min - d).min(w - d) as usize;
+            let torn = torn.min(out.len() - first);
+            out.drain(first..first + torn);
+            lost += torn as u64;
+        }
+        self.drained.store(w, Ordering::Relaxed);
+        lost
+    }
+
+    #[cfg(test)]
+    fn written(&self) -> u64 {
+        self.written.load(Ordering::Acquire)
+    }
+}
+
+#[inline]
+fn encode_meta(phase: Phase, slot: u16, track: u32) -> u64 {
+    (phase as u8 as u64) | ((slot as u64) << 16) | ((track as u64) << 32)
+}
+
+#[inline]
+fn decode_meta(meta: u64) -> Option<(Phase, u16)> {
+    let phase = Phase::from_u8(meta as u8)?;
+    Some((phase, (meta >> 16) as u16))
+}
+
+/// Every ring ever created (drain walks this), and exited threads' rings
+/// awaiting reuse. A freed ring still holds its undrained events, so
+/// nothing a dying thread recorded is lost.
+static REGISTRY: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+static FREE: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+/// Serializes drains (each ring is single-drainer by contract).
+static DRAIN: Mutex<()> = Mutex::new(());
+
+fn ring_capacity() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("FBQ_TRACE_BUF")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CAP)
+    })
+}
+
+/// Returns the ring to the free pool when its thread exits.
+struct LocalRing(Arc<Ring>);
+
+impl Drop for LocalRing {
+    fn drop(&mut self) {
+        if let Ok(mut free) = FREE.lock() {
+            free.push(self.0.clone());
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalRing>> = const { RefCell::new(None) };
+}
+
+fn acquire_ring() -> LocalRing {
+    if let Some(r) = FREE.lock().ok().and_then(|mut f| f.pop()) {
+        return LocalRing(r);
+    }
+    static NEXT_TRACK: AtomicU64 = AtomicU64::new(0);
+    let track = NEXT_TRACK.fetch_add(1, Ordering::Relaxed) as u32;
+    let ring = Arc::new(Ring::new(ring_capacity(), track));
+    if let Ok(mut reg) = REGISTRY.lock() {
+        reg.push(ring.clone());
+    }
+    LocalRing(ring)
+}
+
+/// Record one event into the calling thread's ring (creating or reusing a
+/// ring on first use). Safe to call from any thread; silently drops the
+/// event if thread-local storage is already torn down.
+#[inline]
+pub(crate) fn record(req: u64, start_ns: u64, end_ns: u64, payload: u64, phase: Phase, slot: u16) {
+    let _ = LOCAL.try_with(|l| {
+        let mut l = l.borrow_mut();
+        let ring = l.get_or_insert_with(acquire_ring);
+        let track = ring.0.track;
+        ring.0.push(req, start_ns, end_ns, payload, encode_meta(phase, slot, track));
+    });
+}
+
+/// Drain every registered ring. Events are sorted by start time; `lost`
+/// counts writer-lapped events across all rings since the last drain.
+pub(crate) fn drain_all() -> (Vec<SpanEvent>, u64) {
+    let _guard = DRAIN.lock();
+    let rings: Vec<Arc<Ring>> = match REGISTRY.lock() {
+        Ok(reg) => reg.clone(),
+        Err(_) => Vec::new(),
+    };
+    let mut events = Vec::new();
+    let mut lost = 0u64;
+    for ring in &rings {
+        lost += ring.drain_into(&mut events);
+    }
+    events.sort_by_key(|e| (e.start_ns, e.end_ns, e.req));
+    (events, lost)
+}
+
+/// Record an already-timed span (used when the caller captured the
+/// interval itself, e.g. queue wait measured from the admission stamp).
+pub(crate) fn record_closed(
+    phase: Phase,
+    req: u64,
+    slot: u16,
+    start_ns: u64,
+    end_ns: u64,
+    payload: u64,
+) {
+    record(req, start_ns, end_ns.max(start_ns), payload, phase, slot);
+}
+
+/// Record an instantaneous marker event.
+pub(crate) fn record_instant(phase: Phase, req: u64, slot: u16, now_ns: u64, payload: u64) {
+    record(req, now_ns, now_ns, payload, phase, slot);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::SLOT_NONE;
+    use std::sync::atomic::AtomicBool;
+
+    fn ev(ring: &Ring, i: u64) {
+        // Payload carries a checksum of req so torn events are detectable.
+        ring.push(i, i * 10, i * 10 + 5, i.wrapping_mul(0x9e37), encode_meta(Phase::Draft, 3, 7));
+    }
+
+    #[test]
+    fn drain_returns_events_in_order() {
+        let r = Ring::new(64, 0);
+        for i in 0..10 {
+            ev(&r, i);
+        }
+        let mut out = Vec::new();
+        let lost = r.drain_into(&mut out);
+        assert_eq!(lost, 0);
+        assert_eq!(out.len(), 10);
+        for (i, e) in out.iter().enumerate() {
+            assert_eq!(e.req, i as u64);
+            assert_eq!(e.start_ns, i as u64 * 10);
+            assert_eq!(e.end_ns, i as u64 * 10 + 5);
+            assert_eq!(e.phase, Phase::Draft);
+            assert_eq!(e.slot, 3);
+            assert_eq!(e.track, 7);
+        }
+    }
+
+    #[test]
+    fn wraparound_keeps_newest_and_counts_lost() {
+        let cap = 16;
+        let r = Ring::new(cap, 0);
+        let total = 3 * cap as u64 + 5;
+        for i in 0..total {
+            ev(&r, i);
+        }
+        let mut out = Vec::new();
+        let lost = r.drain_into(&mut out);
+        assert_eq!(out.len(), cap);
+        assert_eq!(lost, total - cap as u64);
+        // The survivors are exactly the newest `cap` events.
+        assert_eq!(out.first().unwrap().req, total - cap as u64);
+        assert_eq!(out.last().unwrap().req, total - 1);
+    }
+
+    #[test]
+    fn repeated_drains_conserve_every_event() {
+        let r = Ring::new(32, 0);
+        let mut seen = 0u64;
+        for round in 0..10u64 {
+            for i in 0..20u64 {
+                ev(&r, round * 20 + i);
+            }
+            let mut out = Vec::new();
+            let lost = r.drain_into(&mut out);
+            assert_eq!(lost, 0, "no overflow expected at this rate");
+            seen += out.len() as u64;
+        }
+        assert_eq!(seen, 200);
+    }
+
+    #[test]
+    fn concurrent_writers_conserve_counts() {
+        // N writer threads, each with its own ring (single-writer
+        // invariant), one drainer looping concurrently. Every written
+        // event must end up either drained (with intact checksum) or
+        // counted lost — never silently vanish, never torn.
+        const WRITERS: usize = 4;
+        const PER: u64 = 20_000;
+        let rings: Vec<Arc<Ring>> = (0..WRITERS).map(|t| Arc::new(Ring::new(128, t as u32))).collect();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let handles: Vec<_> = rings
+            .iter()
+            .cloned()
+            .map(|r| {
+                std::thread::spawn(move || {
+                    for i in 0..PER {
+                        ev(&r, i);
+                    }
+                })
+            })
+            .collect();
+
+        let drainer = {
+            let rings = rings.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut drained = 0u64;
+                let mut lost = 0u64;
+                let mut out = Vec::new();
+                loop {
+                    let done = stop.load(Ordering::Acquire);
+                    for r in &rings {
+                        out.clear();
+                        lost += r.drain_into(&mut out);
+                        for e in &out {
+                            assert_eq!(
+                                e.payload,
+                                e.req.wrapping_mul(0x9e37),
+                                "torn event survived the seqlock check"
+                            );
+                            assert_eq!(e.phase, Phase::Draft);
+                        }
+                        drained += out.len() as u64;
+                    }
+                    if done {
+                        return (drained, lost);
+                    }
+                }
+            })
+        };
+
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Release);
+        let (drained, lost) = drainer.join().unwrap();
+        let written: u64 = rings.iter().map(|r| r.written()).sum();
+        assert_eq!(written, WRITERS as u64 * PER);
+        assert_eq!(drained + lost, written, "drain must conserve events");
+        assert!(drained > 0, "drainer never kept anything");
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let m = encode_meta(Phase::SwapOut, SLOT_NONE, 0xDEAD_BEEF);
+        let (phase, slot) = decode_meta(m).unwrap();
+        assert_eq!(phase, Phase::SwapOut);
+        assert_eq!(slot, SLOT_NONE);
+        assert_eq!((m >> 32) as u32, 0xDEAD_BEEF);
+        assert!(decode_meta(0xFF).is_none(), "invalid phase byte must not decode");
+    }
+}

@@ -82,14 +82,18 @@ COMMANDS:
   info                       Inventory of artifacts, models and executables
   generate                   Generate tokens from a model (native engine or PJRT)
   serve                      HTTP/SSE serving front end over the coordinator
-                             (POST /v1/generate streams tokens; GET /metrics,
-                             /healthz; loopback POST /admin/shutdown stops it;
-                             --synth serves a synthesized checkpoint)
+                             (POST /v1/generate streams tokens; GET /metrics
+                             [?format=prometheus], /healthz, /debug/trace;
+                             loopback POST /admin/shutdown stops it; --synth
+                             serves a synthesized checkpoint; FBQ_TRACE=request|
+                             kernel arms the flight recorder)
   loadgen                    Trace-driven open-loop load harness: one seeded trace
                              in-process and over HTTP loopback -> BENCH_serve.json
                              (--class-mix i,s,b --drop-frac f --degrade --pages n
                              exercise the overload tier: priority preemption,
-                             mid-stream disconnects, adaptive degradation)
+                             mid-stream disconnects, adaptive degradation;
+                             --prom-out f / --trace-out f dump the prometheus
+                             scrape and the chrome trace from the http run)
   eval-ppl                   Perplexity on the held-out validation set (Table 1 cell)
   eval-zeroshot              Zero-shot multiple-choice accuracy (Table 2 cell)
   judge                      Pairwise model comparison (Fig 6 cell)

@@ -1,0 +1,314 @@
+//! Constant-memory log-bucketed latency histogram.
+//!
+//! Replaces the sample-vector [`super::timer::LatencyStats`] on the serving
+//! path: a fixed array of geometrically-spaced buckets (growth factor ~1.2,
+//! so any percentile is resolved to within ~±10% relative error) plus exact
+//! running aggregates (count / sum / min / max). Recording is O(1) with no
+//! allocation, memory is constant regardless of sample count, and two
+//! histograms merge by adding bucket counts — which is what lets per-worker
+//! stats fold into one exposition without shipping raw samples.
+//!
+//! Bucket `i` spans `(ub(i-1), ub(i)]` with `ub(i) = LO_US * GROWTH^i`;
+//! bucket 0 is the underflow bucket `[0, LO_US]` and the last bucket is the
+//! overflow bucket with an infinite upper bound. The same bucket bounds feed
+//! the Prometheus `_bucket{le=...}` exposition and the `buckets` arrays in
+//! `BENCH_serve.json`.
+
+use std::time::Duration;
+
+use crate::util::Json;
+
+/// Total bucket count, including the underflow (0) and overflow (last)
+/// buckets. 128 buckets at growth 1.2 cover 0.1µs .. ~9.5e8µs (~16 min),
+/// far wider than any latency this stack records, in 1KiB per histogram.
+pub const N_BUCKETS: usize = 128;
+
+/// Upper bound of the underflow bucket, in microseconds.
+const LO_US: f64 = 0.1;
+
+/// Geometric growth factor between consecutive bucket upper bounds.
+const GROWTH: f64 = 1.2;
+
+/// Upper bound (µs) of bucket `i`; `+Inf` for the overflow bucket.
+pub fn bucket_upper_us(i: usize) -> f64 {
+    if i + 1 >= N_BUCKETS {
+        f64::INFINITY
+    } else {
+        LO_US * GROWTH.powi(i as i32)
+    }
+}
+
+/// Bucket index for a value in microseconds.
+fn bucket_index(us: f64) -> usize {
+    if !(us > LO_US) {
+        return 0; // also catches NaN and negatives
+    }
+    let idx = ((us / LO_US).ln() / GROWTH.ln()).floor() as usize + 1;
+    idx.min(N_BUCKETS - 1)
+}
+
+/// Log-bucketed latency histogram with exact count/sum/min/max.
+#[derive(Debug, Clone)]
+pub struct Hist {
+    counts: Box<[u64]>,
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            counts: vec![0u64; N_BUCKETS].into_boxed_slice(),
+            count: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.record_us(ns as f64 / 1e3);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let us = if us.is_finite() && us > 0.0 { us } else { 0.0 };
+        self.counts[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        if us < self.min_us {
+            self.min_us = us;
+        }
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    pub fn min_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_us
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Per-bucket counts (index `i` pairs with [`bucket_upper_us`]`(i)`).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// p-th percentile (0..=100), resolved by linear interpolation inside
+    /// the containing bucket — accurate to the bucket's ~1.2x width.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &n) in self.counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if cum + n >= target {
+                let lo = if i == 0 { 0.0 } else { bucket_upper_us(i - 1) };
+                let hi = bucket_upper_us(i);
+                let est = if hi.is_finite() {
+                    let frac = (target - cum) as f64 / n as f64;
+                    lo + (hi - lo) * frac
+                } else {
+                    // Overflow bucket: the exact max is the best bound.
+                    self.max_us
+                };
+                return est.clamp(self.min_us(), self.max_us);
+            }
+            cum += n;
+        }
+        self.max_us
+    }
+
+    /// Fold another histogram into this one (bucket-wise addition).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us max={:.1}us",
+            self.count,
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.max_us
+        )
+    }
+
+    /// Non-empty buckets as `[upper_bound_us, count]` pairs; the overflow
+    /// bucket's bound is emitted as the string `"+Inf"`.
+    pub fn buckets_json(&self) -> Json {
+        let mut out = Vec::new();
+        for (i, &n) in self.counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let le = bucket_upper_us(i);
+            let le_json =
+                if le.is_finite() { Json::Num(le) } else { Json::Str("+Inf".to_string()) };
+            out.push(Json::Arr(vec![le_json, Json::Num(n as f64)]));
+        }
+        Json::Arr(out)
+    }
+
+    /// Summary object with the same keys the JSON metrics always exposed
+    /// (`n`, `mean_us`, `p50_us`, `p95_us`, `p99_us`, `max_us`) plus the
+    /// sparse `buckets` array capturing distribution shape.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.count as f64)),
+            ("mean_us", Json::Num(self.mean_us())),
+            ("p50_us", Json::Num(self.percentile_us(50.0))),
+            ("p95_us", Json::Num(self.percentile_us(95.0))),
+            ("p99_us", Json::Num(self.percentile_us(99.0))),
+            ("max_us", Json::Num(self.max_us())),
+            ("buckets", self.buckets_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_consistent() {
+        // Every recorded value must land in a bucket whose bounds contain it.
+        let mut v = 0.013f64;
+        while v < 5e8 {
+            let i = bucket_index(v);
+            let hi = bucket_upper_us(i);
+            let lo = if i == 0 { 0.0 } else { bucket_upper_us(i - 1) };
+            assert!(v <= hi * (1.0 + 1e-12), "v={v} above bucket {i} hi={hi}");
+            assert!(v >= lo * (1.0 - 1e-9), "v={v} below bucket {i} lo={lo}");
+            v *= 1.37;
+        }
+    }
+
+    #[test]
+    fn exact_aggregates() {
+        let mut h = Hist::new();
+        for us in [10.0, 20.0, 30.0, 40.0, 100.0] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 40.0).abs() < 1e-9);
+        assert_eq!(h.max_us(), 100.0);
+        assert_eq!(h.min_us(), 10.0);
+        // Bucketed median: within one 1.2x bucket of the true 30.0.
+        let p50 = h.percentile_us(50.0);
+        assert!(p50 >= 30.0 / GROWTH && p50 <= 30.0 * GROWTH, "p50={p50}");
+    }
+
+    #[test]
+    fn percentile_relative_error_bounded() {
+        let mut h = Hist::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        for (p, truth) in [(50.0, 500.0), (95.0, 950.0), (99.0, 990.0)] {
+            let est = h.percentile_us(p);
+            assert!(
+                est >= truth / GROWTH && est <= truth * GROWTH,
+                "p{p}: est={est} truth={truth}"
+            );
+        }
+        assert_eq!(h.percentile_us(100.0), 1000.0);
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut both = Hist::new();
+        for i in 0..200 {
+            let v = 1.5f64.powi(i % 23) + i as f64;
+            if i % 2 == 0 { &mut a } else { &mut b }.record_us(v);
+            both.record_us(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.bucket_counts(), both.bucket_counts());
+        assert!((a.sum_us() - both.sum_us()).abs() < 1e-6);
+        assert_eq!(a.max_us(), both.max_us());
+        assert_eq!(a.min_us(), both.min_us());
+    }
+
+    #[test]
+    fn overflow_and_underflow_buckets() {
+        let mut h = Hist::new();
+        h.record_us(0.0); // underflow
+        h.record_us(1e12); // overflow (past the widest finite bound)
+        assert_eq!(h.bucket_counts()[0], 1);
+        assert_eq!(h.bucket_counts()[N_BUCKETS - 1], 1);
+        assert_eq!(h.percentile_us(100.0), 1e12);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut h = Hist::new();
+        h.record_us(42.0);
+        let j = h.to_json();
+        for key in ["n", "mean_us", "p50_us", "p95_us", "p99_us", "max_us", "buckets"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(1));
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].as_arr().unwrap()[1].as_usize(), Some(1));
+    }
+
+    #[test]
+    fn empty_hist_reports_zeros() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.percentile_us(99.0), 0.0);
+        assert_eq!(h.min_us(), 0.0);
+    }
+}

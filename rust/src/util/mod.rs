@@ -7,12 +7,14 @@
 //! unit-tested and used on the request path.
 
 pub mod cli;
+pub mod hist;
 pub mod json;
 pub mod logging;
 pub mod pool;
 pub mod rng;
 pub mod timer;
 
+pub use hist::Hist;
 pub use json::Json;
 pub use rng::Pcg64;
 

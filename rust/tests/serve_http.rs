@@ -78,6 +78,13 @@ fn sse_stream_matches_submit_wait() {
         .collect();
     assert_eq!(done_tokens, o.tokens, "done payload disagrees with streamed frames");
 
+    // the admission id travels as a header and inside the done payload,
+    // and the done frame carries the phase timing breakdown
+    let rid = o.request_id.expect("200 without an X-Request-Id header");
+    assert_eq!(done.get("id").and_then(Json::as_i64), Some(rid as i64));
+    assert!(done.get("queue_us").and_then(Json::as_f64).is_some_and(|v| v >= 0.0));
+    assert!(done.get("prefill_us").and_then(Json::as_f64).is_some_and(|v| v > 0.0));
+
     let metrics = server.shutdown().unwrap();
     assert_eq!(metrics.requests_done, 2);
     assert_eq!(metrics.cancellations, 0);
@@ -136,13 +143,29 @@ fn routes_and_caller_errors_map_to_400() {
 
     let (code, body) = client::get(addr, "/healthz").unwrap();
     assert_eq!(code, 200);
-    assert!(body.contains("ok"));
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(j.get("version").and_then(Json::as_str), Some(env!("CARGO_PKG_VERSION")));
+    assert!(j.get("uptime_s").and_then(Json::as_f64).is_some_and(|v| v >= 0.0));
+    assert!(j.get("degrade_level").is_some());
 
     let (code, body) = client::get(addr, "/metrics").unwrap();
     assert_eq!(code, 200);
     let j = Json::parse(&body).unwrap();
     assert!(j.get("requests_in").is_some(), "metrics missing requests_in: {body}");
     assert!(j.get("ttft").is_some());
+
+    // the same snapshot in prometheus text exposition
+    let (code, body) = client::get(addr, "/metrics?format=prometheus").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("# TYPE fbq_requests_total counter"), "not an exposition: {body}");
+    assert!(body.contains("fbq_latency_seconds_bucket"), "histograms missing: {body}");
+
+    // the trace dump always answers, even with the recorder off
+    let (code, body) = client::get(addr, "/debug/trace").unwrap();
+    assert_eq!(code, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.get("traceEvents").and_then(Json::as_arr).is_some(), "bad dump: {body}");
 
     let (code, _) = client::get(addr, "/no/such/route").unwrap();
     assert_eq!(code, 404);
@@ -220,6 +243,7 @@ fn shed_load_maps_to_429() {
     let o = client::post_generate(addr, &body, None).unwrap();
     assert_eq!(o.status, 429, "shed request must answer 429, got {:?}", o.error);
     assert!(o.error.unwrap().contains("shed"));
+    assert!(o.request_id.is_some(), "shed responses still carry X-Request-Id");
 
     let metrics = server.shutdown().unwrap();
     assert_eq!(metrics.requests_shed, 1);

@@ -1,0 +1,258 @@
+//! Flight-recorder integration gates: the span ledger written by a real
+//! coordinator run must reconstruct request timelines by request id.
+//!
+//! Two scenarios on synthesized checkpoints (no build artifacts needed):
+//! * a deterministic single-slot priority preemption — the
+//!   preempted-and-resumed request's ordered timeline must read
+//!   queue → prefill → decode → swap_out → swap_in → decode → done,
+//! * the seeded chaos trace from the overload suite — every request's
+//!   events must reconcile: exactly one terminal marker, a queue span
+//!   for everything that was placed, and swap-ins never exceeding
+//!   swap-outs.
+//!
+//! The recorder and its level are process globals, so the tests
+//! serialize on a mutex, clear the rings before each scenario, and
+//! assert only on their own request ids.
+
+use fbquant::coordinator::backend::{Backend, NativeBackend};
+use fbquant::coordinator::batcher::BatcherConfig;
+use fbquant::coordinator::overload::DegradeConfig;
+use fbquant::coordinator::request::{GenEvent, GenRequest, Priority};
+use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
+use fbquant::coordinator::workload::{self, Arrival, LenDist, WorkloadConfig};
+use fbquant::engine::{NativeEngine, SubMode};
+use fbquant::serve::harness;
+use fbquant::spec::{DraftMode, SpeculativeConfig};
+use fbquant::testing::{synth_checkpoint, SynthSpec};
+use fbquant::trace::{self, Level, Phase, SpanEvent};
+use std::sync::Mutex;
+use std::time::Duration;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Arm request-level tracing with a roomy ring (the env knob is read
+/// once, at the first recorded event in this process) and clear any
+/// stale events from a previous scenario.
+fn arm() {
+    std::env::set_var("FBQ_TRACE_BUF", "65536");
+    trace::set_level(Level::Request);
+    let _ = trace::drain();
+}
+
+fn events_for(events: &[SpanEvent], req: u64) -> Vec<&SpanEvent> {
+    events.iter().filter(|e| e.req == req).collect()
+}
+
+fn count(ev: &[&SpanEvent], phase: Phase) -> usize {
+    ev.iter().filter(|e| e.phase == phase).count()
+}
+
+fn first_start(ev: &[&SpanEvent], phase: Phase) -> Option<u64> {
+    ev.iter().filter(|e| e.phase == phase).map(|e| e.start_ns).min()
+}
+
+fn last_start(ev: &[&SpanEvent], phase: Phase) -> Option<u64> {
+    ev.iter().filter(|e| e.phase == phase).map(|e| e.start_ns).max()
+}
+
+/// The dense single-slot preemption scenario (a batch request mid-decode
+/// is swapped out for an interactive arrival, then resumes): the drained
+/// ledger must carry the whole story for the preempted request, in order,
+/// attributed to its stable id.
+#[test]
+fn preempted_request_timeline_reconstructs_by_request_id() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    arm();
+    let tag = "trace_dense_preempt";
+    let heavy = SynthSpec {
+        d: 128,
+        n_layers: 4,
+        d_ff: 256,
+        vocab: 64,
+        max_seq: 64,
+        ..SynthSpec::default()
+    };
+    let p1: Vec<u32> = (0..8).map(|i| (i * 5 % 64) as u32).collect();
+    let p2: Vec<u32> = (0..8).map(|i| ((i * 3 + 1) % 64) as u32).collect();
+    let handle = Coordinator::spawn(
+        move || -> anyhow::Result<Box<dyn Backend>> {
+            let store = synth_checkpoint(tag, heavy);
+            let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+            Ok(Box::new(NativeBackend::new(engine, "preempt").with_dense().with_max_slots(1)))
+        },
+        CoordinatorConfig::default(),
+    );
+    const BATCH_ID: u64 = 0x7A01;
+    const INTER_ID: u64 = 0x7A02;
+    let mut batch_req = GenRequest::new(BATCH_ID, p1, 40);
+    batch_req.class = Priority::Batch;
+    let rx = handle.submit(batch_req);
+    // once the first token streams, the batch request owns the only slot
+    match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        GenEvent::Token { .. } => {}
+        other => panic!("expected a token first, got {other:?}"),
+    }
+    let mut inter = GenRequest::new(INTER_ID, p2, 8);
+    inter.class = Priority::Interactive;
+    let r2 = handle.client().submit_wait(inter).unwrap();
+    assert_eq!(r2.id, INTER_ID, "explicit ids must survive admission");
+    loop {
+        match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            GenEvent::Token { .. } => {}
+            GenEvent::Done(r) => {
+                assert_eq!(r.id, BATCH_ID);
+                assert!(r.queue_us >= 0.0 && r.prefill_us > 0.0, "response timing missing");
+                break;
+            }
+            GenEvent::Error { message, .. } => panic!("batch request died: {message}"),
+        }
+    }
+    let metrics = handle.shutdown().unwrap();
+    assert!(
+        metrics.classes[Priority::Batch.index()].preemptions >= 1,
+        "the scenario did not actually preempt — the timeline gate is vacuous"
+    );
+
+    trace::set_level(Level::Off);
+    let dump = trace::drain();
+    assert_eq!(dump.lost, 0, "ring lapped despite FBQ_TRACE_BUF=65536");
+
+    // the preempted request's full story, by id
+    let ev = events_for(&dump.events, BATCH_ID);
+    assert_eq!(count(&ev, Phase::Queue), 1, "queue span: {ev:?}");
+    assert_eq!(count(&ev, Phase::Prefill), 1, "prefill span: {ev:?}");
+    assert!(count(&ev, Phase::DecodeStep) >= 2, "decode steps: {ev:?}");
+    let n_out = count(&ev, Phase::SwapOut);
+    let n_in = count(&ev, Phase::SwapIn);
+    assert!(n_out >= 1, "no swap-out span despite a metered preemption");
+    assert_eq!(n_out, n_in, "every park must trace a matching resume");
+    assert_eq!(count(&ev, Phase::Done), 1, "terminal marker: {ev:?}");
+    for e in &ev {
+        assert!(e.end_ns >= e.start_ns, "inverted span {e:?}");
+        assert!(!e.phase.is_kernel(), "kernel event at request level: {e:?}");
+    }
+
+    // ...in order: queue -> prefill -> decode -> swap_out -> swap_in ->
+    // decode again -> done
+    let queue = first_start(&ev, Phase::Queue).unwrap();
+    let prefill = first_start(&ev, Phase::Prefill).unwrap();
+    let dec_first = first_start(&ev, Phase::DecodeStep).unwrap();
+    let dec_last = last_start(&ev, Phase::DecodeStep).unwrap();
+    let out_first = first_start(&ev, Phase::SwapOut).unwrap();
+    let in_last = last_start(&ev, Phase::SwapIn).unwrap();
+    let done = first_start(&ev, Phase::Done).unwrap();
+    assert!(queue <= prefill, "queue span starts after prefill");
+    assert!(prefill <= dec_first, "prefill starts after the first decode step");
+    assert!(dec_first < out_first, "no decode step before the swap-out");
+    assert!(out_first <= in_last, "swap-in precedes swap-out");
+    assert!(in_last < dec_last, "no decode step after the resume");
+    assert!(done >= dec_last, "terminal marker before the last decode step");
+
+    // the interactive request was never the victim: same ledger shape,
+    // zero swap events
+    let ev2 = events_for(&dump.events, INTER_ID);
+    assert_eq!(count(&ev2, Phase::Queue), 1);
+    assert_eq!(count(&ev2, Phase::Prefill), 1);
+    assert!(count(&ev2, Phase::DecodeStep) >= 1);
+    assert_eq!(count(&ev2, Phase::SwapOut) + count(&ev2, Phase::SwapIn), 0);
+    assert_eq!(count(&ev2, Phase::Done), 1);
+}
+
+/// The chaos trace (bursty arrivals, mixed priorities, planned
+/// disconnects, starved page pool, degradation): after the run, the
+/// drained ledger must reconcile request-by-request — one terminal
+/// marker each, placement spans only for placed requests, swap-ins
+/// bounded by swap-outs.
+#[test]
+fn chaos_span_ledger_reconciles_per_request() {
+    let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    arm();
+    const N: usize = 32;
+    let wl_cfg = WorkloadConfig {
+        n_requests: N,
+        arrival: Arrival::Bursty {
+            rate_on: 400.0,
+            rate_off: 20.0,
+            mean_on_s: 0.03,
+            mean_off_s: 0.03,
+        },
+        prompt_len: LenDist::new(2.0, 0.3, 4, 12),
+        output_len: LenDist::new(2.0, 0.4, 3, 12),
+        template_frac: 0.0,
+        vocab: 64,
+        class_mix: [0.3, 0.4, 0.3],
+        drop_frac: 0.25,
+        seed: 41,
+        ..WorkloadConfig::default()
+    };
+    let mut wl = workload::generate(&wl_cfg, None);
+    wl.clamp_to(64);
+
+    let cfg = CoordinatorConfig {
+        batcher: BatcherConfig { max_queue: 8, ..BatcherConfig::default() },
+        degrade: DegradeConfig { enabled: true, ..DegradeConfig::default() },
+        ..CoordinatorConfig::default()
+    };
+    let handle = Coordinator::spawn(
+        move || -> anyhow::Result<Box<dyn Backend>> {
+            let spec = SynthSpec { vocab: 64, max_seq: 64, ..SynthSpec::default() };
+            let store = synth_checkpoint("trace_chaos", spec);
+            let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+            Ok(Box::new(
+                NativeBackend::new(engine, "chaos")
+                    .with_max_slots(3)
+                    .with_kv_pool(16, 5)
+                    .with_speculative(SpeculativeConfig::new(2, DraftMode::NoSub).with_adaptive()),
+            ))
+        },
+        cfg,
+    );
+    let res = harness::run_in_process(&handle.client(), &wl);
+    let metrics = handle.shutdown().unwrap();
+    assert_eq!(res.records.len(), N, "requests vanished without a terminal event");
+
+    trace::set_level(Level::Off);
+    let dump = trace::drain();
+    assert_eq!(dump.lost, 0, "ring lapped despite FBQ_TRACE_BUF=65536");
+
+    let terminal_of = |ev: &[&SpanEvent]| -> Vec<Phase> {
+        ev.iter().filter(|e| e.phase.is_terminal()).map(|e| e.phase).collect()
+    };
+    let mut swap_outs = 0usize;
+    for rec in &res.records {
+        let ev = events_for(&dump.events, rec.id);
+        assert!(!ev.is_empty(), "request {} left no trace events at all", rec.id);
+        let terms = terminal_of(&ev);
+        assert_eq!(
+            terms.len(),
+            1,
+            "request {} must have exactly one terminal marker, got {terms:?}",
+            rec.id
+        );
+        let n_queue = count(&ev, Phase::Queue);
+        let n_prefill = count(&ev, Phase::Prefill);
+        assert!(n_queue <= 1 && n_prefill <= 1, "request {} placed twice", rec.id);
+        assert_eq!(n_queue, n_prefill, "request {} queue/prefill spans disagree", rec.id);
+        if terms[0] == Phase::Done {
+            assert_eq!(n_queue, 1, "request {} finished without a queue span", rec.id);
+        }
+        let (n_out, n_in) = (count(&ev, Phase::SwapOut), count(&ev, Phase::SwapIn));
+        assert!(n_in <= n_out, "request {} resumed more than it parked", rec.id);
+        swap_outs += n_out;
+        for e in &ev {
+            assert!(e.end_ns >= e.start_ns, "inverted span {e:?}");
+        }
+    }
+    // the chaos actually bit somewhere the recorder can see it
+    let degrades = dump.events.iter().filter(|e| e.phase == Phase::Degrade).count();
+    let sheds = dump.events.iter().filter(|e| e.phase == Phase::Shed).count();
+    assert!(
+        swap_outs + degrades + sheds > 0,
+        "no swap/degrade/shed events — the pool was not starved"
+    );
+    // the span ledger covers the metrics ledger: every metered preemption
+    // traced a swap-out span (a failed park also traces one but meters a
+    // shed, so the trace side can only be >=)
+    let parks: usize = metrics.classes.iter().map(|c| c.preemptions).sum();
+    assert!(swap_outs >= parks, "trace swap-outs ({swap_outs}) below metered parks ({parks})");
+}
