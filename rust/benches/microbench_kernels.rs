@@ -10,10 +10,12 @@
 //!   kernel, emitted to `BENCH_kernels.json`, with a blocking
 //!   SIMD+pool-beats-scalar+scoped assertion at the largest shape,
 //! * the speculative sweep (K × draft-mode) on a synthesized
-//!   checkpoint: acceptance rate, tokens/s and weight bytes per
-//!   committed token vs the K=0 baseline, with a blocking assertion
-//!   that the verifier's weight traffic is charged once per step
-//!   regardless of K,
+//!   checkpoint: acceptance rate, tokens/s, weight bytes per committed
+//!   token and peak KV pages vs the K=0 baseline, with blocking
+//!   assertions that the verifier's weight traffic is charged once per
+//!   step regardless of K and that speculation's peak page footprint
+//!   stays within 1.25× of a plain-decode twin at matched lengths
+//!   (draft mirrors alias the shared pool),
 //! * the sampled-speculation sweep: rejection-sampling acceptance vs
 //!   temperature on a draft that genuinely differs from its target,
 //! * the flight-recorder overhead gate: decode tokens/s with tracing
@@ -331,7 +333,12 @@ fn kernel_matrix_sweep(bench: &Bench) -> anyhow::Result<Json> {
 /// bytes per committed token (target + draft) against the K=0 baseline.
 /// Asserts — blocking in the CI smoke run — that the **verifier's**
 /// weight traffic per step is identical across K: all K+1 positions ride
-/// one weight-stationary pass.
+/// one weight-stationary pass, and that each speculative config's peak
+/// KV pages stay within 1.25× of a plain-decode twin run to the same
+/// per-slot lengths: draft mirrors alias the target's committed pages
+/// in the unified pool, so speculation's only extra pages are the
+/// boundary CoW copies and the verify reserve (the pre-unification
+/// private draft pool paid ~2× here).
 fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
     // sub_scale 0.0: the target pays the full sub-branch weight stream
     // (A/B are read) while contributing exactly nothing, so the bare
@@ -346,13 +353,21 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
         group: 32,
         rank: 8,
         sub_scale: 0.0,
-        max_seq: 256,
+        // headroom past the longest run (128-token prompt + 24 steps of
+        // K=4): the worst-case pool is sized from max_seq, and the
+        // draft's boundary CoW pages must never exhaust it at the tail
+        // or the window degrades to plain decode
+        max_seq: 384,
         ..SynthSpec::default()
     };
     let store = synth_checkpoint("bench_spec", geom);
     let decode_steps = if bench_fast { 12 } else { 24 };
     let m = 4usize;
-    let plen = 16usize;
+    // Long enough that the KV-page gate below is sound in the worst
+    // case: even at zero acceptance in the fast run the plain twin
+    // peaks at ≥ 9 pages/slot, so the ≤ 2 extra pages/slot a window
+    // can pin (one boundary CoW + one reserve page) stay under 1.25×.
+    let plen = 128usize;
 
     println!(
         "\n=== speculative decode sweep: draft bare/shadow branch, batched multi-position verify \
@@ -360,10 +375,10 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
         geom.d
     );
     println!(
-        "{:<10} {:<3} {:>8} {:>9} {:>12} {:>13} {:>15}",
-        "draft", "K", "accept", "tok/step", "tokens/s", "W B/token", "verify W/step"
+        "{:<10} {:<3} {:>8} {:>9} {:>12} {:>13} {:>15} {:>9}",
+        "draft", "K", "accept", "tok/step", "tokens/s", "W B/token", "verify W/step", "pk/plain"
     );
-    println!("{}", "-".repeat(78));
+    println!("{}", "-".repeat(88));
 
     let mut rows: Vec<Json> = Vec::new();
     let mut target_weight_totals: Vec<(String, u64)> = Vec::new();
@@ -382,6 +397,7 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
             }
             let mut state = backend.open_batch(m)?;
             let mut cur = vec![0u32; m];
+            let mut lens = vec![plen; m];
             for slot in 0..m {
                 let prompt: Vec<u32> =
                     (0..plen).map(|i| ((slot * 13 + i * 5) % 96) as u32).collect();
@@ -404,12 +420,14 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
                         committed += sp.accepted.len() + 1;
                         proposed += sp.proposed;
                         accepted += sp.accepted.len();
+                        lens[slot] += sp.accepted.len() + 1;
                         cur[slot] = sp.next;
                     }
                 } else {
                     let lg = backend.decode(&mut state, &toks)?;
                     for (slot, l) in lg.iter().enumerate() {
                         committed += 1;
+                        lens[slot] += 1;
                         cur[slot] = fbquant::tensor::ops::argmax(l) as u32;
                     }
                 }
@@ -426,9 +444,52 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
             if draft.is_none() {
                 base_wbpt = wbpt;
             }
+            let peak_pages =
+                backend.kv_stats(&state).expect("native backend is paged").peak_pages_in_use;
+            // KV-page gate: replay the same prompts through plain decode
+            // until every slot holds exactly as many tokens as this
+            // config committed, and compare pool peaks. Draft mirrors
+            // alias the target's committed pages in the unified pool,
+            // so the only speculative surcharge is the boundary CoW
+            // copy and the verify reserve — blocking at 1.25× of the
+            // plain twin (a private draft pool would sit near 2×).
+            let plain_peak = if draft.is_some() {
+                let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+                let mut pb = NativeBackend::new(engine, "spec-plain").with_max_slots(m);
+                let mut pstate = pb.open_batch(m)?;
+                let mut pcur = vec![0u32; m];
+                for slot in 0..m {
+                    let prompt: Vec<u32> =
+                        (0..plen).map(|i| ((slot * 13 + i * 5) % 96) as u32).collect();
+                    let lg = pb.prefill_slot(&mut pstate, slot, &prompt)?;
+                    pcur[slot] = fbquant::tensor::ops::argmax(&lg) as u32;
+                }
+                let mut plens = vec![plen; m];
+                while (0..m).any(|s| plens[s] < lens[s]) {
+                    let toks: Vec<SlotToken> = (0..m)
+                        .filter(|&s| plens[s] < lens[s])
+                        .map(|s| SlotToken { slot: s, token: pcur[s] })
+                        .collect();
+                    let lg = pb.decode(&mut pstate, &toks)?;
+                    for (t, l) in toks.iter().zip(lg.iter()) {
+                        pcur[t.slot] = fbquant::tensor::ops::argmax(l) as u32;
+                        plens[t.slot] += 1;
+                    }
+                }
+                pb.kv_stats(&pstate).expect("native backend is paged").peak_pages_in_use
+            } else {
+                peak_pages
+            };
+            assert!(
+                peak_pages as f64 <= 1.25 * plain_peak as f64,
+                "{dname}/K{k}: speculative peak KV pages {peak_pages} exceed 1.25x the \
+                 plain-decode peak {plain_peak} at the same slot count and lengths — the \
+                 draft mirror is duplicating pages instead of aliasing them"
+            );
+            let pages_col = format!("{peak_pages}/{plain_peak}");
             println!(
-                "{:<10} {:<3} {:>8.2} {:>9.2} {:>12.0} {:>13.0} {:>15.0}",
-                dname, k, accept_rate, tok_per_step, tps, wbpt, verify_w_step
+                "{:<10} {:<3} {:>8.2} {:>9.2} {:>12.0} {:>13.0} {:>15.0} {:>9}",
+                dname, k, accept_rate, tok_per_step, tps, wbpt, verify_w_step, pages_col
             );
             rows.push(Json::obj(vec![
                 ("mode", Json::from("greedy")),
@@ -442,6 +503,8 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
                 ("tokens_per_s", Json::from(tps)),
                 ("weight_bytes_per_token", Json::from(wbpt)),
                 ("verify_weight_bytes_per_step", Json::from(verify_w_step)),
+                ("peak_pages_in_use", Json::from(peak_pages)),
+                ("plain_peak_pages", Json::from(plain_peak)),
             ]));
             target_weight_totals.push((format!("{dname}/K{k}"), target_w));
             // acceptance criterion: the no-sub rows accept everything on
@@ -485,6 +548,10 @@ fn speculative_sweep(bench_fast: bool) -> anyhow::Result<Vec<Json>> {
         "\nverifier weight traffic: {} bytes/step for every config (charged once per step, \
          independent of K); draft stream is the only extra weight cost.",
         fbquant::util::human_bytes((w0 as usize) / decode_steps)
+    );
+    println!(
+        "peak KV pages stayed within 1.25x of the plain-decode twin for every speculative \
+         config: draft mirrors alias the shared pool instead of duplicating it."
     );
     Ok(rows)
 }

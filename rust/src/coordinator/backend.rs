@@ -368,8 +368,6 @@ pub struct NativeBackend {
     /// pool size in pages; 0 = worst case (`capacity * max_seq` worth,
     /// so decode can never exhaust the pool mid-flight)
     pool_pages: usize,
-    /// draft-mirror pool size in pages; None = mirror the target's
-    draft_pool_pages: Option<usize>,
     /// A/B escape hatch: decode each listed slot with its own engine
     /// step (re-streaming the weights per slot) instead of the
     /// weight-stationary batched step.
@@ -404,7 +402,6 @@ impl NativeBackend {
             max_slots: 4,
             page_size: DEFAULT_PAGE_SIZE,
             pool_pages: 0,
-            draft_pool_pages: None,
             sequential_decode: false,
             spec: None,
             spec_k_cap: None,
@@ -457,15 +454,19 @@ impl NativeBackend {
         self
     }
 
-    /// Cap the **draft mirrors'** page pool at `n_pages` (paged mode
-    /// only; the target pool keeps its own budget). Mid-decode draft
-    /// pool exhaustion never sheds a request — the affected slot
-    /// degrades to a plain (k = 0) step while its neighbors keep
-    /// speculating — so a tight draft budget trades speculation breadth
-    /// for memory per slot.
-    pub fn with_draft_kv_pool(mut self, n_pages: usize) -> NativeBackend {
-        assert!(n_pages > 0, "degenerate draft pool");
-        self.draft_pool_pages = Some(n_pages);
+    /// Deprecated no-op: draft mirrors no longer have a private pool to
+    /// cap. They alias the target slot's committed pages in the ONE
+    /// shared pool ([`crate::engine::kv::KvPagePool::alias_kv`]) and pay
+    /// only a transient copy-on-write page plus the in-flight window, so
+    /// the [`NativeBackend::with_kv_pool`] budget is the whole KV
+    /// budget. Mid-decode pool exhaustion still never sheds a request —
+    /// the affected slot degrades to a plain (k = 0) step while its
+    /// neighbors keep speculating.
+    #[deprecated(
+        since = "0.1.0",
+        note = "draft KV shares the target pool; size it with with_kv_pool"
+    )]
+    pub fn with_draft_kv_pool(self, _n_pages: usize) -> NativeBackend {
         self
     }
 
@@ -498,14 +499,19 @@ impl NativeBackend {
     /// sampling, see [`crate::spec::accept`]); with
     /// [`SpeculativeConfig::adaptive`] each slot's window follows its
     /// acceptance-rate EWMA. Speculating slots gain a rollback-able
-    /// draft KV mirror under the same paging discipline as the target;
-    /// mirrors fill lazily on a slot's first speculative step, so slots
-    /// that only ever plain-decode pay no draft compute — and on the
-    /// (default) paged store, no draft pages either (dense mirrors
-    /// preallocate capacity up front like every dense cache);
+    /// draft KV mirror: on the (default) paged store the mirror ALIASES
+    /// the target slot's committed pages in the one shared pool —
+    /// refcount bumps, no copies — and privatizes only the boundary page
+    /// it appends to, so drafting costs ~one transient copy-on-write
+    /// page per in-flight window instead of a second KV budget; dense
+    /// mirrors preallocate capacity up front like every dense cache.
+    /// Mirrors fill lazily on a slot's first speculative step, so slots
+    /// that only ever plain-decode pay no draft compute or pages;
     /// `open_batch` resets the mirrors, so a speculative backend drives
-    /// one live batch at a time, and a slot must be stepped via
-    /// [`Backend::decode_speculative`] for its whole lifetime.
+    /// one live batch at a time. A dense-mirrored slot must be stepped
+    /// via [`Backend::decode_speculative`] for its whole lifetime;
+    /// shared mirrors resync from the target each step, so paged slots
+    /// may mix plain and speculative steps freely.
     pub fn with_speculative(mut self, cfg: SpeculativeConfig) -> NativeBackend {
         self.spec = Some(SpecDecoder::new(cfg, &self.engine));
         self
@@ -535,17 +541,17 @@ impl NativeBackend {
         }
     }
 
-    /// Draft-pool counters when speculation runs on the paged store
-    /// (None otherwise). The draft pool is sized like the target's — an
-    /// explicit [`NativeBackend::with_kv_pool`] budget applies to EACH
-    /// pool, so a speculative backend's total KV memory is up to 2× the
-    /// configured budget; [`Backend::kv_stats`] reports the target pool
-    /// only.
+    /// Deprecated: always None. Draft mirrors have no private pool any
+    /// more — they alias the target's pages in the ONE shared pool, so
+    /// every draft-side page event (aliases, copy-on-writes, transient
+    /// window pages) lands in [`Backend::kv_stats`], which now reports
+    /// the WHOLE KV budget of a speculative backend.
+    #[deprecated(
+        since = "0.1.0",
+        note = "draft KV shares the target pool; read kv_stats (pages_aliased, cow_copies)"
+    )]
     pub fn draft_kv_stats(&self) -> Option<KvPoolStats> {
-        match self.spec.as_ref().map(|s| &s.kv) {
-            Some(DraftKv::Paged { pool, .. }) => Some(pool.stats()),
-            _ => None,
-        }
+        None
     }
 
     /// The per-slot decode loop ([`NativeBackend::with_sequential_decode`]):
@@ -692,10 +698,13 @@ impl NativeBackend {
     }
 
     /// Register an admission with the speculative state: an empty draft
-    /// mirror plus the prompt queued in the slot's lazy catch-up list
-    /// (the draft engine attends over its own representations, so the
-    /// prompt is mirrored by the slot's FIRST draft pass — and never, if
-    /// the slot never speculates).
+    /// mirror, plus — for dense mirrors only — the prompt queued in the
+    /// slot's lazy catch-up list (the dense draft attends over its own
+    /// representations, so the prompt is mirrored by the slot's FIRST
+    /// draft pass — and never, if the slot never speculates). Shared
+    /// mirrors queue nothing: each speculative step aliases the slot's
+    /// committed page table directly, so there is no catch-up re-prefill
+    /// to schedule.
     fn draft_admit(&mut self, slot: usize, prompt: &[u32]) -> Result<()> {
         let spec = self.spec.as_mut().expect("draft_admit without speculative config");
         spec.kv.occupy(&self.engine.cfg, slot)?;
@@ -704,7 +713,9 @@ impl NativeBackend {
             .get_mut(slot)
             .with_context(|| format!("draft admit: slot {slot} out of range"))?;
         p.clear();
-        p.extend_from_slice(prompt);
+        if matches!(spec.kv, DraftKv::Dense { .. }) {
+            p.extend_from_slice(prompt);
+        }
         // a fresh request starts its adaptive window optimistic
         if let Some(c) = spec.ctrl.get_mut(slot) {
             *c = KController::new(spec.cfg.k);
@@ -736,21 +747,14 @@ impl Backend for NativeBackend {
         let cfg = &self.engine.cfg;
         let pages_per_seq = (cfg.max_seq + self.page_size - 1) / self.page_size;
         let n_pages = if self.pool_pages > 0 { self.pool_pages } else { capacity * pages_per_seq };
-        // the draft KV mirrors the target's paging discipline; opening a
-        // batch resets the mirrors (one live batch per speculative
-        // backend). The draft pool runs without a prefix cache — its
-        // pages are per-step scratch, never shared.
+        // opening a batch resets the draft mirrors (one live batch per
+        // speculative backend). On the paged store the mirrors own no
+        // pool of their own — they alias the target pool's pages
+        // per-step, so the `n_pages` budget below is the backend's whole
+        // KV memory.
         if let Some(spec) = self.spec.as_mut() {
             if self.paged {
-                let mut pc = KvPoolConfig::new(
-                    cfg.n_layers,
-                    cfg.n_heads,
-                    cfg.head_dim(),
-                    self.page_size,
-                    self.draft_pool_pages.unwrap_or(n_pages),
-                );
-                pc.max_cached_prefixes = 0;
-                spec.kv.open_paged(pc, capacity);
+                spec.kv.open_shared(capacity);
             } else {
                 spec.kv.open_dense(capacity);
             }
@@ -931,17 +935,22 @@ impl Backend for NativeBackend {
         } else {
             self.decode_batched(state, tokens, false)?
         };
-        // plain-decoded tokens of speculative slots queue in the mirror's
+        // plain-decoded tokens of DENSE speculative mirrors queue in the
         // lazy catch-up list, so a slot degraded to plain decode (shadow
         // routing, K capped to 0) can return to speculative stepping
-        // with `draft len + pending == target len` intact
+        // with `draft len + pending == target len` intact. Shared
+        // mirrors queue nothing: the next speculative step re-aliases
+        // the target's committed page table, so plain and speculative
+        // steps mix freely on the paged store.
         if let Some(spec) = self.spec.as_mut() {
-            for st in tokens {
-                if spec.kv.len(st.slot).is_none() {
-                    continue;
-                }
-                if let Some(p) = spec.pending.get_mut(st.slot) {
-                    p.push(st.token);
+            if matches!(spec.kv, DraftKv::Dense { .. }) {
+                for st in tokens {
+                    if spec.kv.len(st.slot).is_none() {
+                        continue;
+                    }
+                    if let Some(p) = spec.pending.get_mut(st.slot) {
+                        p.push(st.token);
+                    }
                 }
             }
         }
@@ -1061,32 +1070,67 @@ impl Backend for NativeBackend {
             _ => bail!("native backend got a foreign batch state"),
         }
 
-        // Phase 0b: the draft mirror (plus its lazy catch-up queue) must
-        // sit exactly at the target's length — decode and
-        // decode_speculative cannot be mixed on one slot — and a
-        // drafting slot needs `pending + k_i` mirror positions (the
-        // queued catch-up tokens ride the first draft pass).
-        {
-            let spec = self.spec.as_mut().expect("config checked above");
-            for (i, st) in reqs.iter().enumerate() {
-                let Some(dlen) = spec.kv.len(st.slot) else {
-                    bail!("slot {}: no draft kv mirror (admitted without speculation?)", st.slot);
-                };
-                let lag = spec.pending.get(st.slot).map_or(0, |p| p.len());
-                if dlen + lag != lens[i] {
-                    bail!(
-                        "slot {}: draft kv at {dlen} (+{lag} pending) but target at {} \
-                         (mixed decode/decode_speculative on one slot?)",
-                        st.slot,
-                        lens[i]
-                    );
-                }
-                // degraded (k = 0) slots write nothing to the mirror —
-                // their committed tokens queue in `pending` instead
-                if ks[i] > 0 && spec.kv.ensure(st.slot, lag + ks[i]).is_err() {
-                    ks[i] = 0; // draft pool pressure: degrade, not error
+        // Phase 0b: bring each draft mirror to the target's committed
+        // state. Shared mirrors sync by aliasing the target slot's page
+        // table — refcount bumps out of the ONE shared pool, no copies —
+        // then reserve their k-token window, which copy-on-writes the
+        // partially filled boundary page so the verify rows (written to
+        // the target's own copy later this step) never land in a shared
+        // page. Dense mirrors (plus their lazy catch-up queue) must sit
+        // exactly at the target's length, and a drafting slot needs
+        // `pending + k_i` mirror positions (the queued catch-up tokens
+        // ride the first draft pass).
+        match state {
+            BatchState::NativePaged { pool, slots } => {
+                let spec = self.spec.as_mut().expect("config checked above");
+                for (i, st) in reqs.iter().enumerate() {
+                    if spec.kv.len(st.slot).is_none() {
+                        bail!(
+                            "slot {}: no draft kv mirror (admitted without speculation?)",
+                            st.slot
+                        );
+                    }
+                    if ks[i] == 0 {
+                        continue; // degraded slots touch no draft pages
+                    }
+                    let target = slots[st.slot].as_ref().expect("validated in phase 0");
+                    spec.kv.sync_to_target(pool, st.slot, target);
+                    if spec.kv.ensure(st.slot, ks[i], Some(&mut *pool)).is_err() {
+                        // shared-pool pressure: degrade to a plain verify
+                        // step, returning any partially mapped window —
+                        // including a still-shared boundary alias, which
+                        // the verify write must own exclusively
+                        spec.kv.retain_target_prefix(pool, st.slot, target);
+                        ks[i] = 0;
+                    }
                 }
             }
+            BatchState::Native { .. } => {
+                let spec = self.spec.as_mut().expect("config checked above");
+                for (i, st) in reqs.iter().enumerate() {
+                    let Some(dlen) = spec.kv.len(st.slot) else {
+                        bail!(
+                            "slot {}: no draft kv mirror (admitted without speculation?)",
+                            st.slot
+                        );
+                    };
+                    let lag = spec.pending.get(st.slot).map_or(0, |p| p.len());
+                    if dlen + lag != lens[i] {
+                        bail!(
+                            "slot {}: draft kv at {dlen} (+{lag} pending) but target at {} \
+                             (mixed decode/decode_speculative on one slot?)",
+                            st.slot,
+                            lens[i]
+                        );
+                    }
+                    // degraded (k = 0) slots write nothing to the mirror —
+                    // their committed tokens queue in `pending` instead
+                    if ks[i] > 0 && spec.kv.ensure(st.slot, lag + ks[i], None).is_err() {
+                        ks[i] = 0; // draft capacity pressure: degrade, not error
+                    }
+                }
+            }
+            _ => unreachable!("state variant validated in phase 0"),
         }
 
         // Phase 1: batched drafting on the degraded branch — argmax
@@ -1112,8 +1156,22 @@ impl Backend for NativeBackend {
             };
             let slot_ids: Vec<usize> = reqs.iter().map(|t| t.slot).collect();
             let cur0: Vec<u32> = reqs.iter().map(|t| t.token).collect();
-            let out =
-                draft_tokens(draft_engine, kv, ws, &slot_ids, pending, &cur0, &ks, &samplings, rng);
+            let pool = match state {
+                BatchState::NativePaged { pool, .. } => Some(&mut *pool),
+                _ => None,
+            };
+            let out = draft_tokens(
+                draft_engine,
+                kv,
+                ws,
+                &slot_ids,
+                pending,
+                &cur0,
+                &ks,
+                &samplings,
+                rng,
+                pool,
+            );
             self.engine.mode = saved;
             out
         };
@@ -1178,11 +1236,15 @@ impl Backend for NativeBackend {
             );
         }
 
-        // Phase 3: per-mode acceptance and rollback of rejected
-        // positions on both caches. On full acceptance the mirror never
-        // fed the last committed token — it queues in the lazy catch-up
-        // list and rides the NEXT step's first draft pass (no extra
-        // draft weight stream).
+        // Phase 3: per-mode acceptance, then rollback of every rejected
+        // position. The target truncates; a shared mirror retains only
+        // the aliases still matching the committed prefix — acceptance
+        // and rejection are the same operation, and the diverged
+        // copy-on-write boundary plus the draft window return to the
+        // pool; a dense mirror truncates, or on full acceptance queues
+        // the last committed token in its lazy catch-up list (the
+        // mirror never fed it, so it rides the NEXT step's first draft
+        // pass with no extra weight stream).
         let mut out: Vec<SpecStep> = Vec::with_capacity(n);
         for (i, st) in reqs.iter().enumerate() {
             let spec = self.spec.as_mut().expect("config checked above");
@@ -1207,22 +1269,22 @@ impl Backend for NativeBackend {
             match state {
                 BatchState::Native { slots } => {
                     slots[st.slot].as_mut().expect("validated above").truncate(committed);
+                    if a == ks[i] {
+                        let last = if ks[i] == 0 { st.token } else { drafts[i][ks[i] - 1] };
+                        spec.pending[st.slot].push(last);
+                    } else {
+                        // the drafting pass drained this slot's pending
+                        // queue, so the mirror holds exactly the
+                        // committed prefix after the truncate
+                        spec.kv.truncate(st.slot, committed);
+                    }
                 }
                 BatchState::NativePaged { pool, slots } => {
                     let kv = slots[st.slot].as_mut().expect("validated above");
                     pool.truncate_kv(kv, committed);
+                    spec.kv.retain_target_prefix(pool, st.slot, kv);
                 }
                 _ => unreachable!("state variant validated in phase 0"),
-            }
-            let spec = self.spec.as_mut().expect("config checked above");
-            if a == ks[i] {
-                let last = if ks[i] == 0 { st.token } else { drafts[i][ks[i] - 1] };
-                spec.pending[st.slot].push(last);
-            } else {
-                // the drafting pass drained this slot's pending queue, so
-                // the mirror holds exactly the committed prefix after the
-                // truncate
-                spec.kv.truncate(st.slot, committed);
             }
             out.push(SpecStep { accepted: drafts[i][..a].to_vec(), next, proposed: ks[i] });
         }
@@ -1243,10 +1305,15 @@ impl Backend for NativeBackend {
     }
 
     /// Swap `slot` out into a host-side parking buffer: a bit-exact copy
-    /// of the committed target KV, the draft mirror (when the slot
+    /// of the committed target KV, the dense draft mirror (when the slot
     /// speculates), the mirror's lazy catch-up queue, and the adaptive-K
-    /// controller. The slot is freed — on the paged store its pages
-    /// return to the pool, which is the memory another admission needs.
+    /// controller. A SHARED draft mirror parks as nothing at all:
+    /// between steps it is a pure function of the target's committed
+    /// pages, so parking just releases its aliases — the shared pages
+    /// serialize once, with the target — and the next speculative step
+    /// after restore re-aliases them bit-identically. The slot is freed
+    /// — on the paged store its pages return to the pool, which is the
+    /// memory another admission needs.
     fn swap_out(&mut self, state: &mut BatchState, slot: usize) -> Result<ParkedSlot> {
         let target = match state {
             BatchState::Native { slots } => {
@@ -1267,7 +1334,10 @@ impl Backend for NativeBackend {
         };
         let (draft, pending, ctrl) = match self.spec.as_mut() {
             Some(spec) => {
-                let draft = spec.kv.park(slot);
+                let draft = match state {
+                    BatchState::NativePaged { pool, .. } => spec.kv.park(slot, Some(pool)),
+                    _ => spec.kv.park(slot, None),
+                };
                 let pending = spec.pending.get_mut(slot).map(std::mem::take).unwrap_or_default();
                 let ctrl = spec.ctrl.get(slot).cloned();
                 if let Some(c) = spec.ctrl.get_mut(slot) {
@@ -1321,8 +1391,10 @@ impl Backend for NativeBackend {
         if let Some(spec) = self.spec.as_mut() {
             let restored = match parked.draft.as_ref() {
                 Some(d) => spec.kv.unpark(&self.engine.cfg, slot, d),
-                // parked before the slot ever speculated on a then-
-                // non-speculative backend: resume with an empty mirror
+                // shared mirrors always park as None (re-derived by
+                // re-aliasing the restored target), as do slots parked
+                // by a then-non-speculative backend: resume with an
+                // empty mirror
                 None => spec.kv.occupy(&self.engine.cfg, slot),
             };
             if let Err(e) = restored {
@@ -1398,7 +1470,10 @@ impl Backend for NativeBackend {
             _ => bail!("native backend got a foreign batch state"),
         }
         if let Some(spec) = self.spec.as_mut() {
-            spec.kv.release(slot);
+            match state {
+                BatchState::NativePaged { pool, .. } => spec.kv.release(slot, Some(pool)),
+                _ => spec.kv.release(slot, None),
+            }
             if let Some(p) = spec.pending.get_mut(slot) {
                 p.clear();
             }

@@ -442,7 +442,7 @@ impl ServeMetrics {
         if let Some(p) = &self.kv_pool {
             out.push_str(&format!(
                 "\n  kv pool: pages {}/{} (peak {}) prefix hits {}/{} reused {} tok \
-                 cow {} evictions {} alloc_failures {}",
+                 cow {} aliased {} evictions {} alloc_failures {}",
                 p.pages_in_use,
                 p.pages_total,
                 p.peak_pages_in_use,
@@ -450,6 +450,7 @@ impl ServeMetrics {
                 p.prefix_lookups,
                 p.prefix_tokens_reused,
                 p.cow_copies,
+                p.pages_aliased,
                 p.prefix_evictions,
                 p.alloc_failures,
             ));
@@ -524,6 +525,7 @@ impl ServeMetrics {
                     ("prefix_hits", p.prefix_hits.into()),
                     ("prefix_tokens_reused", p.prefix_tokens_reused.into()),
                     ("cow_copies", p.cow_copies.into()),
+                    ("pages_aliased", p.pages_aliased.into()),
                     ("alloc_failures", p.alloc_failures.into()),
                 ]),
             ));

@@ -202,6 +202,13 @@ pub fn render(m: &ServeMetrics) -> String {
         sample(&mut out, "fbq_kv_prefix_hits_total", &[], p.prefix_hits as f64);
         header(&mut out, "fbq_kv_cow_copies_total", "Copy-on-write page copies.", "counter");
         sample(&mut out, "fbq_kv_cow_copies_total", &[], p.cow_copies as f64);
+        header(
+            &mut out,
+            "fbq_kv_pages_aliased_total",
+            "Pages adopted by reference (draft mirrors aliasing target pages).",
+            "counter",
+        );
+        sample(&mut out, "fbq_kv_pages_aliased_total", &[], p.pages_aliased as f64);
         header(&mut out, "fbq_kv_alloc_failures_total", "Failed KV page allocations.", "counter");
         sample(&mut out, "fbq_kv_alloc_failures_total", &[], p.alloc_failures as f64);
     }

@@ -16,7 +16,11 @@
 //!   **refcounted**: admissions whose prompt shares a cached prefix map
 //!   the same read-only pages (see [`KvPagePool::adopt_prefix`]) and a
 //!   write into a shared page triggers copy-on-write
-//!   ([`KvPagePool::ensure_range`]).
+//!   ([`KvPagePool::ensure_range`]). Speculative draft mirrors borrow a
+//!   slot's committed pages through the same machinery
+//!   ([`KvPagePool::alias_kv`] / [`KvPagePool::retain_shared_prefix`]),
+//!   so drafting costs one CoW page per in-flight window instead of a
+//!   second KV budget.
 //!
 //! Admission accounting follows the store: the dense cache's
 //! [`KvCache::resident_bytes`] is its full allocation (capacity *is*
@@ -355,6 +359,10 @@ pub struct KvPoolStats {
     pub prefix_tokens_reused: usize,
     /// Shared pages privatized on first divergent write.
     pub cow_copies: usize,
+    /// Pages adopted by reference into another view (draft mirrors
+    /// aliasing a target slot's committed pages: a refcount bump, no
+    /// copy and no new page).
+    pub pages_aliased: usize,
     /// Page allocations that failed with the pool exhausted.
     pub alloc_failures: usize,
     /// Live prefix-cache entries.
@@ -379,6 +387,13 @@ pub struct PagedKv {
 }
 
 impl PagedKv {
+    /// An empty view bound to no pages yet — [`KvPagePool::new_kv`]
+    /// without borrowing the pool (the draft mirrors occupy slots before
+    /// they can see the pool).
+    pub(crate) fn empty(max_seq: usize) -> PagedKv {
+        PagedKv { pages: Vec::new(), len: 0, max_seq }
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
@@ -775,6 +790,65 @@ impl KvPagePool {
         }
         kv.len = parked.len;
         Ok(kv)
+    }
+
+    /// Make `dst` an alias of `src`'s pages covering positions `0..len`
+    /// (`len <= src.len()`): pure refcount bumps, no copy and no new
+    /// page. Pages `dst` already shares with `src` (a common page-table
+    /// prefix from an earlier alias) are kept as-is; diverged or excess
+    /// `dst` pages are released first, so calling this every step is an
+    /// incremental sync, not a rebuild.
+    ///
+    /// This is how a speculative slot's draft mirror borrows the
+    /// target's committed history out of the ONE shared pool: the draft
+    /// pass reads the aliased positions read-only and its first append
+    /// into a shared boundary page goes through
+    /// [`KvPagePool::ensure_range`]'s copy-on-write, exactly like a
+    /// prefix-cache adoption.
+    pub fn alias_kv(&mut self, dst: &mut PagedKv, src: &PagedKv, len: usize) {
+        assert!(len <= src.len, "alias {len} past src len {}", src.len);
+        let ps = self.cfg.page_size;
+        let need = if len == 0 { 0 } else { (len - 1) / ps + 1 };
+        let mut common = 0usize;
+        while common < dst.pages.len() && common < need && dst.pages[common] == src.pages[common] {
+            common += 1;
+        }
+        while dst.pages.len() > common {
+            let p = dst.pages.pop().expect("length checked above");
+            self.release_page(p);
+        }
+        for i in common..need {
+            let p = src.pages[i];
+            debug_assert!(self.refcount[p as usize] > 0, "aliasing an unmapped page");
+            self.refcount[p as usize] += 1;
+            dst.pages.push(p);
+            self.stats.pages_aliased += 1;
+        }
+        dst.len = len;
+    }
+
+    /// Roll `kv` back to the longest page-table prefix it shares with
+    /// `src`, releasing everything past it — the speculative end-of-step
+    /// cleanup: pages the draft pass privatized (copy-on-write) or
+    /// appended diverge from the target's table and return to the pool,
+    /// while still-shared aliases keep their reference. Only `src`'s
+    /// FULL pages are ever retained: `src` keeps appending into its
+    /// partially filled boundary page between syncs, and a lingering
+    /// alias there would force `src` to copy-on-write its own boundary —
+    /// so a boundary alias (possible when a sync's window reservation
+    /// failed before privatizing it) is dropped here too.
+    pub fn retain_shared_prefix(&mut self, kv: &mut PagedKv, src: &PagedKv) {
+        let full = src.len / self.cfg.page_size;
+        let keep = kv.pages.len().min(src.pages.len()).min(full);
+        let mut common = 0usize;
+        while common < keep && kv.pages[common] == src.pages[common] {
+            common += 1;
+        }
+        while kv.pages.len() > common {
+            let p = kv.pages.pop().expect("length checked above");
+            self.release_page(p);
+        }
+        kv.len = common * self.cfg.page_size;
     }
 }
 
@@ -1238,6 +1312,74 @@ mod tests {
         let before = pool.pages_in_use();
         assert!(pool.unpark_kv(&big, 8).is_err());
         assert_eq!(pool.pages_in_use(), before, "failed unpark leaks nothing");
+    }
+
+    #[test]
+    fn alias_bumps_refcounts_and_cow_privatizes_the_boundary() {
+        // ps=4: target commits 6 positions -> 2 pages (page 1 half full)
+        let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 4, 8));
+        let mut target = pool.new_kv(32);
+        pool.ensure_range(&mut target, 0, 6).unwrap();
+        for pos in 0..6 {
+            let t = pos as f32;
+            paged_write(&mut pool, &target, 0, pos, &[t, t], &[-t, -t]);
+        }
+        target.len = 6;
+        let mut draft = pool.new_kv(32);
+        pool.alias_kv(&mut draft, &target, 6);
+        assert_eq!(draft.len(), 6);
+        assert_eq!(draft.page_ids(), target.page_ids(), "alias shares the table");
+        assert_eq!(pool.pages_in_use(), 2, "aliasing maps no new pages");
+        for &p in target.page_ids() {
+            assert_eq!(pool.page_refcount(p), 2);
+        }
+        assert_eq!(pool.stats().pages_aliased, 2);
+        // draft appends at 6..8: the shared boundary page privatizes
+        pool.ensure_range(&mut draft, 6, 8).unwrap();
+        assert_eq!(pool.stats().cow_copies, 1);
+        assert_ne!(draft.page_ids()[1], target.page_ids()[1], "boundary diverged");
+        assert_eq!(draft.page_ids()[0], target.page_ids()[0], "full page still shared");
+        assert_eq!(pool.page_refcount(target.page_ids()[1]), 1, "target owns its boundary again");
+        // the aliased history reads the target's values through the copy
+        let dref = PagedKvRef { pool: &mut pool, kv: &mut draft };
+        for pos in 0..6 {
+            assert_eq!(dref.k_at(0, pos, 0), &[pos as f32, pos as f32]);
+        }
+        pool.release_kv(&mut draft);
+        pool.release_kv(&mut target);
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn alias_is_an_incremental_sync_and_retain_drops_only_divergence() {
+        let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, 4, 8));
+        let mut target = pool.new_kv(32);
+        pool.ensure_range(&mut target, 0, 9).unwrap();
+        target.len = 9;
+        let mut draft = pool.new_kv(32);
+        pool.alias_kv(&mut draft, &target, 9);
+        let aliased_first = pool.stats().pages_aliased;
+        assert_eq!(aliased_first, 3);
+        // draft window: CoW the boundary page + one fresh page
+        pool.ensure_range(&mut draft, 9, 13).unwrap();
+        draft.len = 13;
+        let in_use_mid = pool.pages_in_use();
+        assert_eq!(in_use_mid, 5, "one CoW + one fresh window page");
+        // end of step: only the diverged pages return to the pool
+        pool.retain_shared_prefix(&mut draft, &target);
+        assert_eq!(pool.pages_in_use(), 3, "target's pages survive");
+        assert_eq!(draft.n_pages(), 2);
+        assert_eq!(draft.len(), 8, "retained length is the shared full pages");
+        // next-step sync re-aliases only what's missing
+        pool.alias_kv(&mut draft, &target, 9);
+        assert_eq!(
+            pool.stats().pages_aliased,
+            aliased_first + 1,
+            "two pages were still shared; only the boundary re-aliases"
+        );
+        pool.release_kv(&mut draft);
+        pool.release_kv(&mut target);
+        assert_eq!(pool.pages_in_use(), 0);
     }
 
     #[test]

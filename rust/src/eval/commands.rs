@@ -15,6 +15,7 @@ use crate::runtime::ExecRegistry;
 use crate::serve::{self, harness, ServeConfig};
 use crate::util::cli::Args;
 use crate::util::json::Json;
+use crate::util::signal;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -289,7 +290,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         "  curl -N -X POST http://{addr}/v1/generate \\\n       \
          -d '{{\"prompt\":[61,32,115,101,97,32,61],\"max_new_tokens\":24}}'"
     );
-    println!("stdin EOF (Ctrl-D) or POST /admin/shutdown (loopback) shuts down gracefully");
+    println!(
+        "stdin EOF (Ctrl-D), SIGTERM/SIGINT, or POST /admin/shutdown (loopback) \
+         shuts down gracefully"
+    );
+    // SIGTERM (systemd stop, container runtimes, kill) and Ctrl-C land in
+    // the same graceful drain as stdin EOF instead of killing the process
+    signal::hook_termination();
     // stdin is watched from a side thread so the main loop can also poll
     // the /admin/shutdown flag — EOF alone used to be the only way out,
     // which headless callers (no tty, piped stdin held open) cannot send
@@ -307,7 +314,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             eof.store(true, Ordering::SeqCst);
         });
     }
-    while !eof.load(Ordering::SeqCst) && !server.shutdown_requested() {
+    while !eof.load(Ordering::SeqCst)
+        && !server.shutdown_requested()
+        && !signal::termination_requested()
+    {
         std::thread::sleep(Duration::from_millis(50));
     }
     let metrics = server.shutdown()?;

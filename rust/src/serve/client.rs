@@ -99,7 +99,11 @@ pub fn post_generate(
         out.finished_at = Instant::now();
         return Ok(out);
     }
-    while let Some(ev) = sse::read_event(&mut reader)? {
+    // Blank-line-delimited incremental parse: frames split across read
+    // boundaries (or coalesced into one read) parse identically, where a
+    // per-read interpretation would mis-frame them.
+    let mut parser = sse::SseParser::new();
+    while let Some(ev) = sse::next_from(&mut reader, &mut parser)? {
         match ev.event.as_str() {
             "message" => {
                 let j = Json::parse(&ev.data).map_err(|e| anyhow!("bad token frame: {e}"))?;

@@ -28,6 +28,9 @@
 //!   Chrome trace-event JSON (load it in Perfetto / `chrome://tracing`;
 //!   one lane per slot plus one per recording thread). Draining
 //!   consumes: two consecutive fetches return disjoint events.
+//!   Concurrent scrapers serialize; the one that lost the race gets
+//!   `otherData.partial: true` plus the winner's drain window instead
+//!   of silently receiving half the stream.
 //! * `GET /healthz` — liveness probe: build version, uptime seconds
 //!   and the current degradation level.
 //! * `POST /admin/shutdown` — request a graceful shutdown. Gated on the
@@ -288,7 +291,9 @@ fn handle_conn(
         },
         ("GET", "/debug/trace") => {
             // Drain-and-render: consumes the recorder's buffered events so
-            // back-to-back fetches return disjoint windows.
+            // back-to-back fetches return disjoint windows. Concurrent
+            // scrapers serialize on the recorder's drain lock; a loser's
+            // document carries `otherData.partial` + the winner's window.
             let dump = trace::drain();
             let body = trace::chrome::to_chrome_json(&dump).to_string_compact();
             let _ = http::write_response(&mut writer, 200, "application/json", body.as_bytes());

@@ -6,10 +6,15 @@
 //! the default event name `message` (one per [`GenEvent::Token`]);
 //! terminal frames are named `done` / `error`.
 //!
+//! Parsing is incremental: [`SseParser`] buffers raw bytes and only
+//! dispatches at the blank-line frame delimiter, so a frame split across
+//! read boundaries at any byte offset — or several frames coalesced into
+//! one read — parses identically to tidy one-frame-per-read delivery.
+//!
 //! [`GenEvent::Token`]: crate::coordinator::request::GenEvent
 
 use anyhow::Result;
-use std::io::BufRead;
+use std::io::{BufRead, Read};
 
 /// A data-only frame (default `message` event).
 pub fn data_frame(data: &str) -> String {
@@ -29,37 +34,136 @@ pub struct SseEvent {
     pub data: String,
 }
 
-/// Read the next event from an SSE stream; `None` on clean end-of-stream.
+/// Incremental SSE parser. [`feed`](SseParser::feed) arbitrary byte
+/// chunks, [`next_event`](SseParser::next_event) complete frames out;
+/// [`finish`](SseParser::finish) flushes a trailing unterminated frame at
+/// end-of-stream. Frame boundaries are the blank-line delimiter, never
+/// the read boundary, so chunking cannot change what parses.
+///
 /// Multi-line `data:` payloads are joined with `\n` per the SSE spec;
 /// comment lines (leading `:`) are ignored.
-pub fn read_event(r: &mut impl BufRead) -> Result<Option<SseEvent>> {
-    let mut event = String::from("message");
-    let mut data = String::new();
-    let mut saw_data = false;
-    loop {
-        let mut line = String::new();
-        let n = r.read_line(&mut line)?;
-        if n == 0 {
-            return Ok(saw_data.then_some(SseEvent { event, data }));
+#[derive(Debug)]
+pub struct SseParser {
+    buf: Vec<u8>,
+    event: String,
+    data: String,
+    saw_data: bool,
+}
+
+impl SseParser {
+    pub fn new() -> SseParser {
+        SseParser {
+            buf: Vec::new(),
+            event: String::from("message"),
+            data: String::new(),
+            saw_data: false,
         }
-        let line = line.trim_end_matches(['\r', '\n']);
-        if line.is_empty() {
-            if saw_data {
-                return Ok(Some(SseEvent { event, data }));
+    }
+
+    /// Append one received chunk (any length, any alignment).
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Take the next complete frame, if its blank-line delimiter has
+    /// arrived. Returns `None` when the buffered tail is still mid-frame.
+    pub fn next_event(&mut self) -> Option<SseEvent> {
+        while let Some(line) = self.take_line() {
+            if let Some(ev) = self.accept_line(&line) {
+                return Some(ev);
             }
-            continue;
+        }
+        None
+    }
+
+    /// End-of-stream flush: parses any unterminated trailing line and
+    /// dispatches a final frame that never got its blank-line delimiter.
+    pub fn finish(&mut self) -> Option<SseEvent> {
+        if !self.buf.is_empty() {
+            let rest = std::mem::take(&mut self.buf);
+            let line = String::from_utf8_lossy(&rest).into_owned();
+            if let Some(ev) = self.accept_line(line.trim_end_matches(['\r', '\n'])) {
+                return Some(ev);
+            }
+        }
+        self.saw_data.then(|| self.dispatch())
+    }
+
+    /// Pop one complete line (through its `\n`) off the buffer front.
+    fn take_line(&mut self) -> Option<String> {
+        let nl = self.buf.iter().position(|&b| b == b'\n')?;
+        let raw: Vec<u8> = self.buf.drain(..=nl).collect();
+        let line = String::from_utf8_lossy(&raw).into_owned();
+        Some(line.trim_end_matches(['\r', '\n']).to_string())
+    }
+
+    /// Fold one line into the in-progress frame; a dispatching blank
+    /// line yields the frame.
+    fn accept_line(&mut self, line: &str) -> Option<SseEvent> {
+        if line.is_empty() {
+            return self.saw_data.then(|| self.dispatch());
         }
         if line.starts_with(':') {
-            continue;
+            return None;
         }
         if let Some(v) = line.strip_prefix("event:") {
-            event = v.trim_start().to_string();
+            self.event = v.trim_start().to_string();
         } else if let Some(v) = line.strip_prefix("data:") {
-            if saw_data {
-                data.push('\n');
+            if self.saw_data {
+                self.data.push('\n');
             }
-            data.push_str(v.strip_prefix(' ').unwrap_or(v));
-            saw_data = true;
+            self.data.push_str(v.strip_prefix(' ').unwrap_or(v));
+            self.saw_data = true;
+        }
+        None
+    }
+
+    fn dispatch(&mut self) -> SseEvent {
+        self.saw_data = false;
+        SseEvent {
+            event: std::mem::replace(&mut self.event, String::from("message")),
+            data: std::mem::take(&mut self.data),
+        }
+    }
+}
+
+impl Default for SseParser {
+    fn default() -> SseParser {
+        SseParser::new()
+    }
+}
+
+/// Pump bytes from `r` into `p` until one complete frame is available;
+/// `None` on clean end-of-stream (after flushing any trailing frame).
+/// Reads are chunk-oriented, so frames straddling read boundaries or
+/// coalesced into one read parse identically.
+pub fn next_from(r: &mut impl Read, p: &mut SseParser) -> Result<Option<SseEvent>> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(ev) = p.next_event() {
+            return Ok(Some(ev));
+        }
+        let n = r.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(p.finish());
+        }
+        p.feed(&chunk[..n]);
+    }
+}
+
+/// Read the next event from an SSE stream; `None` on clean end-of-stream.
+/// Line-at-a-time convenience over [`SseParser`] for `BufRead` call sites
+/// (leaves bytes past the frame in the reader).
+pub fn read_event(r: &mut impl BufRead) -> Result<Option<SseEvent>> {
+    let mut p = SseParser::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            return Ok(p.finish());
+        }
+        p.feed(line.as_bytes());
+        if let Some(ev) = p.next_event() {
+            return Ok(Some(ev));
         }
     }
 }
@@ -92,5 +196,104 @@ mod tests {
         let mut r = BufReader::new("data: a\ndata: b\n\n".as_bytes());
         let ev = read_event(&mut r).unwrap().unwrap();
         assert_eq!(ev.data, "a\nb");
+    }
+
+    fn expected_stream() -> (String, Vec<SseEvent>) {
+        let wire = format!(
+            "{}{}{}{}",
+            data_frame("{\"token\":1}"),
+            ": keep-alive\n\n",
+            event_frame("message", "{\"token\":2}"),
+            event_frame("done", "{\"tokens\":[1,2]}"),
+        );
+        let expect = vec![
+            SseEvent { event: "message".into(), data: "{\"token\":1}".into() },
+            SseEvent { event: "message".into(), data: "{\"token\":2}".into() },
+            SseEvent { event: "done".into(), data: "{\"tokens\":[1,2]}".into() },
+        ];
+        (wire, expect)
+    }
+
+    fn drain(p: &mut SseParser, into: &mut Vec<SseEvent>) {
+        while let Some(ev) = p.next_event() {
+            into.push(ev);
+        }
+    }
+
+    #[test]
+    fn parses_identically_when_split_at_every_byte_offset() {
+        // The documented straddle bug: a frame cut anywhere by a read
+        // boundary (or two frames coalesced into one read — cut = 0 and
+        // cut = len cover both extremes) must parse exactly like tidy
+        // one-frame-per-read delivery.
+        let (wire, expect) = expected_stream();
+        for cut in 0..=wire.len() {
+            let (a, b) = wire.as_bytes().split_at(cut);
+            let mut p = SseParser::new();
+            let mut got = Vec::new();
+            p.feed(a);
+            drain(&mut p, &mut got);
+            p.feed(b);
+            drain(&mut p, &mut got);
+            if let Some(ev) = p.finish() {
+                got.push(ev);
+            }
+            assert_eq!(got, expect, "split at byte {cut}");
+        }
+    }
+
+    #[test]
+    fn parses_one_byte_at_a_time() {
+        let (wire, expect) = expected_stream();
+        let mut p = SseParser::new();
+        let mut got = Vec::new();
+        for &b in wire.as_bytes() {
+            p.feed(&[b]);
+            drain(&mut p, &mut got);
+        }
+        if let Some(ev) = p.finish() {
+            got.push(ev);
+        }
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn finish_flushes_a_frame_missing_its_terminator() {
+        let mut p = SseParser::new();
+        p.feed(b"event: done\ndata: {\"tokens\":[]}");
+        assert!(p.next_event().is_none(), "no delimiter yet");
+        let ev = p.finish().expect("EOF must flush the trailing frame");
+        assert_eq!(ev.event, "done");
+        assert_eq!(ev.data, "{\"tokens\":[]}");
+        assert!(p.finish().is_none(), "finish must not dispatch twice");
+    }
+
+    /// A reader that returns one byte per `read` call: the worst-case
+    /// chunking a TCP stream can legally produce.
+    struct Trickle<'a>(&'a [u8]);
+
+    impl Read for Trickle<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match self.0.split_first() {
+                Some((&b, rest)) => {
+                    buf[0] = b;
+                    self.0 = rest;
+                    Ok(1)
+                }
+                None => Ok(0),
+            }
+        }
+    }
+
+    #[test]
+    fn next_from_survives_single_byte_reads() {
+        let (wire, expect) = expected_stream();
+        let mut r = Trickle(wire.as_bytes());
+        let mut p = SseParser::new();
+        let mut got = Vec::new();
+        while let Some(ev) = next_from(&mut r, &mut p).unwrap() {
+            got.push(ev);
+        }
+        assert_eq!(got, expect);
     }
 }

@@ -1,17 +1,31 @@
 //! Draft-side KV state for self-speculative decoding.
 //!
-//! The draft engine attends over its *own* K/V history (its
-//! representations differ from the target's), so every speculative slot
-//! carries a second, rollback-able KV mirror: the same committed token
-//! sequence, draft-engine values. [`DraftKv`] manages those mirrors with
-//! the same paging discipline as the target backend — one dense cache
-//! per slot, or a private page pool. The paged pool runs with the prefix
-//! cache disabled: draft pages are transient scratch that is truncated
-//! every step, never shared across admissions.
+//! The draft engine writes its *own* K/V representations for the tokens
+//! it proposes, so every speculating slot carries a rollback-able draft
+//! view. On the (default) paged store that view is **not** a second
+//! copy of the history: draft and target agree on every committed
+//! position, so the mirror *aliases* the target slot's pages out of the
+//! ONE shared [`KvPagePool`] ([`DraftKv::Shared`]) — a refcount bump
+//! per page, no copy — and only pays real pages for the positions the
+//! draft pass appends: one copy-on-write of the shared boundary page
+//! plus the fresh window pages, all returned to the pool at the end of
+//! the step ([`KvPagePool::retain_shared_prefix`]). Draft KV cost per
+//! speculating slot is therefore ~1 page of transient scratch, not a
+//! second KV budget.
+//!
+//! Because the mirror's between-step state is a pure function of the
+//! target's (aliases of its committed pages), there is nothing to
+//! serialize on preemption ([`DraftKv::park`] just drops the aliases)
+//! and nothing to re-prefill on admission — registration is an empty
+//! view that syncs to the target's page table on the slot's first
+//! speculative step ([`DraftKv::sync_to_target`]).
+//!
+//! The dense baseline ([`DraftKv::Dense`]) keeps one private
+//! full-capacity cache per slot and the lazy catch-up discipline: the
+//! prompt (and any plain-decoded tokens) queue per slot and ride the
+//! first draft pass.
 
-use crate::engine::kv::{
-    KvCache, KvPagePool, KvPoolConfig, PagedKv, PagedSlotBatch, ParkedKv, SlotBatch,
-};
+use crate::engine::kv::{KvCache, KvPagePool, PagedKv, PagedSlotBatch, ParkedKv, SlotBatch};
 use crate::engine::native::{EngineWs, NativeEngine};
 use crate::model::Config;
 use anyhow::{bail, Context, Result};
@@ -20,10 +34,14 @@ use anyhow::{bail, Context, Result};
 pub enum DraftKv {
     /// No batch open yet.
     Unopened,
-    /// One dense full-capacity cache per occupied slot.
+    /// One dense full-capacity cache per occupied slot (the dense
+    /// baseline: private storage, lazy catch-up queues).
     Dense { slots: Vec<Option<KvCache>> },
-    /// Pool-backed mirrors (the backend's paged mode).
-    Paged { pool: KvPagePool, slots: Vec<Option<PagedKv>> },
+    /// Pool-backed mirrors that **alias the target's pages in the one
+    /// shared pool** (the backend's paged mode). The pool itself lives
+    /// in the batch state, so every operation that touches pages takes
+    /// it as a parameter.
+    Shared { slots: Vec<Option<PagedKv>> },
 }
 
 impl DraftKv {
@@ -31,11 +49,11 @@ impl DraftKv {
         *self = DraftKv::Dense { slots: (0..capacity).map(|_| None).collect() };
     }
 
-    pub fn open_paged(&mut self, cfg: KvPoolConfig, capacity: usize) {
-        *self = DraftKv::Paged {
-            pool: KvPagePool::new(cfg),
-            slots: (0..capacity).map(|_| None).collect(),
-        };
+    /// Open shared-pool mirrors: empty per-slot views into the target's
+    /// pool. No pages are held until a slot's first speculative step
+    /// aliases the target's committed table.
+    pub fn open_shared(&mut self, capacity: usize) {
+        *self = DraftKv::Shared { slots: (0..capacity).map(|_| None).collect() };
     }
 
     /// Committed draft length of `slot` (None when unoccupied).
@@ -43,15 +61,16 @@ impl DraftKv {
         match self {
             DraftKv::Unopened => None,
             DraftKv::Dense { slots } => slots.get(slot).and_then(|s| s.as_ref()).map(|kv| kv.len),
-            DraftKv::Paged { slots, .. } => {
+            DraftKv::Shared { slots } => {
                 slots.get(slot).and_then(|s| s.as_ref()).map(|kv| kv.len())
             }
         }
     }
 
-    /// Drop `slot`'s mirror (pages return to the pool). Unoccupied slots
-    /// are ignored so release stays idempotent with the target's.
-    pub fn release(&mut self, slot: usize) {
+    /// Drop `slot`'s mirror (aliased pages drop their reference back to
+    /// the shared pool). Unoccupied slots are ignored so release stays
+    /// idempotent with the target's.
+    pub fn release(&mut self, slot: usize, pool: Option<&mut KvPagePool>) {
         match self {
             DraftKv::Unopened => {}
             DraftKv::Dense { slots } => {
@@ -59,9 +78,10 @@ impl DraftKv {
                     *s = None;
                 }
             }
-            DraftKv::Paged { pool, slots } => {
+            DraftKv::Shared { slots } => {
                 if let Some(s) = slots.get_mut(slot) {
                     if let Some(mut kv) = s.take() {
+                        let pool = pool.expect("shared draft mirrors need the target pool");
                         pool.release_kv(&mut kv);
                     }
                 }
@@ -70,11 +90,10 @@ impl DraftKv {
     }
 
     /// Create an **empty** mirror for a newly admitted `slot`. No engine
-    /// work happens here (and on the paged store, no page allocation):
-    /// the prompt queues in the slot's lazy catch-up list and is
-    /// mirrored by the first draft pass of the slot's first speculative
-    /// step — so slots that never speculate (sampled requests) pay no
-    /// draft compute and, on the paged store, no draft-KV pages at all.
+    /// work and no page allocation happens here: a shared mirror aliases
+    /// the target's committed pages on the slot's first speculative step
+    /// (so slots that never speculate pay no draft compute and no draft
+    /// pages), and a dense mirror fills from its lazy catch-up queue.
     pub fn occupy(&mut self, cfg: &Config, slot: usize) -> Result<()> {
         match self {
             DraftKv::Unopened => bail!("draft kv: no open batch"),
@@ -88,22 +107,59 @@ impl DraftKv {
                 slots[slot] =
                     Some(KvCache::new(cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim()));
             }
-            DraftKv::Paged { pool, slots } => {
+            DraftKv::Shared { slots } => {
                 if slot >= slots.len() {
                     bail!("draft kv: slot {slot} out of range ({} slots)", slots.len());
                 }
                 if slots[slot].is_some() {
                     bail!("draft kv: slot {slot} is already occupied");
                 }
-                slots[slot] = Some(pool.new_kv(cfg.max_seq));
+                slots[slot] = Some(PagedKv::empty(cfg.max_seq));
             }
         }
         Ok(())
     }
 
-    /// Make the next `n` positions of `slot` writable (page mapping plus
-    /// copy-on-write on the paged store; a capacity check on dense).
-    pub fn ensure(&mut self, slot: usize, n: usize) -> Result<()> {
+    /// Sync a shared mirror to the target's committed state: alias the
+    /// target's pages covering `0..target.len()` (refcount bumps, no
+    /// copy — already-shared pages are kept, diverged ones released) so
+    /// the draft pass attends over the exact committed history. This is
+    /// what replaced the private mirror's catch-up re-prefill: the
+    /// mirror is *always* caught up, one page-table sync away.
+    ///
+    /// Panics when the mirror is not [`DraftKv::Shared`] — dense
+    /// mirrors sync through their catch-up queues.
+    pub fn sync_to_target(&mut self, pool: &mut KvPagePool, slot: usize, target: &PagedKv) {
+        let DraftKv::Shared { slots } = self else {
+            panic!("sync_to_target on a non-shared draft mirror");
+        };
+        let kv = slots
+            .get_mut(slot)
+            .and_then(|s| s.as_mut())
+            .expect("sync_to_target: slot has no mirror");
+        pool.alias_kv(kv, target, target.len());
+    }
+
+    /// End-of-step rollback for a shared mirror: release every page
+    /// that diverged from the target's (post-truncate) table — the
+    /// copy-on-write boundary page and the draft window pages — keeping
+    /// only the still-shared alias prefix. Rejection and acceptance are
+    /// the same operation here: the shared boundary simply advances as
+    /// the target commits more full pages.
+    pub fn retain_target_prefix(&mut self, pool: &mut KvPagePool, slot: usize, target: &PagedKv) {
+        let DraftKv::Shared { slots } = self else {
+            panic!("retain_target_prefix on a non-shared draft mirror");
+        };
+        if let Some(kv) = slots.get_mut(slot).and_then(|s| s.as_mut()) {
+            pool.retain_shared_prefix(kv, target);
+        }
+    }
+
+    /// Make the next `n` positions of `slot` writable. On the shared
+    /// store this privatizes the aliased boundary page (copy-on-write)
+    /// and maps fresh window pages out of the one shared pool; on dense
+    /// it is a capacity check.
+    pub fn ensure(&mut self, slot: usize, n: usize, pool: Option<&mut KvPagePool>) -> Result<()> {
         match self {
             DraftKv::Unopened => bail!("draft kv: no open batch"),
             DraftKv::Dense { slots } => {
@@ -119,54 +175,58 @@ impl DraftKv {
                 }
                 Ok(())
             }
-            DraftKv::Paged { pool, slots } => {
+            DraftKv::Shared { slots } => {
                 let kv = slots
                     .get_mut(slot)
                     .and_then(|s| s.as_mut())
                     .with_context(|| format!("draft kv: slot {slot} is not occupied"))?;
+                let pool = pool.expect("shared draft mirrors need the target pool");
                 let len = kv.len();
                 pool.ensure_range(kv, len, len + n)
             }
         }
     }
 
-    /// Roll `slot` back to `len` committed positions (speculative
-    /// rollback; whole pages past the boundary — including over-reserved
-    /// ones — return to the pool).
+    /// Roll `slot` back to `len` committed positions (dense speculative
+    /// rollback). Shared mirrors roll back against the target's table
+    /// instead — see [`DraftKv::retain_target_prefix`].
     pub fn truncate(&mut self, slot: usize, len: usize) {
         match self {
-            DraftKv::Unopened => {}
+            DraftKv::Unopened | DraftKv::Shared { .. } => {}
             DraftKv::Dense { slots } => {
                 if let Some(kv) = slots.get_mut(slot).and_then(|s| s.as_mut()) {
                     kv.truncate(len);
                 }
             }
-            DraftKv::Paged { pool, slots } => {
-                if let Some(kv) = slots.get_mut(slot).and_then(|s| s.as_mut()) {
-                    pool.truncate_kv(kv, len);
-                }
-            }
         }
     }
 
-    /// Swap `slot`'s mirror out into a host buffer and vacate the slot
-    /// (paged mirrors release their pages). `None` when the slot has no
-    /// mirror — a slot that never speculated has nothing to park.
-    pub fn park(&mut self, slot: usize) -> Option<ParkedKv> {
+    /// Swap `slot`'s mirror out and vacate the slot. A dense mirror is
+    /// copied into a host buffer; a **shared mirror has nothing to
+    /// serialize** — its state is derivable from the target's (aliases
+    /// of committed pages), so parking just drops the page references
+    /// and returns `None`. The target's pages are never written twice
+    /// to the parking buffer, and restore re-aliases bit-identically on
+    /// the next speculative step.
+    pub fn park(&mut self, slot: usize, pool: Option<&mut KvPagePool>) -> Option<ParkedKv> {
         match self {
             DraftKv::Unopened => None,
             DraftKv::Dense { slots } => {
                 slots.get_mut(slot).and_then(|s| s.take()).map(|kv| kv.park())
             }
-            DraftKv::Paged { pool, slots } => {
-                slots.get_mut(slot).and_then(|s| s.take()).map(|mut kv| pool.park_kv(&mut kv))
+            DraftKv::Shared { slots } => {
+                if let Some(mut kv) = slots.get_mut(slot).and_then(|s| s.take()) {
+                    let pool = pool.expect("shared draft mirrors need the target pool");
+                    pool.release_kv(&mut kv);
+                }
+                None
             }
         }
     }
 
-    /// Restore a parked mirror into the vacated `slot` bit-exactly. On
-    /// failure (paged pool cannot supply the pages) the slot is left
-    /// vacant and the parking buffer remains valid for a later retry.
+    /// Restore a parked dense mirror into the vacated `slot` bit-exactly
+    /// (shared mirrors park as `None` and resume via
+    /// [`DraftKv::occupy`] + first-step sync).
     pub fn unpark(&mut self, cfg: &Config, slot: usize, parked: &ParkedKv) -> Result<()> {
         match self {
             DraftKv::Unopened => bail!("draft kv: no open batch"),
@@ -176,15 +236,10 @@ impl DraftKv {
                 slots[slot].as_mut().expect("just occupied").unpark(parked);
                 Ok(())
             }
-            DraftKv::Paged { pool, slots } => {
-                if slot >= slots.len() {
-                    bail!("draft kv: slot {slot} out of range ({} slots)", slots.len());
-                }
-                if slots[slot].is_some() {
-                    bail!("draft kv: slot {slot} is already occupied");
-                }
-                slots[slot] = Some(pool.unpark_kv(parked, cfg.max_seq)?);
-                Ok(())
+            DraftKv::Shared { .. } => {
+                // nothing was serialized for a shared mirror; an empty
+                // view re-aliases the restored target on the next step
+                self.occupy(cfg, slot)
             }
         }
     }
@@ -199,22 +254,25 @@ impl DraftKv {
         sel: &[usize],
         toks: &[u32],
         ws: &mut EngineWs,
+        pool: Option<&mut KvPagePool>,
     ) -> Vec<Vec<f32>> {
         let groups: Vec<&[u32]> = toks.iter().map(std::slice::from_ref).collect();
-        self.step_multi(engine, sel, &groups, ws)
+        self.step_multi(engine, sel, &groups, ws, pool)
     }
 
     /// Multi-position batched draft step: slot `sel[i]` consumes the
-    /// `groups[i]` tokens in one pass (the lazy catch-up path — tokens
-    /// the target committed while the mirror lagged ride the first
-    /// draft pass as extra rows, costing no extra weight stream).
-    /// Returns each listed slot's **last-position** logits.
+    /// `groups[i]` tokens in one pass (on the dense store, catch-up
+    /// tokens the target committed while the mirror lagged ride the
+    /// first draft pass as extra rows; shared mirrors are always caught
+    /// up by the page-table sync and feed single positions). Returns
+    /// each listed slot's **last-position** logits.
     pub fn step_multi(
         &mut self,
         engine: &NativeEngine,
         sel: &[usize],
         groups: &[&[u32]],
         ws: &mut EngineWs,
+        pool: Option<&mut KvPagePool>,
     ) -> Vec<Vec<f32>> {
         match self {
             DraftKv::Unopened => panic!("draft kv: no open batch"),
@@ -226,7 +284,8 @@ impl DraftKv {
                     .map(|mut per| per.pop().expect("one logits row"))
                     .collect()
             }
-            DraftKv::Paged { pool, slots } => {
+            DraftKv::Shared { slots } => {
+                let pool = pool.expect("shared draft mirrors need the target pool");
                 let mut sb = PagedSlotBatch::select(pool, slots, sel);
                 engine
                     .step_batch_multi(groups, &mut sb, ws, false)

@@ -30,13 +30,26 @@
 //!              rejection resamples from the normalized residual
 //!              max(0, p_j − q_j) ([`accept::stochastic_accept`])
 //!     commit:  a accepted drafts + 1 correction/bonus = 1..=K+1 tokens
-//!     rollback: truncate BOTH caches to L+1+a (KvSlot::truncate /
+//!     rollback: truncate the target to L+1+a (KvSlot::truncate /
 //!              KvPagePool::truncate_kv — rejected positions and page
-//!              over-reservations return to the pool); on FULL
-//!              acceptance the mirror's missing last token queues in a
-//!              lazy catch-up list and rides the next step's first
+//!              over-reservations return to the pool); the shared-pool
+//!              draft mirror rolls back against the target's table
+//!              (KvPagePool::retain_shared_prefix — only the CoW'd
+//!              boundary and window pages release; still-shared aliases
+//!              keep their reference). On the dense baseline, full
+//!              acceptance queues the mirror's missing last token in a
+//!              lazy catch-up list that rides the next step's first
 //!              draft pass (no extra draft weight stream)
 //! ```
+//!
+//! On the (default) paged store the draft mirror holds **no private
+//! copy of the history**: before drafting, its page table syncs to the
+//! target's committed pages in the ONE shared [`crate::engine::kv::KvPagePool`]
+//! ([`KvPagePool::alias_kv`] — refcount bumps, no copy), the draft pass
+//! privatizes only the boundary page it appends into (copy-on-write)
+//! plus the fresh window pages, and the end-of-step rollback returns
+//! exactly those to the pool. Speculation's KV tax is ~1 transient page
+//! per in-flight window instead of a second KV budget.
 //!
 //! Greedy acceptance compares against the verifier's own argmax, and the
 //! multi-position step is bit-identical per row to sequential decode, so
@@ -74,6 +87,7 @@ pub use draft::DraftKv;
 
 use crate::coordinator::request::SamplingParams;
 use crate::coordinator::sampler::{distribution, draw_from};
+use crate::engine::kv::KvPagePool;
 use crate::engine::native::{EngineWs, NativeEngine};
 use crate::tensor::ops;
 use crate::util::Pcg64;
@@ -142,8 +156,11 @@ pub struct SpecDecoder {
     pub(crate) shadow: Option<NativeEngine>,
     pub(crate) ws: EngineWs,
     pub(crate) kv: DraftKv,
-    /// Per target-slot committed-but-unmirrored tokens (invariant:
+    /// Per target-slot committed-but-unmirrored tokens, **dense mirrors
+    /// only** (invariant there:
     /// `draft_len(slot) + pending[slot].len() == target_len(slot)`).
+    /// Shared-pool mirrors keep these empty — the page-table sync
+    /// catches them up against the target for free.
     pub(crate) pending: Vec<Vec<u32>>,
     /// Draws for draft sampling, accept/reject and residual resampling
     /// (one seeded stream per backend: serving runs stay reproducible).
@@ -212,12 +229,15 @@ pub fn greedy_accept(drafts: &[u32], verify: &[Vec<f32>]) -> (usize, u32) {
 /// sampling from the draft's post-params distribution `q_j` (recorded
 /// per position so verification can form the accept ratio and residual).
 /// `cur0[i]` is slot `i`'s input token; `pending` holds each slot's
-/// committed-but-unmirrored catch-up tokens (drained here for every slot
-/// that drafts — they ride the FIRST draft pass as extra positions,
-/// costing no extra weight stream). The draft KV mirrors advance by
-/// `pending + ks[i]` positions. Returns the proposal lists (len `ks[i]`
-/// each) and, per slot, the draft distributions `q_1..q_{ks[i]}` (empty
-/// for greedy slots).
+/// committed-but-unmirrored catch-up tokens on the dense store (drained
+/// here for every slot that drafts — they ride the FIRST draft pass as
+/// extra positions, costing no extra weight stream; shared-pool mirrors
+/// keep `pending` empty, the page-table sync already caught them up).
+/// `pool` is the shared target pool the [`DraftKv::Shared`] mirrors
+/// read and write through (None on the dense baseline). The draft KV
+/// mirrors advance by `pending + ks[i]` positions. Returns the proposal
+/// lists (len `ks[i]` each) and, per slot, the draft distributions
+/// `q_1..q_{ks[i]}` (empty for greedy slots).
 #[allow(clippy::too_many_arguments)]
 pub fn draft_tokens(
     draft: &NativeEngine,
@@ -229,6 +249,7 @@ pub fn draft_tokens(
     ks: &[usize],
     samplings: &[Option<&SamplingParams>],
     rng: &mut Pcg64,
+    mut pool: Option<&mut KvPagePool>,
 ) -> (Vec<Vec<u32>>, Vec<Vec<Vec<f64>>>) {
     let n = slots.len();
     debug_assert_eq!(n, cur0.len());
@@ -274,7 +295,7 @@ pub fn draft_tokens(
             }
         }
         let groups: Vec<&[u32]> = groups_store.iter().map(|g| g.as_slice()).collect();
-        let logits = kv.step_multi(draft, &sel, &groups, ws);
+        let logits = kv.step_multi(draft, &sel, &groups, ws, pool.as_deref_mut());
         let mut li = 0usize;
         for i in 0..n {
             if ks[i] > 0 {
@@ -296,7 +317,7 @@ pub fn draft_tokens(
         if sel.is_empty() {
             break;
         }
-        let logits = kv.step(draft, &sel, &toks, ws);
+        let logits = kv.step(draft, &sel, &toks, ws, pool.as_deref_mut());
         let mut li = 0usize;
         for i in 0..n {
             if ks[i] > j {

@@ -74,16 +74,21 @@ pub fn to_chrome_json(dump: &TraceDump) -> Json {
             ("args", Json::obj(vec![("name", Json::Str(name.clone()))])),
         ]));
     }
+    let mut other = vec![
+        ("lost_events", Json::Num(dump.lost as f64)),
+        ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+    ];
+    if let Some((from_ns, until_ns)) = dump.winner_window {
+        // A concurrent scraper won the drain race: this document covers
+        // only events recorded after the winner's window.
+        other.push(("partial", Json::Bool(true)));
+        other.push(("winner_drain_from_us", Json::Num(from_ns as f64 / 1e3)));
+        other.push(("winner_drain_until_us", Json::Num(until_ns as f64 / 1e3)));
+    }
     Json::obj(vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::Str("ms".to_string())),
-        (
-            "otherData",
-            Json::obj(vec![
-                ("lost_events", Json::Num(dump.lost as f64)),
-                ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
-            ]),
-        ),
+        ("otherData", Json::obj(other)),
     ])
 }
 
@@ -105,6 +110,7 @@ mod tests {
                 ev(Phase::Done, 7, 1, 5000, 5000),
             ],
             lost: 4,
+            winner_window: None,
         };
         let j = to_chrome_json(&dump);
         let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
@@ -131,8 +137,26 @@ mod tests {
         assert_eq!(meta.get("ph").unwrap().as_str(), Some("M"));
         assert_eq!(meta.get("args").unwrap().get("name").unwrap().as_str(), Some("slot 1"));
 
-        assert_eq!(j.get("otherData").unwrap().get("lost_events").unwrap().as_usize(), Some(4));
+        let other = j.get("otherData").unwrap();
+        assert_eq!(other.get("lost_events").unwrap().as_usize(), Some(4));
+        assert!(other.get("partial").is_none(), "uncontended dump must not claim partiality");
         // The whole document must reparse (valid JSON for Perfetto).
+        let text = j.to_string_compact();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn contended_dump_reports_partial_and_the_winners_window() {
+        let dump = TraceDump {
+            events: vec![ev(Phase::Prefill, 1, 0, 10_000, 20_000)],
+            lost: 0,
+            winner_window: Some((2_000, 7_000)),
+        };
+        let j = to_chrome_json(&dump);
+        let other = j.get("otherData").unwrap();
+        assert_eq!(other.get("partial"), Some(&Json::Bool(true)));
+        assert_eq!(other.get("winner_drain_from_us").unwrap().as_f64(), Some(2.0));
+        assert_eq!(other.get("winner_drain_until_us").unwrap().as_f64(), Some(7.0));
         let text = j.to_string_compact();
         assert!(Json::parse(&text).is_ok());
     }

@@ -178,6 +178,11 @@ pub struct TraceDump {
     pub events: Vec<SpanEvent>,
     /// Events overwritten by writer lapping before they could be drained.
     pub lost: u64,
+    /// When another drain ran concurrently and won the serialization race,
+    /// the trace-epoch ns window `[from, until]` that winner consumed.
+    /// `Some` means this dump is partial: it holds only events recorded
+    /// after the winner's drain, and the missing window went to the winner.
+    pub winner_window: Option<(u64, u64)>,
 }
 
 // ---------------------------------------------------------------------------
@@ -334,9 +339,13 @@ pub fn instant(phase: Phase, req: u64, slot: u16, payload: u64) {
 
 /// Drain every thread's ring into one time-sorted dump. Draining consumes:
 /// a second immediate drain returns only events recorded in between.
+///
+/// Concurrent drains serialize; the one that had to wait gets
+/// [`TraceDump::winner_window`] set so its caller can report the dump as
+/// partial rather than silently serving half the stream.
 pub fn drain() -> TraceDump {
-    let (events, lost) = ring::drain_all();
-    TraceDump { events, lost }
+    let (events, lost, winner_window) = ring::drain_all();
+    TraceDump { events, lost, winner_window }
 }
 
 #[cfg(test)]

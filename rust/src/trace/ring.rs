@@ -137,8 +137,17 @@ fn decode_meta(meta: u64) -> Option<(Phase, u16)> {
 /// nothing a dying thread recorded is lost.
 static REGISTRY: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
 static FREE: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
-/// Serializes drains (each ring is single-drainer by contract).
-static DRAIN: Mutex<()> = Mutex::new(());
+/// Serializes drains (each ring is single-drainer by contract) and
+/// remembers the last completed drain's window so a drainer that lost the
+/// race can tell its caller which window the winner walked off with.
+static DRAIN: Mutex<DrainState> = Mutex::new(DrainState { last_from_ns: 0, last_until_ns: 0 });
+
+/// Trace-epoch window `[last_from_ns, last_until_ns]` consumed by the most
+/// recent drain. Guarded by [`DRAIN`].
+struct DrainState {
+    last_from_ns: u64,
+    last_until_ns: u64,
+}
 
 fn ring_capacity() -> usize {
     static CAP: OnceLock<usize> = OnceLock::new();
@@ -193,8 +202,20 @@ pub(crate) fn record(req: u64, start_ns: u64, end_ns: u64, payload: u64, phase: 
 
 /// Drain every registered ring. Events are sorted by start time; `lost`
 /// counts writer-lapped events across all rings since the last drain.
-pub(crate) fn drain_all() -> (Vec<SpanEvent>, u64) {
-    let _guard = DRAIN.lock();
+///
+/// Drains serialize on [`DRAIN`]. A caller that had to wait for a
+/// concurrent drain to finish gets `Some((from_ns, until_ns))` — the
+/// trace-epoch window the winner consumed — so it can report its own
+/// result as partial instead of silently returning half the stream.
+pub(crate) fn drain_all() -> (Vec<SpanEvent>, u64, Option<(u64, u64)>) {
+    use std::sync::TryLockError;
+    let (mut st, contended) = match DRAIN.try_lock() {
+        Ok(g) => (g, false),
+        Err(TryLockError::WouldBlock) => (DRAIN.lock().unwrap_or_else(|e| e.into_inner()), true),
+        Err(TryLockError::Poisoned(e)) => (e.into_inner(), false),
+    };
+    let winner = if contended { Some((st.last_from_ns, st.last_until_ns)) } else { None };
+    let from_ns = st.last_until_ns;
     let rings: Vec<Arc<Ring>> = match REGISTRY.lock() {
         Ok(reg) => reg.clone(),
         Err(_) => Vec::new(),
@@ -205,7 +226,9 @@ pub(crate) fn drain_all() -> (Vec<SpanEvent>, u64) {
         lost += ring.drain_into(&mut events);
     }
     events.sort_by_key(|e| (e.start_ns, e.end_ns, e.req));
-    (events, lost)
+    st.last_from_ns = from_ns;
+    st.last_until_ns = super::now_ns();
+    (events, lost, winner)
 }
 
 /// Record an already-timed span (used when the caller captured the
@@ -351,6 +374,31 @@ mod tests {
         assert_eq!(written, WRITERS as u64 * PER);
         assert_eq!(drained + lost, written, "drain must conserve events");
         assert!(drained > 0, "drainer never kept anything");
+    }
+
+    #[test]
+    fn contended_drain_reports_the_winners_window() {
+        // Hold the drain lock to stand in for an in-flight winner, then
+        // start a second drain on another thread: it must block, and once
+        // the winner finishes it must report a winner window instead of
+        // pretending its half-empty result is the whole stream.
+        let mut st = DRAIN.lock().unwrap_or_else(|e| e.into_inner());
+        st.last_from_ns = 100;
+        st.last_until_ns = 900;
+        let (started_tx, started_rx) = std::sync::mpsc::channel();
+        let loser = std::thread::spawn(move || {
+            started_tx.send(()).unwrap();
+            drain_all()
+        });
+        started_rx.recv().unwrap();
+        // Give the loser time to reach the lock before the winner releases.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        drop(st);
+        let (_, _, winner) = loser.join().unwrap();
+        // Another test's drain may slip in between release and the loser's
+        // wakeup, so assert the shape of the window, not its exact values.
+        let (from, until) = winner.expect("blocked drain must report the winner's window");
+        assert!(until >= from, "window must be ordered: [{from}, {until}]");
     }
 
     #[test]

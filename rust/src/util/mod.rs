@@ -12,6 +12,7 @@ pub mod json;
 pub mod logging;
 pub mod pool;
 pub mod rng;
+pub mod signal;
 pub mod timer;
 
 pub use hist::Hist;

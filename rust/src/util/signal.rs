@@ -1,0 +1,78 @@
+//! Std-only termination-signal latch: SIGTERM / SIGINT set a process-wide
+//! flag the serving loop polls to enter the same graceful drain path as
+//! stdin EOF and `POST /admin/shutdown`.
+//!
+//! No libc crate, no signal-handling dependency: on Unix the `signal`
+//! symbol the standard library already links is declared directly, and
+//! the handler body is a single atomic store — the only async-signal-safe
+//! action it needs. On other platforms installation is a no-op and the
+//! flag simply never trips.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Latched by the signal handler; read by [`termination_requested`].
+static TERM: AtomicBool = AtomicBool::new(false);
+
+/// True once SIGTERM or SIGINT has been delivered (after
+/// [`hook_termination`] installed the handlers). Latches for the rest of
+/// the process: termination is never un-requested.
+pub fn termination_requested() -> bool {
+    TERM.load(Ordering::SeqCst)
+}
+
+/// Install SIGTERM + SIGINT handlers that latch [`termination_requested`].
+/// Idempotent; a no-op off Unix.
+pub fn hook_termination() {
+    #[cfg(unix)]
+    unix::install();
+}
+
+#[cfg(unix)]
+mod unix {
+    use super::{Ordering, TERM};
+
+    /// Same numeric values on every Unix Rust targets (Linux, macOS, BSDs).
+    pub(crate) const SIGINT: i32 = 2;
+    pub(crate) const SIGTERM: i32 = 15;
+
+    extern "C" fn on_term(_sig: i32) {
+        // A store to a static atomic is async-signal-safe; everything
+        // else (logging, draining, joining) happens on the polling side.
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        /// `signal(2)` from the C runtime std already links. glibc/musl
+        /// give it BSD semantics: the handler persists across deliveries
+        /// and interrupted syscalls restart.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub(super) fn install() {
+        unsafe {
+            let _ = signal(SIGTERM, on_term);
+            let _ = signal(SIGINT, on_term);
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    extern "C" {
+        fn raise(sig: i32) -> i32;
+    }
+
+    #[test]
+    fn sigterm_latches_instead_of_killing() {
+        hook_termination();
+        // With the handler installed, raising SIGTERM at ourselves must
+        // latch the flag — were the default disposition still active the
+        // whole test process would die here.
+        unsafe {
+            raise(super::unix::SIGTERM);
+        }
+        assert!(termination_requested());
+    }
+}

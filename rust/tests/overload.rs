@@ -189,6 +189,86 @@ fn dense_priority_preemption_swaps_and_resumes_exactly() {
     assert_eq!(inter_stats.preemptions, 0, "the interactive request must never be the victim");
 }
 
+/// A speculating slot on the shared draft/target page pool, preempted by
+/// a higher-priority arrival while mid-speculation, resumes
+/// bit-identically: the draft mirror's aliased pages are dropped at park
+/// time (shared pages serialize once, with the target) and re-derived by
+/// re-aliasing the restored target pages on resume.
+#[test]
+fn speculating_slot_preempted_mid_window_resumes_bit_identically() {
+    let tag = "overload_spec_preempt";
+    let p1: Vec<u32> = (0..8).map(|i| (i * 5 % 64) as u32).collect();
+    let p2: Vec<u32> = (0..8).map(|i| ((i * 3 + 1) % 64) as u32).collect();
+    // page_size 16 with 8-token prompts: nothing is published to the
+    // prefix cache, so the pool must reconcile to zero pages at the end
+    let solo = |prompt: &[u32], budget: usize| -> Vec<u32> {
+        let store = synth_checkpoint(tag, heavy_spec());
+        let engine = NativeEngine::from_store(&store, SubMode::Fused).unwrap();
+        let mut be = NativeBackend::new(engine, "solo")
+            .with_max_slots(1)
+            .with_kv_pool(16, 16)
+            .with_speculative(SpeculativeConfig::new(2, DraftMode::NoSub));
+        let req = GenRequest::new(1, prompt.to_vec(), budget);
+        let (mut r, _) =
+            Coordinator::run_closed_loop(&mut be, vec![req], &CoordinatorConfig::default())
+                .unwrap();
+        r.remove(0).tokens
+    };
+    let ref1 = solo(&p1, 40);
+    let ref2 = solo(&p2, 8);
+
+    let handle = Coordinator::spawn(
+        move || -> anyhow::Result<Box<dyn Backend>> {
+            let store = synth_checkpoint(tag, heavy_spec());
+            let engine = NativeEngine::from_store(&store, SubMode::Fused)?;
+            Ok(Box::new(
+                NativeBackend::new(engine, "spec-preempt")
+                    .with_max_slots(1)
+                    .with_kv_pool(16, 16)
+                    .with_speculative(SpeculativeConfig::new(2, DraftMode::NoSub)),
+            ))
+        },
+        CoordinatorConfig::default(),
+    );
+    let mut batch_req = GenRequest::new(0, p1.clone(), 40);
+    batch_req.class = Priority::Batch;
+    let rx = handle.submit(batch_req);
+    // once the first token streams, the batch request is speculating on
+    // the only slot; the interactive arrival can only enter by preempting
+    match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+        GenEvent::Token { .. } => {}
+        other => panic!("expected a token first, got {other:?}"),
+    }
+    let mut inter = GenRequest::new(0, p2.clone(), 8);
+    inter.class = Priority::Interactive;
+    let r2 = handle.client().submit_wait(inter).unwrap();
+    assert_eq!(r2.tokens, ref2, "the preempting interactive stream diverged");
+
+    let mut done = None;
+    while let Ok(ev) = rx.recv_timeout(Duration::from_secs(60)) {
+        match ev {
+            GenEvent::Token { .. } => {}
+            GenEvent::Done(r) => {
+                done = Some(r);
+                break;
+            }
+            GenEvent::Error { message, .. } => panic!("batch request died: {message}"),
+        }
+    }
+    let r1 = done.expect("batch stream ended without Done");
+    assert_eq!(r1.tokens, ref1, "park/resume changed the speculating slot's output");
+
+    let metrics = handle.shutdown().unwrap();
+    let batch = metrics.classes[Priority::Batch.index()];
+    assert!(batch.preemptions >= 1, "interactive arrival did not preempt the speculating slot");
+    assert_eq!(batch.preemptions, batch.resumes, "every park must resume");
+    assert_eq!(metrics.parked, 0, "the parking buffer must drain");
+    assert!(metrics.swapped_bytes > 0, "paged swap traffic not metered");
+    let pool = metrics.kv_pool.expect("paged backend must report pool stats");
+    assert_eq!(pool.pages_in_use, 0, "KV pages leaked: {} in use", pool.pages_in_use);
+    assert!(pool.pages_aliased > 0, "speculation never aliased target pages into the mirror");
+}
+
 /// Conservation over random submit/pop traces: per class, everything
 /// submitted is popped, shed at the door, or displaced by a
 /// higher-priority arrival — nothing is lost, and the queue drains.

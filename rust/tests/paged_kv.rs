@@ -7,7 +7,7 @@
 use fbquant::coordinator::backend::NativeBackend;
 use fbquant::coordinator::request::GenRequest;
 use fbquant::coordinator::server::{Coordinator, CoordinatorConfig};
-use fbquant::engine::kv::{KvCache, KvPagePool, KvPoolConfig, KvSlot, PagedKvRef};
+use fbquant::engine::kv::{KvCache, KvPagePool, KvPoolConfig, KvSlot, PagedKv, PagedKvRef};
 use fbquant::engine::{NativeEngine, SubMode};
 use fbquant::model::{ByteTokenizer, WeightStore};
 use fbquant::prop_assert_ok;
@@ -331,6 +331,103 @@ fn prefix_cache_evicts_under_memory_pressure() {
     assert_eq!(stats.prefix_evictions, 1);
     assert_eq!(stats.cached_prefixes, 0);
     assert_eq!(stats.alloc_failures, 0, "eviction satisfied the demand");
+}
+
+#[test]
+fn prop_draft_alias_rollback_interleavings_conserve_refcounts() {
+    // The shared draft/target protocol, driven with random accept counts,
+    // window sizes and pool pressure: after every step each page's pool
+    // refcount must equal exactly the number of views holding it, and
+    // releasing both views (in either order) must reconcile the pool to
+    // zero pages in use.
+    use std::collections::HashMap;
+    prop_assert_ok!(check("draft_alias_refcounts", 60, |g| {
+        let page_size = *g.pick(&[1usize, 2, 3, 4]);
+        let n_pages = *g.pick(&[8usize, 12, 32]);
+        let max_seq = 24usize;
+        let mut pool = KvPagePool::new(KvPoolConfig::new(1, 1, 2, page_size, n_pages));
+        let mut target = pool.new_kv(max_seq);
+        let mut draft = pool.new_kv(max_seq);
+
+        let audit = |pool: &KvPagePool, target: &PagedKv, draft: &PagedKv| {
+            let mut held: HashMap<u32, u32> = HashMap::new();
+            for &p in target.page_ids().iter().chain(draft.page_ids()) {
+                *held.entry(p).or_insert(0) += 1;
+            }
+            for (&p, &rc) in &held {
+                if pool.page_refcount(p) != rc {
+                    return Err(format!(
+                        "page {p}: pool rc {}, views hold {rc}",
+                        pool.page_refcount(p)
+                    ));
+                }
+            }
+            if pool.pages_in_use() != held.len() {
+                return Err(format!(
+                    "{} pages in use but the views hold {} distinct pages",
+                    pool.pages_in_use(),
+                    held.len()
+                ));
+            }
+            Ok(())
+        };
+
+        let prompt = g.usize_range(1, 6);
+        if pool.ensure_range(&mut target, 0, prompt).is_err() {
+            return Ok(()); // a 1-position-per-page pool can be born too tight
+        }
+        {
+            let mut bound = PagedKvRef { pool: &mut pool, kv: &mut target };
+            bound.advance(prompt);
+        }
+        audit(&pool, &target, &draft)?;
+
+        for _ in 0..g.usize_range(1, 6) {
+            let len = target.len();
+            if len + 4 > max_seq {
+                break;
+            }
+            let k = g.usize_range(1, 3);
+            // phase 0: the target reserves the verify window
+            if pool.ensure_range(&mut target, len, len + 1 + k).is_err() {
+                break; // pool too tight even for the verify pass
+            }
+            // phase 0b: incremental alias of the committed prefix, then a
+            // CoW-extended private window for the draft's own writes
+            pool.alias_kv(&mut draft, &target, len);
+            let mut ks = k;
+            if pool.ensure_range(&mut draft, len, len + k).is_err() {
+                // degrade to k=0: fall back to the target's full pages so
+                // no partial-boundary alias lingers into the verify write
+                pool.retain_shared_prefix(&mut draft, &target);
+                ks = 0;
+            }
+            audit(&pool, &target, &draft)?;
+
+            // phase 3: accept a of the ks drafted tokens (+1 verifier
+            // token), trim the unused reserve, roll the mirror back
+            let a = if ks == 0 { 0 } else { g.usize_range(0, ks) };
+            {
+                let mut bound = PagedKvRef { pool: &mut pool, kv: &mut target };
+                bound.advance(a + 1);
+            }
+            pool.truncate_kv(&mut target, len + a + 1);
+            pool.retain_shared_prefix(&mut draft, &target);
+            audit(&pool, &target, &draft)?;
+        }
+
+        if g.usize_range(0, 1) == 1 {
+            pool.release_kv(&mut draft);
+            pool.release_kv(&mut target);
+        } else {
+            pool.release_kv(&mut target);
+            pool.release_kv(&mut draft);
+        }
+        if pool.pages_in_use() != 0 {
+            return Err(format!("{} pages leaked after both releases", pool.pages_in_use()));
+        }
+        Ok(())
+    }));
 }
 
 // ---------------------------------------------------------------------------

@@ -211,6 +211,47 @@ fn admin_shutdown_is_honoured_from_loopback() {
     server.shutdown().unwrap();
 }
 
+#[cfg(unix)]
+#[test]
+fn sigterm_triggers_the_same_graceful_drain_path() {
+    use fbquant::util::signal;
+    extern "C" {
+        fn raise(sig: i32) -> i32;
+    }
+    const SIGTERM: i32 = 15;
+
+    let server = start_server("http_e2e_sigterm", spec(), None, CoordinatorConfig::default());
+    let addr = server.local_addr();
+    // Install before raising: with the handler latched in, SIGTERM below
+    // sets a flag instead of killing the whole test process.
+    signal::hook_termination();
+
+    // a request completes normally before the signal arrives
+    let body = client::gen_body(&GenRequest::new(0, vec![1, 2, 3], 4));
+    let o = client::post_generate(addr, &body, None).unwrap();
+    assert_eq!(o.status, 200);
+
+    let raiser = std::thread::spawn(|| {
+        std::thread::sleep(Duration::from_millis(50));
+        unsafe {
+            raise(SIGTERM);
+        }
+    });
+
+    // the exact polling loop `fbquant serve` runs before draining
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !signal::termination_requested() && !server.shutdown_requested() {
+        assert!(Instant::now() < deadline, "SIGTERM never latched the termination flag");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    raiser.join().unwrap();
+    assert!(signal::termination_requested());
+
+    // the drain path still runs to completion and keeps finished work
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.requests_done, 1, "graceful drain lost a completed request");
+}
+
 /// Bare empty-body POST (the admin routes take no payload).
 fn post_empty(addr: std::net::SocketAddr, path: &str) -> (u16, String) {
     use std::io::{Read, Write};

@@ -121,8 +121,60 @@ fn speculative_decode_is_token_identical_to_plain_greedy() {
                         );
                     }
                 }
+                if paged {
+                    // the paged matrix must actually run the shared-pool
+                    // path: draft mirrors alias target pages, no private
+                    // draft pool exists to hide a 2× copy behind
+                    let stats = sb.kv_stats(&ss).expect("paged backend exposes pool stats");
+                    assert!(
+                        stats.pages_aliased > 0,
+                        "draft mirror never aliased the target (k={k} draft={draft:?})"
+                    );
+                }
             }
         }
+    }
+}
+
+#[test]
+fn plain_and_speculative_steps_mix_freely_on_shared_paged_slots() {
+    // Dense draft mirrors must be speculative-stepped for a slot's whole
+    // lifetime (their draft KV trails the target via a pending catch-up
+    // queue), but a shared paged mirror re-aliases the target at every
+    // window — so plain decode() and decode_speculative() may interleave
+    // on one slot, and the stream must stay token-identical to a plain
+    // backend stepped the same way.
+    let store = synth_checkpoint(
+        "spec_mix_plain",
+        SynthSpec { rank: 4, col_scale: true, ..SynthSpec::default() },
+    );
+    let mut pb = plain_backend(&store, true);
+    let mut sb = spec_backend(&store, true, 2, DraftMode::NoSub);
+    let mut ps = pb.open_batch(1).unwrap();
+    let mut ss = sb.open_batch(1).unwrap();
+    let prompt: Vec<u32> = (0..6).map(|i| ((i * 7 + 3) % 50) as u32).collect();
+    let lp = pb.prefill_slot(&mut ps, 0, &prompt).unwrap();
+    let ls = sb.prefill_slot(&mut ss, 0, &prompt).unwrap();
+    assert_eq!(lp, ls, "prefill diverged");
+    let mut last_p = argmax(&lp);
+    let mut cur_s = argmax(&ls);
+    let mut stream_p = Vec::new();
+    let mut stream_s = Vec::new();
+    for round in 0..4 {
+        // a speculative window...
+        let steps = sb.decode_speculative(&mut ss, &[SpecSlot::greedy(0, cur_s)]).unwrap();
+        let sp = &steps[0];
+        stream_s.extend_from_slice(&sp.accepted);
+        stream_s.push(sp.next);
+        cur_s = sp.next;
+        plain_steps(&mut pb, &mut ps, 0, sp.accepted.len() + 1, &mut last_p, &mut stream_p);
+        // ...then a plain single-token step on the same slot
+        let lg = sb.decode(&mut ss, &[SlotToken { slot: 0, token: cur_s }]).unwrap();
+        let t = argmax(&lg[0]);
+        stream_s.push(t);
+        cur_s = t;
+        plain_steps(&mut pb, &mut ps, 0, 1, &mut last_p, &mut stream_p);
+        assert_eq!(stream_p, stream_s, "mixed stepping diverged at round {round}");
     }
 }
 
